@@ -1,0 +1,105 @@
+//! Quickstart: the smallest complete tour of the public API.
+//!
+//! 1. Load the AOT artifacts (HLO text + weights) into the PJRT runtime.
+//! 2. Build the virtualized registry and attach two LoRA adapters.
+//! 3. Generate a few tokens through each virtual model (and the base).
+//! 4. Hot-swap an adapter without stopping anything, generate again.
+//!
+//! Run: make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use loquetier::coordinator::{Coordinator, CoordinatorConfig, InferenceRequest};
+use loquetier::engine::{Backend, XlaBackend};
+use loquetier::kvcache::CacheConfig;
+use loquetier::model::{LoraAdapter, SlotState, VirtualizedRegistry, WeightStore};
+use loquetier::runtime::Runtime;
+use loquetier::tokenizer::{Tokenizer, TINY_CORPUS};
+
+fn main() -> Result<()> {
+    // 1. Runtime: compile only the serving entries (no training today).
+    let rt = Runtime::load_filtered("artifacts", |n| {
+        n.starts_with("prefill") || n.starts_with("decode")
+    })?;
+    let manifest = rt.manifest.clone();
+    println!(
+        "loaded {} entries ({} layers, vocab {}) in {:.2}s",
+        manifest.entries.len(),
+        manifest.build.model.num_layers,
+        manifest.build.model.vocab_size,
+        rt.compile_seconds,
+    );
+
+    // 2. Virtualized registry: one shared base, adapters in slots.
+    let store = WeightStore::open("artifacts", &manifest)?;
+    let mut registry = VirtualizedRegistry::new(&manifest, &store)?;
+    let alpaca = LoraAdapter::from_store(&store, &manifest, 0, "alpaca")?;
+    let gsm8k = LoraAdapter::from_store(&store, &manifest, 1, "gsm8k")?;
+    registry.attach("vm-alpaca", alpaca, 0, SlotState::Inference)?;
+    registry.attach("vm-gsm8k", gsm8k, 1, SlotState::Inference)?;
+
+    let mut backend = XlaBackend::new(rt, &store)?;
+    backend.sync_adapters(&mut registry)?;
+
+    // 3. Serve through the unified coordinator.
+    let g = backend.geometry().clone();
+    let mut coord = Coordinator::new(
+        CoordinatorConfig { max_prompt_tokens: 16, ..Default::default() },
+        CacheConfig {
+            num_slots: 8,
+            slot_capacity: g.max_cache_len,
+            block_tokens: 16,
+            total_blocks: 8 * g.max_cache_len / 16,
+            num_layers: g.num_layers,
+            token_elems: g.num_kv_heads * g.head_dim,
+        },
+    );
+    let tok = Tokenizer::train(TINY_CORPUS, g.vocab_size);
+    let prompt = tok.encode("Instruction: Give three tips. Response:");
+    for (id, adapter) in [(1u64, 0i32), (2, 1), (3, -1)] {
+        coord.submit(InferenceRequest {
+            id,
+            adapter,
+            prompt: prompt.clone(),
+            max_new_tokens: 8,
+            eos_token: None,
+            arrival_s: 0.0,
+        });
+    }
+    while !coord.quiescent() {
+        if coord.step(&mut backend)?.idle {
+            break;
+        }
+    }
+    for t in &coord.traces {
+        println!(
+            "request done: {} prompt tokens -> {} new tokens in {:.1} ms",
+            t.input_tokens,
+            t.output_tokens,
+            (t.finish_s.unwrap_or(0.0) - t.arrival_s) * 1e3,
+        );
+    }
+
+    // 4. Hot-swap: drop the alpaca adapter, load another into the slot —
+    //    no kernel restart, no base-model copy (paper Section 3.2).
+    let migrated = registry.void(0)?; // detach + payload for migration
+    println!("voided '{}' ({} modules)", migrated.adapter.name, migrated.adapter.modules.len());
+    let replacement = LoraAdapter::from_store(&store, &manifest, 2, "fresh")?;
+    registry.attach("vm-fresh", replacement, 0, SlotState::Inference)?;
+    backend.sync_adapters(&mut registry)?;
+    coord.submit(InferenceRequest {
+        id: 4,
+        adapter: 0,
+        prompt,
+        max_new_tokens: 4,
+        eos_token: None,
+        arrival_s: coord.now_s,
+    });
+    while !coord.quiescent() {
+        if coord.step(&mut backend)?.idle {
+            break;
+        }
+    }
+    println!("served through the hot-swapped adapter: ok");
+    Ok(())
+}

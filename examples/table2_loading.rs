@@ -1,0 +1,178 @@
+//! Table 2 — model loading time and additional storage footprint.
+//!
+//! All four load paths are *actually executed* against the real artifacts:
+//!
+//! * loquetier — read weights.bin, build the virtualized registry, attach
+//!   4 adapters (slot writes + scaling fold), compile the serving entries.
+//! * peft      — same read, no virtualization layer (no registry), compile.
+//! * s-lora    — additionally performs the fused-weight transform: per
+//!   layer, concatenate all resident adapters' A/B into stacked tensors
+//!   (with the GQA K/V replication workaround of Appendix E), in memory.
+//! * flexllm   — additionally *writes* its transformed per-module weight
+//!   files to disk and reads them back (the paper's 15 GB / slow-load
+//!   column, at this build's scale).
+//!
+//! Run: cargo run --release --example table2_loading
+
+use std::fs;
+use std::io::Write as _;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use loquetier::model::{LoraAdapter, SlotState, VirtualizedRegistry, WeightStore};
+use loquetier::runtime::Runtime;
+use loquetier::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let dir = args.str_or("artifacts", "artifacts");
+    let serve_filter =
+        |n: &str| n.starts_with("prefill") || n.starts_with("decode") || n.starts_with("unified");
+
+    // XLA entry compilation is byte-identical for every system (they all
+    // run the same executables here) — measure it once, report it once,
+    // and keep the per-system comparison to the *loading policies* the
+    // paper's Table 2 actually contrasts.
+    let t_c = Instant::now();
+    let rt_shared = Runtime::load_filtered(&dir, serve_filter)?;
+    let compile_s = t_c.elapsed().as_secs_f64();
+    let manifest = rt_shared.manifest.clone();
+    println!("(serving-entry XLA compilation, identical for all systems: {compile_s:.2}s)");
+    println!();
+    println!("=== Table 2: model loading (measured on the real artifacts) ===");
+    println!(
+        "{:<12} {:>12} {:>12} {:>12} {:>14}",
+        "system", "base (s)", "lora (s)", "total (s)", "extra storage"
+    );
+
+    // ---------------- loquetier ------------------------------------------
+    let t0 = Instant::now();
+    let store = WeightStore::open(&dir, &manifest)?;
+    let base_s = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let mut reg = VirtualizedRegistry::new(&manifest, &store)?;
+    for i in 0..manifest.build.lora.max_adapters {
+        let ad = LoraAdapter::from_store(&store, &manifest, i, format!("a{i}"))?;
+        reg.attach(format!("vm{i}"), ad, i, SlotState::Inference)?;
+    }
+    let lora_s = t1.elapsed().as_secs_f64();
+    println!(
+        "{:<12} {:>12.3} {:>12.3} {:>12.3} {:>14}",
+        "loquetier", base_s, lora_s, base_s + lora_s, "0 B"
+    );
+
+    // ---------------- peft ------------------------------------------------
+    // Same base load, adapters read straight into host vectors (no
+    // virtualization work, no scaling fold).
+    let t0 = Instant::now();
+    let store2 = WeightStore::open(&dir, &manifest)?;
+    let base_s2 = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let mut adapters = Vec::new();
+    for i in 0..manifest.build.lora.max_adapters {
+        adapters.push(LoraAdapter::from_store(&store2, &manifest, i, format!("a{i}"))?);
+    }
+    let lora_s2 = t1.elapsed().as_secs_f64();
+    println!(
+        "{:<12} {:>12.3} {:>12.3} {:>12.3} {:>14}",
+        "peft", base_s2, lora_s2, base_s2 + lora_s2, "0 B"
+    );
+
+    // ---------------- s-lora ----------------------------------------------
+    // Fused-weight transform: concatenate every adapter's A/B per (layer,
+    // module) into one stacked tensor; K/V must first be replicated to the
+    // Q/O shape (Appendix E's GQA workaround).
+    let t0 = Instant::now();
+    let store3 = WeightStore::open(&dir, &manifest)?;
+    let base_s3 = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let g = &manifest.build.model;
+    let mut fused_bytes = 0usize;
+    for li in 0..g.num_layers {
+        for m in ["q", "k", "v", "o"] {
+            let mut stacked: Vec<f32> = Vec::new();
+            for i in 0..manifest.build.lora.max_adapters {
+                let a = store3.tensor(&format!("adapter{i}.layers.{li}.{m}.a"))?;
+                let b = store3.tensor(&format!("adapter{i}.layers.{li}.{m}.b"))?;
+                stacked.extend_from_slice(a.as_f32()?);
+                // GQA replication: K/V B-matrices are [r, kv_dim]; S-LoRA's
+                // fused layout needs [r, q_dim] — replicate groups.
+                let bf = b.as_f32()?;
+                if m == "k" || m == "v" {
+                    let rep = g.q_dim / g.kv_dim;
+                    for row in bf.chunks(g.kv_dim) {
+                        for _ in 0..rep {
+                            stacked.extend_from_slice(row);
+                        }
+                    }
+                } else {
+                    stacked.extend_from_slice(bf);
+                }
+            }
+            fused_bytes += stacked.len() * 4;
+            std::hint::black_box(&stacked);
+        }
+    }
+    let lora_s3 = t1.elapsed().as_secs_f64();
+    println!(
+        "{:<12} {:>12.3} {:>12.3} {:>12.3} {:>14}",
+        "s-lora", base_s3, lora_s3, base_s3 + lora_s3,
+        format!("{} (RAM)", human(fused_bytes))
+    );
+
+    // ---------------- flexllm ---------------------------------------------
+    // Lazy transform + on-disk cache: every (layer, module) base weight is
+    // rewritten as its own little file, then read back — the small-file
+    // storm behind the paper's 37.9 s / 15 GB row.
+    let t0 = Instant::now();
+    let cache_dir = std::env::temp_dir().join("loquetier_flexllm_cache");
+    let _ = fs::remove_dir_all(&cache_dir);
+    fs::create_dir_all(&cache_dir)?;
+    let store4 = WeightStore::open(&dir, &manifest)?;
+    let mut extra = 0usize;
+    for name in manifest.base_param_names() {
+        let (data, _shape) = store4.f32_slice(&name)?;
+        let path = cache_dir.join(name.replace('.', "_"));
+        let mut f = fs::File::create(&path)?;
+        let bytes =
+            unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+        f.write_all(bytes)?;
+        extra += bytes.len();
+    }
+    // ... and read them all back (the "cached transformed model" path).
+    for name in manifest.base_param_names() {
+        let path = cache_dir.join(name.replace('.', "_"));
+        let blob = fs::read(&path)?;
+        std::hint::black_box(&blob);
+    }
+    let base_s4 = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let mut adapters4 = Vec::new();
+    for i in 0..manifest.build.lora.max_adapters {
+        adapters4.push(LoraAdapter::from_store(&store4, &manifest, i, format!("a{i}"))?);
+    }
+    let lora_s4 = t1.elapsed().as_secs_f64();
+    println!(
+        "{:<12} {:>12.3} {:>12.3} {:>12.3} {:>14}",
+        "flexllm", base_s4, lora_s4, base_s4 + lora_s4,
+        format!("{} (disk)", human(extra))
+    );
+    let _ = fs::remove_dir_all(&cache_dir);
+
+    println!();
+    println!("Paper Table 2 (Llama3-8B scale): loquetier 5.3s/0B, peft 4.8s/0B,");
+    println!("s-lora 34s (transform), flexllm 38.9s + 15 GB cache. At this build's");
+    println!("scale the *ordering* and the zero-extra-storage property are the claim.");
+    Ok(())
+}
+
+fn human(bytes: usize) -> String {
+    if bytes > 1 << 30 {
+        format!("{:.2} GB", bytes as f64 / (1u64 << 30) as f64)
+    } else if bytes > 1 << 20 {
+        format!("{:.2} MB", bytes as f64 / (1u64 << 20) as f64)
+    } else {
+        format!("{:.2} KB", bytes as f64 / 1024.0)
+    }
+}

@@ -1,0 +1,623 @@
+"""AOT export: lower every entry point at every bucket shape to HLO text.
+
+Run once by ``make artifacts``:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Produces:
+  artifacts/<entry>.hlo.txt   — one XLA computation per entry x bucket
+  artifacts/manifest.json     — entry table: argument order, shapes, dtypes,
+                                model geometry, bucket tables
+  artifacts/weights.bin       — base weights + 4 pretrained-adapter stand-ins
+                                (raw little-endian f32, indexed by manifest)
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .configs import BuildConfig, DEFAULT_BUILD, TARGET_MODULES, UnifiedConfig
+from . import lora as LM
+from . import model as M
+from . import train as T
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# --------------------------------------------------------------------------
+# Argument marshalling: explicit, named, positional — the Rust contract.
+# --------------------------------------------------------------------------
+
+def base_arg_specs(build: BuildConfig) -> List[Tuple[str, Tuple[int, ...], str]]:
+    base = M.init_base_params(build.model, jax.random.PRNGKey(0))
+    return [(n, tuple(a.shape), "f32") for n, a in M.flatten_base(base)]
+
+
+def lora_arg_specs(build: BuildConfig) -> List[Tuple[str, Tuple[int, ...], str]]:
+    bank = LM.init_lora(build.model, build.lora, jax.random.PRNGKey(0))
+    return [(n, tuple(a.shape), "f32") for n, a in LM.flatten_lora(bank)]
+
+
+def grad_arg_specs(build: BuildConfig) -> List[Tuple[str, Tuple[int, ...], str]]:
+    """Gradient/optimizer-state arrays: the a/b subset of the LoRA bank."""
+    return [s for s in lora_arg_specs(build) if not s[0].endswith("scaling")]
+
+
+def _grads_from_flat(build: BuildConfig, arrays: Sequence[jnp.ndarray]) -> Dict:
+    """a/b flat list -> {"layers": [...]} tree (scaling-free)."""
+    it = iter(arrays)
+    layers = []
+    for _ in range(build.model.num_layers):
+        mods = {}
+        for m in TARGET_MODULES:
+            mods[m] = {"a": next(it), "b": next(it)}
+        layers.append(mods)
+    return {"layers": layers}
+
+
+def _grads_to_flat(tree: Dict) -> List[jnp.ndarray]:
+    out = []
+    for mods in tree["layers"]:
+        for m in TARGET_MODULES:
+            out.append(mods[m]["a"])
+            out.append(mods[m]["b"])
+    return out
+
+
+# --------------------------------------------------------------------------
+# Entry point builders. Each returns (fn, input_specs, output_specs); fn takes
+# flat positional jnp arrays in exactly input_specs order.
+# --------------------------------------------------------------------------
+
+def build_prefill_entry(build: BuildConfig, batch: int, seq: int):
+    cfg = build.model
+    nb = len(base_arg_specs(build))
+    nlora = len(lora_arg_specs(build))
+
+    inputs = (
+        base_arg_specs(build)
+        + lora_arg_specs(build)
+        + [
+            ("tokens", (batch, seq), "i32"),
+            ("seq_lens", (batch,), "i32"),
+            ("adapter_ids", (batch,), "i32"),
+        ]
+    )
+    outputs = [
+        ("last_logits", (batch, cfg.vocab_size), "f32"),
+        ("pf_k", (cfg.num_layers, batch, seq, cfg.num_kv_heads, cfg.head_dim), "f32"),
+        ("pf_v", (cfg.num_layers, batch, seq, cfg.num_kv_heads, cfg.head_dim), "f32"),
+    ]
+
+    def fn(*args):
+        base = M.unflatten_base(cfg, list(args[:nb]))
+        bank = LM.unflatten_lora(cfg, list(args[nb : nb + nlora]))
+        tokens, seq_lens, adapter_ids = args[nb + nlora :]
+        lay = M.MixedLayout(
+            pf_tokens=tokens, pf_seq_lens=seq_lens, pf_adapter=adapter_ids
+        )
+        logits, aux = M.forward_mixed(cfg, base, bank, lay)
+        lg = logits.reshape(batch, seq, -1)
+        last = jnp.take_along_axis(
+            lg, jnp.maximum(seq_lens - 1, 0)[:, None, None], axis=1
+        )[:, 0, :]
+        return last, aux["pf_k"], aux["pf_v"]
+
+    return fn, inputs, outputs
+
+
+def build_decode_entry(build: BuildConfig, batch: int):
+    cfg = build.model
+    nb = len(base_arg_specs(build))
+    nlora = len(lora_arg_specs(build))
+    m = cfg.max_cache_len
+    cache_shape = (cfg.num_layers, batch, m, cfg.num_kv_heads, cfg.head_dim)
+
+    inputs = (
+        base_arg_specs(build)
+        + lora_arg_specs(build)
+        + [
+            ("tokens", (batch,), "i32"),
+            ("cache_lens", (batch,), "i32"),
+            ("adapter_ids", (batch,), "i32"),
+            ("valid", (batch,), "i32"),
+            ("k_cache", cache_shape, "f32"),
+            ("v_cache", cache_shape, "f32"),
+        ]
+    )
+    outputs = [
+        ("logits", (batch, cfg.vocab_size), "f32"),
+        ("k_new", (cfg.num_layers, batch, cfg.num_kv_heads, cfg.head_dim), "f32"),
+        ("v_new", (cfg.num_layers, batch, cfg.num_kv_heads, cfg.head_dim), "f32"),
+    ]
+
+    def fn(*args):
+        base = M.unflatten_base(cfg, list(args[:nb]))
+        bank = LM.unflatten_lora(cfg, list(args[nb : nb + nlora]))
+        tokens, cache_lens, adapter_ids, valid, k_cache, v_cache = args[nb + nlora :]
+        lay = M.MixedLayout(
+            dec_tokens=tokens,
+            dec_cache_lens=cache_lens,
+            dec_adapter=adapter_ids,
+            dec_valid=valid,
+            k_cache=k_cache,
+            v_cache=v_cache,
+        )
+        logits, aux = M.forward_mixed(cfg, base, bank, lay)
+        return logits, aux["dec_k"], aux["dec_v"]
+
+    return fn, inputs, outputs
+
+
+def build_train_entry(build: BuildConfig, batch: int, seq: int):
+    cfg = build.model
+    nb = len(base_arg_specs(build))
+    nlora = len(lora_arg_specs(build))
+    ng = len(grad_arg_specs(build))
+
+    inputs = (
+        base_arg_specs(build)
+        + lora_arg_specs(build)
+        + [("grad_acc." + n, s, d) for n, s, d in grad_arg_specs(build)]
+        + [
+            ("tokens", (batch, seq), "i32"),
+            ("labels", (batch, seq), "i32"),
+            ("seq_lens", (batch,), "i32"),
+            ("adapter_ids", (batch,), "i32"),
+            ("train_flag", (batch,), "f32"),
+            ("loss_scale", (batch,), "f32"),
+        ]
+    )
+    outputs = [("losses", (batch,), "f32")] + [
+        ("grad_out." + n, s, d) for n, s, d in grad_arg_specs(build)
+    ]
+
+    def fn(*args):
+        base = M.unflatten_base(cfg, list(args[:nb]))
+        bank = LM.unflatten_lora(cfg, list(args[nb : nb + nlora]))
+        gacc = _grads_from_flat(build, args[nb + nlora : nb + nlora + ng])
+        tokens, labels, seq_lens, adapter_ids, train_flag, loss_scale = args[
+            nb + nlora + ng :
+        ]
+        lay = M.MixedLayout(
+            ft_tokens=tokens, ft_seq_lens=seq_lens, ft_adapter=adapter_ids
+        )
+        losses, grads, _aux = T.grad_step(
+            cfg, base, bank, lay, labels, train_flag, loss_scale, grad_acc=gacc
+        )
+        return tuple([losses] + _grads_to_flat(grads))
+
+    return fn, inputs, outputs
+
+
+def build_adam_entry(build: BuildConfig):
+    cfg = build.model
+    ng = len(grad_arg_specs(build))
+    gspecs = grad_arg_specs(build)
+
+    inputs = (
+        [("lora." + n.split("lora.", 1)[-1], s, d) for n, s, d in gspecs]
+        + [("grads." + n, s, d) for n, s, d in gspecs]
+        + [("m." + n, s, d) for n, s, d in gspecs]
+        + [("v." + n, s, d) for n, s, d in gspecs]
+        + [("mask." + n, s, d) for n, s, d in gspecs]
+        + [("lr", (), "f32"), ("step", (), "i32")]
+    )
+    outputs = (
+        [("lora_out." + n, s, d) for n, s, d in gspecs]
+        + [("m_out." + n, s, d) for n, s, d in gspecs]
+        + [("v_out." + n, s, d) for n, s, d in gspecs]
+        # Accumulators cleared only where the mask consumed them: trainers
+        # with different accumulation schedules share the buffers without
+        # cross-interference (Algorithm 2's per-job accumulation).
+        + [("grads_out." + n, s, d) for n, s, d in gspecs]
+    )
+
+    def fn(*args):
+        def tree(off):
+            t = _grads_from_flat(build, args[off : off + ng])
+            return {"layers": t["layers"], "scaling": jnp.zeros((build.lora.max_adapters,))}
+
+        lora_t, grads, mt, vt, mask = (tree(i * ng) for i in range(5))
+        lr, step = args[5 * ng :]
+        lnew, mnew, vnew = T.adam_update(lora_t, grads, mt, vt, mask, lr, step)
+        grads_cleared = jax.tree.map(
+            lambda g, mk: g * (1.0 - mk), grads["layers"], mask["layers"]
+        )
+        return tuple(
+            _grads_to_flat(lnew)
+            + _grads_to_flat(mnew)
+            + _grads_to_flat(vnew)
+            + _grads_to_flat({"layers": grads_cleared})
+        )
+
+    return fn, inputs, outputs
+
+
+def build_unified_entry(build: BuildConfig, ucfg: UnifiedConfig):
+    """The flagship executable: Algorithm 1 + Algorithm 2 + shared backward,
+    all request classes in one launch."""
+    cfg = build.model
+    nb = len(base_arg_specs(build))
+    nlora = len(lora_arg_specs(build))
+    ng = len(grad_arg_specs(build))
+    mlen = cfg.max_cache_len
+    bf, sf, bp, sp, d = ucfg.ft_batch, ucfg.ft_seq, ucfg.pf_batch, ucfg.pf_seq, ucfg.dec_batch
+    cache_shape = (cfg.num_layers, d, mlen, cfg.num_kv_heads, cfg.head_dim)
+
+    inputs = (
+        base_arg_specs(build)
+        + lora_arg_specs(build)
+        + [("grad_acc." + n, s, dt) for n, s, dt in grad_arg_specs(build)]
+        + [
+            ("ft_tokens", (bf, sf), "i32"),
+            ("ft_labels", (bf, sf), "i32"),
+            ("ft_seq_lens", (bf,), "i32"),
+            ("ft_adapter", (bf,), "i32"),
+            ("ft_train_flag", (bf,), "f32"),
+            ("ft_loss_scale", (bf,), "f32"),
+            ("pf_tokens", (bp, sp), "i32"),
+            ("pf_seq_lens", (bp,), "i32"),
+            ("pf_adapter", (bp,), "i32"),
+            ("dec_tokens", (d,), "i32"),
+            ("dec_cache_lens", (d,), "i32"),
+            ("dec_adapter", (d,), "i32"),
+            ("dec_valid", (d,), "i32"),
+            ("k_cache", cache_shape, "f32"),
+            ("v_cache", cache_shape, "f32"),
+        ]
+    )
+    outputs = (
+        [("ft_losses", (bf,), "f32")]
+        + [("grad_out." + n, s, dt) for n, s, dt in grad_arg_specs(build)]
+        + [
+            ("pf_last_logits", (bp, cfg.vocab_size), "f32"),
+            ("pf_k", (cfg.num_layers, bp, sp, cfg.num_kv_heads, cfg.head_dim), "f32"),
+            ("pf_v", (cfg.num_layers, bp, sp, cfg.num_kv_heads, cfg.head_dim), "f32"),
+            ("dec_logits", (d, cfg.vocab_size), "f32"),
+            ("dec_k_new", (cfg.num_layers, d, cfg.num_kv_heads, cfg.head_dim), "f32"),
+            ("dec_v_new", (cfg.num_layers, d, cfg.num_kv_heads, cfg.head_dim), "f32"),
+        ]
+    )
+
+    def fn(*args):
+        base = M.unflatten_base(cfg, list(args[:nb]))
+        bank = LM.unflatten_lora(cfg, list(args[nb : nb + nlora]))
+        gacc = _grads_from_flat(build, args[nb + nlora : nb + nlora + ng])
+        (
+            ft_tokens, ft_labels, ft_seq_lens, ft_adapter, ft_train, ft_scale,
+            pf_tokens, pf_seq_lens, pf_adapter,
+            dec_tokens, dec_cache_lens, dec_adapter, dec_valid, k_cache, v_cache,
+        ) = args[nb + nlora + ng :]
+        lay = M.MixedLayout(
+            ft_tokens=ft_tokens, ft_seq_lens=ft_seq_lens, ft_adapter=ft_adapter,
+            pf_tokens=pf_tokens, pf_seq_lens=pf_seq_lens, pf_adapter=pf_adapter,
+            dec_tokens=dec_tokens, dec_cache_lens=dec_cache_lens,
+            dec_adapter=dec_adapter, dec_valid=dec_valid,
+            k_cache=k_cache, v_cache=v_cache,
+        )
+
+        def loss_fn(trainable):
+            logits, aux = M.forward_mixed(
+                cfg, base, {"layers": trainable["layers"], "scaling": bank["scaling"]}, lay
+            )
+            ft_logits = logits[: bf * sf].reshape(bf, sf, -1)
+            losses = M.per_sequence_loss(ft_logits, ft_labels, ft_seq_lens)
+            total = jnp.sum(losses * ft_train * ft_scale)
+            return total, (losses, logits, aux)
+
+        (_, (losses, logits, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )({"layers": bank["layers"]})
+        grads = jax.tree.map(jnp.add, {"layers": grads["layers"]}, gacc)
+
+        pf_logits = logits[bf * sf : bf * sf + bp * sp].reshape(bp, sp, -1)
+        pf_last = jnp.take_along_axis(
+            pf_logits, jnp.maximum(pf_seq_lens - 1, 0)[:, None, None], axis=1
+        )[:, 0, :]
+        dec_logits = logits[bf * sf + bp * sp :]
+        return tuple(
+            [losses]
+            + _grads_to_flat(grads)
+            + [pf_last, aux["pf_k"], aux["pf_v"], dec_logits, aux["dec_k"], aux["dec_v"]]
+        )
+
+    return fn, inputs, outputs
+
+
+# --------------------------------------------------------------------------
+# Weights blob
+# --------------------------------------------------------------------------
+
+def write_weights(build: BuildConfig, out_dir: str) -> List[Dict]:
+    """Base weights + initial LoRA bank + 4 pretrained-adapter stand-ins.
+
+    The adapters substitute for the paper's Alpaca-trained LoRA (DESIGN.md
+    §3): dense random A/B at the same rank/targets, distinct seeds per
+    adapter so multi-LoRA routing is observable in logits.
+    """
+    cfg, lcfg = build.model, build.lora
+    records: List[Dict] = []
+    blobs: List[np.ndarray] = []
+    offset = 0
+
+    def push(name: str, arr: jnp.ndarray):
+        nonlocal offset
+        a = np.asarray(arr, dtype=np.float32)
+        records.append(
+            {"name": name, "offset": offset, "shape": list(a.shape), "dtype": "f32"}
+        )
+        blobs.append(a.reshape(-1))
+        offset += a.size * 4
+
+    base = M.init_base_params(cfg, jax.random.PRNGKey(build.seed))
+    for n, a in M.flatten_base(base):
+        push(n, a)
+
+    bank = LM.init_lora(cfg, lcfg, jax.random.PRNGKey(build.seed + 1))
+    for n, a in LM.flatten_lora(bank):
+        push(n, a)
+
+    loaded = bank
+    for i in range(lcfg.max_adapters):
+        ad = LM.random_adapter(cfg, lcfg, jax.random.PRNGKey(100 + i))
+        loaded = LM.load_adapter_into_slot(loaded, ad, i)
+        for li in range(cfg.num_layers):
+            for m in TARGET_MODULES:
+                a, b = ad[li][m]
+                push(f"adapter{i}.layers.{li}.{m}.a", a)
+                push(f"adapter{i}.layers.{li}.{m}.b", b)
+
+    # The fully-loaded bank (adapter i in slot i). The Rust virtualized-module
+    # registry rebuilds this from base records + adapter records; the `bank.*`
+    # copies let an integration test assert bit-equality of that rebuild, and
+    # give the golden files a stable reference for LoRA inputs.
+    for n, a in LM.flatten_lora(loaded):
+        push("bank." + n.split("lora.", 1)[-1], a)
+
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        for b in blobs:
+            f.write(b.tobytes())
+    return records
+
+
+# --------------------------------------------------------------------------
+# Golden files — the Rust runtime's numeric round-trip oracle
+# --------------------------------------------------------------------------
+
+def _golden_entry_inputs(specs, vocab: int):
+    """Deterministic, boring inputs for the entry-specific (non-weight) args.
+
+    The Rust `runtime_golden` test rebuilds these from the same rules:
+    i32 tensors: token-ish names get (7*i+3) % vocab; adapter ids cycle 0..3;
+    valid/train flags are 1; lens are midpoints; caches/f32 are zeros except
+    loss_scale = 1.
+    """
+    vals = []
+    for name, shape, dtype in specs:
+        n = int(np.prod(shape)) if shape else 1
+        short = name.split(".")[-1]
+        if dtype == "i32":
+            if "token" in short or "label" in short:
+                v = (7 * np.arange(n) + 3) % vocab
+            elif "adapter" in short:
+                v = np.arange(n) % 4
+            elif "valid" in short:
+                v = np.ones(n)
+            elif "len" in short:  # seq_lens / cache_lens
+                v = np.full(n, max(1, (shape[-1] if len(shape) else 1)))
+                # lens relative to the *sequence* dim is entry-specific;
+                # handled below by name:
+            elif short == "step":
+                v = np.ones(n)
+            else:
+                v = np.zeros(n)
+            vals.append(np.asarray(v, np.int32).reshape(shape))
+        else:
+            if "scale" in short and "loss" in short:
+                vals.append(np.ones(shape, np.float32))
+            elif short == "train_flag":
+                vals.append(np.ones(shape, np.float32))
+            elif short == "lr":
+                vals.append(np.asarray(1e-3, np.float32).reshape(shape))
+            else:
+                vals.append(np.zeros(shape, np.float32))
+    return vals
+
+
+def _fix_lens(specs, vals):
+    """seq_lens <- full bucket length; cache_lens <- 0 (zero caches)."""
+    by_name = {s[0]: i for i, s in enumerate(specs)}
+    for name, idx in by_name.items():
+        if name.endswith("seq_lens"):
+            # find the matching tokens tensor to read its seq dim
+            prefix = name.rsplit("seq_lens", 1)[0]
+            tok = prefix + "tokens"
+            seq = dict((s[0], s[1]) for s in specs)[tok][-1]
+            vals[idx] = np.full(vals[idx].shape, seq, np.int32)
+        if name.endswith("cache_lens"):
+            vals[idx] = np.zeros(vals[idx].shape, np.int32)
+    return vals
+
+
+# Outputs worth snapshotting per golden entry (others are skipped to keep the
+# files small; the Rust test only checks what's listed).
+_GOLDEN_OUTPUTS = {
+    "decode": ["logits", "k_new", "v_new"],
+    "prefill": ["last_logits", "pf_k", "pf_v"],
+    "train": ["losses", "grad_out.lora.layers.0.q.a", "grad_out.lora.layers.0.q.b"],
+    "unified": ["ft_losses", "pf_last_logits", "dec_logits", "dec_k_new"],
+}
+
+
+def write_goldens(build: BuildConfig, out_dir: str, jobs) -> None:
+    """Evaluate selected entries in python and snapshot inputs+outputs.
+
+    Weight-shaped inputs are referenced by name (``weights:base.embed`` /
+    ``weights:bank.layers...``) so the files stay small; the Rust test reads
+    them from weights.bin. grad_acc/m/v/mask inputs resolve to zeros.
+    """
+    golden_dir = os.path.join(out_dir, "golden")
+    os.makedirs(golden_dir, exist_ok=True)
+    cfg = build.model
+
+    base = M.init_base_params(cfg, jax.random.PRNGKey(build.seed))
+    bank = LM.init_lora(cfg, build.lora, jax.random.PRNGKey(build.seed + 1))
+    for i in range(build.lora.max_adapters):
+        bank = LM.load_adapter_into_slot(
+            bank, LM.random_adapter(cfg, build.lora, jax.random.PRNGKey(100 + i)), i
+        )
+    base_flat = dict(M.flatten_base(base))
+    bank_flat = {
+        "bank." + n.split("lora.", 1)[-1]: a for n, a in LM.flatten_lora(bank)
+    }
+
+    wanted = {}
+    for name, _ in jobs:
+        kind = name.split("_")[0]
+        if kind in _GOLDEN_OUTPUTS and kind not in wanted:
+            wanted[kind] = name
+
+    for kind, name in wanted.items():
+        fn, in_specs, out_specs = dict(jobs)[name]
+        ins_json = []
+        vals = []
+        entry_specs = []
+        for spec in in_specs:
+            n, shape, dtype = spec
+            if n.startswith("base."):
+                vals.append(jnp.asarray(base_flat[n]))
+                ins_json.append({"name": n, "ref": "weights:" + n})
+            elif n.startswith("lora."):
+                key = "bank." + n.split("lora.", 1)[-1]
+                vals.append(jnp.asarray(bank_flat[key]))
+                ins_json.append({"name": n, "ref": "weights:" + key})
+            elif n.startswith(("grad_acc.", "m.", "v.", "mask.", "grads.")):
+                shape_t = tuple(shape)
+                vals.append(jnp.zeros(shape_t, _DTYPE[dtype]))
+                ins_json.append({"name": n, "zeros": True, "shape": list(shape)})
+            else:
+                entry_specs.append((len(vals), spec))
+                vals.append(None)
+                ins_json.append(None)
+
+        raw = _golden_entry_inputs([s for _, s in entry_specs], cfg.vocab_size)
+        raw = _fix_lens([s for _, s in entry_specs], raw)
+        for (idx, spec), arr in zip(entry_specs, raw):
+            vals[idx] = jnp.asarray(arr)
+            ins_json[idx] = {
+                "name": spec[0],
+                "shape": list(spec[1]),
+                "dtype": spec[2],
+                "data": np.asarray(arr).reshape(-1).tolist(),
+            }
+
+        outs = fn(*vals)
+        if not isinstance(outs, tuple):
+            outs = (outs,)
+        outs_json = []
+        keep = _GOLDEN_OUTPUTS[kind]
+        for (oname, oshape, odt), val in zip(out_specs, outs):
+            if oname in keep:
+                outs_json.append({
+                    "name": oname,
+                    "shape": list(oshape),
+                    "data": np.asarray(val, np.float32).reshape(-1).tolist(),
+                })
+        rec = {"entry": name, "inputs": ins_json, "outputs": outs_json, "rtol": 2e-4}
+        with open(os.path.join(golden_dir, f"{name}.json"), "w") as f:
+            json.dump(rec, f)
+
+
+# --------------------------------------------------------------------------
+# Driver
+# --------------------------------------------------------------------------
+
+_DTYPE = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def _specs_to_structs(specs):
+    return [jax.ShapeDtypeStruct(s, _DTYPE[d]) for _, s, d in specs]
+
+
+def export_all(build: BuildConfig, out_dir: str, *, verbose: bool = True) -> Dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries: Dict[str, Dict] = {}
+
+    jobs = []
+    for b, s in build.buckets.prefill:
+        jobs.append((f"prefill_b{b}_s{s}", build_prefill_entry(build, b, s)))
+    for b in build.buckets.decode:
+        jobs.append((f"decode_b{b}", build_decode_entry(build, b)))
+    for b, s in build.buckets.train:
+        jobs.append((f"train_b{b}_s{s}", build_train_entry(build, b, s)))
+    jobs.append(("adam", build_adam_entry(build)))
+    for i, ucfg in enumerate(build.buckets.unified):
+        jobs.append((f"unified_{i}", build_unified_entry(build, ucfg)))
+
+    for name, (fn, in_specs, out_specs) in jobs:
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*_specs_to_structs(in_specs))
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries[name] = {
+            "file": fname,
+            "inputs": [
+                {"name": n, "shape": list(s), "dtype": d} for n, s, d in in_specs
+            ],
+            "outputs": [
+                {"name": n, "shape": list(s), "dtype": d} for n, s, d in out_specs
+            ],
+        }
+        if verbose:
+            print(f"  lowered {name}: {len(text)/1e6:.2f} MB HLO in {time.time()-t0:.1f}s")
+
+    weights = write_weights(build, out_dir)
+    write_goldens(build, out_dir, jobs)
+
+    manifest = {
+        "format_version": 1,
+        "build": build.to_json_dict(),
+        "entries": entries,
+        "weights": weights,
+        "weights_file": "weights.bin",
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    t0 = time.time()
+    export_all(DEFAULT_BUILD, args.out_dir)
+    print(f"artifacts written to {args.out_dir} in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""Shape/bucket configuration — the single source of truth shared with Rust.
+
+Everything the Rust coordinator needs to know about the AOT artifacts
+(entry names, argument order, tensor shapes, model geometry, bucket tables)
+is derived from the dataclasses here and emitted into
+``artifacts/manifest.json`` by ``compile/aot.py``.
+
+The model is a Llama3-*style* GQA transformer scaled for CPU-PJRT execution
+(see DESIGN.md §3 for the substitution rationale): RMSNorm, RoPE, SwiGLU and
+grouped-query attention are all present — GQA in particular because the
+paper's Appendix E shows it is exactly the trait that broke S-LoRA's fused
+LoRA layout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+# LoRA target modules, in canonical order.  The paper's "Full" configuration
+# enables all 7; "Partial" (the only thing FlexLLM supports) is the MLP trio.
+TARGET_MODULES: Tuple[str, ...] = ("q", "k", "v", "o", "gate", "up", "down")
+PARTIAL_MODULES: Tuple[str, ...] = ("gate", "up", "down")
+QKVO_MODULES: Tuple[str, ...] = ("q", "k", "v", "o")  # S-LoRA's limit
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Geometry of the Llama-style base model."""
+
+    vocab_size: int = 512
+    hidden_size: int = 128
+    intermediate_size: int = 256
+    num_layers: int = 4
+    num_heads: int = 4
+    num_kv_heads: int = 2  # GQA: 2 KV heads shared by 4 Q heads
+    head_dim: int = 32
+    rope_theta: float = 500_000.0  # Llama3 value
+    rms_eps: float = 1e-5
+    max_cache_len: int = 160  # per-slot KV capacity (prefill + decode)
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    def module_in_out(self, module: str) -> Tuple[int, int]:
+        """(in_features, out_features) of a target linear."""
+        h, q, kv, i = self.hidden_size, self.q_dim, self.kv_dim, self.intermediate_size
+        return {
+            "q": (h, q),
+            "k": (h, kv),
+            "v": (h, kv),
+            "o": (q, h),
+            "gate": (h, i),
+            "up": (h, i),
+            "down": (i, h),
+        }[module]
+
+
+@dataclass(frozen=True)
+class LoraConfig:
+    """Stacked multi-LoRA configuration (Appendix D.3 of the paper)."""
+
+    max_adapters: int = 4  # L — size of the stacked adapter dimension
+    rank: int = 8
+    alpha: float = 16.0
+    dropout: float = 0.0  # inference path; training dropout handled in L2
+    targets: Tuple[str, ...] = TARGET_MODULES
+
+    @property
+    def scaling(self) -> float:
+        return self.alpha / self.rank
+
+
+@dataclass(frozen=True)
+class UnifiedConfig:
+    """Capacities of the unified step (Algorithm 1 slot layout).
+
+    One unified executable serves any mix of the four request classes up to
+    these capacities; the coordinator masks unused slots.
+    Token layout along the row axis: [finetune/eval ∥ prefill ∥ decode].
+    """
+
+    ft_batch: int = 2
+    ft_seq: int = 64
+    pf_batch: int = 2
+    pf_seq: int = 32
+    dec_batch: int = 8
+
+    @property
+    def total_tokens(self) -> int:
+        return self.ft_batch * self.ft_seq + self.pf_batch * self.pf_seq + self.dec_batch
+
+
+@dataclass(frozen=True)
+class Buckets:
+    """Static-shape buckets compiled ahead of time."""
+
+    prefill: Tuple[Tuple[int, int], ...] = ((1, 16), (1, 64), (4, 16), (4, 64))
+    decode: Tuple[int, ...] = (1, 2, 4, 8, 16)
+    train: Tuple[Tuple[int, int], ...] = ((1, 64), (2, 64))
+    unified: Tuple[UnifiedConfig, ...] = (UnifiedConfig(),)
+
+    def prefill_bucket(self, batch: int, seq: int) -> Tuple[int, int]:
+        for b, s in sorted(self.prefill):
+            if b >= batch and s >= seq:
+                return (b, s)
+        raise ValueError(f"no prefill bucket for batch={batch} seq={seq}")
+
+    def decode_bucket(self, batch: int) -> int:
+        for b in sorted(self.decode):
+            if b >= batch:
+                return b
+        raise ValueError(f"no decode bucket for batch={batch}")
+
+
+# SMLM kernel tiling. Row tiles must divide every segment the coordinator
+# forms: ft_seq (64), pf_seq (32) are multiples of SGMV_TILE_ROWS.
+SGMV_TILE_ROWS: int = 16
+
+
+@dataclass(frozen=True)
+class BuildConfig:
+    model: ModelConfig = field(default_factory=ModelConfig)
+    lora: LoraConfig = field(default_factory=LoraConfig)
+    buckets: Buckets = field(default_factory=Buckets)
+    seed: int = 0
+
+    def to_json_dict(self) -> Dict:
+        def enc(o):
+            if dataclasses.is_dataclass(o):
+                return {k: enc(v) for k, v in dataclasses.asdict(o).items()}
+            if isinstance(o, tuple):
+                return [enc(x) for x in o]
+            if isinstance(o, list):
+                return [enc(x) for x in o]
+            return o
+
+        d = enc(self)
+        d["model"]["q_dim"] = self.model.q_dim
+        d["model"]["kv_dim"] = self.model.kv_dim
+        d["lora"]["scaling"] = self.lora.scaling
+        d["sgmv_tile_rows"] = SGMV_TILE_ROWS
+        return d
+
+
+DEFAULT_BUILD = BuildConfig()

@@ -1,0 +1,141 @@
+"""LoRA parameter pytrees: stacked multi-adapter weights per layer/module.
+
+The virtualization contract (paper Section 3.2): base weights are one shared
+pytree; each adapter occupies one slot of the stacked ``[L, in, r]/[L, r, out]``
+arrays. Loading/unloading an adapter is a slot write — the base model is never
+touched, and per-layer/per-module targets may be heterogeneous (a module not
+targeted simply keeps zero B, making its delta exactly zero).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import LoraConfig, ModelConfig, TARGET_MODULES
+
+# lora pytree layout:
+#   {"layers": [ {module: {"a": [L,in,r], "b": [L,r,out]} for module in TARGET_MODULES} ]}
+#   plus "scaling": [L]  (dynamic per-request scaling, paper Section 3.3)
+LoraParams = Dict
+
+
+def init_lora(
+    cfg: ModelConfig,
+    lcfg: LoraConfig,
+    key: jax.Array,
+    *,
+    gaussian_slots: Sequence[int] = (),
+) -> LoraParams:
+    """Zero-initialized stacked LoRA bank; ``gaussian_slots`` get the paper's
+    ``init_lora_weights=gaussian`` treatment (A ~ N(0, 1/r), B = 0)."""
+    layers: List[Dict] = []
+    for li in range(cfg.num_layers):
+        mods: Dict[str, Dict[str, jnp.ndarray]] = {}
+        for m in TARGET_MODULES:
+            fin, fout = cfg.module_in_out(m)
+            a = jnp.zeros((lcfg.max_adapters, fin, lcfg.rank), jnp.float32)
+            b = jnp.zeros((lcfg.max_adapters, lcfg.rank, fout), jnp.float32)
+            for slot in gaussian_slots:
+                key, sub = jax.random.split(key)
+                a = a.at[slot].set(
+                    jax.random.normal(sub, (fin, lcfg.rank), jnp.float32) / lcfg.rank
+                )
+            mods[m] = {"a": a, "b": b}
+        layers.append(mods)
+    scaling = jnp.full((lcfg.max_adapters,), lcfg.scaling, jnp.float32)
+    return {"layers": layers, "scaling": scaling}
+
+
+def random_adapter(
+    cfg: ModelConfig,
+    lcfg: LoraConfig,
+    key: jax.Array,
+    *,
+    targets: Sequence[str] = TARGET_MODULES,
+    scale: float = 0.02,
+) -> Dict:
+    """A dense (trained-looking) single adapter, for inference tests.
+
+    Returns {layer_idx: {module: (a [in,r], b [r,out])}}.
+    """
+    out: Dict[int, Dict[str, Tuple[jnp.ndarray, jnp.ndarray]]] = {}
+    for li in range(cfg.num_layers):
+        mods = {}
+        for m in targets:
+            fin, fout = cfg.module_in_out(m)
+            key, k1, k2 = jax.random.split(key, 3)
+            a = jax.random.normal(k1, (fin, lcfg.rank), jnp.float32) * scale
+            b = jax.random.normal(k2, (lcfg.rank, fout), jnp.float32) * scale
+            mods[m] = (a, b)
+        out[li] = mods
+    return out
+
+
+def load_adapter_into_slot(lora: LoraParams, adapter: Dict, slot: int) -> LoraParams:
+    """Write one adapter into bank slot ``slot`` (the hot-swap operation)."""
+    layers = []
+    for li, mods in enumerate(lora["layers"]):
+        new_mods = {}
+        for m, ab in mods.items():
+            if li in adapter and m in adapter[li]:
+                a_new, b_new = adapter[li][m]
+                new_mods[m] = {
+                    "a": ab["a"].at[slot].set(a_new),
+                    "b": ab["b"].at[slot].set(b_new),
+                }
+            else:
+                # Untargeted module: clear the slot so its delta is zero.
+                new_mods[m] = {
+                    "a": ab["a"].at[slot].set(0.0),
+                    "b": ab["b"].at[slot].set(0.0),
+                }
+        layers.append(new_mods)
+    return {"layers": layers, "scaling": lora["scaling"]}
+
+
+def adapter_mask_tree(lora: LoraParams, trainable_slots: Sequence[int]) -> LoraParams:
+    """Per-parameter 0/1 mask tree — MixedLoRAModelForTrainer isolation.
+
+    Gradients are multiplied by this mask so each trainer only updates its
+    own slots even though the backward pass is shared (paper Section 3.3).
+    """
+    def mask_like(x: jnp.ndarray) -> jnp.ndarray:
+        m = jnp.zeros((x.shape[0],) + (1,) * (x.ndim - 1), x.dtype)
+        for s in trainable_slots:
+            m = m.at[s].set(1.0)
+        return jnp.broadcast_to(m, x.shape)
+
+    layers = [
+        {m: {"a": mask_like(ab["a"]), "b": mask_like(ab["b"])} for m, ab in mods.items()}
+        for mods in lora["layers"]
+    ]
+    return {"layers": layers, "scaling": jnp.zeros_like(lora["scaling"])}
+
+
+def flatten_lora(lora: LoraParams) -> List[Tuple[str, jnp.ndarray]]:
+    """Deterministic (name, array) flattening — the AOT argument order."""
+    out: List[Tuple[str, jnp.ndarray]] = []
+    for li, mods in enumerate(lora["layers"]):
+        for m in TARGET_MODULES:
+            out.append((f"lora.layers.{li}.{m}.a", mods[m]["a"]))
+            out.append((f"lora.layers.{li}.{m}.b", mods[m]["b"]))
+    out.append(("lora.scaling", lora["scaling"]))
+    return out
+
+
+def unflatten_lora(cfg: ModelConfig, arrays: List[jnp.ndarray]) -> LoraParams:
+    """Inverse of :func:`flatten_lora` (arrays in the same order)."""
+    it = iter(arrays)
+    layers = []
+    for _ in range(cfg.num_layers):
+        mods = {}
+        for m in TARGET_MODULES:
+            a = next(it)
+            b = next(it)
+            mods[m] = {"a": a, "b": b}
+        layers.append(mods)
+    scaling = next(it)
+    return {"layers": layers, "scaling": scaling}

@@ -1,0 +1,388 @@
+"""L2 — Llama3-style GQA transformer with multi-LoRA via the SMLM kernel.
+
+Implements the paper's *unified computation flow* (Section 3.3, Algorithm 1):
+one forward pass over a token layout ``[finetune/eval ∥ prefill ∥ decode]``.
+The QKV / O / MLP projections run **jointly** over all rows (each projection
+is base-W matmul + one SMLM kernel call); only the attention inner step is
+split per request class, exactly as Algorithm 1 prescribes:
+
+    Q = Q_proj(X); K = K_proj(X); V = V_proj(X)      # joint, SMLM-routed
+    O_f  <- standard causal attention   (fine-tune / evaluation rows)
+    O_p  <- causal attention, fresh KV  (prefill rows)   [FlashInfer in paper]
+    O_d  <- single-token cache attention (decode rows)
+    O = O_proj(concat(O_f, O_p, O_d))                 # joint again
+
+Architecture: RMSNorm, RoPE (theta = 5e5), SwiGLU, grouped-query attention —
+the Llama3 traits, including the GQA K/V-shape asymmetry that Appendix E
+shows broke S-LoRA's fused layout (our per-module decoupled SMLM handles it
+natively).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, LoraConfig, TARGET_MODULES, SGMV_TILE_ROWS
+from .kernels import ref
+from .kernels.smlm import smlm_apply
+
+BaseParams = Dict
+
+MODULE_WEIGHT = {
+    "q": "wq", "k": "wk", "v": "wv", "o": "wo",
+    "gate": "wgate", "up": "wup", "down": "wdown",
+}
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def init_base_params(cfg: ModelConfig, key: jax.Array) -> BaseParams:
+    """Random (but well-scaled) base weights — the stand-in for Llama3-8B."""
+    def dense(k, fin, fout):
+        return jax.random.normal(k, (fin, fout), jnp.float32) * (fin ** -0.5)
+
+    keys = iter(jax.random.split(key, 8 + 16 * cfg.num_layers))
+    layers = []
+    for _ in range(cfg.num_layers):
+        layers.append({
+            "wq": dense(next(keys), cfg.hidden_size, cfg.q_dim),
+            "wk": dense(next(keys), cfg.hidden_size, cfg.kv_dim),
+            "wv": dense(next(keys), cfg.hidden_size, cfg.kv_dim),
+            "wo": dense(next(keys), cfg.q_dim, cfg.hidden_size),
+            "wgate": dense(next(keys), cfg.hidden_size, cfg.intermediate_size),
+            "wup": dense(next(keys), cfg.hidden_size, cfg.intermediate_size),
+            "wdown": dense(next(keys), cfg.intermediate_size, cfg.hidden_size),
+            "ln1": jnp.ones((cfg.hidden_size,), jnp.float32),
+            "ln2": jnp.ones((cfg.hidden_size,), jnp.float32),
+        })
+    return {
+        "embed": jax.random.normal(next(keys), (cfg.vocab_size, cfg.hidden_size)) * 0.02,
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.hidden_size,), jnp.float32),
+        "lm_head": dense(next(keys), cfg.hidden_size, cfg.vocab_size),
+    }
+
+
+BASE_FLAT_ORDER = (
+    ["embed"]
+    + [f"layers.{{li}}.{w}" for w in
+       ("wq", "wk", "wv", "wo", "wgate", "wup", "wdown", "ln1", "ln2")]
+    + ["final_norm", "lm_head"]
+)
+
+
+def flatten_base(params: BaseParams) -> List[Tuple[str, jnp.ndarray]]:
+    """Deterministic (name, array) order — the AOT/weights-file contract."""
+    out = [("base.embed", params["embed"])]
+    for li, layer in enumerate(params["layers"]):
+        for w in ("wq", "wk", "wv", "wo", "wgate", "wup", "wdown", "ln1", "ln2"):
+            out.append((f"base.layers.{li}.{w}", layer[w]))
+    out.append(("base.final_norm", params["final_norm"]))
+    out.append(("base.lm_head", params["lm_head"]))
+    return out
+
+
+def unflatten_base(cfg: ModelConfig, arrays: List[jnp.ndarray]) -> BaseParams:
+    it = iter(arrays)
+    embed = next(it)
+    layers = []
+    for _ in range(cfg.num_layers):
+        layer = {}
+        for w in ("wq", "wk", "wv", "wo", "wgate", "wup", "wdown", "ln1", "ln2"):
+            layer[w] = next(it)
+        layers.append(layer)
+    return {
+        "embed": embed,
+        "layers": layers,
+        "final_norm": next(it),
+        "lm_head": next(it),
+    }
+
+
+# --------------------------------------------------------------------------
+# Unified batch layout (the coordinator fills these slots)
+# --------------------------------------------------------------------------
+
+@dataclass
+class MixedLayout:
+    """One unified step's inputs. Row axis = [ft tokens ∥ pf tokens ∥ dec]."""
+
+    # Fine-tune / evaluation block — [Bf, Sf]; Bf or Sf may be 0.
+    ft_tokens: Optional[jnp.ndarray] = None      # [Bf, Sf] i32
+    ft_seq_lens: Optional[jnp.ndarray] = None    # [Bf] i32 (0 = empty slot)
+    ft_adapter: Optional[jnp.ndarray] = None     # [Bf] i32
+
+    # Prefill block — [Bp, Sp].
+    pf_tokens: Optional[jnp.ndarray] = None
+    pf_seq_lens: Optional[jnp.ndarray] = None
+    pf_adapter: Optional[jnp.ndarray] = None     # [Bp] i32 (<0 = base only)
+
+    # Decode block — [D] rows with per-slot KV caches.
+    dec_tokens: Optional[jnp.ndarray] = None     # [D] i32
+    dec_cache_lens: Optional[jnp.ndarray] = None # [D] i32
+    dec_adapter: Optional[jnp.ndarray] = None    # [D] i32
+    dec_valid: Optional[jnp.ndarray] = None      # [D] i32 (0 = dead slot)
+    k_cache: Optional[jnp.ndarray] = None        # [nl, D, M, nkv, hd]
+    v_cache: Optional[jnp.ndarray] = None
+
+    @property
+    def bf(self) -> int:
+        return 0 if self.ft_tokens is None else self.ft_tokens.shape[0]
+
+    @property
+    def sf(self) -> int:
+        return 0 if self.ft_tokens is None else self.ft_tokens.shape[1]
+
+    @property
+    def bp(self) -> int:
+        return 0 if self.pf_tokens is None else self.pf_tokens.shape[0]
+
+    @property
+    def sp(self) -> int:
+        return 0 if self.pf_tokens is None else self.pf_tokens.shape[1]
+
+    @property
+    def d(self) -> int:
+        return 0 if self.dec_tokens is None else self.dec_tokens.shape[0]
+
+    @property
+    def n_sgmv_rows(self) -> int:
+        return self.bf * self.sf + self.bp * self.sp
+
+    @property
+    def total_rows(self) -> int:
+        return self.n_sgmv_rows + self.d
+
+
+def _layout_row_meta(lay: MixedLayout) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-row (adapter_id, valid, position) over the unified row axis."""
+    ids, valid, pos = [], [], []
+    if lay.bf:
+        idx = jnp.arange(lay.sf)
+        ids.append(jnp.repeat(lay.ft_adapter, lay.sf))
+        valid.append((idx[None, :] < lay.ft_seq_lens[:, None]).reshape(-1))
+        pos.append(jnp.tile(idx, (lay.bf,)))
+    if lay.bp:
+        idx = jnp.arange(lay.sp)
+        ids.append(jnp.repeat(lay.pf_adapter, lay.sp))
+        valid.append((idx[None, :] < lay.pf_seq_lens[:, None]).reshape(-1))
+        pos.append(jnp.tile(idx, (lay.bp,)))
+    if lay.d:
+        ids.append(lay.dec_adapter)
+        valid.append(lay.dec_valid > 0)
+        pos.append(lay.dec_cache_lens)
+    return (
+        jnp.concatenate(ids).astype(jnp.int32),
+        jnp.concatenate(valid),
+        jnp.concatenate(pos).astype(jnp.int32),
+    )
+
+
+def _gather_tokens(lay: MixedLayout) -> jnp.ndarray:
+    toks = []
+    if lay.bf:
+        toks.append(lay.ft_tokens.reshape(-1))
+    if lay.bp:
+        toks.append(lay.pf_tokens.reshape(-1))
+    if lay.d:
+        toks.append(lay.dec_tokens)
+    return jnp.concatenate(toks).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+
+def linear_lora(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    lmod: Dict[str, jnp.ndarray],
+    scaling: jnp.ndarray,
+    adapter_ids: jnp.ndarray,
+    row_valid: jnp.ndarray,
+    n_sgmv_rows: int,
+    *,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """base matmul + SMLM delta. ``use_pallas=False`` swaps in the oracle
+    (used by tests to localize failures to the kernel vs the flow)."""
+    y = x @ w
+    if use_pallas:
+        delta = smlm_apply(
+            x, lmod["a"], lmod["b"], adapter_ids, row_valid, scaling,
+            n_sgmv_rows=n_sgmv_rows,
+        )
+    else:
+        ids = jnp.where(row_valid, adapter_ids, -1)
+        delta = ref.lora_gather_ref(x, lmod["a"], lmod["b"], ids, scaling)
+    return y + delta
+
+
+def _block_attention(
+    lay: MixedLayout,
+    q: jnp.ndarray,  # [S_tot, nh, hd]  (RoPE already applied)
+    k: jnp.ndarray,  # [S_tot, nkv, hd]
+    v: jnp.ndarray,
+    li: int,
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, Optional[Tuple[jnp.ndarray, jnp.ndarray]],
+           Optional[Tuple[jnp.ndarray, jnp.ndarray]]]:
+    """Algorithm 1's per-class attention split.
+
+    Returns (attn_out [S_tot, nh, hd], pf (k,v) to cache, dec (k_new, v_new)).
+    """
+    outs = []
+    pf_kv = None
+    dec_kv = None
+    off = 0
+
+    if lay.bf:
+        n = lay.bf * lay.sf
+        qf = q[off:off + n].reshape(lay.bf, lay.sf, cfg.num_heads, cfg.head_dim)
+        kf = k[off:off + n].reshape(lay.bf, lay.sf, cfg.num_kv_heads, cfg.head_dim)
+        vf = v[off:off + n].reshape(lay.bf, lay.sf, cfg.num_kv_heads, cfg.head_dim)
+        idx = jnp.arange(lay.sf)
+        causal = idx[:, None] >= idx[None, :]
+        within = idx[None, None, :] < lay.ft_seq_lens[:, None, None]  # [Bf,1,Sf]
+        mask = causal[None] & within
+        of = jax.vmap(ref.attention_ref)(qf, kf, vf, mask)
+        outs.append(of.reshape(n, cfg.num_heads, cfg.head_dim))
+        off += n
+
+    if lay.bp:
+        n = lay.bp * lay.sp
+        qp = q[off:off + n].reshape(lay.bp, lay.sp, cfg.num_heads, cfg.head_dim)
+        kp = k[off:off + n].reshape(lay.bp, lay.sp, cfg.num_kv_heads, cfg.head_dim)
+        vp = v[off:off + n].reshape(lay.bp, lay.sp, cfg.num_kv_heads, cfg.head_dim)
+        idx = jnp.arange(lay.sp)
+        causal = idx[:, None] >= idx[None, :]
+        within = idx[None, None, :] < lay.pf_seq_lens[:, None, None]
+        mask = causal[None] & within
+        op = jax.vmap(ref.attention_ref)(qp, kp, vp, mask)
+        outs.append(op.reshape(n, cfg.num_heads, cfg.head_dim))
+        pf_kv = (kp, vp)  # [Bp, Sp, nkv, hd] — coordinator copies into slots
+        off += n
+
+    if lay.d:
+        n = lay.d
+        qd = q[off:off + n]  # [D, nh, hd]
+        kd = k[off:off + n]  # [D, nkv, hd] — the new cache rows
+        vd = v[off:off + n]
+        kc = lay.k_cache[li]  # [D, M, nkv, hd]
+        vc = lay.v_cache[li]
+        m = kc.shape[1]
+        pos = jnp.arange(m)
+        # Attend over cache[0..len) plus the new token (appended logically).
+        def one(qi, ki_new, vi_new, kci, vci, length):
+            mask_c = pos < length  # [M]
+            kfull = jnp.concatenate([kci, ki_new[None]], axis=0)  # [M+1, nkv, hd]
+            vfull = jnp.concatenate([vci, vi_new[None]], axis=0)
+            mask = jnp.concatenate([mask_c, jnp.ones((1,), bool)])[None, :]  # [1, M+1]
+            return ref.attention_ref(qi[None], kfull, vfull, mask)[0]
+        od = jax.vmap(one)(qd, kd, vd, kc, vc, lay.dec_cache_lens)
+        outs.append(od)
+        dec_kv = (kd, vd)  # [D, nkv, hd] — coordinator appends at cache_lens
+
+    out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+    return out, pf_kv, dec_kv
+
+
+def forward_mixed(
+    cfg: ModelConfig,
+    base: BaseParams,
+    lora: Dict,
+    lay: MixedLayout,
+    *,
+    use_pallas: bool = True,
+) -> Tuple[jnp.ndarray, Dict]:
+    """Unified forward over the mixed layout.
+
+    Returns (logits [S_tot, V], aux) where aux carries the prefill KV tensors
+    ``pf_k/pf_v [nl, Bp, Sp, nkv, hd]`` and the new decode rows
+    ``dec_k/dec_v [nl, D, nkv, hd]``.
+    """
+    adapter_ids, row_valid, positions = _layout_row_meta(lay)
+    tokens = _gather_tokens(lay)
+    n_sgmv = lay.n_sgmv_rows
+    scaling = lora["scaling"]
+
+    x = base["embed"][tokens]  # [S_tot, H]
+    pf_ks, pf_vs, dec_ks, dec_vs = [], [], [], []
+
+    for li, layer in enumerate(base["layers"]):
+        lmods = lora["layers"][li]
+
+        def lin(h, mod):
+            return linear_lora(
+                h, layer[MODULE_WEIGHT[mod]], lmods[mod], scaling,
+                adapter_ids, row_valid, n_sgmv, use_pallas=use_pallas,
+            )
+
+        h = ref.rmsnorm_ref(x, layer["ln1"], cfg.rms_eps)
+        q = lin(h, "q").reshape(-1, cfg.num_heads, cfg.head_dim)
+        k = lin(h, "k").reshape(-1, cfg.num_kv_heads, cfg.head_dim)
+        v = lin(h, "v").reshape(-1, cfg.num_kv_heads, cfg.head_dim)
+        q = ref.rope_ref(q, positions, cfg.rope_theta)
+        k = ref.rope_ref(k, positions, cfg.rope_theta)
+
+        attn, pf_kv, dec_kv = _block_attention(lay, q, k, v, li, cfg)
+        if pf_kv is not None:
+            pf_ks.append(pf_kv[0])
+            pf_vs.append(pf_kv[1])
+        if dec_kv is not None:
+            dec_ks.append(dec_kv[0])
+            dec_vs.append(dec_kv[1])
+
+        o = lin(attn.reshape(-1, cfg.q_dim), "o")
+        x = x + o
+
+        h2 = ref.rmsnorm_ref(x, layer["ln2"], cfg.rms_eps)
+        gate = lin(h2, "gate")
+        up = lin(h2, "up")
+        mlp = lin(jax.nn.silu(gate) * up, "down")
+        x = x + mlp
+
+    x = ref.rmsnorm_ref(x, base["final_norm"], cfg.rms_eps)
+    logits = x @ base["lm_head"]
+
+    aux: Dict = {}
+    if pf_ks:
+        aux["pf_k"] = jnp.stack(pf_ks)  # [nl, Bp, Sp, nkv, hd]
+        aux["pf_v"] = jnp.stack(pf_vs)
+    if dec_ks:
+        aux["dec_k"] = jnp.stack(dec_ks)  # [nl, D, nkv, hd]
+        aux["dec_v"] = jnp.stack(dec_vs)
+    return logits, aux
+
+
+# --------------------------------------------------------------------------
+# Algorithm 2 — per-job loss extraction
+# --------------------------------------------------------------------------
+
+def per_sequence_loss(
+    logits: jnp.ndarray,     # [B, S, V]
+    labels: jnp.ndarray,     # [B, S] i32, -100 = ignore
+    seq_lens: jnp.ndarray,   # [B]
+) -> jnp.ndarray:
+    """Shifted causal-LM cross entropy, mean over valid positions, per job.
+
+    Losses are tracked separately per sequence (Algorithm 2) so each trainer
+    applies its own accumulation scale without cross-interference.
+    """
+    b, s, vsz = logits.shape
+    lg = logits[:, :-1, :]
+    lb = labels[:, 1:]
+    idx = jnp.arange(s - 1)
+    valid = (lb != -100) & (idx[None, :] < (seq_lens[:, None] - 1))
+    lb_safe = jnp.maximum(lb, 0)
+    logp = jax.nn.log_softmax(lg.astype(jnp.float32), axis=-1)
+    tok_ll = jnp.take_along_axis(logp, lb_safe[..., None], axis=-1)[..., 0]
+    tok_loss = jnp.where(valid, -tok_ll, 0.0)
+    denom = jnp.maximum(valid.sum(axis=-1), 1)
+    return tok_loss.sum(axis=-1) / denom

@@ -1,0 +1,129 @@
+"""L2 training path — Algorithm 2 + shared backward + AdamW on LoRA slots.
+
+The paper's unified flow computes per-job losses separately (distinct
+gradient-accumulation scales), then *sums* them into one scalar so a single
+backward pass produces gradients for every fine-tuning job at once; the
+MixedLoRAModelForTrainer mask keeps each trainer's update confined to its own
+adapter slots. FlashInfer has no backward, so the fine-tune rows already go
+through the standard attention implementation in ``model.forward_mixed`` —
+``jax.grad`` differentiates that path directly (the PyTorch-Autograd
+equivalent in the paper).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .model import BaseParams, MixedLayout, forward_mixed, per_sequence_loss
+
+
+def _trainable(lora: Dict) -> Dict:
+    """The differentiable part of the LoRA pytree (a/b, not scaling)."""
+    return {"layers": lora["layers"]}
+
+
+def _with_scaling(trainable: Dict, scaling: jnp.ndarray) -> Dict:
+    return {"layers": trainable["layers"], "scaling": scaling}
+
+
+def grad_step(
+    cfg: ModelConfig,
+    base: BaseParams,
+    lora: Dict,
+    lay: MixedLayout,
+    ft_labels: jnp.ndarray,     # [Bf, Sf] i32, -100 ignore
+    ft_train_flag: jnp.ndarray, # [Bf] f32 — 1 train, 0 evaluation
+    ft_loss_scale: jnp.ndarray, # [Bf] f32 — 1/accumulation_steps per job
+    grad_acc: Optional[Dict] = None,
+    *,
+    use_pallas: bool = True,
+) -> Tuple[jnp.ndarray, Dict, Dict]:
+    """One unified forward + shared backward.
+
+    Returns (per-job losses [Bf], accumulated grads, aux-with-inference-outs).
+    Gradients flow only from rows whose job has ``train_flag=1``; evaluation
+    jobs get a loss but contribute zero cotangent. Decode/prefill rows riding
+    in the same layout get their outputs through ``aux`` untouched.
+    """
+    bf, sf = lay.bf, lay.sf
+    scaling = lora["scaling"]
+
+    def loss_fn(trainable):
+        logits, aux = forward_mixed(
+            cfg, base, _with_scaling(trainable, scaling), lay, use_pallas=use_pallas
+        )
+        ft_logits = logits[: bf * sf].reshape(bf, sf, -1)
+        losses = per_sequence_loss(ft_logits, ft_labels, lay.ft_seq_lens)
+        total = jnp.sum(losses * ft_train_flag * ft_loss_scale)
+        return total, (losses, aux, logits)
+
+    (_, (losses, aux, _)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        _trainable(lora)
+    )
+    if grad_acc is not None:
+        grads = jax.tree.map(jnp.add, grads, _trainable(grad_acc))
+    return losses, {"layers": grads["layers"]}, aux
+
+
+def adam_update(
+    lora: Dict,
+    grads: Dict,
+    m: Dict,
+    v: Dict,
+    mask: Dict,
+    lr: jnp.ndarray,
+    step: jnp.ndarray,
+    *,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Tuple[Dict, Dict, Dict]:
+    """Masked AdamW over the LoRA bank (paper's Trainer default optimizer).
+
+    ``mask`` is the MixedLoRAModelForTrainer isolation tree: slots not owned
+    by any active trainer receive exactly zero update, so their m/v state is
+    also frozen — adapters serving inference are bit-identical before/after.
+    """
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - beta1 ** t
+    bc2 = 1.0 - beta2 ** t
+
+    def upd(p, g, mi, vi, mk):
+        g = g * mk
+        mn = beta1 * mi + (1 - beta1) * g
+        vn = beta2 * vi + (1 - beta2) * jnp.square(g)
+        mhat = mn / bc1
+        vhat = vn / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p
+        return p - lr * delta * mk, mn * mk + mi * (1 - mk), vn * mk + vi * (1 - mk)
+
+    lt, gt = _trainable(lora), _trainable(grads)
+    mt, vt, kt = _trainable(m), _trainable(v), _trainable(mask)
+    flat_p, treedef = jax.tree.flatten(lt)
+    flat_g = jax.tree.leaves(gt)
+    flat_m = jax.tree.leaves(mt)
+    flat_v = jax.tree.leaves(vt)
+    flat_k = jax.tree.leaves(kt)
+    new_p, new_m, new_v = [], [], []
+    for p, g, mi, vi, mk in zip(flat_p, flat_g, flat_m, flat_v, flat_k):
+        pn, mn, vn = upd(p, g, mi, vi, mk)
+        new_p.append(pn)
+        new_m.append(mn)
+        new_v.append(vn)
+    lora_new = jax.tree.unflatten(treedef, new_p)
+    m_new = jax.tree.unflatten(treedef, new_m)
+    v_new = jax.tree.unflatten(treedef, new_v)
+    return (
+        {"layers": lora_new["layers"], "scaling": lora["scaling"]},
+        {"layers": m_new["layers"], "scaling": m["scaling"]},
+        {"layers": v_new["layers"], "scaling": v["scaling"]},
+    )
+
+
+def zeros_like_lora(lora: Dict) -> Dict:
+    return jax.tree.map(jnp.zeros_like, lora)

@@ -1,0 +1,37 @@
+import os
+import sys
+
+import jax
+import pytest
+
+# Run the tests from the repo root or python/: make `compile` importable.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile.configs import BuildConfig, LoraConfig, ModelConfig  # noqa: E402
+from compile import lora as LM  # noqa: E402
+from compile import model as M  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def small_cfg() -> ModelConfig:
+    """Two-layer geometry: fast, but exercises GQA + every module."""
+    return ModelConfig(num_layers=2, max_cache_len=48)
+
+
+@pytest.fixture(scope="session")
+def lcfg() -> LoraConfig:
+    return LoraConfig()
+
+
+@pytest.fixture(scope="session")
+def base_params(small_cfg):
+    return M.init_base_params(small_cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="session")
+def lora_bank(small_cfg, lcfg):
+    bank = LM.init_lora(small_cfg, lcfg, jax.random.PRNGKey(1))
+    for slot in range(lcfg.max_adapters):
+        ad = LM.random_adapter(small_cfg, lcfg, jax.random.PRNGKey(100 + slot))
+        bank = LM.load_adapter_into_slot(bank, ad, slot)
+    return bank

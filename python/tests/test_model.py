@@ -1,0 +1,266 @@
+"""L2 correctness: unified forward vs oracles, per-class equivalences.
+
+The central property (paper Section 3.3): running a *mixed* batch through
+the unified flow must produce, for every request, exactly what that request
+would get in a dedicated pass. Batching is a scheduling optimization, never
+a semantics change.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile import model as M
+
+
+def _rand_tokens(rng, shape, vocab):
+    return jnp.asarray(rng.integers(0, vocab, size=shape), jnp.int32)
+
+
+def test_pallas_flow_matches_ref_flow(small_cfg, base_params, lora_bank):
+    """use_pallas=True and use_pallas=False must agree on a full mixed batch."""
+    rng = np.random.default_rng(0)
+    cfg = small_cfg
+    lay = M.MixedLayout(
+        ft_tokens=_rand_tokens(rng, (2, 32), cfg.vocab_size),
+        ft_seq_lens=jnp.array([17, 32], jnp.int32),
+        ft_adapter=jnp.array([0, 1], jnp.int32),
+        pf_tokens=_rand_tokens(rng, (2, 16), cfg.vocab_size),
+        pf_seq_lens=jnp.array([16, 5], jnp.int32),
+        pf_adapter=jnp.array([2, -1], jnp.int32),
+        dec_tokens=_rand_tokens(rng, (4,), cfg.vocab_size),
+        dec_cache_lens=jnp.array([3, 8, 0, 1], jnp.int32),
+        dec_adapter=jnp.array([2, -1, 0, 3], jnp.int32),
+        dec_valid=jnp.array([1, 1, 0, 1], jnp.int32),
+        k_cache=jnp.asarray(
+            rng.standard_normal(
+                (cfg.num_layers, 4, 16, cfg.num_kv_heads, cfg.head_dim)
+            ), jnp.float32) * 0.1,
+        v_cache=jnp.asarray(
+            rng.standard_normal(
+                (cfg.num_layers, 4, 16, cfg.num_kv_heads, cfg.head_dim)
+            ), jnp.float32) * 0.1,
+    )
+    lp, ap = M.forward_mixed(cfg, base_params, lora_bank, lay, use_pallas=True)
+    lr, ar = M.forward_mixed(cfg, base_params, lora_bank, lay, use_pallas=False)
+    np.testing.assert_allclose(lp, lr, rtol=2e-4, atol=2e-4)
+    for k in ap:
+        np.testing.assert_allclose(ap[k], ar[k], rtol=2e-4, atol=2e-4)
+
+
+def test_prefill_only_matches_manual_transformer(small_cfg, base_params, lora_bank):
+    """Prefill through the unified flow == a hand-rolled per-sequence pass
+    built directly from the oracle primitives."""
+    cfg = small_cfg
+    rng = np.random.default_rng(1)
+    seq = 16
+    tokens = _rand_tokens(rng, (1, seq), cfg.vocab_size)
+    lay = M.MixedLayout(
+        pf_tokens=tokens,
+        pf_seq_lens=jnp.array([seq], jnp.int32),
+        pf_adapter=jnp.array([1], jnp.int32),
+    )
+    logits, _ = M.forward_mixed(cfg, base_params, lora_bank, lay)
+
+    # Manual single-sequence forward from primitives.
+    x = base_params["embed"][tokens[0]]
+    pos = jnp.arange(seq)
+    scaling = lora_bank["scaling"]
+    for li, layer in enumerate(base_params["layers"]):
+        lm = lora_bank["layers"][li]
+        ids = jnp.full((seq,), 1, jnp.int32)
+
+        def lin(h, w, mod):
+            return h @ w + ref.lora_gather_ref(
+                h, lm[mod]["a"], lm[mod]["b"], ids, scaling
+            )
+
+        h = ref.rmsnorm_ref(x, layer["ln1"], cfg.rms_eps)
+        q = lin(h, layer["wq"], "q").reshape(seq, cfg.num_heads, cfg.head_dim)
+        k = lin(h, layer["wk"], "k").reshape(seq, cfg.num_kv_heads, cfg.head_dim)
+        v = lin(h, layer["wv"], "v").reshape(seq, cfg.num_kv_heads, cfg.head_dim)
+        q = ref.rope_ref(q, pos, cfg.rope_theta)
+        k = ref.rope_ref(k, pos, cfg.rope_theta)
+        mask = pos[:, None] >= pos[None, :]
+        attn = ref.attention_ref(q, k, v, mask).reshape(seq, cfg.q_dim)
+        x = x + lin(attn, layer["wo"], "o")
+        h2 = ref.rmsnorm_ref(x, layer["ln2"], cfg.rms_eps)
+        gate = lin(h2, layer["wgate"], "gate")
+        up = lin(h2, layer["wup"], "up")
+        x = x + lin(jax.nn.silu(gate) * up, layer["wdown"], "down")
+    x = ref.rmsnorm_ref(x, base_params["final_norm"], cfg.rms_eps)
+    want = x @ base_params["lm_head"]
+
+    np.testing.assert_allclose(logits, want, rtol=2e-4, atol=2e-4)
+
+
+def test_decode_equals_prefill_continuation(small_cfg, base_params, lora_bank):
+    """Prefill s tokens then decode token s+1 == prefill s+1 tokens.
+
+    This is the KV-cache correctness contract the whole serving path rests on.
+    """
+    cfg = small_cfg
+    rng = np.random.default_rng(2)
+    s = 12  # deliberately < bucket length: exercises padded prefill
+    bucket = 16
+    full = _rand_tokens(rng, (1, bucket), cfg.vocab_size)
+
+    # Path A: prefill all s+1 tokens (padded to the bucket); last-token logits.
+    lay_a = M.MixedLayout(
+        pf_tokens=full,
+        pf_seq_lens=jnp.array([s + 1], jnp.int32),
+        pf_adapter=jnp.array([2], jnp.int32),
+    )
+    logits_a, _ = M.forward_mixed(cfg, base_params, lora_bank, lay_a)
+    last_a = logits_a[s]
+
+    # Path B: prefill s tokens, capture KV, then decode token s+1 against it.
+    lay_b1 = M.MixedLayout(
+        pf_tokens=full,  # same bucket, shorter seq_len: pad rows are masked
+        pf_seq_lens=jnp.array([s], jnp.int32),
+        pf_adapter=jnp.array([2], jnp.int32),
+    )
+    _, aux = M.forward_mixed(cfg, base_params, lora_bank, lay_b1)
+    m = 24
+    k_cache = jnp.zeros((cfg.num_layers, 1, m, cfg.num_kv_heads, cfg.head_dim))
+    v_cache = jnp.zeros_like(k_cache)
+    # pf_k is bucket-shaped [nl, 1, 16, ...]; only the first s rows are live.
+    k_cache = k_cache.at[:, :, :s].set(aux["pf_k"][:, :, :s])
+    v_cache = v_cache.at[:, :, :s].set(aux["pf_v"][:, :, :s])
+    lay_b2 = M.MixedLayout(
+        dec_tokens=full[:, s],
+        dec_cache_lens=jnp.array([s], jnp.int32),
+        dec_adapter=jnp.array([2], jnp.int32),
+        dec_valid=jnp.array([1], jnp.int32),
+        k_cache=k_cache,
+        v_cache=v_cache,
+    )
+    logits_b, aux_b = M.forward_mixed(cfg, base_params, lora_bank, lay_b2)
+    np.testing.assert_allclose(logits_b[0], last_a, rtol=3e-4, atol=3e-4)
+    # And the new KV rows equal row s of the full prefill.
+    lay_check = M.MixedLayout(
+        pf_tokens=full,
+        pf_seq_lens=jnp.array([s + 1], jnp.int32),
+        pf_adapter=jnp.array([2], jnp.int32),
+    )
+    _, aux_full = M.forward_mixed(cfg, base_params, lora_bank, lay_check)
+    np.testing.assert_allclose(
+        aux_b["dec_k"][:, 0], aux_full["pf_k"][:, 0, s], rtol=3e-4, atol=3e-4
+    )
+
+
+def test_mixed_batch_equals_separate_passes(small_cfg, base_params, lora_bank):
+    """THE unified-flow property: co-batched ft+pf+dec == each alone."""
+    cfg = small_cfg
+    rng = np.random.default_rng(3)
+    ft_tokens = _rand_tokens(rng, (1, 16), cfg.vocab_size)
+    pf_tokens = _rand_tokens(rng, (1, 16), cfg.vocab_size)
+    dec_tokens = _rand_tokens(rng, (2,), cfg.vocab_size)
+    kc = jnp.asarray(rng.standard_normal(
+        (cfg.num_layers, 2, 16, cfg.num_kv_heads, cfg.head_dim)), jnp.float32) * 0.1
+    vc = jnp.asarray(rng.standard_normal(
+        (cfg.num_layers, 2, 16, cfg.num_kv_heads, cfg.head_dim)), jnp.float32) * 0.1
+    common = dict(
+        ft_seq_lens=jnp.array([13], jnp.int32),
+        ft_adapter=jnp.array([0], jnp.int32),
+        pf_seq_lens=jnp.array([16], jnp.int32),
+        pf_adapter=jnp.array([3], jnp.int32),
+        dec_cache_lens=jnp.array([7, 2], jnp.int32),
+        dec_adapter=jnp.array([1, -1], jnp.int32),
+        dec_valid=jnp.array([1, 1], jnp.int32),
+    )
+
+    mixed = M.MixedLayout(
+        ft_tokens=ft_tokens, pf_tokens=pf_tokens, dec_tokens=dec_tokens,
+        k_cache=kc, v_cache=vc,
+        **common,
+    )
+    lm, am = M.forward_mixed(cfg, base_params, lora_bank, mixed)
+
+    only_ft = M.MixedLayout(
+        ft_tokens=ft_tokens,
+        ft_seq_lens=common["ft_seq_lens"], ft_adapter=common["ft_adapter"],
+    )
+    lf, _ = M.forward_mixed(cfg, base_params, lora_bank, only_ft)
+
+    only_pf = M.MixedLayout(
+        pf_tokens=pf_tokens,
+        pf_seq_lens=common["pf_seq_lens"], pf_adapter=common["pf_adapter"],
+    )
+    lp, ap = M.forward_mixed(cfg, base_params, lora_bank, only_pf)
+
+    only_dec = M.MixedLayout(
+        dec_tokens=dec_tokens,
+        dec_cache_lens=common["dec_cache_lens"],
+        dec_adapter=common["dec_adapter"], dec_valid=common["dec_valid"],
+        k_cache=kc, v_cache=vc,
+    )
+    ld, ad = M.forward_mixed(cfg, base_params, lora_bank, only_dec)
+
+    np.testing.assert_allclose(lm[:16], lf, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(lm[16:32], lp, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(lm[32:], ld, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(am["pf_k"], ap["pf_k"], rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(am["dec_k"], ad["dec_k"], rtol=3e-4, atol=3e-4)
+
+
+def test_adapter_isolation_in_shared_batch(small_cfg, base_params, lora_bank):
+    """Changing adapter 3's weights must not perturb rows routed to adapter 0
+    (virtualization isolation, paper Section 3.2)."""
+    cfg = small_cfg
+    rng = np.random.default_rng(4)
+    pf_tokens = _rand_tokens(rng, (2, 16), cfg.vocab_size)
+    lay = M.MixedLayout(
+        pf_tokens=pf_tokens,
+        pf_seq_lens=jnp.array([16, 16], jnp.int32),
+        pf_adapter=jnp.array([0, 3], jnp.int32),
+    )
+    logits1, _ = M.forward_mixed(cfg, base_params, lora_bank, lay)
+
+    mutated = jax.tree.map(lambda x: x, lora_bank)  # shallow copy
+    l0 = mutated["layers"][0]["q"]
+    mutated["layers"][0] = dict(mutated["layers"][0])
+    mutated["layers"][0]["q"] = {
+        "a": l0["a"].at[3].add(1.0),
+        "b": l0["b"].at[3].add(1.0),
+    }
+    logits2, _ = M.forward_mixed(cfg, base_params, mutated, lay)
+
+    np.testing.assert_allclose(logits2[:16], logits1[:16], rtol=1e-6, atol=1e-6)
+    assert float(jnp.abs(logits2[16:] - logits1[16:]).max()) > 1e-3
+
+
+def test_base_only_rows_ignore_all_adapters(small_cfg, base_params, lora_bank):
+    cfg = small_cfg
+    rng = np.random.default_rng(5)
+    pf_tokens = _rand_tokens(rng, (1, 16), cfg.vocab_size)
+    lay = M.MixedLayout(
+        pf_tokens=pf_tokens,
+        pf_seq_lens=jnp.array([16], jnp.int32),
+        pf_adapter=jnp.array([-1], jnp.int32),
+    )
+    with_bank, _ = M.forward_mixed(cfg, base_params, lora_bank, lay)
+    import compile.lora as LM
+    from compile.configs import LoraConfig
+    empty = LM.init_lora(cfg, LoraConfig(), jax.random.PRNGKey(9))
+    without, _ = M.forward_mixed(cfg, base_params, empty, lay)
+    np.testing.assert_allclose(with_bank, without, rtol=1e-5, atol=1e-5)
+
+
+def test_per_sequence_loss_ignores_padding_and_shifts():
+    logits = jnp.zeros((2, 5, 7))
+    # Uniform logits => loss = log(7) on every counted position.
+    labels = jnp.array([[1, 2, 3, -100, -100], [1, 2, -100, 4, 5]], jnp.int32)
+    lens = jnp.array([4, 5], jnp.int32)
+    losses = M.per_sequence_loss(logits, labels, lens)
+    np.testing.assert_allclose(losses, np.log(7.0) * np.ones(2), rtol=1e-6)
+
+
+def test_per_sequence_loss_empty_sequence_is_finite():
+    logits = jnp.zeros((1, 4, 7))
+    labels = jnp.full((1, 4), -100, jnp.int32)
+    losses = M.per_sequence_loss(logits, labels, jnp.array([0], jnp.int32))
+    assert np.isfinite(np.asarray(losses)).all()
+    np.testing.assert_allclose(losses, [0.0])

@@ -1,0 +1,232 @@
+"""L1 correctness: SMLM Pallas kernels vs the pure-jnp oracles.
+
+Hypothesis sweeps shapes, adapter counts, segment layouts and dtypes;
+every case asserts allclose against *two* independent references
+(gather-based and adapter-loop) so an oracle bug cannot hide a kernel bug.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import SGMV_TILE_ROWS
+from compile.kernels import ref
+from compile.kernels.smlm import (
+    make_tile_descriptors,
+    smlm_apply,
+    smlm_bgmv,
+    smlm_sgmv,
+    vmem_bytes_per_step,
+)
+
+T = SGMV_TILE_ROWS
+
+
+def _random_segments(rng, n_tiles, num_adapters, allow_none=True):
+    """Tile-aligned segment layout: per-tile adapter id + valid rows."""
+    tile_adapter = rng.integers(-1 if allow_none else 0, num_adapters, size=n_tiles)
+    tile_valid = np.where(
+        tile_adapter >= 0, rng.integers(1, T + 1, size=n_tiles), 0
+    )
+    return tile_adapter.astype(np.int32), tile_valid.astype(np.int32)
+
+
+def _rows_from_tiles(tile_adapter, tile_valid):
+    """Expand tile descriptors to per-row (adapter_id, valid)."""
+    ids, valid = [], []
+    for a, v in zip(tile_adapter, tile_valid):
+        ids.extend([a] * T)
+        valid.extend([True] * int(v) + [False] * (T - int(v)))
+    return np.array(ids, np.int32), np.array(valid, bool)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_tiles=st.integers(1, 6),
+    num_adapters=st.integers(1, 5),
+    hidden=st.sampled_from([16, 32, 128]),
+    rank=st.sampled_from([4, 8, 16]),
+    out=st.sampled_from([16, 64, 96]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sgmv_matches_both_oracles(n_tiles, num_adapters, hidden, rank, out, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n_tiles * T, hidden), np.float32)
+    a = rng.standard_normal((num_adapters, hidden, rank), np.float32) * 0.1
+    b = rng.standard_normal((num_adapters, rank, out), np.float32) * 0.1
+    scaling = rng.uniform(0.5, 3.0, num_adapters).astype(np.float32)
+    tile_adapter, tile_valid = _random_segments(rng, n_tiles, num_adapters)
+    row_ids, row_valid = _rows_from_tiles(tile_adapter, tile_valid)
+
+    got = smlm_sgmv(
+        jnp.asarray(x), jnp.asarray(a), jnp.asarray(b),
+        jnp.asarray(tile_adapter), jnp.asarray(tile_valid), jnp.asarray(scaling),
+    )
+    ids_masked = np.where(row_valid, row_ids, -1)
+    want1 = ref.lora_gather_ref(x, a, b, jnp.asarray(ids_masked), jnp.asarray(scaling))
+    want2 = ref.lora_segment_loop_ref(
+        jnp.asarray(x), jnp.asarray(a), jnp.asarray(b),
+        jnp.asarray(ids_masked), jnp.asarray(scaling),
+    )
+    np.testing.assert_allclose(got, want1, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(got, want2, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(1, 16),
+    num_adapters=st.integers(1, 5),
+    hidden=st.sampled_from([16, 64]),
+    rank=st.sampled_from([4, 8]),
+    out=st.sampled_from([16, 48]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bgmv_matches_oracle(d, num_adapters, hidden, rank, out, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((d, hidden), np.float32)
+    a = rng.standard_normal((num_adapters, hidden, rank), np.float32) * 0.1
+    b = rng.standard_normal((num_adapters, rank, out), np.float32) * 0.1
+    scaling = rng.uniform(0.5, 3.0, num_adapters).astype(np.float32)
+    ids = rng.integers(-1, num_adapters, size=d).astype(np.int32)
+
+    got = smlm_bgmv(jnp.asarray(x), jnp.asarray(a), jnp.asarray(b),
+                    jnp.asarray(ids), jnp.asarray(scaling))
+    want = ref.lora_gather_ref(x, a, b, jnp.asarray(ids), jnp.asarray(scaling))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_sgmv_rejects_unaligned_rows():
+    x = jnp.zeros((T + 3, 16))
+    a = jnp.zeros((2, 16, 4))
+    b = jnp.zeros((2, 4, 16))
+    with pytest.raises(ValueError, match="not a multiple"):
+        smlm_sgmv(x, a, b, jnp.zeros(2, jnp.int32), jnp.zeros(2, jnp.int32),
+                  jnp.ones(2))
+
+
+def test_sgmv_rejects_bad_descriptor_count():
+    x = jnp.zeros((2 * T, 16))
+    a = jnp.zeros((2, 16, 4))
+    b = jnp.zeros((2, 4, 16))
+    with pytest.raises(ValueError, match="tile_adapter"):
+        smlm_sgmv(x, a, b, jnp.zeros(3, jnp.int32), jnp.zeros(3, jnp.int32),
+                  jnp.ones(2))
+
+
+def test_inactive_tiles_emit_exact_zero():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((2 * T, 8), np.float32)
+    a = rng.standard_normal((1, 8, 4), np.float32)
+    b = rng.standard_normal((1, 4, 8), np.float32)
+    got = smlm_sgmv(
+        jnp.asarray(x), jnp.asarray(a), jnp.asarray(b),
+        jnp.array([-1, -1], jnp.int32), jnp.array([0, 0], jnp.int32), jnp.ones(1),
+    )
+    assert np.all(np.asarray(got) == 0.0)
+
+
+def test_dynamic_scaling_applied_per_adapter():
+    """Paper Section 3.3: dynamic scaling is applied per request at runtime."""
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((T, 8), np.float32)
+    a = rng.standard_normal((2, 8, 4), np.float32)
+    b = rng.standard_normal((2, 4, 8), np.float32)
+    base = smlm_sgmv(jnp.asarray(x), jnp.asarray(a), jnp.asarray(b),
+                     jnp.array([1], jnp.int32), jnp.array([T], jnp.int32),
+                     jnp.array([1.0, 1.0]))
+    doubled = smlm_sgmv(jnp.asarray(x), jnp.asarray(a), jnp.asarray(b),
+                        jnp.array([1], jnp.int32), jnp.array([T], jnp.int32),
+                        jnp.array([1.0, 2.0]))
+    np.testing.assert_allclose(np.asarray(doubled), 2 * np.asarray(base), rtol=1e-6)
+
+
+def test_make_tile_descriptors_roundtrip():
+    ids = jnp.array([2] * T + [0] * T + [1] * (T // 2) + [1] * (T - T // 2), jnp.int32)
+    valid = jnp.array([True] * T + [True] * (T - 4) + [False] * 4
+                      + [True] * (T // 2) + [False] * (T - T // 2))
+    ta, tv = make_tile_descriptors(ids, valid)
+    np.testing.assert_array_equal(np.asarray(ta), [2, 0, 1])
+    np.testing.assert_array_equal(np.asarray(tv), [T, T - 4, T // 2])
+
+
+def test_make_tile_descriptors_empty_tile_is_inactive():
+    ids = jnp.array([3] * T, jnp.int32)
+    valid = jnp.zeros(T, bool)
+    ta, tv = make_tile_descriptors(ids, valid)
+    assert int(ta[0]) == -1 and int(tv[0]) == 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n_seg_tiles=st.integers(0, 4),
+    d=st.integers(0, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_smlm_apply_mixed_layout(n_seg_tiles, d, seed):
+    """The Algorithm-1 split: SGMV prefix + BGMV suffix equals full oracle."""
+    if n_seg_tiles == 0 and d == 0:
+        return
+    rng = np.random.default_rng(seed)
+    hidden, rank, out, L = 32, 8, 24, 3
+    s = n_seg_tiles * T + d
+    x = rng.standard_normal((s, hidden), np.float32)
+    a = rng.standard_normal((L, hidden, rank), np.float32) * 0.1
+    b = rng.standard_normal((L, rank, out), np.float32) * 0.1
+    scaling = rng.uniform(0.5, 2.0, L).astype(np.float32)
+
+    tile_adapter, tile_valid = _random_segments(rng, n_seg_tiles, L)
+    seg_ids, seg_valid = (
+        _rows_from_tiles(tile_adapter, tile_valid)
+        if n_seg_tiles else (np.zeros(0, np.int32), np.zeros(0, bool))
+    )
+    dec_ids = rng.integers(-1, L, size=d).astype(np.int32)
+    dec_valid = rng.integers(0, 2, size=d).astype(bool)
+    ids = np.concatenate([seg_ids, dec_ids])
+    valid = np.concatenate([seg_valid, dec_valid])
+
+    got = smlm_apply(
+        jnp.asarray(x), jnp.asarray(a), jnp.asarray(b),
+        jnp.asarray(ids), jnp.asarray(valid), jnp.asarray(scaling),
+        n_sgmv_rows=n_seg_tiles * T,
+    )
+    masked = np.where(valid, ids, -1)
+    want = ref.lora_gather_ref(x, a, b, jnp.asarray(masked), jnp.asarray(scaling))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_smlm_apply_custom_vjp_matches_autodiff_of_ref():
+    """Kernel-forward / standard-backward must equal full autodiff of the
+    gather reference (the paper's PyTorch-Autograd fallback)."""
+    rng = np.random.default_rng(7)
+    hidden, rank, out, L = 16, 4, 12, 3
+    s, d = 2 * T, 5
+    x = jnp.asarray(rng.standard_normal((s + d, hidden), np.float32))
+    a = jnp.asarray(rng.standard_normal((L, hidden, rank), np.float32) * 0.1)
+    b = jnp.asarray(rng.standard_normal((L, rank, out), np.float32) * 0.1)
+    ids = jnp.asarray(np.concatenate([[0] * T, [2] * T, [1, 1, -1, 0, 2]]).astype(np.int32))
+    valid = jnp.asarray(np.array([True] * (s + d)))
+    scaling = jnp.asarray(rng.uniform(0.5, 2.0, L).astype(np.float32))
+
+    def loss_kernel(x, a, b):
+        y = smlm_apply(x, a, b, ids, valid, scaling, n_sgmv_rows=s)
+        return jnp.sum(jnp.sin(y))
+
+    def loss_ref(x, a, b):
+        masked = jnp.where(valid, ids, -1)
+        y = ref.lora_gather_ref(x, a, b, masked, scaling)
+        return jnp.sum(jnp.sin(y))
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(x, a, b)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, a, b)
+    for got, want in zip(gk, gr):
+        np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_vmem_budget_reference_shape():
+    """DESIGN.md §7: deployment block shape stays under the 4 MiB target."""
+    n = vmem_bytes_per_step(
+        tile_rows=64, hidden=4096, rank=64, out_features=4096, max_adapters=8
+    )
+    assert n <= 4 * 1024 * 1024

@@ -1,0 +1,150 @@
+//! Coordinator-overhead benchmarks: scheduling cost per step with the
+//! backend stubbed to near-zero, KV gather/append costs, and the
+//! virtualized-registry hot-swap cost. §Perf's "L3 should not be the
+//! bottleneck" evidence.
+//!
+//! Run: cargo bench --bench coordinator
+
+use loquetier::coordinator::{Coordinator, CoordinatorConfig, FinetuneJob, InferenceRequest, TrainExample};
+use loquetier::engine::{CostModel, SimBackend};
+use loquetier::harness::{sim_buckets, sim_geometry};
+use loquetier::kvcache::{CacheConfig, KvCacheManager};
+use loquetier::util::bench::{bench, bench_for};
+
+fn zero_cost() -> CostModel {
+    CostModel {
+        launch_base_s: 0.0,
+        prefill_token_s: 0.0,
+        decode_row_s: 0.0,
+        decode_cached_token_s: 0.0,
+        train_token_s: 0.0,
+        train_floor_tokens: 0.0,
+        lora_backward_overhead: 1.0,
+        adam_s: 0.0,
+        lora_token_s: 0.0,
+        token_ceiling_per_s: f64::INFINITY,
+    }
+}
+
+fn cache_cfg() -> CacheConfig {
+    let g = sim_geometry();
+    CacheConfig {
+        num_slots: 48,
+        slot_capacity: g.max_cache_len,
+        block_tokens: 64,
+        total_blocks: 48 * g.max_cache_len / 64,
+        num_layers: g.num_layers,
+        token_elems: g.num_kv_heads * g.head_dim,
+    }
+}
+
+fn main() {
+    println!("== coordinator bench (scheduling overhead; backend ~free) ==");
+
+    // Steady-state decode scheduling: 48 live streams, no arrivals.
+    {
+        let mut coord = Coordinator::new(
+            CoordinatorConfig { max_prompt_tokens: 1024, ..Default::default() },
+            cache_cfg(),
+        );
+        let mut be = SimBackend::new(sim_geometry(), sim_buckets(), zero_cost());
+        for i in 0..48u64 {
+            coord.submit(InferenceRequest {
+                id: i,
+                adapter: (i % 4) as i32,
+                prompt: vec![1; 64],
+                max_new_tokens: 1400, // long-lived but admissible
+                eos_token: None,
+                arrival_s: 0.0,
+            });
+        }
+        // Drain prefills first.
+        for _ in 0..20 {
+            let _ = coord.step(&mut be).unwrap();
+        }
+        bench_for("steady_decode_step_48_streams", 2.0, || {
+            let _ = coord.step(&mut be).unwrap();
+        });
+    }
+
+    // Unified step assembly with trainers + inference.
+    {
+        let mut coord = Coordinator::new(
+            CoordinatorConfig { max_prompt_tokens: 1024, ..Default::default() },
+            cache_cfg(),
+        );
+        let mut be = SimBackend::new(sim_geometry(), sim_buckets(), zero_cost());
+        let ex = |i: usize| TrainExample { tokens: vec![i as i32; 256], labels: vec![i as i32; 256] };
+        coord.add_trainer(FinetuneJob {
+            id: 1,
+            adapter: 3,
+            train_set: (0..1_000_000).map(ex).take(100000).collect(),
+            eval_set: vec![],
+            epochs: 1,
+            per_device_batch: 2,
+            grad_accum: 4,
+            lr: 1e-4,
+            eval_each_epoch: false,
+        });
+        for i in 0..24u64 {
+            coord.submit(InferenceRequest {
+                id: i,
+                adapter: (i % 4) as i32,
+                prompt: vec![1; 64],
+                max_new_tokens: 1400,
+                eos_token: None,
+                arrival_s: 0.0,
+            });
+        }
+        for _ in 0..20 {
+            let _ = coord.step(&mut be).unwrap();
+        }
+        bench_for("unified_step_assembly_ft+24_streams", 2.0, || {
+            let _ = coord.step(&mut be).unwrap();
+        });
+    }
+
+    // KV arena primitives at GPU scale.
+    {
+        let cfg = cache_cfg();
+        let te = cfg.token_elems;
+        let nl = cfg.num_layers;
+        let mut kv = KvCacheManager::new(cfg);
+        let slot = kv.allocate(1, 1024).unwrap();
+        let one = vec![0.0f32; nl * te];
+        bench("kv_append_one_token", 100, 5000, || {
+            if kv.len(slot) + 1 >= 1024 {
+                kv.release(slot).unwrap();
+                let s2 = kv.allocate(1, 1024).unwrap();
+                assert_eq!(s2, slot);
+            }
+            kv.append(slot, 1, &one, &one).unwrap();
+        });
+        bench("kv_alloc_release", 100, 5000, || {
+            let s = kv.allocate(99, 512).unwrap();
+            kv.release(s).unwrap();
+        });
+    }
+
+    // Admission throughput: submit+admit 1000 requests.
+    {
+        bench("admit_1000_requests", 3, 50, || {
+            let mut coord = Coordinator::new(
+                CoordinatorConfig { max_prompt_tokens: 1024, ..Default::default() },
+                cache_cfg(),
+            );
+            for i in 0..1000u64 {
+                coord.submit(InferenceRequest {
+                    id: i,
+                    adapter: (i % 4) as i32,
+                    prompt: vec![1; 32],
+                    max_new_tokens: 8,
+                    eos_token: None,
+                    arrival_s: 0.0,
+                });
+            }
+            let mut be = SimBackend::new(sim_geometry(), sim_buckets(), zero_cost());
+            let _ = coord.step(&mut be).unwrap();
+        });
+    }
+}

@@ -1,0 +1,190 @@
+//! One bench per paper table/figure: each case runs a reduced-scale version
+//! of the corresponding experiment end-to-end and *asserts the paper's
+//! qualitative shape* (who wins, where the crossover is) in addition to
+//! timing the harness itself. `make figures` runs the full-scale versions.
+//!
+//! Run: cargo bench --bench figures
+
+use loquetier::config::table4_rows;
+use loquetier::harness::{
+    self, flexllm, loquetier, peft, sim_backend, slora, FLEXLLM_SLOWDOWN, GPU_PROMPT_CAP,
+};
+use loquetier::metrics::SloSpec;
+use loquetier::util::bench::bench_for;
+use loquetier::workload::{
+    build_trace, table7_schedule, BurstGptSynth, PoissonArrivals, ScheduleArrivals,
+    ArrivalProcess, SHAREGPT_LENGTHS, TABLE8_SLICES,
+};
+use loquetier::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let cost = harness::gpu_cost_model("artifacts");
+    let lengths = SHAREGPT_LENGTHS.rescaled_to(200.0);
+    let slo = SloSpec::default();
+
+    println!("== figures bench: reduced-scale regeneration + shape assertions ==");
+
+    // ---- Table 1: capability probes (timing the probe harness). ---------
+    bench_for("table1_capability_probe", 1.5, || {
+        let mut sys = flexllm();
+        let job = harness::finetune_job(1, 0, 2, 0, 1, 1, false);
+        assert!(
+            loquetier::baselines::ServingSystem::add_trainer(&mut sys, job).is_err(),
+            "Table 1: FlexLLM must reject fine-tuning"
+        );
+    });
+
+    // ---- Figure 2: 2 RPS row, single LoRA. ------------------------------
+    let row = table4_rows()[1];
+    bench_for("fig2_row_2rps", 3.0, || {
+        let n = 100;
+        let trace = build_trace(
+            1, n, &[0], &mut PoissonArrivals::new(row.rps), &lengths, 60, GPU_PROMPT_CAP, 512,
+        )
+        .requests;
+        let mut loq = loquetier();
+        let mut be = sim_backend(cost.clone());
+        let r_loq =
+            harness::run_system("loq", &mut loq, &mut be, trace.clone(), vec![], &slo, usize::MAX)
+                .unwrap();
+        let mut fx = flexllm();
+        let mut be_f = sim_backend(cost.clone());
+        be_f.slowdown = FLEXLLM_SLOWDOWN;
+        let r_flex =
+            harness::run_system("flex", &mut fx, &mut be_f, trace, vec![], &slo, usize::MAX)
+                .unwrap();
+        assert!(
+            r_loq.slo_attainment >= r_flex.slo_attainment,
+            "fig2: loquetier must dominate flexllm on SLO ({} vs {})",
+            r_loq.slo_attainment,
+            r_flex.slo_attainment
+        );
+    });
+
+    // ---- Figure 3: multi-LoRA fine-tune, loquetier concurrent vs PEFT serial.
+    bench_for("fig3_multi_lora_finetune", 3.0, || {
+        let jobs: Vec<_> =
+            (0..2).map(|j| harness::finetune_job(j as u64, j as i32, 16, 0, 1, 1, false)).collect();
+        let mut loq = loquetier();
+        let mut be = sim_backend(cost.clone());
+        let r_loq = harness::run_system(
+            "loq", &mut loq, &mut be, vec![], jobs.clone(), &slo, usize::MAX,
+        )
+        .unwrap();
+        let mut serial_time = 0.0;
+        for job in &jobs {
+            let mut pf = peft();
+            let mut be_p = sim_backend(cost.clone());
+            let r = harness::run_system(
+                "peft", &mut pf, &mut be_p, vec![], vec![job.clone()], &SloSpec::peft(), usize::MAX,
+            )
+            .unwrap();
+            serial_time += r.duration_s;
+        }
+        assert!(
+            r_loq.duration_s < serial_time,
+            "fig3: concurrent multi-LoRA ({:.1}s) must beat PEFT serial ({serial_time:.1}s)",
+            r_loq.duration_s
+        );
+    });
+
+    // ---- Figure 4: unified at 2 RPS. -------------------------------------
+    bench_for("fig4_unified_2rps", 3.0, || {
+        // 300-token responses: long enough that PEFT's batch-to-completion
+        // scheduling starves later arrivals past the waiting bound.
+        let trace = build_trace(
+            2, 100, &[0], &mut PoissonArrivals::new(2.0), &lengths, 300, GPU_PROMPT_CAP, 512,
+        )
+        .requests;
+        let job = harness::finetune_job(9, 3, 64, 0, 2, 1, false);
+        let mut loq = loquetier();
+        let mut be = sim_backend(cost.clone());
+        let r_loq = harness::run_system(
+            "loq", &mut loq, &mut be, trace.clone(), vec![job.clone()], &slo, usize::MAX,
+        )
+        .unwrap();
+        let mut pf = peft();
+        let mut be_p = sim_backend(cost.clone());
+        let r_peft = harness::run_system(
+            "peft", &mut pf, &mut be_p, trace, vec![job], &SloSpec::peft(), usize::MAX,
+        )
+        .unwrap();
+        assert!(r_loq.ftps > 0.0, "fig4: unified run must make fine-tune progress");
+        assert!(
+            r_loq.slo_attainment > r_peft.slo_attainment,
+            "fig4: loquetier SLO {} must beat peft {}",
+            r_loq.slo_attainment,
+            r_peft.slo_attainment
+        );
+    });
+
+    // ---- Figure 5: mutable capacity (spike yields, tail recovers). -------
+    bench_for("fig5_mutable_schedule", 3.0, || {
+        let mut rng = Rng::seed_from_u64(5);
+        let mut sched = ScheduleArrivals::new(table7_schedule());
+        let total = sched.total_requests();
+        let mut requests = Vec::with_capacity(total / 4);
+        for i in 0..total / 4 {
+            let adapter = sched.current_adapter();
+            let t = sched.next_arrival(&mut rng);
+            requests.push(loquetier::coordinator::InferenceRequest {
+                id: i as u64,
+                adapter,
+                prompt: vec![1; 80],
+                max_new_tokens: 100,
+                eos_token: None,
+                arrival_s: t,
+            });
+        }
+        let job = harness::finetune_job(99, 3, 50_000, 0, 2, 1, false);
+        let mut sys = loquetier();
+        let mut be = sim_backend(cost.clone());
+        let _ = harness::run_system("fig5", &mut sys, &mut be, requests, vec![job], &slo, usize::MAX)
+            .unwrap();
+        let coord = &sys.inner;
+        let ftps_total = coord.finetune_series.total();
+        assert!(ftps_total > 0.0, "fig5: fine-tuning must progress under load");
+    });
+
+    // ---- Figure 6: one BurstGPT slice. ------------------------------------
+    bench_for("fig6_burst_slice_day29_15", 3.0, || {
+        let mut rng = Rng::seed_from_u64(6);
+        let mut synth = BurstGptSynth::new(TABLE8_SLICES[1]);
+        let arrivals = synth.arrivals(&mut rng);
+        let requests: Vec<_> = arrivals
+            .iter()
+            .take(300)
+            .enumerate()
+            .map(|(i, &t)| loquetier::coordinator::InferenceRequest {
+                id: i as u64,
+                adapter: (i % 4) as i32,
+                prompt: vec![1; 80],
+                max_new_tokens: 100,
+                eos_token: None,
+                arrival_s: t,
+            })
+            .collect();
+        let mut sys = loquetier();
+        let mut be = sim_backend(cost.clone());
+        let r = harness::run_system("fig6", &mut sys, &mut be, requests, vec![], &slo, usize::MAX)
+            .unwrap();
+        assert!(
+            r.slo_attainment > 0.8,
+            "fig6: medium-load slice must mostly hold SLO ({})",
+            r.slo_attainment
+        );
+    });
+
+    // ---- Table 2 is I/O-bound and measured by its own example; here we
+    // time just the registry attach path (the loquetier column's delta).
+    println!("(table2 loading measured by examples/table2_loading.rs)");
+
+    // ---- S-LoRA presence check (keeps the baseline compiled + honest).
+    bench_for("slora_startup_transform_modeled", 1.5, || {
+        let s = slora();
+        assert!(s.load_transform_s > 0.0);
+    });
+
+    println!("\nall figure-shape assertions passed");
+    Ok(())
+}

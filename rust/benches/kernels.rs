@@ -1,0 +1,134 @@
+//! Micro-benchmarks over the real XLA backend: per-entry step latency at
+//! every bucket size. These are the §Perf "L3 hot path" numbers and the
+//! source for calibration sanity checks.
+//!
+//! Run: cargo bench --bench kernels
+
+use loquetier::engine::{Backend, DecodeRow, PrefillSeq, TrainSeq, XlaBackend};
+use loquetier::kvcache::{CacheConfig, KvCacheManager};
+use loquetier::model::{LoraAdapter, SlotState, VirtualizedRegistry, WeightStore};
+use loquetier::runtime::Runtime;
+use loquetier::util::bench::bench_for;
+
+fn main() -> anyhow::Result<()> {
+    let dir = "artifacts";
+    if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Runtime::load(dir)?;
+    let manifest = rt.manifest.clone();
+    let store = WeightStore::open(dir, &manifest)?;
+    let mut reg = VirtualizedRegistry::new(&manifest, &store)?;
+    for i in 0..manifest.build.lora.max_adapters {
+        let ad = LoraAdapter::from_store(&store, &manifest, i, format!("a{i}"))?;
+        reg.attach(format!("vm{i}"), ad, i, SlotState::Inference)?;
+    }
+    let mut be = XlaBackend::new(rt, &store)?;
+    be.sync_adapters(&mut reg)?;
+    let g = be.geometry().clone();
+    let te = g.num_kv_heads * g.head_dim;
+    let cache_cfg = CacheConfig {
+        num_slots: 32,
+        slot_capacity: g.max_cache_len,
+        block_tokens: 16,
+        total_blocks: 32 * g.max_cache_len / 16,
+        num_layers: g.num_layers,
+        token_elems: te,
+    };
+
+    println!("== kernels bench (real XLA; budget 2s per case) ==");
+
+    // Prefill buckets (full-bucket occupancy).
+    for (b, s) in manifest.build.buckets.prefill.clone() {
+        bench_for(&format!("prefill_b{b}_s{s}"), 2.0, || {
+            let mut c2 = KvCacheManager::new(cache_cfg);
+            let seqs: Vec<PrefillSeq> = (0..b)
+                .map(|i| PrefillSeq {
+                    tokens: (0..s as i32).collect(),
+                    adapter: (i % 4) as i32,
+                    kv_slot: c2.allocate(i as u64, s).unwrap(),
+                })
+                .collect();
+            let _ = be.prefill(&seqs, &mut c2).unwrap();
+        });
+    }
+
+    // Decode buckets with warm 32-token caches.
+    for d in manifest.build.buckets.decode.clone() {
+        bench_for(&format!("decode_b{d}"), 2.0, || {
+            let mut c2 = KvCacheManager::new(cache_cfg);
+            let rows: Vec<DecodeRow> = (0..d)
+                .map(|i| {
+                    let slot = c2.allocate(i as u64, 40).unwrap();
+                    let kv = vec![0.0f32; g.num_layers * 32 * te];
+                    c2.append(slot, 32, &kv, &kv).unwrap();
+                    DecodeRow { token: 3, adapter: (i % 4) as i32, kv_slot: slot }
+                })
+                .collect();
+            let _ = be.decode(&rows, &mut c2).unwrap();
+        });
+    }
+
+    // Train + adam + unified.
+    for (b, s) in manifest.build.buckets.train.clone() {
+        let seqs: Vec<TrainSeq> = (0..b)
+            .map(|_| TrainSeq {
+                tokens: vec![1; s],
+                labels: vec![1; s],
+                adapter: 0,
+                train: true,
+                loss_scale: 0.25,
+            })
+            .collect();
+        bench_for(&format!("train_b{b}_s{s}"), 2.0, || {
+            let _ = be.train_step(&seqs).unwrap();
+        });
+    }
+    bench_for("adam", 2.0, || {
+        be.optim_step(&[0], 2e-5, 1).unwrap();
+    });
+
+    let ft = TrainSeq {
+        tokens: vec![1; 32],
+        labels: vec![1; 32],
+        adapter: 3,
+        train: true,
+        loss_scale: 0.25,
+    };
+    bench_for("unified_ft1_pf1_dec4", 2.0, || {
+        let mut c2 = KvCacheManager::new(cache_cfg);
+        let pf_slot = c2.allocate(1, 32).unwrap();
+        let pf = PrefillSeq { tokens: (0..16).collect(), adapter: 1, kv_slot: pf_slot };
+        let rows: Vec<DecodeRow> = (0..4)
+            .map(|i| {
+                let slot = c2.allocate(10 + i, 40).unwrap();
+                let kv = vec![0.0f32; g.num_layers * 8 * te];
+                c2.append(slot, 8, &kv, &kv).unwrap();
+                DecodeRow { token: 3, adapter: 0, kv_slot: slot }
+            })
+            .collect();
+        let _ = be.unified(&[ft.clone()], &[pf], &rows, &mut c2).unwrap();
+    });
+
+    // The Algorithm-1 ablation: unified launch vs three separate launches
+    // with identical work (the kernel-invocation-overhead claim).
+    bench_for("separate_ft1_pf1_dec4", 2.0, || {
+        let mut c2 = KvCacheManager::new(cache_cfg);
+        let pf_slot = c2.allocate(1, 32).unwrap();
+        let pf = PrefillSeq { tokens: (0..16).collect(), adapter: 1, kv_slot: pf_slot };
+        let rows: Vec<DecodeRow> = (0..4)
+            .map(|i| {
+                let slot = c2.allocate(10 + i, 40).unwrap();
+                let kv = vec![0.0f32; g.num_layers * 8 * te];
+                c2.append(slot, 8, &kv, &kv).unwrap();
+                DecodeRow { token: 3, adapter: 0, kv_slot: slot }
+            })
+            .collect();
+        let _ = be.train_step(&[ft.clone()]).unwrap();
+        let _ = be.prefill(&[pf], &mut c2).unwrap();
+        let _ = be.decode(&rows, &mut c2).unwrap();
+    });
+
+    Ok(())
+}

@@ -1,0 +1,340 @@
+//! FlexLLM-like baseline: token-level co-serving with the paper's observed
+//! limitations.
+//!
+//! Faithful policy properties (paper Sections 4.1–4.2, Appendix B, Table 2):
+//! * Token-level continuous batching (it IS a co-serving system) — reuses
+//!   the coordinator core.
+//! * **Lazy weight transform**: the fused-format conversion runs when the
+//!   first request arrives, not at startup — early requests blow their SLO
+//!   ("FlexLLM's lazy loading mechanism prevents it from handling some of
+//!   the earliest arriving requests under SLO").
+//! * **Decode-speed ceiling**: its maximum decode throughput is a fraction
+//!   of Loquetier's ("FlexLLM's maximum decoding speed is lower, causing
+//!   its SLO attainment to fall off a cliff"); modeled as a backend
+//!   slowdown factor taken from the paper's reported 3.0x gap.
+//! * **3-module LoRA limit**: only gate/up/down — attaching a full-target
+//!   adapter is unsupported (the x cells of Figures 2–3).
+//! * **1024-token cap** on any request.
+//! * **Multi-LoRA cycling**: with >1 resident adapter it reloads adapters
+//!   as it cycles between them, paying the transform cost per switch — the
+//!   "dead loop" that fails all SLOs in the paper. Modeled mechanistically:
+//!   every adapter switch inside the decode set charges a reload delay.
+//! * **Backward pass errors out** (unfixed upstream): `add_trainer` fails,
+//!   matching the paper's × for fine-tuning and unified tasks.
+
+use anyhow::{anyhow, Result};
+
+use crate::baselines::{Capability, CapabilityRow, ServingSystem};
+use crate::coordinator::{
+    Coordinator, CoordinatorConfig, FinetuneJob, InferenceRequest, StepOutcome,
+};
+use crate::engine::Backend;
+use crate::kvcache::CacheConfig;
+use crate::metrics::RequestTrace;
+
+pub struct FlexLlmLike {
+    inner: Coordinator,
+    /// Charged on the first request (lazy transform).
+    pub lazy_load_s: f64,
+    /// Charged whenever the served adapter set changes (adapter cycling).
+    pub adapter_reload_s: f64,
+    /// Targets this system supports.
+    pub supported_targets: &'static [&'static str],
+    pub max_tokens: usize,
+    lazy_charged: bool,
+    last_adapter: Option<i32>,
+    /// Set when an unsupported configuration was submitted: the run is
+    /// marked failed (the paper's x cells).
+    pub unsupported: Option<String>,
+}
+
+impl FlexLlmLike {
+    pub fn new(
+        mut cfg: CoordinatorConfig,
+        cache_cfg: CacheConfig,
+        lazy_load_s: f64,
+        adapter_reload_s: f64,
+    ) -> Self {
+        cfg.use_unified = false;
+        Self {
+            inner: Coordinator::new(cfg, cache_cfg),
+            lazy_load_s,
+            adapter_reload_s,
+            supported_targets: &["gate", "up", "down"],
+            max_tokens: 1024,
+            lazy_charged: false,
+            last_adapter: None,
+            unsupported: None,
+        }
+    }
+
+    /// Reject adapters targeting modules outside up/gate/down ("Full" mode).
+    pub fn check_adapter_targets(&mut self, targets: &[&str]) -> Result<()> {
+        for t in targets {
+            if !self.supported_targets.contains(t) {
+                let msg = format!("FlexLLM cannot apply LoRA to module '{t}'");
+                self.unsupported = Some(msg.clone());
+                return Err(anyhow!(msg));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl ServingSystem for FlexLlmLike {
+    fn name(&self) -> &'static str {
+        "flexllm"
+    }
+
+    fn submit(&mut self, mut req: InferenceRequest) {
+        // 1024-token cap.
+        if req.prompt.len() + req.max_new_tokens > self.max_tokens {
+            let budget = self.max_tokens.saturating_sub(req.max_new_tokens).max(1);
+            if req.prompt.len() > budget {
+                req.prompt.truncate(budget);
+            }
+        }
+        self.inner.submit(req);
+    }
+
+    fn add_trainer(&mut self, _job: FinetuneJob) -> Result<()> {
+        // Appendix B: OP_GELU/OP_RELU/... backward kernels were never wired
+        // into the computation flow — fine-tuning crashes.
+        Err(anyhow!(
+            "FlexLLM backward pass raises 'unsupported operation' (paper Appendix B)"
+        ))
+    }
+
+    fn step(&mut self, backend: &mut dyn Backend) -> Result<StepOutcome> {
+        if let Some(msg) = &self.unsupported {
+            return Err(anyhow!("unsupported configuration: {msg}"));
+        }
+        if !self.lazy_charged && (self.inner.queue_len() > 0 || self.inner.active_len() > 0) {
+            self.lazy_charged = true;
+            let t = self.inner.now_s + self.lazy_load_s;
+            self.inner.advance_clock(t);
+        }
+        // Adapter cycling: FlexLLM fuses one adapter at a time; serving a
+        // different adapter than the previous step forces a reload.
+        let adapters: Vec<i32> = {
+            let mut v: Vec<i32> = Vec::new();
+            // Peek the adapters of queued work (approximation of its
+            // resident set churn).
+            for _ in 0..0 {}
+            v.extend(self.pending_adapters());
+            v.sort_unstable();
+            v.dedup();
+            v
+        };
+        if let Some(&first) = adapters.first() {
+            if adapters.len() > 1 {
+                // More than one live adapter: it cycles, reloading each step.
+                let t = self.inner.now_s + self.adapter_reload_s;
+                self.inner.advance_clock(t);
+            } else if self.last_adapter != Some(first) {
+                let t = self.inner.now_s + self.adapter_reload_s;
+                self.inner.advance_clock(t);
+                self.last_adapter = Some(first);
+            }
+        }
+        self.inner.step(backend)
+    }
+
+    fn now_s(&self) -> f64 {
+        self.inner.now_s
+    }
+
+    fn advance_clock(&mut self, to_s: f64) {
+        self.inner.advance_clock(to_s);
+    }
+
+    fn quiescent(&self) -> bool {
+        self.inner.quiescent()
+    }
+
+    fn drain_unfinished(&mut self) {
+        self.inner.drain_unfinished();
+    }
+
+    fn traces(&self) -> &[RequestTrace] {
+        &self.inner.traces
+    }
+
+    fn finetune_tokens(&self) -> u64 {
+        0
+    }
+
+    fn eval_tokens(&self) -> u64 {
+        0
+    }
+
+    fn capabilities(&self) -> CapabilityRow {
+        CapabilityRow {
+            system: "flexllm",
+            infer_single: Capability::Yes,
+            infer_multi: Capability::Degraded, // cycles through adapters
+            finetune_single: Capability::Degraded, // crashes unpatched
+            finetune_multi: Capability::No,
+            unified_single: Capability::No,
+            unified_multi: Capability::No,
+        }
+    }
+}
+
+impl FlexLlmLike {
+    fn pending_adapters(&self) -> Vec<i32> {
+        // The coordinator doesn't expose per-request adapters directly;
+        // track through active+queued counts via traces is overkill — we
+        // conservatively use the submitted adapter of the last request via
+        // queue introspection added below.
+        self.inner.live_adapters()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{CostModel, SimBackend};
+    use crate::runtime::{BucketTable, ModelGeometry};
+
+    fn backend(slowdown: f64) -> SimBackend {
+        let mut be = SimBackend::new(
+            ModelGeometry {
+                vocab_size: 128,
+                hidden_size: 32,
+                intermediate_size: 64,
+                num_layers: 2,
+                num_heads: 4,
+                num_kv_heads: 2,
+                head_dim: 8,
+                rope_theta: 1e4,
+                rms_eps: 1e-5,
+                max_cache_len: 96,
+                q_dim: 32,
+                kv_dim: 16,
+            },
+            BucketTable {
+                prefill: vec![(4, 32)],
+                decode: vec![8],
+                train: vec![(2, 32)],
+                unified: vec![],
+            },
+            CostModel::default(),
+        );
+        be.slowdown = slowdown;
+        be
+    }
+
+    fn system() -> FlexLlmLike {
+        FlexLlmLike::new(
+            CoordinatorConfig { max_prompt_tokens: 32, ..Default::default() },
+            CacheConfig {
+                num_slots: 8,
+                slot_capacity: 96,
+                block_tokens: 16,
+                total_blocks: 48,
+                num_layers: 2,
+                token_elems: 16,
+            },
+            38.0,
+            5.0,
+        )
+    }
+
+    fn req(id: u64, adapter: i32, at: f64) -> InferenceRequest {
+        InferenceRequest {
+            id,
+            adapter,
+            prompt: vec![1; 8],
+            max_new_tokens: 2,
+            eos_token: None,
+            arrival_s: at,
+        }
+    }
+
+    #[test]
+    fn lazy_load_delays_first_request() {
+        let mut s = system();
+        let mut be = backend(1.0);
+        s.submit(req(1, 0, 0.0));
+        for _ in 0..50 {
+            if s.quiescent() {
+                break;
+            }
+            s.step(&mut be).unwrap();
+        }
+        assert!(s.traces()[0].waiting_s().unwrap() >= 38.0);
+    }
+
+    #[test]
+    fn multi_adapter_cycling_destroys_latency() {
+        let mut single = system();
+        let mut be = backend(1.0);
+        single.submit(req(1, 0, 0.0));
+        single.submit(req(2, 0, 0.0));
+        for _ in 0..100 {
+            if single.quiescent() {
+                break;
+            }
+            single.step(&mut be).unwrap();
+        }
+        let t_single = single.now_s();
+
+        let mut multi = system();
+        let mut be2 = backend(1.0);
+        multi.submit(req(1, 0, 0.0));
+        multi.submit(req(2, 1, 0.0)); // second adapter -> cycling
+        for _ in 0..100 {
+            if multi.quiescent() {
+                break;
+            }
+            multi.step(&mut be2).unwrap();
+        }
+        assert!(
+            multi.now_s() > t_single + 4.0,
+            "cycling must add reload stalls: {} vs {t_single}",
+            multi.now_s()
+        );
+    }
+
+    #[test]
+    fn trainer_always_rejected() {
+        let mut s = system();
+        let job = FinetuneJob {
+            id: 1,
+            adapter: 0,
+            train_set: vec![],
+            eval_set: vec![],
+            epochs: 1,
+            per_device_batch: 1,
+            grad_accum: 1,
+            lr: 1e-3,
+            eval_each_epoch: false,
+        };
+        assert!(s.add_trainer(job).is_err());
+    }
+
+    #[test]
+    fn full_targets_rejected() {
+        let mut s = system();
+        assert!(s.check_adapter_targets(&["q", "up"]).is_err());
+        assert!(s.unsupported.is_some());
+        let mut s2 = system();
+        assert!(s2.check_adapter_targets(&["up", "gate", "down"]).is_ok());
+    }
+
+    #[test]
+    fn long_prompts_truncated_to_1024() {
+        let mut s = system();
+        s.submit(InferenceRequest {
+            id: 9,
+            adapter: 0,
+            prompt: vec![1; 2000],
+            max_new_tokens: 100,
+            eos_token: None,
+            arrival_s: 0.0,
+        });
+        // Accepted without panic; cap enforced internally.
+        assert_eq!(s.inner.queue_len(), 1);
+    }
+}

@@ -1,0 +1,192 @@
+//! Baseline serving systems, reimplemented as *scheduling policies* over the
+//! same substrate (DESIGN.md §3): Table 1/2 and Figures 2–4 compare exactly
+//! these policies, so rebuilding them on one engine isolates the comparison
+//! the paper makes.
+//!
+//! * [`PeftLike`] — HuggingFace-Transformers+PEFT: static padded batches,
+//!   serial per-adapter passes, no continuous batching, one trainer at a
+//!   time.
+//! * [`SLoraLike`] — S-LoRA: multi-LoRA *inference only*, q/k/v/o targets,
+//!   fused-weight load transform, no co-serving.
+//! * [`FlexLlmLike`] — FlexLLM: token-level co-serving, but 3-module LoRA
+//!   limit, 1024-token context cap, lazy weight transform at first request,
+//!   adapter-cycling on multi-LoRA, and (per the paper's Appendix B) a
+//!   backward pass that errors out.
+
+mod flexllm_like;
+mod peft_like;
+mod slora_like;
+
+pub use flexllm_like::FlexLlmLike;
+pub use peft_like::PeftLike;
+pub use slora_like::SLoraLike;
+
+use anyhow::Result;
+
+use crate::coordinator::{Coordinator, FinetuneJob, InferenceRequest, StepOutcome};
+use crate::engine::Backend;
+use crate::metrics::RequestTrace;
+
+/// Capability matrix entry (Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Capability {
+    Yes,
+    No,
+    /// Supported in principle but practically unusable (Table 1's △).
+    Degraded,
+}
+
+impl std::fmt::Display for Capability {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Capability::Yes => write!(f, "yes"),
+            Capability::No => write!(f, "no"),
+            Capability::Degraded => write!(f, "degraded"),
+        }
+    }
+}
+
+/// Table-1 row: what a system claims to support.
+#[derive(Debug, Clone)]
+pub struct CapabilityRow {
+    pub system: &'static str,
+    pub infer_single: Capability,
+    pub infer_multi: Capability,
+    pub finetune_single: Capability,
+    pub finetune_multi: Capability,
+    pub unified_single: Capability,
+    pub unified_multi: Capability,
+}
+
+/// A serving system under test: the common driver interface for Loquetier
+/// and all baselines.
+pub trait ServingSystem {
+    fn name(&self) -> &'static str;
+
+    fn submit(&mut self, req: InferenceRequest);
+
+    /// Attach a fine-tuning job. Systems that cannot (FlexLLM's broken
+    /// backward, PEFT's one-at-a-time limit) return an error — that *is*
+    /// the Table-1 result.
+    fn add_trainer(&mut self, job: FinetuneJob) -> Result<()>;
+
+    /// Run one scheduling step.
+    fn step(&mut self, backend: &mut dyn Backend) -> Result<StepOutcome>;
+
+    fn now_s(&self) -> f64;
+    fn advance_clock(&mut self, to_s: f64);
+    fn quiescent(&self) -> bool;
+    fn drain_unfinished(&mut self);
+    fn traces(&self) -> &[RequestTrace];
+    fn finetune_tokens(&self) -> u64;
+    fn eval_tokens(&self) -> u64;
+
+    fn capabilities(&self) -> CapabilityRow;
+}
+
+/// Loquetier itself, behind the common interface.
+pub struct LoquetierSystem {
+    pub inner: Coordinator,
+}
+
+impl LoquetierSystem {
+    pub fn new(inner: Coordinator) -> Self {
+        Self { inner }
+    }
+}
+
+impl ServingSystem for LoquetierSystem {
+    fn name(&self) -> &'static str {
+        "loquetier"
+    }
+
+    fn submit(&mut self, req: InferenceRequest) {
+        self.inner.submit(req);
+    }
+
+    fn add_trainer(&mut self, job: FinetuneJob) -> Result<()> {
+        self.inner.add_trainer(job);
+        Ok(())
+    }
+
+    fn step(&mut self, backend: &mut dyn Backend) -> Result<StepOutcome> {
+        self.inner.step(backend)
+    }
+
+    fn now_s(&self) -> f64 {
+        self.inner.now_s
+    }
+
+    fn advance_clock(&mut self, to_s: f64) {
+        self.inner.advance_clock(to_s);
+    }
+
+    fn quiescent(&self) -> bool {
+        self.inner.quiescent()
+    }
+
+    fn drain_unfinished(&mut self) {
+        self.inner.drain_unfinished();
+    }
+
+    fn traces(&self) -> &[RequestTrace] {
+        &self.inner.traces
+    }
+
+    fn finetune_tokens(&self) -> u64 {
+        self.inner.finetune_tokens()
+    }
+
+    fn eval_tokens(&self) -> u64 {
+        self.inner.eval_tokens()
+    }
+
+    fn capabilities(&self) -> CapabilityRow {
+        CapabilityRow {
+            system: "loquetier",
+            infer_single: Capability::Yes,
+            infer_multi: Capability::Yes,
+            finetune_single: Capability::Yes,
+            finetune_multi: Capability::Yes,
+            unified_single: Capability::Yes,
+            unified_multi: Capability::Yes,
+        }
+    }
+}
+
+/// Drive a system over a trace until quiescent (shared by all harnesses).
+pub fn drive_to_completion(
+    system: &mut dyn ServingSystem,
+    backend: &mut dyn Backend,
+    mut arrivals: Vec<InferenceRequest>,
+    max_steps: usize,
+) -> Result<f64> {
+    arrivals.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+    let mut next = 0usize;
+    for _ in 0..max_steps {
+        // Feed everything that has arrived by "now".
+        while next < arrivals.len() && arrivals[next].arrival_s <= system.now_s() {
+            system.submit(arrivals[next].clone());
+            next += 1;
+        }
+        if system.quiescent() && next >= arrivals.len() {
+            break;
+        }
+        let out = system.step(backend)?;
+        if out.idle {
+            if next < arrivals.len() {
+                let t = arrivals[next].arrival_s;
+                system.advance_clock(t);
+            } else if system.quiescent() {
+                break;
+            } else {
+                // Live work but nothing schedulable: nudge the clock.
+                let t = system.now_s() + 0.001;
+                system.advance_clock(t);
+            }
+        }
+    }
+    // Anything still queued failed.
+    system.drain_unfinished();
+    Ok(system.now_s())
+}

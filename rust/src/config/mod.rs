@@ -1,0 +1,229 @@
+//! Run configuration: typed mirrors of the paper's Appendix D tables,
+//! loadable from JSON files (via the in-tree codec) or built from presets.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+use crate::coordinator::CoordinatorConfig;
+use crate::kvcache::CacheConfig;
+use crate::metrics::SloSpec;
+use crate::runtime::Manifest;
+
+/// Appendix D.2 / D.4 row: one RPS point of an inference sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct RateRow {
+    pub rps: f64,
+    pub requests: usize,
+    pub max_new_tokens: usize,
+}
+
+/// Table 4 (inference-only tasks).
+pub fn table4_rows() -> Vec<RateRow> {
+    vec![
+        RateRow { rps: 1.0, requests: 800, max_new_tokens: 400 },
+        RateRow { rps: 2.0, requests: 1600, max_new_tokens: 400 },
+        RateRow { rps: 3.0, requests: 2400, max_new_tokens: 400 },
+        RateRow { rps: 4.0, requests: 3200, max_new_tokens: 300 },
+        RateRow { rps: 5.0, requests: 4000, max_new_tokens: 200 },
+    ]
+}
+
+/// Table 6 (unified tasks).
+pub fn table6_rows() -> Vec<RateRow> {
+    vec![
+        RateRow { rps: 1.0, requests: 600, max_new_tokens: 400 },
+        RateRow { rps: 2.0, requests: 1200, max_new_tokens: 400 },
+        RateRow { rps: 3.0, requests: 1800, max_new_tokens: 400 },
+        RateRow { rps: 4.0, requests: 2400, max_new_tokens: 300 },
+        RateRow { rps: 5.0, requests: 3000, max_new_tokens: 200 },
+    ]
+}
+
+/// Table 5 (fine-tuning-only): LoRA config r=8 α=16, ga=4, lr=2e-5,
+/// batch 2 (single) / 1 (multi), 4 epochs.
+#[derive(Debug, Clone, Copy)]
+pub struct FinetunePreset {
+    pub per_device_batch: usize,
+    pub grad_accum: usize,
+    pub epochs: usize,
+    pub lr: f32,
+}
+
+pub fn table5_single() -> FinetunePreset {
+    FinetunePreset { per_device_batch: 2, grad_accum: 4, epochs: 4, lr: 2e-5 }
+}
+
+pub fn table5_multi() -> FinetunePreset {
+    FinetunePreset { per_device_batch: 1, grad_accum: 4, epochs: 4, lr: 2e-5 }
+}
+
+/// Serving deployment config (JSON-loadable for the `loquetier serve` CLI).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub artifacts_dir: String,
+    pub listen_addr: String,
+    /// Virtual models to attach at startup: (name, adapter index in the
+    /// weight store).
+    pub virtual_models: Vec<(String, usize)>,
+    pub slo: SloSpec,
+    pub kv_slots: usize,
+    pub kv_total_blocks: usize,
+    pub kv_block_tokens: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: "artifacts".into(),
+            listen_addr: "127.0.0.1:7181".into(),
+            virtual_models: (0..4).map(|i| (format!("vm{i}"), i)).collect(),
+            slo: SloSpec::default(),
+            kv_slots: 16,
+            kv_total_blocks: 256,
+            kv_block_tokens: 16,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        let v = json::parse(&text).context("parsing serve config")?;
+        let d = ServeConfig::default();
+        let slo = crate::metrics::SloSpec {
+            max_waiting_s: v
+                .get("slo_max_waiting_s")
+                .and_then(|x| x.as_f64().ok())
+                .unwrap_or(d.slo.max_waiting_s),
+            mean_decode_latency_s: v
+                .get("slo_mean_decode_latency_s")
+                .and_then(|x| x.as_f64().ok())
+                .unwrap_or(d.slo.mean_decode_latency_s),
+            max_decode_latency_s: v
+                .get("slo_max_decode_latency_s")
+                .and_then(|x| x.as_f64().ok())
+                .unwrap_or(d.slo.max_decode_latency_s),
+        };
+        let virtual_models = match v.get("virtual_models") {
+            Some(arr) => arr
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    let pair = p.as_arr()?;
+                    Ok((pair[0].as_str()?.to_string(), pair[1].as_usize()?))
+                })
+                .collect::<Result<Vec<_>>>()?,
+            None => d.virtual_models.clone(),
+        };
+        Ok(Self {
+            artifacts_dir: v
+                .get("artifacts_dir")
+                .and_then(|x| x.as_str().ok())
+                .unwrap_or(&d.artifacts_dir)
+                .to_string(),
+            listen_addr: v
+                .get("listen_addr")
+                .and_then(|x| x.as_str().ok())
+                .unwrap_or(&d.listen_addr)
+                .to_string(),
+            virtual_models,
+            slo,
+            kv_slots: v.get("kv_slots").and_then(|x| x.as_usize().ok()).unwrap_or(d.kv_slots),
+            kv_total_blocks: v
+                .get("kv_total_blocks")
+                .and_then(|x| x.as_usize().ok())
+                .unwrap_or(d.kv_total_blocks),
+            kv_block_tokens: v
+                .get("kv_block_tokens")
+                .and_then(|x| x.as_usize().ok())
+                .unwrap_or(d.kv_block_tokens),
+        })
+    }
+
+    /// JSON form (round-trips through `load`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("artifacts_dir", Json::Str(self.artifacts_dir.clone())),
+            ("listen_addr", Json::Str(self.listen_addr.clone())),
+            (
+                "virtual_models",
+                Json::Arr(
+                    self.virtual_models
+                        .iter()
+                        .map(|(n, i)| {
+                            Json::Arr(vec![Json::Str(n.clone()), Json::Num(*i as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("slo_max_waiting_s", Json::Num(self.slo.max_waiting_s)),
+            ("slo_mean_decode_latency_s", Json::Num(self.slo.mean_decode_latency_s)),
+            ("slo_max_decode_latency_s", Json::Num(self.slo.max_decode_latency_s)),
+            ("kv_slots", Json::Num(self.kv_slots as f64)),
+            ("kv_total_blocks", Json::Num(self.kv_total_blocks as f64)),
+            ("kv_block_tokens", Json::Num(self.kv_block_tokens as f64)),
+        ])
+    }
+
+    /// Cache geometry for a manifest under this config.
+    pub fn cache_config(&self, manifest: &Manifest) -> CacheConfig {
+        let g = &manifest.build.model;
+        CacheConfig {
+            num_slots: self.kv_slots,
+            slot_capacity: g.max_cache_len,
+            block_tokens: self.kv_block_tokens,
+            total_blocks: self.kv_total_blocks,
+            num_layers: g.num_layers,
+            token_elems: g.num_kv_heads * g.head_dim,
+        }
+    }
+
+    pub fn coordinator_config(&self, manifest: &Manifest) -> CoordinatorConfig {
+        let max_prompt = manifest
+            .build
+            .buckets
+            .prefill
+            .iter()
+            .map(|&(_, s)| s)
+            .max()
+            .unwrap_or(64);
+        CoordinatorConfig {
+            slo: self.slo,
+            max_prompt_tokens: max_prompt,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn appendix_tables_match_paper() {
+        let t4 = table4_rows();
+        assert_eq!(t4.len(), 5);
+        assert_eq!(t4[2].requests, 2400);
+        assert_eq!(t4[4].max_new_tokens, 200);
+        let t6 = table6_rows();
+        assert_eq!(t6[0].requests, 600);
+        assert_eq!(table5_single().grad_accum, 4);
+        assert_eq!(table5_multi().per_device_batch, 1);
+    }
+
+    #[test]
+    fn serve_config_roundtrip() {
+        let c = ServeConfig::default();
+        let text = c.to_json().to_string();
+        let tmp = std::env::temp_dir().join("loq_serve_cfg_test.json");
+        std::fs::write(&tmp, text).unwrap();
+        let back = ServeConfig::load(&tmp).unwrap();
+        assert_eq!(back.listen_addr, c.listen_addr);
+        assert_eq!(back.virtual_models.len(), 4);
+        assert!((back.slo.mean_decode_latency_s - c.slo.mean_decode_latency_s).abs() < 1e-12);
+    }
+}

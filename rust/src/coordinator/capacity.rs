@@ -1,0 +1,144 @@
+//! Mutable capacity allocation (Figures 5–6): how many fine-tune sequences
+//! ride in each unified step, as a function of inference pressure.
+//!
+//! Policy: additive-increase / multiplicative-decrease on the fine-tune
+//! token budget, driven by two pressure signals the coordinator already has
+//! for free —
+//!
+//! * queue pressure: admitted-but-waiting inference work, and
+//! * latency pressure: EMA of per-token decode latency vs the SLO target.
+//!
+//! Under a load spike the budget collapses within a few steps (fine-tuning
+//! "makes concessions for the inference task"); when the spike passes it
+//! climbs back one slot at a time ("adjusts back the efficiency by itself").
+
+#[derive(Debug, Clone)]
+pub struct CapacityConfig {
+    /// Max fine-tune sequences per unified step (the bucket's ft_batch).
+    pub max_ft_slots: usize,
+    /// Target fraction of the SLO mean-decode-latency bound to regulate to.
+    pub latency_target_frac: f64,
+    /// SLO mean decode latency bound (seconds).
+    pub slo_mean_decode_s: f64,
+    /// EMA smoothing factor per step.
+    pub ema_alpha: f64,
+    /// Steps of calm required before growing the budget.
+    pub grow_patience: usize,
+}
+
+impl Default for CapacityConfig {
+    fn default() -> Self {
+        Self {
+            max_ft_slots: 2,
+            latency_target_frac: 0.6,
+            slo_mean_decode_s: 0.2,
+            ema_alpha: 0.25,
+            grow_patience: 3,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct CapacityAllocator {
+    cfg: CapacityConfig,
+    latency_ema_s: f64,
+    ft_slots: usize,
+    calm_steps: usize,
+}
+
+impl CapacityAllocator {
+    pub fn new(cfg: CapacityConfig) -> Self {
+        let ft = cfg.max_ft_slots;
+        Self { cfg, latency_ema_s: 0.0, ft_slots: ft, calm_steps: 0 }
+    }
+
+    /// Current fine-tune sequence budget.
+    pub fn ft_budget(&self) -> usize {
+        self.ft_slots
+    }
+
+    pub fn latency_ema_s(&self) -> f64 {
+        self.latency_ema_s
+    }
+
+    /// Feed one step's observations; returns the budget for the next step.
+    ///
+    /// `queued` = inference requests waiting for admission or prefill;
+    /// `step_latency_s` = the step's per-token decode latency contribution.
+    pub fn observe(&mut self, queued: usize, step_latency_s: f64) -> usize {
+        let a = self.cfg.ema_alpha;
+        self.latency_ema_s = (1.0 - a) * self.latency_ema_s + a * step_latency_s;
+        let target = self.cfg.slo_mean_decode_s * self.cfg.latency_target_frac;
+
+        let pressured = queued > 0 || self.latency_ema_s > target;
+        if pressured {
+            self.calm_steps = 0;
+            // Multiplicative decrease. A hard spike (2x target, or a deep
+            // queue) cuts fine-tuning to zero; mild sustained pressure
+            // floors at one slot — the paper's unified runs keep a reduced
+            // but non-zero FTPS unless the GPU is truly saturated.
+            if self.latency_ema_s > 2.0 * target || queued > 2 * self.cfg.max_ft_slots {
+                self.ft_slots = 0;
+            } else {
+                self.ft_slots = (self.ft_slots / 2).max(1);
+            }
+        } else {
+            self.calm_steps += 1;
+            if self.calm_steps >= self.cfg.grow_patience && self.ft_slots < self.cfg.max_ft_slots {
+                self.ft_slots += 1;
+                self.calm_steps = 0;
+            }
+        }
+        self.ft_slots
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn alloc() -> CapacityAllocator {
+        CapacityAllocator::new(CapacityConfig { max_ft_slots: 4, ..Default::default() })
+    }
+
+    #[test]
+    fn spike_collapses_budget() {
+        let mut a = alloc();
+        assert_eq!(a.ft_budget(), 4);
+        for _ in 0..5 {
+            a.observe(10, 0.5); // heavy queue + latency blowout
+        }
+        assert_eq!(a.ft_budget(), 0);
+    }
+
+    #[test]
+    fn calm_recovers_budget_gradually() {
+        let mut a = alloc();
+        for _ in 0..5 {
+            a.observe(10, 0.5);
+        }
+        assert_eq!(a.ft_budget(), 0);
+        let mut budgets = Vec::new();
+        for _ in 0..40 {
+            budgets.push(a.observe(0, 0.01));
+        }
+        assert_eq!(*budgets.last().unwrap(), 4);
+        // Growth is gradual: strictly one step at a time.
+        for w in budgets.windows(2) {
+            assert!(w[1] <= w[0] + 1);
+        }
+    }
+
+    #[test]
+    fn mild_pressure_halves_not_zeroes() {
+        let mut a = alloc();
+        let target = 0.2 * 0.6;
+        // Latency mildly above target, no queue: the EMA needs a few steps
+        // to cross the threshold, then the budget halves (never to zero).
+        for _ in 0..10 {
+            a.observe(0, target * 1.3);
+        }
+        assert!(a.ft_budget() > 0, "mild pressure must not zero the budget");
+        assert!(a.ft_budget() < 4, "mild pressure must shrink the budget");
+    }
+}

@@ -1,0 +1,678 @@
+//! The unified coordinator — Loquetier's L3 contribution.
+//!
+//! A deterministic state machine over an abstract [`Backend`]: each call to
+//! [`Coordinator::step`] assembles one unified launch (Algorithm 1's slot
+//! layout: fine-tune ∥ prefill ∥ decode), executes it, routes the results
+//! (tokens to requests, losses to trainers, KV to the cache), and advances
+//! the run clock by the step's cost. Drivers differ only in how they feed
+//! arrivals and which backend they pass:
+//!
+//! * real serving: tokio loop + `XlaBackend` (wall clock),
+//! * figure harnesses: event loop + `SimBackend` (virtual clock).
+
+pub mod capacity;
+pub mod request;
+pub mod trainer;
+
+pub use capacity::{CapacityAllocator, CapacityConfig};
+pub use request::{ActiveRequest, FinetuneJob, InferenceRequest, Phase, TrainExample};
+pub use trainer::{TrainerPhase, TrainerState};
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::engine::{argmax, Backend, DecodeRow, PrefillSeq, StepCost, TrainSeq};
+use crate::kvcache::{CacheConfig, KvCacheManager};
+use crate::metrics::{RequestTrace, SloSpec, ThroughputSeries};
+
+/// Scheduler configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub slo: SloSpec,
+    /// Give up on queued requests older than this (bounds sim length; the
+    /// request is recorded as failed).
+    pub drop_after_s: f64,
+    /// Reserve KV for prompt + max_new at admission (true = no preemption
+    /// needed; matches the executables' contiguous slots).
+    pub reserve_worst_case: bool,
+    /// Use the unified entry whenever fine-tune work exists (false = always
+    /// run classes in separate launches; an ablation knob).
+    pub use_unified: bool,
+    pub capacity: CapacityConfig,
+    /// Cap on prefill sequences per step when not using the unified entry.
+    pub max_prefill_batch: usize,
+    /// Cap on prompt tokens per prefill sequence (bucket-limited).
+    pub max_prompt_tokens: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            slo: SloSpec::default(),
+            drop_after_s: 60.0,
+            reserve_worst_case: true,
+            use_unified: true,
+            capacity: CapacityConfig::default(),
+            max_prefill_batch: 4,
+            max_prompt_tokens: 64,
+        }
+    }
+}
+
+/// What one `step` did — the driver's visibility into progress.
+#[derive(Debug, Default, Clone)]
+pub struct StepOutcome {
+    pub cost: StepCost,
+    pub decoded_tokens: usize,
+    pub prefilled_seqs: usize,
+    pub ft_seqs: usize,
+    pub eval_seqs: usize,
+    pub completed_requests: Vec<u64>,
+    pub optimizer_steps: usize,
+    /// Nothing to do (driver should advance the clock to the next arrival).
+    pub idle: bool,
+}
+
+/// The unified serving+training coordinator.
+pub struct Coordinator {
+    pub cfg: CoordinatorConfig,
+    pub kv: KvCacheManager,
+    queue: VecDeque<InferenceRequest>,
+    active: Vec<ActiveRequest>,
+    trainers: Vec<TrainerState>,
+    capacity: CapacityAllocator,
+    /// Run clock (virtual seconds; equals wall time under XlaBackend if the
+    /// driver ties them).
+    pub now_s: f64,
+    /// Completed request traces (terminal states only).
+    pub traces: Vec<RequestTrace>,
+    pub decode_series: ThroughputSeries,
+    pub finetune_series: ThroughputSeries,
+    pub eval_series: ThroughputSeries,
+    /// Round-robin cursor over decoding requests.
+    decode_cursor: usize,
+    finetune_tokens: u64,
+    eval_tokens: u64,
+}
+
+impl Coordinator {
+    pub fn new(cfg: CoordinatorConfig, cache_cfg: CacheConfig) -> Self {
+        let capacity = CapacityAllocator::new(cfg.capacity.clone());
+        Self {
+            cfg,
+            kv: KvCacheManager::new(cache_cfg),
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            trainers: Vec::new(),
+            capacity,
+            now_s: 0.0,
+            traces: Vec::new(),
+            decode_series: ThroughputSeries::default(),
+            finetune_series: ThroughputSeries::default(),
+            eval_series: ThroughputSeries::default(),
+            decode_cursor: 0,
+            finetune_tokens: 0,
+            eval_tokens: 0,
+        }
+    }
+
+    pub fn submit(&mut self, req: InferenceRequest) {
+        self.queue.push_back(req);
+    }
+
+    pub fn add_trainer(&mut self, job: FinetuneJob) {
+        self.trainers.push(TrainerState::new(job));
+    }
+
+    pub fn trainers(&self) -> &[TrainerState] {
+        &self.trainers
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn finetune_tokens(&self) -> u64 {
+        self.finetune_tokens
+    }
+
+    pub fn eval_tokens(&self) -> u64 {
+        self.eval_tokens
+    }
+
+    /// Distinct adapters across queued + active inference work (baseline
+    /// policies use this to model adapter-resident-set churn).
+    pub fn live_adapters(&self) -> Vec<i32> {
+        let mut v: Vec<i32> = self
+            .queue
+            .iter()
+            .map(|r| r.adapter)
+            .chain(self.active.iter().map(|a| a.req.adapter))
+            .filter(|&a| a >= 0)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// All work drained?
+    pub fn quiescent(&self) -> bool {
+        self.queue.is_empty() && self.active.is_empty() && self.trainers.iter().all(|t| t.done())
+    }
+
+    /// Any inference work (queued or live)?
+    pub fn has_inference_work(&self) -> bool {
+        !self.queue.is_empty() || !self.active.is_empty()
+    }
+
+    fn drop_stale(&mut self) {
+        let now = self.now_s;
+        let drop_after = self.cfg.drop_after_s;
+        let (keep, dropped): (VecDeque<_>, VecDeque<_>) = std::mem::take(&mut self.queue)
+            .into_iter()
+            .partition(|r| now - r.arrival_s <= drop_after);
+        for r in dropped {
+            self.traces.push(RequestTrace {
+                arrival_s: r.arrival_s,
+                input_tokens: r.prompt.len(),
+                failed: true,
+                ..Default::default()
+            });
+        }
+        self.queue = keep;
+    }
+
+    fn admit(&mut self) {
+        loop {
+            let Some(front) = self.queue.front() else { break };
+            let need = if self.cfg.reserve_worst_case {
+                front.prompt.len().min(self.cfg.max_prompt_tokens) + front.max_new_tokens
+            } else {
+                front.prompt.len().min(self.cfg.max_prompt_tokens)
+            };
+            if !self.kv.can_admit(need) {
+                break;
+            }
+            let mut req = self.queue.pop_front().unwrap();
+            if req.prompt.len() > self.cfg.max_prompt_tokens {
+                // Bucket-limited: keep the prompt tail (recency matters for
+                // generation) — the paper's FlexLLM-like 1024-token cap is
+                // the same mechanism at its own bound.
+                let keep = self.cfg.max_prompt_tokens;
+                req.prompt = req.prompt[req.prompt.len() - keep..].to_vec();
+            }
+            let slot = self
+                .kv
+                .allocate(req.id, need)
+                .expect("can_admit checked allocation");
+            self.active.push(ActiveRequest::new(req, slot));
+        }
+    }
+
+    /// Assemble and run one step. `backend` supplies capacities and costs.
+    pub fn step(&mut self, backend: &mut dyn Backend) -> Result<StepOutcome> {
+        let mut out = StepOutcome::default();
+        self.drop_stale();
+        self.admit();
+
+        // --- Select work ---------------------------------------------------
+        let (ft_cap, pf_cap, dec_cap) = backend
+            .unified_capacity()
+            .unwrap_or((0, self.cfg.max_prefill_batch, backend.max_decode_batch()));
+
+        // Decode rows: round-robin over decoding requests.
+        let decoding: Vec<usize> = (0..self.active.len())
+            .filter(|&i| self.active[i].phase == Phase::Decoding)
+            .collect();
+        let dec_take = decoding.len().min(dec_cap);
+        let mut dec_idx: Vec<usize> = Vec::with_capacity(dec_take);
+        if !decoding.is_empty() {
+            for k in 0..dec_take {
+                dec_idx.push(decoding[(self.decode_cursor + k) % decoding.len()]);
+            }
+            self.decode_cursor = (self.decode_cursor + dec_take) % decoding.len().max(1);
+        }
+        let dec_rows: Vec<DecodeRow> = dec_idx
+            .iter()
+            .map(|&i| {
+                let a = &self.active[i];
+                DecodeRow {
+                    token: a.next_input_token(),
+                    adapter: a.req.adapter,
+                    kv_slot: a.kv_slot,
+                }
+            })
+            .collect();
+
+        // Prefill sequences: admitted requests, oldest first.
+        let mut pf_idx: Vec<usize> = (0..self.active.len())
+            .filter(|&i| self.active[i].phase == Phase::Admitted)
+            .collect();
+        pf_idx.truncate(pf_cap);
+        let pf_seqs: Vec<PrefillSeq> = pf_idx
+            .iter()
+            .map(|&i| {
+                let a = &self.active[i];
+                PrefillSeq {
+                    tokens: a.req.prompt.clone(),
+                    adapter: a.req.adapter,
+                    kv_slot: a.kv_slot,
+                }
+            })
+            .collect();
+
+        // Fine-tune sequences: capacity-gated, round-robin across trainers.
+        let ft_budget = if self.cfg.use_unified {
+            self.capacity.ft_budget().min(ft_cap)
+        } else {
+            self.capacity.ft_budget()
+        };
+        let mut ft_seqs: Vec<TrainSeq> = Vec::new();
+        let mut ft_owners: Vec<(usize, usize)> = Vec::new(); // (trainer, n_seqs)
+        if ft_budget > 0 {
+            let mut remaining = ft_budget;
+            for (ti, t) in self.trainers.iter().enumerate() {
+                if t.done() || remaining == 0 {
+                    continue;
+                }
+                let batch = t.peek_batch(remaining);
+                if batch.is_empty() {
+                    continue;
+                }
+                remaining -= batch.len();
+                ft_owners.push((ti, batch.len()));
+                ft_seqs.extend(batch);
+            }
+        }
+
+        if dec_rows.is_empty() && pf_seqs.is_empty() && ft_seqs.is_empty() {
+            // Nothing schedulable. Still feed the capacity controller: an
+            // idle engine is the strongest "no pressure" signal there is —
+            // without this, a budget that collapsed to zero under a spike
+            // could never recover once inference drained (livelock).
+            self.capacity.observe(self.queue.len(), 0.0);
+            out.idle = true;
+            return Ok(out);
+        }
+
+        // --- Execute --------------------------------------------------------
+        let step_start = self.now_s;
+        let mut cost = StepCost::default();
+        let (ft_losses, pf_logits, dec_logits);
+        if self.cfg.use_unified && !ft_seqs.is_empty() {
+            let (u, c) = backend.unified(&ft_seqs, &pf_seqs, &dec_rows, &mut self.kv)?;
+            cost.add(c);
+            ft_losses = u.ft_losses;
+            pf_logits = u.pf_last_logits;
+            dec_logits = u.dec_logits;
+        } else {
+            let mut fl = Vec::new();
+            if !ft_seqs.is_empty() {
+                let (l, c) = backend.train_step(&ft_seqs)?;
+                cost.add(c);
+                fl = l;
+            }
+            let mut pl = Vec::new();
+            if !pf_seqs.is_empty() {
+                let (l, c) = backend.prefill(&pf_seqs, &mut self.kv)?;
+                cost.add(c);
+                pl = l;
+            }
+            let mut dl = Vec::new();
+            if !dec_rows.is_empty() {
+                let (l, c) = backend.decode(&dec_rows, &mut self.kv)?;
+                cost.add(c);
+                dl = l;
+            }
+            ft_losses = fl;
+            pf_logits = pl;
+            dec_logits = dl;
+        }
+        self.now_s += cost.virt.max(cost.wall);
+        let step_end = self.now_s;
+        let step_dur = step_end - step_start;
+
+        // --- Route results ---------------------------------------------------
+        // Fine-tune losses -> trainers; optimizer when accumulation is due.
+        let mut off = 0;
+        for &(ti, n) in &ft_owners {
+            let losses = &ft_losses[off..off + n];
+            let seqs = &ft_seqs[off..off + n];
+            let tokens: usize = seqs.iter().map(|s| s.tokens.len()).sum();
+            let evaluating = self.trainers[ti].phase == TrainerPhase::Evaluating;
+            if evaluating {
+                self.eval_tokens += tokens as u64;
+                self.eval_series.record(step_end, tokens as f64);
+                out.eval_seqs += n;
+            } else {
+                self.finetune_tokens += tokens as u64;
+                self.finetune_series.record(step_end, tokens as f64);
+                out.ft_seqs += n;
+            }
+            let due = self.trainers[ti].advance(n, losses, tokens);
+            if due {
+                let slot = self.trainers[ti].job.adapter.max(0) as usize;
+                let lr = self.trainers[ti].job.lr;
+                let step_no = self.trainers[ti].optim_steps + 1;
+                let c = backend.optim_step(&[slot], lr, step_no)?;
+                self.now_s += c.virt.max(c.wall);
+                cost.add(c);
+                self.trainers[ti].optimizer_applied();
+                out.optimizer_steps += 1;
+            }
+            off += n;
+        }
+
+        // Prefill results: first token per sequence.
+        for (k, &i) in pf_idx.iter().enumerate() {
+            let a = &mut self.active[i];
+            a.trace.prefill_start_s = Some(step_start);
+            let tok = argmax(&pf_logits[k]);
+            a.generated.push(tok);
+            a.trace.first_token_s = Some(step_end);
+            a.trace.output_tokens = a.generated.len();
+            a.last_token_s = step_end;
+            a.phase = Phase::Decoding;
+            out.prefilled_seqs += 1;
+            self.decode_series.record(step_end, 1.0);
+        }
+
+        // Decode results.
+        for (k, &i) in dec_idx.iter().enumerate() {
+            let a = &mut self.active[i];
+            let tok = argmax(&dec_logits[k]);
+            a.generated.push(tok);
+            a.trace.output_tokens = a.generated.len();
+            a.trace.decode_latencies_s.push(step_end - a.last_token_s);
+            a.last_token_s = step_end;
+            out.decoded_tokens += 1;
+            self.decode_series.record(step_end, 1.0);
+        }
+        let _ = step_dur;
+
+        // Completions.
+        let mut j = 0;
+        while j < self.active.len() {
+            let done = self.active[j].phase == Phase::Decoding && self.active[j].done_generating();
+            let overflow = self.kv.len(self.active[j].kv_slot) >= self.kv.config().slot_capacity;
+            if done || (self.active[j].phase == Phase::Decoding && overflow) {
+                let mut a = self.active.swap_remove(j);
+                a.trace.finish_s = Some(self.now_s);
+                a.phase = Phase::Finished;
+                self.kv.release(a.kv_slot)?;
+                out.completed_requests.push(a.req.id);
+                self.traces.push(a.trace);
+            } else {
+                j += 1;
+            }
+        }
+
+        // Capacity controller feedback.
+        let per_token_latency = if out.decoded_tokens > 0 {
+            step_dur
+        } else {
+            0.0
+        };
+        self.capacity
+            .observe(self.queue.len() + self.pending_prefill_count(), per_token_latency);
+
+        out.cost = cost;
+        Ok(out)
+    }
+
+    fn pending_prefill_count(&self) -> usize {
+        self.active.iter().filter(|a| a.phase == Phase::Admitted).count()
+    }
+
+    /// Advance the clock directly (drivers use this to jump to the next
+    /// arrival when `step` reports idle).
+    pub fn advance_clock(&mut self, to_s: f64) {
+        if to_s > self.now_s {
+            self.now_s = to_s;
+        }
+    }
+
+    /// Harvest traces of still-unfinished requests as failures (end of run).
+    pub fn drain_unfinished(&mut self) {
+        for r in std::mem::take(&mut self.queue) {
+            self.traces.push(RequestTrace {
+                arrival_s: r.arrival_s,
+                input_tokens: r.prompt.len(),
+                failed: true,
+                ..Default::default()
+            });
+        }
+        for a in std::mem::take(&mut self.active) {
+            let mut t = a.trace;
+            t.failed = true;
+            self.traces.push(t);
+            let _ = self.kv.release(a.kv_slot);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{CostModel, SimBackend};
+    use crate::runtime::{BucketTable, ModelGeometry, UnifiedShape};
+
+    fn geometry() -> ModelGeometry {
+        ModelGeometry {
+            vocab_size: 128,
+            hidden_size: 32,
+            intermediate_size: 64,
+            num_layers: 2,
+            num_heads: 4,
+            num_kv_heads: 2,
+            head_dim: 8,
+            rope_theta: 1e4,
+            rms_eps: 1e-5,
+            max_cache_len: 96,
+            q_dim: 32,
+            kv_dim: 16,
+        }
+    }
+
+    fn buckets() -> BucketTable {
+        BucketTable {
+            prefill: vec![(4, 32)],
+            decode: vec![8],
+            train: vec![(2, 32)],
+            unified: vec![UnifiedShape {
+                ft_batch: 2,
+                ft_seq: 32,
+                pf_batch: 2,
+                pf_seq: 32,
+                dec_batch: 8,
+            }],
+        }
+    }
+
+    fn coordinator() -> Coordinator {
+        Coordinator::new(
+            CoordinatorConfig { max_prompt_tokens: 32, ..Default::default() },
+            CacheConfig {
+                num_slots: 8,
+                slot_capacity: 96,
+                block_tokens: 16,
+                total_blocks: 48,
+                num_layers: 2,
+                token_elems: 16,
+            },
+        )
+    }
+
+    fn backend() -> SimBackend {
+        SimBackend::new(geometry(), buckets(), CostModel::default())
+    }
+
+    fn req(id: u64, adapter: i32, prompt_len: usize, max_new: usize, at: f64) -> InferenceRequest {
+        InferenceRequest {
+            id,
+            adapter,
+            prompt: (0..prompt_len as i32).collect(),
+            max_new_tokens: max_new,
+            eos_token: None,
+            arrival_s: at,
+        }
+    }
+
+    fn drive(c: &mut Coordinator, be: &mut SimBackend, max_steps: usize) {
+        for _ in 0..max_steps {
+            if c.quiescent() {
+                break;
+            }
+            let o = c.step(be).unwrap();
+            if o.idle {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn serves_one_request_to_completion() {
+        let mut c = coordinator();
+        let mut be = backend();
+        c.submit(req(1, 0, 8, 5, 0.0));
+        drive(&mut c, &mut be, 100);
+        assert!(c.quiescent());
+        assert_eq!(c.traces.len(), 1);
+        let t = &c.traces[0];
+        assert_eq!(t.output_tokens, 5);
+        assert!(t.finish_s.is_some());
+        assert!(!t.failed);
+        assert_eq!(t.decode_latencies_s.len(), 4, "first token comes from prefill");
+    }
+
+    #[test]
+    fn batches_multiple_adapters_in_one_run() {
+        let mut c = coordinator();
+        let mut be = backend();
+        for i in 0..6 {
+            c.submit(req(i, (i % 4) as i32, 8, 4, 0.0));
+        }
+        drive(&mut c, &mut be, 200);
+        assert_eq!(c.traces.len(), 6);
+        assert!(c.traces.iter().all(|t| !t.failed));
+    }
+
+    #[test]
+    fn kv_slots_are_recycled() {
+        let mut c = coordinator();
+        let mut be = backend();
+        for i in 0..20 {
+            c.submit(req(i, 0, 8, 3, 0.0));
+        }
+        drive(&mut c, &mut be, 500);
+        assert_eq!(c.traces.len(), 20);
+        assert_eq!(c.kv.stats().slots_used, 0);
+        assert_eq!(c.kv.stats().blocks_used, 0);
+    }
+
+    #[test]
+    fn finetune_only_run_completes_epochs() {
+        let mut c = coordinator();
+        let mut be = backend();
+        let ex = |i: usize| TrainExample { tokens: vec![i as i32; 16], labels: vec![i as i32; 16] };
+        c.add_trainer(FinetuneJob {
+            id: 1,
+            adapter: 0,
+            train_set: (0..8).map(ex).collect(),
+            eval_set: (0..2).map(ex).collect(),
+            epochs: 2,
+            per_device_batch: 2,
+            grad_accum: 2,
+            lr: 1e-3,
+            eval_each_epoch: true,
+        });
+        drive(&mut c, &mut be, 500);
+        assert!(c.quiescent());
+        assert_eq!(c.finetune_tokens(), 2 * 8 * 16);
+        assert_eq!(c.eval_tokens(), 2 * 2 * 16);
+        assert!(c.trainers()[0].optim_steps >= 4);
+    }
+
+    #[test]
+    fn unified_runs_both_classes_together() {
+        let mut c = coordinator();
+        let mut be = backend();
+        let ex = |i: usize| TrainExample { tokens: vec![i as i32; 16], labels: vec![i as i32; 16] };
+        c.add_trainer(FinetuneJob {
+            id: 1,
+            adapter: 3,
+            train_set: (0..64).map(ex).collect(),
+            eval_set: vec![],
+            epochs: 1,
+            per_device_batch: 2,
+            grad_accum: 4,
+            lr: 1e-3,
+            eval_each_epoch: false,
+        });
+        for i in 0..4 {
+            c.submit(req(i, 0, 8, 6, 0.0));
+        }
+        // One step must make progress on BOTH classes (the unified launch).
+        let o = c.step(&mut be).unwrap();
+        assert!(o.ft_seqs > 0);
+        assert!(o.prefilled_seqs > 0);
+        drive(&mut c, &mut be, 1000);
+        assert!(c.traces.iter().all(|t| !t.failed));
+    }
+
+    #[test]
+    fn stale_queue_entries_are_dropped_as_failures() {
+        let mut c = coordinator();
+        c.cfg.drop_after_s = 5.0;
+        let mut be = backend();
+        c.submit(req(1, 0, 8, 4, 0.0));
+        c.advance_clock(10.0);
+        let o = c.step(&mut be).unwrap();
+        assert!(o.idle);
+        assert_eq!(c.traces.len(), 1);
+        assert!(c.traces[0].failed);
+    }
+
+    #[test]
+    fn capacity_starves_finetune_under_load() {
+        let mut c = coordinator();
+        let mut be = backend();
+        // Saturating inference load.
+        for i in 0..32 {
+            c.submit(req(i, 0, 16, 32, 0.0));
+        }
+        let ex = |i: usize| TrainExample { tokens: vec![i as i32; 16], labels: vec![i as i32; 16] };
+        c.add_trainer(FinetuneJob {
+            id: 1,
+            adapter: 3,
+            train_set: (0..512).map(ex).collect(),
+            eval_set: vec![],
+            epochs: 1,
+            per_device_batch: 2,
+            grad_accum: 4,
+            lr: 1e-3,
+            eval_each_epoch: false,
+        });
+        let mut ft_early = 0;
+        for _ in 0..30 {
+            let o = c.step(&mut be).unwrap();
+            ft_early += o.ft_seqs;
+        }
+        // After the controller observes sustained pressure, fine-tuning
+        // should be (near) fully yielded.
+        let mut ft_late = 0;
+        for _ in 0..30 {
+            let o = c.step(&mut be).unwrap();
+            ft_late += o.ft_seqs;
+        }
+        assert!(
+            ft_late <= ft_early,
+            "fine-tune work must not grow under sustained load ({ft_early} -> {ft_late})"
+        );
+    }
+}

@@ -1,0 +1,99 @@
+//! Request and job types shared by the coordinator and the baselines.
+
+
+use crate::metrics::RequestTrace;
+
+/// An inference request as submitted by a client / workload generator.
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub id: u64,
+    /// Bank slot of the virtual model to use; -1 = base model.
+    pub adapter: i32,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// Stop early on this token, if produced.
+    pub eos_token: Option<i32>,
+    /// Arrival time on the run's clock (virtual or wall seconds).
+    pub arrival_s: f64,
+}
+
+/// Request lifecycle phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Queued,
+    /// Admitted: KV reserved, waiting for a prefill slot.
+    Admitted,
+    Decoding,
+    Finished,
+    Failed,
+}
+
+/// A live request inside the coordinator.
+#[derive(Debug)]
+pub struct ActiveRequest {
+    pub req: InferenceRequest,
+    pub phase: Phase,
+    pub kv_slot: usize,
+    pub generated: Vec<i32>,
+    pub trace: RequestTrace,
+    /// Clock time the previous token (or prefill) completed — decode
+    /// latency is measured from here.
+    pub last_token_s: f64,
+}
+
+impl ActiveRequest {
+    pub fn new(req: InferenceRequest, kv_slot: usize) -> Self {
+        let trace = RequestTrace {
+            arrival_s: req.arrival_s,
+            input_tokens: req.prompt.len(),
+            ..Default::default()
+        };
+        Self { req, phase: Phase::Admitted, kv_slot, generated: Vec::new(), trace, last_token_s: 0.0 }
+    }
+
+    pub fn next_input_token(&self) -> i32 {
+        *self
+            .generated
+            .last()
+            .unwrap_or_else(|| self.req.prompt.last().unwrap_or(&0))
+    }
+
+    pub fn done_generating(&self) -> bool {
+        if self.generated.len() >= self.req.max_new_tokens {
+            return true;
+        }
+        if let (Some(eos), Some(&last)) = (self.req.eos_token, self.generated.last()) {
+            return last == eos;
+        }
+        false
+    }
+}
+
+/// One fine-tuning example (already tokenized).
+#[derive(Debug, Clone)]
+pub struct TrainExample {
+    pub tokens: Vec<i32>,
+    pub labels: Vec<i32>,
+}
+
+/// A fine-tuning job: dataset + hyperparameters (Appendix D.3 defaults).
+#[derive(Debug, Clone)]
+pub struct FinetuneJob {
+    pub id: u64,
+    /// Bank slot whose adapter this job trains.
+    pub adapter: i32,
+    pub train_set: Vec<TrainExample>,
+    pub eval_set: Vec<TrainExample>,
+    pub epochs: usize,
+    pub per_device_batch: usize,
+    pub grad_accum: usize,
+    pub lr: f32,
+    /// Evaluate at the end of every epoch (the paper's eval_strategy=epoch).
+    pub eval_each_epoch: bool,
+}
+
+impl FinetuneJob {
+    pub fn total_train_tokens(&self) -> usize {
+        self.train_set.iter().map(|e| e.tokens.len()).sum::<usize>() * self.epochs
+    }
+}

@@ -1,0 +1,219 @@
+//! Trainer lifecycle: the interruptible, co-scheduled fine-tuning process
+//! (the paper's extended Transformers Trainer, Section 3.3).
+//!
+//! Each trainer owns one adapter slot and walks its dataset in micro-batches
+//! that the coordinator is free to interleave (or pause entirely) between
+//! inference steps — fine-tuning is a background tenant, never a blocking
+//! job. Gradient accumulation and epoch-end evaluation follow the paper's
+//! Appendix D.3 configuration.
+
+use crate::coordinator::request::{FinetuneJob, TrainExample};
+use crate::engine::TrainSeq;
+
+/// Where the trainer is in its schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrainerPhase {
+    Training,
+    /// Epoch finished, evaluation pass pending/ongoing.
+    Evaluating,
+    Done,
+}
+
+#[derive(Debug)]
+pub struct TrainerState {
+    pub job: FinetuneJob,
+    pub phase: TrainerPhase,
+    pub epoch: usize,
+    cursor: usize,
+    eval_cursor: usize,
+    /// Micro-steps accumulated since the last optimizer application.
+    pub accum: usize,
+    /// Optimizer steps applied so far (Adam bias-correction counter).
+    pub optim_steps: i32,
+    pub train_tokens: u64,
+    pub eval_tokens: u64,
+    pub losses: Vec<f32>,
+    pub eval_losses: Vec<f32>,
+}
+
+impl TrainerState {
+    pub fn new(job: FinetuneJob) -> Self {
+        Self {
+            job,
+            phase: TrainerPhase::Training,
+            epoch: 0,
+            cursor: 0,
+            eval_cursor: 0,
+            accum: 0,
+            optim_steps: 0,
+            train_tokens: 0,
+            eval_tokens: 0,
+            losses: Vec::new(),
+            eval_losses: Vec::new(),
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.phase == TrainerPhase::Done
+    }
+
+    /// Next up-to-`budget` sequences this trainer wants to run, without
+    /// consuming them (the coordinator confirms with `advance`).
+    pub fn peek_batch(&self, budget: usize) -> Vec<TrainSeq> {
+        let take = budget.min(self.job.per_device_batch);
+        if take == 0 {
+            return vec![];
+        }
+        let (set, cursor, train): (&Vec<TrainExample>, usize, bool) = match self.phase {
+            TrainerPhase::Training => (&self.job.train_set, self.cursor, true),
+            TrainerPhase::Evaluating => (&self.job.eval_set, self.eval_cursor, false),
+            TrainerPhase::Done => return vec![],
+        };
+        let scale = 1.0 / self.job.grad_accum as f32;
+        (0..take)
+            .filter_map(|i| set.get(cursor + i))
+            .map(|ex| TrainSeq {
+                tokens: ex.tokens.clone(),
+                labels: ex.labels.clone(),
+                adapter: self.job.adapter,
+                train,
+                loss_scale: if train { scale } else { 1.0 },
+            })
+            .collect()
+    }
+
+    /// Record that `n` sequences from `peek_batch` ran with `losses`.
+    /// Returns true if an optimizer step is now due.
+    pub fn advance(&mut self, n: usize, losses: &[f32], tokens: usize) -> bool {
+        match self.phase {
+            TrainerPhase::Training => {
+                self.cursor += n;
+                self.train_tokens += tokens as u64;
+                self.losses.extend_from_slice(losses);
+                self.accum += 1;
+                let end_of_epoch = self.cursor >= self.job.train_set.len();
+                let due = self.accum >= self.job.grad_accum || end_of_epoch;
+                if end_of_epoch {
+                    self.cursor = 0;
+                    if self.job.eval_each_epoch && !self.job.eval_set.is_empty() {
+                        self.phase = TrainerPhase::Evaluating;
+                        self.eval_cursor = 0;
+                    } else {
+                        self.finish_epoch();
+                    }
+                }
+                due
+            }
+            TrainerPhase::Evaluating => {
+                self.eval_cursor += n;
+                self.eval_tokens += tokens as u64;
+                self.eval_losses.extend_from_slice(losses);
+                if self.eval_cursor >= self.job.eval_set.len() {
+                    self.finish_epoch();
+                }
+                false
+            }
+            TrainerPhase::Done => false,
+        }
+    }
+
+    fn finish_epoch(&mut self) {
+        self.epoch += 1;
+        if self.epoch >= self.job.epochs {
+            self.phase = TrainerPhase::Done;
+        } else {
+            self.phase = TrainerPhase::Training;
+        }
+    }
+
+    /// Called after the optimizer ran for this trainer's slot.
+    pub fn optimizer_applied(&mut self) {
+        self.accum = 0;
+        self.optim_steps += 1;
+    }
+
+    pub fn mean_recent_loss(&self, window: usize) -> Option<f32> {
+        if self.losses.is_empty() {
+            return None;
+        }
+        let n = self.losses.len();
+        let start = n.saturating_sub(window);
+        Some(self.losses[start..].iter().sum::<f32>() / (n - start) as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(n_train: usize, n_eval: usize, epochs: usize, ga: usize) -> FinetuneJob {
+        let ex = |i: usize| TrainExample { tokens: vec![i as i32; 8], labels: vec![i as i32; 8] };
+        FinetuneJob {
+            id: 1,
+            adapter: 0,
+            train_set: (0..n_train).map(ex).collect(),
+            eval_set: (0..n_eval).map(ex).collect(),
+            epochs,
+            per_device_batch: 2,
+            grad_accum: ga,
+            lr: 1e-3,
+            eval_each_epoch: true,
+        }
+    }
+
+    #[test]
+    fn walks_epochs_with_eval() {
+        let mut t = TrainerState::new(job(4, 2, 2, 2));
+        let mut optim_count = 0;
+        let mut guard = 0;
+        while !t.done() {
+            let batch = t.peek_batch(2);
+            assert!(!batch.is_empty());
+            let tokens: usize = batch.iter().map(|b| b.tokens.len()).sum();
+            let losses = vec![1.0; batch.len()];
+            if t.advance(batch.len(), &losses, tokens) {
+                t.optimizer_applied();
+                optim_count += 1;
+            }
+            guard += 1;
+            assert!(guard < 100, "trainer did not terminate");
+        }
+        // 2 epochs * (4 train / batch 2 = 2 micro steps, ga=2 -> 1 optim) = 2
+        assert_eq!(optim_count, 2);
+        assert_eq!(t.epoch, 2);
+        assert_eq!(t.train_tokens, 2 * 4 * 8);
+        assert_eq!(t.eval_tokens, 2 * 2 * 8);
+    }
+
+    #[test]
+    fn eval_sequences_are_not_train() {
+        let mut t = TrainerState::new(job(2, 2, 1, 1));
+        let b = t.peek_batch(2);
+        assert!(b.iter().all(|s| s.train));
+        let tokens: usize = b.iter().map(|s| s.tokens.len()).sum();
+        assert!(t.advance(b.len(), &[1.0, 1.0], tokens));
+        t.optimizer_applied();
+        assert_eq!(t.phase, TrainerPhase::Evaluating);
+        let e = t.peek_batch(2);
+        assert!(e.iter().all(|s| !s.train));
+    }
+
+    #[test]
+    fn epoch_boundary_forces_optim_step() {
+        // 3 examples, batch 2, ga 4: epoch ends mid-accumulation; the
+        // partial accumulation must still be applied.
+        let mut t = TrainerState::new(job(3, 0, 1, 4));
+        let b1 = t.peek_batch(2);
+        assert_eq!(b1.len(), 2);
+        assert!(!t.advance(2, &[1.0, 1.0], 16));
+        let b2 = t.peek_batch(2);
+        assert_eq!(b2.len(), 1, "tail of the epoch");
+        assert!(t.advance(1, &[1.0], 8), "epoch end flushes accumulation");
+    }
+
+    #[test]
+    fn budget_zero_yields_nothing() {
+        let t = TrainerState::new(job(4, 0, 1, 1));
+        assert!(t.peek_batch(0).is_empty());
+    }
+}

@@ -1,0 +1,192 @@
+//! Calibrated step-cost model for the simulation backend.
+//!
+//! Coefficients are fit against measured `XlaBackend` timings by
+//! `examples/calibrate.rs` (written to `artifacts/calibration.json`), then
+//! *rescaled* to a GPU-like token budget so the figure sweeps run at the
+//! paper's request rates. Rescaling is uniform — it changes the absolute
+//! axis, not who wins or where crossovers fall (DESIGN.md §3).
+
+use std::path::Path;
+
+use crate::util::json::{self, Json};
+
+
+/// Latency model: every launch pays a base cost plus per-token terms.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Fixed per-launch overhead (seconds): dispatch + marshalling.
+    pub launch_base_s: f64,
+    /// Per prefill token (forward only).
+    pub prefill_token_s: f64,
+    /// Per decode row (forward of 1 token).
+    pub decode_row_s: f64,
+    /// Per cached token attended during decode (memory-bound term).
+    pub decode_cached_token_s: f64,
+    /// Per fine-tune token (forward + backward ≈ 3× forward).
+    pub train_token_s: f64,
+    /// A training launch below this many (padded) tokens still costs this
+    /// much — small batches underutilize the device. This is what makes
+    /// serial batch-1 fine-tuning (PEFT multi-LoRA) slower than Loquetier's
+    /// co-batched shared backward (Figure 3's multi panel).
+    pub train_floor_tokens: f64,
+    /// Multiplier on the unified path's fine-tune term: the paper's
+    /// "independent computational calls from the LoRA linears during
+    /// backward propagation" make Loquetier's fine-tuning slightly slower
+    /// than PEFT's fused autograd (Figure 3, ~5–10%).
+    pub lora_backward_overhead: f64,
+    /// Optimizer application (whole bank).
+    pub adam_s: f64,
+    /// Per-token extra when the row carries a LoRA delta (SMLM work).
+    pub lora_token_s: f64,
+    /// Throughput ceiling: max tokens/sec the device sustains regardless of
+    /// batching (the "GPU memory access bottleneck" the paper hits at 3 RPS).
+    pub token_ceiling_per_s: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        // Defaults approximate an A6000-class budget for the scaled model:
+        // a 48-way decode step lands near 33 ms (~1400 DTPS at saturation),
+        // so demand (RPS x max_new, Table 4) crosses capacity between 3 and
+        // 4 RPS — the knee Figure 2 reports ("at 3 RPS the decoding speed
+        // no longer increases").
+        Self {
+            launch_base_s: 4.0e-3,
+            prefill_token_s: 5.0e-5,
+            decode_row_s: 2.5e-3,
+            decode_cached_token_s: 4.0e-7,
+            train_token_s: 3.0e-4,
+            train_floor_tokens: 256.0,
+            lora_backward_overhead: 1.08,
+            adam_s: 2.0e-3,
+            lora_token_s: 2.0e-6,
+            token_ceiling_per_s: 6000.0,
+        }
+    }
+}
+
+impl CostModel {
+    pub fn load(path: impl AsRef<Path>) -> Option<Self> {
+        let text = std::fs::read_to_string(path).ok()?;
+        let v = json::parse(&text).ok()?;
+        let f = |k: &str| v.get(k).and_then(|x| x.as_f64().ok());
+        Some(Self {
+            launch_base_s: f("launch_base_s")?,
+            prefill_token_s: f("prefill_token_s")?,
+            decode_row_s: f("decode_row_s")?,
+            decode_cached_token_s: f("decode_cached_token_s")?,
+            train_token_s: f("train_token_s")?,
+            train_floor_tokens: f("train_floor_tokens").unwrap_or(256.0),
+            lora_backward_overhead: f("lora_backward_overhead").unwrap_or(1.08),
+            adam_s: f("adam_s")?,
+            lora_token_s: f("lora_token_s")?,
+            token_ceiling_per_s: f("token_ceiling_per_s")?,
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let doc = Json::obj(vec![
+            ("launch_base_s", Json::Num(self.launch_base_s)),
+            ("prefill_token_s", Json::Num(self.prefill_token_s)),
+            ("decode_row_s", Json::Num(self.decode_row_s)),
+            ("decode_cached_token_s", Json::Num(self.decode_cached_token_s)),
+            ("train_token_s", Json::Num(self.train_token_s)),
+            ("train_floor_tokens", Json::Num(self.train_floor_tokens)),
+            ("lora_backward_overhead", Json::Num(self.lora_backward_overhead)),
+            ("adam_s", Json::Num(self.adam_s)),
+            ("lora_token_s", Json::Num(self.lora_token_s)),
+            ("token_ceiling_per_s", Json::Num(self.token_ceiling_per_s)),
+        ]);
+        std::fs::write(path, doc.to_string())?;
+        Ok(())
+    }
+
+    /// Apply the token-throughput ceiling to a launch processing `tokens`
+    /// tokens whose un-capped latency is `raw`.
+    fn cap(&self, tokens: f64, raw: f64) -> f64 {
+        let floor = tokens / self.token_ceiling_per_s;
+        raw.max(floor)
+    }
+
+    pub fn prefill_cost(&self, tokens: usize, lora_tokens: usize) -> f64 {
+        let raw = self.launch_base_s
+            + tokens as f64 * self.prefill_token_s
+            + lora_tokens as f64 * self.lora_token_s;
+        self.cap(tokens as f64, raw)
+    }
+
+    pub fn decode_cost(&self, rows: usize, cached_tokens: usize, lora_rows: usize) -> f64 {
+        // Decode is memory-bound: rows in a batch largely overlap, so the
+        // per-row term is amortized by sqrt-batching (empirically close to
+        // what the CPU measurements show, and to GPU batching curves).
+        let eff_rows = (rows as f64).sqrt();
+        let raw = self.launch_base_s
+            + eff_rows * self.decode_row_s
+            + cached_tokens as f64 * self.decode_cached_token_s
+            + lora_rows as f64 * self.lora_token_s;
+        self.cap(rows as f64, raw)
+    }
+
+    /// `tokens` must already reflect the physical batch layout (padded
+    /// rows are charged — the sim backend pads to the in-batch max, like
+    /// both Transformers' data collator and the AOT train buckets).
+    pub fn train_cost(&self, tokens: usize) -> f64 {
+        let eff = (tokens as f64).max(self.train_floor_tokens);
+        let raw = self.launch_base_s + eff * self.train_token_s;
+        self.cap(tokens as f64 * 3.0, raw)
+    }
+
+    pub fn adam_cost(&self) -> f64 {
+        self.launch_base_s + self.adam_s
+    }
+
+    /// Algorithm 1's headline win: one launch for everything — one base
+    /// cost, summed per-class work.
+    pub fn unified_cost(
+        &self,
+        ft_tokens: usize,
+        pf_tokens: usize,
+        dec_rows: usize,
+        dec_cached: usize,
+    ) -> f64 {
+        let ft_eff = if ft_tokens > 0 {
+            (ft_tokens as f64).max(self.train_floor_tokens)
+        } else {
+            0.0
+        };
+        let raw = self.launch_base_s
+            + ft_eff * self.train_token_s * self.lora_backward_overhead
+            + pf_tokens as f64 * self.prefill_token_s
+            + (dec_rows as f64).sqrt() * self.decode_row_s
+            + dec_cached as f64 * self.decode_cached_token_s;
+        self.cap((ft_tokens * 3 + pf_tokens + dec_rows) as f64, raw)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unified_beats_separate_launches() {
+        let c = CostModel::default();
+        let separate = c.train_cost(128) + c.prefill_cost(64, 64) + c.decode_cost(8, 800, 8);
+        let unified = c.unified_cost(128, 64, 8, 800);
+        assert!(unified < separate, "unified {unified} !< separate {separate}");
+    }
+
+    #[test]
+    fn ceiling_binds_large_batches() {
+        let c = CostModel::default();
+        let t = c.prefill_cost(100_000, 0);
+        assert!(t >= 100_000.0 / c.token_ceiling_per_s);
+    }
+
+    #[test]
+    fn decode_batching_amortizes() {
+        let c = CostModel::default();
+        let one = c.decode_cost(1, 100, 1);
+        let eight = c.decode_cost(8, 800, 8);
+        assert!(eight < 8.0 * one, "batched decode must beat 8 serial decodes");
+    }
+}

@@ -1,0 +1,158 @@
+//! Execution backends.
+//!
+//! The coordinator is a deterministic state machine over an abstract
+//! [`Backend`]:
+//!
+//! * [`XlaBackend`] executes the AOT artifacts on the PJRT CPU client —
+//!   the real numerics path used by tests, examples and calibration.
+//! * [`SimBackend`] replays a calibrated cost model — used by the figure
+//!   harnesses, which sweep thousands of requests × hundreds of decode
+//!   steps (DESIGN.md §3 records this substitution; EXPERIMENTS.md
+//!   §Calibration records the fit).
+//!
+//! Both backends implement the same four operations the unified computation
+//! flow needs: `prefill`, `decode`, `train_step`, `optim_step`, plus the
+//! flagship `unified` step (Algorithm 1: fine-tune ∥ prefill ∥ decode in one
+//! launch).
+
+mod cost;
+mod sim;
+mod xla_backend;
+
+pub use cost::CostModel;
+pub use sim::SimBackend;
+pub use xla_backend::XlaBackend;
+
+use anyhow::Result;
+
+use crate::kvcache::KvCacheManager;
+use crate::model::VirtualizedRegistry;
+use crate::runtime::ModelGeometry;
+
+/// One prefill sequence (tokens already truncated to the bucket).
+#[derive(Debug, Clone)]
+pub struct PrefillSeq {
+    pub tokens: Vec<i32>,
+    /// Bank slot (-1 = base model only).
+    pub adapter: i32,
+    /// KV slot the resulting cache rows are appended to.
+    pub kv_slot: usize,
+}
+
+/// One decode row.
+#[derive(Debug, Clone)]
+pub struct DecodeRow {
+    pub token: i32,
+    pub adapter: i32,
+    pub kv_slot: usize,
+}
+
+/// One fine-tuning / evaluation sequence.
+#[derive(Debug, Clone)]
+pub struct TrainSeq {
+    pub tokens: Vec<i32>,
+    pub labels: Vec<i32>,
+    pub adapter: i32,
+    /// false = evaluation: loss only, no gradient (Algorithm 2).
+    pub train: bool,
+    /// 1/gradient_accumulation_steps for this job.
+    pub loss_scale: f32,
+}
+
+/// Cost of one backend operation, in both clocks.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepCost {
+    /// Real host time spent (secs) — what the XLA backend measures.
+    pub wall: f64,
+    /// Virtual duration (secs) — what the sim clock advances by. For the
+    /// XLA backend this equals `wall`.
+    pub virt: f64,
+}
+
+impl StepCost {
+    pub fn add(&mut self, other: StepCost) {
+        self.wall += other.wall;
+        self.virt += other.virt;
+    }
+}
+
+/// Results of the unified step, split per class.
+#[derive(Debug, Default)]
+pub struct UnifiedOut {
+    pub ft_losses: Vec<f32>,
+    pub pf_last_logits: Vec<Vec<f32>>,
+    pub dec_logits: Vec<Vec<f32>>,
+}
+
+/// The execution backend contract.
+pub trait Backend {
+    fn geometry(&self) -> &ModelGeometry;
+
+    /// Largest decode batch a single launch supports.
+    fn max_decode_batch(&self) -> usize;
+
+    /// Unified-step capacities (ft, pf, dec), if a unified entry exists.
+    fn unified_capacity(&self) -> Option<(usize, usize, usize)>;
+
+    /// Prefill a batch; appends KV into each sequence's slot and returns the
+    /// last-token logits per sequence.
+    fn prefill(
+        &mut self,
+        seqs: &[PrefillSeq],
+        cache: &mut KvCacheManager,
+    ) -> Result<(Vec<Vec<f32>>, StepCost)>;
+
+    /// Decode one token per row; appends the new KV rows.
+    fn decode(
+        &mut self,
+        rows: &[DecodeRow],
+        cache: &mut KvCacheManager,
+    ) -> Result<(Vec<Vec<f32>>, StepCost)>;
+
+    /// Fine-tune/eval forward+backward; accumulates gradients internally.
+    /// Returns per-sequence losses.
+    fn train_step(&mut self, seqs: &[TrainSeq]) -> Result<(Vec<f32>, StepCost)>;
+
+    /// Apply the optimizer to the accumulated gradients for `slots`, then
+    /// clear the accumulator.
+    fn optim_step(&mut self, slots: &[usize], lr: f32, step: i32) -> Result<StepCost>;
+
+    /// Algorithm 1: one launch over [fine-tune ∥ prefill ∥ decode].
+    fn unified(
+        &mut self,
+        ft: &[TrainSeq],
+        pf: &[PrefillSeq],
+        dec: &[DecodeRow],
+        cache: &mut KvCacheManager,
+    ) -> Result<(UnifiedOut, StepCost)>;
+
+    /// Push adapter-bank changes from the registry into the backend.
+    fn sync_adapters(&mut self, reg: &mut VirtualizedRegistry) -> Result<()>;
+
+    /// Pull trained parameters back into the registry's host mirror.
+    fn checkpoint_adapters(&mut self, reg: &mut VirtualizedRegistry) -> Result<()>;
+}
+
+/// Greedy sampling helper shared by coordinators.
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_max() {
+        assert_eq!(argmax(&[0.1, 3.0, -1.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+}

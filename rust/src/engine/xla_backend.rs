@@ -1,0 +1,583 @@
+//! The real execution backend: AOT artifacts on the PJRT CPU client.
+//!
+//! Persistent-state layout (all device-resident between calls):
+//!
+//! * `base.*`   — base weights, pinned once at construction (shared by every
+//!   virtual model — the Virtualized-Module memory contract).
+//! * `lora.*`   — the stacked adapter bank; re-pinned by `sync_adapters`
+//!   on hot-swap, or replaced by optimizer outputs with zero host traffic.
+//! * `grad.*`   — gradient accumulators (Algorithm 2's shared backward
+//!   accumulates across jobs *and* micro-steps on-device).
+//! * `m.*`/`v.*` — Adam moments, also chained device-to-device.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::engine::{
+    Backend, CostModel, DecodeRow, PrefillSeq, StepCost, TrainSeq, UnifiedOut,
+};
+use crate::kvcache::KvCacheManager;
+use crate::model::{VirtualizedRegistry, WeightStore};
+use crate::runtime::{Arg, DType, HostTensor, ModelGeometry, Runtime, TensorSpec};
+
+pub struct XlaBackend {
+    rt: Runtime,
+    geometry: ModelGeometry,
+    grad_names: Vec<String>,
+    /// Scratch for the decode-cache gather (avoids re-allocating ~13 MB per
+    /// decode step).
+    k_scratch: Vec<f32>,
+    v_scratch: Vec<f32>,
+    /// Step-cost accounting shared with the sim backend's model (the virt
+    /// clock of the XLA backend is just its wall clock).
+    pub last_entry: String,
+}
+
+impl XlaBackend {
+    /// Build over a loaded runtime: pins base weights and zeroes the
+    /// optimizer state.
+    pub fn new(mut rt: Runtime, store: &WeightStore) -> Result<Self> {
+        let geometry = rt.manifest.build.model.clone();
+        // Pin base weights once.
+        for name in rt.manifest.base_param_names() {
+            let t = store.tensor(&name)?;
+            rt.pin(&name, &t)?;
+        }
+        // Pin the empty bank so inference works before any attach.
+        for name in rt.manifest.lora_param_names() {
+            let t = store.tensor(&name)?;
+            rt.pin(&name, &t)?;
+        }
+        let grad_names = rt.manifest.grad_param_names();
+        let mut be = Self {
+            rt,
+            geometry,
+            grad_names,
+            k_scratch: Vec::new(),
+            v_scratch: Vec::new(),
+            last_entry: String::new(),
+        };
+        be.zero_opt_state()?;
+        Ok(be)
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    pub fn runtime_mut(&mut self) -> &mut Runtime {
+        &mut self.rt
+    }
+
+    fn lora_spec(&self, name: &str) -> Result<TensorSpec> {
+        let rec = self
+            .rt
+            .manifest
+            .weight(name)
+            .ok_or_else(|| anyhow!("no weight record for {name}"))?;
+        Ok(TensorSpec { name: name.into(), shape: rec.shape.clone(), dtype: DType::F32 })
+    }
+
+    fn zero_opt_state(&mut self) -> Result<()> {
+        for name in self.grad_names.clone() {
+            let spec = self.lora_spec(&name)?;
+            let zeros = HostTensor::zeros(&spec);
+            self.rt.pin(&format!("grad.{name}"), &zeros)?;
+            self.rt.pin(&format!("m.{name}"), &zeros)?;
+            self.rt.pin(&format!("v.{name}"), &zeros)?;
+        }
+        Ok(())
+    }
+
+    fn zero_grads(&mut self) -> Result<()> {
+        for name in self.grad_names.clone() {
+            let spec = self.lora_spec(&name)?;
+            let zeros = HostTensor::zeros(&spec);
+            self.rt.pin(&format!("grad.{name}"), &zeros)?;
+        }
+        Ok(())
+    }
+
+    /// Resolve an entry's argument list: weights/optimizer state from pinned
+    /// buffers, everything else from `extra` (keyed by input name).
+    fn run_entry(
+        &mut self,
+        entry: &str,
+        extra: &[(&str, HostTensor)],
+        keep_on_device: &[&str],
+    ) -> Result<(crate::runtime::ExecOutputs, StepCost)> {
+        let spec = self.rt.entry(entry)?.spec.clone();
+        let mut args: Vec<Arg<'_>> = Vec::with_capacity(spec.inputs.len());
+        // Pinned-key strings must outlive `args`.
+        let mut pinned_keys: Vec<Option<String>> = Vec::with_capacity(spec.inputs.len());
+        for input in &spec.inputs {
+            let n = input.name.as_str();
+            let key = if n.starts_with("base.") || n.starts_with("lora.") {
+                Some(n.to_string())
+            } else if let Some(rest) = n.strip_prefix("grad_acc.") {
+                Some(format!("grad.{rest}"))
+            } else if let Some(rest) = n.strip_prefix("grads.") {
+                Some(format!("grad.{rest}"))
+            } else if let Some(rest) = n.strip_prefix("m.") {
+                Some(format!("m.{rest}"))
+            } else if let Some(rest) = n.strip_prefix("v.") {
+                Some(format!("v.{rest}"))
+            } else {
+                None
+            };
+            pinned_keys.push(key);
+        }
+        for (i, input) in spec.inputs.iter().enumerate() {
+            if let Some(key) = &pinned_keys[i] {
+                args.push(Arg::Pinned(key.as_str()));
+            } else {
+                let t = extra
+                    .iter()
+                    .find(|(k, _)| *k == input.name)
+                    .map(|(_, t)| t)
+                    .ok_or_else(|| anyhow!("{entry}: missing input {}", input.name))?;
+                args.push(Arg::Host(t));
+            }
+        }
+        let t0 = Instant::now();
+        let (outs, _timing) = self.rt.execute(entry, &args, keep_on_device)?;
+        let wall = t0.elapsed().as_secs_f64();
+        self.last_entry = entry.to_string();
+        Ok((outs, StepCost { wall, virt: wall }))
+    }
+
+    /// Gather `rows` KV slots into the `[nl, d, m, nkv, hd]` executable
+    /// input, reusing scratch storage.
+    fn gather_caches(&mut self, rows: &[DecodeRow], d: usize, cache: &KvCacheManager) {
+        let nl = self.geometry.num_layers;
+        let m = self.geometry.max_cache_len;
+        let te = self.geometry.num_kv_heads * self.geometry.head_dim;
+        let total = nl * d * m * te;
+        self.k_scratch.clear();
+        self.k_scratch.resize(total, 0.0);
+        self.v_scratch.clear();
+        self.v_scratch.resize(total, 0.0);
+        let plane = m * te;
+        for l in 0..nl {
+            for (i, row) in rows.iter().enumerate() {
+                let dst = (l * d + i) * plane;
+                self.k_scratch[dst..dst + plane].copy_from_slice(cache.k_layer(row.kv_slot, l));
+                self.v_scratch[dst..dst + plane].copy_from_slice(cache.v_layer(row.kv_slot, l));
+            }
+        }
+    }
+
+    /// Split a `[nl, b, s, nkv, hd]` prefill-KV tensor into one slot-append
+    /// payload (`[nl, len, te]`) for sequence `i`.
+    fn extract_pf_kv(
+        t: &HostTensor,
+        i: usize,
+        b: usize,
+        s: usize,
+        nl: usize,
+        te: usize,
+        len: usize,
+    ) -> Result<Vec<f32>> {
+        let data = t.as_f32()?;
+        let mut out = Vec::with_capacity(nl * len * te);
+        for l in 0..nl {
+            let src = ((l * b + i) * s) * te;
+            out.extend_from_slice(&data[src..src + len * te]);
+        }
+        Ok(out)
+    }
+
+    /// Extract decode-new-KV payload (`[nl, 1, te]`) for row `i` from a
+    /// `[nl, d, nkv, hd]` tensor.
+    fn extract_dec_kv(t: &HostTensor, i: usize, d: usize, nl: usize, te: usize) -> Result<Vec<f32>> {
+        let data = t.as_f32()?;
+        let mut out = Vec::with_capacity(nl * te);
+        for l in 0..nl {
+            let src = (l * d + i) * te;
+            out.extend_from_slice(&data[src..src + te]);
+        }
+        Ok(out)
+    }
+
+    fn split_rows(t: &HostTensor, n: usize, width: usize) -> Result<Vec<Vec<f32>>> {
+        let data = t.as_f32()?;
+        Ok((0..n).map(|i| data[i * width..(i + 1) * width].to_vec()).collect())
+    }
+}
+
+impl Backend for XlaBackend {
+    fn geometry(&self) -> &ModelGeometry {
+        &self.geometry
+    }
+
+    fn max_decode_batch(&self) -> usize {
+        self.rt.manifest.build.buckets.max_decode()
+    }
+
+    fn unified_capacity(&self) -> Option<(usize, usize, usize)> {
+        self.rt
+            .manifest
+            .build
+            .buckets
+            .unified
+            .first()
+            .map(|u| (u.ft_batch, u.pf_batch, u.dec_batch))
+    }
+
+    fn prefill(
+        &mut self,
+        seqs: &[PrefillSeq],
+        cache: &mut KvCacheManager,
+    ) -> Result<(Vec<Vec<f32>>, StepCost)> {
+        if seqs.is_empty() {
+            return Ok((vec![], StepCost::default()));
+        }
+        let max_len = seqs.iter().map(|q| q.tokens.len()).max().unwrap();
+        let (b, s) = self
+            .rt
+            .manifest
+            .build
+            .buckets
+            .prefill_bucket(seqs.len(), max_len)
+            .ok_or_else(|| anyhow!("no prefill bucket for {} x {max_len}", seqs.len()))?;
+        let entry = format!("prefill_b{b}_s{s}");
+
+        let mut tokens = vec![0i32; b * s];
+        let mut lens = vec![0i32; b];
+        let mut adapters = vec![-1i32; b];
+        for (i, q) in seqs.iter().enumerate() {
+            tokens[i * s..i * s + q.tokens.len()].copy_from_slice(&q.tokens);
+            lens[i] = q.tokens.len() as i32;
+            adapters[i] = q.adapter;
+        }
+        let extra = [
+            ("tokens", HostTensor::i32(vec![b, s], tokens)?),
+            ("seq_lens", HostTensor::i32(vec![b], lens)?),
+            ("adapter_ids", HostTensor::i32(vec![b], adapters)?),
+        ];
+        let (mut outs, cost) = self.run_entry(&entry, &extra, &[])?;
+
+        let vsz = self.geometry.vocab_size;
+        let nl = self.geometry.num_layers;
+        let te = self.geometry.num_kv_heads * self.geometry.head_dim;
+        let last = outs.take("last_logits")?;
+        let logits = Self::split_rows(&last, seqs.len(), vsz)?;
+        let pf_k = outs.take("pf_k")?;
+        let pf_v = outs.take("pf_v")?;
+        for (i, q) in seqs.iter().enumerate() {
+            let len = q.tokens.len();
+            let kp = Self::extract_pf_kv(&pf_k, i, b, s, nl, te, len)?;
+            let vp = Self::extract_pf_kv(&pf_v, i, b, s, nl, te, len)?;
+            cache.append(q.kv_slot, len, &kp, &vp)?;
+        }
+        Ok((logits, cost))
+    }
+
+    fn decode(
+        &mut self,
+        rows: &[DecodeRow],
+        cache: &mut KvCacheManager,
+    ) -> Result<(Vec<Vec<f32>>, StepCost)> {
+        if rows.is_empty() {
+            return Ok((vec![], StepCost::default()));
+        }
+        let d = self
+            .rt
+            .manifest
+            .build
+            .buckets
+            .decode_bucket(rows.len())
+            .ok_or_else(|| anyhow!("no decode bucket for {}", rows.len()))?;
+        let entry = format!("decode_b{d}");
+        let nl = self.geometry.num_layers;
+        let m = self.geometry.max_cache_len;
+        let te = self.geometry.num_kv_heads * self.geometry.head_dim;
+
+        let mut tokens = vec![0i32; d];
+        let mut lens = vec![0i32; d];
+        let mut adapters = vec![-1i32; d];
+        let mut valid = vec![0i32; d];
+        for (i, r) in rows.iter().enumerate() {
+            tokens[i] = r.token;
+            lens[i] = cache.len(r.kv_slot) as i32;
+            adapters[i] = r.adapter;
+            valid[i] = 1;
+        }
+        self.gather_caches(rows, d, cache);
+        let cache_shape = vec![nl, d, m, self.geometry.num_kv_heads, self.geometry.head_dim];
+        let extra = [
+            ("tokens", HostTensor::i32(vec![d], tokens)?),
+            ("cache_lens", HostTensor::i32(vec![d], lens)?),
+            ("adapter_ids", HostTensor::i32(vec![d], adapters)?),
+            ("valid", HostTensor::i32(vec![d], valid)?),
+            ("k_cache", HostTensor::f32(cache_shape.clone(), std::mem::take(&mut self.k_scratch))?),
+            ("v_cache", HostTensor::f32(cache_shape, std::mem::take(&mut self.v_scratch))?),
+        ];
+        let (mut outs, cost) = self.run_entry(&entry, &extra, &[])?;
+
+        let vsz = self.geometry.vocab_size;
+        let logits = Self::split_rows(&outs.take("logits")?, rows.len(), vsz)?;
+        let k_new = outs.take("k_new")?;
+        let v_new = outs.take("v_new")?;
+        for (i, r) in rows.iter().enumerate() {
+            let kp = Self::extract_dec_kv(&k_new, i, d, nl, te)?;
+            let vp = Self::extract_dec_kv(&v_new, i, d, nl, te)?;
+            cache.append(r.kv_slot, 1, &kp, &vp)?;
+        }
+        Ok((logits, cost))
+    }
+
+    fn train_step(&mut self, seqs: &[TrainSeq]) -> Result<(Vec<f32>, StepCost)> {
+        if seqs.is_empty() {
+            return Ok((vec![], StepCost::default()));
+        }
+        let max_len = seqs.iter().map(|q| q.tokens.len()).max().unwrap();
+        let (b, s) = self
+            .rt
+            .manifest
+            .build
+            .buckets
+            .train_bucket(seqs.len(), max_len)
+            .ok_or_else(|| anyhow!("no train bucket for {} x {max_len}", seqs.len()))?;
+        let entry = format!("train_b{b}_s{s}");
+
+        let mut tokens = vec![0i32; b * s];
+        let mut labels = vec![-100i32; b * s];
+        let mut lens = vec![0i32; b];
+        let mut adapters = vec![-1i32; b];
+        let mut train_flag = vec![0f32; b];
+        let mut loss_scale = vec![0f32; b];
+        for (i, q) in seqs.iter().enumerate() {
+            tokens[i * s..i * s + q.tokens.len()].copy_from_slice(&q.tokens);
+            labels[i * s..i * s + q.labels.len()].copy_from_slice(&q.labels);
+            lens[i] = q.tokens.len() as i32;
+            adapters[i] = q.adapter;
+            train_flag[i] = if q.train { 1.0 } else { 0.0 };
+            loss_scale[i] = q.loss_scale;
+        }
+        let extra = [
+            ("tokens", HostTensor::i32(vec![b, s], tokens)?),
+            ("labels", HostTensor::i32(vec![b, s], labels)?),
+            ("seq_lens", HostTensor::i32(vec![b], lens)?),
+            ("adapter_ids", HostTensor::i32(vec![b], adapters)?),
+            ("train_flag", HostTensor::f32(vec![b], train_flag)?),
+            ("loss_scale", HostTensor::f32(vec![b], loss_scale)?),
+        ];
+        // Gradients accumulate device-side: keep every grad_out on device
+        // and re-pin it as the accumulator for the next micro-step.
+        let keep: Vec<String> = self.grad_names.iter().map(|n| format!("grad_out.{n}")).collect();
+        let keep_refs: Vec<&str> = keep.iter().map(|s| s.as_str()).collect();
+        let (mut outs, cost) = self.run_entry(&entry, &extra, &keep_refs)?;
+        for name in self.grad_names.clone() {
+            let buf = outs.take_device(&format!("grad_out.{name}"))?;
+            self.rt.pin_buffer(&format!("grad.{name}"), buf);
+        }
+        let losses = outs.take("losses")?.as_f32()?[..seqs.len()].to_vec();
+        Ok((losses, cost))
+    }
+
+    fn optim_step(&mut self, slots: &[usize], lr: f32, step: i32) -> Result<StepCost> {
+        let l = self.rt.manifest.build.lora.max_adapters;
+        // Per-slot isolation masks (MixedLoRAModelForTrainer).
+        let mut extra: Vec<(String, HostTensor)> = Vec::new();
+        for name in &self.grad_names {
+            let spec = self.lora_spec(name)?;
+            let mut mask = vec![0f32; spec.element_count()];
+            let per_slot = mask.len() / l;
+            for &slot in slots {
+                mask[slot * per_slot..(slot + 1) * per_slot].fill(1.0);
+            }
+            extra.push((format!("mask.{name}"), HostTensor::f32(spec.shape, mask)?));
+        }
+        extra.push(("lr".into(), HostTensor::scalar_f32(lr)));
+        extra.push(("step".into(), HostTensor::scalar_i32(step)));
+        let extra_refs: Vec<(&str, HostTensor)> =
+            extra.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+
+        let keep: Vec<String> = self
+            .grad_names
+            .iter()
+            .flat_map(|n| {
+                [
+                    format!("lora_out.{n}"),
+                    format!("m_out.{n}"),
+                    format!("v_out.{n}"),
+                    format!("grads_out.{n}"),
+                ]
+            })
+            .collect();
+        let keep_refs: Vec<&str> = keep.iter().map(|s| s.as_str()).collect();
+        let (mut outs, cost) = self.run_entry("adam", &extra_refs, &keep_refs)?;
+
+        // Chain outputs into the persistent state without host round trips.
+        // `grads_out` is the accumulator cleared only on the masked slots,
+        // so co-resident trainers keep their pending gradients.
+        for name in self.grad_names.clone() {
+            let lora_buf = outs.take_device(&format!("lora_out.{name}"))?;
+            let m_buf = outs.take_device(&format!("m_out.{name}"))?;
+            let v_buf = outs.take_device(&format!("v_out.{name}"))?;
+            let g_buf = outs.take_device(&format!("grads_out.{name}"))?;
+            self.rt.pin_buffer(&name, lora_buf);
+            self.rt.pin_buffer(&format!("m.{name}"), m_buf);
+            self.rt.pin_buffer(&format!("v.{name}"), v_buf);
+            self.rt.pin_buffer(&format!("grad.{name}"), g_buf);
+        }
+        Ok(cost)
+    }
+
+    fn unified(
+        &mut self,
+        ft: &[TrainSeq],
+        pf: &[PrefillSeq],
+        dec: &[DecodeRow],
+        cache: &mut KvCacheManager,
+    ) -> Result<(UnifiedOut, StepCost)> {
+        let u = self
+            .rt
+            .manifest
+            .build
+            .buckets
+            .unified
+            .first()
+            .cloned()
+            .ok_or_else(|| anyhow!("no unified entry"))?;
+        let (bf, sf, bp, sp, d) = (u.ft_batch, u.ft_seq, u.pf_batch, u.pf_seq, u.dec_batch);
+        if ft.len() > bf || pf.len() > bp || dec.len() > d {
+            return Err(anyhow!(
+                "unified overflow: ft {}/{bf} pf {}/{bp} dec {}/{d}",
+                ft.len(), pf.len(), dec.len()
+            ));
+        }
+        let nl = self.geometry.num_layers;
+        let m = self.geometry.max_cache_len;
+        let te = self.geometry.num_kv_heads * self.geometry.head_dim;
+
+        let mut ft_tokens = vec![0i32; bf * sf];
+        let mut ft_labels = vec![-100i32; bf * sf];
+        let mut ft_lens = vec![0i32; bf];
+        let mut ft_adapter = vec![-1i32; bf];
+        let mut ft_train = vec![0f32; bf];
+        let mut ft_scale = vec![0f32; bf];
+        for (i, q) in ft.iter().enumerate() {
+            ft_tokens[i * sf..i * sf + q.tokens.len()].copy_from_slice(&q.tokens);
+            ft_labels[i * sf..i * sf + q.labels.len()].copy_from_slice(&q.labels);
+            ft_lens[i] = q.tokens.len() as i32;
+            ft_adapter[i] = q.adapter;
+            ft_train[i] = if q.train { 1.0 } else { 0.0 };
+            ft_scale[i] = q.loss_scale;
+        }
+        let mut pf_tokens = vec![0i32; bp * sp];
+        let mut pf_lens = vec![0i32; bp];
+        let mut pf_adapter = vec![-1i32; bp];
+        for (i, q) in pf.iter().enumerate() {
+            pf_tokens[i * sp..i * sp + q.tokens.len()].copy_from_slice(&q.tokens);
+            pf_lens[i] = q.tokens.len() as i32;
+            pf_adapter[i] = q.adapter;
+        }
+        let mut dec_tokens = vec![0i32; d];
+        let mut dec_lens = vec![0i32; d];
+        let mut dec_adapter = vec![-1i32; d];
+        let mut dec_valid = vec![0i32; d];
+        for (i, r) in dec.iter().enumerate() {
+            dec_tokens[i] = r.token;
+            dec_lens[i] = cache.len(r.kv_slot) as i32;
+            dec_adapter[i] = r.adapter;
+            dec_valid[i] = 1;
+        }
+        self.gather_caches(dec, d, cache);
+        let cache_shape = vec![nl, d, m, self.geometry.num_kv_heads, self.geometry.head_dim];
+
+        let extra = [
+            ("ft_tokens", HostTensor::i32(vec![bf, sf], ft_tokens)?),
+            ("ft_labels", HostTensor::i32(vec![bf, sf], ft_labels)?),
+            ("ft_seq_lens", HostTensor::i32(vec![bf], ft_lens)?),
+            ("ft_adapter", HostTensor::i32(vec![bf], ft_adapter)?),
+            ("ft_train_flag", HostTensor::f32(vec![bf], ft_train)?),
+            ("ft_loss_scale", HostTensor::f32(vec![bf], ft_scale)?),
+            ("pf_tokens", HostTensor::i32(vec![bp, sp], pf_tokens)?),
+            ("pf_seq_lens", HostTensor::i32(vec![bp], pf_lens)?),
+            ("pf_adapter", HostTensor::i32(vec![bp], pf_adapter)?),
+            ("dec_tokens", HostTensor::i32(vec![d], dec_tokens)?),
+            ("dec_cache_lens", HostTensor::i32(vec![d], dec_lens)?),
+            ("dec_adapter", HostTensor::i32(vec![d], dec_adapter)?),
+            ("dec_valid", HostTensor::i32(vec![d], dec_valid)?),
+            ("k_cache", HostTensor::f32(cache_shape.clone(), std::mem::take(&mut self.k_scratch))?),
+            ("v_cache", HostTensor::f32(cache_shape, std::mem::take(&mut self.v_scratch))?),
+        ];
+        let keep: Vec<String> = self.grad_names.iter().map(|n| format!("grad_out.{n}")).collect();
+        let keep_refs: Vec<&str> = keep.iter().map(|s| s.as_str()).collect();
+        let (mut outs, cost) = self.run_entry("unified_0", &extra, &keep_refs)?;
+        for name in self.grad_names.clone() {
+            let buf = outs.take_device(&format!("grad_out.{name}"))?;
+            self.rt.pin_buffer(&format!("grad.{name}"), buf);
+        }
+
+        let vsz = self.geometry.vocab_size;
+        let mut result = UnifiedOut::default();
+        result.ft_losses = outs.take("ft_losses")?.as_f32()?[..ft.len()].to_vec();
+        result.pf_last_logits = Self::split_rows(&outs.take("pf_last_logits")?, pf.len(), vsz)?;
+        result.dec_logits = Self::split_rows(&outs.take("dec_logits")?, dec.len(), vsz)?;
+
+        let pf_k = outs.take("pf_k")?;
+        let pf_v = outs.take("pf_v")?;
+        for (i, q) in pf.iter().enumerate() {
+            let len = q.tokens.len();
+            let kp = Self::extract_pf_kv(&pf_k, i, bp, sp, nl, te, len)?;
+            let vp = Self::extract_pf_kv(&pf_v, i, bp, sp, nl, te, len)?;
+            cache.append(q.kv_slot, len, &kp, &vp)?;
+        }
+        let k_new = outs.take("dec_k_new")?;
+        let v_new = outs.take("dec_v_new")?;
+        for (i, r) in dec.iter().enumerate() {
+            let kp = Self::extract_dec_kv(&k_new, i, d, nl, te)?;
+            let vp = Self::extract_dec_kv(&v_new, i, d, nl, te)?;
+            cache.append(r.kv_slot, 1, &kp, &vp)?;
+        }
+        Ok((result, cost))
+    }
+
+    fn sync_adapters(&mut self, reg: &mut VirtualizedRegistry) -> Result<()> {
+        reg.sync(&mut self.rt)?;
+        Ok(())
+    }
+
+    fn checkpoint_adapters(&mut self, reg: &mut VirtualizedRegistry) -> Result<()> {
+        reg.checkpoint_from(&self.rt)
+    }
+}
+
+/// Build a default cost model *measured* from a live backend, for the
+/// calibration example.
+pub fn measure_cost_model(
+    be: &mut XlaBackend,
+    cache: &mut KvCacheManager,
+) -> Result<CostModel> {
+    use crate::engine::Backend as _;
+    let mut model = CostModel::default();
+
+    // Decode base+per-row from two batch sizes at the same bucket.
+    let slot_a = cache.allocate(u64::MAX - 1, 8)?;
+    let seqs = vec![PrefillSeq { tokens: vec![1, 2, 3, 4], adapter: 0, kv_slot: slot_a }];
+    let (_, c_pf) = be.prefill(&seqs, cache)?;
+    model.launch_base_s = c_pf.wall * 0.3;
+    model.prefill_token_s = (c_pf.wall * 0.7) / 4.0;
+
+    let row = DecodeRow { token: 1, adapter: 0, kv_slot: slot_a };
+    let (_, c_d1) = be.decode(&[row.clone()], cache)?;
+    model.decode_row_s = c_d1.wall * 0.7;
+    model.decode_cached_token_s = (c_d1.wall * 0.3) / (cache.len(slot_a) as f64 + 1.0);
+
+    let (_, c_t) = be.train_step(&[TrainSeq {
+        tokens: vec![1; 16],
+        labels: vec![1; 16],
+        adapter: 0,
+        train: true,
+        loss_scale: 1.0,
+    }])?;
+    model.train_token_s = c_t.wall / 16.0;
+    let c_a = be.optim_step(&[0], 1e-3, 1)?;
+    model.adam_s = c_a.wall;
+    cache.release(slot_a)?;
+    Ok(model)
+}

@@ -1,0 +1,236 @@
+//! Experiment harness: canonical system/backend constructors and runners
+//! shared by the figure examples, the benches, and the tests — one place
+//! defines "GPU-scale" so every Figure 2–6 row is comparable.
+//!
+//! Scale note (DESIGN.md §3): the sim backend replays a cost model
+//! calibrated against the real XLA backend, then uniformly rescaled to an
+//! A6000-class token budget, so the paper's request rates (1–5 RPS with
+//! 400-token responses) are actually sustainable at the crossover points
+//! the figures care about.
+
+use anyhow::Result;
+
+use crate::baselines::{
+    drive_to_completion, FlexLlmLike, LoquetierSystem, PeftLike, SLoraLike, ServingSystem,
+};
+use crate::coordinator::{Coordinator, CoordinatorConfig, FinetuneJob, TrainExample};
+use crate::engine::{Backend, CostModel, SimBackend};
+use crate::kvcache::CacheConfig;
+use crate::metrics::{build_report, RunReport, SloSpec};
+use crate::runtime::{BucketTable, ModelGeometry, UnifiedShape};
+use crate::workload::{build_train_set, LengthModel, ALPACA_LENGTHS, GSM8K_LENGTHS};
+
+/// Paper-scale serving capacities (A6000-class deployment of Llama3-8B).
+pub const GPU_PROMPT_CAP: usize = 1024;
+pub const GPU_SLOT_CAPACITY: usize = 1536; // prompt + 400 new + slack
+pub const GPU_KV_SLOTS: usize = 48;
+
+/// Geometry used by the sim backend (token accounting only; tensor sizes
+/// are irrelevant to the cost model, so we keep the planes small).
+pub fn sim_geometry() -> ModelGeometry {
+    ModelGeometry {
+        vocab_size: 512,
+        hidden_size: 128,
+        intermediate_size: 256,
+        num_layers: 4,
+        num_heads: 4,
+        num_kv_heads: 2,
+        head_dim: 32,
+        rope_theta: 5e5,
+        rms_eps: 1e-5,
+        max_cache_len: GPU_SLOT_CAPACITY,
+        q_dim: 128,
+        kv_dim: 64,
+    }
+}
+
+/// GPU-scale bucket table: what an A6000 deployment would compile.
+pub fn sim_buckets() -> BucketTable {
+    BucketTable {
+        prefill: vec![(8, GPU_PROMPT_CAP)],
+        decode: vec![48],
+        train: vec![(4, 512)],
+        unified: vec![UnifiedShape {
+            ft_batch: 4,
+            ft_seq: 512,
+            pf_batch: 8,
+            pf_seq: GPU_PROMPT_CAP,
+            dec_batch: 48,
+        }],
+    }
+}
+
+pub fn sim_cache_config() -> CacheConfig {
+    CacheConfig {
+        num_slots: GPU_KV_SLOTS,
+        slot_capacity: GPU_SLOT_CAPACITY,
+        block_tokens: 64,
+        // Block budget sized so ~32 worst-case requests fit (the paper's
+        // A6000 runs OOM-pressure PEFT at far lower batch sizes).
+        total_blocks: 32 * GPU_SLOT_CAPACITY / 64,
+        num_layers: 4,
+        token_elems: 8, // tiny planes: the sim writes zeros, only len matters
+    }
+}
+
+fn sim_cache_geometry_fixup(cfg: &mut CacheConfig) {
+    // The sim backend's fake_kv uses geometry.num_layers *
+    // (num_kv_heads*head_dim); keep the cache config consistent with it.
+    cfg.num_layers = sim_geometry().num_layers;
+    cfg.token_elems = sim_geometry().num_kv_heads * sim_geometry().head_dim;
+}
+
+/// The calibrated (or default) cost model, GPU-rescaled.
+pub fn gpu_cost_model(artifacts_dir: &str) -> CostModel {
+    CostModel::load(format!("{artifacts_dir}/calibration.json")).unwrap_or_default()
+}
+
+pub fn sim_backend(cost: CostModel) -> SimBackend {
+    SimBackend::new(sim_geometry(), sim_buckets(), cost)
+}
+
+fn gpu_cache() -> CacheConfig {
+    let mut c = sim_cache_config();
+    sim_cache_geometry_fixup(&mut c);
+    c
+}
+
+fn gpu_coord_config() -> CoordinatorConfig {
+    CoordinatorConfig {
+        max_prompt_tokens: GPU_PROMPT_CAP,
+        max_prefill_batch: 8,
+        ..Default::default()
+    }
+}
+
+/// Loquetier at GPU scale.
+pub fn loquetier() -> LoquetierSystem {
+    LoquetierSystem::new(Coordinator::new(gpu_coord_config(), gpu_cache()))
+}
+
+/// PEFT baseline: padded batches, small batch cap (OOM pressure).
+pub fn peft() -> PeftLike {
+    PeftLike::new(8, gpu_cache())
+}
+
+/// S-LoRA baseline with its measured load-transform stall (Table 2: ~33 s).
+pub fn slora() -> SLoraLike {
+    SLoraLike::new(gpu_coord_config(), gpu_cache(), 33.0)
+}
+
+/// FlexLLM baseline: lazy transform (~38 s, Table 2), adapter-cycling
+/// reload (~5 s), and — separately — its decode-speed ceiling, applied as
+/// `backend.slowdown = FLEXLLM_SLOWDOWN` by the harness.
+pub fn flexllm() -> FlexLlmLike {
+    FlexLlmLike::new(gpu_coord_config(), gpu_cache(), 38.0, 5.0)
+}
+
+/// Decode-speed ratio of Loquetier to FlexLLM. Figure 2 shows FlexLLM
+/// keeping ~100% SLO at 1–2 RPS (so its capacity clears ~800 DTPS demand)
+/// and falling off a cliff at 3+ RPS (capacity < 1200); a 1.6x slowdown on
+/// our 1400-DTPS budget puts its ceiling at ~875, reproducing exactly that
+/// crossover. The paper's headline "up to 3.0x throughput" arises at the
+/// highest rates where FlexLLM additionally thrashes on its queue.
+pub const FLEXLLM_SLOWDOWN: f64 = 1.6;
+
+/// Appendix D.3 fine-tune job over Alpaca/GSM8K-statistics datasets.
+pub fn finetune_job(
+    id: u64,
+    adapter: i32,
+    n_train: usize,
+    n_eval: usize,
+    per_device_batch: usize,
+    epochs: usize,
+    use_gsm8k: bool,
+) -> FinetuneJob {
+    let lengths: &LengthModel = if use_gsm8k { &GSM8K_LENGTHS } else { &ALPACA_LENGTHS };
+    let train_set: Vec<TrainExample> = build_train_set(7 + id, n_train, lengths, 512, 512);
+    let eval_set: Vec<TrainExample> = build_train_set(77 + id, n_eval, lengths, 512, 512);
+    FinetuneJob {
+        id,
+        adapter,
+        train_set,
+        eval_set,
+        epochs,
+        per_device_batch,
+        grad_accum: 4,
+        lr: 2e-5,
+        eval_each_epoch: true,
+    }
+}
+
+/// Run a system over a trace + optional trainers; return the figure row.
+pub fn run_system(
+    label: impl Into<String>,
+    system: &mut dyn ServingSystem,
+    backend: &mut dyn Backend,
+    requests: Vec<crate::coordinator::InferenceRequest>,
+    trainers: Vec<FinetuneJob>,
+    slo: &SloSpec,
+    max_steps: usize,
+) -> Result<RunReport> {
+    for job in trainers {
+        // A rejected trainer is itself a result (Table 1); the caller
+        // decides whether that fails the row.
+        if let Err(e) = system.add_trainer(job) {
+            let mut r = RunReport { label: label.into(), ..Default::default() };
+            r.extra.insert("unsupported".into(), 1.0);
+            eprintln!("  [{}] trainer rejected: {e}", system.name());
+            return Ok(r);
+        }
+    }
+    let t_end = drive_to_completion(system, backend, requests, max_steps)?;
+    let report = build_report(
+        label,
+        system.traces(),
+        slo,
+        system.finetune_tokens(),
+        system.eval_tokens(),
+        t_end.max(1e-9),
+    );
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{build_trace, PoissonArrivals, SHAREGPT_LENGTHS};
+
+    #[test]
+    fn loquetier_beats_peft_on_slo_at_2rps() {
+        // The headline Figure-2 shape in miniature. 300-token responses:
+        // long enough that PEFT's batch-to-completion scheduling starves
+        // later arrivals past the 6 s waiting bound.
+        let cost = CostModel::default();
+        let lengths = SHAREGPT_LENGTHS.rescaled_to(200.0);
+        let mk_trace = || {
+            build_trace(
+                1, 150, &[0], &mut PoissonArrivals::new(2.0), &lengths, 300,
+                GPU_PROMPT_CAP, 512,
+            )
+            .requests
+        };
+
+        let mut loq = loquetier();
+        let mut be = sim_backend(cost.clone());
+        let r_loq = run_system(
+            "loq", &mut loq, &mut be, mk_trace(), vec![], &SloSpec::default(), 2_000_000,
+        )
+        .unwrap();
+
+        let mut pef = peft();
+        let mut be2 = sim_backend(cost);
+        let r_peft = run_system(
+            "peft", &mut pef, &mut be2, mk_trace(), vec![], &SloSpec::peft(), 2_000_000,
+        )
+        .unwrap();
+
+        assert!(
+            r_loq.slo_attainment > r_peft.slo_attainment,
+            "loq {} !> peft {}",
+            r_loq.slo_attainment,
+            r_peft.slo_attainment
+        );
+        assert!(r_loq.slo_attainment > 0.9, "loquetier at 2rps: {}", r_loq.slo_attainment);
+    }
+}

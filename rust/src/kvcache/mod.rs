@@ -1,0 +1,338 @@
+//! KV-cache management: slot arena + block accounting.
+//!
+//! The AOT decode executables take gathered per-request caches shaped
+//! `[nl, D, M, nkv, hd]`, so the arena stores each slot **layer-major**
+//! (`[nl][M][nkv*hd]`): building the executable input is then `nl × D`
+//! large contiguous memcpys, and appending the `[nl, ., nkv, hd]` outputs
+//! is `nl` contiguous memcpys — no per-token scatter on the hot path.
+//!
+//! *Logically* we still account in fixed-size blocks (vLLM-style): admission
+//! reserves blocks for a request's worst case (prompt + max_new), and the
+//! scheduler reads block pressure to decide admission/preemption — the same
+//! control surface a paged arena exposes, minus the gather indirection the
+//! CPU executables cannot express.
+
+use anyhow::{anyhow, Result};
+
+/// Arena configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct CacheConfig {
+    /// Number of request slots (= max concurrent decode streams).
+    pub num_slots: usize,
+    /// Per-slot capacity in tokens (the executables' `max_cache_len`).
+    pub slot_capacity: usize,
+    /// Accounting block size in tokens.
+    pub block_tokens: usize,
+    /// Total block budget across the arena ("GPU memory").
+    pub total_blocks: usize,
+    /// Model depth.
+    pub num_layers: usize,
+    /// Elements per token per layer: nkv * hd.
+    pub token_elems: usize,
+}
+
+impl CacheConfig {
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    fn plane_elems(&self) -> usize {
+        self.num_layers * self.slot_capacity * self.token_elems
+    }
+
+    fn layer_stride(&self) -> usize {
+        self.slot_capacity * self.token_elems
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Slot {
+    owner: Option<u64>,
+    len: usize,
+    blocks: usize,
+}
+
+/// Aggregate statistics for the metrics reporter / the capacity allocator.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    pub slots_used: usize,
+    pub slots_total: usize,
+    pub blocks_used: usize,
+    pub blocks_total: usize,
+    pub tokens_cached: usize,
+    /// Reserved-but-unused token capacity (internal fragmentation).
+    pub tokens_reserved_unused: usize,
+}
+
+impl CacheStats {
+    pub fn block_utilization(&self) -> f64 {
+        if self.blocks_total == 0 {
+            0.0
+        } else {
+            self.blocks_used as f64 / self.blocks_total as f64
+        }
+    }
+}
+
+/// The arena: layer-major K and V planes per slot plus the block ledger.
+pub struct KvCacheManager {
+    cfg: CacheConfig,
+    slots: Vec<Slot>,
+    blocks_used: usize,
+    k_data: Vec<Vec<f32>>,
+    v_data: Vec<Vec<f32>>,
+}
+
+impl KvCacheManager {
+    pub fn new(cfg: CacheConfig) -> Self {
+        let plane = cfg.plane_elems();
+        Self {
+            slots: (0..cfg.num_slots)
+                .map(|_| Slot { owner: None, len: 0, blocks: 0 })
+                .collect(),
+            k_data: (0..cfg.num_slots).map(|_| vec![0.0; plane]).collect(),
+            v_data: (0..cfg.num_slots).map(|_| vec![0.0; plane]).collect(),
+            blocks_used: 0,
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &CacheConfig {
+        &self.cfg
+    }
+
+    /// Can a request needing `tokens` capacity be admitted right now?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        let need = self.cfg.blocks_for(tokens);
+        self.free_slot().is_some()
+            && tokens <= self.cfg.slot_capacity
+            && self.blocks_used + need <= self.cfg.total_blocks
+    }
+
+    fn free_slot(&self) -> Option<usize> {
+        self.slots.iter().position(|s| s.owner.is_none())
+    }
+
+    /// Reserve a slot + blocks for a request's worst case.
+    pub fn allocate(&mut self, request: u64, max_tokens: usize) -> Result<usize> {
+        if max_tokens > self.cfg.slot_capacity {
+            return Err(anyhow!(
+                "request {request} needs {max_tokens} tokens > slot capacity {}",
+                self.cfg.slot_capacity
+            ));
+        }
+        let need = self.cfg.blocks_for(max_tokens);
+        if self.blocks_used + need > self.cfg.total_blocks {
+            return Err(anyhow!("out of cache blocks"));
+        }
+        let idx = self.free_slot().ok_or_else(|| anyhow!("no free cache slot"))?;
+        self.blocks_used += need;
+        let slot = &mut self.slots[idx];
+        slot.owner = Some(request);
+        slot.len = 0;
+        slot.blocks = need;
+        Ok(idx)
+    }
+
+    /// Release a request's slot and blocks.
+    pub fn release(&mut self, slot: usize) -> Result<()> {
+        let s = self
+            .slots
+            .get_mut(slot)
+            .ok_or_else(|| anyhow!("slot {slot} out of range"))?;
+        if s.owner.is_none() {
+            return Err(anyhow!("slot {slot} already free"));
+        }
+        self.blocks_used -= s.blocks;
+        let used = s.len;
+        s.owner = None;
+        s.len = 0;
+        s.blocks = 0;
+        // Zero only the used prefix of each layer plane: stale KV beyond a
+        // slot's length is never read (attention masks by cache_lens), but
+        // a fresh owner must still see zeros in the range it will read
+        // before writing. Zeroing the whole plane cost ~160 µs per release
+        // at GPU scale (measured); this is proportional to actual use.
+        let te = self.cfg.token_elems;
+        let stride = self.cfg.layer_stride();
+        for l in 0..self.cfg.num_layers {
+            let off = l * stride;
+            self.k_data[slot][off..off + used * te].fill(0.0);
+            self.v_data[slot][off..off + used * te].fill(0.0);
+        }
+        Ok(())
+    }
+
+    pub fn owner(&self, slot: usize) -> Option<u64> {
+        self.slots.get(slot).and_then(|s| s.owner)
+    }
+
+    pub fn len(&self, slot: usize) -> usize {
+        self.slots[slot].len
+    }
+
+    /// Append `n` tokens of K/V to `slot`. Payloads are layer-major
+    /// `[nl, n, token_elems]` — exactly the executables' output layout
+    /// (`pf_k[:, b, :len]` / `dec_k_new[:, d]` slices).
+    pub fn append(&mut self, slot: usize, n: usize, k: &[f32], v: &[f32]) -> Result<()> {
+        let te = self.cfg.token_elems;
+        let nl = self.cfg.num_layers;
+        if k.len() != nl * n * te || v.len() != nl * n * te {
+            return Err(anyhow!(
+                "append: payload {} != nl({nl}) * n({n}) * te({te})",
+                k.len()
+            ));
+        }
+        let s = &mut self.slots[slot];
+        if s.owner.is_none() {
+            return Err(anyhow!("append to free slot {slot}"));
+        }
+        if s.len + n > self.cfg.slot_capacity {
+            return Err(anyhow!(
+                "slot {slot} overflow: {} + {n} > {}",
+                s.len, self.cfg.slot_capacity
+            ));
+        }
+        let stride = self.cfg.layer_stride();
+        for l in 0..nl {
+            let dst = l * stride + s.len * te;
+            let src = l * n * te;
+            self.k_data[slot][dst..dst + n * te].copy_from_slice(&k[src..src + n * te]);
+            self.v_data[slot][dst..dst + n * te].copy_from_slice(&v[src..src + n * te]);
+        }
+        s.len += n;
+        Ok(())
+    }
+
+    /// Borrow one layer's full plane (capacity-padded) of a slot.
+    pub fn k_layer(&self, slot: usize, layer: usize) -> &[f32] {
+        let stride = self.cfg.layer_stride();
+        &self.k_data[slot][layer * stride..(layer + 1) * stride]
+    }
+
+    pub fn v_layer(&self, slot: usize, layer: usize) -> &[f32] {
+        let stride = self.cfg.layer_stride();
+        &self.v_data[slot][layer * stride..(layer + 1) * stride]
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let slots_used = self.slots.iter().filter(|s| s.owner.is_some()).count();
+        let tokens_cached: usize = self.slots.iter().map(|s| s.len).sum();
+        let reserved_tokens: usize = self
+            .slots
+            .iter()
+            .map(|s| s.blocks * self.cfg.block_tokens)
+            .sum();
+        CacheStats {
+            slots_used,
+            slots_total: self.cfg.num_slots,
+            blocks_used: self.blocks_used,
+            blocks_total: self.cfg.total_blocks,
+            tokens_cached,
+            tokens_reserved_unused: reserved_tokens.saturating_sub(tokens_cached),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> CacheConfig {
+        CacheConfig {
+            num_slots: 4,
+            slot_capacity: 32,
+            block_tokens: 8,
+            total_blocks: 12,
+            num_layers: 2,
+            token_elems: 4,
+        }
+    }
+
+    #[test]
+    fn allocate_release_cycle() {
+        let mut m = KvCacheManager::new(cfg());
+        assert!(m.can_admit(32));
+        let s0 = m.allocate(1, 32).unwrap(); // 4 blocks
+        let s1 = m.allocate(2, 32).unwrap(); // 4 blocks
+        let _s2 = m.allocate(3, 32).unwrap(); // 4 blocks -> 12/12
+        assert!(!m.can_admit(8), "block budget exhausted");
+        assert!(m.allocate(4, 8).is_err());
+        m.release(s1).unwrap();
+        assert!(m.can_admit(8));
+        assert_eq!(m.owner(s0), Some(1));
+        assert_eq!(m.owner(s1), None);
+    }
+
+    #[test]
+    fn append_layer_major_and_read_back() {
+        let mut m = KvCacheManager::new(cfg());
+        let s = m.allocate(7, 16).unwrap();
+        // 2 tokens, 2 layers, te=4: [l0t0 l0t1 l1t0 l1t1]
+        let k: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..16).map(|i| 100.0 + i as f32).collect();
+        m.append(s, 2, &k, &v).unwrap();
+        assert_eq!(m.len(s), 2);
+        assert_eq!(&m.k_layer(s, 0)[..8], &k[..8]);
+        assert_eq!(&m.k_layer(s, 1)[..8], &k[8..]);
+        // Append one more token; it lands at offset len*te in each layer.
+        let k2: Vec<f32> = (0..8).map(|i| 50.0 + i as f32).collect();
+        m.append(s, 1, &k2, &k2).unwrap();
+        assert_eq!(&m.k_layer(s, 0)[8..12], &k2[..4]);
+        assert_eq!(&m.k_layer(s, 1)[8..12], &k2[4..]);
+    }
+
+    #[test]
+    fn bad_payload_size_rejected() {
+        let mut m = KvCacheManager::new(cfg());
+        let s = m.allocate(7, 16).unwrap();
+        assert!(m.append(s, 2, &[0.0; 15], &[0.0; 16]).is_err());
+    }
+
+    #[test]
+    fn overflow_rejected() {
+        let mut m = KvCacheManager::new(cfg());
+        let s = m.allocate(7, 32).unwrap();
+        let payload = vec![0.0; 2 * 32 * 4];
+        m.append(s, 32, &payload, &payload).unwrap();
+        let one = vec![0.0; 2 * 4];
+        assert!(m.append(s, 1, &one, &one).is_err());
+    }
+
+    #[test]
+    fn release_zeroes_planes() {
+        let mut m = KvCacheManager::new(cfg());
+        let s = m.allocate(7, 8).unwrap();
+        m.append(s, 1, &[1.0; 8], &[2.0; 8]).unwrap();
+        m.release(s).unwrap();
+        let s2 = m.allocate(8, 8).unwrap();
+        assert_eq!(s, s2);
+        assert!(m.k_layer(s2, 0).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn stats_track_fragmentation() {
+        let mut m = KvCacheManager::new(cfg());
+        let s = m.allocate(1, 17).unwrap(); // 3 blocks = 24 tokens reserved
+        m.append(s, 2, &vec![0.0; 16], &vec![0.0; 16]).unwrap();
+        let st = m.stats();
+        assert_eq!(st.blocks_used, 3);
+        assert_eq!(st.tokens_cached, 2);
+        assert_eq!(st.tokens_reserved_unused, 22);
+    }
+
+    #[test]
+    fn oversized_request_rejected() {
+        let mut m = KvCacheManager::new(cfg());
+        assert!(!m.can_admit(33));
+        assert!(m.allocate(1, 33).is_err());
+    }
+
+    #[test]
+    fn double_release_rejected() {
+        let mut m = KvCacheManager::new(cfg());
+        let s = m.allocate(1, 8).unwrap();
+        m.release(s).unwrap();
+        assert!(m.release(s).is_err());
+    }
+}

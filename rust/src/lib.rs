@@ -1,0 +1,30 @@
+//! Loquetier reproduction — a virtualized multi-LoRA framework for unified
+//! LLM fine-tuning and serving.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//!
+//! * **L1/L2** live in `python/compile/`: the SMLM Pallas kernel and the
+//!   Llama-style JAX model, AOT-lowered once (`make artifacts`) to HLO text.
+//! * **L3** is this crate: the Rust coordinator that loads the artifacts via
+//!   the PJRT C API and owns everything on the request path — the
+//!   virtualized adapter registry, the unified continuous batcher, KV-cache
+//!   management, trainer lifecycles, capacity allocation, metrics, and the
+//!   serving frontend. Python never runs at serve time.
+//!
+//! Crate layout mirrors the system inventory in DESIGN.md §4.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod harness;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod server;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;
+
+pub use anyhow::{anyhow, Result};

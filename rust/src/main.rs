@@ -1,0 +1,252 @@
+//! Loquetier CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//! * `serve`    — load artifacts, attach virtual models, run the unified
+//!   coordinator behind the JSON-lines TCP frontend (real XLA execution).
+//! * `bench`    — quick smoke of each engine operation with timings.
+//! * `inspect`  — print the manifest (entries, geometry, buckets, weights).
+
+use std::collections::HashMap;
+use std::net::TcpListener;
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use loquetier::config::ServeConfig;
+use loquetier::coordinator::Coordinator;
+use loquetier::engine::{Backend, XlaBackend};
+use loquetier::kvcache::{CacheConfig, KvCacheManager};
+use loquetier::model::{LoraAdapter, SlotState, VirtualizedRegistry, WeightStore};
+use loquetier::runtime::Runtime;
+use loquetier::server::{serve_blocking, Frontend};
+use loquetier::tokenizer::{Tokenizer, TINY_CORPUS};
+use loquetier::util::cli::Args;
+
+const USAGE: &str = "\
+loquetier — virtualized multi-LoRA unified fine-tuning + serving
+
+USAGE:
+  loquetier serve   [--artifacts DIR] [--listen ADDR] [--config FILE]
+  loquetier bench   [--artifacts DIR]
+  loquetier inspect [--artifacts DIR]";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("serve") => serve_cmd(&args),
+        Some("bench") => bench_cmd(&args),
+        Some("inspect") => inspect_cmd(&args),
+        _ => {
+            eprintln!("{USAGE}");
+            bail!("missing/unknown subcommand");
+        }
+    }
+}
+
+fn inspect_cmd(args: &Args) -> Result<()> {
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let rt = Runtime::load_filtered(&artifacts, |_| false)?;
+    let m = &rt.manifest;
+    println!(
+        "model: {} layers, hidden {}, vocab {}, GQA {}:{} heads, head_dim {}",
+        m.build.model.num_layers,
+        m.build.model.hidden_size,
+        m.build.model.vocab_size,
+        m.build.model.num_heads,
+        m.build.model.num_kv_heads,
+        m.build.model.head_dim
+    );
+    println!(
+        "lora: up to {} adapters, r={}, alpha={}, targets {:?}",
+        m.build.lora.max_adapters, m.build.lora.rank, m.build.lora.alpha, m.build.lora.targets
+    );
+    println!(
+        "buckets: prefill {:?}, decode {:?}, train {:?}, unified x{}",
+        m.build.buckets.prefill,
+        m.build.buckets.decode,
+        m.build.buckets.train,
+        m.build.buckets.unified.len()
+    );
+    println!("entries:");
+    for (name, spec) in &m.entries {
+        println!(
+            "  {name:<18} {:>3} inputs {:>3} outputs  ({})",
+            spec.inputs.len(),
+            spec.outputs.len(),
+            spec.file
+        );
+    }
+    println!("weights: {} records", m.weights.len());
+    Ok(())
+}
+
+fn bench_cmd(args: &Args) -> Result<()> {
+    use loquetier::engine::{DecodeRow, PrefillSeq, TrainSeq};
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let t0 = Instant::now();
+    let rt = Runtime::load(&artifacts)?;
+    println!(
+        "compiled {} entries in {:.2}s",
+        rt.manifest.entries.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    let store = WeightStore::open(&artifacts, &rt.manifest)?;
+    let manifest = rt.manifest.clone();
+    let mut reg = VirtualizedRegistry::new(&manifest, &store)?;
+    for i in 0..manifest.build.lora.max_adapters {
+        let ad = LoraAdapter::from_store(&store, &manifest, i, format!("adapter{i}"))?;
+        reg.attach(format!("vm{i}"), ad, i, SlotState::Inference)?;
+    }
+    let mut be = XlaBackend::new(rt, &store)?;
+    be.sync_adapters(&mut reg)?;
+
+    let g = be.geometry().clone();
+    let te = g.num_kv_heads * g.head_dim;
+    let mut cache = KvCacheManager::new(CacheConfig {
+        num_slots: 16,
+        slot_capacity: g.max_cache_len,
+        block_tokens: 16,
+        total_blocks: 16 * g.max_cache_len / 16,
+        num_layers: g.num_layers,
+        token_elems: te,
+    });
+
+    let slot = cache.allocate(1, 80)?;
+    let (_, c) =
+        be.prefill(&[PrefillSeq { tokens: (0..16).collect(), adapter: 0, kv_slot: slot }], &mut cache)?;
+    println!("prefill_b1_s16:   {:>8.2} ms", c.wall * 1e3);
+    for b in [1usize, 8] {
+        let mut slots = vec![slot];
+        for i in 1..b {
+            let s = cache.allocate(100 + i as u64, 32)?;
+            cache.append(s, 1, &vec![0.0; g.num_layers * te], &vec![0.0; g.num_layers * te])?;
+            slots.push(s);
+        }
+        let rows: Vec<DecodeRow> =
+            slots.iter().map(|&s| DecodeRow { token: 3, adapter: 0, kv_slot: s }).collect();
+        let (_, c) = be.decode(&rows, &mut cache)?;
+        println!("decode_b{b}:        {:>8.2} ms", c.wall * 1e3);
+    }
+    let (_, c) = be.train_step(&[TrainSeq {
+        tokens: vec![1; 64],
+        labels: vec![1; 64],
+        adapter: 0,
+        train: true,
+        loss_scale: 0.25,
+    }])?;
+    println!("train_b1_s64:     {:>8.2} ms", c.wall * 1e3);
+    let c = be.optim_step(&[0], 2e-5, 1)?;
+    println!("adam:             {:>8.2} ms", c.wall * 1e3);
+    Ok(())
+}
+
+fn serve_cmd(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ServeConfig::load(path)?,
+        None => ServeConfig::default(),
+    };
+    if let Some(a) = args.get("artifacts") {
+        cfg.artifacts_dir = a.to_string();
+    }
+    if let Some(l) = args.get("listen") {
+        cfg.listen_addr = l.to_string();
+    }
+
+    // Inference-only deployment: skip the training entries.
+    let rt = Runtime::load_filtered(&cfg.artifacts_dir, |n| {
+        !n.starts_with("train") && n != "adam"
+    })?;
+    let manifest = rt.manifest.clone();
+    let store = WeightStore::open(&cfg.artifacts_dir, &manifest)?;
+    let mut reg = VirtualizedRegistry::new(&manifest, &store)?;
+    for (name, idx) in &cfg.virtual_models {
+        let ad = LoraAdapter::from_store(&store, &manifest, *idx, name.clone())?;
+        reg.attach(name.clone(), ad, *idx, SlotState::Inference)?;
+    }
+    let mut backend = XlaBackend::new(rt, &store)?;
+    backend.sync_adapters(&mut reg)?;
+
+    let mut coord =
+        Coordinator::new(cfg.coordinator_config(&manifest), cfg.cache_config(&manifest));
+
+    let (frontend, jobs_rx) = Frontend::new();
+    let listener = TcpListener::bind(&cfg.listen_addr)?;
+    println!(
+        "loquetier serving on {} ({} virtual models, vocab {})",
+        cfg.listen_addr,
+        cfg.virtual_models.len(),
+        manifest.build.model.vocab_size
+    );
+
+    // The XLA backend holds raw PJRT pointers (not Send), so the engine
+    // loop stays on the main thread and the TCP accept loop is spawned.
+    let vm_names: Vec<String> = cfg.virtual_models.iter().map(|(n, _)| n.clone()).collect();
+    let tok_enc = Tokenizer::train(TINY_CORPUS, manifest.build.model.vocab_size);
+    let tok_dec = Tokenizer::train(TINY_CORPUS, manifest.build.model.vocab_size);
+    let fe_accept = frontend.clone();
+    std::thread::spawn(move || {
+        let _ = serve_blocking(
+            listener,
+            fe_accept,
+            move |text| tok_enc.encode(text),
+            move |ids| tok_dec.decode(ids).unwrap_or_default(),
+            move |name| {
+                name.and_then(|n| vm_names.iter().position(|v| v == n))
+                    .map(|i| i as i32)
+                    .unwrap_or(-1)
+            },
+        );
+    });
+
+    // Engine loop: owns the backend and the coordinator.
+    let stats = frontend.stats.clone();
+    let t0 = Instant::now();
+    let mut waiting: HashMap<u64, (Sender<(Vec<i32>, f64)>, f64)> = HashMap::new();
+    loop {
+        while let Ok(mut job) = jobs_rx.try_recv() {
+            let now = t0.elapsed().as_secs_f64();
+            job.request.arrival_s = now;
+            coord.advance_clock(now);
+            waiting.insert(job.request.id, (job.reply, now));
+            coord.submit(job.request);
+        }
+        let now = t0.elapsed().as_secs_f64();
+        coord.advance_clock(now);
+        let out = coord.step(&mut backend)?;
+        for id in &out.completed_requests {
+            if let Some((reply, t_in)) = waiting.remove(id) {
+                let generated = coord
+                    .traces
+                    .last()
+                    .map(|t| vec![0i32; t.output_tokens])
+                    .unwrap_or_default();
+                let _ = reply.send((generated, t0.elapsed().as_secs_f64() - t_in));
+            }
+        }
+        if let Ok(mut s) = stats.lock() {
+            s.queued = coord.queue_len();
+            s.active = coord.active_len();
+            s.completed = coord.traces.len();
+            s.decode_tokens = coord.decode_series.total() as u64;
+            s.finetune_tokens = coord.finetune_tokens();
+        }
+        if out.idle {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+    }
+    let vm_names: Vec<String> = cfg.virtual_models.iter().map(|(n, _)| n.clone()).collect();
+    let tok_enc = Tokenizer::train(TINY_CORPUS, manifest.build.model.vocab_size);
+    let tok_dec = Tokenizer::train(TINY_CORPUS, manifest.build.model.vocab_size);
+    serve_blocking(
+        listener,
+        frontend,
+        move |text| tok_enc.encode(text),
+        move |ids| tok_dec.decode(ids).unwrap_or_default(),
+        move |name| {
+            name.and_then(|n| vm_names.iter().position(|v| v == n))
+                .map(|i| i as i32)
+                .unwrap_or(-1)
+        },
+    )
+}

@@ -1,0 +1,367 @@
+//! Metrics: latency histograms, SLO attainment, throughput counters, and
+//! time-series capture for the figure harnesses (Appendix C of the paper).
+
+use std::collections::BTreeMap;
+
+
+/// The paper's SLO definition (Table 3): a request attains its SLO iff all
+/// three bounds hold.
+#[derive(Debug, Clone, Copy)]
+pub struct SloSpec {
+    /// Max time from arrival to first scheduled work (prefill start).
+    pub max_waiting_s: f64,
+    /// Mean per-token decode latency bound.
+    pub mean_decode_latency_s: f64,
+    /// Max single-token decode latency bound.
+    pub max_decode_latency_s: f64,
+}
+
+impl Default for SloSpec {
+    fn default() -> Self {
+        // Loquetier row of Table 3: 6 s / 200 ms / 1000 ms.
+        Self {
+            max_waiting_s: 6.0,
+            mean_decode_latency_s: 0.200,
+            max_decode_latency_s: 1.000,
+        }
+    }
+}
+
+impl SloSpec {
+    /// PEFT row of Table 3: decode-latency bounds are waived (padding makes
+    /// them meaningless), only waiting time counts.
+    pub fn peft() -> Self {
+        Self {
+            max_waiting_s: 6.0,
+            mean_decode_latency_s: f64::INFINITY,
+            max_decode_latency_s: f64::INFINITY,
+        }
+    }
+}
+
+/// Per-request timing trace, filled by the coordinator.
+#[derive(Debug, Clone, Default)]
+pub struct RequestTrace {
+    pub arrival_s: f64,
+    pub prefill_start_s: Option<f64>,
+    pub first_token_s: Option<f64>,
+    pub finish_s: Option<f64>,
+    pub decode_latencies_s: Vec<f64>,
+    pub output_tokens: usize,
+    pub input_tokens: usize,
+    /// Dropped/failed (e.g. timed out in queue).
+    pub failed: bool,
+}
+
+impl RequestTrace {
+    pub fn waiting_s(&self) -> Option<f64> {
+        self.prefill_start_s.map(|t| t - self.arrival_s)
+    }
+
+    pub fn attains(&self, slo: &SloSpec) -> bool {
+        if self.failed || self.finish_s.is_none() {
+            return false;
+        }
+        let Some(wait) = self.waiting_s() else { return false };
+        if wait > slo.max_waiting_s {
+            return false;
+        }
+        if self.decode_latencies_s.is_empty() {
+            return true;
+        }
+        let mean =
+            self.decode_latencies_s.iter().sum::<f64>() / self.decode_latencies_s.len() as f64;
+        let max = self.decode_latencies_s.iter().cloned().fold(0.0, f64::max);
+        mean <= slo.mean_decode_latency_s && max <= slo.max_decode_latency_s
+    }
+}
+
+/// Fixed-bucket latency histogram (log-spaced), allocation-free on record.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// Bucket upper bounds in seconds.
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    n: u64,
+    max: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        // 100 µs .. ~100 s, 1.6x steps.
+        let mut bounds = Vec::new();
+        let mut b = 1e-4;
+        while b < 100.0 {
+            bounds.push(b);
+            b *= 1.6;
+        }
+        let n = bounds.len();
+        Self { bounds, counts: vec![0; n + 1], sum: 0.0, n: 0, max: 0.0 }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, secs: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| secs <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += secs;
+        self.n += 1;
+        if secs > self.max {
+            self.max = secs;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = (q * self.n as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i < self.bounds.len() { self.bounds[i] } else { self.max };
+            }
+        }
+        self.max
+    }
+}
+
+/// One point of a throughput time series.
+#[derive(Debug, Clone, Copy)]
+pub struct SeriesPoint {
+    pub t_s: f64,
+    pub value: f64,
+}
+
+/// Windowed throughput counter: record (time, amount) events, read back a
+/// smoothed series — the DTPS/FTPS/ETPS curves of Figures 5 and 6.
+#[derive(Debug, Clone, Default)]
+pub struct ThroughputSeries {
+    events: Vec<(f64, f64)>,
+}
+
+impl ThroughputSeries {
+    pub fn record(&mut self, t_s: f64, amount: f64) {
+        self.events.push((t_s, amount));
+    }
+
+    pub fn total(&self) -> f64 {
+        self.events.iter().map(|(_, a)| a).sum()
+    }
+
+    /// Average rate over [t0, t1].
+    pub fn rate_over(&self, t0: f64, t1: f64) -> f64 {
+        if t1 <= t0 {
+            return 0.0;
+        }
+        let s: f64 = self
+            .events
+            .iter()
+            .filter(|(t, _)| *t >= t0 && *t < t1)
+            .map(|(_, a)| a)
+            .sum();
+        s / (t1 - t0)
+    }
+
+    /// Bucketed series with `window_s` resolution over [0, horizon].
+    pub fn series(&self, window_s: f64, horizon_s: f64) -> Vec<SeriesPoint> {
+        let n = (horizon_s / window_s).ceil() as usize;
+        let mut acc = vec![0.0; n.max(1)];
+        for &(t, a) in &self.events {
+            let idx = (t / window_s) as usize;
+            if idx < acc.len() {
+                acc[idx] += a;
+            }
+        }
+        acc.iter()
+            .enumerate()
+            .map(|(i, &v)| SeriesPoint { t_s: (i as f64 + 0.5) * window_s, value: v / window_s })
+            .collect()
+    }
+}
+
+/// Everything a benchmark run reports (one row of a figure).
+#[derive(Debug, Clone, Default)]
+pub struct RunReport {
+    pub label: String,
+    pub requests: usize,
+    pub completed: usize,
+    pub failed: usize,
+    pub slo_attainment: f64,
+    pub decode_tokens: u64,
+    pub finetune_tokens: u64,
+    pub eval_tokens: u64,
+    pub duration_s: f64,
+    /// Decode tokens per second over the run.
+    pub dtps: f64,
+    /// Fine-tune tokens per second over the run.
+    pub ftps: f64,
+    pub etps: f64,
+    pub mean_waiting_s: f64,
+    pub p99_decode_latency_s: f64,
+    pub extra: BTreeMap<String, f64>,
+}
+
+impl RunReport {
+    pub fn print_row(&self) {
+        println!(
+            "{:<38} reqs={:<5} slo={:>6.2}% dtps={:>8.1} ftps={:>8.1} etps={:>7.1} wait={:>6.3}s p99dec={:>6.3}s",
+            self.label,
+            self.requests,
+            self.slo_attainment * 100.0,
+            self.dtps,
+            self.ftps,
+            self.etps,
+            self.mean_waiting_s,
+            self.p99_decode_latency_s,
+        );
+    }
+}
+
+/// Build a report from request traces + token counters.
+pub fn build_report(
+    label: impl Into<String>,
+    traces: &[RequestTrace],
+    slo: &SloSpec,
+    finetune_tokens: u64,
+    eval_tokens: u64,
+    duration_s: f64,
+) -> RunReport {
+    let mut hist = LatencyHistogram::default();
+    let mut waiting = 0.0;
+    let mut waited = 0usize;
+    let mut decode_tokens = 0u64;
+    let mut attained = 0usize;
+    let mut completed = 0usize;
+    let mut failed = 0usize;
+    for t in traces {
+        if t.failed {
+            failed += 1;
+        } else if t.finish_s.is_some() {
+            completed += 1;
+        }
+        decode_tokens += t.output_tokens as u64;
+        if let Some(w) = t.waiting_s() {
+            waiting += w;
+            waited += 1;
+        }
+        for &d in &t.decode_latencies_s {
+            hist.record(d);
+        }
+        if t.attains(slo) {
+            attained += 1;
+        }
+    }
+    let n = traces.len().max(1);
+    RunReport {
+        label: label.into(),
+        requests: traces.len(),
+        completed,
+        failed,
+        slo_attainment: attained as f64 / n as f64,
+        decode_tokens,
+        finetune_tokens,
+        eval_tokens,
+        duration_s,
+        dtps: decode_tokens as f64 / duration_s.max(1e-9),
+        ftps: finetune_tokens as f64 / duration_s.max(1e-9),
+        etps: eval_tokens as f64 / duration_s.max(1e-9),
+        mean_waiting_s: waiting / waited.max(1) as f64,
+        p99_decode_latency_s: hist.quantile(0.99),
+        extra: BTreeMap::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slo_requires_all_three_bounds() {
+        let slo = SloSpec::default();
+        let mut t = RequestTrace {
+            arrival_s: 0.0,
+            prefill_start_s: Some(1.0),
+            first_token_s: Some(1.1),
+            finish_s: Some(3.0),
+            decode_latencies_s: vec![0.05, 0.1],
+            output_tokens: 2,
+            input_tokens: 10,
+            failed: false,
+        };
+        assert!(t.attains(&slo));
+        t.decode_latencies_s.push(1.5); // violates max decode latency
+        assert!(!t.attains(&slo));
+        t.decode_latencies_s.pop();
+        t.prefill_start_s = Some(7.0); // violates waiting
+        assert!(!t.attains(&slo));
+    }
+
+    #[test]
+    fn unfinished_or_failed_never_attains() {
+        let slo = SloSpec::default();
+        let t = RequestTrace { failed: true, ..Default::default() };
+        assert!(!t.attains(&slo));
+        let t2 = RequestTrace { arrival_s: 0.0, ..Default::default() };
+        assert!(!t2.attains(&slo));
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = LatencyHistogram::default();
+        for i in 1..=1000 {
+            h.record(i as f64 / 1000.0);
+        }
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+        assert!(h.quantile(0.99) <= h.max() * 1.7);
+        assert!((h.mean() - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn series_buckets_rates() {
+        let mut s = ThroughputSeries::default();
+        s.record(0.5, 10.0);
+        s.record(1.5, 30.0);
+        let pts = s.series(1.0, 2.0);
+        assert_eq!(pts.len(), 2);
+        assert!((pts[0].value - 10.0).abs() < 1e-9);
+        assert!((pts[1].value - 30.0).abs() < 1e-9);
+        assert!((s.rate_over(0.0, 2.0) - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn peft_slo_waives_decode_bounds() {
+        let slo = SloSpec::peft();
+        let t = RequestTrace {
+            arrival_s: 0.0,
+            prefill_start_s: Some(1.0),
+            finish_s: Some(100.0),
+            decode_latencies_s: vec![5.0; 10],
+            output_tokens: 10,
+            ..Default::default()
+        };
+        assert!(t.attains(&slo));
+    }
+}

@@ -1,0 +1,197 @@
+//! LoRA adapters as host-side values: load from the weight store, save back
+//! to disk, and write into bank slots.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+use crate::model::WeightStore;
+use crate::runtime::Manifest;
+
+/// Identifies one LoRA linear inside the model: (layer, module).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct AdapterKey {
+    pub layer: usize,
+    pub module: String,
+}
+
+/// One module's A/B pair (host copies, row-major).
+#[derive(Debug, Clone)]
+pub struct LoraModule {
+    pub a: Vec<f32>,
+    pub a_shape: Vec<usize>, // [in, r]
+    pub b: Vec<f32>,
+    pub b_shape: Vec<usize>, // [r, out]
+}
+
+/// A complete adapter: per-(layer, module) low-rank pairs + metadata.
+///
+/// Heterogeneous targets are first-class (the paper's "Partial"/"Full"
+/// configurations): a missing key simply leaves that slot's delta at zero.
+#[derive(Debug, Clone)]
+pub struct LoraAdapter {
+    pub name: String,
+    pub rank: usize,
+    pub alpha: f64,
+    pub modules: BTreeMap<AdapterKey, LoraModule>,
+}
+
+impl LoraAdapter {
+    pub fn scaling(&self) -> f32 {
+        (self.alpha / self.rank as f64) as f32
+    }
+
+    /// Load adapter `idx` from the AOT weight store (`adapter{idx}.*`
+    /// records — the pretrained stand-ins emitted by `aot.py`).
+    pub fn from_store(
+        store: &WeightStore,
+        manifest: &Manifest,
+        idx: usize,
+        name: impl Into<String>,
+    ) -> Result<Self> {
+        Self::from_store_with_targets(store, manifest, idx, name, None)
+    }
+
+    /// Same, but restricted to a subset of target modules ("Partial" mode).
+    pub fn from_store_with_targets(
+        store: &WeightStore,
+        manifest: &Manifest,
+        idx: usize,
+        name: impl Into<String>,
+        targets: Option<&[&str]>,
+    ) -> Result<Self> {
+        let lcfg = &manifest.build.lora;
+        let mut modules = BTreeMap::new();
+        for li in 0..manifest.build.model.num_layers {
+            for m in &lcfg.targets {
+                if let Some(ts) = targets {
+                    if !ts.contains(&m.as_str()) {
+                        continue;
+                    }
+                }
+                let a_name = format!("adapter{idx}.layers.{li}.{m}.a");
+                let b_name = format!("adapter{idx}.layers.{li}.{m}.b");
+                let (a, a_shape) = store.f32_slice(&a_name)?;
+                let (b, b_shape) = store.f32_slice(&b_name)?;
+                modules.insert(
+                    AdapterKey { layer: li, module: m.clone() },
+                    LoraModule {
+                        a: a.to_vec(),
+                        a_shape: a_shape.to_vec(),
+                        b: b.to_vec(),
+                        b_shape: b_shape.to_vec(),
+                    },
+                );
+            }
+        }
+        Ok(Self {
+            name: name.into(),
+            rank: lcfg.rank,
+            alpha: lcfg.alpha,
+            modules,
+        })
+    }
+
+    /// Total parameter count (for the Table-2 storage column and logs).
+    pub fn param_count(&self) -> usize {
+        self.modules
+            .values()
+            .map(|m| m.a.len() + m.b.len())
+            .sum()
+    }
+
+    /// Serialize to a single JSON file (adapter save path: the fine-tuned,
+    /// up-to-date model the paper wants to redeploy "quickly").
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let modules = Json::Arr(
+            self.modules
+                .iter()
+                .map(|(k, m)| {
+                    Json::obj(vec![
+                        ("layer", Json::Num(k.layer as f64)),
+                        ("module", Json::Str(k.module.clone())),
+                        ("a", Json::from_f64s(m.a.iter().map(|&x| x as f64))),
+                        ("a_shape", Json::from_f64s(m.a_shape.iter().map(|&x| x as f64))),
+                        ("b", Json::from_f64s(m.b.iter().map(|&x| x as f64))),
+                        ("b_shape", Json::from_f64s(m.b_shape.iter().map(|&x| x as f64))),
+                    ])
+                })
+                .collect(),
+        );
+        let doc = Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("rank", Json::Num(self.rank as f64)),
+            ("alpha", Json::Num(self.alpha)),
+            ("modules", modules),
+        ]);
+        fs::write(path.as_ref(), doc.to_string())
+            .with_context(|| format!("writing {}", path.as_ref().display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        let v = json::parse(&text).context("parsing adapter json")?;
+        let mut modules = BTreeMap::new();
+        for m in v.req("modules")?.as_arr()? {
+            let key = AdapterKey {
+                layer: m.req("layer")?.as_usize()?,
+                module: m.req("module")?.as_str()?.to_string(),
+            };
+            let module = LoraModule {
+                a: m.req("a")?.f32_vec()?,
+                a_shape: m.req("a_shape")?.usize_vec()?,
+                b: m.req("b")?.f32_vec()?,
+                b_shape: m.req("b_shape")?.usize_vec()?,
+            };
+            if module.a.len() != module.a_shape.iter().product::<usize>()
+                || module.b.len() != module.b_shape.iter().product::<usize>()
+            {
+                bail!("adapter module {key:?}: data/shape mismatch");
+            }
+            modules.insert(key, module);
+        }
+        Ok(Self {
+            name: v.req("name")?.as_str()?.to_string(),
+            rank: v.req("rank")?.as_usize()?,
+            alpha: v.req("alpha")?.as_f64()?,
+            modules,
+        })
+    }
+
+    /// Which (layer, module) pairs this adapter targets.
+    pub fn targeted_modules(&self) -> impl Iterator<Item = &AdapterKey> {
+        self.modules.keys()
+    }
+
+    pub fn get(&self, layer: usize, module: &str) -> Option<&LoraModule> {
+        self.modules.get(&AdapterKey { layer, module: module.to_string() })
+    }
+
+    /// Validate shapes against the manifest geometry.
+    pub fn validate(&self, manifest: &Manifest) -> Result<()> {
+        let r = manifest.build.lora.rank;
+        for (k, m) in &self.modules {
+            if m.a_shape.len() != 2 || m.b_shape.len() != 2 {
+                return Err(anyhow!("{k:?}: A/B must be rank-2"));
+            }
+            if m.a_shape[1] != r || m.b_shape[0] != r {
+                return Err(anyhow!(
+                    "{k:?}: rank mismatch (A {:?}, B {:?}, want r={r})",
+                    m.a_shape, m.b_shape
+                ));
+            }
+            if m.a_shape[0] * m.a_shape[1] != m.a.len()
+                || m.b_shape[0] * m.b_shape[1] != m.b.len()
+            {
+                return Err(anyhow!("{k:?}: data/shape mismatch"));
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,12 @@
+//! Model layer: weight storage, LoRA adapters, and the Virtualized Module
+//! registry (the paper's Section 3.2 contribution, reinterpreted for the
+//! AOT runtime: virtual models are *views* over one shared set of pinned
+//! base-weight buffers plus per-slot adapter state).
+
+mod adapter;
+mod store;
+mod virtualized;
+
+pub use adapter::{AdapterKey, LoraAdapter, LoraModule};
+pub use store::WeightStore;
+pub use virtualized::{SlotState, VirtualModel, VirtualizedRegistry};

@@ -1,0 +1,82 @@
+//! `weights.bin` reader: zero-parse index lookup over the raw f32 blob.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::{HostTensor, Manifest, WeightRecord};
+
+/// In-memory view of `artifacts/weights.bin`, indexed by the manifest.
+///
+/// Loading is a single `read()` — the paper's Table 2 contrasts this against
+/// FlexLLM-style per-module weight-file transforms; our Table-2 bench
+/// measures exactly this path.
+pub struct WeightStore {
+    blob: Vec<u8>,
+    records: Vec<WeightRecord>,
+}
+
+impl WeightStore {
+    pub fn open(artifacts_dir: impl AsRef<Path>, manifest: &Manifest) -> Result<Self> {
+        let path = artifacts_dir.as_ref().join(&manifest.weights_file);
+        let blob = fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        // Validate the index against the blob before trusting any offset.
+        for rec in &manifest.weights {
+            let n: usize = rec.shape.iter().product::<usize>().max(1);
+            let end = rec.offset + 4 * n;
+            if end > blob.len() {
+                return Err(anyhow!(
+                    "weight {} [{}..{}] exceeds blob size {}",
+                    rec.name, rec.offset, end, blob.len()
+                ));
+            }
+        }
+        Ok(Self { blob, records: manifest.weights.clone() })
+    }
+
+    pub fn record(&self, name: &str) -> Result<&WeightRecord> {
+        self.records
+            .iter()
+            .find(|r| r.name == name)
+            .ok_or_else(|| anyhow!("weight {name} not in store"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.records.iter().map(|r| r.name.as_str())
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.records.iter().any(|r| r.name == name)
+    }
+
+    /// Borrow a weight as an f32 slice (no copy).
+    pub fn f32_slice(&self, name: &str) -> Result<(&[f32], &[usize])> {
+        let rec = self.record(name)?;
+        let n: usize = rec.shape.iter().product::<usize>().max(1);
+        let bytes = &self.blob[rec.offset..rec.offset + 4 * n];
+        // weights.bin is little-endian f32; on all supported targets this
+        // reinterpret is exact.
+        let (pre, f32s, post) = unsafe { bytes.align_to::<f32>() };
+        if !pre.is_empty() || !post.is_empty() {
+            return Err(anyhow!("weight {name} not 4-byte aligned in blob"));
+        }
+        Ok((f32s, &rec.shape))
+    }
+
+    /// Copy a weight out as a host tensor.
+    pub fn tensor(&self, name: &str) -> Result<HostTensor> {
+        let (data, shape) = self.f32_slice(name)?;
+        HostTensor::f32(shape.to_vec(), data.to_vec())
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.blob.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Exercised end-to-end by rust/tests/runtime_golden.rs; unit coverage
+    // of the bounds checks lives there too (needs real artifacts).
+}

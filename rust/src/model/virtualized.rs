@@ -1,0 +1,329 @@
+//! The Virtualized Module registry — paper Section 3.2, adapted to the AOT
+//! runtime.
+//!
+//! In the paper, the Virtualized Module wraps torch modules with method/data
+//! proxies so many *virtual models* share one base model with zero extra
+//! weight memory. In this runtime the base weights are immutable pinned
+//! device buffers; what varies per virtual model is (a) which bank *slot* it
+//! binds, (b) the slot's A/B contents, and (c) its mode. So the registry:
+//!
+//! * owns the host mirror of the stacked LoRA bank (`[L, in, r]/[L, r, out]`
+//!   per layer×module) and the per-slot scaling vector;
+//! * attaches/detaches adapters to slots (a slot write — the base model is
+//!   never touched, no kernel restart, no weight re-splicing);
+//! * syncs dirty arrays to pinned device buffers lazily, so N adapter swaps
+//!   between engine steps cost one upload;
+//! * supports `void()`/`unvoid()` — the paper's deep-copy-safe migration:
+//!   a voided virtual model carries only its adapter payload and metadata,
+//!   and can be re-bound on another registry (device) without copying the
+//!   base model.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::{LoraAdapter, WeightStore};
+use crate::runtime::{HostTensor, Manifest, Runtime};
+
+/// Lifecycle state of a bank slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotState {
+    Free,
+    /// Serving inference traffic.
+    Inference,
+    /// Owned by a trainer; its contents live in device buffers between
+    /// optimizer steps and the host mirror may be stale until `checkpoint`.
+    Finetune,
+}
+
+/// One virtual model: an isolated PEFT configuration over the shared base.
+#[derive(Debug, Clone)]
+pub struct VirtualModel {
+    pub name: String,
+    pub slot: usize,
+    pub state: SlotState,
+    pub adapter_name: String,
+    pub rank: usize,
+    pub alpha: f64,
+    /// Per-request dynamic scaling override (paper Section 3.3); None uses
+    /// the adapter's static alpha/r folded in at attach time.
+    pub dynamic_scale: Option<f32>,
+}
+
+/// A voided virtual model: detached from any base/registry, safe to ship
+/// across devices/processes (the paper's migration payload).
+#[derive(Debug, Clone)]
+pub struct VoidedModel {
+    pub model: VirtualModel,
+    pub adapter: LoraAdapter,
+}
+
+struct BankArray {
+    tensor: HostTensor,
+    dirty: bool,
+    /// in-features (A) or rank (B) — the leading dim of one slot's block.
+    slot_elems: usize,
+}
+
+/// The registry: host mirror of the bank + virtual-model table.
+pub struct VirtualizedRegistry {
+    manifest: Manifest,
+    /// name -> stacked array, for every `lora.layers.{li}.{m}.{a,b}`.
+    bank: BTreeMap<String, BankArray>,
+    scaling: HostTensor,
+    scaling_dirty: bool,
+    models: Vec<Option<VirtualModel>>,
+    /// Adapter payloads kept for migration/save (slot-indexed).
+    payloads: Vec<Option<LoraAdapter>>,
+}
+
+impl VirtualizedRegistry {
+    /// Build from the empty `lora.*` bank records in the weight store.
+    pub fn new(manifest: &Manifest, store: &WeightStore) -> Result<Self> {
+        let mut bank = BTreeMap::new();
+        let l = manifest.build.lora.max_adapters;
+        for name in manifest.lora_param_names() {
+            if name.ends_with("scaling") {
+                continue;
+            }
+            let tensor = store.tensor(&name)?;
+            if tensor.shape.first() != Some(&l) {
+                return Err(anyhow!("{name}: leading dim {:?} != max_adapters {l}", tensor.shape));
+            }
+            let slot_elems = tensor.element_count() / l;
+            bank.insert(name, BankArray { tensor, dirty: true, slot_elems });
+        }
+        let scaling = store.tensor("lora.scaling")?;
+        Ok(Self {
+            manifest: manifest.clone(),
+            bank,
+            scaling,
+            scaling_dirty: true,
+            models: (0..l).map(|_| None).collect(),
+            payloads: (0..l).map(|_| None).collect(),
+        })
+    }
+
+    pub fn max_slots(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn slot_state(&self, slot: usize) -> SlotState {
+        self.models
+            .get(slot)
+            .and_then(|m| m.as_ref())
+            .map(|m| m.state)
+            .unwrap_or(SlotState::Free)
+    }
+
+    pub fn model(&self, slot: usize) -> Option<&VirtualModel> {
+        self.models.get(slot).and_then(|m| m.as_ref())
+    }
+
+    pub fn model_by_name(&self, name: &str) -> Option<&VirtualModel> {
+        self.models
+            .iter()
+            .flatten()
+            .find(|m| m.name == name)
+    }
+
+    pub fn free_slot(&self) -> Option<usize> {
+        self.models.iter().position(|m| m.is_none())
+    }
+
+    pub fn active_slots(&self) -> impl Iterator<Item = &VirtualModel> {
+        self.models.iter().flatten()
+    }
+
+    /// Attach an adapter into `slot`, creating a virtual model.
+    ///
+    /// This is the paper's hot-swap: a bank-slot write plus a lazy upload —
+    /// the running computation flow never halts and the base model is
+    /// untouched.
+    pub fn attach(
+        &mut self,
+        name: impl Into<String>,
+        adapter: LoraAdapter,
+        slot: usize,
+        state: SlotState,
+    ) -> Result<&VirtualModel> {
+        if slot >= self.models.len() {
+            return Err(anyhow!("slot {slot} out of range"));
+        }
+        if self.models[slot].is_some() {
+            return Err(anyhow!("slot {slot} already bound"));
+        }
+        adapter.validate(&self.manifest)?;
+        self.write_slot(&adapter, slot)?;
+        let vm = VirtualModel {
+            name: name.into(),
+            slot,
+            state,
+            adapter_name: adapter.name.clone(),
+            rank: adapter.rank,
+            alpha: adapter.alpha,
+            dynamic_scale: None,
+        };
+        // Static scaling folded into the scaling vector at attach time
+        // (dynamic per-request scaling goes through `set_dynamic_scale`).
+        self.scaling.as_f32_mut()?[slot] = adapter.scaling();
+        self.scaling_dirty = true;
+        self.payloads[slot] = Some(adapter);
+        self.models[slot] = Some(vm);
+        Ok(self.models[slot].as_ref().unwrap())
+    }
+
+    /// Detach a slot: zero its bank block so any stale routing yields a
+    /// zero delta, and free the virtual model.
+    pub fn detach(&mut self, slot: usize) -> Result<LoraAdapter> {
+        if self.models.get(slot).and_then(|m| m.as_ref()).is_none() {
+            return Err(anyhow!("slot {slot} not bound"));
+        }
+        for arr in self.bank.values_mut() {
+            let n = arr.slot_elems;
+            let data = arr.tensor.as_f32_mut()?;
+            data[slot * n..(slot + 1) * n].fill(0.0);
+            arr.dirty = true;
+        }
+        self.scaling.as_f32_mut()?[slot] = 0.0;
+        self.scaling_dirty = true;
+        self.models[slot] = None;
+        self.payloads[slot]
+            .take()
+            .ok_or_else(|| anyhow!("slot {slot} had no payload"))
+    }
+
+    /// Per-request dynamic scaling (paper Section 3.3).
+    pub fn set_dynamic_scale(&mut self, slot: usize, scale: Option<f32>) -> Result<()> {
+        let vm = self.models[slot]
+            .as_mut()
+            .ok_or_else(|| anyhow!("slot {slot} not bound"))?;
+        vm.dynamic_scale = scale;
+        let r = vm.rank as f64;
+        let a = vm.alpha;
+        self.scaling.as_f32_mut()?[slot] = scale.unwrap_or((a / r) as f32);
+        self.scaling_dirty = true;
+        Ok(())
+    }
+
+    pub fn set_state(&mut self, slot: usize, state: SlotState) -> Result<()> {
+        self.models[slot]
+            .as_mut()
+            .map(|m| m.state = state)
+            .ok_or_else(|| anyhow!("slot {slot} not bound"))
+    }
+
+    /// Void a virtual model for migration: returns a payload that contains
+    /// everything *except* the base model.
+    pub fn void(&mut self, slot: usize) -> Result<VoidedModel> {
+        let model = self.models[slot]
+            .clone()
+            .ok_or_else(|| anyhow!("slot {slot} not bound"))?;
+        let adapter = self.detach(slot)?;
+        Ok(VoidedModel { model, adapter })
+    }
+
+    /// Re-bind a voided model (possibly on another registry/device).
+    pub fn unvoid(&mut self, payload: VoidedModel, slot: usize) -> Result<&VirtualModel> {
+        let vm = self.attach(payload.model.name, payload.adapter, slot, payload.model.state)?;
+        Ok(vm)
+    }
+
+    /// Write an adapter into a bank slot (host mirror only; `sync` uploads).
+    fn write_slot(&mut self, adapter: &LoraAdapter, slot: usize) -> Result<()> {
+        // Zero first: untargeted modules must contribute nothing.
+        for arr in self.bank.values_mut() {
+            let n = arr.slot_elems;
+            arr.tensor.as_f32_mut()?[slot * n..(slot + 1) * n].fill(0.0);
+            arr.dirty = true;
+        }
+        for (key, module) in &adapter.modules {
+            let a_name = format!("lora.layers.{}.{}.a", key.layer, key.module);
+            let b_name = format!("lora.layers.{}.{}.b", key.layer, key.module);
+            for (name, data) in [(a_name, &module.a), (b_name, &module.b)] {
+                let arr = self
+                    .bank
+                    .get_mut(&name)
+                    .ok_or_else(|| anyhow!("{name}: not a bank array (bad adapter target?)"))?;
+                let n = arr.slot_elems;
+                if data.len() != n {
+                    return Err(anyhow!(
+                        "{name}: adapter block {} elems, slot holds {n}",
+                        data.len()
+                    ));
+                }
+                arr.tensor.as_f32_mut()?[slot * n..(slot + 1) * n].copy_from_slice(data);
+            }
+        }
+        Ok(())
+    }
+
+    /// Upload dirty bank arrays to the runtime's pinned buffers. Returns the
+    /// number of arrays uploaded (0 = everything was clean).
+    pub fn sync(&mut self, rt: &mut Runtime) -> Result<usize> {
+        let mut n = 0;
+        for (name, arr) in self.bank.iter_mut() {
+            if arr.dirty || !rt.is_pinned(name) {
+                rt.pin(name, &arr.tensor)?;
+                arr.dirty = false;
+                n += 1;
+            }
+        }
+        if self.scaling_dirty || !rt.is_pinned("lora.scaling") {
+            rt.pin("lora.scaling", &self.scaling)?;
+            self.scaling_dirty = false;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Refresh the host mirror of every bank array from the runtime's pinned
+    /// buffers (used after training steps update parameters on-device).
+    pub fn checkpoint_from(&mut self, rt: &Runtime) -> Result<()> {
+        for (name, arr) in self.bank.iter_mut() {
+            if rt.is_pinned(name) {
+                let spec = crate::runtime::TensorSpec {
+                    name: name.clone(),
+                    shape: arr.tensor.shape.clone(),
+                    dtype: crate::runtime::DType::F32,
+                };
+                arr.tensor = rt.pinned_to_host(name, &spec)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Extract a slot's current contents as an adapter (the save path for a
+    /// fine-tuned model). Reads the *host mirror* — call `checkpoint_from`
+    /// first if training updated the device copies.
+    pub fn extract(&self, slot: usize) -> Result<LoraAdapter> {
+        let vm = self.models[slot]
+            .as_ref()
+            .ok_or_else(|| anyhow!("slot {slot} not bound"))?;
+        let template = self.payloads[slot]
+            .as_ref()
+            .ok_or_else(|| anyhow!("slot {slot} has no payload"))?;
+        let mut out = template.clone();
+        out.name = format!("{}-finetuned", vm.adapter_name);
+        for (key, module) in out.modules.iter_mut() {
+            let a_name = format!("lora.layers.{}.{}.a", key.layer, key.module);
+            let b_name = format!("lora.layers.{}.{}.b", key.layer, key.module);
+            let arr_a = &self.bank[&a_name];
+            let arr_b = &self.bank[&b_name];
+            let na = arr_a.slot_elems;
+            let nb = arr_b.slot_elems;
+            module.a = arr_a.tensor.as_f32()?[slot * na..(slot + 1) * na].to_vec();
+            module.b = arr_b.tensor.as_f32()?[slot * nb..(slot + 1) * nb].to_vec();
+        }
+        Ok(out)
+    }
+
+    /// The bank's host tensors, for engines that pass weights per-call
+    /// (SimBackend, tests).
+    pub fn bank_tensor(&self, name: &str) -> Option<&HostTensor> {
+        if name == "lora.scaling" {
+            return Some(&self.scaling);
+        }
+        self.bank.get(name).map(|a| &a.tensor)
+    }
+}

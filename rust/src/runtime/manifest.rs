@@ -1,0 +1,334 @@
+//! Typed view of `artifacts/manifest.json` — the AOT contract with L2.
+//! Parsed with the in-tree JSON codec (`util::json`); entry order is
+//! preserved (it is the compile order).
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::DType;
+use crate::util::json::{self, Json};
+
+/// Shape+dtype of one entry argument or result.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let dtype = match v.req("dtype")?.as_str()? {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            other => bail!("unknown dtype {other}"),
+        };
+        Ok(Self {
+            name: v.req("name")?.as_str()?.to_string(),
+            shape: v.req("shape")?.usize_vec()?,
+            dtype,
+        })
+    }
+}
+
+/// One AOT-compiled entry point.
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl EntrySpec {
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|s| s.name == name)
+    }
+}
+
+/// Index record of one tensor inside `weights.bin`.
+#[derive(Debug, Clone)]
+pub struct WeightRecord {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// Model geometry mirrored from `python/compile/configs.py`.
+#[derive(Debug, Clone)]
+pub struct ModelGeometry {
+    pub vocab_size: usize,
+    pub hidden_size: usize,
+    pub intermediate_size: usize,
+    pub num_layers: usize,
+    pub num_heads: usize,
+    pub num_kv_heads: usize,
+    pub head_dim: usize,
+    pub rope_theta: f64,
+    pub rms_eps: f64,
+    pub max_cache_len: usize,
+    pub q_dim: usize,
+    pub kv_dim: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct LoraGeometry {
+    pub max_adapters: usize,
+    pub rank: usize,
+    pub alpha: f64,
+    pub dropout: f64,
+    pub targets: Vec<String>,
+    pub scaling: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct UnifiedShape {
+    pub ft_batch: usize,
+    pub ft_seq: usize,
+    pub pf_batch: usize,
+    pub pf_seq: usize,
+    pub dec_batch: usize,
+}
+
+impl UnifiedShape {
+    pub fn total_tokens(&self) -> usize {
+        self.ft_batch * self.ft_seq + self.pf_batch * self.pf_seq + self.dec_batch
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BucketTable {
+    /// (batch, seq) prefill buckets.
+    pub prefill: Vec<(usize, usize)>,
+    /// Decode batch buckets.
+    pub decode: Vec<usize>,
+    /// (batch, seq) training buckets.
+    pub train: Vec<(usize, usize)>,
+    pub unified: Vec<UnifiedShape>,
+}
+
+impl BucketTable {
+    /// Smallest prefill bucket covering (batch, seq), if any.
+    pub fn prefill_bucket(&self, batch: usize, seq: usize) -> Option<(usize, usize)> {
+        self.prefill
+            .iter()
+            .copied()
+            .filter(|&(b, s)| b >= batch && s >= seq)
+            .min_by_key(|&(b, s)| b * s)
+    }
+
+    /// Smallest decode bucket with capacity for `batch` rows.
+    pub fn decode_bucket(&self, batch: usize) -> Option<usize> {
+        self.decode.iter().copied().filter(|&b| b >= batch).min()
+    }
+
+    pub fn max_decode(&self) -> usize {
+        self.decode.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn train_bucket(&self, batch: usize, seq: usize) -> Option<(usize, usize)> {
+        self.train
+            .iter()
+            .copied()
+            .filter(|&(b, s)| b >= batch && s >= seq)
+            .min_by_key(|&(b, s)| b * s)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BuildInfo {
+    pub model: ModelGeometry,
+    pub lora: LoraGeometry,
+    pub buckets: BucketTable,
+    pub seed: u64,
+    pub sgmv_tile_rows: usize,
+}
+
+/// The whole manifest. `entries` preserves file order (= compile order).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format_version: u64,
+    pub build: BuildInfo,
+    pub entries: Vec<(String, EntrySpec)>,
+    pub weights: Vec<WeightRecord>,
+    pub weights_file: String,
+}
+
+fn pair_list(v: &Json) -> Result<Vec<(usize, usize)>> {
+    v.as_arr()?
+        .iter()
+        .map(|p| {
+            let xs = p.usize_vec()?;
+            if xs.len() != 2 {
+                bail!("expected [batch, seq] pair");
+            }
+            Ok((xs[0], xs[1]))
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        let v = json::parse(&text).context("parsing manifest.json")?;
+
+        let build = v.req("build")?;
+        let m = build.req("model")?;
+        let model = ModelGeometry {
+            vocab_size: m.req("vocab_size")?.as_usize()?,
+            hidden_size: m.req("hidden_size")?.as_usize()?,
+            intermediate_size: m.req("intermediate_size")?.as_usize()?,
+            num_layers: m.req("num_layers")?.as_usize()?,
+            num_heads: m.req("num_heads")?.as_usize()?,
+            num_kv_heads: m.req("num_kv_heads")?.as_usize()?,
+            head_dim: m.req("head_dim")?.as_usize()?,
+            rope_theta: m.req("rope_theta")?.as_f64()?,
+            rms_eps: m.req("rms_eps")?.as_f64()?,
+            max_cache_len: m.req("max_cache_len")?.as_usize()?,
+            q_dim: m.req("q_dim")?.as_usize()?,
+            kv_dim: m.req("kv_dim")?.as_usize()?,
+        };
+        let l = build.req("lora")?;
+        let lora = LoraGeometry {
+            max_adapters: l.req("max_adapters")?.as_usize()?,
+            rank: l.req("rank")?.as_usize()?,
+            alpha: l.req("alpha")?.as_f64()?,
+            dropout: l.req("dropout")?.as_f64()?,
+            targets: l
+                .req("targets")?
+                .as_arr()?
+                .iter()
+                .map(|t| Ok(t.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?,
+            scaling: l.req("scaling")?.as_f64()?,
+        };
+        let b = build.req("buckets")?;
+        let unified = b
+            .req("unified")?
+            .as_arr()?
+            .iter()
+            .map(|u| {
+                Ok(UnifiedShape {
+                    ft_batch: u.req("ft_batch")?.as_usize()?,
+                    ft_seq: u.req("ft_seq")?.as_usize()?,
+                    pf_batch: u.req("pf_batch")?.as_usize()?,
+                    pf_seq: u.req("pf_seq")?.as_usize()?,
+                    dec_batch: u.req("dec_batch")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let buckets = BucketTable {
+            prefill: pair_list(b.req("prefill")?)?,
+            decode: b.req("decode")?.usize_vec()?,
+            train: pair_list(b.req("train")?)?,
+            unified,
+        };
+        let build_info = BuildInfo {
+            model,
+            lora,
+            buckets,
+            seed: build.req("seed")?.as_u64()?,
+            sgmv_tile_rows: build.req("sgmv_tile_rows")?.as_usize()?,
+        };
+
+        let mut entries = Vec::new();
+        for (name, e) in v.req("entries")?.as_obj()? {
+            let inputs = e
+                .req("inputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = e
+                .req("outputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            entries.push((
+                name.clone(),
+                EntrySpec { file: e.req("file")?.as_str()?.to_string(), inputs, outputs },
+            ));
+        }
+
+        let weights = v
+            .req("weights")?
+            .as_arr()?
+            .iter()
+            .map(|w| {
+                Ok(WeightRecord {
+                    name: w.req("name")?.as_str()?.to_string(),
+                    offset: w.req("offset")?.as_usize()?,
+                    shape: w.req("shape")?.usize_vec()?,
+                    dtype: w.req("dtype")?.as_str()?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Manifest {
+            format_version: v.req("format_version")?.as_u64()?,
+            build: build_info,
+            entries,
+            weights,
+            weights_file: v.req("weights_file")?.as_str()?.to_string(),
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&EntrySpec> {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, e)| e)
+    }
+
+    pub fn entry_names(&self) -> impl Iterator<Item = &str> {
+        self.entries.iter().map(|(n, _)| n.as_str())
+    }
+
+    pub fn weight(&self, name: &str) -> Option<&WeightRecord> {
+        self.weights.iter().find(|w| w.name == name)
+    }
+
+    /// Names of the flat base-parameter inputs, in AOT argument order.
+    pub fn base_param_names(&self) -> Vec<String> {
+        let mut out = vec!["base.embed".to_string()];
+        for li in 0..self.build.model.num_layers {
+            for w in ["wq", "wk", "wv", "wo", "wgate", "wup", "wdown", "ln1", "ln2"] {
+                out.push(format!("base.layers.{li}.{w}"));
+            }
+        }
+        out.push("base.final_norm".to_string());
+        out.push("base.lm_head".to_string());
+        out
+    }
+
+    /// Names of the flat LoRA-bank inputs, in AOT argument order.
+    pub fn lora_param_names(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for li in 0..self.build.model.num_layers {
+            for m in &self.build.lora.targets {
+                out.push(format!("lora.layers.{li}.{m}.a"));
+                out.push(format!("lora.layers.{li}.{m}.b"));
+            }
+        }
+        out.push("lora.scaling".to_string());
+        out
+    }
+
+    /// Names of the gradient/optimizer-state arrays (a/b subset, no scaling).
+    pub fn grad_param_names(&self) -> Vec<String> {
+        self.lora_param_names()
+            .into_iter()
+            .filter(|n| !n.ends_with("scaling"))
+            .collect()
+    }
+}
+
+/// Missing-key errors should carry the manifest path context upward.
+pub fn manifest_error(path: &Path, e: anyhow::Error) -> anyhow::Error {
+    anyhow!("{}: {e}", path.display())
+}

@@ -1,0 +1,326 @@
+//! L3 runtime — load AOT artifacts and execute them on the PJRT CPU client.
+//!
+//! The interchange contract with `python/compile/aot.py`:
+//!
+//! * `artifacts/manifest.json` describes every entry point (argument order,
+//!   shapes, dtypes) plus model geometry and the weights index.
+//! * `artifacts/<entry>.hlo.txt` is HLO **text** (not a serialized proto —
+//!   xla_extension 0.5.1 rejects jax≥0.5's 64-bit instruction ids; the text
+//!   parser reassigns them).
+//! * `artifacts/weights.bin` holds base weights, the empty LoRA bank, the
+//!   four pretrained-adapter stand-ins, and the preloaded `bank.*` copies.
+//!
+//! Hot-path design: weights are uploaded to the device **once** as
+//! `PjRtBuffer`s and passed by reference to `execute_b`; per-step tensors
+//! (tokens, lens, caches) are the only host→device traffic. Optimizer
+//! outputs can be kept on device and re-pinned as the next step's inputs —
+//! parameter updates never round-trip through the host.
+
+mod manifest;
+mod tensor;
+
+pub use manifest::{
+    BucketTable, BuildInfo, EntrySpec, LoraGeometry, Manifest, ModelGeometry, TensorSpec,
+    UnifiedShape, WeightRecord,
+};
+pub use tensor::{DType, HostTensor};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+/// A compiled entry point plus its manifest spec.
+pub struct Entry {
+    pub spec: EntrySpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Timing of one `Runtime::execute` call, used for calibration and §Perf.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecTiming {
+    /// Host→device marshalling of the per-call inputs (µs).
+    pub upload_us: u64,
+    /// Device execution as observed from the host (µs).
+    pub execute_us: u64,
+    /// Device→host copy of the requested outputs (µs).
+    pub download_us: u64,
+}
+
+impl ExecTiming {
+    pub fn total_us(&self) -> u64 {
+        self.upload_us + self.execute_us + self.download_us
+    }
+}
+
+/// One argument to [`Runtime::execute`].
+pub enum Arg<'a> {
+    /// Reference a device buffer previously stored with `pin`/`pin_buffer`.
+    Pinned(&'a str),
+    /// Upload this host tensor for the call.
+    Host(&'a HostTensor),
+}
+
+enum ArgSlot {
+    Pinned(String),
+    Uploaded(usize),
+}
+
+/// Outputs of one execution: host tensors plus any kept-on-device buffers.
+pub struct ExecOutputs {
+    pub host: HashMap<String, HostTensor>,
+    pub device: HashMap<String, xla::PjRtBuffer>,
+}
+
+impl ExecOutputs {
+    pub fn take(&mut self, name: &str) -> Result<HostTensor> {
+        self.host.remove(name).ok_or_else(|| {
+            anyhow!("output {name} missing (host outputs: {:?})", self.host.keys().collect::<Vec<_>>())
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&HostTensor> {
+        self.host.get(name).ok_or_else(|| anyhow!("output {name} missing"))
+    }
+
+    pub fn take_device(&mut self, name: &str) -> Result<xla::PjRtBuffer> {
+        self.device
+            .remove(name)
+            .ok_or_else(|| anyhow!("device output {name} missing"))
+    }
+}
+
+/// The PJRT runtime: one compiled executable per manifest entry.
+pub struct Runtime {
+    pub manifest: Manifest,
+    pub artifacts_dir: PathBuf,
+    client: xla::PjRtClient,
+    entries: HashMap<String, Entry>,
+    /// Device-resident persistent inputs, keyed by weight name. Uploaded
+    /// once (or when an adapter is hot-swapped) and reused every call.
+    resident: HashMap<String, xla::PjRtBuffer>,
+    /// Cumulative entry compile time — reported by the Table-2 loading bench.
+    pub compile_seconds: f64,
+}
+
+impl Runtime {
+    /// Load the manifest and compile the entries passing `entry_filter`.
+    ///
+    /// Lazy/per-role loading keeps Table-2 "time to load" honest: an
+    /// inference-only deployment never compiles the training entries.
+    pub fn load_filtered(
+        artifacts_dir: impl AsRef<Path>,
+        entry_filter: impl Fn(&str) -> bool,
+    ) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))
+            .context("loading manifest.json (run `make artifacts` first)")?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+
+        let mut rt = Self {
+            manifest,
+            artifacts_dir: dir,
+            client,
+            entries: HashMap::new(),
+            resident: HashMap::new(),
+            compile_seconds: 0.0,
+        };
+        let names: Vec<String> = rt.manifest.entry_names().map(String::from).collect();
+        for name in names {
+            if entry_filter(&name) {
+                rt.compile_entry(&name)?;
+            }
+        }
+        Ok(rt)
+    }
+
+    /// Load and compile every entry.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        Self::load_filtered(artifacts_dir, |_| true)
+    }
+
+    /// Compile one entry (idempotent). Returns the compile time in seconds.
+    pub fn compile_entry(&mut self, name: &str) -> Result<f64> {
+        if self.entries.contains_key(name) {
+            return Ok(0.0);
+        }
+        let spec = self
+            .manifest
+            .entry(name)
+            .ok_or_else(|| anyhow!("manifest has no entry {name}"))?
+            .clone();
+        let t0 = Instant::now();
+        let path = self.artifacts_dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.compile_seconds += dt;
+        self.entries.insert(name.to_string(), Entry { spec, exe });
+        Ok(dt)
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.entries.get(name).ok_or_else(|| {
+            anyhow!("entry {name} not loaded (compiled: {:?})", self.entries.keys().collect::<Vec<_>>())
+        })
+    }
+
+    pub fn has_entry(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+
+    pub fn entry_names(&self) -> impl Iterator<Item = &String> {
+        self.entries.keys()
+    }
+
+    /// Upload a tensor to the device and pin it under `key` for reuse.
+    pub fn pin(&mut self, key: &str, tensor: &HostTensor) -> Result<()> {
+        let buf = tensor.to_buffer(&self.client)?;
+        self.resident.insert(key.to_string(), buf);
+        Ok(())
+    }
+
+    /// Replace a pinned buffer with an already-device-resident one (e.g. an
+    /// optimizer-step output) — the zero-copy parameter-update path.
+    pub fn pin_buffer(&mut self, key: &str, buf: xla::PjRtBuffer) {
+        self.resident.insert(key.to_string(), buf);
+    }
+
+    pub fn is_pinned(&self, key: &str) -> bool {
+        self.resident.contains_key(key)
+    }
+
+    pub fn unpin(&mut self, key: &str) {
+        self.resident.remove(key);
+    }
+
+    /// Download a pinned buffer back to the host (adapter save path).
+    pub fn pinned_to_host(&self, key: &str, spec: &TensorSpec) -> Result<HostTensor> {
+        let buf = self
+            .resident
+            .get(key)
+            .ok_or_else(|| anyhow!("pinned buffer {key} missing"))?;
+        let lit = buf.to_literal_sync().map_err(|e| anyhow!("download {key}: {e:?}"))?;
+        HostTensor::from_literal(&lit, spec)
+    }
+
+    /// Execute an entry. Arguments are pinned device buffers or host tensors
+    /// uploaded for this call. Outputs come back as host tensors unless
+    /// listed in `keep_on_device` (those stay as buffers, for chaining).
+    pub fn execute(
+        &mut self,
+        entry_name: &str,
+        args: &[Arg<'_>],
+        keep_on_device: &[&str],
+    ) -> Result<(ExecOutputs, ExecTiming)> {
+        let mut timing = ExecTiming::default();
+        let entry = self
+            .entries
+            .get(entry_name)
+            .ok_or_else(|| anyhow!("entry {entry_name} not loaded"))?;
+        if args.len() != entry.spec.inputs.len() {
+            return Err(anyhow!(
+                "{entry_name}: got {} args, manifest wants {}",
+                args.len(),
+                entry.spec.inputs.len()
+            ));
+        }
+
+        // Marshal: upload host tensors, reference pinned buffers.
+        let t0 = Instant::now();
+        let mut uploaded: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut order: Vec<ArgSlot> = Vec::with_capacity(args.len());
+        for (i, a) in args.iter().enumerate() {
+            match a {
+                Arg::Pinned(key) => {
+                    if !self.resident.contains_key(*key) {
+                        return Err(anyhow!("{entry_name} arg {i}: pinned buffer {key} missing"));
+                    }
+                    order.push(ArgSlot::Pinned((*key).to_string()));
+                }
+                Arg::Host(t) => {
+                    let spec = &entry.spec.inputs[i];
+                    if t.shape != spec.shape || t.dtype != spec.dtype {
+                        return Err(anyhow!(
+                            "{entry_name} arg {i} ({}): got {:?} {:?}, want {:?} {:?}",
+                            spec.name, t.shape, t.dtype, spec.shape, spec.dtype
+                        ));
+                    }
+                    let buf = t.to_buffer(&self.client)?;
+                    order.push(ArgSlot::Uploaded(uploaded.len()));
+                    uploaded.push(buf);
+                }
+            }
+        }
+        let refs: Vec<&xla::PjRtBuffer> = order
+            .iter()
+            .map(|s| match s {
+                ArgSlot::Pinned(k) => &self.resident[k],
+                ArgSlot::Uploaded(i) => &uploaded[*i],
+            })
+            .collect();
+        timing.upload_us = t0.elapsed().as_micros() as u64;
+
+        // Execute on the device.
+        let t1 = Instant::now();
+        let mut results = entry
+            .exe
+            .execute_b(&refs)
+            .map_err(|e| anyhow!("executing {entry_name}: {e:?}"))?;
+        timing.execute_us = t1.elapsed().as_micros() as u64;
+
+        // Unpack. jax lowers with `return_tuple=True`, so PJRT hands back a
+        // single tuple buffer; download it and split into the named outputs.
+        let t2 = Instant::now();
+        let mut bufs = results.pop().ok_or_else(|| anyhow!("{entry_name}: empty result"))?;
+        let root = if bufs.len() == 1 {
+            bufs.pop().unwrap()
+        } else {
+            return Err(anyhow!("{entry_name}: expected 1 tuple result, got {}", bufs.len()));
+        };
+        let mut tuple = root
+            .to_literal_sync()
+            .map_err(|e| anyhow!("download result tuple: {e:?}"))?;
+        let parts = tuple
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decompose result tuple: {e:?}"))?;
+        if parts.len() != entry.spec.outputs.len() {
+            return Err(anyhow!(
+                "{entry_name}: result arity {} != manifest outputs {}",
+                parts.len(),
+                entry.spec.outputs.len()
+            ));
+        }
+
+        let mut host = HashMap::new();
+        let mut device = HashMap::new();
+        for (spec, lit) in entry.spec.outputs.iter().zip(parts) {
+            if keep_on_device.contains(&spec.name.as_str()) {
+                // Tuple results arrive on the host; re-upload to keep a
+                // device-resident copy for chaining into the next call.
+                // NB: must go through the typed host-buffer path, which is
+                // a synchronous copy (kImmutableOnlyDuringCall); PJRT's
+                // BufferFromHostLiteral is asynchronous and would read the
+                // literal after we drop it (observed SIGSEGV).
+                let t = HostTensor::from_literal(&lit, spec)?;
+                let buf = t.to_buffer(&self.client)?;
+                device.insert(spec.name.clone(), buf);
+            } else {
+                host.insert(spec.name.clone(), HostTensor::from_literal(&lit, spec)?);
+            }
+        }
+        timing.download_us = t2.elapsed().as_micros() as u64;
+
+        Ok((ExecOutputs { host, device }, timing))
+    }
+}

@@ -1,0 +1,211 @@
+//! Host-side tensors: the lingua franca between the coordinator and PJRT.
+
+use anyhow::{anyhow, Result};
+
+use super::TensorSpec;
+
+/// Element type. Only the two dtypes the AOT contract uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+
+    pub(crate) fn element_type(self) -> xla::ElementType {
+        match self {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+        }
+    }
+}
+
+/// A dense host tensor (row-major).
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    data: Data,
+}
+
+#[derive(Debug, Clone)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn f32(shape: impl Into<Vec<usize>>, data: Vec<f32>) -> Result<Self> {
+        let shape = shape.into();
+        let n: usize = shape.iter().product::<usize>().max(1);
+        if data.len() != n {
+            return Err(anyhow!("f32 tensor: {} elems for shape {:?}", data.len(), shape));
+        }
+        Ok(Self { dtype: DType::F32, shape, data: Data::F32(data) })
+    }
+
+    pub fn i32(shape: impl Into<Vec<usize>>, data: Vec<i32>) -> Result<Self> {
+        let shape = shape.into();
+        let n: usize = shape.iter().product::<usize>().max(1);
+        if data.len() != n {
+            return Err(anyhow!("i32 tensor: {} elems for shape {:?}", data.len(), shape));
+        }
+        Ok(Self { dtype: DType::I32, shape, data: Data::I32(data) })
+    }
+
+    pub fn zeros(spec: &TensorSpec) -> Self {
+        let n = spec.element_count();
+        match spec.dtype {
+            DType::F32 => Self {
+                dtype: DType::F32,
+                shape: spec.shape.clone(),
+                data: Data::F32(vec![0.0; n]),
+            },
+            DType::I32 => Self {
+                dtype: DType::I32,
+                shape: spec.shape.clone(),
+                data: Data::I32(vec![0; n]),
+            },
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Self { dtype: DType::F32, shape: vec![], data: Data::F32(vec![v]) }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Self { dtype: DType::I32, shape: vec![], data: Data::I32(vec![v]) }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            Data::I32(_) => Err(anyhow!("tensor is i32, not f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            Data::F32(_) => Err(anyhow!("tensor is f32, not i32")),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Data::F32(v) => Ok(v),
+            Data::I32(_) => Err(anyhow!("tensor is i32, not f32")),
+        }
+    }
+
+    pub fn as_i32_mut(&mut self) -> Result<&mut [i32]> {
+        match &mut self.data {
+            Data::I32(v) => Ok(v),
+            Data::F32(_) => Err(anyhow!("tensor is f32, not i32")),
+        }
+    }
+
+    fn raw_bytes(&self) -> &[u8] {
+        match &self.data {
+            Data::F32(v) => bytemuck_cast(v),
+            Data::I32(v) => bytemuck_cast_i32(v),
+        }
+    }
+
+    /// Convert to an XLA literal (one copy).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        xla::Literal::create_from_shape_and_untyped_data(
+            self.dtype.element_type(),
+            &self.shape,
+            self.raw_bytes(),
+        )
+        .map_err(|e| anyhow!("literal create: {e:?}"))
+    }
+
+    /// Upload straight to a device buffer (skips the literal copy).
+    ///
+    /// NB: goes through the *typed* `buffer_from_host_buffer::<T>` — the
+    /// crate's raw-bytes variant passes the ElementType ordinal where the C
+    /// API expects a PrimitiveType, silently producing an F16 buffer for
+    /// F32 data.
+    pub fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        match &self.data {
+            Data::F32(v) => client
+                .buffer_from_host_buffer::<f32>(v, &self.shape, None)
+                .map_err(|e| anyhow!("buffer upload: {e:?}")),
+            Data::I32(v) => client
+                .buffer_from_host_buffer::<i32>(v, &self.shape, None)
+                .map_err(|e| anyhow!("buffer upload: {e:?}")),
+        }
+    }
+
+    /// Copy an XLA literal back to the host, checked against `spec`.
+    pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Self> {
+        let n = spec.element_count();
+        match spec.dtype {
+            DType::F32 => {
+                let mut v = vec![0f32; n];
+                lit.copy_raw_to(&mut v).map_err(|e| anyhow!("literal read: {e:?}"))?;
+                HostTensor::f32(spec.shape.clone(), v)
+            }
+            DType::I32 => {
+                let mut v = vec![0i32; n];
+                lit.copy_raw_to(&mut v).map_err(|e| anyhow!("literal read: {e:?}"))?;
+                HostTensor::i32(spec.shape.clone(), v)
+            }
+        }
+    }
+}
+
+fn bytemuck_cast(v: &[f32]) -> &[u8] {
+    // f32 slices are always validly viewable as bytes.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn bytemuck_cast_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(HostTensor::f32(vec![2, 2], vec![0.0; 3]).is_err());
+        assert!(HostTensor::i32(vec![4], vec![1, 2, 3, 4]).is_ok());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = HostTensor::scalar_f32(2.5);
+        assert_eq!(t.element_count(), 1);
+        assert_eq!(t.as_f32().unwrap(), &[2.5]);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::f32(vec![2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        let lit = t.to_literal().unwrap();
+        let spec = TensorSpec { name: "x".into(), shape: vec![2, 3], dtype: DType::F32 };
+        let back = HostTensor::from_literal(&lit, &spec).unwrap();
+        assert_eq!(back.as_f32().unwrap(), t.as_f32().unwrap());
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = HostTensor::i32(vec![4], vec![7, -1, 0, 42]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let spec = TensorSpec { name: "x".into(), shape: vec![4], dtype: DType::I32 };
+        let back = HostTensor::from_literal(&lit, &spec).unwrap();
+        assert_eq!(back.as_i32().unwrap(), t.as_i32().unwrap());
+    }
+}

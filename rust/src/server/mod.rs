@@ -1,0 +1,221 @@
+//! JSON-lines TCP frontend: submit inference requests to a live coordinator
+//! and receive completions. Thread-per-connection over std::net (the
+//! offline environment has no tokio; the engine loop is single-threaded
+//! over the backend anyway, so async buys nothing here).
+//!
+//! Wire protocol (one JSON object per line):
+//!   -> {"op":"generate","prompt":"...","model":"vm0","max_new_tokens":32}
+//!   <- {"id":7,"text":"...","tokens":[...],"latency_s":0.42}
+//!   -> {"op":"stats"}
+//!   <- {"queued":0,"active":1,...}
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::coordinator::InferenceRequest;
+use crate::util::json::{self, Json};
+
+/// A parsed client message.
+#[derive(Debug)]
+pub enum ClientMsg {
+    Generate { prompt: String, model: Option<String>, max_new_tokens: usize },
+    Stats,
+}
+
+impl ClientMsg {
+    pub fn parse(line: &str) -> Result<Self> {
+        let v = json::parse(line)?;
+        match v.req("op")?.as_str()? {
+            "generate" => Ok(ClientMsg::Generate {
+                prompt: v.req("prompt")?.as_str()?.to_string(),
+                model: v.get("model").and_then(|m| m.as_str().ok()).map(String::from),
+                max_new_tokens: v
+                    .get("max_new_tokens")
+                    .and_then(|n| n.as_usize().ok())
+                    .unwrap_or(32),
+            }),
+            "stats" => Ok(ClientMsg::Stats),
+            other => anyhow::bail!("unknown op '{other}'"),
+        }
+    }
+}
+
+/// Serving statistics exposed over the wire.
+#[derive(Debug, Default, Clone)]
+pub struct Stats {
+    pub queued: usize,
+    pub active: usize,
+    pub completed: usize,
+    pub decode_tokens: u64,
+    pub finetune_tokens: u64,
+}
+
+impl Stats {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("queued", Json::Num(self.queued as f64)),
+            ("active", Json::Num(self.active as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("decode_tokens", Json::Num(self.decode_tokens as f64)),
+            ("finetune_tokens", Json::Num(self.finetune_tokens as f64)),
+        ])
+    }
+}
+
+/// A request handed from the frontend to the engine loop, with the channel
+/// its completion is delivered on.
+pub struct FrontendJob {
+    pub request: InferenceRequest,
+    pub reply: Sender<(Vec<i32>, f64)>,
+}
+
+/// Shared state between connection threads and the engine loop.
+pub struct Frontend {
+    pub jobs_tx: Sender<FrontendJob>,
+    pub stats: Arc<Mutex<Stats>>,
+    next_id: AtomicU64,
+}
+
+impl Frontend {
+    pub fn new() -> (Arc<Self>, Receiver<FrontendJob>) {
+        let (tx, rx) = channel();
+        (
+            Arc::new(Self {
+                jobs_tx: tx,
+                stats: Arc::new(Mutex::new(Stats::default())),
+                next_id: AtomicU64::new(1),
+            }),
+            rx,
+        )
+    }
+
+    pub fn next_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+}
+
+/// Handle one connection (blocking; one thread per connection).
+fn handle_conn(
+    stream: TcpStream,
+    fe: Arc<Frontend>,
+    encode: Arc<dyn Fn(&str) -> Vec<i32> + Send + Sync>,
+    decode: Arc<dyn Fn(&[i32]) -> String + Send + Sync>,
+    resolve: Arc<dyn Fn(Option<&str>) -> i32 + Send + Sync>,
+) {
+    let reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut writer = stream;
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match ClientMsg::parse(&line) {
+            Ok(ClientMsg::Generate { prompt, model, max_new_tokens }) => {
+                let id = fe.next_id();
+                let tokens = encode(&prompt);
+                let adapter = resolve(model.as_deref());
+                let (tx, rx) = channel();
+                let job = FrontendJob {
+                    request: InferenceRequest {
+                        id,
+                        adapter,
+                        prompt: tokens,
+                        max_new_tokens,
+                        eos_token: None,
+                        arrival_s: 0.0, // stamped by the engine loop
+                    },
+                    reply: tx,
+                };
+                if fe.jobs_tx.send(job).is_err() {
+                    break;
+                }
+                match rx.recv() {
+                    Ok((out_tokens, latency_s)) => Json::obj(vec![
+                        ("id", Json::Num(id as f64)),
+                        ("text", Json::Str(decode(&out_tokens))),
+                        (
+                            "tokens",
+                            Json::Arr(out_tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+                        ),
+                        ("latency_s", Json::Num(latency_s)),
+                    ])
+                    .to_string(),
+                    Err(_) => r#"{"error":"engine dropped request"}"#.to_string(),
+                }
+            }
+            Ok(ClientMsg::Stats) => {
+                let s = fe.stats.lock().map(|s| s.clone()).unwrap_or_default();
+                s.to_json().to_string()
+            }
+            Err(e) => Json::obj(vec![("error", Json::Str(format!("bad request: {e}")))]).to_string(),
+        };
+        if writer.write_all(reply.as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
+            break;
+        }
+    }
+}
+
+/// Accept loop: spawns a thread per connection. Blocks forever.
+pub fn serve_blocking(
+    listener: TcpListener,
+    frontend: Arc<Frontend>,
+    encode: impl Fn(&str) -> Vec<i32> + Send + Sync + 'static,
+    decode: impl Fn(&[i32]) -> String + Send + Sync + 'static,
+    resolve_model: impl Fn(Option<&str>) -> i32 + Send + Sync + 'static,
+) -> Result<()> {
+    let encode: Arc<dyn Fn(&str) -> Vec<i32> + Send + Sync> = Arc::new(encode);
+    let decode: Arc<dyn Fn(&[i32]) -> String + Send + Sync> = Arc::new(decode);
+    let resolve: Arc<dyn Fn(Option<&str>) -> i32 + Send + Sync> = Arc::new(resolve_model);
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let (fe, e, d, r) = (frontend.clone(), encode.clone(), decode.clone(), resolve.clone());
+        std::thread::spawn(move || handle_conn(stream, fe, e, d, r));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_msg_parses() {
+        let m = ClientMsg::parse(r#"{"op":"generate","prompt":"hi","max_new_tokens":4}"#).unwrap();
+        assert!(matches!(m, ClientMsg::Generate { max_new_tokens: 4, .. }));
+        let s = ClientMsg::parse(r#"{"op":"stats"}"#).unwrap();
+        assert!(matches!(s, ClientMsg::Stats));
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let m = ClientMsg::parse(r#"{"op":"generate","prompt":"hi"}"#).unwrap();
+        match m {
+            ClientMsg::Generate { max_new_tokens, model, .. } => {
+                assert_eq!(max_new_tokens, 32);
+                assert!(model.is_none());
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn bad_msg_is_error_not_panic() {
+        assert!(ClientMsg::parse(r#"{"op":"nope"}"#).is_err());
+        assert!(ClientMsg::parse("not json").is_err());
+    }
+
+    #[test]
+    fn stats_serialize() {
+        let s = Stats { queued: 1, active: 2, completed: 3, decode_tokens: 4, finetune_tokens: 5 };
+        let j = s.to_json().to_string();
+        assert!(j.contains("\"queued\":1") && j.contains("\"finetune_tokens\":5"));
+    }
+}

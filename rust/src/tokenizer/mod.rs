@@ -1,0 +1,175 @@
+//! Byte-level tokenizer with a trained merge table — the real-text path for
+//! examples (the AOT model's 512-token vocabulary = 256 byte tokens + 255
+//! learned merges + EOS).
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+/// Byte-pair tokenizer over a fixed vocabulary.
+pub struct Tokenizer {
+    /// merge rank: (left, right) -> merged token id.
+    merges: HashMap<(i32, i32), i32>,
+    /// token id -> byte string.
+    vocab: Vec<Vec<u8>>,
+    pub eos: i32,
+}
+
+impl Tokenizer {
+    /// Train merges greedily on a corpus until `vocab_size` is reached.
+    /// (Deterministic: ties break on the lexicographically first pair.)
+    pub fn train(corpus: &str, vocab_size: usize) -> Self {
+        let mut vocab: Vec<Vec<u8>> = (0..=255u8).map(|b| vec![b]).collect();
+        let mut merges = HashMap::new();
+        let mut seqs: Vec<Vec<i32>> = corpus
+            .split_whitespace()
+            .map(|w| w.bytes().map(|b| b as i32).collect())
+            .collect();
+
+        while vocab.len() + 1 < vocab_size {
+            // Count adjacent pairs.
+            let mut counts: HashMap<(i32, i32), usize> = HashMap::new();
+            for s in &seqs {
+                for w in s.windows(2) {
+                    *counts.entry((w[0], w[1])).or_default() += 1;
+                }
+            }
+            let Some((&pair, &n)) = counts
+                .iter()
+                .max_by_key(|(p, n)| (**n, std::cmp::Reverse(**p)))
+            else {
+                break;
+            };
+            if n < 2 {
+                break;
+            }
+            let new_id = vocab.len() as i32;
+            let mut merged = vocab[pair.0 as usize].clone();
+            merged.extend_from_slice(&vocab[pair.1 as usize]);
+            vocab.push(merged);
+            merges.insert(pair, new_id);
+            // Apply the merge everywhere.
+            for s in seqs.iter_mut() {
+                let mut out = Vec::with_capacity(s.len());
+                let mut i = 0;
+                while i < s.len() {
+                    if i + 1 < s.len() && (s[i], s[i + 1]) == pair {
+                        out.push(new_id);
+                        i += 2;
+                    } else {
+                        out.push(s[i]);
+                        i += 1;
+                    }
+                }
+                *s = out;
+            }
+        }
+        let eos = vocab.len() as i32;
+        vocab.push(b"<eos>".to_vec());
+        Self { merges, vocab, eos }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab.len()
+    }
+
+    /// Encode text (repeatedly applying merges until fixpoint).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = Vec::new();
+        for word in text.split_inclusive(' ') {
+            let mut s: Vec<i32> = word.bytes().map(|b| b as i32).collect();
+            loop {
+                let mut best: Option<(usize, i32)> = None;
+                for (i, w) in s.windows(2).enumerate() {
+                    if let Some(&id) = self.merges.get(&(w[0], w[1])) {
+                        if best.map(|(_, b)| id < b).unwrap_or(true) {
+                            best = Some((i, id));
+                        }
+                    }
+                }
+                match best {
+                    Some((i, id)) => {
+                        s[i] = id;
+                        s.remove(i + 1);
+                    }
+                    None => break,
+                }
+            }
+            out.extend(s);
+        }
+        out
+    }
+
+    pub fn decode(&self, tokens: &[i32]) -> Result<String> {
+        let mut bytes = Vec::new();
+        for &t in tokens {
+            if t == self.eos {
+                break;
+            }
+            if let Some(v) = self.vocab.get(t as usize) {
+                bytes.extend_from_slice(v);
+            }
+        }
+        Ok(String::from_utf8_lossy(&bytes).into_owned())
+    }
+}
+
+/// A small built-in corpus so examples produce real token streams without
+/// external downloads (the instruction-following flavor mirrors Alpaca).
+pub const TINY_CORPUS: &str = "\
+Below is an instruction that describes a task. Write a response that \
+appropriately completes the request. Instruction: Give three tips for \
+staying healthy. Response: Eat a balanced diet and make sure to include \
+plenty of fruits and vegetables. Exercise regularly to keep your body \
+active and strong. Get enough sleep and maintain a consistent sleep \
+schedule. Instruction: What are the three primary colors? Response: The \
+three primary colors are red, blue, and yellow. Instruction: Describe the \
+structure of an atom. Response: An atom is made up of a nucleus, which \
+contains protons and neutrons, surrounded by electrons that travel in \
+orbits around the nucleus. Instruction: How can we reduce air pollution? \
+Response: There are several ways to reduce air pollution, such as \
+shifting to renewable energy sources, encouraging the use of public \
+transport, and planting more trees. Instruction: Solve the math problem. \
+Natalia sold clips to 48 of her friends in April, and then she sold half \
+as many clips in May. How many clips did Natalia sell altogether? \
+Response: Natalia sold 48 clips in April and 24 clips in May, so she sold \
+72 clips altogether. The answer is 72.";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_on_corpus_words() {
+        let tok = Tokenizer::train(TINY_CORPUS, 512);
+        assert!(tok.vocab_size() <= 512);
+        for text in ["instruction", "the three primary colors", "Natalia sold 48 clips"] {
+            let ids = tok.encode(text);
+            assert_eq!(tok.decode(&ids).unwrap(), text);
+        }
+    }
+
+    #[test]
+    fn merges_compress() {
+        let tok = Tokenizer::train(TINY_CORPUS, 512);
+        let text = "instruction response instruction response";
+        let ids = tok.encode(text);
+        assert!(ids.len() < text.len(), "{} !< {}", ids.len(), text.len());
+    }
+
+    #[test]
+    fn all_ids_in_vocab_range() {
+        let tok = Tokenizer::train(TINY_CORPUS, 512);
+        let ids = tok.encode(TINY_CORPUS);
+        assert!(ids.iter().all(|&t| (t as usize) < tok.vocab_size()));
+    }
+
+    #[test]
+    fn decode_stops_at_eos() {
+        let tok = Tokenizer::train(TINY_CORPUS, 512);
+        let mut ids = tok.encode("hello");
+        ids.push(tok.eos);
+        ids.extend(tok.encode("world"));
+        assert_eq!(tok.decode(&ids).unwrap(), "hello");
+    }
+}

@@ -1,0 +1,88 @@
+//! Micro-benchmark harness (criterion is unavailable offline): warmup,
+//! timed iterations, mean/p50/p99, throughput, and a stable one-line
+//! report format consumed by EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub min_us: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "bench {:<42} iters={:<6} mean={:>10.1}µs p50={:>10.1}µs p99={:>10.1}µs min={:>10.1}µs",
+            self.name, self.iters, self.mean_us, self.p50_us, self.p99_us, self.min_us
+        );
+    }
+
+    pub fn per_sec(&self) -> f64 {
+        1e6 / self.mean_us.max(1e-9)
+    }
+}
+
+/// Run `f` for `warmup` unrecorded + `iters` recorded iterations.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    summarize(name, samples)
+}
+
+/// Time-budgeted variant: run until `budget_s` elapses (min 10 iters).
+pub fn bench_for(name: &str, budget_s: f64, mut f: impl FnMut()) -> BenchResult {
+    // Warmup once.
+    f();
+    let start = Instant::now();
+    let mut samples = Vec::new();
+    while start.elapsed().as_secs_f64() < budget_s || samples.len() < 10 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+        if samples.len() > 100_000 {
+            break;
+        }
+    }
+    summarize(name, samples)
+}
+
+fn summarize(name: &str, mut samples: Vec<f64>) -> BenchResult {
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let n = samples.len().max(1);
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let q = |p: f64| samples[((p * (n - 1) as f64) as usize).min(n - 1)];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_us: mean,
+        p50_us: q(0.5),
+        p99_us: q(0.99),
+        min_us: samples.first().copied().unwrap_or(0.0),
+    };
+    r.print();
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_ordered() {
+        let r = bench("noop", 2, 50, || { std::hint::black_box(1 + 1); });
+        assert!(r.min_us <= r.p50_us && r.p50_us <= r.p99_us);
+        assert_eq!(r.iters, 50);
+    }
+}

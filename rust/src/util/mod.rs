@@ -1,0 +1,9 @@
+//! In-tree substrates for the offline environment (no serde/rand/clap/
+//! criterion/proptest available): JSON codec, PRNG + distributions, CLI
+//! flag parsing, a micro-bench harness, and a property-test driver.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

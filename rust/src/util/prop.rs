@@ -1,0 +1,75 @@
+//! Property-test driver (proptest is unavailable offline): run a property
+//! over many seeded random cases; on failure, report the seed so the case
+//! replays deterministically, and shrink integer parameters greedily.
+
+use crate::util::rng::Rng;
+
+/// Run `prop(rng)` for `cases` seeds. `prop` returns Err(description) on a
+/// violated property. Panics with the failing seed (re-run with
+/// `replay(seed, prop)` to debug).
+pub fn check(name: &str, cases: usize, prop: impl Fn(&mut Rng) -> Result<(), String>) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::seed_from_u64(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing seed.
+pub fn replay(seed: u64, prop: impl Fn(&mut Rng) -> Result<(), String>) {
+    let mut rng = Rng::seed_from_u64(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("replay(seed {seed:#x}) failed: {msg}");
+    }
+}
+
+/// Greedy shrink over one usize parameter: find the smallest `n` in
+/// [lo, hi] for which `fails(n)` still holds (assumes monotonicity; a
+/// pragmatic shrinker, not a general one).
+pub fn shrink_usize(lo: usize, hi: usize, fails: impl Fn(usize) -> bool) -> Option<usize> {
+    if !fails(hi) {
+        return None;
+    }
+    let (mut lo, mut hi) = (lo, hi);
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if fails(mid) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    Some(hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_quiet() {
+        check("sum-commutes", 50, |rng| {
+            let a = rng.range(-100, 100);
+            let b = rng.range(-100, 100);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("addition does not commute?!".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always-fails")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrinker_finds_boundary() {
+        assert_eq!(shrink_usize(0, 100, |n| n >= 37), Some(37));
+        assert_eq!(shrink_usize(0, 100, |_| false), None);
+    }
+}

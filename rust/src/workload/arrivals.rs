@@ -1,0 +1,153 @@
+//! Arrival processes: Poisson (Figures 2/4) and phase schedules (Figure 5 /
+//! Table 7). The BurstGPT synthesizer lives in `burstgpt.rs`.
+
+use crate::util::rng::Rng;
+
+/// A stateful arrival-time generator.
+pub trait ArrivalProcess {
+    /// Next arrival time in seconds (monotone non-decreasing).
+    fn next_arrival(&mut self, rng: &mut Rng) -> f64;
+}
+
+/// Poisson arrivals at a constant rate (requests/second).
+#[derive(Debug, Clone)]
+pub struct PoissonArrivals {
+    rate: f64,
+    t: f64,
+}
+
+impl PoissonArrivals {
+    pub fn new(rate_rps: f64) -> Self {
+        assert!(rate_rps > 0.0);
+        Self { rate: rate_rps, t: 0.0 }
+    }
+}
+
+impl ArrivalProcess for PoissonArrivals {
+    fn next_arrival(&mut self, rng: &mut Rng) -> f64 {
+        self.t += rng.exp(self.rate);
+        self.t
+    }
+}
+
+/// One phase of the mutable-load schedule (Table 7 rows).
+#[derive(Debug, Clone, Copy)]
+pub struct MutablePhase {
+    pub start_s: f64,
+    pub duration_s: f64,
+    pub rate_rps: f64,
+    /// Adapter index this phase's requests target.
+    pub adapter: i32,
+    pub requests: usize,
+}
+
+/// Piecewise schedule: each phase emits its own Poisson stream within its
+/// window. Used as-is for Figure 5.
+#[derive(Debug, Clone)]
+pub struct ScheduleArrivals {
+    phases: Vec<MutablePhase>,
+    cursor: usize,
+    emitted_in_phase: usize,
+    t: f64,
+}
+
+impl ScheduleArrivals {
+    pub fn new(phases: Vec<MutablePhase>) -> Self {
+        let t = phases.first().map(|p| p.start_s).unwrap_or(0.0);
+        Self { phases, cursor: 0, emitted_in_phase: 0, t }
+    }
+
+    /// The phase the *next* arrival belongs to (for adapter routing).
+    pub fn current_adapter(&self) -> i32 {
+        self.phases
+            .get(self.cursor.min(self.phases.len().saturating_sub(1)))
+            .map(|p| p.adapter)
+            .unwrap_or(-1)
+    }
+
+    pub fn total_requests(&self) -> usize {
+        self.phases.iter().map(|p| p.requests).sum()
+    }
+}
+
+impl ArrivalProcess for ScheduleArrivals {
+    fn next_arrival(&mut self, rng: &mut Rng) -> f64 {
+        while self.cursor < self.phases.len() {
+            let p = self.phases[self.cursor];
+            if self.emitted_in_phase >= p.requests {
+                self.cursor += 1;
+                self.emitted_in_phase = 0;
+                if let Some(np) = self.phases.get(self.cursor) {
+                    self.t = self.t.max(np.start_s);
+                }
+                continue;
+            }
+            self.t = (self.t + rng.exp(p.rate_rps)).max(p.start_s);
+            self.emitted_in_phase += 1;
+            return self.t;
+        }
+        // Exhausted: keep returning increasing times.
+        self.t += 1.0;
+        self.t
+    }
+}
+
+/// Table 7 of the paper: the mutable unified-task schedule.
+pub fn table7_schedule() -> Vec<MutablePhase> {
+    vec![
+        MutablePhase { start_s: 0.0, duration_s: 120.0, rate_rps: 1.0, adapter: 0, requests: 120 },
+        MutablePhase { start_s: 120.0, duration_s: 60.0, rate_rps: 2.5, adapter: 1, requests: 150 },
+        MutablePhase { start_s: 180.0, duration_s: 120.0, rate_rps: 2.0, adapter: 2, requests: 240 },
+        MutablePhase { start_s: 300.0, duration_s: 120.0, rate_rps: 1.0, adapter: 3, requests: 120 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_is_respected() {
+        let mut p = PoissonArrivals::new(4.0);
+        let mut rng = Rng::seed_from_u64(0);
+        let mut last = 0.0;
+        let n = 4000;
+        for _ in 0..n {
+            let t = p.next_arrival(&mut rng);
+            assert!(t >= last);
+            last = t;
+        }
+        let rate = n as f64 / last;
+        assert!((3.5..4.5).contains(&rate), "rate {rate}");
+    }
+
+    #[test]
+    fn schedule_emits_phase_counts_in_windows() {
+        let mut s = ScheduleArrivals::new(table7_schedule());
+        let mut rng = Rng::seed_from_u64(1);
+        let total = s.total_requests();
+        let mut times = Vec::new();
+        for _ in 0..total {
+            times.push(s.next_arrival(&mut rng));
+        }
+        assert_eq!(times.len(), 630);
+        // Phase 2 requests land at/after its start.
+        assert!(times[120] >= 120.0);
+        for w in times.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+    }
+
+    #[test]
+    fn schedule_adapter_follows_phase() {
+        let mut s = ScheduleArrivals::new(table7_schedule());
+        let mut rng = Rng::seed_from_u64(2);
+        assert_eq!(s.current_adapter(), 0);
+        for _ in 0..120 {
+            s.next_arrival(&mut rng);
+        }
+        assert_eq!(s.current_adapter(), 0); // cursor advances on *next* call
+        s.next_arrival(&mut rng);
+        assert_eq!(s.current_adapter(), 1);
+    }
+}

@@ -1,0 +1,183 @@
+//! BurstGPT-style workload synthesizer (Figure 6 / Table 8).
+//!
+//! The paper slices the BurstGPT Azure-GPT trace into 20-minute windows and
+//! replays six of them (Table 8: per-slice request count, mean RPS, peak
+//! 2-second RPS). We cannot ship the proprietary trace, so we synthesize
+//! slices with the same statistics: a doubly-stochastic (Markov-modulated)
+//! Poisson process whose burst state reproduces the published mean *and*
+//! peak rates — bursts are what stress the capacity allocator, and the peak
+//! column is exactly the paper's "transient spikes exceeding RPS 10".
+
+use crate::util::rng::Rng;
+
+/// One Table-8 slice.
+#[derive(Debug, Clone, Copy)]
+pub struct BurstGptSlice {
+    pub label: &'static str,
+    pub requests: usize,
+    pub mean_rps: f64,
+    pub peak_rps: f64,
+}
+
+/// Table 8 of the paper, verbatim.
+pub const TABLE8_SLICES: [BurstGptSlice; 6] = [
+    BurstGptSlice { label: "Day29 13:00", requests: 676, mean_rps: 0.563, peak_rps: 1.5 },
+    BurstGptSlice { label: "Day29 15:00", requests: 2145, mean_rps: 1.788, peak_rps: 11.5 },
+    BurstGptSlice { label: "Day29 16:00", requests: 1465, mean_rps: 1.226, peak_rps: 7.0 },
+    BurstGptSlice { label: "Day33 13:40", requests: 2823, mean_rps: 2.354, peak_rps: 10.0 },
+    BurstGptSlice { label: "Day33 11:40", requests: 2360, mean_rps: 1.966, peak_rps: 12.0 },
+    BurstGptSlice { label: "Day33 11:00", requests: 1856, mean_rps: 1.547, peak_rps: 10.5 },
+];
+
+/// Markov-modulated Poisson synthesizer for one slice.
+#[derive(Debug, Clone)]
+pub struct BurstGptSynth {
+    slice: BurstGptSlice,
+    /// Probability of being in the burst state.
+    burst_prob: f64,
+    base_rate: f64,
+    burst_rate: f64,
+    /// Mean burst duration (seconds).
+    burst_len_s: f64,
+    t: f64,
+    in_burst_until: f64,
+    next_burst_at: f64,
+}
+
+impl BurstGptSynth {
+    pub fn new(slice: BurstGptSlice) -> Self {
+        // Choose base/burst rates so that:
+        //   mean = (1-p)*base + p*burst,   burst ≈ peak * 0.8 (peak is a
+        //   2-second max, the sustained burst rate sits slightly below it).
+        let burst_rate = (slice.peak_rps * 0.8).max(slice.mean_rps);
+        // Low-load slices (peak < 3 RPS) are flat in the trace: plain
+        // Poisson already reproduces their 2-second peaks.
+        let p = if burst_rate > slice.mean_rps && slice.peak_rps >= 3.0 {
+            // Keep ~15% of time bursty unless the slice is flat.
+            (0.15f64).min(slice.mean_rps / burst_rate)
+        } else {
+            0.0
+        };
+        let base_rate = if p < 1.0 {
+            ((slice.mean_rps - p * burst_rate) / (1.0 - p)).max(0.05)
+        } else {
+            slice.mean_rps
+        };
+        Self {
+            slice,
+            burst_prob: p,
+            base_rate,
+            burst_rate,
+            burst_len_s: 6.0,
+            t: 0.0,
+            in_burst_until: 0.0,
+            next_burst_at: 0.0,
+        }
+    }
+
+    pub fn slice(&self) -> &BurstGptSlice {
+        &self.slice
+    }
+
+    fn rate_at(&mut self, t: f64, rng: &mut Rng) -> f64 {
+        if t < self.in_burst_until {
+            return self.burst_rate;
+        }
+        if t >= self.next_burst_at {
+            // Schedule the next burst: exponential inter-burst gap sized so
+            // the long-run burst fraction is `burst_prob`.
+            if self.burst_prob > 0.0 {
+                let gap_mean = self.burst_len_s * (1.0 - self.burst_prob) / self.burst_prob;
+                let gap = rng.exp(1.0 / gap_mean.max(0.1));
+                self.in_burst_until = t + self.burst_len_s;
+                self.next_burst_at = self.in_burst_until + gap;
+                return self.burst_rate;
+            }
+        }
+        self.base_rate
+    }
+
+    /// Generate all arrivals for the slice (seconds from slice start).
+    pub fn arrivals(&mut self, rng: &mut Rng) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.slice.requests);
+        while out.len() < self.slice.requests {
+            let rate = self.rate_at(self.t, rng);
+            let dt = rng.exp(rate);
+            self.t += dt;
+            out.push(self.t);
+        }
+        out
+    }
+}
+
+/// Check of a generated arrival vector: (mean RPS, peak 2-second RPS).
+pub fn trace_stats(arrivals: &[f64]) -> (f64, f64) {
+    if arrivals.is_empty() {
+        return (0.0, 0.0);
+    }
+    let horizon = arrivals.last().unwrap().max(1e-9);
+    let mean = arrivals.len() as f64 / horizon;
+    let mut peak = 0usize;
+    let mut lo = 0usize;
+    for hi in 0..arrivals.len() {
+        while arrivals[hi] - arrivals[lo] > 2.0 {
+            lo += 1;
+        }
+        peak = peak.max(hi - lo + 1);
+    }
+    (mean, peak as f64 / 2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthesized_slices_match_table8_stats() {
+        let mut rng = Rng::seed_from_u64(42);
+        for slice in TABLE8_SLICES {
+            let mut synth = BurstGptSynth::new(slice);
+            let arr = synth.arrivals(&mut rng);
+            assert_eq!(arr.len(), slice.requests);
+            let (mean, peak) = trace_stats(&arr);
+            assert!(
+                (mean - slice.mean_rps).abs() / slice.mean_rps < 0.35,
+                "{}: mean {mean:.3} vs {}",
+                slice.label,
+                slice.mean_rps
+            );
+            // Peak must reach at least ~60% of the published peak (bursts
+            // exist) and not wildly exceed it.
+            // Sliding-window Poisson peaks have heavy tails; allow slack
+            // above (clusters) and below (single seed) the published value.
+            assert!(
+                peak >= slice.peak_rps * 0.4 && peak <= slice.peak_rps * 2.5 + 3.0,
+                "{}: peak {peak:.1} vs {}",
+                slice.label,
+                slice.peak_rps
+            );
+        }
+    }
+
+    #[test]
+    fn arrivals_are_monotone() {
+        let mut synth = BurstGptSynth::new(TABLE8_SLICES[1]);
+        let mut rng = Rng::seed_from_u64(0);
+        let arr = synth.arrivals(&mut rng);
+        for w in arr.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+    }
+
+    #[test]
+    fn high_load_slices_do_burst_above_5rps() {
+        // The paper: "transient spikes exceeding RPS 10" / failures occur
+        // only when RPS > 5. Our synthesizer must produce such spikes for
+        // the high-load slices.
+        let mut rng = Rng::seed_from_u64(7);
+        let mut synth = BurstGptSynth::new(TABLE8_SLICES[3]); // 2.354 mean / 10 peak
+        let arr = synth.arrivals(&mut rng);
+        let (_, peak) = trace_stats(&arr);
+        assert!(peak > 5.0, "peak {peak}");
+    }
+}

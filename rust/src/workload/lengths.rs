@@ -1,0 +1,87 @@
+//! Request-length models matching the published statistics of the datasets
+//! the paper uses (ShareGPT for inference, Alpaca/GSM8K for fine-tuning).
+//!
+//! Lengths are sampled from a log-normal clipped to [min, max] — the shape
+//! repeatedly reported for ShareGPT prompt lengths — with parameters chosen
+//! to hit each dataset's published mean/median. Only the *distribution*
+//! matters for the figures (queueing + batching behaviour), not the text.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct LengthModel {
+    /// Mean of log(length).
+    pub mu: f64,
+    /// Std of log(length).
+    pub sigma: f64,
+    pub min: usize,
+    pub max: usize,
+}
+
+impl LengthModel {
+    pub fn sample_prompt(&self, rng: &mut Rng) -> usize {
+        let v = rng.lognormal(self.mu, self.sigma);
+        (v as usize).clamp(self.min, self.max)
+    }
+
+    /// Scale a published-token-scale model to this build's bucket scale.
+    /// E.g. ShareGPT's ~250-token mean scaled into a 64-token prompt budget.
+    pub fn rescaled_to(&self, target_mean: f64) -> LengthModel {
+        // lognormal mean = exp(mu + sigma^2/2)
+        let cur_mean = (self.mu + self.sigma * self.sigma / 2.0).exp();
+        let shift = (target_mean / cur_mean).ln();
+        LengthModel {
+            mu: self.mu + shift,
+            sigma: self.sigma,
+            min: self.min,
+            max: ((self.max as f64) * target_mean / cur_mean).ceil() as usize,
+        }
+    }
+}
+
+/// ShareGPT conversation turns: heavy-tailed, mean ≈ 250 tokens.
+pub const SHAREGPT_LENGTHS: LengthModel =
+    LengthModel { mu: 5.2, sigma: 0.9, min: 8, max: 2048 };
+
+/// Alpaca instruction+output: mean ≈ 90 tokens, lighter tail.
+pub const ALPACA_LENGTHS: LengthModel =
+    LengthModel { mu: 4.3, sigma: 0.6, min: 8, max: 512 };
+
+/// GSM8K question+solution: mean ≈ 180 tokens, narrow.
+pub const GSM8K_LENGTHS: LengthModel =
+    LengthModel { mu: 5.1, sigma: 0.35, min: 32, max: 512 };
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_respect_bounds() {
+        let mut rng = Rng::seed_from_u64(0);
+        for m in [SHAREGPT_LENGTHS, ALPACA_LENGTHS, GSM8K_LENGTHS] {
+            for _ in 0..500 {
+                let v = m.sample_prompt(&mut rng);
+                assert!(v >= m.min && v <= m.max);
+            }
+        }
+    }
+
+    #[test]
+    fn sharegpt_mean_near_published() {
+        let mut rng = Rng::seed_from_u64(1);
+        let n = 20_000;
+        let s: usize = (0..n).map(|_| SHAREGPT_LENGTHS.sample_prompt(&mut rng)).sum();
+        let mean = s as f64 / n as f64;
+        assert!((150.0..350.0).contains(&mean), "mean {mean}");
+    }
+
+    #[test]
+    fn rescaling_hits_target_mean() {
+        let m = SHAREGPT_LENGTHS.rescaled_to(40.0);
+        let mut rng = Rng::seed_from_u64(2);
+        let n = 20_000;
+        let s: usize = (0..n).map(|_| m.sample_prompt(&mut rng)).sum();
+        let mean = s as f64 / n as f64;
+        assert!((25.0..55.0).contains(&mean), "mean {mean}");
+    }
+}

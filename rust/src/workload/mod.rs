@@ -1,0 +1,81 @@
+//! Workload generation: request length models and arrival processes for
+//! every experiment in the paper (DESIGN.md §3 records the dataset
+//! substitutions — the figures depend on length/arrival *distributions*,
+//! which we reproduce from each dataset's published statistics).
+
+mod arrivals;
+mod burstgpt;
+mod lengths;
+
+pub use arrivals::{table7_schedule, ArrivalProcess, MutablePhase, PoissonArrivals, ScheduleArrivals};
+pub use burstgpt::{trace_stats, BurstGptSlice, BurstGptSynth, TABLE8_SLICES};
+pub use lengths::{LengthModel, ALPACA_LENGTHS, GSM8K_LENGTHS, SHAREGPT_LENGTHS};
+
+use crate::coordinator::{InferenceRequest, TrainExample};
+use crate::util::rng::Rng;
+
+/// A fully materialized inference trace (arrival-sorted).
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub requests: Vec<InferenceRequest>,
+}
+
+impl Trace {
+    pub fn duration_s(&self) -> f64 {
+        self.requests.last().map(|r| r.arrival_s).unwrap_or(0.0)
+    }
+}
+
+/// Build an inference trace: `n` requests across `adapters`, arrivals from
+/// `arrivals`, prompt lengths from `lengths`, fixed `max_new` (the paper's
+/// Appendix D.2/D.4 tables fix max-new per RPS row).
+#[allow(clippy::too_many_arguments)]
+pub fn build_trace(
+    seed: u64,
+    n: usize,
+    adapters: &[i32],
+    arrivals: &mut dyn ArrivalProcess,
+    lengths: &LengthModel,
+    max_new: usize,
+    max_prompt: usize,
+    vocab: i32,
+) -> Trace {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut requests = Vec::with_capacity(n);
+    for i in 0..n {
+        let arrival_s = arrivals.next_arrival(&mut rng);
+        let len = lengths.sample_prompt(&mut rng).clamp(1, max_prompt);
+        let prompt: Vec<i32> = (0..len).map(|k| ((i * 131 + k * 7 + 3) as i32) % vocab).collect();
+        requests.push(InferenceRequest {
+            id: i as u64,
+            adapter: adapters[i % adapters.len()],
+            prompt,
+            max_new_tokens: max_new,
+            eos_token: None,
+            arrival_s,
+        });
+    }
+    requests.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+    Trace { requests }
+}
+
+/// Build a fine-tuning dataset with the given length model (Alpaca/GSM8K
+/// stand-ins: token ids are synthetic, lengths match the dataset).
+pub fn build_train_set(
+    seed: u64,
+    n: usize,
+    lengths: &LengthModel,
+    max_len: usize,
+    vocab: i32,
+) -> Vec<TrainExample> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n)
+        .map(|i| {
+            let len = lengths.sample_prompt(&mut rng).clamp(4, max_len);
+            let tokens: Vec<i32> =
+                (0..len).map(|k| ((i * 97 + k * 13 + 5) as i32) % vocab).collect();
+            let labels = tokens.clone();
+            TrainExample { tokens, labels }
+        })
+        .collect()
+}

@@ -1,0 +1,274 @@
+//! End-to-end over the REAL XLA backend: serve + fine-tune through the
+//! coordinator with actual PJRT execution (tiny workload — numerics, cache
+//! continuity and trainer plumbing, not throughput).
+
+use std::path::PathBuf;
+
+use loquetier::coordinator::{
+    Coordinator, CoordinatorConfig, FinetuneJob, InferenceRequest, TrainExample,
+};
+use loquetier::engine::{Backend, DecodeRow, PrefillSeq, TrainSeq, XlaBackend};
+use loquetier::kvcache::{CacheConfig, KvCacheManager};
+use loquetier::model::{LoraAdapter, SlotState, VirtualizedRegistry, WeightStore};
+use loquetier::runtime::Runtime;
+
+// PJRT CPU clients race on TFRT runtime singletons when created
+// concurrently from multiple test threads — serialize every test.
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn artifacts_dir() -> PathBuf {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let dir = root.join("artifacts");
+    assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    dir
+}
+
+/// Compile only the entries a test needs — full compilation is ~90 s and
+/// dominates test wall time otherwise.
+fn make_backend_filtered(filter: impl Fn(&str) -> bool) -> (XlaBackend, VirtualizedRegistry) {
+    let dir = artifacts_dir();
+    let rt = Runtime::load_filtered(&dir, filter).expect("runtime");
+    let manifest = rt.manifest.clone();
+    let store = WeightStore::open(&dir, &manifest).unwrap();
+    let mut reg = VirtualizedRegistry::new(&manifest, &store).unwrap();
+    for i in 0..manifest.build.lora.max_adapters {
+        let ad = LoraAdapter::from_store(&store, &manifest, i, format!("a{i}")).unwrap();
+        reg.attach(format!("vm{i}"), ad, i, SlotState::Inference).unwrap();
+    }
+    let mut be = XlaBackend::new(rt, &store).unwrap();
+    be.sync_adapters(&mut reg).unwrap();
+    (be, reg)
+}
+
+fn make_backend() -> (XlaBackend, VirtualizedRegistry) {
+    make_backend_filtered(|_| true)
+}
+
+fn make_cache(be: &XlaBackend) -> KvCacheManager {
+    let g = be.geometry().clone();
+    KvCacheManager::new(CacheConfig {
+        num_slots: 16,
+        slot_capacity: g.max_cache_len,
+        block_tokens: 16,
+        total_blocks: 16 * g.max_cache_len / 16,
+        num_layers: g.num_layers,
+        token_elems: g.num_kv_heads * g.head_dim,
+    })
+}
+
+#[test]
+fn decode_continuation_matches_full_prefill() {
+    let _guard = serial();
+    // prefill(t0..t12) then decode(t13) == prefill(t0..t13) last logits.
+    let (mut be, _reg) = make_backend_filtered(|n| n == "prefill_b1_s16" || n == "decode_b1");
+    let mut cache = make_cache(&be);
+    let toks: Vec<i32> = (0..13).map(|i| (7 * i + 3) % 512).collect();
+
+    let slot_a = cache.allocate(1, 64).unwrap();
+    let (full, _) = be
+        .prefill(
+            &[PrefillSeq { tokens: toks.clone(), adapter: 2, kv_slot: slot_a }],
+            &mut cache,
+        )
+        .unwrap();
+
+    let slot_b = cache.allocate(2, 64).unwrap();
+    let (_, _) = be
+        .prefill(
+            &[PrefillSeq { tokens: toks[..12].to_vec(), adapter: 2, kv_slot: slot_b }],
+            &mut cache,
+        )
+        .unwrap();
+    let (dec, _) = be
+        .decode(&[DecodeRow { token: toks[12], adapter: 2, kv_slot: slot_b }], &mut cache)
+        .unwrap();
+
+    let mut worst = 0.0f32;
+    for (a, b) in full[0].iter().zip(&dec[0]) {
+        worst = worst.max((a - b).abs() / b.abs().max(1.0));
+    }
+    assert!(worst < 5e-3, "decode continuation diverged: rel err {worst}");
+    assert_eq!(cache.len(slot_b), 13);
+}
+
+#[test]
+fn adapters_route_to_different_logits() {
+    let _guard = serial();
+    let (mut be, _reg) = make_backend_filtered(|n| n == "prefill_b4_s16");
+    let mut cache = make_cache(&be);
+    let toks: Vec<i32> = (0..16).map(|i| (11 * i + 5) % 512).collect();
+    let s0 = cache.allocate(1, 32).unwrap();
+    let s1 = cache.allocate(2, 32).unwrap();
+    let s2 = cache.allocate(3, 32).unwrap();
+    // Same prompt through adapter 0, adapter 1, and the bare base model —
+    // in ONE batched launch (the SMLM multi-adapter path).
+    let (logits, _) = be
+        .prefill(
+            &[
+                PrefillSeq { tokens: toks.clone(), adapter: 0, kv_slot: s0 },
+                PrefillSeq { tokens: toks.clone(), adapter: 1, kv_slot: s1 },
+                PrefillSeq { tokens: toks.clone(), adapter: -1, kv_slot: s2 },
+            ],
+            &mut cache,
+        )
+        .unwrap();
+    let d01: f32 = logits[0].iter().zip(&logits[1]).map(|(a, b)| (a - b).abs()).sum();
+    let d0b: f32 = logits[0].iter().zip(&logits[2]).map(|(a, b)| (a - b).abs()).sum();
+    assert!(d01 > 1e-3, "adapters 0 and 1 must differ");
+    assert!(d0b > 1e-3, "adapter 0 must differ from base");
+    assert!(logits.iter().all(|l| l.iter().all(|x| x.is_finite())));
+}
+
+#[test]
+fn training_reduces_loss_on_repeated_batch() {
+    let _guard = serial();
+    let (mut be, _reg) = make_backend_filtered(|n| n == "train_b1_s64" || n == "adam");
+    let seq: Vec<i32> = (0..48).map(|i| (5 * i + 1) % 512).collect();
+    let mk = || TrainSeq {
+        tokens: seq.clone(),
+        labels: seq.clone(),
+        adapter: 0,
+        train: true,
+        loss_scale: 1.0,
+    };
+    let mut first = None;
+    let mut last = 0.0;
+    for step in 1..=6 {
+        let (losses, _) = be.train_step(&[mk()]).unwrap();
+        if first.is_none() {
+            first = Some(losses[0]);
+        }
+        last = losses[0];
+        be.optim_step(&[0], 5e-2, step).unwrap();
+    }
+    let first = first.unwrap();
+    assert!(
+        last < first - 0.05,
+        "loss must descend on a repeated batch: {first} -> {last}"
+    );
+}
+
+#[test]
+fn unified_step_runs_all_three_classes() {
+    let _guard = serial();
+    let (mut be, _reg) = make_backend_filtered(|n| {
+        n == "unified_0" || n == "prefill_b1_s16" || n == "decode_b1"
+    });
+    let mut cache = make_cache(&be);
+    let ft = TrainSeq {
+        tokens: (0..32).map(|i| (3 * i + 2) % 512).collect(),
+        labels: (0..32).map(|i| (3 * i + 2) % 512).collect(),
+        adapter: 3,
+        train: true,
+        loss_scale: 0.25,
+    };
+    let pf_slot = cache.allocate(10, 64).unwrap();
+    let pf = PrefillSeq {
+        tokens: (0..16).map(|i| (9 * i + 4) % 512).collect(),
+        adapter: 1,
+        kv_slot: pf_slot,
+    };
+    let dec_slot = cache.allocate(11, 32).unwrap();
+    // Seed the decode slot with a short prefill.
+    be.prefill(
+        &[PrefillSeq { tokens: vec![17, 23, 31], adapter: 0, kv_slot: dec_slot }],
+        &mut cache,
+    )
+    .unwrap();
+    let dec = DecodeRow { token: 42, adapter: 0, kv_slot: dec_slot };
+
+    let (out, _cost) = be.unified(&[ft], &[pf], &[dec.clone()], &mut cache).unwrap();
+    assert_eq!(out.ft_losses.len(), 1);
+    assert!(out.ft_losses[0].is_finite() && out.ft_losses[0] > 0.0);
+    assert_eq!(out.pf_last_logits.len(), 1);
+    assert_eq!(out.dec_logits.len(), 1);
+    assert!(out.dec_logits[0].iter().all(|x| x.is_finite()));
+    assert_eq!(cache.len(pf_slot), 16, "prefill KV must land in the slot");
+    assert_eq!(cache.len(dec_slot), 4, "decode KV must append");
+
+    // The decode row must match what a dedicated decode launch produces
+    // (unified batching is a scheduling optimization, not a semantics
+    // change — the paper's core claim).
+    let mut cache2 = make_cache(&be);
+    let dec_slot2 = cache2.allocate(12, 32).unwrap();
+    be.prefill(
+        &[PrefillSeq { tokens: vec![17, 23, 31], adapter: 0, kv_slot: dec_slot2 }],
+        &mut cache2,
+    )
+    .unwrap();
+    let (alone, _) = be
+        .decode(&[DecodeRow { token: 42, adapter: 0, kv_slot: dec_slot2 }], &mut cache2)
+        .unwrap();
+    let mut worst = 0.0f32;
+    for (a, b) in out.dec_logits[0].iter().zip(&alone[0]) {
+        worst = worst.max((a - b).abs() / b.abs().max(1.0));
+    }
+    assert!(worst < 5e-3, "unified decode != dedicated decode: rel {worst}");
+}
+
+#[test]
+fn full_coordinator_serves_on_xla_backend() {
+    let _guard = serial();
+    // The real serving loop end-to-end at tiny scale: 6 requests across 3
+    // adapters + one fine-tune job, through the unified coordinator.
+    let (mut be, _reg) = make_backend_filtered(|n| {
+        n == "unified_0" || n.starts_with("prefill") || n.starts_with("decode") || n == "adam"
+    });
+    let g = be.geometry().clone();
+    let mut coord = Coordinator::new(
+        CoordinatorConfig { max_prompt_tokens: 16, ..Default::default() },
+        CacheConfig {
+            num_slots: 8,
+            slot_capacity: g.max_cache_len,
+            block_tokens: 16,
+            total_blocks: 8 * g.max_cache_len / 16,
+            num_layers: g.num_layers,
+            token_elems: g.num_kv_heads * g.head_dim,
+        },
+    );
+    for i in 0..6u64 {
+        coord.submit(InferenceRequest {
+            id: i,
+            adapter: (i % 3) as i32,
+            prompt: (0..8).map(|k| ((i as i32) * 31 + k * 7 + 3) % 512).collect(),
+            max_new_tokens: 4,
+            eos_token: None,
+            arrival_s: 0.0,
+        });
+    }
+    let ex = |i: usize| TrainExample {
+        tokens: (0..24).map(|k| ((i * 13 + k * 3 + 1) as i32) % 512).collect(),
+        labels: (0..24).map(|k| ((i * 13 + k * 3 + 1) as i32) % 512).collect(),
+    };
+    coord.add_trainer(FinetuneJob {
+        id: 1,
+        adapter: 3,
+        train_set: (0..4).map(ex).collect(),
+        eval_set: (0..1).map(ex).collect(),
+        epochs: 1,
+        per_device_batch: 2,
+        grad_accum: 2,
+        lr: 2e-5,
+        eval_each_epoch: true,
+    });
+
+    let mut steps = 0;
+    while !coord.quiescent() && steps < 200 {
+        let out = coord.step(&mut be).unwrap();
+        if out.idle {
+            break;
+        }
+        steps += 1;
+    }
+    assert!(coord.quiescent(), "work must drain (steps={steps})");
+    assert_eq!(coord.traces.len(), 6);
+    assert!(coord.traces.iter().all(|t| !t.failed && t.output_tokens == 4));
+    assert_eq!(coord.finetune_tokens(), 4 * 24);
+    assert_eq!(coord.eval_tokens(), 24);
+    assert!(coord.trainers()[0].done());
+    assert_eq!(coord.kv.stats().slots_used, 0, "all KV slots recycled");
+}

@@ -1,0 +1,291 @@
+//! Property-based tests on coordinator invariants (routing, batching, KV
+//! state), driven by the in-tree prop harness over the sim backend.
+//!
+//! Invariants mirrored from the paper's correctness argument:
+//!  * every non-dropped request finishes with exactly min(max_new, ...) tokens;
+//!  * adapters never cross: a request's rows are always routed to its slot;
+//!  * KV accounting: no slot/block leaks, no double allocation, tile-aligned
+//!    segment formation;
+//!  * trainer isolation: per-job token accounting is conserved.
+
+use loquetier::coordinator::{
+    Coordinator, CoordinatorConfig, FinetuneJob, InferenceRequest, TrainExample,
+};
+use loquetier::engine::{CostModel, SimBackend};
+use loquetier::kvcache::CacheConfig;
+use loquetier::runtime::{BucketTable, ModelGeometry, UnifiedShape};
+use loquetier::util::prop;
+use loquetier::util::rng::Rng;
+
+fn geometry() -> ModelGeometry {
+    ModelGeometry {
+        vocab_size: 128,
+        hidden_size: 32,
+        intermediate_size: 64,
+        num_layers: 2,
+        num_heads: 4,
+        num_kv_heads: 2,
+        head_dim: 8,
+        rope_theta: 1e4,
+        rms_eps: 1e-5,
+        max_cache_len: 96,
+        q_dim: 32,
+        kv_dim: 16,
+    }
+}
+
+fn buckets() -> BucketTable {
+    BucketTable {
+        prefill: vec![(4, 32)],
+        decode: vec![8],
+        train: vec![(2, 32)],
+        unified: vec![UnifiedShape {
+            ft_batch: 2,
+            ft_seq: 32,
+            pf_batch: 2,
+            pf_seq: 32,
+            dec_batch: 8,
+        }],
+    }
+}
+
+fn coordinator(slots: usize, blocks: usize) -> Coordinator {
+    Coordinator::new(
+        CoordinatorConfig { max_prompt_tokens: 32, drop_after_s: 1e9, ..Default::default() },
+        CacheConfig {
+            num_slots: slots,
+            slot_capacity: 96,
+            block_tokens: 16,
+            total_blocks: blocks,
+            num_layers: 2,
+            token_elems: 16,
+        },
+    )
+}
+
+fn backend() -> SimBackend {
+    SimBackend::new(geometry(), buckets(), CostModel::default())
+}
+
+fn drive(c: &mut Coordinator, be: &mut SimBackend, max_steps: usize) -> usize {
+    let mut steps = 0;
+    while !c.quiescent() && steps < max_steps {
+        let out = c.step(be).unwrap();
+        if out.idle {
+            break;
+        }
+        steps += 1;
+    }
+    steps
+}
+
+#[test]
+fn prop_every_request_completes_exactly() {
+    prop::check("every request completes with exact token count", 40, |rng| {
+        let mut c = coordinator(8, 48);
+        let mut be = backend();
+        let n = rng.range_usize(1, 24);
+        let mut want: Vec<(u64, usize)> = Vec::new();
+        for i in 0..n {
+            let max_new = rng.range_usize(1, 12);
+            let plen = rng.range_usize(1, 30);
+            want.push((i as u64, max_new));
+            c.submit(InferenceRequest {
+                id: i as u64,
+                adapter: rng.range(-1, 4) as i32,
+                prompt: (0..plen as i32).collect(),
+                max_new_tokens: max_new,
+                eos_token: None,
+                arrival_s: 0.0,
+            });
+        }
+        drive(&mut c, &mut be, 20_000);
+        if !c.quiescent() {
+            return Err("did not drain".into());
+        }
+        if c.traces.len() != n {
+            return Err(format!("{} traces for {n} requests", c.traces.len()));
+        }
+        for t in &c.traces {
+            if t.failed {
+                return Err("unexpected failure".into());
+            }
+        }
+        let mut got: Vec<usize> = c.traces.iter().map(|t| t.output_tokens).collect();
+        got.sort_unstable();
+        let mut expect: Vec<usize> = want.iter().map(|&(_, m)| m).collect();
+        expect.sort_unstable();
+        if got != expect {
+            return Err(format!("token counts {got:?} != {expect:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kv_never_leaks_or_double_books() {
+    prop::check("kv slots+blocks return to zero; occupancy never exceeds cap", 40, |rng| {
+        let mut c = coordinator(rng.range_usize(2, 9), rng.range_usize(12, 60));
+        let mut be = backend();
+        let n = rng.range_usize(1, 40);
+        for i in 0..n {
+            c.submit(InferenceRequest {
+                id: i as u64,
+                adapter: (i % 4) as i32,
+                prompt: (0..rng.range(1, 30)).map(|x| x as i32).collect(),
+                max_new_tokens: rng.range_usize(1, 10),
+                eos_token: None,
+                arrival_s: 0.0,
+            });
+        }
+        let mut steps = 0;
+        while !c.quiescent() && steps < 50_000 {
+            let st = c.kv.stats();
+            if st.blocks_used > st.blocks_total {
+                return Err("block over-booking".into());
+            }
+            if st.slots_used > st.slots_total {
+                return Err("slot over-booking".into());
+            }
+            let out = c.step(&mut be).map_err(|e| e.to_string())?;
+            if out.idle {
+                break;
+            }
+            steps += 1;
+        }
+        let st = c.kv.stats();
+        if st.slots_used != 0 || st.blocks_used != 0 {
+            return Err(format!("leak: {} slots, {} blocks", st.slots_used, st.blocks_used));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_trainer_token_accounting_conserved() {
+    prop::check("fine-tune + eval tokens equal dataset totals", 25, |rng| {
+        let mut c = coordinator(8, 48);
+        let mut be = backend();
+        let n_jobs = rng.range_usize(1, 3);
+        let mut want_train = 0u64;
+        let mut want_eval = 0u64;
+        for j in 0..n_jobs {
+            let n_train = rng.range_usize(1, 10);
+            let n_eval = rng.range_usize(0, 4);
+            let epochs = rng.range_usize(1, 3);
+            let len = rng.range_usize(4, 32);
+            let ex = |_: usize| TrainExample {
+                tokens: vec![1; len],
+                labels: vec![1; len],
+            };
+            want_train += (n_train * len * epochs) as u64;
+            want_eval += (n_eval * len * epochs) as u64;
+            c.add_trainer(FinetuneJob {
+                id: j as u64,
+                adapter: (j % 4) as i32,
+                train_set: (0..n_train).map(ex).collect(),
+                eval_set: (0..n_eval).map(ex).collect(),
+                epochs,
+                per_device_batch: rng.range_usize(1, 3),
+                grad_accum: rng.range_usize(1, 5),
+                lr: 1e-3,
+                eval_each_epoch: true,
+            });
+        }
+        drive(&mut c, &mut be, 100_000);
+        if !c.quiescent() {
+            return Err("trainers did not finish".into());
+        }
+        if c.finetune_tokens() != want_train {
+            return Err(format!("train tokens {} != {want_train}", c.finetune_tokens()));
+        }
+        if c.eval_tokens() != want_eval {
+            return Err(format!("eval tokens {} != {want_eval}", c.eval_tokens()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mixed_load_drains_with_bounded_overflow() {
+    // Unified load: inference + trainers together, random interleavings;
+    // everything must drain and every trace must be terminal.
+    prop::check("mixed unified load drains", 20, |rng: &mut Rng| {
+        let mut c = coordinator(8, 60);
+        let mut be = backend();
+        for i in 0..rng.range_usize(1, 16) {
+            c.submit(InferenceRequest {
+                id: i as u64,
+                adapter: rng.range(-1, 4) as i32,
+                prompt: (0..rng.range(1, 30)).map(|x| x as i32).collect(),
+                max_new_tokens: rng.range_usize(1, 8),
+                eos_token: None,
+                arrival_s: rng.f64() * 2.0,
+            });
+        }
+        let len = rng.range_usize(8, 32);
+        c.add_trainer(FinetuneJob {
+            id: 99,
+            adapter: 3,
+            train_set: (0..rng.range_usize(1, 8))
+                .map(|_| TrainExample { tokens: vec![2; len], labels: vec![2; len] })
+                .collect(),
+            eval_set: vec![],
+            epochs: rng.range_usize(1, 3),
+            per_device_batch: 2,
+            grad_accum: 2,
+            lr: 1e-3,
+            eval_each_epoch: false,
+        });
+        c.advance_clock(10.0); // all arrivals in the past
+        drive(&mut c, &mut be, 100_000);
+        if !c.quiescent() {
+            return Err("mixed load did not drain".into());
+        }
+        for t in &c.traces {
+            if !t.failed && t.finish_s.is_none() {
+                return Err("non-terminal trace".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fifo_admission_no_starvation() {
+    // With equal requests, completion order must roughly follow arrival
+    // order: request k must not finish after request k + slots*4.
+    prop::check("no starvation under FIFO admission", 15, |rng| {
+        let mut c = coordinator(4, 32);
+        let mut be = backend();
+        let n = 20;
+        for i in 0..n {
+            c.submit(InferenceRequest {
+                id: i as u64,
+                adapter: 0,
+                prompt: vec![1; 8],
+                max_new_tokens: 4,
+                eos_token: None,
+                arrival_s: i as f64 * 0.01,
+            });
+        }
+        let _ = rng;
+        c.advance_clock(1.0);
+        let mut finish_order: Vec<u64> = Vec::new();
+        let mut steps = 0;
+        while !c.quiescent() && steps < 10_000 {
+            let out = c.step(&mut be).unwrap();
+            finish_order.extend(out.completed_requests.iter());
+            if out.idle {
+                break;
+            }
+            steps += 1;
+        }
+        for (pos, &id) in finish_order.iter().enumerate() {
+            if (id as usize) > pos + 16 {
+                return Err(format!("request {id} finished at position {pos}: starvation"));
+            }
+        }
+        Ok(())
+    });
+}

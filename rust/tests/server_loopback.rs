@@ -1,0 +1,116 @@
+//! Frontend protocol integration: a real TCP loopback against
+//! `serve_blocking`, with a stub engine loop answering from a thread —
+//! exercises parsing, dispatch, reply framing and stats, end to end.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use loquetier::server::{serve_blocking, Frontend};
+use loquetier::util::json;
+
+fn start_server() -> (std::net::SocketAddr, std::sync::Arc<Frontend>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().unwrap();
+    let (frontend, jobs_rx) = Frontend::new();
+
+    // Stub engine: echo the prompt tokens back, reversed, after a tick.
+    std::thread::spawn(move || {
+        while let Ok(job) = jobs_rx.recv() {
+            let mut toks = job.request.prompt.clone();
+            toks.reverse();
+            toks.truncate(job.request.max_new_tokens);
+            std::thread::sleep(Duration::from_millis(5));
+            let _ = job.reply.send((toks, 0.005));
+        }
+    });
+
+    let fe = frontend.clone();
+    std::thread::spawn(move || {
+        let _ = serve_blocking(
+            listener,
+            fe,
+            |text| text.bytes().map(|b| b as i32).collect(),
+            |ids| ids.iter().map(|&t| (t as u8) as char).collect(),
+            |name| if name == Some("vm1") { 1 } else { -1 },
+        );
+    });
+    (addr, frontend)
+}
+
+fn roundtrip(stream: &mut TcpStream, msg: &str) -> json::Json {
+    stream.write_all(msg.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    json::parse(line.trim()).unwrap()
+}
+
+#[test]
+fn generate_roundtrip_over_tcp() {
+    let (addr, _fe) = start_server();
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+
+    let reply = roundtrip(
+        &mut stream,
+        r#"{"op":"generate","prompt":"abc","model":"vm1","max_new_tokens":8}"#,
+    );
+    assert!(reply.get("error").is_none(), "{reply:?}");
+    let text = reply.get("text").unwrap().as_str().unwrap();
+    assert_eq!(text, "cba", "stub engine reverses the prompt");
+    assert!(reply.get("latency_s").unwrap().as_f64().unwrap() >= 0.005);
+}
+
+#[test]
+fn stats_and_errors_share_the_connection() {
+    let (addr, fe) = start_server();
+    {
+        let mut s = fe.stats.lock().unwrap();
+        s.queued = 3;
+        s.decode_tokens = 42;
+    }
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+
+    let stats = roundtrip(&mut stream, r#"{"op":"stats"}"#);
+    assert_eq!(stats.get("queued").unwrap().as_usize().unwrap(), 3);
+    assert_eq!(stats.get("decode_tokens").unwrap().as_usize().unwrap(), 42);
+
+    // A malformed request must produce an error object, not a hangup...
+    let err = roundtrip(&mut stream, r#"{"op":"nope"}"#);
+    assert!(err.get("error").is_some());
+
+    // ...and the connection stays usable afterwards.
+    let reply = roundtrip(
+        &mut stream,
+        r#"{"op":"generate","prompt":"xy","max_new_tokens":4}"#,
+    );
+    assert_eq!(reply.get("text").unwrap().as_str().unwrap(), "yx");
+}
+
+#[test]
+fn concurrent_clients_are_served() {
+    let (addr, _fe) = start_server();
+    let handles: Vec<_> = (0..8)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+                let prompt = format!("p{i}");
+                let reply = roundtrip(
+                    &mut stream,
+                    &format!(r#"{{"op":"generate","prompt":"{prompt}","max_new_tokens":4}}"#),
+                );
+                let text = reply.get("text").unwrap().as_str().unwrap().to_string();
+                let mut want: Vec<char> = prompt.chars().collect();
+                want.reverse();
+                assert_eq!(text, want.into_iter().collect::<String>());
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
