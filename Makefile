@@ -1,0 +1,38 @@
+# Loquetier build entry points. See README.md for the quickstart and
+# DESIGN.md §2 for what "artifacts" are.
+
+ARTIFACTS ?= artifacts
+
+.PHONY: all build test artifacts figures bench clean
+
+all: build
+
+build:
+	cargo build --release
+
+# Tier-1 verify: build + the full Rust test suite (no artifacts needed).
+test: build
+	cargo test -q
+
+# AOT-lower the model at every bucket shape (L1/L2 -> L3 contract).
+# Requires Python with JAX; see DESIGN.md §2.
+artifacts:
+	cd python && python -m compile.aot --out-dir ../$(ARTIFACTS)
+
+# Full-scale figure regeneration on the calibrated simulator.
+figures:
+	cargo run --release --example fig2_inference
+	cargo run --release --example fig3_finetune
+	cargo run --release --example fig4_unified
+	cargo run --release --example fig5_mutable
+	cargo run --release --example fig6_burstgpt
+	cargo run --release --example table1_capability
+	cargo run --release --example mutable_serve
+
+bench:
+	cargo bench --bench coordinator
+	cargo bench --bench figures
+
+clean:
+	cargo clean
+	rm -rf $(ARTIFACTS)

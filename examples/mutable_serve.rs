@@ -1,0 +1,240 @@
+//! The Figure-5 "mutable" scenario, end to end over the loopback server:
+//! adapters appear and retire MID-RUN through the wire protocol, not at
+//! deployment time (EXPERIMENTS.md §Mutable-serve).
+//!
+//! Where `fig5_mutable` replays the Table-7 schedule against the
+//! coordinator directly (virtual clock, throughput series), this example
+//! drives the same four-phase shape through the production path:
+//!
+//!   phase i: `load_adapter` lora{i}  ->  a burst of streamed + plain
+//!   generations against it  ->  `unload_adapter` lora{i-1} (retrying
+//!   while the old tenant still has requests in flight).
+//!
+//! Along the way it prints per-phase `stats` — per-adapter request counts,
+//! queue depth, rejects — and finishes with a graceful `shutdown` that
+//! drains in-flight work.
+//!
+//! Run: cargo run --release --example mutable_serve [-- --requests 12]
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use loquetier::coordinator::Coordinator;
+use loquetier::harness::{self, sim_backend};
+use loquetier::server::{
+    engine_loop, serve_blocking, AdmissionConfig, Frontend, StaticDirectory,
+};
+use loquetier::tokenizer::{Tokenizer, TINY_CORPUS};
+use loquetier::util::cli::Args;
+use loquetier::util::json::{self, Json};
+
+const PHASES: [(&str, usize); 4] = [
+    ("lora0", 1), // phase arrivals scale (x requests)
+    ("lora1", 2), // the paper's 2.5-RPS spike phase gets the biggest burst
+    ("lora2", 2),
+    ("lora3", 1),
+];
+
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Self { stream, reader })
+    }
+
+    fn send(&mut self, msg: &str) -> Result<()> {
+        self.stream.write_all(msg.as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        Ok(())
+    }
+
+    fn read(&mut self) -> Result<Json> {
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        json::parse(line.trim())
+    }
+
+    fn roundtrip(&mut self, msg: &str) -> Result<Json> {
+        self.send(msg)?;
+        self.read()
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let per_phase = args.usize_or("requests", 12)?;
+    let artifacts = args.str_or("artifacts", "artifacts");
+
+    // ---- Deployment: engine loop on one thread, accept loop on another.
+    // Fair-share cap below the spike phases' burst size, so the demo also
+    // exercises 503 rejects + client retry — the backpressure path.
+    let (frontend, engine_rx) = Frontend::new(AdmissionConfig {
+        max_inflight: 48,
+        max_inflight_per_adapter: 16,
+    });
+    let fe_engine = frontend.clone();
+    std::thread::spawn(move || {
+        let mut coord = Coordinator::new(
+            loquetier::coordinator::CoordinatorConfig {
+                max_prompt_tokens: harness::GPU_PROMPT_CAP,
+                max_prefill_batch: 8,
+                ..Default::default()
+            },
+            {
+                let mut c = harness::sim_cache_config();
+                c.num_layers = harness::sim_geometry().num_layers;
+                c.token_elems =
+                    harness::sim_geometry().num_kv_heads * harness::sim_geometry().head_dim;
+                c
+            },
+        );
+        let mut be = sim_backend(harness::gpu_cost_model(&artifacts));
+        let mut dir = StaticDirectory::new(4, 8);
+        let _ = engine_loop(&mut coord, &mut be, &mut dir, &engine_rx, &fe_engine);
+    });
+
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let vocab = harness::sim_geometry().vocab_size;
+    let tok_enc = Tokenizer::train(TINY_CORPUS, vocab);
+    let tok_dec = Tokenizer::train(TINY_CORPUS, vocab);
+    let fe_accept = frontend.clone();
+    std::thread::spawn(move || {
+        let _ = serve_blocking(
+            listener,
+            fe_accept,
+            move |text| tok_enc.encode(text),
+            move |ids| tok_dec.decode(ids).unwrap_or_default(),
+        );
+    });
+    println!("mutable_serve: loopback server on {addr}\n");
+
+    // ---- The mutable schedule: load -> burst -> unload previous.
+    let mut admin = Client::connect(addr)?;
+    let mut previous: Option<&str> = None;
+    for (phase, &(name, scale)) in PHASES.iter().enumerate() {
+        let n = per_phase * scale;
+        let r = admin.roundtrip(&format!(r#"{{"op":"load_adapter","name":"{name}"}}"#))?;
+        let slot = r
+            .get("slot")
+            .ok_or_else(|| anyhow!("load failed: {r:?}"))?
+            .as_usize()?;
+        println!("== phase {phase}: loaded {name} into slot {slot}, firing {n} requests ==");
+
+        // Burst: a few concurrent client threads, first one streaming.
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let name = name.to_string();
+                std::thread::spawn(move || -> Result<(usize, f64, usize)> {
+                    let mut c = Client::connect(addr)?;
+                    let stream = i == 0;
+                    let msg = format!(
+                        r#"{{"op":"generate","prompt":"the quick brown fox {i}","model":"{name}","max_new_tokens":40,"stream":{stream}}}"#
+                    );
+                    let mut retries = 0usize;
+                    'attempt: loop {
+                        c.send(&msg)?;
+                        let mut frames = 0usize;
+                        loop {
+                            let f = c.read()?;
+                            if let Some(e) = f.get("error") {
+                                let code =
+                                    f.get("code").and_then(|c| c.as_usize().ok()).unwrap_or(0);
+                                if code == 503 && retries < 500 {
+                                    // Backpressure: back off and resend.
+                                    retries += 1;
+                                    std::thread::sleep(Duration::from_millis(5));
+                                    continue 'attempt;
+                                }
+                                return Err(anyhow!("request failed: {}", e.as_str()?));
+                            }
+                            if !stream || f.get("done").is_some() {
+                                let latency = f.get("latency_s").and_then(|l| l.as_f64().ok());
+                                return Ok((frames, latency.unwrap_or(0.0), retries));
+                            }
+                            frames += 1;
+                        }
+                    }
+                })
+            })
+            .collect();
+        let mut streamed_frames = 0usize;
+        let mut worst = 0.0f64;
+        let mut retries = 0usize;
+        for h in handles {
+            let (frames, latency, r) = h.join().map_err(|_| anyhow!("client panicked"))??;
+            streamed_frames += frames;
+            worst = worst.max(latency);
+            retries += r;
+        }
+        println!(
+            "   done: {streamed_frames} streamed frames, worst latency {worst:.3}s, {retries} backpressure retries"
+        );
+
+        // Retire the previous phase's adapter; it may still be draining, in
+        // which case the engine refuses ("busy") and we retry — the mutable
+        // setting's safety property, visible over the wire.
+        if let Some(prev) = previous {
+            let mut tries = 0;
+            loop {
+                let r = admin.roundtrip(&format!(r#"{{"op":"unload_adapter","name":"{prev}"}}"#))?;
+                if r.get("ok").is_some() {
+                    println!("   unloaded {prev} (slot {} freed)", r.get("slot").unwrap().as_usize()?);
+                    break;
+                }
+                tries += 1;
+                if tries > 200 {
+                    return Err(anyhow!("could not unload {prev}: {r:?}"));
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+        previous = Some(name);
+
+        let s = admin.roundtrip(r#"{"op":"stats"}"#)?;
+        println!(
+            "   stats: completed={} rejected={} loaded={} queue_depth_max={}",
+            s.get("completed").unwrap().as_usize()?,
+            s.get("rejected").unwrap().as_usize()?,
+            s.get("loaded_adapters").unwrap().as_usize()?,
+            s.get("queue_depth_max").unwrap().as_f64()?,
+        );
+        if let Some(pa) = s.get("per_adapter").and_then(|p| p.get(name)) {
+            println!(
+                "   {name}: submitted={} completed={} decode_tokens={}",
+                pa.get("submitted").unwrap().as_usize()?,
+                pa.get("completed").unwrap().as_usize()?,
+                pa.get("decode_tokens").unwrap().as_usize()?,
+            );
+        }
+        println!();
+    }
+
+    // ---- Graceful drain.
+    let ack = admin.roundtrip(r#"{"op":"shutdown"}"#)?;
+    println!("shutdown: {}", ack.to_string());
+    let expected: usize = PHASES.iter().map(|(_, s)| per_phase * s).sum();
+    let s = frontend.stats.lock().map_err(|_| anyhow!("stats poisoned"))?;
+    println!(
+        "final: {} completed across {} adapters ({} expected)",
+        s.completed,
+        s.per_adapter.len(),
+        expected
+    );
+    if s.completed >= expected {
+        println!("OK: every phase's traffic was served through a hot-loaded adapter.");
+    } else {
+        println!("WARN: some requests did not complete.");
+    }
+    Ok(())
+}

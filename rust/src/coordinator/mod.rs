@@ -69,6 +69,17 @@ pub struct StepOutcome {
     pub ft_seqs: usize,
     pub eval_seqs: usize,
     pub completed_requests: Vec<u64>,
+    /// Requests dropped from the queue this step (exceeded `drop_after_s`).
+    /// Serving frontends fail these back to the client instead of letting
+    /// the connection hang on a reply that will never come.
+    pub dropped_requests: Vec<u64>,
+    /// Full generated token sequence per completed request (same step as
+    /// its id appears in `completed_requests`). Serving frontends use this
+    /// to build the final reply without re-deriving tokens from traces.
+    pub completed_outputs: Vec<(u64, Vec<i32>)>,
+    /// Every token emitted this step, in emission order: (request id,
+    /// token). Streaming frontends forward these as incremental frames.
+    pub emitted_tokens: Vec<(u64, i32)>,
     pub optimizer_steps: usize,
     /// Nothing to do (driver should advance the clock to the next arrival).
     pub idle: bool,
@@ -160,6 +171,56 @@ impl Coordinator {
         v
     }
 
+    /// Can a request with this shape EVER be admitted under the current
+    /// cache geometry? A request whose worst-case reservation exceeds the
+    /// slot capacity (or the whole block budget) would sit at the queue
+    /// head forever and head-of-line-block every other tenant — serving
+    /// frontends must reject it up front instead of submitting it.
+    pub fn request_fits(&self, prompt_len: usize, max_new_tokens: usize) -> bool {
+        let prompt = prompt_len.min(self.cfg.max_prompt_tokens);
+        let need = if self.cfg.reserve_worst_case {
+            prompt + max_new_tokens
+        } else {
+            prompt
+        };
+        let cfg = self.kv.config();
+        need <= cfg.slot_capacity && cfg.blocks_for(need) <= cfg.total_blocks
+    }
+
+    /// Cancel a queued or active request (e.g. the client disconnected):
+    /// frees its KV slot immediately and records a failed trace. Returns
+    /// false if the id is unknown (already finished).
+    pub fn cancel(&mut self, id: u64) -> Result<bool> {
+        if let Some(pos) = self.queue.iter().position(|r| r.id == id) {
+            let r = self.queue.remove(pos).expect("position is in range");
+            self.traces.push(RequestTrace {
+                arrival_s: r.arrival_s,
+                input_tokens: r.prompt.len(),
+                failed: true,
+                ..Default::default()
+            });
+            return Ok(true);
+        }
+        if let Some(pos) = self.active.iter().position(|a| a.req.id == id) {
+            let mut a = self.active.swap_remove(pos);
+            a.trace.failed = true;
+            self.kv.release(a.kv_slot)?;
+            self.traces.push(a.trace);
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// Is a bank slot still referenced by live work — queued or active
+    /// inference, or a trainer that has not finished? Serving frontends
+    /// check this before unloading an adapter: an unload while work is in
+    /// flight would silently zero the slot's delta mid-generation.
+    pub fn adapter_in_use(&self, slot: i32) -> bool {
+        self.queue.iter().any(|r| r.adapter == slot)
+            || self.active.iter().any(|a| a.req.adapter == slot)
+            || self.trainers.iter().any(|t| !t.done() && t.job.adapter == slot)
+    }
+
     /// All work drained?
     pub fn quiescent(&self) -> bool {
         self.queue.is_empty() && self.active.is_empty() && self.trainers.iter().all(|t| t.done())
@@ -170,13 +231,15 @@ impl Coordinator {
         !self.queue.is_empty() || !self.active.is_empty()
     }
 
-    fn drop_stale(&mut self) {
+    fn drop_stale(&mut self) -> Vec<u64> {
         let now = self.now_s;
         let drop_after = self.cfg.drop_after_s;
         let (keep, dropped): (VecDeque<_>, VecDeque<_>) = std::mem::take(&mut self.queue)
             .into_iter()
             .partition(|r| now - r.arrival_s <= drop_after);
+        let mut ids = Vec::with_capacity(dropped.len());
         for r in dropped {
+            ids.push(r.id);
             self.traces.push(RequestTrace {
                 arrival_s: r.arrival_s,
                 input_tokens: r.prompt.len(),
@@ -185,6 +248,7 @@ impl Coordinator {
             });
         }
         self.queue = keep;
+        ids
     }
 
     fn admit(&mut self) {
@@ -217,7 +281,7 @@ impl Coordinator {
     /// Assemble and run one step. `backend` supplies capacities and costs.
     pub fn step(&mut self, backend: &mut dyn Backend) -> Result<StepOutcome> {
         let mut out = StepOutcome::default();
-        self.drop_stale();
+        out.dropped_requests = self.drop_stale();
         self.admit();
 
         // --- Select work ---------------------------------------------------
@@ -374,6 +438,7 @@ impl Coordinator {
             a.trace.prefill_start_s = Some(step_start);
             let tok = argmax(&pf_logits[k]);
             a.generated.push(tok);
+            out.emitted_tokens.push((a.req.id, tok));
             a.trace.first_token_s = Some(step_end);
             a.trace.output_tokens = a.generated.len();
             a.last_token_s = step_end;
@@ -387,6 +452,7 @@ impl Coordinator {
             let a = &mut self.active[i];
             let tok = argmax(&dec_logits[k]);
             a.generated.push(tok);
+            out.emitted_tokens.push((a.req.id, tok));
             a.trace.output_tokens = a.generated.len();
             a.trace.decode_latencies_s.push(step_end - a.last_token_s);
             a.last_token_s = step_end;
@@ -406,6 +472,7 @@ impl Coordinator {
                 a.phase = Phase::Finished;
                 self.kv.release(a.kv_slot)?;
                 out.completed_requests.push(a.req.id);
+                out.completed_outputs.push((a.req.id, std::mem::take(&mut a.generated)));
                 self.traces.push(a.trace);
             } else {
                 j += 1;
@@ -548,6 +615,84 @@ mod tests {
         assert!(t.finish_s.is_some());
         assert!(!t.failed);
         assert_eq!(t.decode_latencies_s.len(), 4, "first token comes from prefill");
+    }
+
+    #[test]
+    fn emits_every_token_and_final_outputs() {
+        let mut c = coordinator();
+        let mut be = backend();
+        c.submit(req(7, 1, 8, 5, 0.0));
+        let mut emitted = Vec::new();
+        let mut outputs = Vec::new();
+        for _ in 0..100 {
+            if c.quiescent() {
+                break;
+            }
+            let o = c.step(&mut be).unwrap();
+            emitted.extend(o.emitted_tokens.iter().map(|&(_, t)| t));
+            outputs.extend(o.completed_outputs);
+            if o.idle {
+                break;
+            }
+        }
+        // The incremental stream must equal the final output, token for
+        // token — the invariant the streaming frontend relies on.
+        assert_eq!(outputs.len(), 1);
+        let (id, full) = &outputs[0];
+        assert_eq!(*id, 7);
+        assert_eq!(full.len(), 5);
+        assert_eq!(&emitted, full);
+    }
+
+    #[test]
+    fn cancel_releases_kv_and_records_failure() {
+        let mut c = coordinator();
+        let mut be = backend();
+        c.submit(req(1, 0, 8, 50, 0.0));
+        c.step(&mut be).unwrap(); // admit + prefill
+        assert_eq!(c.active_len(), 1);
+        assert!(c.cancel(1).unwrap());
+        assert_eq!(c.active_len(), 0);
+        assert_eq!(c.kv.stats().slots_used, 0, "cancelled request frees its slot");
+        assert!(c.traces.last().unwrap().failed);
+        assert!(!c.cancel(1).unwrap(), "unknown id is a no-op");
+        c.submit(req(2, 0, 8, 5, 0.0));
+        assert!(c.cancel(2).unwrap(), "queued requests cancel too");
+        assert!(c.quiescent());
+    }
+
+    #[test]
+    fn request_fits_flags_oversized_requests() {
+        let c = coordinator(); // max_prompt 32, slot_capacity 96
+        assert!(c.request_fits(8, 50));
+        assert!(!c.request_fits(8, 96), "8 + 96 > slot capacity");
+        assert!(c.request_fits(200, 50), "oversized prompts are bucket-truncated");
+    }
+
+    #[test]
+    fn adapter_in_use_tracks_lifecycle() {
+        let mut c = coordinator();
+        let mut be = backend();
+        assert!(!c.adapter_in_use(2));
+        c.submit(req(1, 2, 8, 3, 0.0));
+        assert!(c.adapter_in_use(2), "queued request pins the adapter");
+        drive(&mut c, &mut be, 100);
+        assert!(!c.adapter_in_use(2), "drained adapter is unloadable");
+        let ex = |i: usize| TrainExample { tokens: vec![i as i32; 16], labels: vec![i as i32; 16] };
+        c.add_trainer(FinetuneJob {
+            id: 9,
+            adapter: 3,
+            train_set: (0..4).map(ex).collect(),
+            eval_set: vec![],
+            epochs: 1,
+            per_device_batch: 2,
+            grad_accum: 2,
+            lr: 1e-3,
+            eval_each_epoch: false,
+        });
+        assert!(c.adapter_in_use(3), "live trainer pins the adapter");
+        drive(&mut c, &mut be, 200);
+        assert!(!c.adapter_in_use(3));
     }
 
     #[test]

@@ -6,9 +6,7 @@
 //! * `bench`    — quick smoke of each engine operation with timings.
 //! * `inspect`  — print the manifest (entries, geometry, buckets, weights).
 
-use std::collections::HashMap;
 use std::net::TcpListener;
-use std::sync::mpsc::Sender;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -19,7 +17,9 @@ use loquetier::engine::{Backend, XlaBackend};
 use loquetier::kvcache::{CacheConfig, KvCacheManager};
 use loquetier::model::{LoraAdapter, SlotState, VirtualizedRegistry, WeightStore};
 use loquetier::runtime::Runtime;
-use loquetier::server::{serve_blocking, Frontend};
+use loquetier::server::{
+    engine_loop, serve_blocking, AdmissionConfig, Frontend, RegistryDirectory,
+};
 use loquetier::tokenizer::{Tokenizer, TINY_CORPUS};
 use loquetier::util::cli::Args;
 
@@ -169,8 +169,9 @@ fn serve_cmd(args: &Args) -> Result<()> {
 
     let mut coord =
         Coordinator::new(cfg.coordinator_config(&manifest), cfg.cache_config(&manifest));
+    let mut dir = RegistryDirectory::new(reg, manifest.clone(), Some(store));
 
-    let (frontend, jobs_rx) = Frontend::new();
+    let (frontend, engine_rx) = Frontend::new(AdmissionConfig::default());
     let listener = TcpListener::bind(&cfg.listen_addr)?;
     println!(
         "loquetier serving on {} ({} virtual models, vocab {})",
@@ -181,7 +182,6 @@ fn serve_cmd(args: &Args) -> Result<()> {
 
     // The XLA backend holds raw PJRT pointers (not Send), so the engine
     // loop stays on the main thread and the TCP accept loop is spawned.
-    let vm_names: Vec<String> = cfg.virtual_models.iter().map(|(n, _)| n.clone()).collect();
     let tok_enc = Tokenizer::train(TINY_CORPUS, manifest.build.model.vocab_size);
     let tok_dec = Tokenizer::train(TINY_CORPUS, manifest.build.model.vocab_size);
     let fe_accept = frontend.clone();
@@ -191,62 +191,12 @@ fn serve_cmd(args: &Args) -> Result<()> {
             fe_accept,
             move |text| tok_enc.encode(text),
             move |ids| tok_dec.decode(ids).unwrap_or_default(),
-            move |name| {
-                name.and_then(|n| vm_names.iter().position(|v| v == n))
-                    .map(|i| i as i32)
-                    .unwrap_or(-1)
-            },
         );
     });
 
-    // Engine loop: owns the backend and the coordinator.
-    let stats = frontend.stats.clone();
-    let t0 = Instant::now();
-    let mut waiting: HashMap<u64, (Sender<(Vec<i32>, f64)>, f64)> = HashMap::new();
-    loop {
-        while let Ok(mut job) = jobs_rx.try_recv() {
-            let now = t0.elapsed().as_secs_f64();
-            job.request.arrival_s = now;
-            coord.advance_clock(now);
-            waiting.insert(job.request.id, (job.reply, now));
-            coord.submit(job.request);
-        }
-        let now = t0.elapsed().as_secs_f64();
-        coord.advance_clock(now);
-        let out = coord.step(&mut backend)?;
-        for id in &out.completed_requests {
-            if let Some((reply, t_in)) = waiting.remove(id) {
-                let generated = coord
-                    .traces
-                    .last()
-                    .map(|t| vec![0i32; t.output_tokens])
-                    .unwrap_or_default();
-                let _ = reply.send((generated, t0.elapsed().as_secs_f64() - t_in));
-            }
-        }
-        if let Ok(mut s) = stats.lock() {
-            s.queued = coord.queue_len();
-            s.active = coord.active_len();
-            s.completed = coord.traces.len();
-            s.decode_tokens = coord.decode_series.total() as u64;
-            s.finetune_tokens = coord.finetune_tokens();
-        }
-        if out.idle {
-            std::thread::sleep(std::time::Duration::from_millis(2));
-        }
-    }
-    let vm_names: Vec<String> = cfg.virtual_models.iter().map(|(n, _)| n.clone()).collect();
-    let tok_enc = Tokenizer::train(TINY_CORPUS, manifest.build.model.vocab_size);
-    let tok_dec = Tokenizer::train(TINY_CORPUS, manifest.build.model.vocab_size);
-    serve_blocking(
-        listener,
-        frontend,
-        move |text| tok_enc.encode(text),
-        move |ids| tok_dec.decode(ids).unwrap_or_default(),
-        move |name| {
-            name.and_then(|n| vm_names.iter().position(|v| v == n))
-                .map(|i| i as i32)
-                .unwrap_or(-1)
-        },
-    )
+    // Engine loop: owns the coordinator, the backend and the registry
+    // directory; returns once a `shutdown` op has drained in-flight work.
+    engine_loop(&mut coord, &mut backend, &mut dir, &engine_rx, &frontend)?;
+    println!("loquetier drained; shutting down");
+    Ok(())
 }

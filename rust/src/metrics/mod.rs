@@ -202,6 +202,117 @@ impl ThroughputSeries {
     }
 }
 
+/// Sampled gauge series — instantaneous levels (queue depth, active
+/// requests), unlike [`ThroughputSeries`] whose values are amounts summed
+/// into rates. Bounded: once `cap` samples accumulate, the series halves
+/// itself and doubles its sampling stride, so a long-running server keeps a
+/// progressively coarser (but complete-horizon) history in O(cap) memory.
+#[derive(Debug, Clone)]
+pub struct GaugeSeries {
+    samples: Vec<(f64, f64)>,
+    cap: usize,
+    /// Record only every `stride`-th offered sample.
+    stride: u64,
+    offered: u64,
+}
+
+impl Default for GaugeSeries {
+    fn default() -> Self {
+        Self::with_capacity(16_384)
+    }
+}
+
+impl GaugeSeries {
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { samples: Vec::new(), cap: cap.max(2), stride: 1, offered: 0 }
+    }
+
+    pub fn sample(&mut self, t_s: f64, value: f64) {
+        if self.offered % self.stride == 0 {
+            if self.samples.len() >= self.cap {
+                // Compact: keep every other sample, halve the resolution.
+                let mut i = 0;
+                self.samples.retain(|_| {
+                    i += 1;
+                    i % 2 == 1
+                });
+                self.stride *= 2;
+            }
+            self.samples.push((t_s, value));
+        }
+        self.offered += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn last(&self) -> Option<(f64, f64)> {
+        self.samples.last().copied()
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().map(|&(_, v)| v).fold(0.0, f64::max)
+    }
+
+    /// Mean level over [t0, t1] (sample mean; assumes roughly even spacing).
+    pub fn mean_over(&self, t0: f64, t1: f64) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for &(t, v) in &self.samples {
+            if t >= t0 && t < t1 {
+                sum += v;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+
+    /// Bucket-averaged series with `window_s` resolution over [0, horizon].
+    pub fn series(&self, window_s: f64, horizon_s: f64) -> Vec<SeriesPoint> {
+        let n = (horizon_s / window_s).ceil() as usize;
+        let mut sum = vec![0.0; n.max(1)];
+        let mut cnt = vec![0usize; n.max(1)];
+        for &(t, v) in &self.samples {
+            let idx = (t / window_s) as usize;
+            if idx < sum.len() {
+                sum[idx] += v;
+                cnt[idx] += 1;
+            }
+        }
+        sum.iter()
+            .zip(&cnt)
+            .enumerate()
+            .map(|(i, (&s, &c))| SeriesPoint {
+                t_s: (i as f64 + 0.5) * window_s,
+                value: if c == 0 { 0.0 } else { s / c as f64 },
+            })
+            .collect()
+    }
+}
+
+/// Per-adapter serving counters, exposed over the wire via the `stats` op
+/// (keyed by virtual-model name in the frontend's table).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AdapterCounters {
+    /// Requests admitted into the engine queue.
+    pub submitted: u64,
+    /// Requests that finished generating.
+    pub completed: u64,
+    /// Requests refused at admission (backpressure or unknown adapter).
+    pub rejected: u64,
+    /// Decode tokens produced for this adapter.
+    pub decode_tokens: u64,
+}
+
 /// Everything a benchmark run reports (one row of a figure).
 #[derive(Debug, Clone, Default)]
 pub struct RunReport {
@@ -349,6 +460,33 @@ mod tests {
         assert!((pts[0].value - 10.0).abs() < 1e-9);
         assert!((pts[1].value - 30.0).abs() < 1e-9);
         assert!((s.rate_over(0.0, 2.0) - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gauge_series_buckets_levels() {
+        let mut g = GaugeSeries::default();
+        g.sample(0.25, 4.0);
+        g.sample(0.75, 6.0);
+        g.sample(1.5, 10.0);
+        let pts = g.series(1.0, 2.0);
+        assert_eq!(pts.len(), 2);
+        assert!((pts[0].value - 5.0).abs() < 1e-9, "bucket 0 averages levels");
+        assert!((pts[1].value - 10.0).abs() < 1e-9);
+        assert!((g.mean_over(0.0, 1.0) - 5.0).abs() < 1e-9);
+        assert!((g.max() - 10.0).abs() < 1e-9);
+        assert_eq!(g.last(), Some((1.5, 10.0)));
+    }
+
+    #[test]
+    fn gauge_series_compacts_at_capacity() {
+        let mut g = GaugeSeries::with_capacity(8);
+        for i in 0..100 {
+            g.sample(i as f64, i as f64);
+        }
+        assert!(g.len() <= 8, "stays bounded: {}", g.len());
+        // The horizon is still covered after compaction.
+        let (t_last, _) = g.last().unwrap();
+        assert!(t_last > 50.0, "late samples survive: {t_last}");
     }
 
     #[test]

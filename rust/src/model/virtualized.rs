@@ -173,6 +173,31 @@ impl VirtualizedRegistry {
         Ok(self.models[slot].as_ref().unwrap())
     }
 
+    /// Attach into the lowest free slot (the serving frontend's hot-load
+    /// path: slots freed by `unload_adapter` are reused immediately, so a
+    /// long-running server cycles through the bounded bank instead of
+    /// exhausting it).
+    pub fn attach_auto(
+        &mut self,
+        name: impl Into<String>,
+        adapter: LoraAdapter,
+        state: SlotState,
+    ) -> Result<&VirtualModel> {
+        let slot = self
+            .free_slot()
+            .ok_or_else(|| anyhow!("bank full ({} slots)", self.max_slots()))?;
+        self.attach(name, adapter, slot, state)
+    }
+
+    /// Detach by virtual-model name; returns the freed slot and payload.
+    pub fn detach_by_name(&mut self, name: &str) -> Result<(usize, LoraAdapter)> {
+        let slot = self
+            .model_by_name(name)
+            .map(|m| m.slot)
+            .ok_or_else(|| anyhow!("model '{name}' not bound"))?;
+        Ok((slot, self.detach(slot)?))
+    }
+
     /// Detach a slot: zero its bank block so any stale routing yields a
     /// zero delta, and free the virtual model.
     pub fn detach(&mut self, slot: usize) -> Result<LoraAdapter> {

@@ -1,31 +1,100 @@
-//! JSON-lines TCP frontend: submit inference requests to a live coordinator
-//! and receive completions. Thread-per-connection over std::net (the
-//! offline environment has no tokio; the engine loop is single-threaded
-//! over the backend anyway, so async buys nothing here).
+//! JSON-lines TCP frontend: the adapter-lifecycle serving path.
 //!
-//! Wire protocol (one JSON object per line):
-//!   -> {"op":"generate","prompt":"...","model":"vm0","max_new_tokens":32}
-//!   <- {"id":7,"text":"...","tokens":[...],"latency_s":0.42}
-//!   -> {"op":"stats"}
-//!   <- {"queued":0,"active":1,...}
+//! Thread-per-connection over std::net (the offline environment has no
+//! tokio; the engine loop is single-threaded over the backend anyway, so
+//! async buys nothing here). Connection threads parse and frame; a single
+//! [`engine_loop`] owns the coordinator, the backend and the adapter
+//! directory, so every registry mutation is serialized with step launches —
+//! the paper's hot-swap guarantee (a load/unload between steps is one bank
+//! write + lazy upload; the computation flow never halts).
+//!
+//! Wire protocol (one JSON object per line; see README.md for the full
+//! reference):
+//!
+//! ```text
+//! -> {"op":"generate","prompt":"...","model":"vm0","max_new_tokens":32}
+//! <- {"id":7,"text":"...","tokens":[...],"latency_s":0.42}
+//!
+//! -> {"op":"generate","prompt":"...","model":"vm0","stream":true}
+//! <- {"id":8,"index":0,"token":17,"text":"a"}        (one frame per token)
+//! <- {"id":8,"index":1,"token":4,"text":"b"}
+//! <- {"id":8,"done":true,"text":"ab","tokens":[17,4],"latency_s":0.9}
+//!
+//! -> {"op":"load_adapter","name":"vm9","index":2}    (or "path":"ad.json")
+//! <- {"ok":true,"name":"vm9","slot":2}
+//! -> {"op":"unload_adapter","name":"vm9"}
+//! <- {"ok":true,"name":"vm9","slot":2}
+//! -> {"op":"list_adapters"}
+//! <- {"adapters":[{"name":"vm0","slot":0,"state":"inference","rank":8}]}
+//!
+//! -> {"op":"stats"}
+//! <- {"queued":0,"active":1,...,"per_adapter":{"vm0":{...}}}
+//! -> {"op":"shutdown"}                               (drain, then ack)
+//! <- {"ok":true,"drained":true}
+//! ```
+//!
+//! Overload produces a 503-style reject frame instead of queueing without
+//! bound: `{"error":"overloaded","code":503}`. Admission is bounded
+//! globally and per adapter (fair share), so one hot tenant cannot starve
+//! the rest of the bank.
 
+use std::collections::{BTreeMap, HashMap};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use crate::coordinator::InferenceRequest;
+use crate::coordinator::{Coordinator, InferenceRequest};
+use crate::engine::Backend;
+use crate::metrics::{AdapterCounters, GaugeSeries};
+use crate::model::{LoraAdapter, SlotState, VirtualizedRegistry, WeightStore};
+use crate::runtime::Manifest;
 use crate::util::json::{self, Json};
+
+// --------------------------------------------------------------------------
+// Wire protocol
+// --------------------------------------------------------------------------
+
+/// Where a `load_adapter` op takes its weights from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AdapterSource {
+    /// `adapter{index}.*` records in the AOT weight store.
+    StoreIndex(usize),
+    /// A JSON adapter file ([`LoraAdapter::save`] format) on the server.
+    Path(String),
+    /// Zero-initialized adapter (a fresh slot, e.g. to fine-tune into).
+    Blank,
+}
 
 /// A parsed client message.
 #[derive(Debug)]
 pub enum ClientMsg {
-    Generate { prompt: String, model: Option<String>, max_new_tokens: usize },
+    Generate {
+        prompt: String,
+        model: Option<String>,
+        max_new_tokens: usize,
+        stream: bool,
+    },
+    LoadAdapter {
+        name: String,
+        slot: Option<usize>,
+        source: AdapterSource,
+    },
+    UnloadAdapter {
+        name: String,
+    },
+    ListAdapters,
     Stats,
+    Shutdown,
 }
+
+/// Hard cap on a single request's generation length (protocol-level sanity
+/// bound; the KV slot capacity is the real limit and is config-dependent).
+pub const MAX_NEW_TOKENS_CAP: usize = 4096;
 
 impl ClientMsg {
     pub fn parse(line: &str) -> Result<Self> {
@@ -37,13 +106,39 @@ impl ClientMsg {
                 max_new_tokens: v
                     .get("max_new_tokens")
                     .and_then(|n| n.as_usize().ok())
-                    .unwrap_or(32),
+                    .unwrap_or(32)
+                    .clamp(1, MAX_NEW_TOKENS_CAP),
+                stream: v.get("stream").and_then(|b| b.as_bool().ok()).unwrap_or(false),
             }),
+            "load_adapter" => {
+                let name = v.req("name")?.as_str()?.to_string();
+                let slot = match v.get("slot") {
+                    Some(s) => Some(s.as_usize()?),
+                    None => None,
+                };
+                let source = if let Some(p) = v.get("path") {
+                    AdapterSource::Path(p.as_str()?.to_string())
+                } else if let Some(i) = v.get("index") {
+                    AdapterSource::StoreIndex(i.as_usize()?)
+                } else {
+                    AdapterSource::Blank
+                };
+                Ok(ClientMsg::LoadAdapter { name, slot, source })
+            }
+            "unload_adapter" => Ok(ClientMsg::UnloadAdapter {
+                name: v.req("name")?.as_str()?.to_string(),
+            }),
+            "list_adapters" => Ok(ClientMsg::ListAdapters),
             "stats" => Ok(ClientMsg::Stats),
+            "shutdown" => Ok(ClientMsg::Shutdown),
             other => anyhow::bail!("unknown op '{other}'"),
         }
     }
 }
+
+// --------------------------------------------------------------------------
+// Stats
+// --------------------------------------------------------------------------
 
 /// Serving statistics exposed over the wire.
 #[derive(Debug, Default, Clone)]
@@ -53,41 +148,202 @@ pub struct Stats {
     pub completed: usize,
     pub decode_tokens: u64,
     pub finetune_tokens: u64,
+    /// Requests refused at admission (backpressure / draining / unknown).
+    pub rejected: u64,
+    /// Adapters currently resident in the bank.
+    pub loaded_adapters: usize,
+    /// Per-virtual-model counters, keyed by model name ("" = base model).
+    pub per_adapter: BTreeMap<String, AdapterCounters>,
+    /// Engine queue depth over time (queued + admitted-not-finished).
+    pub queue_depth: GaugeSeries,
 }
 
 impl Stats {
     fn to_json(&self) -> Json {
+        let per_adapter = Json::Obj(
+            self.per_adapter
+                .iter()
+                .map(|(name, c)| {
+                    (
+                        name.clone(),
+                        Json::obj(vec![
+                            ("submitted", Json::Num(c.submitted as f64)),
+                            ("completed", Json::Num(c.completed as f64)),
+                            ("rejected", Json::Num(c.rejected as f64)),
+                            ("decode_tokens", Json::Num(c.decode_tokens as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
         Json::obj(vec![
             ("queued", Json::Num(self.queued as f64)),
             ("active", Json::Num(self.active as f64)),
             ("completed", Json::Num(self.completed as f64)),
             ("decode_tokens", Json::Num(self.decode_tokens as f64)),
             ("finetune_tokens", Json::Num(self.finetune_tokens as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("loaded_adapters", Json::Num(self.loaded_adapters as f64)),
+            ("queue_depth", Json::Num(self.queue_depth.last().map(|(_, v)| v).unwrap_or(0.0))),
+            ("queue_depth_max", Json::Num(self.queue_depth.max())),
+            ("per_adapter", per_adapter),
         ])
     }
 }
 
-/// A request handed from the frontend to the engine loop, with the channel
-/// its completion is delivered on.
-pub struct FrontendJob {
-    pub request: InferenceRequest,
-    pub reply: Sender<(Vec<i32>, f64)>,
+// --------------------------------------------------------------------------
+// Engine messages
+// --------------------------------------------------------------------------
+
+/// Incremental events the engine sends back per generation.
+#[derive(Debug)]
+pub enum TokenEvent {
+    /// One decoded token (streaming frame `index` = 0-based position).
+    Token { index: usize, token: i32 },
+    /// Terminal: the full output.
+    Done { tokens: Vec<i32>, latency_s: f64 },
+    /// Terminal: the request failed.
+    Error(String),
+}
+
+/// A generation handed from a connection thread to the engine loop.
+pub struct GenerateJob {
+    pub id: u64,
+    pub model: Option<String>,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub events: Sender<TokenEvent>,
+}
+
+/// Adapter-lifecycle operations (serialized with step launches).
+#[derive(Debug)]
+pub enum ControlOp {
+    Load { name: String, slot: Option<usize>, source: AdapterSource },
+    Unload { name: String },
+    List,
+}
+
+#[derive(Debug, Clone)]
+pub struct AdapterInfo {
+    pub name: String,
+    pub slot: usize,
+    pub state: &'static str,
+    pub rank: usize,
+}
+
+impl AdapterInfo {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("slot", Json::Num(self.slot as f64)),
+            ("state", Json::Str(self.state.to_string())),
+            ("rank", Json::Num(self.rank as f64)),
+        ])
+    }
+}
+
+#[derive(Debug)]
+pub enum ControlReply {
+    Loaded { name: String, slot: usize },
+    Unloaded { name: String, slot: usize },
+    Adapters(Vec<AdapterInfo>),
+    Err(String),
+}
+
+pub struct ControlMsg {
+    pub op: ControlOp,
+    pub reply: Sender<ControlReply>,
+}
+
+/// Everything a connection thread can send the engine loop.
+pub enum EngineMsg {
+    Generate(GenerateJob),
+    Control(ControlMsg),
+    /// Graceful shutdown: stop admitting, drain in-flight generations, then
+    /// exit the engine loop. The reply fires once drained.
+    Shutdown { reply: Sender<()> },
+}
+
+// --------------------------------------------------------------------------
+// Admission control
+// --------------------------------------------------------------------------
+
+/// Bounded-queue admission with per-adapter fairness.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Max generations in flight (engine queue + active) across all models.
+    pub max_inflight: usize,
+    /// Per-model fair-share cap, so one hot tenant cannot occupy the whole
+    /// queue while other adapters' traffic gets 503s.
+    pub max_inflight_per_adapter: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        Self { max_inflight: 64, max_inflight_per_adapter: 16 }
+    }
+}
+
+#[derive(Default)]
+struct Inflight {
+    total: usize,
+    per_model: HashMap<String, usize>,
 }
 
 /// Shared state between connection threads and the engine loop.
 pub struct Frontend {
-    pub jobs_tx: Sender<FrontendJob>,
+    tx: Mutex<Sender<EngineMsg>>,
     pub stats: Arc<Mutex<Stats>>,
+    pub admission: AdmissionConfig,
+    inflight: Mutex<Inflight>,
+    draining: AtomicBool,
     next_id: AtomicU64,
 }
 
+/// Admission token: releases its in-flight reservation exactly once, on
+/// drop — whichever way the per-request block exits (done, error, write
+/// failure, engine gone).
+pub struct AdmitGuard {
+    fe: Arc<Frontend>,
+    key: String,
+}
+
+impl std::fmt::Debug for AdmitGuard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "AdmitGuard({:?})", self.key)
+    }
+}
+
+impl Drop for AdmitGuard {
+    fn drop(&mut self) {
+        let mut inf = match self.fe.inflight.lock() {
+            Ok(i) => i,
+            Err(_) => return,
+        };
+        inf.total = inf.total.saturating_sub(1);
+        let emptied = match inf.per_model.get_mut(&self.key) {
+            Some(n) => {
+                *n = n.saturating_sub(1);
+                *n == 0
+            }
+            None => false,
+        };
+        if emptied {
+            inf.per_model.remove(&self.key);
+        }
+    }
+}
+
 impl Frontend {
-    pub fn new() -> (Arc<Self>, Receiver<FrontendJob>) {
+    pub fn new(admission: AdmissionConfig) -> (Arc<Self>, Receiver<EngineMsg>) {
         let (tx, rx) = channel();
         (
             Arc::new(Self {
-                jobs_tx: tx,
+                tx: Mutex::new(tx),
                 stats: Arc::new(Mutex::new(Stats::default())),
+                admission,
+                inflight: Mutex::new(Inflight::default()),
+                draining: AtomicBool::new(false),
                 next_id: AtomicU64::new(1),
             }),
             rx,
@@ -97,6 +353,508 @@ impl Frontend {
     pub fn next_id(&self) -> u64 {
         self.next_id.fetch_add(1, Ordering::Relaxed)
     }
+
+    /// Send a message to the engine loop.
+    pub fn send(&self, msg: EngineMsg) -> Result<()> {
+        self.tx
+            .lock()
+            .map_err(|_| anyhow!("frontend poisoned"))?
+            .send(msg)
+            .map_err(|_| anyhow!("engine loop gone"))
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Relaxed)
+    }
+
+    pub fn set_draining(&self) {
+        self.draining.store(true, Ordering::Relaxed);
+    }
+
+    /// Try to reserve an in-flight slot for `key` (model name, "" = base).
+    /// Returns the reason string on refusal.
+    pub fn try_admit(self: &Arc<Self>, key: &str) -> std::result::Result<AdmitGuard, String> {
+        if self.is_draining() {
+            return Err("draining".to_string());
+        }
+        let mut inf = self.inflight.lock().map_err(|_| "frontend poisoned".to_string())?;
+        if inf.total >= self.admission.max_inflight {
+            return Err("overloaded".to_string());
+        }
+        let n = inf.per_model.entry(key.to_string()).or_insert(0);
+        if *n >= self.admission.max_inflight_per_adapter {
+            return Err(format!("model '{key}' over fair-share limit"));
+        }
+        *n += 1;
+        inf.total += 1;
+        Ok(AdmitGuard { fe: self.clone(), key: key.to_string() })
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.inflight.lock().map(|i| i.total).unwrap_or(0)
+    }
+
+    fn count_reject(&self, key: &str) {
+        if let Ok(mut s) = self.stats.lock() {
+            s.rejected += 1;
+            // Only attribute to KNOWN tenants — never create a map entry
+            // from a client-supplied name, or a scanner cycling random
+            // model names grows the stats map (and every stats frame)
+            // without bound. Unknown names still count globally above.
+            if let Some(c) = s.per_adapter.get_mut(key) {
+                c.rejected += 1;
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------------------
+// Adapter directories
+// --------------------------------------------------------------------------
+
+/// The engine loop's view of the adapter registry: name-keyed lifecycle plus
+/// name→slot resolution. Implementations mutate their registry *only* from
+/// the engine loop, which is what serializes hot swaps with launches.
+pub trait AdapterDirectory {
+    fn load(
+        &mut self,
+        name: &str,
+        slot: Option<usize>,
+        source: &AdapterSource,
+        backend: &mut dyn Backend,
+    ) -> Result<AdapterInfo>;
+
+    fn unload(&mut self, name: &str, backend: &mut dyn Backend) -> Result<AdapterInfo>;
+
+    fn list(&self) -> Vec<AdapterInfo>;
+
+    /// `None` name = base model (slot -1). Unknown names return `None`.
+    fn resolve(&self, name: Option<&str>) -> Option<i32>;
+}
+
+/// Directory over the real [`VirtualizedRegistry`]: loads write a bank slot
+/// and sync lazily into the backend; unloads zero the slot and free it for
+/// reuse (lowest free slot wins, matching the paper's bounded bank).
+pub struct RegistryDirectory {
+    pub registry: VirtualizedRegistry,
+    manifest: Manifest,
+    store: Option<WeightStore>,
+}
+
+impl RegistryDirectory {
+    pub fn new(registry: VirtualizedRegistry, manifest: Manifest, store: Option<WeightStore>) -> Self {
+        Self { registry, manifest, store }
+    }
+
+    fn fetch(&self, name: &str, source: &AdapterSource) -> Result<LoraAdapter> {
+        match source {
+            AdapterSource::StoreIndex(idx) => {
+                let store = self
+                    .store
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("no weight store attached (load by path instead)"))?;
+                LoraAdapter::from_store(store, &self.manifest, *idx, name)
+            }
+            AdapterSource::Path(p) => {
+                let mut ad = LoraAdapter::load(p)?;
+                ad.name = name.to_string();
+                Ok(ad)
+            }
+            AdapterSource::Blank => Ok(LoraAdapter {
+                name: name.to_string(),
+                rank: self.manifest.build.lora.rank,
+                alpha: self.manifest.build.lora.alpha,
+                modules: BTreeMap::new(),
+            }),
+        }
+    }
+}
+
+impl AdapterDirectory for RegistryDirectory {
+    fn load(
+        &mut self,
+        name: &str,
+        slot: Option<usize>,
+        source: &AdapterSource,
+        backend: &mut dyn Backend,
+    ) -> Result<AdapterInfo> {
+        if self.registry.model_by_name(name).is_some() {
+            return Err(anyhow!("model '{name}' already loaded"));
+        }
+        let adapter = self.fetch(name, source)?;
+        let rank = adapter.rank;
+        let slot = match slot {
+            Some(s) => {
+                self.registry.attach(name, adapter, s, SlotState::Inference)?;
+                s
+            }
+            None => self.registry.attach_auto(name, adapter, SlotState::Inference)?.slot,
+        };
+        backend.sync_adapters(&mut self.registry)?;
+        Ok(AdapterInfo { name: name.to_string(), slot, state: "inference", rank })
+    }
+
+    fn unload(&mut self, name: &str, backend: &mut dyn Backend) -> Result<AdapterInfo> {
+        let rank = self
+            .registry
+            .model_by_name(name)
+            .map(|vm| vm.rank)
+            .ok_or_else(|| anyhow!("model '{name}' not loaded"))?;
+        let (slot, _payload) = self.registry.detach_by_name(name)?;
+        backend.sync_adapters(&mut self.registry)?;
+        Ok(AdapterInfo { name: name.to_string(), slot, state: "free", rank })
+    }
+
+    fn list(&self) -> Vec<AdapterInfo> {
+        self.registry
+            .active_slots()
+            .map(|vm| AdapterInfo {
+                name: vm.name.clone(),
+                slot: vm.slot,
+                state: match vm.state {
+                    SlotState::Finetune => "finetune",
+                    _ => "inference",
+                },
+                rank: vm.rank,
+            })
+            .collect()
+    }
+
+    fn resolve(&self, name: Option<&str>) -> Option<i32> {
+        match name {
+            None => Some(-1),
+            Some(n) => self.registry.model_by_name(n).map(|vm| vm.slot as i32),
+        }
+    }
+}
+
+/// Directory over a plain name→slot table — for sim-backend deployments and
+/// tests, where adapter weights are irrelevant but the lifecycle (slot
+/// reuse, name resolution, busy checks) must behave exactly like the real
+/// registry.
+pub struct StaticDirectory {
+    max_slots: usize,
+    by_name: BTreeMap<String, usize>,
+    rank: usize,
+}
+
+impl StaticDirectory {
+    pub fn new(max_slots: usize, rank: usize) -> Self {
+        Self { max_slots, by_name: BTreeMap::new(), rank }
+    }
+}
+
+impl AdapterDirectory for StaticDirectory {
+    fn load(
+        &mut self,
+        name: &str,
+        slot: Option<usize>,
+        _source: &AdapterSource,
+        _backend: &mut dyn Backend,
+    ) -> Result<AdapterInfo> {
+        if self.by_name.contains_key(name) {
+            return Err(anyhow!("model '{name}' already loaded"));
+        }
+        let used: Vec<usize> = self.by_name.values().copied().collect();
+        let slot = match slot {
+            Some(s) if s < self.max_slots && !used.contains(&s) => s,
+            Some(s) => return Err(anyhow!("slot {s} unavailable")),
+            None => match (0..self.max_slots).find(|s| !used.contains(s)) {
+                Some(s) => s,
+                None => return Err(anyhow!("bank full ({} slots)", self.max_slots)),
+            },
+        };
+        self.by_name.insert(name.to_string(), slot);
+        Ok(AdapterInfo { name: name.to_string(), slot, state: "inference", rank: self.rank })
+    }
+
+    fn unload(&mut self, name: &str, _backend: &mut dyn Backend) -> Result<AdapterInfo> {
+        let slot = self
+            .by_name
+            .remove(name)
+            .ok_or_else(|| anyhow!("model '{name}' not loaded"))?;
+        Ok(AdapterInfo { name: name.to_string(), slot, state: "free", rank: self.rank })
+    }
+
+    fn list(&self) -> Vec<AdapterInfo> {
+        let mut v: Vec<AdapterInfo> = self
+            .by_name
+            .iter()
+            .map(|(n, &s)| AdapterInfo {
+                name: n.clone(),
+                slot: s,
+                state: "inference",
+                rank: self.rank,
+            })
+            .collect();
+        v.sort_by_key(|a| a.slot);
+        v
+    }
+
+    fn resolve(&self, name: Option<&str>) -> Option<i32> {
+        match name {
+            None => Some(-1),
+            Some(n) => self.by_name.get(n).map(|&s| s as i32),
+        }
+    }
+}
+
+// --------------------------------------------------------------------------
+// Engine loop
+// --------------------------------------------------------------------------
+
+struct Pending {
+    events: Sender<TokenEvent>,
+    key: String,
+    start: Instant,
+    emitted: usize,
+}
+
+/// The serving engine loop: owns the coordinator, backend and directory.
+/// Runs until a `shutdown` op drains it or every frontend handle is gone.
+///
+/// One iteration = drain control/generate messages, run one coordinator
+/// step, route tokens/completions back, publish stats. Registry mutations
+/// happen strictly between steps — the control channel is what makes
+/// adapter hot-swap safe without locks on the launch path.
+pub fn engine_loop(
+    coord: &mut Coordinator,
+    backend: &mut dyn Backend,
+    dir: &mut dyn AdapterDirectory,
+    rx: &Receiver<EngineMsg>,
+    frontend: &Arc<Frontend>,
+) -> Result<()> {
+    let t0 = Instant::now();
+    let mut waiting: HashMap<u64, Pending> = HashMap::new();
+    let mut draining = false;
+    let mut drain_replies: Vec<Sender<()>> = Vec::new();
+
+    if let Ok(mut s) = frontend.stats.lock() {
+        s.loaded_adapters = dir.list().len();
+    }
+
+    loop {
+        // ---- Ingest messages (non-blocking while there is engine work).
+        loop {
+            match rx.try_recv() {
+                Ok(msg) => handle_msg(
+                    msg, coord, backend, dir, frontend, &mut waiting, &mut draining,
+                    &mut drain_replies, t0,
+                ),
+                Err(_) => break,
+            }
+        }
+
+        // ---- Drained? (after shutdown: no queued/active inference left)
+        if draining && !coord.has_inference_work() && waiting.is_empty() {
+            for r in drain_replies.drain(..) {
+                let _ = r.send(());
+            }
+            publish_stats(coord, dir, frontend, t0);
+            return Ok(());
+        }
+
+        // ---- One step.
+        coord.advance_clock(t0.elapsed().as_secs_f64());
+        let out = coord.step(backend)?;
+
+        for id in &out.dropped_requests {
+            if let Some(p) = waiting.remove(id) {
+                let _ = p.events.send(TokenEvent::Error("timed out in queue".to_string()));
+            }
+        }
+        // Per-step stat deltas, folded into the shared map under ONE lock
+        // below — the per-token path must not contend on the stats mutex.
+        let mut decoded: HashMap<String, u64> = HashMap::new();
+        let mut completed_keys: Vec<String> = Vec::new();
+        let mut dead: Vec<u64> = Vec::new();
+        for &(id, tok) in &out.emitted_tokens {
+            if let Some(p) = waiting.get_mut(&id) {
+                if p.events.send(TokenEvent::Token { index: p.emitted, token: tok }).is_err() {
+                    // Client gone (disconnected mid-stream): stop burning
+                    // engine capacity on it.
+                    dead.push(id);
+                    continue;
+                }
+                p.emitted += 1;
+                match decoded.get_mut(&p.key) {
+                    Some(n) => *n += 1,
+                    None => {
+                        decoded.insert(p.key.clone(), 1);
+                    }
+                }
+            }
+        }
+        for id in dead {
+            waiting.remove(&id);
+            let _ = coord.cancel(id);
+        }
+        for (id, tokens) in out.completed_outputs {
+            if let Some(p) = waiting.remove(&id) {
+                let latency_s = p.start.elapsed().as_secs_f64();
+                completed_keys.push(p.key.clone());
+                let _ = p.events.send(TokenEvent::Done { tokens, latency_s });
+            }
+        }
+        if !decoded.is_empty() || !completed_keys.is_empty() {
+            if let Ok(mut s) = frontend.stats.lock() {
+                for (key, n) in decoded {
+                    s.per_adapter.entry(key).or_default().decode_tokens += n;
+                }
+                for key in completed_keys {
+                    s.per_adapter.entry(key).or_default().completed += 1;
+                }
+            }
+        }
+
+        publish_stats(coord, dir, frontend, t0);
+
+        // ---- Idle: block briefly on the channel instead of spinning.
+        if out.idle {
+            match rx.recv_timeout(Duration::from_millis(2)) {
+                Ok(msg) => handle_msg(
+                    msg, coord, backend, dir, frontend, &mut waiting, &mut draining,
+                    &mut drain_replies, t0,
+                ),
+                Err(RecvTimeoutError::Timeout) => {}
+                // All frontend handles dropped: nothing can ever arrive.
+                Err(RecvTimeoutError::Disconnected) => return Ok(()),
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handle_msg(
+    msg: EngineMsg,
+    coord: &mut Coordinator,
+    backend: &mut dyn Backend,
+    dir: &mut dyn AdapterDirectory,
+    frontend: &Arc<Frontend>,
+    waiting: &mut HashMap<u64, Pending>,
+    draining: &mut bool,
+    drain_replies: &mut Vec<Sender<()>>,
+    t0: Instant,
+) {
+    match msg {
+        EngineMsg::Generate(job) => {
+            if *draining {
+                let _ = job.events.send(TokenEvent::Error("draining".to_string()));
+                return;
+            }
+            let key = job.model.clone().unwrap_or_default();
+            let Some(adapter) = dir.resolve(job.model.as_deref()) else {
+                frontend.count_reject(&key);
+                let _ = job
+                    .events
+                    .send(TokenEvent::Error(format!("unknown model '{key}'")));
+                return;
+            };
+            if job.prompt.is_empty() {
+                frontend.count_reject(&key);
+                let _ = job.events.send(TokenEvent::Error("empty prompt".to_string()));
+                return;
+            }
+            // A request whose worst-case reservation can never fit would
+            // head-of-line-block the queue forever — reject it up front.
+            if !coord.request_fits(job.prompt.len(), job.max_new_tokens) {
+                frontend.count_reject(&key);
+                let _ = job.events.send(TokenEvent::Error(format!(
+                    "request exceeds capacity (max_new_tokens {} too large for this deployment)",
+                    job.max_new_tokens
+                )));
+                return;
+            }
+            let now = t0.elapsed().as_secs_f64();
+            coord.advance_clock(now);
+            if let Ok(mut s) = frontend.stats.lock() {
+                s.per_adapter.entry(key.clone()).or_default().submitted += 1;
+            }
+            waiting.insert(
+                job.id,
+                Pending { events: job.events, key, start: Instant::now(), emitted: 0 },
+            );
+            coord.submit(InferenceRequest {
+                id: job.id,
+                adapter,
+                prompt: job.prompt,
+                max_new_tokens: job.max_new_tokens,
+                eos_token: None,
+                arrival_s: now,
+            });
+        }
+        EngineMsg::Control(c) => {
+            let reply = match c.op {
+                ControlOp::Load { name, slot, source } => {
+                    match dir.load(&name, slot, &source, backend) {
+                        Ok(info) => ControlReply::Loaded { name: info.name, slot: info.slot },
+                        Err(e) => ControlReply::Err(e.to_string()),
+                    }
+                }
+                ControlOp::Unload { name } => {
+                    // Refuse while work references the slot: zeroing a bank
+                    // block mid-generation would corrupt those requests.
+                    match dir.resolve(Some(&name)) {
+                        Some(slot) if coord.adapter_in_use(slot) => {
+                            ControlReply::Err(format!("model '{name}' busy (requests in flight)"))
+                        }
+                        _ => match dir.unload(&name, backend) {
+                            Ok(info) => {
+                                ControlReply::Unloaded { name: info.name, slot: info.slot }
+                            }
+                            Err(e) => ControlReply::Err(e.to_string()),
+                        },
+                    }
+                }
+                ControlOp::List => ControlReply::Adapters(dir.list()),
+            };
+            if let Ok(mut s) = frontend.stats.lock() {
+                s.loaded_adapters = dir.list().len();
+            }
+            let _ = c.reply.send(reply);
+        }
+        EngineMsg::Shutdown { reply } => {
+            *draining = true;
+            frontend.set_draining();
+            drain_replies.push(reply);
+        }
+    }
+}
+
+fn publish_stats(
+    coord: &Coordinator,
+    dir: &dyn AdapterDirectory,
+    frontend: &Arc<Frontend>,
+    t0: Instant,
+) {
+    if let Ok(mut s) = frontend.stats.lock() {
+        s.queued = coord.queue_len();
+        s.active = coord.active_len();
+        s.completed = coord.traces.len();
+        s.decode_tokens = coord.decode_series.total() as u64;
+        s.finetune_tokens = coord.finetune_tokens();
+        s.loaded_adapters = dir.list().len();
+        let depth = (coord.queue_len() + coord.active_len()) as f64;
+        s.queue_depth.sample(t0.elapsed().as_secs_f64(), depth);
+    }
+}
+
+// --------------------------------------------------------------------------
+// Connection handling
+// --------------------------------------------------------------------------
+
+fn err_frame(id: Option<u64>, code: u64, msg: &str) -> String {
+    let mut kvs = Vec::new();
+    if let Some(id) = id {
+        kvs.push(("id", Json::Num(id as f64)));
+    }
+    kvs.push(("error", Json::Str(msg.to_string())));
+    kvs.push(("code", Json::Num(code as f64)));
+    Json::obj(kvs).to_string()
+}
+
+fn write_line(w: &mut TcpStream, line: &str) -> bool {
+    w.write_all(line.as_bytes()).is_ok() && w.write_all(b"\n").is_ok()
 }
 
 /// Handle one connection (blocking; one thread per connection).
@@ -105,7 +863,6 @@ fn handle_conn(
     fe: Arc<Frontend>,
     encode: Arc<dyn Fn(&str) -> Vec<i32> + Send + Sync>,
     decode: Arc<dyn Fn(&[i32]) -> String + Send + Sync>,
-    resolve: Arc<dyn Fn(Option<&str>) -> i32 + Send + Sync>,
 ) {
     let reader = BufReader::new(match stream.try_clone() {
         Ok(s) => s,
@@ -117,67 +874,179 @@ fn handle_conn(
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match ClientMsg::parse(&line) {
-            Ok(ClientMsg::Generate { prompt, model, max_new_tokens }) => {
-                let id = fe.next_id();
-                let tokens = encode(&prompt);
-                let adapter = resolve(model.as_deref());
-                let (tx, rx) = channel();
-                let job = FrontendJob {
-                    request: InferenceRequest {
-                        id,
-                        adapter,
-                        prompt: tokens,
-                        max_new_tokens,
-                        eos_token: None,
-                        arrival_s: 0.0, // stamped by the engine loop
-                    },
-                    reply: tx,
-                };
-                if fe.jobs_tx.send(job).is_err() {
+        let msg = match ClientMsg::parse(&line) {
+            Ok(m) => m,
+            Err(e) => {
+                if !write_line(&mut writer, &err_frame(None, 400, &format!("bad request: {e}"))) {
                     break;
                 }
-                match rx.recv() {
-                    Ok((out_tokens, latency_s)) => Json::obj(vec![
-                        ("id", Json::Num(id as f64)),
-                        ("text", Json::Str(decode(&out_tokens))),
-                        (
-                            "tokens",
-                            Json::Arr(out_tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
-                        ),
-                        ("latency_s", Json::Num(latency_s)),
-                    ])
-                    .to_string(),
-                    Err(_) => r#"{"error":"engine dropped request"}"#.to_string(),
+                continue;
+            }
+        };
+        let keep_going = match msg {
+            ClientMsg::Generate { prompt, model, max_new_tokens, stream } => handle_generate(
+                &mut writer, &fe, &encode, &decode, prompt, model, max_new_tokens, stream,
+            ),
+            ClientMsg::LoadAdapter { name, slot, source } => {
+                handle_control(&mut writer, &fe, ControlOp::Load { name, slot, source })
+            }
+            ClientMsg::UnloadAdapter { name } => {
+                handle_control(&mut writer, &fe, ControlOp::Unload { name })
+            }
+            ClientMsg::ListAdapters => handle_control(&mut writer, &fe, ControlOp::List),
+            ClientMsg::Stats => {
+                // Serialize under the lock (to_json only reads) instead of
+                // deep-cloning the gauge series per poll.
+                let frame = match fe.stats.lock() {
+                    Ok(s) => s.to_json().to_string(),
+                    Err(_) => err_frame(None, 500, "stats unavailable"),
+                };
+                write_line(&mut writer, &frame)
+            }
+            ClientMsg::Shutdown => {
+                let (tx, rx) = channel();
+                fe.set_draining();
+                if fe.send(EngineMsg::Shutdown { reply: tx }).is_err() {
+                    write_line(&mut writer, &err_frame(None, 500, "engine loop gone"))
+                } else {
+                    // Block until the engine has drained in-flight work. A
+                    // dropped reply means the engine died WITHOUT draining —
+                    // never ack that as a clean drain.
+                    let frame = match rx.recv() {
+                        Ok(()) => Json::obj(vec![
+                            ("ok", Json::Bool(true)),
+                            ("drained", Json::Bool(true)),
+                        ])
+                        .to_string(),
+                        Err(_) => err_frame(None, 500, "engine exited without draining"),
+                    };
+                    write_line(&mut writer, &frame)
                 }
             }
-            Ok(ClientMsg::Stats) => {
-                let s = fe.stats.lock().map(|s| s.clone()).unwrap_or_default();
-                s.to_json().to_string()
-            }
-            Err(e) => Json::obj(vec![("error", Json::Str(format!("bad request: {e}")))]).to_string(),
         };
-        if writer.write_all(reply.as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
+        if !keep_going {
             break;
         }
     }
 }
 
-/// Accept loop: spawns a thread per connection. Blocks forever.
+#[allow(clippy::too_many_arguments)]
+fn handle_generate(
+    writer: &mut TcpStream,
+    fe: &Arc<Frontend>,
+    encode: &Arc<dyn Fn(&str) -> Vec<i32> + Send + Sync>,
+    decode: &Arc<dyn Fn(&[i32]) -> String + Send + Sync>,
+    prompt: String,
+    model: Option<String>,
+    max_new_tokens: usize,
+    stream: bool,
+) -> bool {
+    let key = model.clone().unwrap_or_default();
+    // Admission control: bounded queue + per-adapter fair share. A refusal
+    // is a 503-style frame, not a silent queue without bound.
+    let _guard = match fe.try_admit(&key) {
+        Ok(g) => g,
+        Err(reason) => {
+            fe.count_reject(&key);
+            return write_line(writer, &err_frame(None, 503, &reason));
+        }
+    };
+    let id = fe.next_id();
+    let (events_tx, events_rx) = channel();
+    let job = GenerateJob {
+        id,
+        model,
+        prompt: encode(&prompt),
+        max_new_tokens,
+        events: events_tx,
+    };
+    if fe.send(EngineMsg::Generate(job)).is_err() {
+        return write_line(writer, &err_frame(Some(id), 500, "engine loop gone"));
+    }
+    loop {
+        match events_rx.recv() {
+            Ok(TokenEvent::Token { index, token }) => {
+                if stream {
+                    let frame = Json::obj(vec![
+                        ("id", Json::Num(id as f64)),
+                        ("index", Json::Num(index as f64)),
+                        ("token", Json::Num(token as f64)),
+                        ("text", Json::Str(decode(&[token]))),
+                    ]);
+                    if !write_line(writer, &frame.to_string()) {
+                        // Client hung up mid-stream: stop forwarding; the
+                        // guard still releases admission on return.
+                        return false;
+                    }
+                }
+            }
+            Ok(TokenEvent::Done { tokens, latency_s }) => {
+                let mut kvs = vec![("id", Json::Num(id as f64))];
+                if stream {
+                    kvs.push(("done", Json::Bool(true)));
+                }
+                kvs.push(("text", Json::Str(decode(&tokens))));
+                kvs.push((
+                    "tokens",
+                    Json::Arr(tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+                ));
+                kvs.push(("latency_s", Json::Num(latency_s)));
+                return write_line(writer, &Json::obj(kvs).to_string());
+            }
+            Ok(TokenEvent::Error(e)) => {
+                let code = if e == "draining" || e == "timed out in queue" { 503 } else { 400 };
+                return write_line(writer, &err_frame(Some(id), code, &e));
+            }
+            Err(_) => {
+                return write_line(writer, &err_frame(Some(id), 500, "engine dropped request"));
+            }
+        }
+    }
+}
+
+fn handle_control(writer: &mut TcpStream, fe: &Arc<Frontend>, op: ControlOp) -> bool {
+    let (tx, rx) = channel();
+    if fe.send(EngineMsg::Control(ControlMsg { op, reply: tx })).is_err() {
+        return write_line(writer, &err_frame(None, 500, "engine loop gone"));
+    }
+    let frame = match rx.recv() {
+        Ok(ControlReply::Loaded { name, slot }) => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("name", Json::Str(name)),
+            ("slot", Json::Num(slot as f64)),
+        ])
+        .to_string(),
+        Ok(ControlReply::Unloaded { name, slot }) => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("name", Json::Str(name)),
+            ("slot", Json::Num(slot as f64)),
+        ])
+        .to_string(),
+        Ok(ControlReply::Adapters(list)) => Json::obj(vec![(
+            "adapters",
+            Json::Arr(list.iter().map(|a| a.to_json()).collect()),
+        )])
+        .to_string(),
+        Ok(ControlReply::Err(e)) => err_frame(None, 409, &e),
+        Err(_) => err_frame(None, 500, "engine dropped control op"),
+    };
+    write_line(writer, &frame)
+}
+
+/// Accept loop: spawns a thread per connection. Blocks until the listener
+/// errors (or the process exits with the engine loop).
 pub fn serve_blocking(
     listener: TcpListener,
     frontend: Arc<Frontend>,
     encode: impl Fn(&str) -> Vec<i32> + Send + Sync + 'static,
     decode: impl Fn(&[i32]) -> String + Send + Sync + 'static,
-    resolve_model: impl Fn(Option<&str>) -> i32 + Send + Sync + 'static,
 ) -> Result<()> {
     let encode: Arc<dyn Fn(&str) -> Vec<i32> + Send + Sync> = Arc::new(encode);
     let decode: Arc<dyn Fn(&[i32]) -> String + Send + Sync> = Arc::new(decode);
-    let resolve: Arc<dyn Fn(Option<&str>) -> i32 + Send + Sync> = Arc::new(resolve_model);
     for stream in listener.incoming() {
         let stream = stream?;
-        let (fe, e, d, r) = (frontend.clone(), encode.clone(), decode.clone(), resolve.clone());
-        std::thread::spawn(move || handle_conn(stream, fe, e, d, r));
+        let (fe, e, d) = (frontend.clone(), encode.clone(), decode.clone());
+        std::thread::spawn(move || handle_conn(stream, fe, e, d));
     }
     Ok(())
 }
@@ -187,35 +1056,161 @@ mod tests {
     use super::*;
 
     #[test]
-    fn client_msg_parses() {
+    fn client_msg_parses_generate() {
         let m = ClientMsg::parse(r#"{"op":"generate","prompt":"hi","max_new_tokens":4}"#).unwrap();
-        assert!(matches!(m, ClientMsg::Generate { max_new_tokens: 4, .. }));
+        match m {
+            ClientMsg::Generate { max_new_tokens, stream, .. } => {
+                assert_eq!(max_new_tokens, 4);
+                assert!(!stream);
+            }
+            _ => panic!(),
+        }
         let s = ClientMsg::parse(r#"{"op":"stats"}"#).unwrap();
         assert!(matches!(s, ClientMsg::Stats));
     }
 
     #[test]
-    fn defaults_applied() {
-        let m = ClientMsg::parse(r#"{"op":"generate","prompt":"hi"}"#).unwrap();
+    fn generate_defaults_and_stream_flag() {
+        let m = ClientMsg::parse(r#"{"op":"generate","prompt":"hi","stream":true}"#).unwrap();
         match m {
-            ClientMsg::Generate { max_new_tokens, model, .. } => {
+            ClientMsg::Generate { max_new_tokens, model, stream, .. } => {
                 assert_eq!(max_new_tokens, 32);
                 assert!(model.is_none());
+                assert!(stream);
             }
             _ => panic!(),
         }
     }
 
     #[test]
-    fn bad_msg_is_error_not_panic() {
-        assert!(ClientMsg::parse(r#"{"op":"nope"}"#).is_err());
-        assert!(ClientMsg::parse("not json").is_err());
+    fn generate_clamps_max_new_tokens() {
+        let m =
+            ClientMsg::parse(r#"{"op":"generate","prompt":"x","max_new_tokens":999999}"#).unwrap();
+        match m {
+            ClientMsg::Generate { max_new_tokens, .. } => {
+                assert_eq!(max_new_tokens, MAX_NEW_TOKENS_CAP)
+            }
+            _ => panic!(),
+        }
     }
 
     #[test]
-    fn stats_serialize() {
-        let s = Stats { queued: 1, active: 2, completed: 3, decode_tokens: 4, finetune_tokens: 5 };
+    fn lifecycle_ops_parse() {
+        let m = ClientMsg::parse(r#"{"op":"load_adapter","name":"vm9","index":2}"#).unwrap();
+        match m {
+            ClientMsg::LoadAdapter { name, slot, source } => {
+                assert_eq!(name, "vm9");
+                assert!(slot.is_none());
+                assert_eq!(source, AdapterSource::StoreIndex(2));
+            }
+            _ => panic!(),
+        }
+        let m =
+            ClientMsg::parse(r#"{"op":"load_adapter","name":"a","slot":3,"path":"x.json"}"#)
+                .unwrap();
+        match m {
+            ClientMsg::LoadAdapter { slot, source, .. } => {
+                assert_eq!(slot, Some(3));
+                assert_eq!(source, AdapterSource::Path("x.json".into()));
+            }
+            _ => panic!(),
+        }
+        let m = ClientMsg::parse(r#"{"op":"load_adapter","name":"b"}"#).unwrap();
+        match m {
+            ClientMsg::LoadAdapter { source, .. } => assert_eq!(source, AdapterSource::Blank),
+            _ => panic!(),
+        }
+        let m = ClientMsg::parse(r#"{"op":"unload_adapter","name":"vm9"}"#).unwrap();
+        assert!(matches!(m, ClientMsg::UnloadAdapter { .. }));
+        assert!(matches!(
+            ClientMsg::parse(r#"{"op":"list_adapters"}"#).unwrap(),
+            ClientMsg::ListAdapters
+        ));
+        assert!(matches!(
+            ClientMsg::parse(r#"{"op":"shutdown"}"#).unwrap(),
+            ClientMsg::Shutdown
+        ));
+    }
+
+    #[test]
+    fn bad_msgs_are_errors_not_panics() {
+        assert!(ClientMsg::parse(r#"{"op":"nope"}"#).is_err());
+        assert!(ClientMsg::parse("not json").is_err());
+        assert!(ClientMsg::parse(r#"{"op":"generate"}"#).is_err(), "prompt required");
+        assert!(ClientMsg::parse(r#"{"op":"load_adapter"}"#).is_err(), "name required");
+        assert!(ClientMsg::parse(r#"{"op":"unload_adapter"}"#).is_err());
+        assert!(
+            ClientMsg::parse(r#"{"op":"load_adapter","name":"x","slot":-1}"#).is_err(),
+            "negative slot rejected"
+        );
+    }
+
+    #[test]
+    fn stats_serialize_with_per_adapter() {
+        let mut s = Stats {
+            queued: 1,
+            active: 2,
+            completed: 3,
+            decode_tokens: 4,
+            finetune_tokens: 5,
+            rejected: 6,
+            loaded_adapters: 2,
+            ..Default::default()
+        };
+        s.per_adapter.insert(
+            "vm0".into(),
+            AdapterCounters { submitted: 9, completed: 8, rejected: 1, decode_tokens: 70 },
+        );
+        s.queue_depth.sample(0.5, 3.0);
         let j = s.to_json().to_string();
-        assert!(j.contains("\"queued\":1") && j.contains("\"finetune_tokens\":5"));
+        assert!(j.contains("\"queued\":1") && j.contains("\"finetune_tokens\":5"), "{j}");
+        assert!(j.contains("\"rejected\":6"), "{j}");
+        assert!(j.contains("\"vm0\":{\"submitted\":9"), "{j}");
+        assert!(j.contains("\"queue_depth\":3"), "{j}");
+        // And it parses back as JSON.
+        assert!(json::parse(&j).is_ok());
+    }
+
+    #[test]
+    fn admission_bounds_global_and_per_adapter() {
+        let (fe, _rx) = Frontend::new(AdmissionConfig { max_inflight: 3, max_inflight_per_adapter: 2 });
+        let g1 = fe.try_admit("a").unwrap();
+        let _g2 = fe.try_admit("a").unwrap();
+        assert_eq!(fe.try_admit("a").unwrap_err(), "model 'a' over fair-share limit");
+        let _g3 = fe.try_admit("b").unwrap();
+        assert_eq!(fe.try_admit("c").unwrap_err(), "overloaded");
+        assert_eq!(fe.inflight(), 3);
+        drop(g1);
+        assert_eq!(fe.inflight(), 2);
+        // Released capacity is admissible again, for any adapter.
+        let _g4 = fe.try_admit("c").unwrap();
+    }
+
+    #[test]
+    fn draining_refuses_admission() {
+        let (fe, _rx) = Frontend::new(AdmissionConfig::default());
+        assert!(fe.try_admit("a").is_ok());
+        fe.set_draining();
+        assert_eq!(fe.try_admit("a").unwrap_err(), "draining");
+    }
+
+    #[test]
+    fn static_directory_reuses_lowest_free_slot() {
+        use crate::engine::{CostModel, SimBackend};
+        use crate::harness::{sim_buckets, sim_geometry};
+        let mut be = SimBackend::new(sim_geometry(), sim_buckets(), CostModel::default());
+        let mut d = StaticDirectory::new(2, 8);
+        let a = d.load("a", None, &AdapterSource::Blank, &mut be).unwrap();
+        let b = d.load("b", None, &AdapterSource::Blank, &mut be).unwrap();
+        assert_eq!((a.slot, b.slot), (0, 1));
+        assert!(d.load("c", None, &AdapterSource::Blank, &mut be).is_err(), "bank full");
+        assert_eq!(d.unload("a", &mut be).unwrap().slot, 0);
+        // Slot 0 is recycled for the next load.
+        assert_eq!(d.load("c", None, &AdapterSource::Blank, &mut be).unwrap().slot, 0);
+        assert_eq!(d.resolve(Some("c")), Some(0));
+        assert_eq!(d.resolve(None), Some(-1));
+        assert_eq!(d.resolve(Some("zz")), None);
+        assert!(d.load("c", None, &AdapterSource::Blank, &mut be).is_err(), "duplicate name");
+        assert_eq!(d.list().len(), 2);
     }
 }

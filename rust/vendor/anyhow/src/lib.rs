@@ -1,0 +1,225 @@
+//! Minimal vendored subset of the `anyhow` API.
+//!
+//! The build environment is fully offline (no crates.io registry), so the
+//! crate ships this drop-in stand-in as a path dependency. It implements
+//! exactly the surface the workspace uses — `Error`, `Result`, `anyhow!`,
+//! `bail!`, `ensure!`, and the `Context` extension trait — with the same
+//! semantics (context chaining, `From<E: std::error::Error>`, `?`
+//! propagation). Swapping in the real crate is a one-line Cargo.toml change.
+
+use std::fmt;
+
+/// Error type: a chain of messages, outermost context first.
+pub struct Error {
+    /// `chain[0]` is the most recent context; the last entry is the root.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create from anything printable.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.chain.first() {
+            Some(m) => f.write_str(m),
+            None => f.write_str("unknown error"),
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.chain.split_first() {
+            Some((head, rest)) => {
+                f.write_str(head)?;
+                if !rest.is_empty() {
+                    f.write_str("\n\nCaused by:")?;
+                    for m in rest {
+                        write!(f, "\n    {m}")?;
+                    }
+                }
+                Ok(())
+            }
+            None => f.write_str("unknown error"),
+        }
+    }
+}
+
+// Mirrors real anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket impl coherent
+// alongside core's reflexive `From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // Preserve the source chain as context entries.
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result<T, anyhow::Error>` with the same default-parameter shape as the
+/// real crate, so `Result<T, io::Error>`-style uses still work.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait: attach context to a `Result`.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+// Coherent with the impl above because `Error: !std::error::Error` is known
+// in-crate and no downstream crate can add that impl (orphan rule).
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] — same three shapes as the real crate:
+/// `anyhow!("literal {x}")`, `anyhow!(displayable_value)`,
+/// `anyhow!("fmt {}", args)`.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path/xyz").context("reading config")?;
+        Ok(())
+    }
+
+    #[test]
+    fn context_chains_and_displays_outermost() {
+        let e = io_fail().unwrap_err();
+        assert_eq!(e.to_string(), "reading config");
+        assert!(e.chain().count() >= 2);
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let x = 7;
+        let e: Error = anyhow!("bad value {x}");
+        assert_eq!(e.to_string(), "bad value 7");
+        let msg = String::from("owned message");
+        assert_eq!(anyhow!(msg).to_string(), "owned message");
+        fn b() -> Result<()> {
+            bail!("nope {}", 1);
+        }
+        assert_eq!(b().unwrap_err().to_string(), "nope 1");
+        fn en(v: i32) -> Result<i32> {
+            ensure!(v > 0, "v must be positive, got {v}");
+            Ok(v)
+        }
+        assert!(en(1).is_ok());
+        assert_eq!(en(-2).unwrap_err().to_string(), "v must be positive, got -2");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse() -> Result<i32> {
+            Ok("12x".parse::<i32>()?)
+        }
+        assert!(parse().is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        assert_eq!(v.context("missing").unwrap_err().to_string(), "missing");
+    }
+}

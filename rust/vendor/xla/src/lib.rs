@@ -1,0 +1,217 @@
+//! Stub of the `xla` PJRT bindings used by the real-numerics backend.
+//!
+//! The offline build environment ships neither the `xla` crate nor the
+//! `xla_extension` shared library, so this stub provides the exact API
+//! surface `runtime/` uses, with two behaviours (DESIGN.md §3 records the
+//! policy):
+//!
+//! * **Host-side types are real.** [`Literal`] stores data and round-trips
+//!   `create_from_shape_and_untyped_data` / `copy_raw_to`, so host-tensor
+//!   marshalling (and its unit tests) work unchanged.
+//! * **Device entry points fail loudly.** [`PjRtClient::cpu`] returns an
+//!   error, so anything needing real execution (`Runtime::load`,
+//!   `XlaBackend`) fails at construction with a clear message instead of
+//!   deep inside a launch. The sim-backend path never touches this crate.
+//!
+//! Swapping in the real bindings is a one-line change in
+//! `rust/Cargo.toml`; no source edits needed.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type (the real crate's `Error` is richer; callers only `{e:?}`).
+pub struct Error(pub String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what} unavailable: this build uses the vendored xla stub \
+         (no PJRT runtime in the environment; see DESIGN.md §3)"
+    )))
+}
+
+/// XLA element types (only the two the AOT contract uses).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// A host-side literal: shape + raw bytes. Fully functional.
+pub struct Literal {
+    element_type: ElementType,
+    dims: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        element_type: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let want = dims.iter().product::<usize>() * element_type.size_bytes();
+        if want != data.len() {
+            return Err(Error(format!(
+                "literal shape {dims:?} wants {want} bytes, got {}",
+                data.len()
+            )));
+        }
+        Ok(Literal { element_type, dims: dims.to_vec(), data: data.to_vec() })
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.element_type
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Copy the raw bytes into a typed slice (must match exactly).
+    pub fn copy_raw_to<T: Copy>(&self, dst: &mut [T]) -> Result<()> {
+        let dst_bytes = std::mem::size_of_val(dst);
+        if dst_bytes != self.data.len() {
+            return Err(Error(format!(
+                "copy_raw_to: literal has {} bytes, destination {dst_bytes}",
+                self.data.len()
+            )));
+        }
+        // Size checked above; T is plain data in this contract (f32/i32).
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                self.data.as_ptr(),
+                dst.as_mut_ptr() as *mut u8,
+                dst_bytes,
+            );
+        }
+        Ok(())
+    }
+
+    /// Tuple decomposition only exists on real PJRT results.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        unavailable("Literal::decompose_tuple")
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<Self> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation (opaque in the stub).
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// A device-resident buffer (never constructible through the stub).
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// A compiled executable (never constructible through the stub).
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// The PJRT client. `cpu()` is the single gate: it fails in the stub, so
+/// every real-execution path errors out at construction time.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu (PJRT)")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrips_f32() {
+        let data: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let bytes: &[u8] =
+            unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 3], bytes).unwrap();
+        let mut back = vec![0f32; 6];
+        lit.copy_raw_to(&mut back).unwrap();
+        assert_eq!(back, data);
+        assert_eq!(lit.dims(), &[2, 3]);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0u8; 4])
+            .is_err());
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::S32, &[1], &[0u8; 4]).unwrap();
+        let mut too_big = vec![0i32; 2];
+        assert!(lit.copy_raw_to(&mut too_big).is_err());
+    }
+
+    #[test]
+    fn device_paths_fail_loudly() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{e:?}").contains("stub"));
+    }
+}
