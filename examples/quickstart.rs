@@ -1,58 +1,72 @@
 //! Quickstart: the smallest complete tour of the public API.
 //!
-//! 1. Load the AOT artifacts (HLO text + weights) into the PJRT runtime.
+//! 1. Build a backend — `--backend native` (default: real pure-Rust CPU
+//!    numerics over a seeded tiny model, zero artifacts) or
+//!    `--backend xla` (AOT artifacts on PJRT; needs `make artifacts`).
 //! 2. Build the virtualized registry and attach two LoRA adapters.
 //! 3. Generate a few tokens through each virtual model (and the base).
 //! 4. Hot-swap an adapter without stopping anything, generate again.
 //!
-//! Run: make artifacts && cargo run --release --example quickstart
+//! Run: cargo run --release --example quickstart -- --backend native
 
 use anyhow::Result;
 
 use loquetier::coordinator::{Coordinator, CoordinatorConfig, InferenceRequest};
-use loquetier::engine::{Backend, XlaBackend};
-use loquetier::kvcache::CacheConfig;
+use loquetier::engine::{Backend, NativeBackend, XlaBackend};
+use loquetier::harness::native_model;
 use loquetier::model::{LoraAdapter, SlotState, VirtualizedRegistry, WeightStore};
-use loquetier::runtime::Runtime;
+use loquetier::runtime::{Manifest, Runtime};
 use loquetier::tokenizer::{Tokenizer, TINY_CORPUS};
+use loquetier::util::cli::{Args, BackendKind};
 
 fn main() -> Result<()> {
-    // 1. Runtime: compile only the serving entries (no training today).
-    let rt = Runtime::load_filtered("artifacts", |n| {
-        n.starts_with("prefill") || n.starts_with("decode")
-    })?;
-    let manifest = rt.manifest.clone();
-    println!(
-        "loaded {} entries ({} layers, vocab {}) in {:.2}s",
-        manifest.entries.len(),
-        manifest.build.model.num_layers,
-        manifest.build.model.vocab_size,
-        rt.compile_seconds,
-    );
+    let args = Args::from_env();
+
+    // 1. Backend + weights. Both paths produce the same three objects, and
+    //    everything below this match is backend-agnostic.
+    let (manifest, store, mut backend): (Manifest, WeightStore, Box<dyn Backend>) =
+        match args.backend_or(BackendKind::Native)? {
+            BackendKind::Native => {
+                let seed = args.usize_or("seed", 42)? as u64;
+                let (manifest, store) = native_model(seed)?;
+                let be = NativeBackend::new(&manifest, &store)?;
+                println!(
+                    "native backend: {} layers, vocab {}, seed {seed}",
+                    manifest.build.model.num_layers, manifest.build.model.vocab_size
+                );
+                (manifest, store, Box::new(be))
+            }
+            BackendKind::Xla => {
+                let rt = Runtime::load_filtered("artifacts", |n| {
+                    n.starts_with("prefill") || n.starts_with("decode")
+                })?;
+                let manifest = rt.manifest.clone();
+                println!(
+                    "loaded {} entries ({} layers, vocab {}) in {:.2}s",
+                    manifest.entries.len(),
+                    manifest.build.model.num_layers,
+                    manifest.build.model.vocab_size,
+                    rt.compile_seconds,
+                );
+                let store = WeightStore::open("artifacts", &manifest)?;
+                let be = XlaBackend::new(rt, &store)?;
+                (manifest, store, Box::new(be))
+            }
+        };
 
     // 2. Virtualized registry: one shared base, adapters in slots.
-    let store = WeightStore::open("artifacts", &manifest)?;
     let mut registry = VirtualizedRegistry::new(&manifest, &store)?;
     let alpaca = LoraAdapter::from_store(&store, &manifest, 0, "alpaca")?;
     let gsm8k = LoraAdapter::from_store(&store, &manifest, 1, "gsm8k")?;
     registry.attach("vm-alpaca", alpaca, 0, SlotState::Inference)?;
     registry.attach("vm-gsm8k", gsm8k, 1, SlotState::Inference)?;
-
-    let mut backend = XlaBackend::new(rt, &store)?;
     backend.sync_adapters(&mut registry)?;
 
     // 3. Serve through the unified coordinator.
     let g = backend.geometry().clone();
     let mut coord = Coordinator::new(
         CoordinatorConfig { max_prompt_tokens: 16, ..Default::default() },
-        CacheConfig {
-            num_slots: 8,
-            slot_capacity: g.max_cache_len,
-            block_tokens: 16,
-            total_blocks: 8 * g.max_cache_len / 16,
-            num_layers: g.num_layers,
-            token_elems: g.num_kv_heads * g.head_dim,
-        },
+        loquetier::harness::cache_config_for(&g, 8),
     );
     let tok = Tokenizer::train(TINY_CORPUS, g.vocab_size);
     let prompt = tok.encode("Instruction: Give three tips. Response:");
@@ -67,7 +81,7 @@ fn main() -> Result<()> {
         });
     }
     while !coord.quiescent() {
-        if coord.step(&mut backend)?.idle {
+        if coord.step(backend.as_mut())?.idle {
             break;
         }
     }
@@ -96,7 +110,7 @@ fn main() -> Result<()> {
         arrival_s: coord.now_s,
     });
     while !coord.quiescent() {
-        if coord.step(&mut backend)?.idle {
+        if coord.step(backend.as_mut())?.idle {
             break;
         }
     }

@@ -1,41 +1,176 @@
-//! Micro-benchmarks over the real XLA backend: per-entry step latency at
-//! every bucket size. These are the §Perf "L3 hot path" numbers and the
-//! source for calibration sanity checks.
+//! Kernel micro-benchmarks.
+//!
+//! Part 1 (no artifacts needed — always runs): the SMLM segmented kernel
+//! against its per-row reference, swept over adapter counts {1, 4, 16},
+//! plus native-backend step latencies. Each run appends one entry to the
+//! repo-root `BENCH_SMLM.json` trajectory so kernel optimisations on the
+//! ROADMAP have a recorded baseline to beat.
+//!
+//! Part 2 (artifact-gated): per-entry step latency of the real XLA backend
+//! at every bucket size — the §Perf "L3 hot path" numbers and the source
+//! for calibration sanity checks.
 //!
 //! Run: cargo bench --bench kernels
 
-use loquetier::engine::{Backend, DecodeRow, PrefillSeq, TrainSeq, XlaBackend};
-use loquetier::kvcache::{CacheConfig, KvCacheManager};
-use loquetier::model::{LoraAdapter, SlotState, VirtualizedRegistry, WeightStore};
-use loquetier::runtime::Runtime;
-use loquetier::util::bench::bench_for;
+use std::time::{SystemTime, UNIX_EPOCH};
 
-fn main() -> anyhow::Result<()> {
+use loquetier::engine::{Backend, DecodeRow, PrefillSeq, TrainSeq};
+use loquetier::harness::{cache_config_for, native_stack, xla_stack};
+use loquetier::kvcache::KvCacheManager;
+use loquetier::runtime::kernels::{smlm_per_row, smlm_segmented, LoraBankView};
+use loquetier::util::bench::bench_for;
+use loquetier::util::json::{self, Json};
+use loquetier::util::rng::Rng;
+
+const BENCH_JSON: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_SMLM.json");
+
+fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32 * 0.1).collect()
+}
+
+/// Sweep segmented vs per-row over adapter counts; returns
+/// (label, mean µs) pairs for the trajectory entry.
+fn smlm_sweep() -> Vec<(String, f64)> {
+    // GPU-shaped problem at CPU-feasible size: 256 rows of a mixed batch,
+    // hidden 256, rank 16.
+    let (rows, din, r, dout) = (256usize, 256usize, 16usize, 256usize);
+    let mut rng = Rng::seed_from_u64(99);
+    let x = randv(&mut rng, rows * din);
+    let mut results = Vec::new();
+
+    println!("== SMLM sweep (rows={rows}, din={din}, r={r}, dout={dout}) ==");
+    for &adapters in &[1usize, 4, 16] {
+        let a = randv(&mut rng, adapters * din * r);
+        let b = randv(&mut rng, adapters * r * dout);
+        let scaling = vec![2.0f32; adapters];
+        let bank = LoraBankView { a: &a, b: &b, scaling: &scaling, rank: r, din, dout };
+        // Every row routed to an adapter, round-robin (worst case for the
+        // per-row path: zero base-only rows to skip).
+        let ids: Vec<i32> = (0..rows).map(|i| (i % adapters) as i32).collect();
+        let mut y = vec![0.0f32; rows * dout];
+
+        let seg = bench_for(&format!("smlm_segmented_a{adapters}"), 1.0, || {
+            y.iter_mut().for_each(|v| *v = 0.0);
+            smlm_segmented(&x, &ids, &bank, &mut y);
+        });
+        results.push((format!("adapters_{adapters}_segmented_us"), seg.mean_us));
+        let per = bench_for(&format!("smlm_per_row_a{adapters}"), 1.0, || {
+            y.iter_mut().for_each(|v| *v = 0.0);
+            smlm_per_row(&x, &ids, &bank, &mut y);
+        });
+        results.push((format!("adapters_{adapters}_per_row_us"), per.mean_us));
+        println!(
+            "  {adapters:>2} adapters: segmented speedup (per-row/segmented) = {:.2}x",
+            per.mean_us / seg.mean_us.max(1e-9)
+        );
+    }
+    results
+}
+
+/// Native-backend step latencies (tiny geometry, mixed-adapter batches).
+fn native_steps() -> anyhow::Result<Vec<(String, f64)>> {
+    let (mut be, _reg, _manifest) = native_stack(42)?;
+    let g = be.geometry().clone();
+    let v = g.vocab_size as i32;
+    let te = g.num_kv_heads * g.head_dim;
+    let cache_cfg = cache_config_for(&g, 32);
+    let mut results = Vec::new();
+
+    println!("== native backend steps ==");
+    // The arena is constructed ONCE (its multi-MB zeroing must not land in
+    // the timed region — at native-tiny scale it would dominate the model
+    // math). Slot allocate/warm/release cycling DOES stay in the timed
+    // region (decode appends KV, so slots must reset each iteration); warm
+    // caches are kept short so that bookkeeping stays well under the model
+    // math being measured.
+    let mut arena = KvCacheManager::new(cache_cfg);
+    let pf = bench_for("native_prefill_b4_s16", 1.0, || {
+        let seqs: Vec<PrefillSeq> = (0..4)
+            .map(|i| PrefillSeq {
+                tokens: (0..16).map(|k| (i as i32 * 31 + k * 7) % v).collect(),
+                adapter: (i % 4) as i32 - 1, // mix base + adapters
+                kv_slot: arena.allocate(i as u64, 32).unwrap(),
+            })
+            .collect();
+        let _ = be.prefill(&seqs, &mut arena).unwrap();
+        for s in &seqs {
+            arena.release(s.kv_slot).unwrap();
+        }
+    });
+    results.push(("native_prefill_b4_s16_us".to_string(), pf.mean_us));
+
+    let warm = vec![0.0f32; g.num_layers * 8 * te];
+    let dec = bench_for("native_decode_b8", 1.0, || {
+        let rows: Vec<DecodeRow> = (0..8)
+            .map(|i| {
+                let slot = arena.allocate(i as u64, 16).unwrap();
+                arena.append(slot, 8, &warm, &warm).unwrap();
+                DecodeRow { token: 3, adapter: (i % 4) as i32, kv_slot: slot }
+            })
+            .collect();
+        let _ = be.decode(&rows, &mut arena).unwrap();
+        for r in &rows {
+            arena.release(r.kv_slot).unwrap();
+        }
+    });
+    results.push(("native_decode_b8_us".to_string(), dec.mean_us));
+
+    let seqs: Vec<TrainSeq> = (0..2)
+        .map(|i| TrainSeq {
+            tokens: (0..32).map(|k| (i * 13 + k * 5 + 1) % v).collect(),
+            labels: (0..32).map(|k| (i * 13 + k * 5 + 1) % v).collect(),
+            adapter: i,
+            train: true,
+            loss_scale: 0.25,
+        })
+        .collect();
+    let tr = bench_for("native_train_b2_s32", 1.0, || {
+        let _ = be.train_step(&seqs).unwrap();
+    });
+    results.push(("native_train_b2_s32_us".to_string(), tr.mean_us));
+
+    let ad = bench_for("native_adam", 1.0, || {
+        be.optim_step(&[0, 1], 2e-5, 1).unwrap();
+    });
+    results.push(("native_adam_us".to_string(), ad.mean_us));
+    Ok(results)
+}
+
+/// Append this run's numbers to the BENCH_SMLM.json trajectory (first run
+/// creates the first entry).
+fn record_trajectory(entries: &[(String, f64)]) -> anyhow::Result<()> {
+    // Best-effort read: a missing, truncated or hand-mangled file starts a
+    // fresh trajectory instead of discarding this run's numbers.
+    let mut trajectory: Vec<Json> = std::fs::read_to_string(BENCH_JSON)
+        .ok()
+        .and_then(|text| json::parse(&text).ok())
+        .and_then(|doc| doc.get("trajectory").and_then(|t| t.as_arr().ok().map(|a| a.to_vec())))
+        .unwrap_or_default();
+    let ts = SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs()).unwrap_or(0);
+    let mut kvs: Vec<(&str, Json)> = vec![("unix_ts", Json::Num(ts as f64))];
+    for (k, v) in entries {
+        kvs.push((k.as_str(), Json::Num(*v)));
+    }
+    trajectory.push(Json::obj(kvs));
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("smlm".to_string())),
+        ("trajectory", Json::Arr(trajectory)),
+    ]);
+    std::fs::write(BENCH_JSON, doc.to_string())?;
+    println!("recorded trajectory entry -> {BENCH_JSON}");
+    Ok(())
+}
+
+fn xla_kernels() -> anyhow::Result<()> {
     let dir = "artifacts";
     if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
-        eprintln!("artifacts missing — run `make artifacts` first");
+        eprintln!("artifacts missing — skipping XLA kernel bench (run `make artifacts`)");
         return Ok(());
     }
-    let rt = Runtime::load(dir)?;
-    let manifest = rt.manifest.clone();
-    let store = WeightStore::open(dir, &manifest)?;
-    let mut reg = VirtualizedRegistry::new(&manifest, &store)?;
-    for i in 0..manifest.build.lora.max_adapters {
-        let ad = LoraAdapter::from_store(&store, &manifest, i, format!("a{i}"))?;
-        reg.attach(format!("vm{i}"), ad, i, SlotState::Inference)?;
-    }
-    let mut be = XlaBackend::new(rt, &store)?;
-    be.sync_adapters(&mut reg)?;
+    let (mut be, _reg, manifest, _store) = xla_stack(dir, |_| true)?;
     let g = be.geometry().clone();
     let te = g.num_kv_heads * g.head_dim;
-    let cache_cfg = CacheConfig {
-        num_slots: 32,
-        slot_capacity: g.max_cache_len,
-        block_tokens: 16,
-        total_blocks: 32 * g.max_cache_len / 16,
-        num_layers: g.num_layers,
-        token_elems: te,
-    };
+    let cache_cfg = cache_config_for(&g, 32);
 
     println!("== kernels bench (real XLA; budget 2s per case) ==");
 
@@ -131,4 +266,11 @@ fn main() -> anyhow::Result<()> {
     });
 
     Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut entries = smlm_sweep();
+    entries.extend(native_steps()?);
+    record_trajectory(&entries)?;
+    xla_kernels()
 }

@@ -3,8 +3,14 @@
 //! The coordinator is a deterministic state machine over an abstract
 //! [`Backend`]:
 //!
+//! * [`NativeBackend`] computes real numerics in pure Rust on the host —
+//!   embedding, RoPE/GQA attention over the KV arena, SiLU MLP, SMLM LoRA
+//!   deltas, cross-entropy + LoRA-only backprop, Adam. No artifacts, no
+//!   PJRT: this is the path `cargo test -q` and CI exercise (DESIGN.md §3
+//!   S8).
 //! * [`XlaBackend`] executes the AOT artifacts on the PJRT CPU client —
-//!   the real numerics path used by tests, examples and calibration.
+//!   the artifact-backed numerics path used where `make artifacts` has
+//!   run.
 //! * [`SimBackend`] replays a calibrated cost model — used by the figure
 //!   harnesses, which sweep thousands of requests × hundreds of decode
 //!   steps (DESIGN.md §3 records this substitution; EXPERIMENTS.md
@@ -16,10 +22,12 @@
 //! launch).
 
 mod cost;
+mod native;
 mod sim;
 mod xla_backend;
 
 pub use cost::CostModel;
+pub use native::NativeBackend;
 pub use sim::SimBackend;
 pub use xla_backend::XlaBackend;
 

@@ -1,0 +1,1192 @@
+//! The native CPU backend: real forward/backward numerics in pure Rust.
+//!
+//! Where [`XlaBackend`](crate::engine::XlaBackend) executes AOT artifacts
+//! through PJRT (absent in the offline image) and `SimBackend` replays a
+//! cost model, this backend computes the actual math on the host —
+//! embedding, RoPE/GQA attention over the layer-major KV arena, SiLU MLP,
+//! cross-entropy loss, LoRA-only backprop and Adam — using the primitive
+//! layer in [`runtime::kernels`](crate::runtime::kernels). LoRA deltas go
+//! through the Segmented Multi-LoRA Multiplication kernel: one gathered
+//! two-stage matmul per *distinct adapter in the batch* instead of one per
+//! row ([`use_segmented`](NativeBackend::use_segmented) = false switches to
+//! the per-row reference, the correctness oracle and ablation baseline).
+//!
+//! Layout contracts match the AOT path byte-for-byte: weights come from a
+//! `WeightStore` under the same `base.*`/`lora.*` names, the adapter bank
+//! is the registry's host mirror, and KV appends use the arena's
+//! layer-major `[nl, n, te]` payload. The unified entry runs
+//! fine-tune ∥ prefill ∥ decode in one call: the inference classes share
+//! one flattened batch (one SMLM segmentation across prefill and decode
+//! rows — Algorithm 1's slot layout), the fine-tune rows additionally run
+//! the backward pass.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::engine::{Backend, DecodeRow, PrefillSeq, StepCost, TrainSeq, UnifiedOut};
+use crate::kvcache::KvCacheManager;
+use crate::model::{VirtualizedRegistry, WeightStore};
+use crate::runtime::kernels::{
+    gemm_nn, gemm_nt, gemm_tn, rmsnorm, rmsnorm_backward, rope, silu, silu_grad,
+    smlm_per_row, smlm_segmented, softmax_inplace, LoraBankView,
+};
+use crate::runtime::{BucketTable, LoraGeometry, Manifest, ModelGeometry};
+
+const ADAM_BETA1: f32 = 0.9;
+const ADAM_BETA2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+
+struct LayerWeights {
+    wq: Vec<f32>,    // [H, q_dim]
+    wk: Vec<f32>,    // [H, kv_dim]
+    wv: Vec<f32>,    // [H, kv_dim]
+    wo: Vec<f32>,    // [q_dim, H]
+    wgate: Vec<f32>, // [H, I]
+    wup: Vec<f32>,   // [H, I]
+    wdown: Vec<f32>, // [I, H]
+    ln1: Vec<f32>,   // [H]
+    ln2: Vec<f32>,   // [H]
+}
+
+/// One LoRA-targeted projection: the stacked bank block plus its optimizer
+/// state (gradient accumulator, Adam moments), all `[slots, …]`-leading.
+struct LoraSite {
+    module: &'static str,
+    din: usize,
+    dout: usize,
+    a: Vec<f32>,      // [S, din, r]
+    b: Vec<f32>,      // [S, r, dout]
+    grad_a: Vec<f32>, // [S, din, r]
+    grad_b: Vec<f32>, // [S, r, dout]
+    m_a: Vec<f32>,
+    v_a: Vec<f32>,
+    m_b: Vec<f32>,
+    v_b: Vec<f32>,
+}
+
+impl LoraSite {
+    fn a_elems(&self, rank: usize) -> usize {
+        self.din * rank
+    }
+
+    fn b_elems(&self, rank: usize) -> usize {
+        rank * self.dout
+    }
+}
+
+/// One flattened sequence inside an inference launch.
+struct InfSeq {
+    start: usize,
+    len: usize,
+    adapter: i32,
+    kv_slot: usize,
+    /// Cache length at launch (the sequence's global position offset).
+    pos0: usize,
+}
+
+/// Per-layer activations stashed by the training forward pass.
+struct LayerStash {
+    xin: Vec<f32>,
+    inv_rms1: Vec<f32>,
+    h1: Vec<f32>,
+    q: Vec<f32>, // post-RoPE
+    k: Vec<f32>, // post-RoPE
+    v: Vec<f32>,
+    probs: Vec<f32>, // [nh, n, n], causal
+    ctx: Vec<f32>,   // [n, q_dim]
+    x_mid: Vec<f32>,
+    inv_rms2: Vec<f32>,
+    h2: Vec<f32>,
+    gate_pre: Vec<f32>,
+    up: Vec<f32>,
+}
+
+struct TrainStash {
+    n: usize,
+    layers: Vec<LayerStash>,
+    x_last: Vec<f32>,
+    inv_rms_f: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+/// Pure-Rust CPU backend over a `WeightStore`-shaped model.
+pub struct NativeBackend {
+    geometry: ModelGeometry,
+    lora: LoraGeometry,
+    buckets: BucketTable,
+    embed: Vec<f32>,      // [V, H]
+    final_norm: Vec<f32>, // [H]
+    lm_head: Vec<f32>,    // [H, V]
+    layers: Vec<LayerWeights>,
+    /// `sites[layer]` — the LoRA-targeted projections, in manifest target
+    /// order.
+    sites: Vec<Vec<LoraSite>>,
+    scaling: Vec<f32>, // [S]
+    /// true = segmented SMLM kernel; false = the per-row reference path
+    /// (correctness oracle / ablation baseline).
+    pub use_segmented: bool,
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+impl NativeBackend {
+    /// Build from a manifest + weight store (artifact-shaped or the
+    /// synthetic in-memory model from `harness::native_model`).
+    pub fn new(manifest: &Manifest, store: &WeightStore) -> Result<Self> {
+        let g = manifest.build.model.clone();
+        let l = manifest.build.lora.clone();
+        let read = |name: &str, want: &[usize]| -> Result<Vec<f32>> {
+            let (data, shape) = store.f32_slice(name)?;
+            if shape != want {
+                return Err(anyhow!("{name}: shape {shape:?}, native wants {want:?}"));
+            }
+            Ok(data.to_vec())
+        };
+
+        let (h, v, i) = (g.hidden_size, g.vocab_size, g.intermediate_size);
+        let embed = read("base.embed", &[v, h])?;
+        let mut layers = Vec::with_capacity(g.num_layers);
+        for li in 0..g.num_layers {
+            layers.push(LayerWeights {
+                wq: read(&format!("base.layers.{li}.wq"), &[h, g.q_dim])?,
+                wk: read(&format!("base.layers.{li}.wk"), &[h, g.kv_dim])?,
+                wv: read(&format!("base.layers.{li}.wv"), &[h, g.kv_dim])?,
+                wo: read(&format!("base.layers.{li}.wo"), &[g.q_dim, h])?,
+                wgate: read(&format!("base.layers.{li}.wgate"), &[h, i])?,
+                wup: read(&format!("base.layers.{li}.wup"), &[h, i])?,
+                wdown: read(&format!("base.layers.{li}.wdown"), &[i, h])?,
+                ln1: read(&format!("base.layers.{li}.ln1"), &[h])?,
+                ln2: read(&format!("base.layers.{li}.ln2"), &[h])?,
+            });
+        }
+        let final_norm = read("base.final_norm", &[h])?;
+        let lm_head = read("base.lm_head", &[h, v])?;
+
+        let slots = l.max_adapters;
+        let r = l.rank;
+        let mut sites: Vec<Vec<LoraSite>> = Vec::with_capacity(g.num_layers);
+        for li in 0..g.num_layers {
+            let mut layer_sites = Vec::new();
+            for m in &l.targets {
+                let module: &'static str = match m.as_str() {
+                    "q" => "q",
+                    "k" => "k",
+                    "v" => "v",
+                    "o" => "o",
+                    other => {
+                        return Err(anyhow!(
+                            "native backend supports LoRA targets q/k/v/o, got {other}"
+                        ))
+                    }
+                };
+                let (din, dout) = g
+                    .lora_target_dims(module)
+                    .expect("q/k/v/o always have dims");
+                let a = read(&format!("lora.layers.{li}.{m}.a"), &[slots, din, r])?;
+                let b = read(&format!("lora.layers.{li}.{m}.b"), &[slots, r, dout])?;
+                let (na, nb) = (a.len(), b.len());
+                layer_sites.push(LoraSite {
+                    module,
+                    din,
+                    dout,
+                    a,
+                    b,
+                    grad_a: vec![0.0; na],
+                    grad_b: vec![0.0; nb],
+                    m_a: vec![0.0; na],
+                    v_a: vec![0.0; na],
+                    m_b: vec![0.0; nb],
+                    v_b: vec![0.0; nb],
+                });
+            }
+            sites.push(layer_sites);
+        }
+        let scaling = read("lora.scaling", &[slots])?;
+
+        Ok(Self {
+            geometry: g,
+            lora: l,
+            buckets: manifest.build.buckets.clone(),
+            embed,
+            final_norm,
+            lm_head,
+            layers,
+            sites,
+            scaling,
+            use_segmented: true,
+        })
+    }
+
+    fn check_adapter(&self, adapter: i32) -> Result<()> {
+        if adapter >= self.lora.max_adapters as i32 {
+            return Err(anyhow!(
+                "adapter {adapter} out of range (bank has {} slots)",
+                self.lora.max_adapters
+            ));
+        }
+        Ok(())
+    }
+
+    fn site_index(&self, li: usize, module: &str) -> Option<usize> {
+        self.sites[li].iter().position(|s| s.module == module)
+    }
+
+    /// Apply the LoRA delta of site (li, module) to `y` for the given
+    /// per-row adapters, via the selected kernel path.
+    fn apply_lora(&self, li: usize, module: &str, x: &[f32], adapters: &[i32], y: &mut [f32]) {
+        let Some(si) = self.site_index(li, module) else { return };
+        let site = &self.sites[li][si];
+        let bank = LoraBankView {
+            a: &site.a,
+            b: &site.b,
+            scaling: &self.scaling,
+            rank: self.lora.rank,
+            din: site.din,
+            dout: site.dout,
+        };
+        if self.use_segmented {
+            smlm_segmented(x, adapters, &bank, y);
+        } else {
+            smlm_per_row(x, adapters, &bank, y);
+        }
+    }
+
+    /// Embedding lookup into a fresh `[n, H]` activation matrix.
+    fn embed_rows(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let h = self.geometry.hidden_size;
+        let v = self.geometry.vocab_size;
+        let mut x = vec![0.0f32; tokens.len() * h];
+        for (t, &tok) in tokens.iter().enumerate() {
+            if tok < 0 || tok as usize >= v {
+                return Err(anyhow!("token {tok} outside vocab [0, {v})"));
+            }
+            let src = &self.embed[tok as usize * h..(tok as usize + 1) * h];
+            x[t * h..(t + 1) * h].copy_from_slice(src);
+        }
+        Ok(x)
+    }
+
+    /// lm_head over selected rows of the final hidden states.
+    fn project_logits(&self, x: &[f32], rows: &[usize]) -> Vec<Vec<f32>> {
+        let h = self.geometry.hidden_size;
+        let v = self.geometry.vocab_size;
+        let eps = self.geometry.rms_eps as f32;
+        let mut hf = vec![0.0f32; h];
+        rows.iter()
+            .map(|&row| {
+                rmsnorm(&mut hf, &x[row * h..(row + 1) * h], &self.final_norm, eps);
+                let mut logits = vec![0.0f32; v];
+                gemm_nn(&mut logits, &hf, &self.lm_head, 1, h, v);
+                logits
+            })
+            .collect()
+    }
+
+    /// One flattened inference launch over `seqs` (prefill sequences and
+    /// decode rows alike). Computes per-sequence last-token logits and
+    /// appends the new K/V to each sequence's arena slot.
+    fn forward_inference(
+        &self,
+        tokens: &[i32],
+        seqs: &[InfSeq],
+        cache: &mut KvCacheManager,
+    ) -> Result<Vec<Vec<f32>>> {
+        let g = &self.geometry;
+        let n = tokens.len();
+        let (h, qd, kd) = (g.hidden_size, g.q_dim, g.kv_dim);
+        let (nh, nkv, hd) = (g.num_heads, g.num_kv_heads, g.head_dim);
+        let group = nh / nkv;
+        let te = nkv * hd;
+        let inv_sqrt = 1.0 / (hd as f32).sqrt();
+        let eps = g.rms_eps as f32;
+
+        let mut row_adapters = vec![-1i32; n];
+        for s in seqs {
+            self.check_adapter(s.adapter)?;
+            row_adapters[s.start..s.start + s.len].fill(s.adapter);
+        }
+
+        let mut x = self.embed_rows(tokens)?;
+        // Per-sequence layer-major K/V payloads for the post-launch append.
+        let mut k_payload: Vec<Vec<f32>> =
+            seqs.iter().map(|s| vec![0.0; g.num_layers * s.len * te]).collect();
+        let mut v_payload: Vec<Vec<f32>> =
+            seqs.iter().map(|s| vec![0.0; g.num_layers * s.len * te]).collect();
+
+        let mut h1 = vec![0.0f32; n * h];
+        let mut scores: Vec<f32> = Vec::new();
+        for (li, lw) in self.layers.iter().enumerate() {
+            for t in 0..n {
+                rmsnorm(&mut h1[t * h..(t + 1) * h], &x[t * h..(t + 1) * h], &lw.ln1, eps);
+            }
+            let mut q = vec![0.0f32; n * qd];
+            gemm_nn(&mut q, &h1, &lw.wq, n, h, qd);
+            self.apply_lora(li, "q", &h1, &row_adapters, &mut q);
+            let mut k = vec![0.0f32; n * kd];
+            gemm_nn(&mut k, &h1, &lw.wk, n, h, kd);
+            self.apply_lora(li, "k", &h1, &row_adapters, &mut k);
+            let mut v = vec![0.0f32; n * kd];
+            gemm_nn(&mut v, &h1, &lw.wv, n, h, kd);
+            self.apply_lora(li, "v", &h1, &row_adapters, &mut v);
+
+            for s in seqs {
+                for t in 0..s.len {
+                    let row = s.start + t;
+                    let pos = s.pos0 + t;
+                    rope(&mut q[row * qd..(row + 1) * qd], nh, hd, pos, g.rope_theta, 1.0);
+                    rope(&mut k[row * kd..(row + 1) * kd], nkv, hd, pos, g.rope_theta, 1.0);
+                }
+            }
+
+            // Stash this layer's new K/V into the append payloads.
+            for (si, s) in seqs.iter().enumerate() {
+                for t in 0..s.len {
+                    let row = s.start + t;
+                    let dst = li * s.len * te + t * te;
+                    k_payload[si][dst..dst + te].copy_from_slice(&k[row * kd..(row + 1) * kd]);
+                    v_payload[si][dst..dst + te].copy_from_slice(&v[row * kd..(row + 1) * kd]);
+                }
+            }
+
+            // Attention: cached prefix (layer plane) + in-launch keys.
+            let mut ctx = vec![0.0f32; n * qd];
+            for s in seqs {
+                let (ck, cv) = (cache.k_layer(s.kv_slot, li), cache.v_layer(s.kv_slot, li));
+                for t in 0..s.len {
+                    let row = s.start + t;
+                    let pos = s.pos0 + t;
+                    for head in 0..nh {
+                        let kvh = head / group;
+                        let qh = &q[row * qd + head * hd..row * qd + (head + 1) * hd];
+                        scores.clear();
+                        scores.resize(pos + 1, 0.0);
+                        for (j, sc) in scores.iter_mut().enumerate() {
+                            let kj = if j < s.pos0 {
+                                &ck[j * te + kvh * hd..j * te + (kvh + 1) * hd]
+                            } else {
+                                let jr = s.start + (j - s.pos0);
+                                &k[jr * kd + kvh * hd..jr * kd + (kvh + 1) * hd]
+                            };
+                            *sc = dot(qh, kj) * inv_sqrt;
+                        }
+                        softmax_inplace(&mut scores);
+                        let out = &mut ctx[row * qd + head * hd..row * qd + (head + 1) * hd];
+                        for (j, &p) in scores.iter().enumerate() {
+                            let vj = if j < s.pos0 {
+                                &cv[j * te + kvh * hd..j * te + (kvh + 1) * hd]
+                            } else {
+                                let jr = s.start + (j - s.pos0);
+                                &v[jr * kd + kvh * hd..jr * kd + (kvh + 1) * hd]
+                            };
+                            for (o, vv) in out.iter_mut().zip(vj) {
+                                *o += p * vv;
+                            }
+                        }
+                    }
+                }
+            }
+
+            let mut attn_out = vec![0.0f32; n * h];
+            gemm_nn(&mut attn_out, &ctx, &lw.wo, n, qd, h);
+            self.apply_lora(li, "o", &ctx, &row_adapters, &mut attn_out);
+            for (xx, ao) in x.iter_mut().zip(&attn_out) {
+                *xx += ao;
+            }
+
+            // MLP.
+            let i = g.intermediate_size;
+            let mut h2 = vec![0.0f32; n * h];
+            for t in 0..n {
+                rmsnorm(&mut h2[t * h..(t + 1) * h], &x[t * h..(t + 1) * h], &lw.ln2, eps);
+            }
+            let mut gate = vec![0.0f32; n * i];
+            gemm_nn(&mut gate, &h2, &lw.wgate, n, h, i);
+            let mut up = vec![0.0f32; n * i];
+            gemm_nn(&mut up, &h2, &lw.wup, n, h, i);
+            for (gv, uv) in gate.iter_mut().zip(&up) {
+                *gv = silu(*gv) * uv;
+            }
+            let mut mlp = vec![0.0f32; n * h];
+            gemm_nn(&mut mlp, &gate, &lw.wdown, n, i, h);
+            for (xx, mv) in x.iter_mut().zip(&mlp) {
+                *xx += mv;
+            }
+        }
+
+        // Last-token logits per sequence, then the KV appends.
+        let last_rows: Vec<usize> = seqs.iter().map(|s| s.start + s.len - 1).collect();
+        let logits = self.project_logits(&x, &last_rows);
+        for (si, s) in seqs.iter().enumerate() {
+            cache.append(s.kv_slot, s.len, &k_payload[si], &v_payload[si])?;
+        }
+        Ok(logits)
+    }
+
+    /// Training forward over one sequence (full causal attention, no
+    /// cache), stashing every activation the backward pass needs.
+    fn forward_train(&self, tokens: &[i32], adapter: i32) -> Result<TrainStash> {
+        let g = &self.geometry;
+        let n = tokens.len();
+        let (h, qd, kd, v) = (g.hidden_size, g.q_dim, g.kv_dim, g.vocab_size);
+        let (nh, nkv, hd) = (g.num_heads, g.num_kv_heads, g.head_dim);
+        let group = nh / nkv;
+        let inv_sqrt = 1.0 / (hd as f32).sqrt();
+        let eps = g.rms_eps as f32;
+        let row_adapters = vec![adapter; n];
+
+        let mut x = self.embed_rows(tokens)?;
+        let mut layers = Vec::with_capacity(g.num_layers);
+        for (li, lw) in self.layers.iter().enumerate() {
+            let xin = x.clone();
+            let mut inv_rms1 = vec![0.0f32; n];
+            let mut h1 = vec![0.0f32; n * h];
+            for t in 0..n {
+                inv_rms1[t] =
+                    rmsnorm(&mut h1[t * h..(t + 1) * h], &xin[t * h..(t + 1) * h], &lw.ln1, eps);
+            }
+            let mut q = vec![0.0f32; n * qd];
+            gemm_nn(&mut q, &h1, &lw.wq, n, h, qd);
+            self.apply_lora(li, "q", &h1, &row_adapters, &mut q);
+            let mut k = vec![0.0f32; n * kd];
+            gemm_nn(&mut k, &h1, &lw.wk, n, h, kd);
+            self.apply_lora(li, "k", &h1, &row_adapters, &mut k);
+            let mut vv = vec![0.0f32; n * kd];
+            gemm_nn(&mut vv, &h1, &lw.wv, n, h, kd);
+            self.apply_lora(li, "v", &h1, &row_adapters, &mut vv);
+            for t in 0..n {
+                rope(&mut q[t * qd..(t + 1) * qd], nh, hd, t, g.rope_theta, 1.0);
+                rope(&mut k[t * kd..(t + 1) * kd], nkv, hd, t, g.rope_theta, 1.0);
+            }
+
+            let mut probs = vec![0.0f32; nh * n * n];
+            let mut ctx = vec![0.0f32; n * qd];
+            let mut scores: Vec<f32> = Vec::new();
+            for t in 0..n {
+                for head in 0..nh {
+                    let kvh = head / group;
+                    let qh = &q[t * qd + head * hd..t * qd + (head + 1) * hd];
+                    scores.clear();
+                    scores.resize(t + 1, 0.0);
+                    for (j, sc) in scores.iter_mut().enumerate() {
+                        let kj = &k[j * kd + kvh * hd..j * kd + (kvh + 1) * hd];
+                        *sc = dot(qh, kj) * inv_sqrt;
+                    }
+                    softmax_inplace(&mut scores);
+                    probs[(head * n + t) * n..(head * n + t) * n + t + 1]
+                        .copy_from_slice(&scores);
+                    let out = &mut ctx[t * qd + head * hd..t * qd + (head + 1) * hd];
+                    for (j, &p) in scores.iter().enumerate() {
+                        let vj = &vv[j * kd + kvh * hd..j * kd + (kvh + 1) * hd];
+                        for (o, w) in out.iter_mut().zip(vj) {
+                            *o += p * w;
+                        }
+                    }
+                }
+            }
+
+            let mut attn_out = vec![0.0f32; n * h];
+            gemm_nn(&mut attn_out, &ctx, &lw.wo, n, qd, h);
+            self.apply_lora(li, "o", &ctx, &row_adapters, &mut attn_out);
+            for (xx, ao) in x.iter_mut().zip(&attn_out) {
+                *xx += ao;
+            }
+            let x_mid = x.clone();
+
+            let i = g.intermediate_size;
+            let mut inv_rms2 = vec![0.0f32; n];
+            let mut h2 = vec![0.0f32; n * h];
+            for t in 0..n {
+                inv_rms2[t] =
+                    rmsnorm(&mut h2[t * h..(t + 1) * h], &x_mid[t * h..(t + 1) * h], &lw.ln2, eps);
+            }
+            let mut gate_pre = vec![0.0f32; n * i];
+            gemm_nn(&mut gate_pre, &h2, &lw.wgate, n, h, i);
+            let mut up = vec![0.0f32; n * i];
+            gemm_nn(&mut up, &h2, &lw.wup, n, h, i);
+            let mut act = vec![0.0f32; n * i];
+            for j in 0..n * i {
+                act[j] = silu(gate_pre[j]) * up[j];
+            }
+            let mut mlp = vec![0.0f32; n * h];
+            gemm_nn(&mut mlp, &act, &lw.wdown, n, i, h);
+            for (xx, mv) in x.iter_mut().zip(&mlp) {
+                *xx += mv;
+            }
+
+            layers.push(LayerStash {
+                xin,
+                inv_rms1,
+                h1,
+                q,
+                k,
+                v: vv,
+                probs,
+                ctx,
+                x_mid,
+                inv_rms2,
+                h2,
+                gate_pre,
+                up,
+            });
+        }
+
+        let x_last = x;
+        let mut inv_rms_f = vec![0.0f32; n];
+        let mut hf = vec![0.0f32; n * h];
+        for t in 0..n {
+            let row = &x_last[t * h..(t + 1) * h];
+            inv_rms_f[t] = rmsnorm(&mut hf[t * h..(t + 1) * h], row, &self.final_norm, eps);
+        }
+        let mut logits = vec![0.0f32; n * v];
+        gemm_nn(&mut logits, &hf, &self.lm_head, n, h, v);
+        Ok(TrainStash { n, layers, x_last, inv_rms_f, logits })
+    }
+
+    /// Causal-LM loss over a stash: position t predicts `labels[t+1]`
+    /// (labels < 0 are ignored). Returns (mean loss, dlogits·loss_scale)
+    /// — dlogits is `None` when `want_grad` is false or nothing counted.
+    fn loss_and_dlogits(
+        &self,
+        stash: &TrainStash,
+        labels: &[i32],
+        loss_scale: f32,
+        want_grad: bool,
+    ) -> (f32, Option<Vec<f32>>) {
+        let v = self.geometry.vocab_size;
+        let n = stash.n;
+        let mut counted: Vec<(usize, usize)> = Vec::new(); // (pos, label)
+        for t in 0..n.saturating_sub(1) {
+            let lab = labels.get(t + 1).copied().unwrap_or(-1);
+            if lab >= 0 && (lab as usize) < v {
+                counted.push((t, lab as usize));
+            }
+        }
+        if counted.is_empty() {
+            return (0.0, None);
+        }
+        let inv_count = 1.0 / counted.len() as f32;
+        let mut loss = 0.0f32;
+        let mut dlogits = if want_grad { Some(vec![0.0f32; n * v]) } else { None };
+        let mut probs = vec![0.0f32; v];
+        for &(t, lab) in &counted {
+            probs.copy_from_slice(&stash.logits[t * v..(t + 1) * v]);
+            softmax_inplace(&mut probs);
+            loss -= probs[lab].max(1e-30).ln() * inv_count;
+            if let Some(d) = dlogits.as_mut() {
+                let row = &mut d[t * v..(t + 1) * v];
+                for (rv, &p) in row.iter_mut().zip(&probs) {
+                    *rv = p * inv_count * loss_scale;
+                }
+                row[lab] -= inv_count * loss_scale;
+            }
+        }
+        (loss, dlogits)
+    }
+
+    /// LoRA backward at one site for a uniform-adapter sequence:
+    /// accumulates dA/dB into the grad bank and the input gradient into
+    /// `dx`.
+    fn lora_backward(
+        sites: &mut [LoraSite],
+        site_idx: usize,
+        rank: usize,
+        scaling: &[f32],
+        slot: usize,
+        x: &[f32],
+        dy: &[f32],
+        dx: &mut [f32],
+        n: usize,
+    ) {
+        let site = &mut sites[site_idx];
+        let (din, dout) = (site.din, site.dout);
+        let scale = scaling[slot];
+        let (ae, be) = (site.a_elems(rank), site.b_elems(rank));
+        let a_slot = &site.a[slot * ae..(slot + 1) * ae];
+        let b_slot = &site.b[slot * be..(slot + 1) * be];
+
+        // u = scale · x·A (used only for dB = uᵀ·dy).
+        let mut u = vec![0.0f32; n * rank];
+        gemm_nn(&mut u, x, a_slot, n, din, rank);
+        for uv in u.iter_mut() {
+            *uv *= scale;
+        }
+        gemm_tn(&mut site.grad_b[slot * be..(slot + 1) * be], &u, dy, n, rank, dout);
+
+        // du = scale · dy·Bᵀ; dA = xᵀ·du; dx += du·Aᵀ.
+        let mut du = vec![0.0f32; n * rank];
+        gemm_nt(&mut du, dy, b_slot, n, dout, rank);
+        for dv in du.iter_mut() {
+            *dv *= scale;
+        }
+        gemm_tn(&mut site.grad_a[slot * ae..(slot + 1) * ae], x, &du, n, din, rank);
+        gemm_nt(dx, &du, a_slot, n, rank, din);
+    }
+
+    /// Backward pass over one stashed training sequence: propagates
+    /// dlogits down to the embeddings, accumulating ONLY the LoRA A/B
+    /// gradients for `adapter` (base weights are frozen — the paper's
+    /// LoRA-only fine-tuning contract).
+    fn backward_train(&mut self, stash: &TrainStash, dlogits: &[f32], adapter: i32) {
+        let g = self.geometry.clone();
+        let rank = self.lora.rank;
+        let n = stash.n;
+        let (h, qd, kd, v) = (g.hidden_size, g.q_dim, g.kv_dim, g.vocab_size);
+        let (nh, nkv, hd) = (g.num_heads, g.num_kv_heads, g.head_dim);
+        let group = nh / nkv;
+        let inv_sqrt = 1.0 / (hd as f32).sqrt();
+        let slot = adapter.max(0) as usize;
+        let row_has_lora = adapter >= 0;
+
+        // dx through the head: dhf = dlogits·Wᵀ, then final-norm backward.
+        let mut dhf = vec![0.0f32; n * h];
+        gemm_nt(&mut dhf, dlogits, &self.lm_head, n, v, h);
+        let mut dx = vec![0.0f32; n * h];
+        for t in 0..n {
+            rmsnorm_backward(
+                &mut dx[t * h..(t + 1) * h],
+                &dhf[t * h..(t + 1) * h],
+                &stash.x_last[t * h..(t + 1) * h],
+                &self.final_norm,
+                stash.inv_rms_f[t],
+            );
+        }
+
+        let scaling = self.scaling.clone();
+        // Split borrow: layer weights read-only, site grads mutable.
+        let NativeBackend { layers, sites, .. } = self;
+        for li in (0..layers.len()).rev() {
+            let lw = &layers[li];
+            let st = &stash.layers[li];
+            let i = g.intermediate_size;
+
+            // ---- MLP backward: dx is d(layer output).
+            let mut d_act = vec![0.0f32; n * i];
+            gemm_nt(&mut d_act, &dx, &lw.wdown, n, h, i);
+            let mut d_gate_pre = vec![0.0f32; n * i];
+            let mut d_up = vec![0.0f32; n * i];
+            for j in 0..n * i {
+                d_gate_pre[j] = d_act[j] * st.up[j] * silu_grad(st.gate_pre[j]);
+                d_up[j] = d_act[j] * silu(st.gate_pre[j]);
+            }
+            let mut dh2 = vec![0.0f32; n * h];
+            gemm_nt(&mut dh2, &d_gate_pre, &lw.wgate, n, i, h);
+            gemm_nt(&mut dh2, &d_up, &lw.wup, n, i, h);
+            // d(x_mid) = residual passthrough + ln2 backward.
+            let mut dx_mid = dx; // residual branch: dx flows through unchanged
+            for t in 0..n {
+                rmsnorm_backward(
+                    &mut dx_mid[t * h..(t + 1) * h],
+                    &dh2[t * h..(t + 1) * h],
+                    &st.x_mid[t * h..(t + 1) * h],
+                    &lw.ln2,
+                    st.inv_rms2[t],
+                );
+            }
+
+            // ---- Attention backward: dx_mid is d(attn residual output).
+            let mut d_ctx = vec![0.0f32; n * qd];
+            gemm_nt(&mut d_ctx, &dx_mid, &lw.wo, n, h, qd);
+            if row_has_lora {
+                if let Some(si) = sites[li].iter().position(|s| s.module == "o") {
+                    Self::lora_backward(
+                        &mut sites[li],
+                        si,
+                        rank,
+                        &scaling,
+                        slot,
+                        &st.ctx,
+                        &dx_mid,
+                        &mut d_ctx,
+                        n,
+                    );
+                }
+            }
+
+            let mut dq = vec![0.0f32; n * qd];
+            let mut dk = vec![0.0f32; n * kd];
+            let mut dv = vec![0.0f32; n * kd];
+            let mut dp: Vec<f32> = Vec::new();
+            for t in 0..n {
+                for head in 0..nh {
+                    let kvh = head / group;
+                    let prow = &st.probs[(head * n + t) * n..(head * n + t) * n + t + 1];
+                    let dch = &d_ctx[t * qd + head * hd..t * qd + (head + 1) * hd];
+                    // dP and dV.
+                    dp.clear();
+                    dp.resize(t + 1, 0.0);
+                    for j in 0..=t {
+                        let vj = &st.v[j * kd + kvh * hd..j * kd + (kvh + 1) * hd];
+                        dp[j] = dot(dch, vj);
+                        let dvj = &mut dv[j * kd + kvh * hd..j * kd + (kvh + 1) * hd];
+                        let p = prow[j];
+                        for (d, &c) in dvj.iter_mut().zip(dch) {
+                            *d += p * c;
+                        }
+                    }
+                    // Softmax backward: dS_j = P_j (dP_j − Σ dP·P).
+                    let mut dot_pp = 0.0f32;
+                    for j in 0..=t {
+                        dot_pp += dp[j] * prow[j];
+                    }
+                    let qh = &st.q[t * qd + head * hd..t * qd + (head + 1) * hd];
+                    let dqh_base = t * qd + head * hd;
+                    for j in 0..=t {
+                        let ds = prow[j] * (dp[j] - dot_pp) * inv_sqrt;
+                        let kj = &st.k[j * kd + kvh * hd..j * kd + (kvh + 1) * hd];
+                        for d in 0..hd {
+                            dq[dqh_base + d] += ds * kj[d];
+                        }
+                        let dkj = &mut dk[j * kd + kvh * hd..j * kd + (kvh + 1) * hd];
+                        for (dd, &qv) in dkj.iter_mut().zip(qh) {
+                            *dd += ds * qv;
+                        }
+                    }
+                }
+            }
+            // RoPE is orthonormal: invert by rotating the gradients back.
+            for t in 0..n {
+                rope(&mut dq[t * qd..(t + 1) * qd], nh, hd, t, g.rope_theta, -1.0);
+                rope(&mut dk[t * kd..(t + 1) * kd], nkv, hd, t, g.rope_theta, -1.0);
+            }
+
+            let mut dh1 = vec![0.0f32; n * h];
+            gemm_nt(&mut dh1, &dq, &lw.wq, n, qd, h);
+            gemm_nt(&mut dh1, &dk, &lw.wk, n, kd, h);
+            gemm_nt(&mut dh1, &dv, &lw.wv, n, kd, h);
+            if row_has_lora {
+                for (module, dy) in [("q", &dq), ("k", &dk), ("v", &dv)] {
+                    if let Some(si) = sites[li].iter().position(|s| s.module == module) {
+                        Self::lora_backward(
+                            &mut sites[li],
+                            si,
+                            rank,
+                            &scaling,
+                            slot,
+                            &st.h1,
+                            dy,
+                            &mut dh1,
+                            n,
+                        );
+                    }
+                }
+            }
+
+            // d(xin) = residual passthrough + ln1 backward.
+            let mut dxin = dx_mid;
+            for t in 0..n {
+                rmsnorm_backward(
+                    &mut dxin[t * h..(t + 1) * h],
+                    &dh1[t * h..(t + 1) * h],
+                    &st.xin[t * h..(t + 1) * h],
+                    &lw.ln1,
+                    st.inv_rms1[t],
+                );
+            }
+            dx = dxin;
+        }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn geometry(&self) -> &ModelGeometry {
+        &self.geometry
+    }
+
+    fn max_decode_batch(&self) -> usize {
+        self.buckets.max_decode()
+    }
+
+    fn unified_capacity(&self) -> Option<(usize, usize, usize)> {
+        self.buckets
+            .unified
+            .first()
+            .map(|u| (u.ft_batch, u.pf_batch, u.dec_batch))
+    }
+
+    fn prefill(
+        &mut self,
+        seqs: &[PrefillSeq],
+        cache: &mut KvCacheManager,
+    ) -> Result<(Vec<Vec<f32>>, StepCost)> {
+        if seqs.is_empty() {
+            return Ok((vec![], StepCost::default()));
+        }
+        let t0 = Instant::now();
+        let mut tokens = Vec::new();
+        let mut inf = Vec::with_capacity(seqs.len());
+        for q in seqs {
+            if q.tokens.is_empty() {
+                return Err(anyhow!("empty prefill"));
+            }
+            inf.push(InfSeq {
+                start: tokens.len(),
+                len: q.tokens.len(),
+                adapter: q.adapter,
+                kv_slot: q.kv_slot,
+                pos0: cache.len(q.kv_slot),
+            });
+            tokens.extend_from_slice(&q.tokens);
+        }
+        let logits = self.forward_inference(&tokens, &inf, cache)?;
+        let wall = t0.elapsed().as_secs_f64();
+        Ok((logits, StepCost { wall, virt: wall }))
+    }
+
+    fn decode(
+        &mut self,
+        rows: &[DecodeRow],
+        cache: &mut KvCacheManager,
+    ) -> Result<(Vec<Vec<f32>>, StepCost)> {
+        if rows.is_empty() {
+            return Ok((vec![], StepCost::default()));
+        }
+        let t0 = Instant::now();
+        let tokens: Vec<i32> = rows.iter().map(|r| r.token).collect();
+        let inf: Vec<InfSeq> = rows
+            .iter()
+            .enumerate()
+            .map(|(i, r)| InfSeq {
+                start: i,
+                len: 1,
+                adapter: r.adapter,
+                kv_slot: r.kv_slot,
+                pos0: cache.len(r.kv_slot),
+            })
+            .collect();
+        let logits = self.forward_inference(&tokens, &inf, cache)?;
+        let wall = t0.elapsed().as_secs_f64();
+        Ok((logits, StepCost { wall, virt: wall }))
+    }
+
+    fn train_step(&mut self, seqs: &[TrainSeq]) -> Result<(Vec<f32>, StepCost)> {
+        if seqs.is_empty() {
+            return Ok((vec![], StepCost::default()));
+        }
+        let t0 = Instant::now();
+        let mut losses = Vec::with_capacity(seqs.len());
+        for q in seqs {
+            self.check_adapter(q.adapter)?;
+            let stash = self.forward_train(&q.tokens, q.adapter)?;
+            let want_grad = q.train && q.adapter >= 0;
+            let (loss, dlogits) =
+                self.loss_and_dlogits(&stash, &q.labels, q.loss_scale, want_grad);
+            if let Some(d) = dlogits {
+                self.backward_train(&stash, &d, q.adapter);
+            }
+            losses.push(loss);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        Ok((losses, StepCost { wall, virt: wall }))
+    }
+
+    fn optim_step(&mut self, slots: &[usize], lr: f32, step: i32) -> Result<StepCost> {
+        let t0 = Instant::now();
+        // Validate before touching anything: a mid-loop error would leave
+        // some sites updated with their gradients cleared.
+        for &slot in slots {
+            if slot >= self.scaling.len() {
+                return Err(anyhow!("optim slot {slot} out of range"));
+            }
+        }
+        let rank = self.lora.rank;
+        let t = step.max(1);
+        let bc1 = 1.0 - ADAM_BETA1.powi(t);
+        let bc2 = 1.0 - ADAM_BETA2.powi(t);
+        for layer_sites in self.sites.iter_mut() {
+            for site in layer_sites.iter_mut() {
+                for &slot in slots {
+                    let ae = site.din * rank;
+                    let be = rank * site.dout;
+                    for (param, grad, m, v, elems) in [
+                        (&mut site.a, &mut site.grad_a, &mut site.m_a, &mut site.v_a, ae),
+                        (&mut site.b, &mut site.grad_b, &mut site.m_b, &mut site.v_b, be),
+                    ] {
+                        let rng = slot * elems..(slot + 1) * elems;
+                        let p = &mut param[rng.clone()];
+                        let g = &mut grad[rng.clone()];
+                        let m = &mut m[rng.clone()];
+                        let v = &mut v[rng];
+                        for idx in 0..elems {
+                            let gi = g[idx];
+                            m[idx] = ADAM_BETA1 * m[idx] + (1.0 - ADAM_BETA1) * gi;
+                            v[idx] = ADAM_BETA2 * v[idx] + (1.0 - ADAM_BETA2) * gi * gi;
+                            let mhat = m[idx] / bc1;
+                            let vhat = v[idx] / bc2;
+                            p[idx] -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
+                            g[idx] = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        Ok(StepCost { wall, virt: wall })
+    }
+
+    fn unified(
+        &mut self,
+        ft: &[TrainSeq],
+        pf: &[PrefillSeq],
+        dec: &[DecodeRow],
+        cache: &mut KvCacheManager,
+    ) -> Result<(UnifiedOut, StepCost)> {
+        let t0 = Instant::now();
+        let mut out = UnifiedOut::default();
+
+        // Inference classes share ONE flattened launch (one SMLM
+        // segmentation across prefill + decode rows — Algorithm 1).
+        let mut tokens = Vec::new();
+        let mut inf = Vec::with_capacity(pf.len() + dec.len());
+        for q in pf {
+            if q.tokens.is_empty() {
+                return Err(anyhow!("empty prefill"));
+            }
+            inf.push(InfSeq {
+                start: tokens.len(),
+                len: q.tokens.len(),
+                adapter: q.adapter,
+                kv_slot: q.kv_slot,
+                pos0: cache.len(q.kv_slot),
+            });
+            tokens.extend_from_slice(&q.tokens);
+        }
+        for r in dec {
+            inf.push(InfSeq {
+                start: tokens.len(),
+                len: 1,
+                adapter: r.adapter,
+                kv_slot: r.kv_slot,
+                pos0: cache.len(r.kv_slot),
+            });
+            tokens.push(r.token);
+        }
+        if !inf.is_empty() {
+            let mut logits = self.forward_inference(&tokens, &inf, cache)?;
+            out.dec_logits = logits.split_off(pf.len());
+            out.pf_last_logits = logits;
+        }
+
+        // Fine-tune rows: forward + loss + LoRA backward.
+        if !ft.is_empty() {
+            let (losses, _) = self.train_step(ft)?;
+            out.ft_losses = losses;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        Ok((out, StepCost { wall, virt: wall }))
+    }
+
+    fn sync_adapters(&mut self, reg: &mut VirtualizedRegistry) -> Result<()> {
+        for (li, layer_sites) in self.sites.iter_mut().enumerate() {
+            for site in layer_sites.iter_mut() {
+                for (suffix, dst) in [("a", &mut site.a), ("b", &mut site.b)] {
+                    let name = format!("lora.layers.{li}.{}.{suffix}", site.module);
+                    let src = reg
+                        .bank_tensor(&name)
+                        .ok_or_else(|| anyhow!("registry missing bank array {name}"))?
+                        .as_f32()?;
+                    if src.len() != dst.len() {
+                        return Err(anyhow!(
+                            "{name}: registry has {} elems, backend {}",
+                            src.len(),
+                            dst.len()
+                        ));
+                    }
+                    dst.copy_from_slice(src);
+                }
+            }
+        }
+        let scaling = reg
+            .bank_tensor("lora.scaling")
+            .ok_or_else(|| anyhow!("registry missing lora.scaling"))?
+            .as_f32()?;
+        if scaling.len() != self.scaling.len() {
+            return Err(anyhow!(
+                "lora.scaling: registry has {} slots, backend {}",
+                scaling.len(),
+                self.scaling.len()
+            ));
+        }
+        self.scaling.copy_from_slice(scaling);
+        Ok(())
+    }
+
+    fn checkpoint_adapters(&mut self, reg: &mut VirtualizedRegistry) -> Result<()> {
+        for (li, layer_sites) in self.sites.iter().enumerate() {
+            for site in layer_sites.iter() {
+                for (suffix, src) in [("a", &site.a), ("b", &site.b)] {
+                    let name = format!("lora.layers.{li}.{}.{suffix}", site.module);
+                    reg.import_bank(&name, src)?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::{cache_config_for, native_geometry, native_stack};
+    use crate::kvcache::KvCacheManager;
+
+    fn cache() -> KvCacheManager {
+        KvCacheManager::new(cache_config_for(&native_geometry(), 8))
+    }
+
+    fn seq(len: usize, salt: i32) -> Vec<i32> {
+        let v = native_geometry().vocab_size as i32;
+        (0..len as i32).map(|i| (salt * 31 + i * 7 + 3).rem_euclid(v)).collect()
+    }
+
+    #[test]
+    fn prefill_yields_finite_logits_and_fills_cache() {
+        let (mut be, _reg, _m) = native_stack(42).unwrap();
+        let mut kv = cache();
+        let slot = kv.allocate(1, 32).unwrap();
+        let (logits, cost) = be
+            .prefill(&[PrefillSeq { tokens: seq(9, 1), adapter: 0, kv_slot: slot }], &mut kv)
+            .unwrap();
+        assert_eq!(logits.len(), 1);
+        assert_eq!(logits[0].len(), be.geometry().vocab_size);
+        assert!(logits[0].iter().all(|x| x.is_finite()));
+        assert_eq!(kv.len(slot), 9);
+        assert!(cost.wall >= 0.0);
+    }
+
+    #[test]
+    fn lora_gradients_match_finite_difference() {
+        // The whole-backward oracle: perturb single A/B params, compare the
+        // analytic accumulated gradient against a central difference of
+        // the eval loss.
+        let (mut be, _reg, _m) = native_stack(7).unwrap();
+        let tokens = seq(10, 3);
+        let train = |be: &mut NativeBackend| -> f32 {
+            let (l, _) = be
+                .train_step(&[TrainSeq {
+                    tokens: tokens.clone(),
+                    labels: tokens.clone(),
+                    adapter: 1,
+                    train: false,
+                    loss_scale: 1.0,
+                }])
+                .unwrap();
+            l[0]
+        };
+        // Accumulate analytic grads once.
+        be.train_step(&[TrainSeq {
+            tokens: tokens.clone(),
+            labels: tokens.clone(),
+            adapter: 1,
+            train: true,
+            loss_scale: 1.0,
+        }])
+        .unwrap();
+
+        let rank = be.lora.rank;
+        let h = 2e-2f32;
+        // Check a few entries across layers, sites, and both factors.
+        for (li, si, in_a, idx) in
+            [(0usize, 0usize, true, 3usize), (0, 1, false, 5), (1, 0, false, 0), (1, 1, true, 17)]
+        {
+            let site = &be.sites[li][si];
+            let elems = if in_a { site.din * rank } else { rank * site.dout };
+            let off = elems + idx; // slot 1's block
+            let analytic = if in_a { site.grad_a[off] } else { site.grad_b[off] };
+
+            let bump = |be: &mut NativeBackend, d: f32| {
+                let s = &mut be.sites[li][si];
+                if in_a {
+                    s.a[off] += d;
+                } else {
+                    s.b[off] += d;
+                }
+            };
+            bump(&mut be, h);
+            let lp = train(&mut be);
+            bump(&mut be, -2.0 * h);
+            let lm = train(&mut be);
+            bump(&mut be, h);
+            let numeric = (lp - lm) / (2.0 * h);
+            let denom = numeric.abs().max(analytic.abs()).max(1e-3);
+            let factor = if in_a { "A" } else { "B" };
+            assert!(
+                (numeric - analytic).abs() / denom < 0.08,
+                "grad mismatch at l{li} s{si} {factor} idx {idx}: \
+                 analytic {analytic} vs numeric {numeric}",
+            );
+        }
+    }
+
+    #[test]
+    fn adam_descends_on_repeated_batch() {
+        let (mut be, _reg, _m) = native_stack(5).unwrap();
+        let tokens = seq(16, 9);
+        let mk = || TrainSeq {
+            tokens: tokens.clone(),
+            labels: tokens.clone(),
+            adapter: 0,
+            train: true,
+            loss_scale: 1.0,
+        };
+        let mut first = None;
+        let mut last = 0.0;
+        for step in 1..=10 {
+            let (losses, _) = be.train_step(&[mk()]).unwrap();
+            if first.is_none() {
+                first = Some(losses[0]);
+            }
+            last = losses[0];
+            be.optim_step(&[0], 2e-2, step).unwrap();
+        }
+        let first = first.unwrap();
+        assert!(last < first - 0.05, "loss must descend: {first} -> {last}");
+    }
+
+    #[test]
+    fn optim_clears_only_masked_slots() {
+        let (mut be, _reg, _m) = native_stack(5).unwrap();
+        let mk = |adapter| TrainSeq {
+            tokens: seq(8, adapter),
+            labels: seq(8, adapter),
+            adapter,
+            train: true,
+            loss_scale: 1.0,
+        };
+        be.train_step(&[mk(0), mk(2)]).unwrap();
+        let ae = be.sites[0][0].din * be.lora.rank;
+        let slot_sum = |be: &NativeBackend, s: usize| -> f32 {
+            be.sites[0][0].grad_a[s * ae..(s + 1) * ae].iter().map(|x| x.abs()).sum()
+        };
+        assert!(slot_sum(&be, 2) > 0.0, "slot 2 accumulated gradient");
+        be.optim_step(&[0], 1e-3, 1).unwrap();
+        assert_eq!(slot_sum(&be, 0), 0.0, "masked slot cleared");
+        assert!(slot_sum(&be, 2) > 0.0, "co-resident trainer's pending gradient survives");
+    }
+
+    #[test]
+    fn eval_rows_leave_gradients_untouched() {
+        let (mut be, _reg, _m) = native_stack(6).unwrap();
+        be.train_step(&[TrainSeq {
+            tokens: seq(8, 1),
+            labels: seq(8, 1),
+            adapter: 0,
+            train: false,
+            loss_scale: 1.0,
+        }])
+        .unwrap();
+        let total: f32 = be
+            .sites
+            .iter()
+            .flatten()
+            .map(|s| s.grad_a.iter().chain(&s.grad_b).map(|x| x.abs()).sum::<f32>())
+            .sum();
+        assert_eq!(total, 0.0);
+    }
+}

@@ -8,6 +8,12 @@
 //! 400-token responses) are actually sustainable at the crossover points
 //! the figures care about.
 
+mod native;
+
+pub use native::{native_buckets, native_geometry, native_lora, native_model, native_stack};
+
+use std::path::Path;
+
 use anyhow::Result;
 
 use crate::baselines::{
@@ -78,6 +84,48 @@ fn sim_cache_geometry_fixup(cfg: &mut CacheConfig) {
     // (num_kv_heads*head_dim); keep the cache config consistent with it.
     cfg.num_layers = sim_geometry().num_layers;
     cfg.token_elems = sim_geometry().num_kv_heads * sim_geometry().head_dim;
+}
+
+/// The artifact-backed XLA stack: runtime (entries passing `filter`),
+/// registry with every pretrained stand-in attached (slot i ← adapter i,
+/// inference state), and a synced backend — the XLA twin of
+/// [`native_stack`], shared by the CLI, benches and tests.
+pub fn xla_stack(
+    artifacts_dir: impl AsRef<Path>,
+    filter: impl Fn(&str) -> bool,
+) -> Result<(
+    crate::engine::XlaBackend,
+    crate::model::VirtualizedRegistry,
+    crate::runtime::Manifest,
+    crate::model::WeightStore,
+)> {
+    use crate::model::{LoraAdapter, SlotState, VirtualizedRegistry, WeightStore};
+
+    let rt = crate::runtime::Runtime::load_filtered(&artifacts_dir, filter)?;
+    let manifest = rt.manifest.clone();
+    let store = WeightStore::open(&artifacts_dir, &manifest)?;
+    let mut reg = VirtualizedRegistry::new(&manifest, &store)?;
+    for i in 0..manifest.build.lora.max_adapters {
+        let ad = LoraAdapter::from_store(&store, &manifest, i, format!("adapter{i}"))?;
+        reg.attach(format!("vm{i}"), ad, i, SlotState::Inference)?;
+    }
+    let mut be = crate::engine::XlaBackend::new(rt, &store)?;
+    be.sync_adapters(&mut reg)?;
+    Ok((be, reg, manifest, store))
+}
+
+/// Geometry-derived KV-arena config with `num_slots` full-capacity slots
+/// (block size 16) — the one place tests/benches/CLI derive
+/// `token_elems`/`slot_capacity` from a [`ModelGeometry`].
+pub fn cache_config_for(g: &ModelGeometry, num_slots: usize) -> CacheConfig {
+    CacheConfig {
+        num_slots,
+        slot_capacity: g.max_cache_len,
+        block_tokens: 16,
+        total_blocks: num_slots * g.max_cache_len / 16,
+        num_layers: g.num_layers,
+        token_elems: g.num_kv_heads * g.head_dim,
+    }
 }
 
 /// The calibrated (or default) cost model, GPU-rescaled.

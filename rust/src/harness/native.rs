@@ -1,0 +1,208 @@
+//! Synthetic tiny-model construction for the native CPU backend: a
+//! random-weight `ModelGeometry` packed into an in-memory manifest +
+//! weight store, shaped exactly like `make artifacts` output — so the
+//! registry, adapter loading, and the backend construction path are the
+//! SAME code whether the weights came from `aot.py` or from a seed.
+//!
+//! This is what lets `cargo test -q` exercise real prefill→decode→train
+//! numerics with zero artifacts, zero Python and zero PJRT (ISSUE 2 /
+//! DESIGN.md §3 S8).
+
+use anyhow::{anyhow, Result};
+
+use crate::engine::{Backend as _, NativeBackend};
+use crate::model::{LoraAdapter, SlotState, VirtualizedRegistry, WeightStore};
+use crate::runtime::{
+    BucketTable, BuildInfo, LoraGeometry, Manifest, ModelGeometry, UnifiedShape, WeightRecord,
+};
+use crate::util::rng::Rng;
+
+/// Tiny geometry: large enough to exercise GQA, RoPE, the LoRA bank and
+/// the unified flow; small enough that full test sweeps stay sub-second.
+/// The 512-token vocabulary matches the AOT model (and the byte-level
+/// tokenizer's 256-byte floor — a smaller vocab could not serve text).
+pub fn native_geometry() -> ModelGeometry {
+    ModelGeometry {
+        vocab_size: 512,
+        hidden_size: 32,
+        intermediate_size: 64,
+        num_layers: 2,
+        num_heads: 4,
+        num_kv_heads: 2,
+        head_dim: 8,
+        rope_theta: 1e4,
+        rms_eps: 1e-5,
+        max_cache_len: 160,
+        q_dim: 32,
+        kv_dim: 16,
+    }
+}
+
+pub fn native_lora() -> LoraGeometry {
+    LoraGeometry {
+        max_adapters: 4,
+        rank: 4,
+        alpha: 8.0,
+        dropout: 0.0,
+        targets: vec!["q".to_string(), "v".to_string()],
+        scaling: 2.0,
+    }
+}
+
+/// Capacity hints for the coordinator. The native backend has no compiled
+/// shapes, so these bound batch assembly rather than pad launches.
+pub fn native_buckets() -> BucketTable {
+    BucketTable {
+        prefill: vec![(8, 128)],
+        decode: vec![8],
+        train: vec![(4, 128)],
+        unified: vec![UnifiedShape {
+            ft_batch: 4,
+            ft_seq: 128,
+            pf_batch: 8,
+            pf_seq: 128,
+            dec_batch: 8,
+        }],
+    }
+}
+
+struct Packer {
+    blob: Vec<u8>,
+    records: Vec<WeightRecord>,
+}
+
+impl Packer {
+    fn push(&mut self, name: &str, shape: &[usize], data: &[f32]) {
+        let n: usize = shape.iter().product::<usize>().max(1);
+        assert_eq!(data.len(), n, "{name}: packer shape mismatch");
+        let offset = self.blob.len();
+        for v in data {
+            self.blob.extend_from_slice(&v.to_le_bytes());
+        }
+        self.records.push(WeightRecord {
+            name: name.to_string(),
+            offset,
+            shape: shape.to_vec(),
+            dtype: "f32".to_string(),
+        });
+    }
+}
+
+fn normal_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32 * scale).collect()
+}
+
+/// Build the synthetic manifest + in-memory weight store for `seed`.
+///
+/// The store carries everything the artifact store would: random base
+/// weights, the empty `lora.*` bank, `max_adapters` pretrained adapter
+/// stand-ins (`adapter{i}.*`, with non-zero B so each adapter visibly
+/// shifts logits), and the `bank.*` preloaded copies the registry golden
+/// test rebuilds against.
+pub fn native_model(seed: u64) -> Result<(Manifest, WeightStore)> {
+    let g = native_geometry();
+    let l = native_lora();
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut p = Packer { blob: Vec::new(), records: Vec::new() };
+
+    let (h, v) = (g.hidden_size, g.vocab_size);
+    let proj = |rng: &mut Rng, fan_in: usize, fan_out: usize| {
+        normal_vec(rng, fan_in * fan_out, 1.0 / (fan_in as f32).sqrt())
+    };
+
+    // Base weights, in `Manifest::base_param_names` order.
+    p.push("base.embed", &[v, h], &normal_vec(&mut rng, v * h, 0.5));
+    for li in 0..g.num_layers {
+        p.push(&format!("base.layers.{li}.wq"), &[h, g.q_dim], &proj(&mut rng, h, g.q_dim));
+        p.push(&format!("base.layers.{li}.wk"), &[h, g.kv_dim], &proj(&mut rng, h, g.kv_dim));
+        p.push(&format!("base.layers.{li}.wv"), &[h, g.kv_dim], &proj(&mut rng, h, g.kv_dim));
+        p.push(&format!("base.layers.{li}.wo"), &[g.q_dim, h], &proj(&mut rng, g.q_dim, h));
+        let i = g.intermediate_size;
+        p.push(&format!("base.layers.{li}.wgate"), &[h, i], &proj(&mut rng, h, i));
+        p.push(&format!("base.layers.{li}.wup"), &[h, i], &proj(&mut rng, h, i));
+        p.push(&format!("base.layers.{li}.wdown"), &[i, h], &proj(&mut rng, i, h));
+        p.push(&format!("base.layers.{li}.ln1"), &[h], &vec![1.0; h]);
+        p.push(&format!("base.layers.{li}.ln2"), &[h], &vec![1.0; h]);
+    }
+    p.push("base.final_norm", &[h], &vec![1.0; h]);
+    p.push("base.lm_head", &[h, v], &proj(&mut rng, h, v));
+
+    // Adapter stand-ins: A at fan-in scale, B small but non-zero (a
+    // B=0 init would make every adapter a no-op and defeat the routing
+    // tests; aot.py's pretrained stand-ins are non-zero for the same
+    // reason).
+    let slots = l.max_adapters;
+    let r = l.rank;
+    let mut adapter_blocks: Vec<Vec<(String, Vec<f32>, Vec<f32>)>> = Vec::new();
+    for idx in 0..slots {
+        let mut blocks = Vec::new();
+        for li in 0..g.num_layers {
+            for m in &l.targets {
+                let (din, dout) = g
+                    .lora_target_dims(m)
+                    .ok_or_else(|| anyhow!("unknown LoRA target {m}"))?;
+                let a = normal_vec(&mut rng, din * r, 1.0 / (din as f32).sqrt());
+                let b = normal_vec(&mut rng, r * dout, 0.1 / (r as f32).sqrt());
+                p.push(&format!("adapter{idx}.layers.{li}.{m}.a"), &[din, r], &a);
+                p.push(&format!("adapter{idx}.layers.{li}.{m}.b"), &[r, dout], &b);
+                blocks.push((format!("layers.{li}.{m}"), a, b));
+            }
+        }
+        adapter_blocks.push(blocks);
+    }
+
+    // Empty stacked bank (`lora.*`) + preloaded copies (`bank.*` = the
+    // host mirror after attaching adapter i into slot i).
+    for li in 0..g.num_layers {
+        for m in &l.targets {
+            let (din, dout) = g.lora_target_dims(m).unwrap();
+            let key = format!("layers.{li}.{m}");
+            p.push(&format!("lora.{key}.a"), &[slots, din, r], &vec![0.0; slots * din * r]);
+            p.push(&format!("lora.{key}.b"), &[slots, r, dout], &vec![0.0; slots * r * dout]);
+            let mut bank_a = Vec::with_capacity(slots * din * r);
+            let mut bank_b = Vec::with_capacity(slots * r * dout);
+            for blocks in &adapter_blocks {
+                let (_, a, b) = blocks
+                    .iter()
+                    .find(|(k, _, _)| *k == key)
+                    .expect("block generated above");
+                bank_a.extend_from_slice(a);
+                bank_b.extend_from_slice(b);
+            }
+            p.push(&format!("bank.{key}.a"), &[slots, din, r], &bank_a);
+            p.push(&format!("bank.{key}.b"), &[slots, r, dout], &bank_b);
+        }
+    }
+    p.push("lora.scaling", &[slots], &vec![0.0; slots]);
+    p.push("bank.scaling", &[slots], &vec![(l.alpha / r as f64) as f32; slots]);
+
+    let manifest = Manifest {
+        format_version: 1,
+        build: BuildInfo {
+            model: g,
+            lora: l,
+            buckets: native_buckets(),
+            seed,
+            sgmv_tile_rows: 4,
+        },
+        entries: Vec::new(),
+        weights: p.records.clone(),
+        weights_file: "<in-memory>".to_string(),
+    };
+    let store = WeightStore::from_parts(p.records, p.blob)?;
+    Ok((manifest, store))
+}
+
+/// The full native serving stack: backend + registry with every stand-in
+/// adapter attached (slot i ← adapter i, inference state) and synced.
+pub fn native_stack(seed: u64) -> Result<(NativeBackend, VirtualizedRegistry, Manifest)> {
+    let (manifest, store) = native_model(seed)?;
+    let mut reg = VirtualizedRegistry::new(&manifest, &store)?;
+    for i in 0..manifest.build.lora.max_adapters {
+        let ad = LoraAdapter::from_store(&store, &manifest, i, format!("adapter{i}"))?;
+        reg.attach(format!("vm{i}"), ad, i, SlotState::Inference)?;
+    }
+    let mut be = NativeBackend::new(&manifest, &store)?;
+    be.sync_adapters(&mut reg)?;
+    Ok((be, reg, manifest))
+}

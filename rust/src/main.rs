@@ -1,9 +1,12 @@
 //! Loquetier CLI — the L3 leader entrypoint.
 //!
 //! Subcommands:
-//! * `serve`    — load artifacts, attach virtual models, run the unified
-//!   coordinator behind the JSON-lines TCP frontend (real XLA execution).
-//! * `bench`    — quick smoke of each engine operation with timings.
+//! * `serve`    — attach virtual models, run the unified coordinator behind
+//!   the JSON-lines TCP frontend. `--backend native` (pure-Rust CPU
+//!   numerics over a seeded tiny model, no artifacts) or `--backend xla`
+//!   (AOT artifacts on PJRT; the default).
+//! * `bench`    — quick smoke of each engine operation with timings, on
+//!   either backend.
 //! * `inspect`  — print the manifest (entries, geometry, buckets, weights).
 
 use std::net::TcpListener;
@@ -13,22 +16,24 @@ use anyhow::{bail, Result};
 
 use loquetier::config::ServeConfig;
 use loquetier::coordinator::Coordinator;
-use loquetier::engine::{Backend, XlaBackend};
-use loquetier::kvcache::{CacheConfig, KvCacheManager};
+use loquetier::engine::{Backend, NativeBackend, XlaBackend};
+use loquetier::harness;
+use loquetier::kvcache::KvCacheManager;
 use loquetier::model::{LoraAdapter, SlotState, VirtualizedRegistry, WeightStore};
-use loquetier::runtime::Runtime;
+use loquetier::runtime::{Manifest, Runtime};
 use loquetier::server::{
     engine_loop, serve_blocking, AdmissionConfig, Frontend, RegistryDirectory,
 };
 use loquetier::tokenizer::{Tokenizer, TINY_CORPUS};
-use loquetier::util::cli::Args;
+use loquetier::util::cli::{Args, BackendKind};
 
 const USAGE: &str = "\
 loquetier — virtualized multi-LoRA unified fine-tuning + serving
 
 USAGE:
-  loquetier serve   [--artifacts DIR] [--listen ADDR] [--config FILE]
-  loquetier bench   [--artifacts DIR]
+  loquetier serve   [--backend native|xla] [--artifacts DIR] [--listen ADDR]
+                    [--config FILE] [--seed N]
+  loquetier bench   [--backend native|xla] [--artifacts DIR] [--seed N]
   loquetier inspect [--artifacts DIR]";
 
 fn main() -> Result<()> {
@@ -81,41 +86,20 @@ fn inspect_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn bench_cmd(args: &Args) -> Result<()> {
+/// Engine-operation smoke over any backend (tokens stay within the
+/// backend's vocabulary).
+fn bench_smoke(be: &mut dyn Backend) -> Result<()> {
     use loquetier::engine::{DecodeRow, PrefillSeq, TrainSeq};
-    let artifacts = args.str_or("artifacts", "artifacts");
-    let t0 = Instant::now();
-    let rt = Runtime::load(&artifacts)?;
-    println!(
-        "compiled {} entries in {:.2}s",
-        rt.manifest.entries.len(),
-        t0.elapsed().as_secs_f64()
-    );
-    let store = WeightStore::open(&artifacts, &rt.manifest)?;
-    let manifest = rt.manifest.clone();
-    let mut reg = VirtualizedRegistry::new(&manifest, &store)?;
-    for i in 0..manifest.build.lora.max_adapters {
-        let ad = LoraAdapter::from_store(&store, &manifest, i, format!("adapter{i}"))?;
-        reg.attach(format!("vm{i}"), ad, i, SlotState::Inference)?;
-    }
-    let mut be = XlaBackend::new(rt, &store)?;
-    be.sync_adapters(&mut reg)?;
-
     let g = be.geometry().clone();
+    let v = g.vocab_size as i32;
     let te = g.num_kv_heads * g.head_dim;
-    let mut cache = KvCacheManager::new(CacheConfig {
-        num_slots: 16,
-        slot_capacity: g.max_cache_len,
-        block_tokens: 16,
-        total_blocks: 16 * g.max_cache_len / 16,
-        num_layers: g.num_layers,
-        token_elems: te,
-    });
+    let mut cache = KvCacheManager::new(harness::cache_config_for(&g, 16));
 
     let slot = cache.allocate(1, 80)?;
+    let toks: Vec<i32> = (0..16).map(|i| (i * 7 + 3) % v).collect();
     let (_, c) =
-        be.prefill(&[PrefillSeq { tokens: (0..16).collect(), adapter: 0, kv_slot: slot }], &mut cache)?;
-    println!("prefill_b1_s16:   {:>8.2} ms", c.wall * 1e3);
+        be.prefill(&[PrefillSeq { tokens: toks, adapter: 0, kv_slot: slot }], &mut cache)?;
+    println!("prefill b1 s16:   {:>8.2} ms", c.wall * 1e3);
     for b in [1usize, 8] {
         let mut slots = vec![slot];
         for i in 1..b {
@@ -126,18 +110,85 @@ fn bench_cmd(args: &Args) -> Result<()> {
         let rows: Vec<DecodeRow> =
             slots.iter().map(|&s| DecodeRow { token: 3, adapter: 0, kv_slot: s }).collect();
         let (_, c) = be.decode(&rows, &mut cache)?;
-        println!("decode_b{b}:        {:>8.2} ms", c.wall * 1e3);
+        println!("decode b{b}:        {:>8.2} ms", c.wall * 1e3);
     }
     let (_, c) = be.train_step(&[TrainSeq {
-        tokens: vec![1; 64],
-        labels: vec![1; 64],
+        tokens: (0..64).map(|i| (i * 5 + 1) % v).collect(),
+        labels: (0..64).map(|i| (i * 5 + 1) % v).collect(),
         adapter: 0,
         train: true,
         loss_scale: 0.25,
     }])?;
-    println!("train_b1_s64:     {:>8.2} ms", c.wall * 1e3);
+    println!("train b1 s64:     {:>8.2} ms", c.wall * 1e3);
     let c = be.optim_step(&[0], 2e-5, 1)?;
     println!("adam:             {:>8.2} ms", c.wall * 1e3);
+    Ok(())
+}
+
+fn bench_cmd(args: &Args) -> Result<()> {
+    match args.backend_or(BackendKind::Xla)? {
+        BackendKind::Native => {
+            let seed = args.usize_or("seed", 42)? as u64;
+            let (mut be, _reg, manifest) = harness::native_stack(seed)?;
+            println!(
+                "native backend: {} layers, vocab {}, seed {seed}",
+                manifest.build.model.num_layers, manifest.build.model.vocab_size
+            );
+            bench_smoke(&mut be)
+        }
+        BackendKind::Xla => {
+            let artifacts = args.str_or("artifacts", "artifacts");
+            let t0 = Instant::now();
+            let (mut be, _reg, manifest, _store) = harness::xla_stack(&artifacts, |_| true)?;
+            println!(
+                "compiled {} entries in {:.2}s",
+                manifest.entries.len(),
+                t0.elapsed().as_secs_f64()
+            );
+            bench_smoke(&mut be)
+        }
+    }
+}
+
+/// The serving tail shared by both backends: coordinator + registry
+/// directory + TCP frontend + engine loop (the backend stays on the main
+/// thread — PJRT pointers are not Send, and the native backend simply
+/// doesn't care).
+fn run_server(
+    cfg: &ServeConfig,
+    manifest: Manifest,
+    store: WeightStore,
+    reg: VirtualizedRegistry,
+    backend: &mut dyn Backend,
+    label: &str,
+) -> Result<()> {
+    let mut coord =
+        Coordinator::new(cfg.coordinator_config(&manifest), cfg.cache_config(&manifest));
+    let mut dir = RegistryDirectory::new(reg, manifest.clone(), Some(store));
+
+    let (frontend, engine_rx) = Frontend::new(AdmissionConfig::default());
+    let listener = TcpListener::bind(&cfg.listen_addr)?;
+    println!(
+        "loquetier serving on {} ({label} backend, {} virtual models, vocab {})",
+        cfg.listen_addr,
+        cfg.virtual_models.len(),
+        manifest.build.model.vocab_size
+    );
+
+    let tok_enc = Tokenizer::train(TINY_CORPUS, manifest.build.model.vocab_size);
+    let tok_dec = Tokenizer::train(TINY_CORPUS, manifest.build.model.vocab_size);
+    let fe_accept = frontend.clone();
+    std::thread::spawn(move || {
+        let _ = serve_blocking(
+            listener,
+            fe_accept,
+            move |text| tok_enc.encode(text),
+            move |ids| tok_dec.decode(ids).unwrap_or_default(),
+        );
+    });
+
+    engine_loop(&mut coord, backend, &mut dir, &engine_rx, &frontend)?;
+    println!("loquetier drained; shutting down");
     Ok(())
 }
 
@@ -153,50 +204,33 @@ fn serve_cmd(args: &Args) -> Result<()> {
         cfg.listen_addr = l.to_string();
     }
 
-    // Inference-only deployment: skip the training entries.
-    let rt = Runtime::load_filtered(&cfg.artifacts_dir, |n| {
-        !n.starts_with("train") && n != "adam"
-    })?;
-    let manifest = rt.manifest.clone();
-    let store = WeightStore::open(&cfg.artifacts_dir, &manifest)?;
+    // Backend-specific construction; everything after the match is shared.
+    let (manifest, store, mut backend, label): (_, _, Box<dyn Backend>, _) =
+        match args.backend_or(BackendKind::Xla)? {
+            BackendKind::Native => {
+                // Random-weight tiny model: real numerics, zero artifacts.
+                let seed = args.usize_or("seed", 42)? as u64;
+                let (manifest, store) = harness::native_model(seed)?;
+                let be = NativeBackend::new(&manifest, &store)?;
+                (manifest, store, Box::new(be), "native")
+            }
+            BackendKind::Xla => {
+                // Inference-only deployment: skip the training entries.
+                let rt = Runtime::load_filtered(&cfg.artifacts_dir, |n| {
+                    !n.starts_with("train") && n != "adam"
+                })?;
+                let manifest = rt.manifest.clone();
+                let store = WeightStore::open(&cfg.artifacts_dir, &manifest)?;
+                let be = XlaBackend::new(rt, &store)?;
+                (manifest, store, Box::new(be), "xla")
+            }
+        };
+
     let mut reg = VirtualizedRegistry::new(&manifest, &store)?;
     for (name, idx) in &cfg.virtual_models {
         let ad = LoraAdapter::from_store(&store, &manifest, *idx, name.clone())?;
         reg.attach(name.clone(), ad, *idx, SlotState::Inference)?;
     }
-    let mut backend = XlaBackend::new(rt, &store)?;
     backend.sync_adapters(&mut reg)?;
-
-    let mut coord =
-        Coordinator::new(cfg.coordinator_config(&manifest), cfg.cache_config(&manifest));
-    let mut dir = RegistryDirectory::new(reg, manifest.clone(), Some(store));
-
-    let (frontend, engine_rx) = Frontend::new(AdmissionConfig::default());
-    let listener = TcpListener::bind(&cfg.listen_addr)?;
-    println!(
-        "loquetier serving on {} ({} virtual models, vocab {})",
-        cfg.listen_addr,
-        cfg.virtual_models.len(),
-        manifest.build.model.vocab_size
-    );
-
-    // The XLA backend holds raw PJRT pointers (not Send), so the engine
-    // loop stays on the main thread and the TCP accept loop is spawned.
-    let tok_enc = Tokenizer::train(TINY_CORPUS, manifest.build.model.vocab_size);
-    let tok_dec = Tokenizer::train(TINY_CORPUS, manifest.build.model.vocab_size);
-    let fe_accept = frontend.clone();
-    std::thread::spawn(move || {
-        let _ = serve_blocking(
-            listener,
-            fe_accept,
-            move |text| tok_enc.encode(text),
-            move |ids| tok_dec.decode(ids).unwrap_or_default(),
-        );
-    });
-
-    // Engine loop: owns the coordinator, the backend and the registry
-    // directory; returns once a `shutdown` op has drained in-flight work.
-    engine_loop(&mut coord, &mut backend, &mut dir, &engine_rx, &frontend)?;
-    println!("loquetier drained; shutting down");
-    Ok(())
+    run_server(&cfg, manifest, store, reg, backend.as_mut(), label)
 }

@@ -35,6 +35,26 @@ impl WeightStore {
         Ok(Self { blob, records: manifest.weights.clone() })
     }
 
+    /// Build an in-memory store from records + a packed blob (the native
+    /// backend's synthetic-model path — no `weights.bin` on disk). Bounds
+    /// are validated exactly like `open`.
+    pub fn from_parts(records: Vec<WeightRecord>, blob: Vec<u8>) -> Result<Self> {
+        for rec in &records {
+            let n: usize = rec.shape.iter().product::<usize>().max(1);
+            let end = rec.offset + 4 * n;
+            if end > blob.len() {
+                return Err(anyhow!(
+                    "weight {} [{}..{}] exceeds blob size {}",
+                    rec.name,
+                    rec.offset,
+                    end,
+                    blob.len()
+                ));
+            }
+        }
+        Ok(Self { blob, records })
+    }
+
     pub fn record(&self, name: &str) -> Result<&WeightRecord> {
         self.records
             .iter()

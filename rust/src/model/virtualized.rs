@@ -318,6 +318,35 @@ impl VirtualizedRegistry {
         Ok(())
     }
 
+    /// Overwrite one bank array's host mirror with backend-trained values
+    /// (the native backend's checkpoint path — the CPU analogue of
+    /// `checkpoint_from`, which reads pinned device buffers). `lora.scaling`
+    /// is addressable too. Marks the array dirty so a later `sync` to any
+    /// backend re-propagates it.
+    pub fn import_bank(&mut self, name: &str, data: &[f32]) -> Result<()> {
+        let tensor = if name == "lora.scaling" {
+            self.scaling_dirty = true;
+            &mut self.scaling
+        } else {
+            let arr = self
+                .bank
+                .get_mut(name)
+                .ok_or_else(|| anyhow!("{name}: not a bank array"))?;
+            arr.dirty = true;
+            &mut arr.tensor
+        };
+        let dst = tensor.as_f32_mut()?;
+        if dst.len() != data.len() {
+            return Err(anyhow!(
+                "{name}: import {} elems into array of {}",
+                data.len(),
+                dst.len()
+            ));
+        }
+        dst.copy_from_slice(data);
+        Ok(())
+    }
+
     /// Extract a slot's current contents as an adapter (the save path for a
     /// fine-tuned model). Reads the *host mirror* — call `checkpoint_from`
     /// first if training updated the device copies.

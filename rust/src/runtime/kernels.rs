@@ -1,0 +1,479 @@
+//! Pure-Rust CPU kernel primitives for the native backend.
+//!
+//! Everything here is deterministic, allocation-light, and row-major f32 —
+//! the lingua franca of `HostTensor`. Two design rules keep the module
+//! honest as a correctness oracle:
+//!
+//! 1. **Fixed accumulation order.** Every reduction walks its axis in
+//!    ascending index order, so the segmented SMLM path and the per-row
+//!    reference path perform bit-identical floating-point work per output
+//!    element and the golden tests can compare them tightly.
+//! 2. **No hidden state.** Kernels take slices in, write slices out; the
+//!    backend owns all buffers.
+//!
+//! The flagship kernel is Segmented Multi-LoRA Multiplication (SMLM, paper
+//! Section 3.1): rows of a mixed-adapter batch are sorted into per-adapter
+//! segments and each segment issues one gathered two-stage matmul, instead
+//! of one pair of rank-r products per row. [`smlm_per_row`] is the naive
+//! reference kept as the ablation baseline.
+
+/// y[m×n] += a[m×k] · b[k×n] (row-major, accumulate).
+pub fn gemm_nn(y: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(y.len(), m * n);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    for i in 0..m {
+        let yr = &mut y[i * n..(i + 1) * n];
+        for l in 0..k {
+            let av = a[i * k + l];
+            if av == 0.0 {
+                continue;
+            }
+            let br = &b[l * n..(l + 1) * n];
+            for (yy, bb) in yr.iter_mut().zip(br) {
+                *yy += av * bb;
+            }
+        }
+    }
+}
+
+/// y[m×n] += a[m×k] · bᵀ, where b is stored [n×k] (accumulate).
+pub fn gemm_nt(y: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(y.len(), m * n);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    for i in 0..m {
+        let ar = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let br = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (aa, bb) in ar.iter().zip(br) {
+                acc += aa * bb;
+            }
+            y[i * n + j] += acc;
+        }
+    }
+}
+
+/// y[k×n] += aᵀ · b, where a is stored [m×k] and b is [m×n] (accumulate).
+/// This is the dW shape: columns of the input against rows of the gradient.
+pub fn gemm_tn(y: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(y.len(), k * n);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    for i in 0..m {
+        let br = &b[i * n..(i + 1) * n];
+        for l in 0..k {
+            let av = a[i * k + l];
+            if av == 0.0 {
+                continue;
+            }
+            let yr = &mut y[l * n..(l + 1) * n];
+            for (yy, bb) in yr.iter_mut().zip(br) {
+                *yy += av * bb;
+            }
+        }
+    }
+}
+
+/// RMSNorm: out_i = x_i · w_i / sqrt(mean(x²) + eps). Returns the inverse
+/// RMS (the backward pass reuses it).
+pub fn rmsnorm(out: &mut [f32], x: &[f32], w: &[f32], eps: f32) -> f32 {
+    debug_assert_eq!(out.len(), x.len());
+    debug_assert_eq!(w.len(), x.len());
+    let mut ms = 0.0f32;
+    for &v in x {
+        ms += v * v;
+    }
+    let inv_rms = 1.0 / (ms / x.len() as f32 + eps).sqrt();
+    for ((o, &xv), &wv) in out.iter_mut().zip(x).zip(w) {
+        *o = xv * wv * inv_rms;
+    }
+    inv_rms
+}
+
+/// RMSNorm backward: given dy, the stashed input x and inv_rms, accumulate
+/// dx. (Weight gradients are never needed — base weights are frozen.)
+pub fn rmsnorm_backward(dx: &mut [f32], dy: &[f32], x: &[f32], w: &[f32], inv_rms: f32) {
+    let d = x.len() as f32;
+    let mut dot = 0.0f32;
+    for i in 0..x.len() {
+        dot += dy[i] * w[i] * x[i];
+    }
+    let c = dot * inv_rms * inv_rms * inv_rms / d;
+    for i in 0..x.len() {
+        dx[i] += dy[i] * w[i] * inv_rms - x[i] * c;
+    }
+}
+
+/// Rotary position embedding over one row of `heads × head_dim`, half-dim
+/// (Llama-style) rotation at absolute position `pos`. `dir` = 1.0 applies
+/// RoPE; `dir` = -1.0 inverts it (the backward pass: rotation is
+/// orthonormal, so the inverse is the transpose = negated angle).
+///
+/// One transcendental `powf` per call (the per-dim frequencies form a
+/// geometric series, accumulated in f64): this sits on the per-token
+/// per-layer hot path.
+pub fn rope(row: &mut [f32], heads: usize, head_dim: usize, pos: usize, theta: f64, dir: f64) {
+    debug_assert_eq!(row.len(), heads * head_dim);
+    let half = head_dim / 2;
+    let step = theta.powf(-2.0 / head_dim as f64);
+    let mut freq = 1.0f64;
+    for i in 0..half {
+        let ang = dir * pos as f64 * freq;
+        let (sin, cos) = (ang.sin() as f32, ang.cos() as f32);
+        for h in 0..heads {
+            let base = h * head_dim;
+            let (a, b) = (row[base + i], row[base + half + i]);
+            row[base + i] = a * cos - b * sin;
+            row[base + half + i] = a * sin + b * cos;
+        }
+        freq *= step;
+    }
+}
+
+/// Numerically stable in-place softmax over `x`.
+pub fn softmax_inplace(x: &mut [f32]) {
+    let mut mx = f32::NEG_INFINITY;
+    for &v in x.iter() {
+        if v > mx {
+            mx = v;
+        }
+    }
+    let mut sum = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - mx).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// SiLU: x · sigmoid(x).
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// d/dx SiLU(x) = sigmoid(x) · (1 + x · (1 − sigmoid(x))).
+pub fn silu_grad(x: f32) -> f32 {
+    let s = 1.0 / (1.0 + (-x).exp());
+    s * (1.0 + x * (1.0 - s))
+}
+
+/// A borrowed view over one LoRA site's stacked bank.
+#[derive(Debug, Clone, Copy)]
+pub struct LoraBankView<'a> {
+    /// `[slots, din, r]` — the A factors, one block per bank slot.
+    pub a: &'a [f32],
+    /// `[slots, r, dout]` — the B factors.
+    pub b: &'a [f32],
+    /// `[slots]` — per-slot scaling (alpha/r, or the dynamic override).
+    pub scaling: &'a [f32],
+    pub rank: usize,
+    pub din: usize,
+    pub dout: usize,
+}
+
+impl<'a> LoraBankView<'a> {
+    pub fn slots(&self) -> usize {
+        self.scaling.len()
+    }
+
+    fn a_slot(&self, s: usize) -> &'a [f32] {
+        let n = self.din * self.rank;
+        &self.a[s * n..(s + 1) * n]
+    }
+
+    fn b_slot(&self, s: usize) -> &'a [f32] {
+        let n = self.rank * self.dout;
+        &self.b[s * n..(s + 1) * n]
+    }
+}
+
+/// Segmented Multi-LoRA Multiplication: `y[i] += scale_s · (x[i]·A_s)·B_s`
+/// for each row `i` whose `adapters[i] = s ≥ 0`; base-only rows (`-1`) are
+/// untouched.
+///
+/// Rows are sorted into per-adapter segments; each segment gathers its rows
+/// once and issues ONE two-stage matmul, so the number of rank-r products
+/// scales with the number of *distinct adapters in the batch*, not with the
+/// batch size — the paper's answer to the per-row adapter loop that
+/// S-LoRA's bgmv kernels also attack.
+pub fn smlm_segmented(x: &[f32], adapters: &[i32], bank: &LoraBankView, y: &mut [f32]) {
+    let (din, dout, r) = (bank.din, bank.dout, bank.rank);
+    let n = adapters.len();
+    debug_assert_eq!(x.len(), n * din);
+    debug_assert_eq!(y.len(), n * dout);
+
+    // Segment construction: counting sort by adapter id (stable — row order
+    // inside a segment is batch order, fixing the accumulation order).
+    let slots = bank.slots();
+    let mut counts = vec![0usize; slots];
+    for &a in adapters {
+        if a >= 0 {
+            counts[a as usize] += 1;
+        }
+    }
+    let mut rows_of: Vec<Vec<usize>> = counts.iter().map(|&c| Vec::with_capacity(c)).collect();
+    for (i, &a) in adapters.iter().enumerate() {
+        if a >= 0 {
+            rows_of[a as usize].push(i);
+        }
+    }
+
+    let mut xs: Vec<f32> = Vec::new();
+    let mut mid: Vec<f32> = Vec::new();
+    let mut ys: Vec<f32> = Vec::new();
+    for (s, rows) in rows_of.iter().enumerate() {
+        if rows.is_empty() {
+            continue;
+        }
+        let m = rows.len();
+        // Gather the segment's rows.
+        xs.clear();
+        xs.reserve(m * din);
+        for &i in rows {
+            xs.extend_from_slice(&x[i * din..(i + 1) * din]);
+        }
+        // Two-stage product over the whole segment.
+        mid.clear();
+        mid.resize(m * r, 0.0);
+        gemm_nn(&mut mid, &xs, bank.a_slot(s), m, din, r);
+        ys.clear();
+        ys.resize(m * dout, 0.0);
+        gemm_nn(&mut ys, &mid, bank.b_slot(s), m, r, dout);
+        // Scatter-accumulate with the slot scaling.
+        let scale = bank.scaling[s];
+        for (seg_i, &i) in rows.iter().enumerate() {
+            let src = &ys[seg_i * dout..(seg_i + 1) * dout];
+            let dst = &mut y[i * dout..(i + 1) * dout];
+            for (d, v) in dst.iter_mut().zip(src) {
+                *d += scale * v;
+            }
+        }
+    }
+}
+
+/// Per-row reference for [`smlm_segmented`]: one pair of rank-r products
+/// per row. Kept as the correctness oracle and the ablation baseline the
+/// kernel bench sweeps against.
+pub fn smlm_per_row(x: &[f32], adapters: &[i32], bank: &LoraBankView, y: &mut [f32]) {
+    let (din, dout, r) = (bank.din, bank.dout, bank.rank);
+    debug_assert_eq!(x.len(), adapters.len() * din);
+    debug_assert_eq!(y.len(), adapters.len() * dout);
+    let mut mid = vec![0.0f32; r];
+    let mut row = vec![0.0f32; dout];
+    for (i, &a) in adapters.iter().enumerate() {
+        if a < 0 {
+            continue;
+        }
+        let s = a as usize;
+        let xr = &x[i * din..(i + 1) * din];
+        mid.iter_mut().for_each(|v| *v = 0.0);
+        gemm_nn(&mut mid, xr, bank.a_slot(s), 1, din, r);
+        row.iter_mut().for_each(|v| *v = 0.0);
+        gemm_nn(&mut row, &mid, bank.b_slot(s), 1, r, dout);
+        let scale = bank.scaling[s];
+        let dst = &mut y[i * dout..(i + 1) * dout];
+        for (d, v) in dst.iter_mut().zip(&row) {
+            *d += scale * v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32 * scale).collect()
+    }
+
+    #[test]
+    fn gemm_nn_matches_manual() {
+        // [2x3] · [3x2]
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0];
+        let mut y = vec![0.0; 4];
+        gemm_nn(&mut y, &a, &b, 2, 3, 2);
+        assert_eq!(y, vec![58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn gemm_transposes_agree() {
+        let mut rng = Rng::seed_from_u64(1);
+        let (m, k, n) = (3, 5, 4);
+        let a = randv(&mut rng, m * k, 1.0);
+        let b = randv(&mut rng, k * n, 1.0);
+        let mut y = vec![0.0; m * n];
+        gemm_nn(&mut y, &a, &b, m, k, n);
+
+        // nt: store b transposed [n×k], must reproduce y.
+        let mut bt = vec![0.0; n * k];
+        for i in 0..k {
+            for j in 0..n {
+                bt[j * k + i] = b[i * n + j];
+            }
+        }
+        let mut y2 = vec![0.0; m * n];
+        gemm_nt(&mut y2, &a, &bt, m, k, n);
+        for (p, q) in y.iter().zip(&y2) {
+            assert!((p - q).abs() < 1e-5);
+        }
+
+        // tn: store a transposed [k×m] as the "a" operand with m/k swapped.
+        let mut at = vec![0.0; k * m];
+        for i in 0..m {
+            for j in 0..k {
+                at[j * m + i] = a[i * k + j];
+            }
+        }
+        let mut y3 = vec![0.0; m * n];
+        gemm_tn(&mut y3, &at, &b, k, m, n);
+        for (p, q) in y.iter().zip(&y3) {
+            assert!((p - q).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale_normalizes() {
+        let x = vec![3.0, -4.0, 0.0, 0.0];
+        let w = vec![1.0; 4];
+        let mut out = vec![0.0; 4];
+        let inv = rmsnorm(&mut out, &x, &w, 0.0);
+        // rms = sqrt(25/4) = 2.5
+        assert!((inv - 0.4).abs() < 1e-6);
+        assert!((out[0] - 1.2).abs() < 1e-6);
+        assert!((out[1] + 1.6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rmsnorm_backward_matches_finite_difference() {
+        let mut rng = Rng::seed_from_u64(7);
+        let d = 6;
+        let x = randv(&mut rng, d, 1.0);
+        let w = randv(&mut rng, d, 0.5);
+        let dy = randv(&mut rng, d, 1.0);
+        let eps = 1e-5f32;
+        let mut out = vec![0.0; d];
+        let inv = rmsnorm(&mut out, &x, &w, eps);
+        let mut dx = vec![0.0; d];
+        rmsnorm_backward(&mut dx, &dy, &x, &w, inv);
+
+        let h = 1e-3f32;
+        for i in 0..d {
+            let mut xp = x.clone();
+            xp[i] += h;
+            let mut xm = x.clone();
+            xm[i] -= h;
+            let mut op = vec![0.0; d];
+            let mut om = vec![0.0; d];
+            rmsnorm(&mut op, &xp, &w, eps);
+            rmsnorm(&mut om, &xm, &w, eps);
+            let mut num = 0.0f32;
+            for j in 0..d {
+                num += dy[j] * (op[j] - om[j]) / (2.0 * h);
+            }
+            assert!(
+                (num - dx[i]).abs() < 5e-3,
+                "dx[{i}]: analytic {} vs numeric {num}",
+                dx[i]
+            );
+        }
+    }
+
+    #[test]
+    fn rope_roundtrips() {
+        let mut rng = Rng::seed_from_u64(3);
+        let (heads, hd) = (2, 8);
+        let orig = randv(&mut rng, heads * hd, 1.0);
+        let mut row = orig.clone();
+        rope(&mut row, heads, hd, 17, 1e4, 1.0);
+        assert!(row.iter().zip(&orig).any(|(a, b)| (a - b).abs() > 1e-4));
+        rope(&mut row, heads, hd, 17, 1e4, -1.0);
+        for (a, b) in row.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut rng = Rng::seed_from_u64(4);
+        let v = randv(&mut rng, 8, 1.0);
+        let n0: f32 = v.iter().map(|x| x * x).sum();
+        let mut r = v;
+        rope(&mut r, 1, 8, 99, 5e5, 1.0);
+        let n1: f32 = r.iter().map(|x| x * x).sum();
+        assert!((n0 - n1).abs() < 1e-4);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_is_stable() {
+        let mut x = vec![1e4, 1e4 + 1.0, 1e4 - 2.0];
+        softmax_inplace(&mut x);
+        let s: f32 = x.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!(x.iter().all(|v| v.is_finite()));
+        assert!(x[1] > x[0] && x[0] > x[2]);
+    }
+
+    #[test]
+    fn silu_grad_matches_finite_difference() {
+        for &x in &[-3.0f32, -0.5, 0.0, 0.7, 4.0] {
+            let h = 1e-3;
+            let num = (silu(x + h) - silu(x - h)) / (2.0 * h);
+            assert!((num - silu_grad(x)).abs() < 1e-3, "at {x}");
+        }
+    }
+
+    fn test_bank(
+        rng: &mut Rng,
+        slots: usize,
+        din: usize,
+        r: usize,
+        dout: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let a = randv(rng, slots * din * r, 0.3);
+        let b = randv(rng, slots * r * dout, 0.3);
+        let scaling = (0..slots).map(|i| 0.5 + i as f32 * 0.25).collect();
+        (a, b, scaling)
+    }
+
+    #[test]
+    fn smlm_segmented_matches_per_row_mixed_batch() {
+        let mut rng = Rng::seed_from_u64(11);
+        let (slots, din, r, dout) = (4, 12, 3, 10);
+        let (a, b, scaling) = test_bank(&mut rng, slots, din, r, dout);
+        let bank = LoraBankView { a: &a, b: &b, scaling: &scaling, rank: r, din, dout };
+        let n = 9;
+        let x = randv(&mut rng, n * din, 1.0);
+        // Mixed adapters including base-only rows and a slot used twice.
+        let adapters = vec![2, -1, 0, 1, 2, -1, 3, 0, 2];
+        let mut y_seg = randv(&mut rng, n * dout, 1.0); // non-zero: += semantics
+        let mut y_ref = y_seg.clone();
+        smlm_segmented(&x, &adapters, &bank, &mut y_seg);
+        smlm_per_row(&x, &adapters, &bank, &mut y_ref);
+        for (i, (p, q)) in y_seg.iter().zip(&y_ref).enumerate() {
+            assert!((p - q).abs() < 1e-5, "elem {i}: {p} vs {q}");
+        }
+        // Base-only rows untouched (row 1 spans dout..2*dout).
+        let before = &y_ref[dout..2 * dout];
+        assert_eq!(&y_seg[dout..2 * dout], before);
+    }
+
+    #[test]
+    fn smlm_all_base_rows_is_noop() {
+        let mut rng = Rng::seed_from_u64(13);
+        let (slots, din, r, dout) = (2, 6, 2, 5);
+        let (a, b, scaling) = test_bank(&mut rng, slots, din, r, dout);
+        let bank = LoraBankView { a: &a, b: &b, scaling: &scaling, rank: r, din, dout };
+        let x = randv(&mut rng, 3 * din, 1.0);
+        let y0 = randv(&mut rng, 3 * dout, 1.0);
+        let mut y = y0.clone();
+        smlm_segmented(&x, &[-1, -1, -1], &bank, &mut y);
+        assert_eq!(y, y0);
+    }
+}

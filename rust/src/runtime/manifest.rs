@@ -77,6 +77,20 @@ pub struct ModelGeometry {
     pub kv_dim: usize,
 }
 
+impl ModelGeometry {
+    /// (din, dout) of a LoRA-targetable projection, by manifest target name.
+    pub fn lora_target_dims(&self, module: &str) -> Option<(usize, usize)> {
+        match module {
+            "q" => Some((self.hidden_size, self.q_dim)),
+            "k" | "v" => Some((self.hidden_size, self.kv_dim)),
+            "o" => Some((self.q_dim, self.hidden_size)),
+            "gate" | "up" => Some((self.hidden_size, self.intermediate_size)),
+            "down" => Some((self.intermediate_size, self.hidden_size)),
+            _ => None,
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct LoraGeometry {
     pub max_adapters: usize,

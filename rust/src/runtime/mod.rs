@@ -16,6 +16,7 @@
 //! outputs can be kept on device and re-pinned as the next step's inputs —
 //! parameter updates never round-trip through the host.
 
+pub mod kernels;
 mod manifest;
 mod tensor;
 

@@ -1,8 +1,20 @@
-//! Tiny CLI flag parser: `--key value`, `--flag`, positional args.
+//! Tiny CLI flag parser: `--key value`, `--flag`, positional args — plus
+//! the shared `--backend` selector.
 
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
+
+/// Which execution backend a command should construct (`--backend`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust CPU numerics over a random-weight tiny model (or any
+    /// `WeightStore`-shaped weights) — no artifacts, no PJRT.
+    Native,
+    /// AOT artifacts on the PJRT CPU client (requires `make artifacts`
+    /// and the real `xla` bindings).
+    Xla,
+}
 
 #[derive(Debug, Default)]
 pub struct Args {
@@ -60,6 +72,16 @@ impl Args {
     pub fn bool(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
+
+    /// Parse `--backend native|xla` (defaulting when absent).
+    pub fn backend_or(&self, default: BackendKind) -> Result<BackendKind> {
+        match self.get("backend") {
+            None => Ok(default),
+            Some("native") => Ok(BackendKind::Native),
+            Some("xla") => Ok(BackendKind::Xla),
+            Some(other) => Err(anyhow!("--backend: unknown backend '{other}' (native|xla)")),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -84,5 +106,19 @@ mod tests {
     fn bad_number_is_error() {
         let a = args("--n abc");
         assert!(a.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn backend_selector_parses() {
+        assert_eq!(
+            args("--backend native").backend_or(BackendKind::Xla).unwrap(),
+            BackendKind::Native
+        );
+        assert_eq!(
+            args("--backend xla").backend_or(BackendKind::Native).unwrap(),
+            BackendKind::Xla
+        );
+        assert_eq!(args("").backend_or(BackendKind::Native).unwrap(), BackendKind::Native);
+        assert!(args("--backend gpu").backend_or(BackendKind::Xla).is_err());
     }
 }

@@ -1,6 +1,14 @@
-//! End-to-end over the REAL XLA backend: serve + fine-tune through the
-//! coordinator with actual PJRT execution (tiny workload — numerics, cache
-//! continuity and trainer plumbing, not throughput).
+//! End-to-end over REAL numerics: serve + fine-tune through the
+//! coordinator with actual forward/backward math (tiny workload —
+//! numerics, cache continuity and trainer plumbing, not throughput).
+//!
+//! Every scenario is generic over [`Backend`] and runs twice:
+//!
+//! * **native** — the pure-Rust CPU backend over a seeded random-weight
+//!   tiny model. No artifacts, no PJRT, NO SKIPS: this is what tier-1 CI
+//!   exercises.
+//! * **xla** — the AOT-artifact path, skip-on-absent as before (the
+//!   offline environment cannot run `make artifacts`; DESIGN.md §3 S7).
 
 use std::path::PathBuf;
 
@@ -8,20 +16,20 @@ use loquetier::coordinator::{
     Coordinator, CoordinatorConfig, FinetuneJob, InferenceRequest, TrainExample,
 };
 use loquetier::engine::{Backend, DecodeRow, PrefillSeq, TrainSeq, XlaBackend};
-use loquetier::kvcache::{CacheConfig, KvCacheManager};
-use loquetier::model::{LoraAdapter, SlotState, VirtualizedRegistry, WeightStore};
-use loquetier::runtime::Runtime;
+use loquetier::harness::{native_stack, xla_stack};
+use loquetier::kvcache::KvCacheManager;
+use loquetier::model::VirtualizedRegistry;
 
 // PJRT CPU clients race on TFRT runtime singletons when created
-// concurrently from multiple test threads — serialize every test.
+// concurrently from multiple test threads — serialize the XLA tests.
 static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
 fn serial() -> std::sync::MutexGuard<'static, ()> {
     SERIAL.lock().unwrap_or_else(|p| p.into_inner())
 }
 
-/// None = artifacts absent: skip (the offline environment cannot run
-/// `make artifacts`; see DESIGN.md §3).
+/// None = artifacts absent: skip the XLA variant only (the native variant
+/// of every scenario runs unconditionally).
 fn artifacts_dir() -> Option<PathBuf> {
     let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
     let dir = root.join("artifacts");
@@ -34,50 +42,28 @@ fn artifacts_dir() -> Option<PathBuf> {
 
 /// Compile only the entries a test needs — full compilation is ~90 s and
 /// dominates test wall time otherwise.
-fn make_backend_filtered(
+fn make_xla_filtered(
     filter: impl Fn(&str) -> bool,
 ) -> Option<(XlaBackend, VirtualizedRegistry)> {
     let dir = artifacts_dir()?;
-    let rt = Runtime::load_filtered(&dir, filter).expect("runtime");
-    let manifest = rt.manifest.clone();
-    let store = WeightStore::open(&dir, &manifest).unwrap();
-    let mut reg = VirtualizedRegistry::new(&manifest, &store).unwrap();
-    for i in 0..manifest.build.lora.max_adapters {
-        let ad = LoraAdapter::from_store(&store, &manifest, i, format!("a{i}")).unwrap();
-        reg.attach(format!("vm{i}"), ad, i, SlotState::Inference).unwrap();
-    }
-    let mut be = XlaBackend::new(rt, &store).unwrap();
-    be.sync_adapters(&mut reg).unwrap();
+    let (be, reg, _manifest, _store) = xla_stack(&dir, filter).expect("xla stack");
     Some((be, reg))
 }
 
-#[allow(dead_code)]
-fn make_backend() -> Option<(XlaBackend, VirtualizedRegistry)> {
-    make_backend_filtered(|_| true)
+fn make_cache(be: &dyn Backend) -> KvCacheManager {
+    KvCacheManager::new(loquetier::harness::cache_config_for(be.geometry(), 16))
 }
 
-fn make_cache(be: &XlaBackend) -> KvCacheManager {
-    let g = be.geometry().clone();
-    KvCacheManager::new(CacheConfig {
-        num_slots: 16,
-        slot_capacity: g.max_cache_len,
-        block_tokens: 16,
-        total_blocks: 16 * g.max_cache_len / 16,
-        num_layers: g.num_layers,
-        token_elems: g.num_kv_heads * g.head_dim,
-    })
-}
+// ---------------------------------------------------------------------------
+// Scenarios (backend-generic)
+// ---------------------------------------------------------------------------
 
-#[test]
-fn decode_continuation_matches_full_prefill() {
-    let _guard = serial();
-    // prefill(t0..t12) then decode(t13) == prefill(t0..t13) last logits.
-    let Some((mut be, _reg)) = make_backend_filtered(|n| n == "prefill_b1_s16" || n == "decode_b1")
-    else {
-        return;
-    };
-    let mut cache = make_cache(&be);
-    let toks: Vec<i32> = (0..13).map(|i| (7 * i + 3) % 512).collect();
+/// prefill(t0..t12) then decode(t13) must equal prefill(t0..t13) last
+/// logits — KV continuity across the arena.
+fn scenario_decode_continuation(be: &mut dyn Backend, rtol: f32) {
+    let v = be.geometry().vocab_size as i32;
+    let mut cache = make_cache(be);
+    let toks: Vec<i32> = (0..13).map(|i| (7 * i + 3) % v).collect();
 
     let slot_a = cache.allocate(1, 64).unwrap();
     let (full, _) = be
@@ -102,23 +88,19 @@ fn decode_continuation_matches_full_prefill() {
     for (a, b) in full[0].iter().zip(&dec[0]) {
         worst = worst.max((a - b).abs() / b.abs().max(1.0));
     }
-    assert!(worst < 5e-3, "decode continuation diverged: rel err {worst}");
+    assert!(worst < rtol, "decode continuation diverged: rel err {worst}");
     assert_eq!(cache.len(slot_b), 13);
 }
 
-#[test]
-fn adapters_route_to_different_logits() {
-    let _guard = serial();
-    let Some((mut be, _reg)) = make_backend_filtered(|n| n == "prefill_b4_s16") else {
-        return;
-    };
-    let mut cache = make_cache(&be);
-    let toks: Vec<i32> = (0..16).map(|i| (11 * i + 5) % 512).collect();
+/// Same prompt through two adapters and the bare base — in ONE batched
+/// launch (the SMLM multi-adapter path) — must route to distinct logits.
+fn scenario_adapter_routing(be: &mut dyn Backend) {
+    let v = be.geometry().vocab_size as i32;
+    let mut cache = make_cache(be);
+    let toks: Vec<i32> = (0..16).map(|i| (11 * i + 5) % v).collect();
     let s0 = cache.allocate(1, 32).unwrap();
     let s1 = cache.allocate(2, 32).unwrap();
     let s2 = cache.allocate(3, 32).unwrap();
-    // Same prompt through adapter 0, adapter 1, and the bare base model —
-    // in ONE batched launch (the SMLM multi-adapter path).
     let (logits, _) = be
         .prefill(
             &[
@@ -136,14 +118,10 @@ fn adapters_route_to_different_logits() {
     assert!(logits.iter().all(|l| l.iter().all(|x| x.is_finite())));
 }
 
-#[test]
-fn training_reduces_loss_on_repeated_batch() {
-    let _guard = serial();
-    let Some((mut be, _reg)) = make_backend_filtered(|n| n == "train_b1_s64" || n == "adam")
-    else {
-        return;
-    };
-    let seq: Vec<i32> = (0..48).map(|i| (5 * i + 1) % 512).collect();
+/// Train on a repeated batch: loss must descend (real gradients + Adam).
+fn scenario_training_descends(be: &mut dyn Backend, lr: f32, steps: i32) {
+    let v = be.geometry().vocab_size as i32;
+    let seq: Vec<i32> = (0..48).map(|i| (5 * i + 1) % v).collect();
     let mk = || TrainSeq {
         tokens: seq.clone(),
         labels: seq.clone(),
@@ -153,13 +131,13 @@ fn training_reduces_loss_on_repeated_batch() {
     };
     let mut first = None;
     let mut last = 0.0;
-    for step in 1..=6 {
+    for step in 1..=steps {
         let (losses, _) = be.train_step(&[mk()]).unwrap();
         if first.is_none() {
             first = Some(losses[0]);
         }
         last = losses[0];
-        be.optim_step(&[0], 5e-2, step).unwrap();
+        be.optim_step(&[0], lr, step).unwrap();
     }
     let first = first.unwrap();
     assert!(
@@ -168,36 +146,32 @@ fn training_reduces_loss_on_repeated_batch() {
     );
 }
 
-#[test]
-fn unified_step_runs_all_three_classes() {
-    let _guard = serial();
-    let Some((mut be, _reg)) = make_backend_filtered(|n| {
-        n == "unified_0" || n == "prefill_b1_s16" || n == "decode_b1"
-    }) else {
-        return;
-    };
-    let mut cache = make_cache(&be);
+/// The unified launch runs fine-tune ∥ prefill ∥ decode and its decode
+/// rows match a dedicated decode launch — batching is a scheduling
+/// optimization, not a semantics change (the paper's core claim).
+fn scenario_unified_all_classes(be: &mut dyn Backend, rtol: f32) {
+    let v = be.geometry().vocab_size as i32;
+    let mut cache = make_cache(be);
     let ft = TrainSeq {
-        tokens: (0..32).map(|i| (3 * i + 2) % 512).collect(),
-        labels: (0..32).map(|i| (3 * i + 2) % 512).collect(),
+        tokens: (0..32).map(|i| (3 * i + 2) % v).collect(),
+        labels: (0..32).map(|i| (3 * i + 2) % v).collect(),
         adapter: 3,
         train: true,
         loss_scale: 0.25,
     };
     let pf_slot = cache.allocate(10, 64).unwrap();
     let pf = PrefillSeq {
-        tokens: (0..16).map(|i| (9 * i + 4) % 512).collect(),
+        tokens: (0..16).map(|i| (9 * i + 4) % v).collect(),
         adapter: 1,
         kv_slot: pf_slot,
     };
     let dec_slot = cache.allocate(11, 32).unwrap();
-    // Seed the decode slot with a short prefill.
     be.prefill(
-        &[PrefillSeq { tokens: vec![17, 23, 31], adapter: 0, kv_slot: dec_slot }],
+        &[PrefillSeq { tokens: vec![17 % v, 23 % v, 31 % v], adapter: 0, kv_slot: dec_slot }],
         &mut cache,
     )
     .unwrap();
-    let dec = DecodeRow { token: 42, adapter: 0, kv_slot: dec_slot };
+    let dec = DecodeRow { token: 42 % v, adapter: 0, kv_slot: dec_slot };
 
     let (out, _cost) = be.unified(&[ft], &[pf], &[dec.clone()], &mut cache).unwrap();
     assert_eq!(out.ft_losses.len(), 1);
@@ -208,61 +182,45 @@ fn unified_step_runs_all_three_classes() {
     assert_eq!(cache.len(pf_slot), 16, "prefill KV must land in the slot");
     assert_eq!(cache.len(dec_slot), 4, "decode KV must append");
 
-    // The decode row must match what a dedicated decode launch produces
-    // (unified batching is a scheduling optimization, not a semantics
-    // change — the paper's core claim).
-    let mut cache2 = make_cache(&be);
+    let mut cache2 = make_cache(be);
     let dec_slot2 = cache2.allocate(12, 32).unwrap();
     be.prefill(
-        &[PrefillSeq { tokens: vec![17, 23, 31], adapter: 0, kv_slot: dec_slot2 }],
+        &[PrefillSeq { tokens: vec![17 % v, 23 % v, 31 % v], adapter: 0, kv_slot: dec_slot2 }],
         &mut cache2,
     )
     .unwrap();
     let (alone, _) = be
-        .decode(&[DecodeRow { token: 42, adapter: 0, kv_slot: dec_slot2 }], &mut cache2)
+        .decode(&[DecodeRow { token: 42 % v, adapter: 0, kv_slot: dec_slot2 }], &mut cache2)
         .unwrap();
     let mut worst = 0.0f32;
     for (a, b) in out.dec_logits[0].iter().zip(&alone[0]) {
         worst = worst.max((a - b).abs() / b.abs().max(1.0));
     }
-    assert!(worst < 5e-3, "unified decode != dedicated decode: rel {worst}");
+    assert!(worst < rtol, "unified decode != dedicated decode: rel {worst}");
 }
 
-#[test]
-fn full_coordinator_serves_on_xla_backend() {
-    let _guard = serial();
-    // The real serving loop end-to-end at tiny scale: 6 requests across 3
-    // adapters + one fine-tune job, through the unified coordinator.
-    let Some((mut be, _reg)) = make_backend_filtered(|n| {
-        n == "unified_0" || n.starts_with("prefill") || n.starts_with("decode") || n == "adam"
-    }) else {
-        return;
-    };
+/// The real serving loop end-to-end at tiny scale: 6 requests across 3
+/// adapters + one fine-tune job, through the unified coordinator.
+fn scenario_full_coordinator(be: &mut dyn Backend) {
     let g = be.geometry().clone();
+    let v = g.vocab_size as i32;
     let mut coord = Coordinator::new(
         CoordinatorConfig { max_prompt_tokens: 16, ..Default::default() },
-        CacheConfig {
-            num_slots: 8,
-            slot_capacity: g.max_cache_len,
-            block_tokens: 16,
-            total_blocks: 8 * g.max_cache_len / 16,
-            num_layers: g.num_layers,
-            token_elems: g.num_kv_heads * g.head_dim,
-        },
+        loquetier::harness::cache_config_for(&g, 8),
     );
     for i in 0..6u64 {
         coord.submit(InferenceRequest {
             id: i,
             adapter: (i % 3) as i32,
-            prompt: (0..8).map(|k| ((i as i32) * 31 + k * 7 + 3) % 512).collect(),
+            prompt: (0..8).map(|k| ((i as i32) * 31 + k * 7 + 3) % v).collect(),
             max_new_tokens: 4,
             eos_token: None,
             arrival_s: 0.0,
         });
     }
     let ex = |i: usize| TrainExample {
-        tokens: (0..24).map(|k| ((i * 13 + k * 3 + 1) as i32) % 512).collect(),
-        labels: (0..24).map(|k| ((i * 13 + k * 3 + 1) as i32) % 512).collect(),
+        tokens: (0..24).map(|k| ((i * 13 + k * 3 + 1) as i32) % v).collect(),
+        labels: (0..24).map(|k| ((i * 13 + k * 3 + 1) as i32) % v).collect(),
     };
     coord.add_trainer(FinetuneJob {
         id: 1,
@@ -278,7 +236,7 @@ fn full_coordinator_serves_on_xla_backend() {
 
     let mut steps = 0;
     while !coord.quiescent() && steps < 200 {
-        let out = coord.step(&mut be).unwrap();
+        let out = coord.step(be).unwrap();
         if out.idle {
             break;
         }
@@ -291,4 +249,134 @@ fn full_coordinator_serves_on_xla_backend() {
     assert_eq!(coord.eval_tokens(), 24);
     assert!(coord.trainers()[0].done());
     assert_eq!(coord.kv.stats().slots_used, 0, "all KV slots recycled");
+}
+
+// ---------------------------------------------------------------------------
+// Native backend: unconditional (zero artifacts, zero skips)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn native_decode_continuation_matches_full_prefill() {
+    let (mut be, _reg, _m) = native_stack(42).unwrap();
+    // Identical code path + fixed accumulation order ⇒ tight tolerance.
+    scenario_decode_continuation(&mut be, 1e-5);
+}
+
+#[test]
+fn native_adapters_route_to_different_logits() {
+    let (mut be, _reg, _m) = native_stack(42).unwrap();
+    scenario_adapter_routing(&mut be);
+}
+
+#[test]
+fn native_training_reduces_loss_on_repeated_batch() {
+    let (mut be, _reg, _m) = native_stack(42).unwrap();
+    scenario_training_descends(&mut be, 2e-2, 8);
+}
+
+#[test]
+fn native_unified_step_runs_all_three_classes() {
+    let (mut be, _reg, _m) = native_stack(42).unwrap();
+    scenario_unified_all_classes(&mut be, 1e-5);
+}
+
+#[test]
+fn native_full_coordinator_serves() {
+    let (mut be, _reg, _m) = native_stack(42).unwrap();
+    scenario_full_coordinator(&mut be);
+}
+
+#[test]
+fn native_checkpoint_roundtrips_trained_adapter() {
+    // Train, checkpoint into the registry, extract, re-attach on a fresh
+    // stack: the trained delta must survive the save path.
+    let (mut be, mut reg, _m) = native_stack(42).unwrap();
+    let v = be.geometry().vocab_size as i32;
+    let seq: Vec<i32> = (0..24).map(|i| (5 * i + 2) % v).collect();
+    for step in 1..=3 {
+        be.train_step(&[TrainSeq {
+            tokens: seq.clone(),
+            labels: seq.clone(),
+            adapter: 1,
+            train: true,
+            loss_scale: 1.0,
+        }])
+        .unwrap();
+        be.optim_step(&[1], 1e-2, step).unwrap();
+    }
+    be.checkpoint_adapters(&mut reg).unwrap();
+    let trained = reg.extract(1).unwrap();
+    let original = reg.extract(0).unwrap();
+    // The trained slot moved; an untrained slot did not.
+    let (_be2, reg2, _m2) = native_stack(42).unwrap();
+    let fresh = reg2.extract(1).unwrap();
+    let delta: f32 = trained
+        .modules
+        .values()
+        .zip(fresh.modules.values())
+        .map(|(a, b)| a.a.iter().zip(&b.a).map(|(x, y)| (x - y).abs()).sum::<f32>())
+        .sum();
+    assert!(delta > 1e-4, "training must change the checkpointed adapter");
+    let fresh0 = reg2.extract(0).unwrap();
+    let delta0: f32 = original
+        .modules
+        .values()
+        .zip(fresh0.modules.values())
+        .map(|(a, b)| a.a.iter().zip(&b.a).map(|(x, y)| (x - y).abs()).sum::<f32>())
+        .sum();
+    assert_eq!(delta0, 0.0, "untrained slots stay bit-identical");
+}
+
+// ---------------------------------------------------------------------------
+// XLA backend: artifact-gated (skip-on-absent, unchanged behaviour)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn xla_decode_continuation_matches_full_prefill() {
+    let _guard = serial();
+    let Some((mut be, _reg)) = make_xla_filtered(|n| n == "prefill_b1_s16" || n == "decode_b1")
+    else {
+        return;
+    };
+    scenario_decode_continuation(&mut be, 5e-3);
+}
+
+#[test]
+fn xla_adapters_route_to_different_logits() {
+    let _guard = serial();
+    let Some((mut be, _reg)) = make_xla_filtered(|n| n == "prefill_b4_s16") else {
+        return;
+    };
+    scenario_adapter_routing(&mut be);
+}
+
+#[test]
+fn xla_training_reduces_loss_on_repeated_batch() {
+    let _guard = serial();
+    let Some((mut be, _reg)) = make_xla_filtered(|n| n == "train_b1_s64" || n == "adam") else {
+        return;
+    };
+    scenario_training_descends(&mut be, 5e-2, 6);
+}
+
+#[test]
+fn xla_unified_step_runs_all_three_classes() {
+    let _guard = serial();
+    let Some((mut be, _reg)) = make_xla_filtered(|n| {
+        n == "unified_0" || n == "prefill_b1_s16" || n == "decode_b1"
+    }) else {
+        return;
+    };
+    scenario_unified_all_classes(&mut be, 5e-3);
+}
+
+#[test]
+fn xla_full_coordinator_serves() {
+    let _guard = serial();
+    let Some((mut be, _reg)) = make_xla_filtered(|n| {
+        n == "unified_0" || n.starts_with("prefill") || n.starts_with("decode") || n == "adam"
+    }) else {
+        return;
+    };
+    scenario_full_coordinator(&mut be);
 }

@@ -1,19 +1,24 @@
-//! Integration: the production load path (HLO text -> PJRT compile ->
-//! execute with weights from weights.bin) must reproduce the numbers the
-//! Python side snapshot into artifacts/golden/*.json.
+//! Integration goldens over the load path.
 //!
-//! Requires `make artifacts` and the real `xla` bindings; skipped (with a
-//! notice) when artifacts are absent, so the offline tier-1 run stays green
-//! (DESIGN.md §3).
+//! Two tiers:
+//!
+//! * **Synthetic (unconditional).** `harness::native_model` builds an
+//!   in-memory manifest + weight store shaped exactly like `make
+//!   artifacts` output — registry rebuild, detach/migration, adapter
+//!   save/load and store bounds all run with zero artifacts.
+//! * **Artifact-backed (skip-on-absent).** The HLO-text → PJRT compile →
+//!   execute path against `artifacts/golden/*.json` snapshots from the
+//!   Python side still requires `make artifacts` and the real `xla`
+//!   bindings (DESIGN.md §3 S7).
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
+use loquetier::harness::native_model;
 use loquetier::model::{LoraAdapter, SlotState, VirtualizedRegistry, WeightStore};
-use loquetier::runtime::{Arg, DType, HostTensor, Runtime, TensorSpec};
+use loquetier::runtime::{Arg, DType, HostTensor, Manifest, Runtime, TensorSpec};
 use loquetier::util::json;
 
-/// None = artifacts absent: skip (the offline environment cannot run
-/// `make artifacts`; the real-backend path is covered where they exist).
+/// None = artifacts absent: skip the artifact-backed tier only.
 fn artifacts_dir() -> Option<PathBuf> {
     let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
     let dir = root.join("artifacts");
@@ -24,7 +29,126 @@ fn artifacts_dir() -> Option<PathBuf> {
     Some(dir)
 }
 
-fn golden_files(artifacts: &PathBuf) -> Vec<PathBuf> {
+fn synthetic() -> (Manifest, WeightStore) {
+    native_model(2024).expect("synthetic model")
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic tier — unconditional
+// ---------------------------------------------------------------------------
+
+/// The virtualized registry, given base + adapter records, must rebuild
+/// exactly the `bank.*` arrays the store preloads (attach = slot write).
+/// Runs against the synthetic store unconditionally AND against real
+/// artifacts when present — the latter is the cross-language contract
+/// (the bank arrays there were written by Python's aot.py).
+fn check_registry_rebuild(manifest: &Manifest, store: &WeightStore) {
+    let mut reg = VirtualizedRegistry::new(manifest, store).unwrap();
+    for i in 0..manifest.build.lora.max_adapters {
+        let ad = LoraAdapter::from_store(store, manifest, i, format!("a{i}")).unwrap();
+        reg.attach(format!("vm{i}"), ad, i, SlotState::Inference).unwrap();
+    }
+    for name in manifest.lora_param_names() {
+        let bank_name = format!("bank.{}", name.strip_prefix("lora.").unwrap());
+        let want = store.tensor(&bank_name).unwrap();
+        let got = reg.bank_tensor(&name).unwrap();
+        assert_eq!(got.shape, want.shape, "{name}");
+        let (gv, wv) = (got.as_f32().unwrap(), want.as_f32().unwrap());
+        assert_eq!(gv, wv, "{name}: rebuilt bank differs from preloaded bank");
+    }
+}
+
+#[test]
+fn registry_rebuild_matches_bank_records() {
+    let (manifest, store) = synthetic();
+    check_registry_rebuild(&manifest, &store);
+}
+
+#[test]
+fn detach_zeroes_slot_and_migration_roundtrips() {
+    let (manifest, store) = synthetic();
+    let mut reg = VirtualizedRegistry::new(&manifest, &store).unwrap();
+    let ad = LoraAdapter::from_store(&store, &manifest, 0, "a0").unwrap();
+    reg.attach("vm0", ad, 2, SlotState::Inference).unwrap();
+
+    // void() detaches and returns a payload re-attachable elsewhere.
+    let payload = reg.void(2).unwrap();
+    let t = reg.bank_tensor("lora.layers.0.q.a").unwrap();
+    let l = manifest.build.lora.max_adapters;
+    let per = t.element_count() / l;
+    assert!(t.as_f32().unwrap()[2 * per..3 * per].iter().all(|&x| x == 0.0));
+
+    let mut reg2 = VirtualizedRegistry::new(&manifest, &store).unwrap();
+    reg2.unvoid(payload, 1).unwrap();
+    let t2 = reg2.bank_tensor("lora.layers.0.q.a").unwrap();
+    let a0 = store.tensor("adapter0.layers.0.q.a").unwrap();
+    assert_eq!(
+        &t2.as_f32().unwrap()[per..2 * per],
+        a0.as_f32().unwrap(),
+        "migrated adapter must land bit-identical in the new slot"
+    );
+}
+
+#[test]
+fn adapter_save_load_roundtrip() {
+    let (manifest, store) = synthetic();
+    let ad = LoraAdapter::from_store(&store, &manifest, 1, "roundtrip").unwrap();
+    let tmp = std::env::temp_dir().join("loq_adapter_roundtrip.json");
+    ad.save(&tmp).unwrap();
+    let back = LoraAdapter::load(&tmp).unwrap();
+    assert_eq!(back.name, ad.name);
+    assert_eq!(back.modules.len(), ad.modules.len());
+    for (k, m) in &ad.modules {
+        let bm = &back.modules[k];
+        assert_eq!(bm.a_shape, m.a_shape);
+        for (x, y) in bm.a.iter().zip(&m.a) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+    back.validate(&manifest).unwrap();
+}
+
+#[test]
+fn weight_store_rejects_missing_and_validates_bounds() {
+    let (manifest, store) = synthetic();
+    assert!(store.tensor("no.such.weight").is_err());
+    assert!(store.contains("base.embed"));
+    assert!(store.total_bytes() > 0);
+    // from_parts re-validates bounds: a record past the blob is rejected.
+    let mut records = manifest.weights.clone();
+    records[0].offset = store.total_bytes();
+    assert!(WeightStore::from_parts(records, vec![0u8; store.total_bytes()]).is_err());
+}
+
+#[test]
+fn import_bank_overwrites_host_mirror() {
+    let (manifest, store) = synthetic();
+    let mut reg = VirtualizedRegistry::new(&manifest, &store).unwrap();
+    let name = "lora.layers.0.q.a";
+    let n = reg.bank_tensor(name).unwrap().element_count();
+    let marker: Vec<f32> = (0..n).map(|i| i as f32 * 0.5).collect();
+    reg.import_bank(name, &marker).unwrap();
+    assert_eq!(reg.bank_tensor(name).unwrap().as_f32().unwrap(), &marker[..]);
+    assert!(reg.import_bank(name, &marker[..n - 1]).is_err(), "length checked");
+    assert!(reg.import_bank("lora.layers.0.q.nope", &marker).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-backed tier — skip-on-absent
+// ---------------------------------------------------------------------------
+
+#[test]
+fn registry_rebuild_matches_python_bank_records() {
+    // Same contract as the synthetic variant, but against the bank arrays
+    // Python's aot.py wrote — catches Rust/Python layout drift.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load_filtered(&dir, |_| false).unwrap();
+    let manifest = rt.manifest.clone();
+    let store = WeightStore::open(&dir, &manifest).unwrap();
+    check_registry_rebuild(&manifest, &store);
+}
+
+fn golden_files(artifacts: &Path) -> Vec<PathBuf> {
     let dir = artifacts.join("golden");
     let mut out: Vec<PathBuf> = std::fs::read_dir(&dir)
         .expect("golden dir")
@@ -108,86 +232,8 @@ fn golden_entries_reproduce_python_numbers() {
 }
 
 #[test]
-fn registry_rebuild_matches_bank_records() {
-    // The virtualized registry, given base + adapter records, must rebuild
-    // exactly the `bank.*` arrays Python wrote (attach = slot write).
-    let Some(dir) = artifacts_dir() else { return };
-    let rt = Runtime::load_filtered(&dir, |_| false).unwrap();
-    let manifest = rt.manifest.clone();
-    let store = WeightStore::open(&dir, &manifest).unwrap();
-    let mut reg = VirtualizedRegistry::new(&manifest, &store).unwrap();
-    for i in 0..manifest.build.lora.max_adapters {
-        let ad = LoraAdapter::from_store(&store, &manifest, i, format!("a{i}")).unwrap();
-        reg.attach(format!("vm{i}"), ad, i, SlotState::Inference).unwrap();
-    }
-    for name in manifest.lora_param_names() {
-        let bank_name = format!("bank.{}", name.strip_prefix("lora.").unwrap());
-        let want = store.tensor(&bank_name).unwrap();
-        let got = reg.bank_tensor(&name).unwrap();
-        assert_eq!(got.shape, want.shape, "{name}");
-        let (gv, wv) = (got.as_f32().unwrap(), want.as_f32().unwrap());
-        assert_eq!(gv, wv, "{name}: rebuilt bank differs from python bank");
-    }
-}
-
-#[test]
-fn detach_zeroes_slot_and_migration_roundtrips() {
-    let Some(dir) = artifacts_dir() else { return };
-    let rt = Runtime::load_filtered(&dir, |_| false).unwrap();
-    let manifest = rt.manifest.clone();
-    let store = WeightStore::open(&dir, &manifest).unwrap();
-    let mut reg = VirtualizedRegistry::new(&manifest, &store).unwrap();
-    let ad = LoraAdapter::from_store(&store, &manifest, 0, "a0").unwrap();
-    reg.attach("vm0", ad, 2, SlotState::Inference).unwrap();
-
-    // void() detaches and returns a payload re-attachable elsewhere.
-    let payload = reg.void(2).unwrap();
-    let t = reg.bank_tensor("lora.layers.0.q.a").unwrap();
-    let l = manifest.build.lora.max_adapters;
-    let per = t.element_count() / l;
-    assert!(t.as_f32().unwrap()[2 * per..3 * per].iter().all(|&x| x == 0.0));
-
-    let mut reg2 = VirtualizedRegistry::new(&manifest, &store).unwrap();
-    reg2.unvoid(payload, 1).unwrap();
-    let t2 = reg2.bank_tensor("lora.layers.0.q.a").unwrap();
-    let a0 = store.tensor("adapter0.layers.0.q.a").unwrap();
-    assert_eq!(
-        &t2.as_f32().unwrap()[per..2 * per],
-        a0.as_f32().unwrap(),
-        "migrated adapter must land bit-identical in the new slot"
-    );
-}
-
-#[test]
-fn adapter_save_load_roundtrip() {
-    let Some(dir) = artifacts_dir() else { return };
-    let rt = Runtime::load_filtered(&dir, |_| false).unwrap();
-    let manifest = rt.manifest.clone();
-    let store = WeightStore::open(&dir, &manifest).unwrap();
-    let ad = LoraAdapter::from_store(&store, &manifest, 1, "roundtrip").unwrap();
-    let tmp = std::env::temp_dir().join("loq_adapter_roundtrip.json");
-    ad.save(&tmp).unwrap();
-    let back = LoraAdapter::load(&tmp).unwrap();
-    assert_eq!(back.name, ad.name);
-    assert_eq!(back.modules.len(), ad.modules.len());
-    for (k, m) in &ad.modules {
-        let bm = &back.modules[k];
-        assert_eq!(bm.a_shape, m.a_shape);
-        for (x, y) in bm.a.iter().zip(&m.a) {
-            assert!((x - y).abs() < 1e-6);
-        }
-    }
-    back.validate(&manifest).unwrap();
-}
-
-#[test]
-fn weight_store_rejects_missing_and_validates_bounds() {
-    let Some(dir) = artifacts_dir() else { return };
-    let rt = Runtime::load_filtered(&dir, |_| false).unwrap();
-    let store = WeightStore::open(&dir, &rt.manifest).unwrap();
-    assert!(store.tensor("no.such.weight").is_err());
+fn weight_store_spec_sanity() {
+    // Keep a TensorSpec construction compiling against the public API.
     let spec = TensorSpec { name: "x".into(), shape: vec![2], dtype: DType::F32 };
-    let _ = spec; // spec construction is enough; bounds were checked at open
-    assert!(store.contains("base.embed"));
-    assert!(store.total_bytes() > 0);
+    assert_eq!(spec.element_count(), 2);
 }
