@@ -29,7 +29,7 @@ fn main() -> Result<()> {
             BackendKind::Native => {
                 let seed = args.usize_or("seed", 42)? as u64;
                 let (manifest, store) = native_model(seed)?;
-                let be = NativeBackend::new(&manifest, &store)?;
+                let be = NativeBackend::new(&manifest, &store, args.threads_or_auto()?)?;
                 println!(
                     "native backend: {} layers, vocab {}, seed {seed}",
                     manifest.build.model.num_layers, manifest.build.model.vocab_size

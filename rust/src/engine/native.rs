@@ -11,6 +11,21 @@
 //! row ([`use_segmented`](NativeBackend::use_segmented) = false switches to
 //! the per-row reference, the correctness oracle and ablation baseline).
 //!
+//! Execution model (ISSUE 3): every hot loop runs on the backend's
+//! [`ThreadPool`] under the **partition-only determinism rule** — work is
+//! split over independent output rows, attention heads, or SMLM segments,
+//! never across a reduction axis, so each output element sees the exact
+//! ascending-index accumulation order of the serial kernels and
+//! `--threads 1` vs `--threads N` produce bitwise-identical tokens and
+//! losses (proved in `native_numerics.rs`). All per-step activation,
+//! gradient, payload and logits buffers are claimed from a [`ScratchArena`]
+//! (zeroed on claim, retired after use), so a steady-state step performs no
+//! per-row or per-activation heap allocation — what remains is bounded by
+//! batch structure (once-per-launch row metadata, per-lane temporaries).
+//! The per-batch row sort feeding the SMLM kernel ([`SmlmSegmentation`])
+//! is computed once per launch and shared across all layers and LoRA
+//! sites.
+//!
 //! Layout contracts match the AOT path byte-for-byte: weights come from a
 //! `WeightStore` under the same `base.*`/`lora.*` names, the adapter bank
 //! is the registry's host mirror, and KV appends use the arena's
@@ -28,8 +43,12 @@ use crate::engine::{Backend, DecodeRow, PrefillSeq, StepCost, TrainSeq, UnifiedO
 use crate::kvcache::KvCacheManager;
 use crate::model::{VirtualizedRegistry, WeightStore};
 use crate::runtime::kernels::{
-    gemm_nn, gemm_nt, gemm_tn, rmsnorm, rmsnorm_backward, rope, silu, silu_grad,
-    smlm_per_row, smlm_segmented, softmax_inplace, LoraBankView,
+    gemm_nn, rmsnorm, rmsnorm_backward, rope, silu, silu_grad, smlm_per_row, smlm_segmented,
+    softmax_inplace, LoraBankView, SmlmSegmentation,
+};
+use crate::runtime::parallel::{
+    par_gemm_nn, par_gemm_nt, par_gemm_tn, resolve_threads, ScratchArena, SharedSliceMut,
+    ThreadPool,
 };
 use crate::runtime::{BucketTable, LoraGeometry, Manifest, ModelGeometry};
 
@@ -85,7 +104,9 @@ struct InfSeq {
     pos0: usize,
 }
 
-/// Per-layer activations stashed by the training forward pass.
+/// Per-layer activations stashed by the training forward pass. Every
+/// buffer is arena-claimed and retired via [`TrainStash::recycle`] once
+/// the backward pass is done.
 struct LayerStash {
     xin: Vec<f32>,
     inv_rms1: Vec<f32>,
@@ -110,6 +131,23 @@ struct TrainStash {
     logits: Vec<f32>,
 }
 
+impl TrainStash {
+    /// Retire every stashed buffer back to the arena.
+    fn recycle(self, arena: &mut ScratchArena) {
+        for l in self.layers {
+            for buf in [
+                l.xin, l.inv_rms1, l.h1, l.q, l.k, l.v, l.probs, l.ctx, l.x_mid, l.inv_rms2,
+                l.h2, l.gate_pre, l.up,
+            ] {
+                arena.give(buf);
+            }
+        }
+        arena.give(self.x_last);
+        arena.give(self.inv_rms_f);
+        arena.give(self.logits);
+    }
+}
+
 /// Pure-Rust CPU backend over a `WeightStore`-shaped model.
 pub struct NativeBackend {
     geometry: ModelGeometry,
@@ -123,6 +161,15 @@ pub struct NativeBackend {
     /// order.
     sites: Vec<Vec<LoraSite>>,
     scaling: Vec<f32>, // [S]
+    /// Per-slot "this bank slot can produce a non-zero delta" guard:
+    /// false for all-zero or zero-scaled slots, whose rows are masked to
+    /// base-only before any kernel runs (replacing the dense GEMMs' old
+    /// per-element zero-skip branches).
+    slot_loaded: Vec<bool>,
+    /// The deterministic partition-only worker pool.
+    pool: ThreadPool,
+    /// Reusable zero-alloc scratch buffers for every per-step tensor.
+    scratch: ScratchArena,
     /// true = segmented SMLM kernel; false = the per-row reference path
     /// (correctness oracle / ablation baseline).
     pub use_segmented: bool,
@@ -139,7 +186,10 @@ fn dot(a: &[f32], b: &[f32]) -> f32 {
 impl NativeBackend {
     /// Build from a manifest + weight store (artifact-shaped or the
     /// synthetic in-memory model from `harness::native_model`).
-    pub fn new(manifest: &Manifest, store: &WeightStore) -> Result<Self> {
+    ///
+    /// `threads` sizes the worker pool: `0` = auto (the `--threads`
+    /// default — `LOQUETIER_THREADS` env or available parallelism).
+    pub fn new(manifest: &Manifest, store: &WeightStore, threads: usize) -> Result<Self> {
         let g = manifest.build.model.clone();
         let l = manifest.build.lora.clone();
         let read = |name: &str, want: &[usize]| -> Result<Vec<f32>> {
@@ -209,6 +259,8 @@ impl NativeBackend {
             sites.push(layer_sites);
         }
         let scaling = read("lora.scaling", &[slots])?;
+        let slot_loaded =
+            (0..slots).map(|s| Self::slot_is_loaded(&sites, &scaling, r, s)).collect();
 
         Ok(Self {
             geometry: g,
@@ -220,8 +272,16 @@ impl NativeBackend {
             layers,
             sites,
             scaling,
+            slot_loaded,
+            pool: ThreadPool::new(resolve_threads(threads)),
+            scratch: ScratchArena::new(),
             use_segmented: true,
         })
+    }
+
+    /// Worker-pool width (for logging and the bench sweeps).
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
     }
 
     fn check_adapter(&self, adapter: i32) -> Result<()> {
@@ -234,14 +294,63 @@ impl NativeBackend {
         Ok(())
     }
 
+    /// A slot can produce a non-zero LoRA delta iff its scaling is
+    /// non-zero and some site has both a non-zero A and a non-zero B
+    /// block; otherwise `scale · (x·A)·B` is exactly zero for every input
+    /// and the slot can be skipped without changing a single bit.
+    fn slot_is_loaded(sites: &[Vec<LoraSite>], scaling: &[f32], rank: usize, s: usize) -> bool {
+        if scaling[s] == 0.0 {
+            return false;
+        }
+        sites.iter().flatten().any(|site| {
+            let ae = site.a_elems(rank);
+            let be = site.b_elems(rank);
+            site.a[s * ae..(s + 1) * ae].iter().any(|&v| v != 0.0)
+                && site.b[s * be..(s + 1) * be].iter().any(|&v| v != 0.0)
+        })
+    }
+
+    fn refresh_slot_loaded(&mut self) {
+        let rank = self.lora.rank;
+        self.slot_loaded = (0..self.scaling.len())
+            .map(|s| Self::slot_is_loaded(&self.sites, &self.scaling, rank, s))
+            .collect();
+    }
+
+    /// Mask rows routed to empty (all-zero / zero-scaled) bank slots to
+    /// base-only. Exact by construction (see [`Self::slot_is_loaded`]) —
+    /// this is the empty-slot guard that replaced the per-element
+    /// `== 0.0` skip branches inside the dense GEMM kernels.
+    fn mask_unloaded(&self, adapters: &mut [i32]) {
+        for a in adapters.iter_mut() {
+            if *a >= 0 && !self.slot_loaded[*a as usize] {
+                *a = -1;
+            }
+        }
+    }
+
     fn site_index(&self, li: usize, module: &str) -> Option<usize> {
         self.sites[li].iter().position(|s| s.module == module)
     }
 
     /// Apply the LoRA delta of site (li, module) to `y` for the given
-    /// per-row adapters, via the selected kernel path.
-    fn apply_lora(&self, li: usize, module: &str, x: &[f32], adapters: &[i32], y: &mut [f32]) {
+    /// per-row adapters, via the selected kernel path. `seg` is the
+    /// launch-wide segmentation (computed once per batch, shared across
+    /// all layers and sites); an all-base batch skips the kernel call
+    /// entirely.
+    fn apply_lora(
+        &self,
+        li: usize,
+        module: &str,
+        x: &[f32],
+        adapters: &[i32],
+        seg: &SmlmSegmentation,
+        y: &mut [f32],
+    ) {
         let Some(si) = self.site_index(li, module) else { return };
+        if seg.routed_rows() == 0 {
+            return;
+        }
         let site = &self.sites[li][si];
         let bank = LoraBankView {
             a: &site.a,
@@ -252,97 +361,161 @@ impl NativeBackend {
             dout: site.dout,
         };
         if self.use_segmented {
-            smlm_segmented(x, adapters, &bank, y);
+            smlm_segmented(&self.pool, x, seg, &bank, y);
         } else {
             smlm_per_row(x, adapters, &bank, y);
         }
     }
 
-    /// Embedding lookup into a fresh `[n, H]` activation matrix.
-    fn embed_rows(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+    /// Embedding lookup into an arena-claimed `[n, H]` activation matrix.
+    fn embed_rows(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
         let h = self.geometry.hidden_size;
         let v = self.geometry.vocab_size;
-        let mut x = vec![0.0f32; tokens.len() * h];
-        for (t, &tok) in tokens.iter().enumerate() {
+        for &tok in tokens {
             if tok < 0 || tok as usize >= v {
                 return Err(anyhow!("token {tok} outside vocab [0, {v})"));
             }
+        }
+        let mut x = self.scratch.take(tokens.len() * h);
+        for (t, &tok) in tokens.iter().enumerate() {
             let src = &self.embed[tok as usize * h..(tok as usize + 1) * h];
             x[t * h..(t + 1) * h].copy_from_slice(src);
         }
         Ok(x)
     }
 
-    /// lm_head over selected rows of the final hidden states.
-    fn project_logits(&self, x: &[f32], rows: &[usize]) -> Vec<Vec<f32>> {
+    /// lm_head over selected rows of the final hidden states, into ONE
+    /// flat arena-claimed `[rows.len() × vocab]` buffer (row-parallel).
+    /// Callers retire the buffer via [`Self::split_logits`] or
+    /// `scratch.give`.
+    fn project_logits(&mut self, x: &[f32], rows: &[usize]) -> Vec<f32> {
         let h = self.geometry.hidden_size;
         let v = self.geometry.vocab_size;
         let eps = self.geometry.rms_eps as f32;
-        let mut hf = vec![0.0f32; h];
-        rows.iter()
-            .map(|&row| {
-                rmsnorm(&mut hf, &x[row * h..(row + 1) * h], &self.final_norm, eps);
-                let mut logits = vec![0.0f32; v];
-                gemm_nn(&mut logits, &hf, &self.lm_head, 1, h, v);
-                logits
-            })
-            .collect()
+        let mut logits = self.scratch.take(rows.len() * v);
+        let (final_norm, lm_head) = (&self.final_norm, &self.lm_head);
+        self.pool.par_rows(&mut logits, rows.len(), v, |rg, out| {
+            let mut hf = vec![0.0f32; h];
+            for (ri, orow) in rg.clone().zip(out.chunks_mut(v)) {
+                let row = rows[ri];
+                rmsnorm(&mut hf, &x[row * h..(row + 1) * h], final_norm, eps);
+                gemm_nn(orow, &hf, lm_head, 1, h, v);
+            }
+        });
+        logits
+    }
+
+    /// Split a flat `[count × vocab]` logits buffer into the per-sequence
+    /// rows the [`Backend`] contract hands out, retiring the flat buffer.
+    fn split_logits(&mut self, flat: Vec<f32>, count: usize) -> Vec<Vec<f32>> {
+        let v = self.geometry.vocab_size;
+        debug_assert_eq!(flat.len(), count * v);
+        let mut out = Vec::with_capacity(count);
+        for c in 0..count {
+            out.push(flat[c * v..(c + 1) * v].to_vec());
+        }
+        self.scratch.give(flat);
+        out
     }
 
     /// One flattened inference launch over `seqs` (prefill sequences and
-    /// decode rows alike). Computes per-sequence last-token logits and
-    /// appends the new K/V to each sequence's arena slot.
+    /// decode rows alike). Computes per-sequence last-token logits (one
+    /// flat arena-claimed `[seqs.len() × vocab]` buffer) and appends the
+    /// new K/V to each sequence's arena slot.
     fn forward_inference(
-        &self,
+        &mut self,
         tokens: &[i32],
         seqs: &[InfSeq],
         cache: &mut KvCacheManager,
-    ) -> Result<Vec<Vec<f32>>> {
-        let g = &self.geometry;
+    ) -> Result<Vec<f32>> {
+        let g = self.geometry.clone();
         let n = tokens.len();
         let (h, qd, kd) = (g.hidden_size, g.q_dim, g.kv_dim);
         let (nh, nkv, hd) = (g.num_heads, g.num_kv_heads, g.head_dim);
         let group = nh / nkv;
         let te = nkv * hd;
+        let i_sz = g.intermediate_size;
         let inv_sqrt = 1.0 / (hd as f32).sqrt();
         let eps = g.rms_eps as f32;
 
+        // Per-row routing + position metadata, once per launch.
         let mut row_adapters = vec![-1i32; n];
-        for s in seqs {
+        let mut row_seq = vec![0usize; n];
+        let mut row_pos = vec![0usize; n];
+        for (si, s) in seqs.iter().enumerate() {
             self.check_adapter(s.adapter)?;
-            row_adapters[s.start..s.start + s.len].fill(s.adapter);
+            for t in 0..s.len {
+                row_adapters[s.start + t] = s.adapter;
+                row_seq[s.start + t] = si;
+                row_pos[s.start + t] = s.pos0 + t;
+            }
+        }
+        self.mask_unloaded(&mut row_adapters);
+        // ONE segmentation for the whole launch, shared by every layer and
+        // LoRA site (prefill and decode rows together — Algorithm 1).
+        let seg = SmlmSegmentation::compute(&row_adapters, self.lora.max_adapters);
+        // Cumulative cost of the (row, head) attention units — each does
+        // O(pos + 1) score/value work, so lanes must split FLOPs rather
+        // than unit counts (late causal rows dwarf early ones). The cost
+        // is identical in every layer, so this is built once per launch.
+        let mut attn_prefix = Vec::with_capacity(n * nh + 1);
+        attn_prefix.push(0usize);
+        for t in 0..n {
+            for _ in 0..nh {
+                attn_prefix.push(attn_prefix.last().unwrap() + row_pos[t] + 1);
+            }
         }
 
         let mut x = self.embed_rows(tokens)?;
         // Per-sequence layer-major K/V payloads for the post-launch append.
-        let mut k_payload: Vec<Vec<f32>> =
-            seqs.iter().map(|s| vec![0.0; g.num_layers * s.len * te]).collect();
-        let mut v_payload: Vec<Vec<f32>> =
-            seqs.iter().map(|s| vec![0.0; g.num_layers * s.len * te]).collect();
+        let mut k_payload: Vec<Vec<f32>> = Vec::with_capacity(seqs.len());
+        let mut v_payload: Vec<Vec<f32>> = Vec::with_capacity(seqs.len());
+        for s in seqs {
+            k_payload.push(self.scratch.take(g.num_layers * s.len * te));
+            v_payload.push(self.scratch.take(g.num_layers * s.len * te));
+        }
 
-        let mut h1 = vec![0.0f32; n * h];
-        let mut scores: Vec<f32> = Vec::new();
+        let mut h1 = self.scratch.take(n * h);
+        let mut q = self.scratch.take(n * qd);
+        let mut k = self.scratch.take(n * kd);
+        let mut v = self.scratch.take(n * kd);
+        let mut ctx = self.scratch.take(n * qd);
+        let mut attn_out = self.scratch.take(n * h);
+        let mut h2 = self.scratch.take(n * h);
+        let mut gate = self.scratch.take(n * i_sz);
+        let mut up = self.scratch.take(n * i_sz);
+        let mut mlp = self.scratch.take(n * h);
+
         for (li, lw) in self.layers.iter().enumerate() {
-            for t in 0..n {
-                rmsnorm(&mut h1[t * h..(t + 1) * h], &x[t * h..(t + 1) * h], &lw.ln1, eps);
-            }
-            let mut q = vec![0.0f32; n * qd];
-            gemm_nn(&mut q, &h1, &lw.wq, n, h, qd);
-            self.apply_lora(li, "q", &h1, &row_adapters, &mut q);
-            let mut k = vec![0.0f32; n * kd];
-            gemm_nn(&mut k, &h1, &lw.wk, n, h, kd);
-            self.apply_lora(li, "k", &h1, &row_adapters, &mut k);
-            let mut v = vec![0.0f32; n * kd];
-            gemm_nn(&mut v, &h1, &lw.wv, n, h, kd);
-            self.apply_lora(li, "v", &h1, &row_adapters, &mut v);
-
-            for s in seqs {
-                for t in 0..s.len {
-                    let row = s.start + t;
-                    let pos = s.pos0 + t;
-                    rope(&mut q[row * qd..(row + 1) * qd], nh, hd, pos, g.rope_theta, 1.0);
-                    rope(&mut k[row * kd..(row + 1) * kd], nkv, hd, pos, g.rope_theta, 1.0);
+            let pool = &self.pool;
+            pool.par_rows(&mut h1, n, h, |rg, out| {
+                for (t, orow) in rg.clone().zip(out.chunks_mut(h)) {
+                    rmsnorm(orow, &x[t * h..(t + 1) * h], &lw.ln1, eps);
                 }
+            });
+            q.fill(0.0);
+            par_gemm_nn(pool, &mut q, &h1, &lw.wq, n, h, qd);
+            self.apply_lora(li, "q", &h1, &row_adapters, &seg, &mut q);
+            k.fill(0.0);
+            par_gemm_nn(&self.pool, &mut k, &h1, &lw.wk, n, h, kd);
+            self.apply_lora(li, "k", &h1, &row_adapters, &seg, &mut k);
+            v.fill(0.0);
+            par_gemm_nn(&self.pool, &mut v, &h1, &lw.wv, n, h, kd);
+            self.apply_lora(li, "v", &h1, &row_adapters, &seg, &mut v);
+
+            // RoPE, row-parallel (each row owns its q/k slices).
+            {
+                let sq = SharedSliceMut::new(&mut q);
+                let sk = SharedSliceMut::new(&mut k);
+                self.pool.par_partition(n, |rg| {
+                    for t in rg {
+                        // SAFETY: row `t` is visited by exactly one chunk.
+                        let qr = unsafe { sq.slice(t * qd, qd) };
+                        rope(qr, nh, hd, row_pos[t], g.rope_theta, 1.0);
+                        let kr = unsafe { sk.slice(t * kd, kd) };
+                        rope(kr, nkv, hd, row_pos[t], g.rope_theta, 1.0);
+                    }
+                });
             }
 
             // Stash this layer's new K/V into the append payloads.
@@ -356,15 +529,21 @@ impl NativeBackend {
             }
 
             // Attention: cached prefix (layer plane) + in-launch keys.
-            let mut ctx = vec![0.0f32; n * qd];
-            for s in seqs {
-                let (ck, cv) = (cache.k_layer(s.kv_slot, li), cache.v_layer(s.kv_slot, li));
-                for t in 0..s.len {
-                    let row = s.start + t;
-                    let pos = s.pos0 + t;
-                    for head in 0..nh {
+            // Parallel over (row, head) units — each owns one ctx slice.
+            ctx.fill(0.0);
+            {
+                let cache_ref: &KvCacheManager = cache;
+                let sctx = SharedSliceMut::new(&mut ctx);
+                self.pool.par_partition_weighted(&attn_prefix, |rg| {
+                    let mut scores: Vec<f32> = Vec::new();
+                    for u in rg {
+                        let (t, head) = (u / nh, u % nh);
+                        let s = &seqs[row_seq[t]];
+                        let ck = cache_ref.k_layer(s.kv_slot, li);
+                        let cv = cache_ref.v_layer(s.kv_slot, li);
+                        let pos = row_pos[t];
                         let kvh = head / group;
-                        let qh = &q[row * qd + head * hd..row * qd + (head + 1) * hd];
+                        let qh = &q[t * qd + head * hd..t * qd + (head + 1) * hd];
                         scores.clear();
                         scores.resize(pos + 1, 0.0);
                         for (j, sc) in scores.iter_mut().enumerate() {
@@ -377,7 +556,8 @@ impl NativeBackend {
                             *sc = dot(qh, kj) * inv_sqrt;
                         }
                         softmax_inplace(&mut scores);
-                        let out = &mut ctx[row * qd + head * hd..row * qd + (head + 1) * hd];
+                        // SAFETY: unit (t, head) owns this slice alone.
+                        let out = unsafe { sctx.slice(t * qd + head * hd, hd) };
                         for (j, &p) in scores.iter().enumerate() {
                             let vj = if j < s.pos0 {
                                 &cv[j * te + kvh * hd..j * te + (kvh + 1) * hd]
@@ -390,135 +570,211 @@ impl NativeBackend {
                             }
                         }
                     }
-                }
+                });
             }
 
-            let mut attn_out = vec![0.0f32; n * h];
-            gemm_nn(&mut attn_out, &ctx, &lw.wo, n, qd, h);
-            self.apply_lora(li, "o", &ctx, &row_adapters, &mut attn_out);
+            attn_out.fill(0.0);
+            par_gemm_nn(&self.pool, &mut attn_out, &ctx, &lw.wo, n, qd, h);
+            self.apply_lora(li, "o", &ctx, &row_adapters, &seg, &mut attn_out);
             for (xx, ao) in x.iter_mut().zip(&attn_out) {
                 *xx += ao;
             }
 
             // MLP.
-            let i = g.intermediate_size;
-            let mut h2 = vec![0.0f32; n * h];
-            for t in 0..n {
-                rmsnorm(&mut h2[t * h..(t + 1) * h], &x[t * h..(t + 1) * h], &lw.ln2, eps);
-            }
-            let mut gate = vec![0.0f32; n * i];
-            gemm_nn(&mut gate, &h2, &lw.wgate, n, h, i);
-            let mut up = vec![0.0f32; n * i];
-            gemm_nn(&mut up, &h2, &lw.wup, n, h, i);
-            for (gv, uv) in gate.iter_mut().zip(&up) {
-                *gv = silu(*gv) * uv;
-            }
-            let mut mlp = vec![0.0f32; n * h];
-            gemm_nn(&mut mlp, &gate, &lw.wdown, n, i, h);
+            self.pool.par_rows(&mut h2, n, h, |rg, out| {
+                for (t, orow) in rg.clone().zip(out.chunks_mut(h)) {
+                    rmsnorm(orow, &x[t * h..(t + 1) * h], &lw.ln2, eps);
+                }
+            });
+            gate.fill(0.0);
+            par_gemm_nn(&self.pool, &mut gate, &h2, &lw.wgate, n, h, i_sz);
+            up.fill(0.0);
+            par_gemm_nn(&self.pool, &mut up, &h2, &lw.wup, n, h, i_sz);
+            self.pool.par_rows(&mut gate, n, i_sz, |rg, rows| {
+                for (t, grow) in rg.clone().zip(rows.chunks_mut(i_sz)) {
+                    let urow = &up[t * i_sz..(t + 1) * i_sz];
+                    for (gv, uv) in grow.iter_mut().zip(urow) {
+                        *gv = silu(*gv) * uv;
+                    }
+                }
+            });
+            mlp.fill(0.0);
+            par_gemm_nn(&self.pool, &mut mlp, &gate, &lw.wdown, n, i_sz, h);
             for (xx, mv) in x.iter_mut().zip(&mlp) {
                 *xx += mv;
             }
         }
 
-        // Last-token logits per sequence, then the KV appends.
+        // Last-token logits per sequence, then the KV appends. Buffers go
+        // back to the arena before the fallible appends are unwrapped, so
+        // an append error cannot cold-start the next step.
         let last_rows: Vec<usize> = seqs.iter().map(|s| s.start + s.len - 1).collect();
         let logits = self.project_logits(&x, &last_rows);
+        let mut append_result = Ok(());
         for (si, s) in seqs.iter().enumerate() {
-            cache.append(s.kv_slot, s.len, &k_payload[si], &v_payload[si])?;
+            append_result = cache.append(s.kv_slot, s.len, &k_payload[si], &v_payload[si]);
+            if append_result.is_err() {
+                break;
+            }
+        }
+        for buf in k_payload.into_iter().chain(v_payload) {
+            self.scratch.give(buf);
+        }
+        for buf in [x, h1, q, k, v, ctx, attn_out, h2, gate, up, mlp] {
+            self.scratch.give(buf);
+        }
+        if let Err(e) = append_result {
+            self.scratch.give(logits);
+            return Err(e);
         }
         Ok(logits)
     }
 
     /// Training forward over one sequence (full causal attention, no
-    /// cache), stashing every activation the backward pass needs.
-    fn forward_train(&self, tokens: &[i32], adapter: i32) -> Result<TrainStash> {
-        let g = &self.geometry;
+    /// cache), stashing every activation the backward pass needs — all of
+    /// them arena-claimed.
+    fn forward_train(&mut self, tokens: &[i32], adapter: i32) -> Result<TrainStash> {
+        let g = self.geometry.clone();
         let n = tokens.len();
         let (h, qd, kd, v) = (g.hidden_size, g.q_dim, g.kv_dim, g.vocab_size);
         let (nh, nkv, hd) = (g.num_heads, g.num_kv_heads, g.head_dim);
         let group = nh / nkv;
+        let i_sz = g.intermediate_size;
         let inv_sqrt = 1.0 / (hd as f32).sqrt();
         let eps = g.rms_eps as f32;
-        let row_adapters = vec![adapter; n];
+        let mut row_adapters = vec![adapter; n];
+        self.mask_unloaded(&mut row_adapters);
+        let seg = SmlmSegmentation::compute(&row_adapters, self.lora.max_adapters);
+        // Causal (row, head) attention-unit costs, once per call (the
+        // forward_inference comment explains the weighting).
+        let mut attn_prefix = Vec::with_capacity(n * nh + 1);
+        attn_prefix.push(0usize);
+        for t in 0..n {
+            for _ in 0..nh {
+                attn_prefix.push(attn_prefix.last().unwrap() + t + 1);
+            }
+        }
 
         let mut x = self.embed_rows(tokens)?;
         let mut layers = Vec::with_capacity(g.num_layers);
-        for (li, lw) in self.layers.iter().enumerate() {
-            let xin = x.clone();
-            let mut inv_rms1 = vec![0.0f32; n];
-            let mut h1 = vec![0.0f32; n * h];
-            for t in 0..n {
-                inv_rms1[t] =
-                    rmsnorm(&mut h1[t * h..(t + 1) * h], &xin[t * h..(t + 1) * h], &lw.ln1, eps);
+        for li in 0..self.layers.len() {
+            let mut xin = self.scratch.take(n * h);
+            xin.copy_from_slice(&x);
+            let mut inv_rms1 = self.scratch.take(n);
+            let mut h1 = self.scratch.take(n * h);
+            {
+                let lw = &self.layers[li];
+                let sh1 = SharedSliceMut::new(&mut h1);
+                let sinv = SharedSliceMut::new(&mut inv_rms1);
+                self.pool.par_partition(n, |rg| {
+                    for t in rg {
+                        // SAFETY: row `t` owned by exactly one chunk.
+                        let orow = unsafe { sh1.slice(t * h, h) };
+                        let iv = unsafe { sinv.slice(t, 1) };
+                        iv[0] = rmsnorm(orow, &xin[t * h..(t + 1) * h], &lw.ln1, eps);
+                    }
+                });
             }
-            let mut q = vec![0.0f32; n * qd];
-            gemm_nn(&mut q, &h1, &lw.wq, n, h, qd);
-            self.apply_lora(li, "q", &h1, &row_adapters, &mut q);
-            let mut k = vec![0.0f32; n * kd];
-            gemm_nn(&mut k, &h1, &lw.wk, n, h, kd);
-            self.apply_lora(li, "k", &h1, &row_adapters, &mut k);
-            let mut vv = vec![0.0f32; n * kd];
-            gemm_nn(&mut vv, &h1, &lw.wv, n, h, kd);
-            self.apply_lora(li, "v", &h1, &row_adapters, &mut vv);
-            for t in 0..n {
-                rope(&mut q[t * qd..(t + 1) * qd], nh, hd, t, g.rope_theta, 1.0);
-                rope(&mut k[t * kd..(t + 1) * kd], nkv, hd, t, g.rope_theta, 1.0);
+            let mut q = self.scratch.take(n * qd);
+            par_gemm_nn(&self.pool, &mut q, &h1, &self.layers[li].wq, n, h, qd);
+            self.apply_lora(li, "q", &h1, &row_adapters, &seg, &mut q);
+            let mut k = self.scratch.take(n * kd);
+            par_gemm_nn(&self.pool, &mut k, &h1, &self.layers[li].wk, n, h, kd);
+            self.apply_lora(li, "k", &h1, &row_adapters, &seg, &mut k);
+            let mut vv = self.scratch.take(n * kd);
+            par_gemm_nn(&self.pool, &mut vv, &h1, &self.layers[li].wv, n, h, kd);
+            self.apply_lora(li, "v", &h1, &row_adapters, &seg, &mut vv);
+            {
+                let sq = SharedSliceMut::new(&mut q);
+                let sk = SharedSliceMut::new(&mut k);
+                self.pool.par_partition(n, |rg| {
+                    for t in rg {
+                        // SAFETY: row `t` owned by exactly one chunk.
+                        let qr = unsafe { sq.slice(t * qd, qd) };
+                        rope(qr, nh, hd, t, g.rope_theta, 1.0);
+                        let kr = unsafe { sk.slice(t * kd, kd) };
+                        rope(kr, nkv, hd, t, g.rope_theta, 1.0);
+                    }
+                });
             }
 
-            let mut probs = vec![0.0f32; nh * n * n];
-            let mut ctx = vec![0.0f32; n * qd];
-            let mut scores: Vec<f32> = Vec::new();
-            for t in 0..n {
-                for head in 0..nh {
-                    let kvh = head / group;
-                    let qh = &q[t * qd + head * hd..t * qd + (head + 1) * hd];
-                    scores.clear();
-                    scores.resize(t + 1, 0.0);
-                    for (j, sc) in scores.iter_mut().enumerate() {
-                        let kj = &k[j * kd + kvh * hd..j * kd + (kvh + 1) * hd];
-                        *sc = dot(qh, kj) * inv_sqrt;
-                    }
-                    softmax_inplace(&mut scores);
-                    probs[(head * n + t) * n..(head * n + t) * n + t + 1]
-                        .copy_from_slice(&scores);
-                    let out = &mut ctx[t * qd + head * hd..t * qd + (head + 1) * hd];
-                    for (j, &p) in scores.iter().enumerate() {
-                        let vj = &vv[j * kd + kvh * hd..j * kd + (kvh + 1) * hd];
-                        for (o, w) in out.iter_mut().zip(vj) {
-                            *o += p * w;
+            let mut probs = self.scratch.take(nh * n * n);
+            let mut ctx = self.scratch.take(n * qd);
+            {
+                let sprobs = SharedSliceMut::new(&mut probs);
+                let sctx = SharedSliceMut::new(&mut ctx);
+                self.pool.par_partition_weighted(&attn_prefix, |rg| {
+                    let mut scores: Vec<f32> = Vec::new();
+                    for u in rg {
+                        let (t, head) = (u / nh, u % nh);
+                        let kvh = head / group;
+                        let qh = &q[t * qd + head * hd..t * qd + (head + 1) * hd];
+                        scores.clear();
+                        scores.resize(t + 1, 0.0);
+                        for (j, sc) in scores.iter_mut().enumerate() {
+                            let kj = &k[j * kd + kvh * hd..j * kd + (kvh + 1) * hd];
+                            *sc = dot(qh, kj) * inv_sqrt;
+                        }
+                        softmax_inplace(&mut scores);
+                        // SAFETY: unit (t, head) owns both slices alone.
+                        let prow = unsafe { sprobs.slice((head * n + t) * n, t + 1) };
+                        prow.copy_from_slice(&scores);
+                        let out = unsafe { sctx.slice(t * qd + head * hd, hd) };
+                        for (j, &p) in scores.iter().enumerate() {
+                            let vj = &vv[j * kd + kvh * hd..j * kd + (kvh + 1) * hd];
+                            for (o, w) in out.iter_mut().zip(vj) {
+                                *o += p * w;
+                            }
                         }
                     }
-                }
+                });
             }
 
-            let mut attn_out = vec![0.0f32; n * h];
-            gemm_nn(&mut attn_out, &ctx, &lw.wo, n, qd, h);
-            self.apply_lora(li, "o", &ctx, &row_adapters, &mut attn_out);
+            let mut attn_out = self.scratch.take(n * h);
+            par_gemm_nn(&self.pool, &mut attn_out, &ctx, &self.layers[li].wo, n, qd, h);
+            self.apply_lora(li, "o", &ctx, &row_adapters, &seg, &mut attn_out);
             for (xx, ao) in x.iter_mut().zip(&attn_out) {
                 *xx += ao;
             }
-            let x_mid = x.clone();
+            self.scratch.give(attn_out);
+            let mut x_mid = self.scratch.take(n * h);
+            x_mid.copy_from_slice(&x);
 
-            let i = g.intermediate_size;
-            let mut inv_rms2 = vec![0.0f32; n];
-            let mut h2 = vec![0.0f32; n * h];
-            for t in 0..n {
-                inv_rms2[t] =
-                    rmsnorm(&mut h2[t * h..(t + 1) * h], &x_mid[t * h..(t + 1) * h], &lw.ln2, eps);
+            let mut inv_rms2 = self.scratch.take(n);
+            let mut h2 = self.scratch.take(n * h);
+            {
+                let lw = &self.layers[li];
+                let sh2 = SharedSliceMut::new(&mut h2);
+                let sinv = SharedSliceMut::new(&mut inv_rms2);
+                self.pool.par_partition(n, |rg| {
+                    for t in rg {
+                        // SAFETY: row `t` owned by exactly one chunk.
+                        let orow = unsafe { sh2.slice(t * h, h) };
+                        let iv = unsafe { sinv.slice(t, 1) };
+                        iv[0] = rmsnorm(orow, &x_mid[t * h..(t + 1) * h], &lw.ln2, eps);
+                    }
+                });
             }
-            let mut gate_pre = vec![0.0f32; n * i];
-            gemm_nn(&mut gate_pre, &h2, &lw.wgate, n, h, i);
-            let mut up = vec![0.0f32; n * i];
-            gemm_nn(&mut up, &h2, &lw.wup, n, h, i);
-            let mut act = vec![0.0f32; n * i];
-            for j in 0..n * i {
-                act[j] = silu(gate_pre[j]) * up[j];
-            }
-            let mut mlp = vec![0.0f32; n * h];
-            gemm_nn(&mut mlp, &act, &lw.wdown, n, i, h);
+            let mut gate_pre = self.scratch.take(n * i_sz);
+            par_gemm_nn(&self.pool, &mut gate_pre, &h2, &self.layers[li].wgate, n, h, i_sz);
+            let mut up = self.scratch.take(n * i_sz);
+            par_gemm_nn(&self.pool, &mut up, &h2, &self.layers[li].wup, n, h, i_sz);
+            let mut act = self.scratch.take(n * i_sz);
+            self.pool.par_rows(&mut act, n, i_sz, |rg, rows| {
+                for (t, arow) in rg.clone().zip(rows.chunks_mut(i_sz)) {
+                    let base = t * i_sz;
+                    for (j, av) in arow.iter_mut().enumerate() {
+                        *av = silu(gate_pre[base + j]) * up[base + j];
+                    }
+                }
+            });
+            let mut mlp = self.scratch.take(n * h);
+            par_gemm_nn(&self.pool, &mut mlp, &act, &self.layers[li].wdown, n, i_sz, h);
             for (xx, mv) in x.iter_mut().zip(&mlp) {
                 *xx += mv;
             }
+            self.scratch.give(mlp);
+            self.scratch.give(act);
 
             layers.push(LayerStash {
                 xin,
@@ -538,22 +794,33 @@ impl NativeBackend {
         }
 
         let x_last = x;
-        let mut inv_rms_f = vec![0.0f32; n];
-        let mut hf = vec![0.0f32; n * h];
-        for t in 0..n {
-            let row = &x_last[t * h..(t + 1) * h];
-            inv_rms_f[t] = rmsnorm(&mut hf[t * h..(t + 1) * h], row, &self.final_norm, eps);
+        let mut inv_rms_f = self.scratch.take(n);
+        let mut hf = self.scratch.take(n * h);
+        {
+            let final_norm = &self.final_norm;
+            let shf = SharedSliceMut::new(&mut hf);
+            let sinv = SharedSliceMut::new(&mut inv_rms_f);
+            self.pool.par_partition(n, |rg| {
+                for t in rg {
+                    // SAFETY: row `t` owned by exactly one chunk.
+                    let orow = unsafe { shf.slice(t * h, h) };
+                    let iv = unsafe { sinv.slice(t, 1) };
+                    iv[0] = rmsnorm(orow, &x_last[t * h..(t + 1) * h], final_norm, eps);
+                }
+            });
         }
-        let mut logits = vec![0.0f32; n * v];
-        gemm_nn(&mut logits, &hf, &self.lm_head, n, h, v);
+        let mut logits = self.scratch.take(n * v);
+        par_gemm_nn(&self.pool, &mut logits, &hf, &self.lm_head, n, h, v);
+        self.scratch.give(hf);
         Ok(TrainStash { n, layers, x_last, inv_rms_f, logits })
     }
 
     /// Causal-LM loss over a stash: position t predicts `labels[t+1]`
     /// (labels < 0 are ignored). Returns (mean loss, dlogits·loss_scale)
-    /// — dlogits is `None` when `want_grad` is false or nothing counted.
+    /// — dlogits is `None` when `want_grad` is false or nothing counted;
+    /// when present it is arena-claimed and must be retired by the caller.
     fn loss_and_dlogits(
-        &self,
+        &mut self,
         stash: &TrainStash,
         labels: &[i32],
         loss_scale: f32,
@@ -573,27 +840,31 @@ impl NativeBackend {
         }
         let inv_count = 1.0 / counted.len() as f32;
         let mut loss = 0.0f32;
-        let mut dlogits = if want_grad { Some(vec![0.0f32; n * v]) } else { None };
-        let mut probs = vec![0.0f32; v];
+        let mut dlogits = if want_grad { Some(self.scratch.take(n * v)) } else { None };
+        let mut probs = self.scratch.take(v);
         for &(t, lab) in &counted {
             probs.copy_from_slice(&stash.logits[t * v..(t + 1) * v]);
             softmax_inplace(&mut probs);
             loss -= probs[lab].max(1e-30).ln() * inv_count;
             if let Some(d) = dlogits.as_mut() {
                 let row = &mut d[t * v..(t + 1) * v];
-                for (rv, &p) in row.iter_mut().zip(&probs) {
+                for (rv, &p) in row.iter_mut().zip(probs.iter()) {
                     *rv = p * inv_count * loss_scale;
                 }
                 row[lab] -= inv_count * loss_scale;
             }
         }
+        self.scratch.give(probs);
         (loss, dlogits)
     }
 
     /// LoRA backward at one site for a uniform-adapter sequence:
     /// accumulates dA/dB into the grad bank and the input gradient into
-    /// `dx`.
+    /// `dx`. All four products run row-partitioned on the pool with
+    /// serial-identical per-element accumulation order.
     fn lora_backward(
+        pool: &ThreadPool,
+        scratch: &mut ScratchArena,
         sites: &mut [LoraSite],
         site_idx: usize,
         rank: usize,
@@ -608,25 +879,25 @@ impl NativeBackend {
         let (din, dout) = (site.din, site.dout);
         let scale = scaling[slot];
         let (ae, be) = (site.a_elems(rank), site.b_elems(rank));
-        let a_slot = &site.a[slot * ae..(slot + 1) * ae];
-        let b_slot = &site.b[slot * be..(slot + 1) * be];
 
         // u = scale · x·A (used only for dB = uᵀ·dy).
-        let mut u = vec![0.0f32; n * rank];
-        gemm_nn(&mut u, x, a_slot, n, din, rank);
+        let mut u = scratch.take(n * rank);
+        par_gemm_nn(pool, &mut u, x, &site.a[slot * ae..(slot + 1) * ae], n, din, rank);
         for uv in u.iter_mut() {
             *uv *= scale;
         }
-        gemm_tn(&mut site.grad_b[slot * be..(slot + 1) * be], &u, dy, n, rank, dout);
+        par_gemm_tn(pool, &mut site.grad_b[slot * be..(slot + 1) * be], &u, dy, n, rank, dout);
 
         // du = scale · dy·Bᵀ; dA = xᵀ·du; dx += du·Aᵀ.
-        let mut du = vec![0.0f32; n * rank];
-        gemm_nt(&mut du, dy, b_slot, n, dout, rank);
+        let mut du = scratch.take(n * rank);
+        par_gemm_nt(pool, &mut du, dy, &site.b[slot * be..(slot + 1) * be], n, dout, rank);
         for dv in du.iter_mut() {
             *dv *= scale;
         }
-        gemm_tn(&mut site.grad_a[slot * ae..(slot + 1) * ae], x, &du, n, din, rank);
-        gemm_nt(dx, &du, a_slot, n, rank, din);
+        par_gemm_tn(pool, &mut site.grad_a[slot * ae..(slot + 1) * ae], x, &du, n, din, rank);
+        par_gemm_nt(pool, dx, &du, &site.a[slot * ae..(slot + 1) * ae], n, rank, din);
+        scratch.give(u);
+        scratch.give(du);
     }
 
     /// Backward pass over one stashed training sequence: propagates
@@ -640,134 +911,201 @@ impl NativeBackend {
         let (h, qd, kd, v) = (g.hidden_size, g.q_dim, g.kv_dim, g.vocab_size);
         let (nh, nkv, hd) = (g.num_heads, g.num_kv_heads, g.head_dim);
         let group = nh / nkv;
+        let i_sz = g.intermediate_size;
         let inv_sqrt = 1.0 / (hd as f32).sqrt();
         let slot = adapter.max(0) as usize;
         let row_has_lora = adapter >= 0;
 
-        // dx through the head: dhf = dlogits·Wᵀ, then final-norm backward.
-        let mut dhf = vec![0.0f32; n * h];
-        gemm_nt(&mut dhf, dlogits, &self.lm_head, n, v, h);
-        let mut dx = vec![0.0f32; n * h];
-        for t in 0..n {
-            rmsnorm_backward(
-                &mut dx[t * h..(t + 1) * h],
-                &dhf[t * h..(t + 1) * h],
-                &stash.x_last[t * h..(t + 1) * h],
-                &self.final_norm,
-                stash.inv_rms_f[t],
-            );
-        }
+        // Split borrow: layer weights read-only, site grads mutable, the
+        // pool shared, the arena feeding every temporary. The read-only
+        // fields are downgraded to shared refs so the pool closures
+        // (`Fn + Sync`) can capture them.
+        let NativeBackend { layers, sites, pool, scratch, lm_head, final_norm, scaling, .. } =
+            self;
+        let pool: &ThreadPool = pool;
+        let layers: &[LayerWeights] = layers;
+        let lm_head: &[f32] = lm_head;
+        let final_norm: &[f32] = final_norm;
+        let scaling: &[f32] = scaling;
 
-        let scaling = self.scaling.clone();
-        // Split borrow: layer weights read-only, site grads mutable.
-        let NativeBackend { layers, sites, .. } = self;
+        // dx through the head: dhf = dlogits·Wᵀ, then final-norm backward.
+        let mut dhf = scratch.take(n * h);
+        par_gemm_nt(pool, &mut dhf, dlogits, lm_head, n, v, h);
+        // dx accumulates the residual-stream gradient; one buffer walks
+        // the whole stack (the residual passthrough is the identity).
+        let mut dx = scratch.take(n * h);
+        pool.par_rows(&mut dx, n, h, |rg, rows| {
+            for (t, dxrow) in rg.clone().zip(rows.chunks_mut(h)) {
+                rmsnorm_backward(
+                    dxrow,
+                    &dhf[t * h..(t + 1) * h],
+                    &stash.x_last[t * h..(t + 1) * h],
+                    final_norm,
+                    stash.inv_rms_f[t],
+                );
+            }
+        });
+        scratch.give(dhf);
+
+        let mut d_act = scratch.take(n * i_sz);
+        let mut d_gate_pre = scratch.take(n * i_sz);
+        let mut d_up = scratch.take(n * i_sz);
+        let mut dh2 = scratch.take(n * h);
+        let mut d_ctx = scratch.take(n * qd);
+        let mut dq = scratch.take(n * qd);
+        let mut dk = scratch.take(n * kd);
+        let mut dv = scratch.take(n * kd);
+        let mut dh1 = scratch.take(n * h);
+
         for li in (0..layers.len()).rev() {
             let lw = &layers[li];
             let st = &stash.layers[li];
-            let i = g.intermediate_size;
 
             // ---- MLP backward: dx is d(layer output).
-            let mut d_act = vec![0.0f32; n * i];
-            gemm_nt(&mut d_act, &dx, &lw.wdown, n, h, i);
-            let mut d_gate_pre = vec![0.0f32; n * i];
-            let mut d_up = vec![0.0f32; n * i];
-            for j in 0..n * i {
-                d_gate_pre[j] = d_act[j] * st.up[j] * silu_grad(st.gate_pre[j]);
-                d_up[j] = d_act[j] * silu(st.gate_pre[j]);
+            d_act.fill(0.0);
+            par_gemm_nt(pool, &mut d_act, &dx, &lw.wdown, n, h, i_sz);
+            {
+                let sdg = SharedSliceMut::new(&mut d_gate_pre);
+                let sdu = SharedSliceMut::new(&mut d_up);
+                pool.par_partition(n, |rg| {
+                    for t in rg {
+                        // SAFETY: row `t` owned by exactly one chunk.
+                        let dgrow = unsafe { sdg.slice(t * i_sz, i_sz) };
+                        let durow = unsafe { sdu.slice(t * i_sz, i_sz) };
+                        let base = t * i_sz;
+                        for j in 0..i_sz {
+                            let da = d_act[base + j];
+                            dgrow[j] = da * st.up[base + j] * silu_grad(st.gate_pre[base + j]);
+                            durow[j] = da * silu(st.gate_pre[base + j]);
+                        }
+                    }
+                });
             }
-            let mut dh2 = vec![0.0f32; n * h];
-            gemm_nt(&mut dh2, &d_gate_pre, &lw.wgate, n, i, h);
-            gemm_nt(&mut dh2, &d_up, &lw.wup, n, i, h);
-            // d(x_mid) = residual passthrough + ln2 backward.
-            let mut dx_mid = dx; // residual branch: dx flows through unchanged
-            for t in 0..n {
-                rmsnorm_backward(
-                    &mut dx_mid[t * h..(t + 1) * h],
-                    &dh2[t * h..(t + 1) * h],
-                    &st.x_mid[t * h..(t + 1) * h],
-                    &lw.ln2,
-                    st.inv_rms2[t],
-                );
-            }
+            dh2.fill(0.0);
+            par_gemm_nt(pool, &mut dh2, &d_gate_pre, &lw.wgate, n, i_sz, h);
+            par_gemm_nt(pool, &mut dh2, &d_up, &lw.wup, n, i_sz, h);
+            // d(x_mid) = residual passthrough + ln2 backward (adds into dx).
+            pool.par_rows(&mut dx, n, h, |rg, rows| {
+                for (t, dxrow) in rg.clone().zip(rows.chunks_mut(h)) {
+                    rmsnorm_backward(
+                        dxrow,
+                        &dh2[t * h..(t + 1) * h],
+                        &st.x_mid[t * h..(t + 1) * h],
+                        &lw.ln2,
+                        st.inv_rms2[t],
+                    );
+                }
+            });
 
-            // ---- Attention backward: dx_mid is d(attn residual output).
-            let mut d_ctx = vec![0.0f32; n * qd];
-            gemm_nt(&mut d_ctx, &dx_mid, &lw.wo, n, h, qd);
+            // ---- Attention backward: dx is now d(attn residual output).
+            d_ctx.fill(0.0);
+            par_gemm_nt(pool, &mut d_ctx, &dx, &lw.wo, n, h, qd);
             if row_has_lora {
                 if let Some(si) = sites[li].iter().position(|s| s.module == "o") {
                     Self::lora_backward(
+                        pool,
+                        scratch,
                         &mut sites[li],
                         si,
                         rank,
-                        &scaling,
+                        scaling,
                         slot,
                         &st.ctx,
-                        &dx_mid,
+                        &dx,
                         &mut d_ctx,
                         n,
                     );
                 }
             }
 
-            let mut dq = vec![0.0f32; n * qd];
-            let mut dk = vec![0.0f32; n * kd];
-            let mut dv = vec![0.0f32; n * kd];
-            let mut dp: Vec<f32> = Vec::new();
-            for t in 0..n {
-                for head in 0..nh {
-                    let kvh = head / group;
-                    let prow = &st.probs[(head * n + t) * n..(head * n + t) * n + t + 1];
-                    let dch = &d_ctx[t * qd + head * hd..t * qd + (head + 1) * hd];
-                    // dP and dV.
-                    dp.clear();
-                    dp.resize(t + 1, 0.0);
-                    for j in 0..=t {
-                        let vj = &st.v[j * kd + kvh * hd..j * kd + (kvh + 1) * hd];
-                        dp[j] = dot(dch, vj);
-                        let dvj = &mut dv[j * kd + kvh * hd..j * kd + (kvh + 1) * hd];
-                        let p = prow[j];
-                        for (d, &c) in dvj.iter_mut().zip(dch) {
-                            *d += p * c;
+            dq.fill(0.0);
+            dk.fill(0.0);
+            dv.fill(0.0);
+            {
+                // Parallel over KV-head groups: a group owns every dk/dv
+                // slice it can touch, and the (t asc, head asc in group)
+                // walk inside a group reproduces the serial accumulation
+                // order for each element.
+                let sdq = SharedSliceMut::new(&mut dq);
+                let sdk = SharedSliceMut::new(&mut dk);
+                let sdv = SharedSliceMut::new(&mut dv);
+                pool.par_partition(nkv, |rg| {
+                    let mut dp: Vec<f32> = Vec::new();
+                    for kvh in rg {
+                        for t in 0..n {
+                            for head in kvh * group..(kvh + 1) * group {
+                                let prow =
+                                    &st.probs[(head * n + t) * n..(head * n + t) * n + t + 1];
+                                let dch = &d_ctx[t * qd + head * hd..t * qd + (head + 1) * hd];
+                                // dP and dV.
+                                dp.clear();
+                                dp.resize(t + 1, 0.0);
+                                for j in 0..=t {
+                                    let vj = &st.v[j * kd + kvh * hd..j * kd + (kvh + 1) * hd];
+                                    dp[j] = dot(dch, vj);
+                                    // SAFETY: (j, kvh) slices belong to
+                                    // this group alone.
+                                    let dvj = unsafe { sdv.slice(j * kd + kvh * hd, hd) };
+                                    let p = prow[j];
+                                    for (d, &c) in dvj.iter_mut().zip(dch) {
+                                        *d += p * c;
+                                    }
+                                }
+                                // Softmax backward: dS_j = P_j (dP_j − Σ dP·P).
+                                let mut dot_pp = 0.0f32;
+                                for j in 0..=t {
+                                    dot_pp += dp[j] * prow[j];
+                                }
+                                let qh = &st.q[t * qd + head * hd..t * qd + (head + 1) * hd];
+                                // SAFETY: (t, head) slice owned by this unit.
+                                let dqh = unsafe { sdq.slice(t * qd + head * hd, hd) };
+                                for j in 0..=t {
+                                    let ds = prow[j] * (dp[j] - dot_pp) * inv_sqrt;
+                                    let kj = &st.k[j * kd + kvh * hd..j * kd + (kvh + 1) * hd];
+                                    for d in 0..hd {
+                                        dqh[d] += ds * kj[d];
+                                    }
+                                    // SAFETY: (j, kvh) slice owned by this
+                                    // group.
+                                    let dkj = unsafe { sdk.slice(j * kd + kvh * hd, hd) };
+                                    for (dd, &qv) in dkj.iter_mut().zip(qh) {
+                                        *dd += ds * qv;
+                                    }
+                                }
+                            }
                         }
                     }
-                    // Softmax backward: dS_j = P_j (dP_j − Σ dP·P).
-                    let mut dot_pp = 0.0f32;
-                    for j in 0..=t {
-                        dot_pp += dp[j] * prow[j];
-                    }
-                    let qh = &st.q[t * qd + head * hd..t * qd + (head + 1) * hd];
-                    let dqh_base = t * qd + head * hd;
-                    for j in 0..=t {
-                        let ds = prow[j] * (dp[j] - dot_pp) * inv_sqrt;
-                        let kj = &st.k[j * kd + kvh * hd..j * kd + (kvh + 1) * hd];
-                        for d in 0..hd {
-                            dq[dqh_base + d] += ds * kj[d];
-                        }
-                        let dkj = &mut dk[j * kd + kvh * hd..j * kd + (kvh + 1) * hd];
-                        for (dd, &qv) in dkj.iter_mut().zip(qh) {
-                            *dd += ds * qv;
-                        }
-                    }
-                }
+                });
             }
             // RoPE is orthonormal: invert by rotating the gradients back.
-            for t in 0..n {
-                rope(&mut dq[t * qd..(t + 1) * qd], nh, hd, t, g.rope_theta, -1.0);
-                rope(&mut dk[t * kd..(t + 1) * kd], nkv, hd, t, g.rope_theta, -1.0);
+            {
+                let sdq = SharedSliceMut::new(&mut dq);
+                let sdk = SharedSliceMut::new(&mut dk);
+                pool.par_partition(n, |rg| {
+                    for t in rg {
+                        // SAFETY: row `t` owned by exactly one chunk.
+                        let qr = unsafe { sdq.slice(t * qd, qd) };
+                        rope(qr, nh, hd, t, g.rope_theta, -1.0);
+                        let kr = unsafe { sdk.slice(t * kd, kd) };
+                        rope(kr, nkv, hd, t, g.rope_theta, -1.0);
+                    }
+                });
             }
 
-            let mut dh1 = vec![0.0f32; n * h];
-            gemm_nt(&mut dh1, &dq, &lw.wq, n, qd, h);
-            gemm_nt(&mut dh1, &dk, &lw.wk, n, kd, h);
-            gemm_nt(&mut dh1, &dv, &lw.wv, n, kd, h);
+            dh1.fill(0.0);
+            par_gemm_nt(pool, &mut dh1, &dq, &lw.wq, n, qd, h);
+            par_gemm_nt(pool, &mut dh1, &dk, &lw.wk, n, kd, h);
+            par_gemm_nt(pool, &mut dh1, &dv, &lw.wv, n, kd, h);
             if row_has_lora {
                 for (module, dy) in [("q", &dq), ("k", &dk), ("v", &dv)] {
                     if let Some(si) = sites[li].iter().position(|s| s.module == module) {
                         Self::lora_backward(
+                            pool,
+                            scratch,
                             &mut sites[li],
                             si,
                             rank,
-                            &scaling,
+                            scaling,
                             slot,
                             &st.h1,
                             dy,
@@ -778,18 +1116,22 @@ impl NativeBackend {
                 }
             }
 
-            // d(xin) = residual passthrough + ln1 backward.
-            let mut dxin = dx_mid;
-            for t in 0..n {
-                rmsnorm_backward(
-                    &mut dxin[t * h..(t + 1) * h],
-                    &dh1[t * h..(t + 1) * h],
-                    &st.xin[t * h..(t + 1) * h],
-                    &lw.ln1,
-                    st.inv_rms1[t],
-                );
-            }
-            dx = dxin;
+            // d(xin) = residual passthrough + ln1 backward (adds into dx).
+            pool.par_rows(&mut dx, n, h, |rg, rows| {
+                for (t, dxrow) in rg.clone().zip(rows.chunks_mut(h)) {
+                    rmsnorm_backward(
+                        dxrow,
+                        &dh1[t * h..(t + 1) * h],
+                        &st.xin[t * h..(t + 1) * h],
+                        &lw.ln1,
+                        st.inv_rms1[t],
+                    );
+                }
+            });
+        }
+
+        for buf in [dx, d_act, d_gate_pre, d_up, dh2, d_ctx, dq, dk, dv, dh1] {
+            scratch.give(buf);
         }
     }
 }
@@ -834,7 +1176,8 @@ impl Backend for NativeBackend {
             });
             tokens.extend_from_slice(&q.tokens);
         }
-        let logits = self.forward_inference(&tokens, &inf, cache)?;
+        let flat = self.forward_inference(&tokens, &inf, cache)?;
+        let logits = self.split_logits(flat, inf.len());
         let wall = t0.elapsed().as_secs_f64();
         Ok((logits, StepCost { wall, virt: wall }))
     }
@@ -860,7 +1203,8 @@ impl Backend for NativeBackend {
                 pos0: cache.len(r.kv_slot),
             })
             .collect();
-        let logits = self.forward_inference(&tokens, &inf, cache)?;
+        let flat = self.forward_inference(&tokens, &inf, cache)?;
+        let logits = self.split_logits(flat, inf.len());
         let wall = t0.elapsed().as_secs_f64();
         Ok((logits, StepCost { wall, virt: wall }))
     }
@@ -879,7 +1223,9 @@ impl Backend for NativeBackend {
                 self.loss_and_dlogits(&stash, &q.labels, q.loss_scale, want_grad);
             if let Some(d) = dlogits {
                 self.backward_train(&stash, &d, q.adapter);
+                self.scratch.give(d);
             }
+            stash.recycle(&mut self.scratch);
             losses.push(loss);
         }
         let wall = t0.elapsed().as_secs_f64();
@@ -926,6 +1272,12 @@ impl Backend for NativeBackend {
                 }
             }
         }
+        // Trained slots may have gone zero→non-zero (or vice versa):
+        // refresh their empty-slot guard.
+        for &slot in slots {
+            self.slot_loaded[slot] =
+                Self::slot_is_loaded(&self.sites, &self.scaling, rank, slot);
+        }
         let wall = t0.elapsed().as_secs_f64();
         Ok(StepCost { wall, virt: wall })
     }
@@ -968,7 +1320,8 @@ impl Backend for NativeBackend {
             tokens.push(r.token);
         }
         if !inf.is_empty() {
-            let mut logits = self.forward_inference(&tokens, &inf, cache)?;
+            let flat = self.forward_inference(&tokens, &inf, cache)?;
+            let mut logits = self.split_logits(flat, inf.len());
             out.dec_logits = logits.split_off(pf.len());
             out.pf_last_logits = logits;
         }
@@ -1014,6 +1367,7 @@ impl Backend for NativeBackend {
             ));
         }
         self.scaling.copy_from_slice(scaling);
+        self.refresh_slot_loaded();
         Ok(())
     }
 
@@ -1058,6 +1412,22 @@ mod tests {
         assert!(logits[0].iter().all(|x| x.is_finite()));
         assert_eq!(kv.len(slot), 9);
         assert!(cost.wall >= 0.0);
+    }
+
+    #[test]
+    fn empty_slot_guard_tracks_bank_state() {
+        // After sync every stand-in adapter is non-zero => loaded.
+        let (be, _reg, _m) = native_stack(11).unwrap();
+        assert!(be.slot_loaded.iter().all(|&b| b));
+
+        // A freshly constructed backend has an all-zero bank and zero
+        // scaling => nothing loaded, every row masked to base-only.
+        let (manifest, store) = crate::harness::native_model(11).unwrap();
+        let be0 = NativeBackend::new(&manifest, &store, 1).unwrap();
+        assert!(be0.slot_loaded.iter().all(|&b| !b));
+        let mut adapters = vec![0i32, -1, 2];
+        be0.mask_unloaded(&mut adapters);
+        assert_eq!(adapters, vec![-1, -1, -1]);
     }
 
     #[test]

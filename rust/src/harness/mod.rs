@@ -10,7 +10,10 @@
 
 mod native;
 
-pub use native::{native_buckets, native_geometry, native_lora, native_model, native_stack};
+pub use native::{
+    native_buckets, native_geometry, native_lora, native_model, native_stack,
+    native_stack_with_threads,
+};
 
 use std::path::Path;
 

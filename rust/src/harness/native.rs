@@ -195,14 +195,26 @@ pub fn native_model(seed: u64) -> Result<(Manifest, WeightStore)> {
 
 /// The full native serving stack: backend + registry with every stand-in
 /// adapter attached (slot i ← adapter i, inference state) and synced.
+/// Runs at the auto thread count (`LOQUETIER_THREADS` env or available
+/// parallelism); [`native_stack_with_threads`] pins it explicitly.
 pub fn native_stack(seed: u64) -> Result<(NativeBackend, VirtualizedRegistry, Manifest)> {
+    native_stack_with_threads(seed, 0)
+}
+
+/// [`native_stack`] with an explicit worker-pool width (`0` = auto) — the
+/// constructor the thread-count-invariance tests and the `--threads` CLI
+/// plumbing go through.
+pub fn native_stack_with_threads(
+    seed: u64,
+    threads: usize,
+) -> Result<(NativeBackend, VirtualizedRegistry, Manifest)> {
     let (manifest, store) = native_model(seed)?;
     let mut reg = VirtualizedRegistry::new(&manifest, &store)?;
     for i in 0..manifest.build.lora.max_adapters {
         let ad = LoraAdapter::from_store(&store, &manifest, i, format!("adapter{i}"))?;
         reg.attach(format!("vm{i}"), ad, i, SlotState::Inference)?;
     }
-    let mut be = NativeBackend::new(&manifest, &store)?;
+    let mut be = NativeBackend::new(&manifest, &store, threads)?;
     be.sync_adapters(&mut reg)?;
     Ok((be, reg, manifest))
 }

@@ -32,9 +32,14 @@ loquetier — virtualized multi-LoRA unified fine-tuning + serving
 
 USAGE:
   loquetier serve   [--backend native|xla] [--artifacts DIR] [--listen ADDR]
-                    [--config FILE] [--seed N]
+                    [--config FILE] [--seed N] [--threads N]
   loquetier bench   [--backend native|xla] [--artifacts DIR] [--seed N]
-  loquetier inspect [--artifacts DIR]";
+                    [--threads N]
+  loquetier inspect [--artifacts DIR]
+
+  --threads N sizes the native backend's deterministic worker pool
+  (0/absent = auto: LOQUETIER_THREADS env, else available parallelism);
+  the XLA backend ignores it.";
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -129,10 +134,13 @@ fn bench_cmd(args: &Args) -> Result<()> {
     match args.backend_or(BackendKind::Xla)? {
         BackendKind::Native => {
             let seed = args.usize_or("seed", 42)? as u64;
-            let (mut be, _reg, manifest) = harness::native_stack(seed)?;
+            let threads = args.threads_or_auto()?;
+            let (mut be, _reg, manifest) = harness::native_stack_with_threads(seed, threads)?;
             println!(
-                "native backend: {} layers, vocab {}, seed {seed}",
-                manifest.build.model.num_layers, manifest.build.model.vocab_size
+                "native backend: {} layers, vocab {}, seed {seed}, {} threads",
+                manifest.build.model.num_layers,
+                manifest.build.model.vocab_size,
+                be.threads()
             );
             bench_smoke(&mut be)
         }
@@ -211,7 +219,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
                 // Random-weight tiny model: real numerics, zero artifacts.
                 let seed = args.usize_or("seed", 42)? as u64;
                 let (manifest, store) = harness::native_model(seed)?;
-                let be = NativeBackend::new(&manifest, &store)?;
+                let be = NativeBackend::new(&manifest, &store, args.threads_or_auto()?)?;
                 (manifest, store, Box::new(be), "native")
             }
             BackendKind::Xla => {

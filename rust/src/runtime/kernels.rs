@@ -14,21 +14,28 @@
 //! The flagship kernel is Segmented Multi-LoRA Multiplication (SMLM, paper
 //! Section 3.1): rows of a mixed-adapter batch are sorted into per-adapter
 //! segments and each segment issues one gathered two-stage matmul, instead
-//! of one pair of rank-r products per row. [`smlm_per_row`] is the naive
-//! reference kept as the ablation baseline.
+//! of one pair of rank-r products per row. The sort lives in
+//! [`SmlmSegmentation`] — a flat counting sort computed **once per batch**
+//! and shared across every layer and LoRA site of a launch — and the
+//! segments execute in parallel on the backend's
+//! [`ThreadPool`](crate::runtime::parallel::ThreadPool). [`smlm_per_row`]
+//! is the naive reference kept as the ablation baseline.
+
+use crate::runtime::parallel::{SharedSliceMut, ThreadPool};
 
 /// y[m×n] += a[m×k] · b[k×n] (row-major, accumulate).
 pub fn gemm_nn(y: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(y.len(), m * n);
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
+    // No zero-skip branch: a per-element branch on the hot path only paid
+    // off for empty LoRA bank slots, which the backend now guards one
+    // level up (`NativeBackend::mask_unloaded` routes rows of all-zero /
+    // zero-scaled slots to base-only before any kernel runs).
     for i in 0..m {
         let yr = &mut y[i * n..(i + 1) * n];
         for l in 0..k {
             let av = a[i * k + l];
-            if av == 0.0 {
-                continue;
-            }
             let br = &b[l * n..(l + 1) * n];
             for (yy, bb) in yr.iter_mut().zip(br) {
                 *yy += av * bb;
@@ -65,9 +72,6 @@ pub fn gemm_tn(y: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize
         let br = &b[i * n..(i + 1) * n];
         for l in 0..k {
             let av = a[i * k + l];
-            if av == 0.0 {
-                continue;
-            }
             let yr = &mut y[l * n..(l + 1) * n];
             for (yy, bb) in yr.iter_mut().zip(br) {
                 *yy += av * bb;
@@ -192,68 +196,181 @@ impl<'a> LoraBankView<'a> {
     }
 }
 
-/// Segmented Multi-LoRA Multiplication: `y[i] += scale_s · (x[i]·A_s)·B_s`
-/// for each row `i` whose `adapters[i] = s ≥ 0`; base-only rows (`-1`) are
-/// untouched.
+/// The per-batch row sort behind [`smlm_segmented`]: a flat, stable
+/// counting sort of adapter-routed rows into per-slot segments.
 ///
-/// Rows are sorted into per-adapter segments; each segment gathers its rows
-/// once and issues ONE two-stage matmul, so the number of rank-r products
-/// scales with the number of *distinct adapters in the batch*, not with the
-/// batch size — the paper's answer to the per-row adapter loop that
-/// S-LoRA's bgmv kernels also attack.
-pub fn smlm_segmented(x: &[f32], adapters: &[i32], bank: &LoraBankView, y: &mut [f32]) {
-    let (din, dout, r) = (bank.din, bank.dout, bank.rank);
-    let n = adapters.len();
-    debug_assert_eq!(x.len(), n * din);
-    debug_assert_eq!(y.len(), n * dout);
+/// Computed **once per launch** from the batch's per-row adapter ids and
+/// shared across every layer and LoRA site (the segments depend only on
+/// the routing, never on the weights) — hoisting what used to be a
+/// `Vec<Vec<usize>>` rebuild inside every kernel call.
+#[derive(Debug, Clone)]
+pub struct SmlmSegmentation {
+    /// Adapter-routed row indices, grouped by slot; batch order inside a
+    /// group (stability fixes the accumulation order).
+    order: Vec<usize>,
+    /// `[slots + 1]` prefix offsets into `order`.
+    start: Vec<usize>,
+    /// Slots with at least one routed row (precomputed here so the
+    /// per-site kernel calls allocate nothing).
+    busy: Vec<usize>,
+}
 
-    // Segment construction: counting sort by adapter id (stable — row order
-    // inside a segment is batch order, fixing the accumulation order).
-    let slots = bank.slots();
-    let mut counts = vec![0usize; slots];
-    for &a in adapters {
-        if a >= 0 {
-            counts[a as usize] += 1;
-        }
-    }
-    let mut rows_of: Vec<Vec<usize>> = counts.iter().map(|&c| Vec::with_capacity(c)).collect();
-    for (i, &a) in adapters.iter().enumerate() {
-        if a >= 0 {
-            rows_of[a as usize].push(i);
-        }
-    }
-
-    let mut xs: Vec<f32> = Vec::new();
-    let mut mid: Vec<f32> = Vec::new();
-    let mut ys: Vec<f32> = Vec::new();
-    for (s, rows) in rows_of.iter().enumerate() {
-        if rows.is_empty() {
-            continue;
-        }
-        let m = rows.len();
-        // Gather the segment's rows.
-        xs.clear();
-        xs.reserve(m * din);
-        for &i in rows {
-            xs.extend_from_slice(&x[i * din..(i + 1) * din]);
-        }
-        // Two-stage product over the whole segment.
-        mid.clear();
-        mid.resize(m * r, 0.0);
-        gemm_nn(&mut mid, &xs, bank.a_slot(s), m, din, r);
-        ys.clear();
-        ys.resize(m * dout, 0.0);
-        gemm_nn(&mut ys, &mid, bank.b_slot(s), m, r, dout);
-        // Scatter-accumulate with the slot scaling.
-        let scale = bank.scaling[s];
-        for (seg_i, &i) in rows.iter().enumerate() {
-            let src = &ys[seg_i * dout..(seg_i + 1) * dout];
-            let dst = &mut y[i * dout..(i + 1) * dout];
-            for (d, v) in dst.iter_mut().zip(src) {
-                *d += scale * v;
+impl SmlmSegmentation {
+    /// Counting-sort `adapters` (one id per row, `-1` = base-only) into
+    /// per-slot segments.
+    pub fn compute(adapters: &[i32], slots: usize) -> Self {
+        let mut start = vec![0usize; slots + 1];
+        for &a in adapters {
+            if a >= 0 {
+                debug_assert!((a as usize) < slots, "adapter {a} out of bank range");
+                start[a as usize + 1] += 1;
             }
         }
+        for s in 0..slots {
+            start[s + 1] += start[s];
+        }
+        let mut cursor = start[..slots].to_vec();
+        let mut order = vec![0usize; start[slots]];
+        for (i, &a) in adapters.iter().enumerate() {
+            if a >= 0 {
+                order[cursor[a as usize]] = i;
+                cursor[a as usize] += 1;
+            }
+        }
+        let busy = (0..slots).filter(|&s| start[s + 1] > start[s]).collect();
+        Self { order, start, busy }
     }
+
+    pub fn slots(&self) -> usize {
+        self.start.len() - 1
+    }
+
+    /// Row indices routed to slot `s`, in batch order.
+    pub fn rows(&self, s: usize) -> &[usize] {
+        &self.order[self.start[s]..self.start[s + 1]]
+    }
+
+    /// Total adapter-routed rows (base-only rows excluded).
+    pub fn routed_rows(&self) -> usize {
+        self.order.len()
+    }
+
+    /// Slots with at least one routed row (precomputed, allocation-free).
+    pub fn busy_slots(&self) -> &[usize] {
+        &self.busy
+    }
+}
+
+/// One work unit's gathered two-stage product over `rows` (a segment or a
+/// row block of one): gather → `x·A_s` → `·B_s` → scatter-accumulate with
+/// the slot scaling. `xs`/`mid`/`ys` are caller-provided scratch (reused
+/// across the units on one lane). Each output row's math involves only
+/// that row, so how rows are blocked never changes a bit of output.
+///
+/// # Safety
+///
+/// `y.slice` is touched only at `rows`; the caller must guarantee no
+/// other concurrent user writes those rows.
+unsafe fn smlm_unit(
+    x: &[f32],
+    rows: &[usize],
+    s: usize,
+    bank: &LoraBankView,
+    y: &SharedSliceMut<f32>,
+    xs: &mut Vec<f32>,
+    mid: &mut Vec<f32>,
+    ys: &mut Vec<f32>,
+) {
+    let (din, dout, r) = (bank.din, bank.dout, bank.rank);
+    let m = rows.len();
+    xs.clear();
+    xs.reserve(m * din);
+    for &i in rows {
+        xs.extend_from_slice(&x[i * din..(i + 1) * din]);
+    }
+    mid.clear();
+    mid.resize(m * r, 0.0);
+    gemm_nn(mid, xs, bank.a_slot(s), m, din, r);
+    ys.clear();
+    ys.resize(m * dout, 0.0);
+    gemm_nn(ys, mid, bank.b_slot(s), m, r, dout);
+    let scale = bank.scaling[s];
+    for (seg_i, &i) in rows.iter().enumerate() {
+        let src = &ys[seg_i * dout..(seg_i + 1) * dout];
+        let dst = y.slice(i * dout, dout);
+        for (d, v) in dst.iter_mut().zip(src) {
+            *d += scale * v;
+        }
+    }
+}
+
+/// Segmented Multi-LoRA Multiplication: `y[i] += scale_s · (x[i]·A_s)·B_s`
+/// for each row `i` routed to slot `s` by `seg`; base-only rows are
+/// untouched.
+///
+/// Each segment gathers its rows once and issues ONE two-stage matmul, so
+/// the number of rank-r products scales with the number of *distinct
+/// adapters in the batch*, not with the batch size — the paper's answer to
+/// the per-row adapter loop that S-LoRA's bgmv kernels also attack.
+///
+/// Parallelism is partition-only and therefore bitwise thread-count
+/// invariant: busy segments are cut into row-block work units no larger
+/// than `ceil(routed_rows / threads)` (so one hot adapter cannot pin a
+/// single lane), and lanes take contiguous row-weighted runs of units.
+/// Unit boundaries depend on the lane count, but every output row's math
+/// involves only that row, so blocking never changes a bit of output.
+pub fn smlm_segmented(
+    pool: &ThreadPool,
+    x: &[f32],
+    seg: &SmlmSegmentation,
+    bank: &LoraBankView,
+    y: &mut [f32],
+) {
+    let (din, dout) = (bank.din, bank.dout);
+    debug_assert_eq!(seg.slots(), bank.slots());
+    debug_assert_eq!(x.len() * dout, y.len() * din);
+    let busy = seg.busy_slots();
+    if busy.is_empty() {
+        return;
+    }
+    // Remaining per-call allocations are bounded by the number of busy
+    // segments and lanes (work-unit list, gather/product scratch), never
+    // by rows.
+    let total = seg.routed_rows();
+    let block = total.div_ceil(pool.threads());
+    // (slot, row range within the segment) work units.
+    let mut units: Vec<(usize, usize, usize)> = Vec::new();
+    for &s in busy {
+        let m = seg.rows(s).len();
+        let mut r0 = 0;
+        while r0 < m {
+            let r1 = (r0 + block).min(m);
+            units.push((s, r0, r1));
+            r0 = r1;
+        }
+    }
+    // Row-weighted contiguous cuts over the units (prefix-sum partition
+    // points) keep lane loads balanced even when unit sizes are ragged.
+    let mut prefix = Vec::with_capacity(units.len() + 1);
+    prefix.push(0usize);
+    for &(_, r0, r1) in &units {
+        prefix.push(prefix.last().unwrap() + (r1 - r0));
+    }
+
+    let shared = SharedSliceMut::new(y);
+    pool.par_partition_weighted(&prefix, |range| {
+        // Per-lane scratch, reused across this lane's units.
+        let (mut xs, mut mid, mut ys) = (Vec::new(), Vec::new(), Vec::new());
+        for &(s, r0, r1) in &units[range] {
+            let rows = &seg.rows(s)[r0..r1];
+            // SAFETY: units own disjoint row sets and each unit is
+            // processed by exactly one lane, so concurrent lanes never
+            // write overlapping `y` rows.
+            unsafe {
+                smlm_unit(x, rows, s, bank, &shared, &mut xs, &mut mid, &mut ys);
+            }
+        }
+    });
 }
 
 /// Per-row reference for [`smlm_segmented`]: one pair of rank-r products
@@ -443,6 +560,20 @@ mod tests {
     }
 
     #[test]
+    fn segmentation_counting_sort_is_stable_and_complete() {
+        let adapters = [2i32, -1, 0, 1, 2, -1, 3, 0, 2];
+        let seg = SmlmSegmentation::compute(&adapters, 5);
+        assert_eq!(seg.slots(), 5);
+        assert_eq!(seg.routed_rows(), 7);
+        assert_eq!(seg.rows(0), &[2, 7]); // batch order preserved
+        assert_eq!(seg.rows(1), &[3]);
+        assert_eq!(seg.rows(2), &[0, 4, 8]);
+        assert_eq!(seg.rows(3), &[6]);
+        assert_eq!(seg.rows(4), &[] as &[usize]);
+        assert_eq!(seg.busy_slots(), &[0, 1, 2, 3]);
+    }
+
+    #[test]
     fn smlm_segmented_matches_per_row_mixed_batch() {
         let mut rng = Rng::seed_from_u64(11);
         let (slots, din, r, dout) = (4, 12, 3, 10);
@@ -452,9 +583,11 @@ mod tests {
         let x = randv(&mut rng, n * din, 1.0);
         // Mixed adapters including base-only rows and a slot used twice.
         let adapters = vec![2, -1, 0, 1, 2, -1, 3, 0, 2];
+        let seg = SmlmSegmentation::compute(&adapters, slots);
+        let pool = ThreadPool::new(2);
         let mut y_seg = randv(&mut rng, n * dout, 1.0); // non-zero: += semantics
         let mut y_ref = y_seg.clone();
-        smlm_segmented(&x, &adapters, &bank, &mut y_seg);
+        smlm_segmented(&pool, &x, &seg, &bank, &mut y_seg);
         smlm_per_row(&x, &adapters, &bank, &mut y_ref);
         for (i, (p, q)) in y_seg.iter().zip(&y_ref).enumerate() {
             assert!((p - q).abs() < 1e-5, "elem {i}: {p} vs {q}");
@@ -462,6 +595,35 @@ mod tests {
         // Base-only rows untouched (row 1 spans dout..2*dout).
         let before = &y_ref[dout..2 * dout];
         assert_eq!(&y_seg[dout..2 * dout], before);
+    }
+
+    #[test]
+    fn smlm_segmented_is_bitwise_thread_count_invariant() {
+        let mut rng = Rng::seed_from_u64(17);
+        let (slots, din, r, dout) = (4, 12, 3, 10);
+        let (a, b, scaling) = test_bank(&mut rng, slots, din, r, dout);
+        let bank = LoraBankView { a: &a, b: &b, scaling: &scaling, rank: r, din, dout };
+        // Mixed batch AND a single-busy-segment batch (exercising the
+        // hot-segment row-blocking) must both be thread-count invariant.
+        for adapters in [vec![2, -1, 0, 1, 2, -1, 3, 0, 2], vec![1, 1, -1, 1, 1, 1, -1, 1, 1]] {
+            let n = adapters.len();
+            let x = randv(&mut rng, n * din, 1.0);
+            let y0 = randv(&mut rng, n * dout, 1.0);
+            let seg = SmlmSegmentation::compute(&adapters, slots);
+            let mut y1 = y0.clone();
+            smlm_segmented(&ThreadPool::new(1), &x, &seg, &bank, &mut y1);
+            for threads in [2usize, 4, 7] {
+                let mut yn = y0.clone();
+                smlm_segmented(&ThreadPool::new(threads), &x, &seg, &bank, &mut yn);
+                for (i, (p, q)) in y1.iter().zip(&yn).enumerate() {
+                    assert_eq!(
+                        p.to_bits(),
+                        q.to_bits(),
+                        "elem {i}: threads=1 {p} vs threads={threads} {q}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]
@@ -473,7 +635,8 @@ mod tests {
         let x = randv(&mut rng, 3 * din, 1.0);
         let y0 = randv(&mut rng, 3 * dout, 1.0);
         let mut y = y0.clone();
-        smlm_segmented(&x, &[-1, -1, -1], &bank, &mut y);
+        let seg = SmlmSegmentation::compute(&[-1, -1, -1], slots);
+        smlm_segmented(&ThreadPool::new(2), &x, &seg, &bank, &mut y);
         assert_eq!(y, y0);
     }
 }

@@ -18,6 +18,7 @@
 
 pub mod kernels;
 mod manifest;
+pub mod parallel;
 mod tensor;
 
 pub use manifest::{

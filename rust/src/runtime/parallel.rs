@@ -1,0 +1,675 @@
+//! Deterministic parallel kernel runtime + zero-alloc scratch arena.
+//!
+//! Two std-only building blocks the native backend's hot path is built on
+//! (the offline image has no crates.io, so no rayon):
+//!
+//! * [`ThreadPool`] — a persistent worker pool whose one primitive,
+//!   [`ThreadPool::par_partition`], splits `0..items` into at most
+//!   `threads` contiguous ranges and runs a shared closure on each range
+//!   concurrently. **Partition-only parallelism is the determinism
+//!   contract:** every output element is computed by exactly one closure
+//!   invocation, with the same ascending-index accumulation order it would
+//!   see single-threaded. There are no cross-thread reductions, so
+//!   `threads = 1` and `threads = N` produce bitwise-identical floats for
+//!   any partition (see `native_numerics.rs`).
+//! * [`ScratchArena`] — a free-list of reusable `Vec<f32>` buffers,
+//!   zeroed on claim, that replaces the per-layer-per-step `vec![0.0; …]`
+//!   churn in the native backend's forward/backward passes.
+//!
+//! The pool keeps `threads - 1` parked worker threads alive for the
+//! lifetime of the owning backend; the calling thread always executes the
+//! first chunk itself, so `threads = 1` costs nothing and never crosses a
+//! thread boundary.
+
+use std::marker::PhantomData;
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::runtime::kernels::{gemm_nn, gemm_nt};
+
+/// Environment override for the default thread count (the CI test job
+/// sets `LOQUETIER_THREADS=2`; the CLI's `--threads` flag wins over it).
+pub const THREADS_ENV: &str = "LOQUETIER_THREADS";
+
+/// Default worker count: the `LOQUETIER_THREADS` env var if set and valid,
+/// else the machine's available parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var(THREADS_ENV) {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Resolve a `--threads` request: `0` (the CLI default) means "auto"
+/// ([`default_threads`]); anything else is taken literally.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        default_threads()
+    } else {
+        requested
+    }
+}
+
+type Job = dyn Fn(Range<usize>) + Sync;
+
+thread_local! {
+    /// True while this thread is executing a pool job. Submitting nested
+    /// work from inside a worker closure would deadlock (the worker would
+    /// wait on tasks queued behind its own), so `par_partition` rejects
+    /// it in debug builds; keep kernel closures pool-free.
+    static IN_POOL_JOB: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Erase a borrowed job's lifetime so parked workers can hold it.
+///
+/// # Safety
+///
+/// The caller must not let the returned reference outlive `job`. In
+/// [`ThreadPool::par_partition`] this holds because the submitting thread
+/// blocks on the completion latch (even on unwind, via `WaitGuard`) before
+/// the frame owning the closure can be popped.
+unsafe fn erase_job_lifetime(job: &Job) -> &'static Job {
+    std::mem::transmute::<&Job, &'static Job>(job)
+}
+
+struct Task {
+    job: &'static Job,
+    range: Range<usize>,
+    latch: Arc<Latch>,
+}
+
+/// Countdown latch: the submitter waits until every dispatched chunk has
+/// finished (successfully or by panic).
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Latch {
+    fn new(n: usize) -> Self {
+        Self { remaining: Mutex::new(n), done: Condvar::new(), panicked: AtomicBool::new(false) }
+    }
+
+    fn count_down(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        *r -= 1;
+        if *r == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        while *r > 0 {
+            r = self.done.wait(r).unwrap();
+        }
+    }
+}
+
+/// Blocks on the latch when dropped — including during unwinding, so a
+/// panicking caller chunk cannot free the shared closure while workers
+/// still hold a reference to it.
+struct WaitGuard<'a>(&'a Latch);
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        self.0.wait();
+    }
+}
+
+/// Persistent scoped-work thread pool (see module docs for the
+/// determinism contract).
+pub struct ThreadPool {
+    senders: Vec<Sender<Task>>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Build a pool executing work on `threads` lanes total (the calling
+    /// thread plus `threads - 1` parked workers). `0` is clamped to 1.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let mut senders = Vec::with_capacity(threads - 1);
+        let mut handles = Vec::with_capacity(threads - 1);
+        for w in 1..threads {
+            let (tx, rx) = channel::<Task>();
+            senders.push(tx);
+            let handle = std::thread::Builder::new()
+                .name(format!("loq-par-{w}"))
+                .spawn(move || {
+                    while let Ok(task) = rx.recv() {
+                        let range = task.range.clone();
+                        IN_POOL_JOB.with(|f| f.set(true));
+                        let ok = catch_unwind(AssertUnwindSafe(|| (task.job)(range)));
+                        IN_POOL_JOB.with(|f| f.set(false));
+                        if ok.is_err() {
+                            task.latch.panicked.store(true, Ordering::Release);
+                        }
+                        task.latch.count_down();
+                    }
+                })
+                .expect("spawn pool worker");
+            handles.push(handle);
+        }
+        Self { senders, handles, threads }
+    }
+
+    /// Total execution lanes (calling thread included).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Split `0..items` into at most `threads` balanced contiguous ranges
+    /// and run `f` on each concurrently; returns when all are done.
+    ///
+    /// `f` must only write state that is owned by the range it was given —
+    /// the partition-only determinism rule. With one lane (or one item)
+    /// this is exactly `f(0..items)` on the calling thread.
+    pub fn par_partition<F: Fn(Range<usize>) + Sync>(&self, items: usize, f: F) {
+        if items == 0 {
+            return;
+        }
+        let chunks = self.threads.min(items);
+        let base = items / chunks;
+        let rem = items % chunks;
+        let range_of = |c: usize| {
+            let start = c * base + c.min(rem);
+            start..start + base + usize::from(c < rem)
+        };
+        self.dispatch(chunks, range_of, &f);
+    }
+
+    /// Weight-balanced variant: `prefix` is the cumulative per-item cost
+    /// (`prefix.len() == items + 1`, `prefix[0] == 0`, strictly
+    /// increasing). Lanes take contiguous item runs cut at equal shares
+    /// of total cost, so a few expensive items cannot pin one lane —
+    /// essential for causally-skewed attention units, whose cost grows
+    /// with position. Lane assignment never changes per-element
+    /// accumulation order, so determinism is unaffected by the weighting.
+    pub fn par_partition_weighted<F: Fn(Range<usize>) + Sync>(&self, prefix: &[usize], f: F) {
+        debug_assert!(!prefix.is_empty());
+        let items = prefix.len() - 1;
+        if items == 0 {
+            return;
+        }
+        let total = prefix[items];
+        let lanes = self.threads.min(items);
+        let cut = |lane: usize| -> usize {
+            let target = lane * total / lanes;
+            prefix.partition_point(|&p| p < target).min(items)
+        };
+        self.dispatch(lanes, |lane| cut(lane)..cut(lane + 1), &f);
+    }
+
+    /// Shared dispatch tail: run `f` over `range_of(0..chunks)`, chunk 0
+    /// on the calling thread, the rest on parked workers.
+    fn dispatch<F, R>(&self, chunks: usize, range_of: R, f: &F)
+    where
+        F: Fn(Range<usize>) + Sync,
+        R: Fn(usize) -> Range<usize>,
+    {
+        debug_assert!(
+            !IN_POOL_JOB.with(|flag| flag.get()),
+            "nested pool dispatch from inside a pool job would deadlock"
+        );
+        if chunks <= 1 {
+            if chunks == 1 {
+                f(range_of(0));
+            }
+            return;
+        }
+        let job: &Job = f;
+        // SAFETY: the guard below blocks until every worker finished this
+        // job before the current frame (and `f`) can unwind away.
+        let job = unsafe { erase_job_lifetime(job) };
+        let latch = Arc::new(Latch::new(chunks - 1));
+        {
+            let _guard = WaitGuard(&latch);
+            for c in 1..chunks {
+                let task = Task { job, range: range_of(c), latch: Arc::clone(&latch) };
+                self.senders[c - 1].send(task).expect("pool worker alive");
+            }
+            f(range_of(0));
+            // _guard drops here: wait for the dispatched chunks.
+        }
+        if latch.panicked.load(Ordering::Acquire) {
+            panic!("worker panicked inside par_partition");
+        }
+    }
+
+    /// Row-partitioned variant: split `buf` (logically `rows × row_len`)
+    /// into contiguous row ranges and hand each closure its range plus the
+    /// matching mutable sub-slice.
+    pub fn par_rows<T, F>(&self, buf: &mut [T], rows: usize, row_len: usize, f: F)
+    where
+        T: Send,
+        F: Fn(Range<usize>, &mut [T]) + Sync,
+    {
+        debug_assert_eq!(buf.len(), rows * row_len);
+        let shared = SharedSliceMut::new(buf);
+        self.par_partition(rows, |r| {
+            // SAFETY: par_partition ranges are disjoint, so the row
+            // sub-slices are too.
+            let rows_slice = unsafe { shared.slice(r.start * row_len, r.len() * row_len) };
+            f(r, rows_slice);
+        });
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // Closing the channels pops every worker out of `recv`.
+        self.senders.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A mutable slice shareable across pool workers for partition-only
+/// writes. The *user* guarantees disjointness; the type only carries the
+/// pointer and the lifetime.
+pub struct SharedSliceMut<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _lt: PhantomData<&'a mut T>,
+}
+
+// SAFETY: access is gated through the `unsafe fn slice`, whose contract
+// demands disjoint ranges across concurrent users; `T: Send` suffices
+// because each element is only ever touched from one thread at a time.
+unsafe impl<T: Send> Send for SharedSliceMut<'_, T> {}
+unsafe impl<T: Send> Sync for SharedSliceMut<'_, T> {}
+
+impl<'a, T> SharedSliceMut<'a, T> {
+    pub fn new(data: &'a mut [T]) -> Self {
+        Self { ptr: data.as_mut_ptr(), len: data.len(), _lt: PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Reborrow `[start, start + len)` mutably.
+    ///
+    /// # Safety
+    ///
+    /// The range must be in bounds, and no two concurrent `slice` calls
+    /// (nor any other live borrow of the underlying data) may overlap it.
+    #[allow(clippy::mut_from_ref)] // partition-only parallel write window
+    pub unsafe fn slice(&self, start: usize, len: usize) -> &mut [T] {
+        debug_assert!(start + len <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+}
+
+/// Row-parallel `y[m×n] += a[m×k] · b[k×n]`: each lane runs the serial
+/// [`gemm_nn`] on its own block of output rows, so per-element
+/// accumulation order is identical to the single-threaded kernel.
+pub fn par_gemm_nn(
+    pool: &ThreadPool,
+    y: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(y.len(), m * n);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    pool.par_rows(y, m, n, |r, ys| {
+        gemm_nn(ys, &a[r.start * k..r.end * k], b, r.len(), k, n);
+    });
+}
+
+/// Row-parallel `y[m×n] += a[m×k] · bᵀ` with `b` stored `[n×k]`.
+pub fn par_gemm_nt(
+    pool: &ThreadPool,
+    y: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(y.len(), m * n);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    pool.par_rows(y, m, n, |r, ys| {
+        gemm_nt(ys, &a[r.start * k..r.end * k], b, r.len(), k, n);
+    });
+}
+
+/// Output-row-parallel `y[k×n] += aᵀ · b` with `a` stored `[m×k]`, `b`
+/// `[m×n]` (the dW shape). Partitioned over the `k` output rows; the
+/// reduction over `m` stays ascending inside each lane, matching the
+/// serial kernel's per-element order.
+pub fn par_gemm_tn(
+    pool: &ThreadPool,
+    y: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(y.len(), k * n);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    pool.par_rows(y, k, n, |r, ys| {
+        for i in 0..m {
+            let br = &b[i * n..(i + 1) * n];
+            for l in r.clone() {
+                let av = a[i * k + l];
+                let yr = &mut ys[(l - r.start) * n..(l - r.start + 1) * n];
+                for (yy, bb) in yr.iter_mut().zip(br) {
+                    *yy += av * bb;
+                }
+            }
+        }
+    });
+}
+
+/// Free-list of reusable `Vec<f32>` scratch buffers, zeroed on claim.
+///
+/// The native backend owns one and threads it through every forward /
+/// backward pass: [`take`](ScratchArena::take) hands out a zeroed buffer
+/// of the requested length (reusing the best-fitting retired allocation),
+/// [`give`](ScratchArena::give) retires a buffer back to the pool. After
+/// the first step of each shape the hot path performs no heap allocation
+/// for activations, gradients, payloads or logits. Retention is capped
+/// (64 MiB of f32 by default): buffers whose return would push the
+/// retained total past the limit are dropped instead, so one outlier
+/// launch cannot pin its peak scratch for the backend's lifetime.
+pub struct ScratchArena {
+    free: Vec<Vec<f32>>,
+    /// Total f32 capacity currently parked in `free`.
+    retained: usize,
+    /// High-water limit on `retained`.
+    retain_limit: usize,
+}
+
+/// Default retention cap: 2^24 f32 elements = 64 MiB of scratch.
+const DEFAULT_RETAIN_LIMIT: usize = 1 << 24;
+
+impl Default for ScratchArena {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ScratchArena {
+    pub fn new() -> Self {
+        Self::with_retain_limit(DEFAULT_RETAIN_LIMIT)
+    }
+
+    /// An arena that parks at most `limit` f32 elements of retired
+    /// capacity.
+    pub fn with_retain_limit(limit: usize) -> Self {
+        Self { free: Vec::new(), retained: 0, retain_limit: limit }
+    }
+
+    /// Claim a zeroed buffer of exactly `len` elements.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        // Best fit: the smallest retired capacity that already holds
+        // `len`; else the largest (which `resize` then grows in place).
+        let mut pick: Option<usize> = None;
+        for (i, buf) in self.free.iter().enumerate() {
+            let c = buf.capacity();
+            pick = match pick {
+                None => Some(i),
+                Some(p) => {
+                    let pc = self.free[p].capacity();
+                    let better = if pc >= len { c >= len && c < pc } else { c > pc };
+                    Some(if better { i } else { p })
+                }
+            };
+        }
+        let mut buf = match pick {
+            Some(i) => {
+                let b = self.free.swap_remove(i);
+                self.retained -= b.capacity();
+                b
+            }
+            None => Vec::new(),
+        };
+        buf.clear();
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Retire a buffer for reuse by a later [`take`](ScratchArena::take).
+    /// Dropped instead when it would push retained capacity past the
+    /// limit.
+    pub fn give(&mut self, buf: Vec<f32>) {
+        let cap = buf.capacity();
+        if cap > 0 && self.retained + cap <= self.retain_limit {
+            self.retained += cap;
+            self.free.push(buf);
+        }
+    }
+
+    /// Number of retired buffers currently pooled.
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn par_partition_covers_every_index_exactly_once() {
+        let pool = ThreadPool::new(4);
+        for items in [0usize, 1, 3, 4, 5, 17, 100] {
+            let hits: Vec<AtomicUsize> = (0..items).map(|_| AtomicUsize::new(0)).collect();
+            pool.par_partition(items, |r| {
+                for i in r {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "items={items}: every index hit exactly once"
+            );
+        }
+    }
+
+    #[test]
+    fn par_partition_weighted_covers_every_index_exactly_once() {
+        let pool = ThreadPool::new(4);
+        // Causal-attention-shaped weights: cost grows with index.
+        for items in [1usize, 2, 5, 33] {
+            let mut prefix = vec![0usize];
+            for i in 0..items {
+                prefix.push(prefix.last().unwrap() + i + 1);
+            }
+            let hits: Vec<AtomicUsize> = (0..items).map(|_| AtomicUsize::new(0)).collect();
+            pool.par_partition_weighted(&prefix, |r| {
+                for i in r {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "items={items}: every index hit exactly once"
+            );
+        }
+    }
+
+    #[test]
+    fn weighted_cuts_balance_skewed_costs() {
+        // 33 items with triangular weights on 4 lanes: the heaviest lane
+        // must carry well under the ~50% an unweighted index split would
+        // give the tail lane. Measure via the per-lane weight sums.
+        let pool = ThreadPool::new(4);
+        let items = 33usize;
+        let mut prefix = vec![0usize];
+        for i in 0..items {
+            prefix.push(prefix.last().unwrap() + i + 1);
+        }
+        let total = *prefix.last().unwrap();
+        let lane_loads = std::sync::Mutex::new(Vec::new());
+        pool.par_partition_weighted(&prefix, |r| {
+            let load: usize = r.map(|i| i + 1).sum();
+            lane_loads.lock().unwrap().push(load);
+        });
+        let max_load = *lane_loads.lock().unwrap().iter().max().unwrap();
+        assert!(
+            max_load * 10 <= total * 4,
+            "heaviest lane {max_load} of {total} exceeds 40%"
+        );
+    }
+
+    #[test]
+    fn par_rows_hands_out_disjoint_row_blocks() {
+        let pool = ThreadPool::new(3);
+        let (rows, row_len) = (7, 5);
+        let mut buf = vec![0.0f32; rows * row_len];
+        pool.par_rows(&mut buf, rows, row_len, |r, rs| {
+            for (ti, row) in r.clone().zip(rs.chunks_mut(row_len)) {
+                row.iter_mut().for_each(|v| *v = ti as f32);
+            }
+        });
+        for t in 0..rows {
+            assert!(buf[t * row_len..(t + 1) * row_len].iter().all(|&v| v == t as f32));
+        }
+    }
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn par_gemms_are_bitwise_identical_to_serial_at_any_thread_count() {
+        let mut rng = Rng::seed_from_u64(5);
+        let (m, k, n) = (13, 9, 11);
+        let a = randv(&mut rng, m * k);
+        let b_nn = randv(&mut rng, k * n);
+        let b_nt = randv(&mut rng, n * k);
+        let b_tn = randv(&mut rng, m * n);
+
+        let mut y_ser = vec![0.0f32; m * n];
+        gemm_nn(&mut y_ser, &a, &b_nn, m, k, n);
+        let mut y_ser_nt = vec![0.0f32; m * n];
+        gemm_nt(&mut y_ser_nt, &a, &b_nt, m, k, n);
+        let mut y_ser_tn = vec![0.0f32; k * n];
+        crate::runtime::kernels::gemm_tn(&mut y_ser_tn, &a, &b_tn, m, k, n);
+
+        for threads in [1usize, 2, 4, 8] {
+            let pool = ThreadPool::new(threads);
+            let mut y = vec![0.0f32; m * n];
+            par_gemm_nn(&pool, &mut y, &a, &b_nn, m, k, n);
+            assert!(y.iter().zip(&y_ser).all(|(p, q)| p.to_bits() == q.to_bits()), "nn t{threads}");
+
+            let mut y = vec![0.0f32; m * n];
+            par_gemm_nt(&pool, &mut y, &a, &b_nt, m, k, n);
+            assert!(
+                y.iter().zip(&y_ser_nt).all(|(p, q)| p.to_bits() == q.to_bits()),
+                "nt t{threads}"
+            );
+
+            let mut y = vec![0.0f32; k * n];
+            par_gemm_tn(&pool, &mut y, &a, &b_tn, m, k, n);
+            assert!(
+                y.iter().zip(&y_ser_tn).all(|(p, q)| p.to_bits() == q.to_bits()),
+                "tn t{threads}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "worker panicked inside par_partition")]
+    fn worker_panic_propagates_to_submitter() {
+        let pool = ThreadPool::new(4);
+        pool.par_partition(4, |r| {
+            // Panic on a worker chunk (not the caller's chunk 0).
+            if r.start > 0 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_job() {
+        let pool = ThreadPool::new(4);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.par_partition(4, |r| {
+                if r.start > 0 {
+                    panic!("boom");
+                }
+            })
+        }));
+        assert!(r.is_err());
+        // Workers are still parked and serving.
+        let hits: Vec<AtomicUsize> = (0..8).map(|_| AtomicUsize::new(0)).collect();
+        pool.par_partition(8, |r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn scratch_arena_zeroes_on_claim_and_reuses_allocations() {
+        let mut arena = ScratchArena::new();
+        let mut b = arena.take(64);
+        b.iter_mut().for_each(|v| *v = 7.5);
+        let ptr = b.as_ptr();
+        arena.give(b);
+
+        // Smaller claim reuses the retired allocation — and sees zeros.
+        let c = arena.take(16);
+        assert_eq!(c.as_ptr(), ptr, "retired allocation is reused");
+        assert!(c.iter().all(|&v| v == 0.0), "claimed buffer is zeroed");
+        arena.give(c);
+
+        // Larger claim also comes back fully zeroed.
+        let d = arena.take(128);
+        assert_eq!(d.len(), 128);
+        assert!(d.iter().all(|&v| v == 0.0));
+        arena.give(d);
+        assert_eq!(arena.pooled(), 1);
+    }
+
+    #[test]
+    fn scratch_arena_retain_limit_drops_excess() {
+        let mut arena = ScratchArena::with_retain_limit(100);
+        let b1 = arena.take(60);
+        let b2 = arena.take(60);
+        arena.give(b1);
+        assert_eq!(arena.pooled(), 1, "first buffer fits under the limit");
+        arena.give(b2);
+        assert_eq!(arena.pooled(), 1, "second would exceed the limit and is dropped");
+        // Taking the parked buffer frees headroom again.
+        let b = arena.take(60);
+        assert_eq!(arena.pooled(), 0);
+        arena.give(b);
+        assert_eq!(arena.pooled(), 1);
+    }
+
+    #[test]
+    fn resolve_threads_zero_means_auto() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+    }
+}

@@ -82,6 +82,14 @@ impl Args {
             Some(other) => Err(anyhow!("--backend: unknown backend '{other}' (native|xla)")),
         }
     }
+
+    /// Parse `--threads N` for the native backend's worker pool. Absent
+    /// (or `0`) means auto: `NativeBackend::new` resolves it via
+    /// `runtime::parallel::resolve_threads` (the `LOQUETIER_THREADS` env
+    /// var, else available parallelism).
+    pub fn threads_or_auto(&self) -> Result<usize> {
+        self.usize_or("threads", 0)
+    }
 }
 
 #[cfg(test)]
@@ -106,6 +114,13 @@ mod tests {
     fn bad_number_is_error() {
         let a = args("--n abc");
         assert!(a.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn threads_flag_parses_with_auto_default() {
+        assert_eq!(args("--threads 4").threads_or_auto().unwrap(), 4);
+        assert_eq!(args("").threads_or_auto().unwrap(), 0, "absent = 0 = auto");
+        assert!(args("--threads lots").threads_or_auto().is_err());
     }
 
     #[test]

@@ -1,11 +1,14 @@
-//! Native-backend numerics goldens (ISSUE 2 satellites): the segmented
+//! Native-backend numerics goldens (ISSUE 2 + ISSUE 3): the segmented
 //! SMLM kernel against its per-row reference, end-to-end through the
-//! backend, and bit-level determinism of the whole
-//! prefill→decode→train→optim flow. Runs unconditionally — no artifacts,
-//! no PJRT, no skips.
+//! backend, bit-level determinism of the whole prefill→decode→train→optim
+//! flow, bitwise `threads=1` vs `threads=N` parity of the parallel kernel
+//! runtime, and stale-data isolation of the scratch arena. Runs
+//! unconditionally — no artifacts, no PJRT, no skips.
 
-use loquetier::engine::{Backend, DecodeRow, PrefillSeq, TrainSeq};
-use loquetier::harness::{cache_config_for, native_geometry, native_stack};
+use loquetier::engine::{Backend, DecodeRow, PrefillSeq, TrainSeq, UnifiedOut};
+use loquetier::harness::{
+    cache_config_for, native_geometry, native_stack, native_stack_with_threads,
+};
 use loquetier::kvcache::KvCacheManager;
 
 fn cache() -> KvCacheManager {
@@ -153,6 +156,163 @@ fn same_seed_is_bitwise_deterministic() {
     assert_eq!(l1.len(), l2.len());
     for (a, b) in l1.iter().zip(&l2) {
         assert_eq!(a.to_bits(), b.to_bits(), "losses must be bit-identical");
+    }
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+#[test]
+fn threads_1_vs_4_are_bitwise_identical_on_mixed_unified_flow() {
+    // The ISSUE 3 acceptance test: the SAME mixed workload — a unified
+    // fine-tune ∥ prefill ∥ decode launch with adapter and base-only
+    // (`adapter = -1`) rows, a decode chain, an optimizer step and a
+    // post-training prefill — must produce bitwise-identical logits,
+    // tokens and losses on a 1-lane and a 4-lane pool. Parallelism is
+    // partition-only, so no thread count may change a single bit.
+    let run = |threads: usize| -> (Vec<Vec<f32>>, Vec<f32>, Vec<i32>) {
+        let (mut be, _reg, _m) = native_stack_with_threads(321, threads).unwrap();
+        let mut kv = cache();
+        let mut all_logits: Vec<Vec<f32>> = Vec::new();
+        let mut all_losses: Vec<f32> = Vec::new();
+        let mut tokens_out: Vec<i32> = Vec::new();
+
+        // Warm two KV slots so the unified decode rows have history.
+        let warm: Vec<PrefillSeq> = [(0i32, 0u64), (-1, 1)]
+            .iter()
+            .map(|&(a, id)| PrefillSeq {
+                tokens: toks(7, a + 3),
+                adapter: a,
+                kv_slot: kv.allocate(id, 48).unwrap(),
+            })
+            .collect();
+        let (lg, _) = be.prefill(&warm, &mut kv).unwrap();
+        all_logits.extend(lg);
+
+        // One unified launch: train (adapter + base-only eval) ∥ prefill
+        // (adapter + base-only) ∥ decode over the warmed slots.
+        let ft: Vec<TrainSeq> = [(2i32, true), (-1, false)]
+            .iter()
+            .map(|&(a, train)| TrainSeq {
+                tokens: toks(12, a + 9),
+                labels: toks(12, a + 9),
+                adapter: a,
+                train,
+                loss_scale: 0.5,
+            })
+            .collect();
+        let pf: Vec<PrefillSeq> = [(1i32, 10u64), (-1, 11)]
+            .iter()
+            .map(|&(a, id)| PrefillSeq {
+                tokens: toks(6, a),
+                adapter: a,
+                kv_slot: kv.allocate(id, 32).unwrap(),
+            })
+            .collect();
+        let dec: Vec<DecodeRow> = warm
+            .iter()
+            .map(|q| DecodeRow { token: 5, adapter: q.adapter, kv_slot: q.kv_slot })
+            .collect();
+        let (out, _): (UnifiedOut, _) = be.unified(&ft, &pf, &dec, &mut kv).unwrap();
+        all_losses.extend(&out.ft_losses);
+        all_logits.extend(out.pf_last_logits);
+        all_logits.extend(out.dec_logits);
+
+        // Decode chain + optimizer + post-training prefill.
+        let slot = pf[0].kv_slot;
+        let mut next = 9i32;
+        for _ in 0..4 {
+            let (lg, _) = be
+                .decode(&[DecodeRow { token: next, adapter: 1, kv_slot: slot }], &mut kv)
+                .unwrap();
+            next = loquetier::engine::argmax(&lg[0]);
+            tokens_out.push(next);
+            all_logits.extend(lg);
+        }
+        be.optim_step(&[2], 5e-3, 1).unwrap();
+        let slot2 = kv.allocate(20, 32).unwrap();
+        let (lg, _) = be
+            .prefill(&[PrefillSeq { tokens: toks(8, 4), adapter: 2, kv_slot: slot2 }], &mut kv)
+            .unwrap();
+        tokens_out.push(loquetier::engine::argmax(&lg[0]));
+        all_logits.extend(lg);
+        (all_logits, all_losses, tokens_out)
+    };
+
+    let (lg1, ls1, tk1) = run(1);
+    let (lg4, ls4, tk4) = run(4);
+    assert_eq!(tk1, tk4, "emitted tokens must not depend on thread count");
+    assert_bits_eq(&ls1, &ls4, "losses");
+    assert_eq!(lg1.len(), lg4.len());
+    for (i, (a, b)) in lg1.iter().zip(&lg4).enumerate() {
+        assert_bits_eq(a, b, &format!("logits row {i}"));
+    }
+}
+
+#[test]
+fn scratch_arena_reuse_leaks_no_stale_state() {
+    // Backend A churns its arena with differently-shaped steps (longer
+    // training sequence, a prefill+decode launch), then runs a probe;
+    // fresh backend B runs ONLY the probe. Bitwise-equal probe outputs
+    // prove a claimed buffer never exposes a previous step's data.
+    let probe_train = || TrainSeq {
+        tokens: toks(9, 1),
+        labels: toks(9, 1),
+        adapter: 1,
+        train: false,
+        loss_scale: 1.0,
+    };
+    let probe_prefill = |be: &mut dyn Backend| -> Vec<Vec<f32>> {
+        let mut kv = cache();
+        let seqs: Vec<PrefillSeq> = [0i32, -1]
+            .iter()
+            .enumerate()
+            .map(|(i, &a)| PrefillSeq {
+                tokens: toks(5 + i, 2),
+                adapter: a,
+                kv_slot: kv.allocate(i as u64, 32).unwrap(),
+            })
+            .collect();
+        be.prefill(&seqs, &mut kv).unwrap().0
+    };
+
+    let (mut dirty, _r1, _m1) = native_stack_with_threads(99, 2).unwrap();
+    let (mut fresh, _r2, _m2) = native_stack_with_threads(99, 2).unwrap();
+
+    // Pollute: a longer eval step and a bigger inference launch fill the
+    // arena with non-zero buffers of every hot shape.
+    dirty
+        .train_step(&[TrainSeq {
+            tokens: toks(20, 5),
+            labels: toks(20, 5),
+            adapter: 2,
+            train: false,
+            loss_scale: 1.0,
+        }])
+        .unwrap();
+    {
+        let mut kv = cache();
+        let seqs: Vec<PrefillSeq> = (0..4)
+            .map(|i| PrefillSeq {
+                tokens: toks(11, i),
+                adapter: i % 3 - 1,
+                kv_slot: kv.allocate(i as u64, 32).unwrap(),
+            })
+            .collect();
+        dirty.prefill(&seqs, &mut kv).unwrap();
+    }
+
+    let (la, _) = dirty.train_step(&[probe_train()]).unwrap();
+    let (lb, _) = fresh.train_step(&[probe_train()]).unwrap();
+    assert_bits_eq(&la, &lb, "probe losses");
+    let pa = probe_prefill(&mut dirty);
+    let pb = probe_prefill(&mut fresh);
+    for (i, (a, b)) in pa.iter().zip(&pb).enumerate() {
+        assert_bits_eq(a, b, &format!("probe logits {i}"));
     }
 }
 
