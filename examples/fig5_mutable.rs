@@ -78,6 +78,18 @@ fn main() -> Result<()> {
         println!("{:>7.0} {:>10.1} {:>10.1}   {:<26} {bar_d}", dp.t_s, dp.value, fp.value, phase);
     }
 
+    // Paged-KV accounting: how often fine-tuning/serving pressure forced a
+    // preempt-and-recompute, and what block rounding leaves unusable.
+    let kv = coord.kv.stats();
+    println!();
+    println!(
+        "preemptions={}  kv_blocks={}/{}  kv_frag_tokens={}",
+        coord.preempted_total(),
+        kv.blocks_used,
+        kv.blocks_total,
+        kv.tokens_reserved_unused,
+    );
+
     // The paper's qualitative checks, asserted quantitatively:
     let ftps_spike = coord.finetune_series.rate_over(130.0, 180.0);
     let ftps_calm = coord.finetune_series.rate_over(320.0, 420.0);

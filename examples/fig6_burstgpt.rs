@@ -108,6 +108,14 @@ fn main() -> Result<()> {
         "OVERALL SLO attainment: {:.2}%   (paper: 92.37%; misses confined to >5-RPS spikes)",
         report.slo_attainment * 100.0
     );
+    let kv = coord.kv.stats();
+    println!(
+        "preemptions={}  kv_blocks={}/{}  kv_frag_tokens={}",
+        coord.preempted_total(),
+        kv.blocks_used,
+        kv.blocks_total,
+        kv.tokens_reserved_unused,
+    );
 
     // Where did the misses land? The paper: only in transient spikes.
     let missed: Vec<f64> = coord

@@ -3,24 +3,153 @@
 //! qualitative shape* (who wins, where the crossover is) in addition to
 //! timing the harness itself. `make figures` runs the full-scale versions.
 //!
+//! Every run (including `--fast`, the CI smoke) first replays reduced
+//! Fig. 5/6 workloads and appends their paged-KV counters — completed
+//! requests, preempt-and-recompute events, peak `tokens_reserved_unused`
+//! fragmentation — as one entry to the repo-root `BENCH_FIGURES.json`
+//! trajectory, whose shape CI validates with jq (protocol: EXPERIMENTS.md
+//! §Fragmentation).
+//!
 //! Run: cargo bench --bench figures
+//! CI smoke: cargo bench --bench figures -- --fast   (counters only)
 
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use loquetier::baselines::{drive_to_completion, ServingSystem};
 use loquetier::config::table4_rows;
+use loquetier::coordinator::InferenceRequest;
+use loquetier::engine::{CostModel, SimBackend};
 use loquetier::harness::{
     self, flexllm, loquetier, peft, sim_backend, slora, FLEXLLM_SLOWDOWN, GPU_PROMPT_CAP,
 };
 use loquetier::metrics::SloSpec;
 use loquetier::util::bench::bench_for;
+use loquetier::util::json::{self, Json};
 use loquetier::workload::{
     build_trace, table7_schedule, BurstGptSynth, PoissonArrivals, ScheduleArrivals,
     ArrivalProcess, SHAREGPT_LENGTHS, TABLE8_SLICES,
 };
 use loquetier::util::rng::Rng;
 
+const FIGURES_JSON: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_FIGURES.json");
+
+/// Drive the unified coordinator over a trace + one fine-tune job and read
+/// back the paged-KV counters (the coordinator tracks the fragmentation
+/// peak itself — the final value is ~0 once everything drains).
+fn paged_run(
+    cost: &CostModel,
+    arrivals: Vec<InferenceRequest>,
+    train_examples: usize,
+) -> (usize, u64, usize) {
+    let mut sys = loquetier();
+    let mut be: SimBackend = sim_backend(cost.clone());
+    if train_examples > 0 {
+        sys.inner.add_trainer(harness::finetune_job(99, 3, train_examples, 0, 2, 1, false));
+    }
+    drive_to_completion(&mut sys, &mut be, arrivals, usize::MAX).unwrap();
+    let completed = sys.traces().iter().filter(|t| !t.failed).count();
+    (completed, sys.inner.preempted_total(), sys.inner.kv_frag_peak_tokens())
+}
+
+/// Reduced Fig. 5 (Table-7 schedule) + Fig. 6 (one BurstGPT slice)
+/// replays; returns the trajectory entry for BENCH_FIGURES.json.
+fn paged_counters(cost: &CostModel) -> Vec<(String, f64)> {
+    let mut entries = Vec::new();
+
+    // Fig. 5 reduced: an eighth of the Table-7 arrival volume (phase-1
+    // timing), round-robined over 4 LoRAs so the paged scheduler sees a
+    // multi-adapter mix, with a co-resident fine-tune job. (The full
+    // four-phase replay is examples/fig5_mutable.rs; this smoke only
+    // pins the paged-KV counters.)
+    let mut rng = Rng::seed_from_u64(5);
+    let mut sched = ScheduleArrivals::new(table7_schedule());
+    let total = sched.total_requests() / 8;
+    let mut requests = Vec::with_capacity(total);
+    for i in 0..total {
+        let t = sched.next_arrival(&mut rng);
+        requests.push(InferenceRequest {
+            id: i as u64,
+            adapter: (i % 4) as i32,
+            prompt: vec![1; 80],
+            max_new_tokens: 100,
+            eos_token: None,
+            arrival_s: t,
+        });
+    }
+    let submitted5 = requests.len();
+    let (completed, preemptions, frag_peak) = paged_run(cost, requests, 400);
+    println!(
+        "fig5 paged counters: submitted={submitted5} completed={completed} \
+         preemptions={preemptions} kv_frag_peak_tokens={frag_peak}"
+    );
+    entries.push(("fig5_completed".to_string(), completed as f64));
+    entries.push(("fig5_preemptions".to_string(), preemptions as f64));
+    entries.push(("fig5_kv_frag_peak_tokens".to_string(), frag_peak as f64));
+
+    // Fig. 6 reduced: 150 arrivals of the day29_15 medium-load slice.
+    let mut rng = Rng::seed_from_u64(6);
+    let mut synth = BurstGptSynth::new(TABLE8_SLICES[1]);
+    let requests: Vec<InferenceRequest> = synth
+        .arrivals(&mut rng)
+        .iter()
+        .take(150)
+        .enumerate()
+        .map(|(i, &t)| InferenceRequest {
+            id: i as u64,
+            adapter: (i % 4) as i32,
+            prompt: vec![1; 80],
+            max_new_tokens: 100,
+            eos_token: None,
+            arrival_s: t,
+        })
+        .collect();
+    let submitted6 = requests.len();
+    let (completed, preemptions, frag_peak) = paged_run(cost, requests, 0);
+    println!(
+        "fig6 paged counters: submitted={submitted6} completed={completed} \
+         preemptions={preemptions} kv_frag_peak_tokens={frag_peak}"
+    );
+    entries.push(("fig6_completed".to_string(), completed as f64));
+    entries.push(("fig6_preemptions".to_string(), preemptions as f64));
+    entries.push(("fig6_kv_frag_peak_tokens".to_string(), frag_peak as f64));
+    entries
+}
+
+fn record_figures_trajectory(entries: &[(String, f64)]) -> anyhow::Result<()> {
+    // Best-effort read, same policy as BENCH_SMLM.json: a missing or
+    // mangled file starts a fresh trajectory instead of losing this run.
+    let mut trajectory: Vec<Json> = std::fs::read_to_string(FIGURES_JSON)
+        .ok()
+        .and_then(|text| json::parse(&text).ok())
+        .and_then(|doc| doc.get("trajectory").and_then(|t| t.as_arr().ok().map(|a| a.to_vec())))
+        .unwrap_or_default();
+    let ts = SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs()).unwrap_or(0);
+    let mut kvs: Vec<(&str, Json)> = vec![("unix_ts", Json::Num(ts as f64))];
+    for (k, v) in entries {
+        kvs.push((k.as_str(), Json::Num(*v)));
+    }
+    trajectory.push(Json::obj(kvs));
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("figures".to_string())),
+        ("trajectory", Json::Arr(trajectory)),
+    ]);
+    std::fs::write(FIGURES_JSON, doc.to_string())?;
+    println!("recorded trajectory entry -> {FIGURES_JSON}");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
     let cost = harness::gpu_cost_model("artifacts");
     let lengths = SHAREGPT_LENGTHS.rescaled_to(200.0);
     let slo = SloSpec::default();
+
+    // Paged-KV counter trajectory (always; this is all `--fast` runs).
+    let entries = paged_counters(&cost);
+    record_figures_trajectory(&entries)?;
+    if fast {
+        return Ok(());
+    }
 
     println!("== figures bench: reduced-scale regeneration + shape assertions ==");
 

@@ -56,6 +56,9 @@ impl FlexLlmLike {
         adapter_reload_s: f64,
     ) -> Self {
         cfg.use_unified = false;
+        // Worst-case KV reservation (no preemption path): the on-demand
+        // paging ablation, same as the S-LoRA-like baseline.
+        cfg.reserve_worst_case = true;
         Self {
             inner: Coordinator::new(cfg, cache_cfg),
             lazy_load_s,

@@ -81,6 +81,12 @@ pub trait ServingSystem {
     fn finetune_tokens(&self) -> u64;
     fn eval_tokens(&self) -> u64;
 
+    /// Total preempt-and-recompute events over the run. Zero for every
+    /// system that reserves worst-case KV (the baselines never preempt).
+    fn preemptions(&self) -> u64 {
+        0
+    }
+
     fn capabilities(&self) -> CapabilityRow;
 }
 
@@ -139,6 +145,10 @@ impl ServingSystem for LoquetierSystem {
 
     fn eval_tokens(&self) -> u64 {
         self.inner.eval_tokens()
+    }
+
+    fn preemptions(&self) -> u64 {
+        self.inner.preempted_total()
     }
 
     fn capabilities(&self) -> CapabilityRow {

@@ -34,6 +34,10 @@ impl SLoraLike {
     pub fn new(mut cfg: CoordinatorConfig, cache_cfg: CacheConfig, load_transform_s: f64) -> Self {
         // No fine-tuning -> never uses the unified entry.
         cfg.use_unified = false;
+        // Worst-case KV reservation: this baseline has no preemption
+        // path, and keeping it on the old policy is the on-demand-paging
+        // ablation the figure harnesses compare against.
+        cfg.reserve_worst_case = true;
         Self {
             inner: Coordinator::new(cfg, cache_cfg),
             load_transform_s,

@@ -64,10 +64,20 @@ impl CapacityAllocator {
     /// Feed one step's observations; returns the budget for the next step.
     ///
     /// `queued` = inference requests waiting for admission or prefill;
-    /// `step_latency_s` = the step's per-token decode latency contribution.
-    pub fn observe(&mut self, queued: usize, step_latency_s: f64) -> usize {
+    /// `decode_latency_s` = the mean per-decoded-token latency the step's
+    /// decode rows actually experienced (time since each row's previous
+    /// token), or `None` when no decode rows ran. A `None` step keeps the
+    /// EMA untouched: a prefill/ft-only step is no evidence that decode
+    /// latency improved, so it must neither decay nor inflate the signal
+    /// (feeding `0.0` here was the old bug — it let ft-heavy phases talk
+    /// the controller into growing the budget it had just cut). The
+    /// coordinator passes `Some(0.0)` only when there is no inference work
+    /// anywhere, where zero decode pressure is definitional.
+    pub fn observe(&mut self, queued: usize, decode_latency_s: Option<f64>) -> usize {
         let a = self.cfg.ema_alpha;
-        self.latency_ema_s = (1.0 - a) * self.latency_ema_s + a * step_latency_s;
+        if let Some(lat) = decode_latency_s {
+            self.latency_ema_s = (1.0 - a) * self.latency_ema_s + a * lat;
+        }
         let target = self.cfg.slo_mean_decode_s * self.cfg.latency_target_frac;
 
         let pressured = queued > 0 || self.latency_ema_s > target;
@@ -106,7 +116,7 @@ mod tests {
         let mut a = alloc();
         assert_eq!(a.ft_budget(), 4);
         for _ in 0..5 {
-            a.observe(10, 0.5); // heavy queue + latency blowout
+            a.observe(10, Some(0.5)); // heavy queue + latency blowout
         }
         assert_eq!(a.ft_budget(), 0);
     }
@@ -115,12 +125,12 @@ mod tests {
     fn calm_recovers_budget_gradually() {
         let mut a = alloc();
         for _ in 0..5 {
-            a.observe(10, 0.5);
+            a.observe(10, Some(0.5));
         }
         assert_eq!(a.ft_budget(), 0);
         let mut budgets = Vec::new();
         for _ in 0..40 {
-            budgets.push(a.observe(0, 0.01));
+            budgets.push(a.observe(0, Some(0.01)));
         }
         assert_eq!(*budgets.last().unwrap(), 4);
         // Growth is gradual: strictly one step at a time.
@@ -136,9 +146,32 @@ mod tests {
         // Latency mildly above target, no queue: the EMA needs a few steps
         // to cross the threshold, then the budget halves (never to zero).
         for _ in 0..10 {
-            a.observe(0, target * 1.3);
+            a.observe(0, Some(target * 1.3));
         }
         assert!(a.ft_budget() > 0, "mild pressure must not zero the budget");
         assert!(a.ft_budget() < 4, "mild pressure must shrink the budget");
+    }
+
+    #[test]
+    fn no_decode_evidence_holds_the_ema() {
+        let mut a = alloc();
+        for _ in 0..5 {
+            a.observe(4, Some(0.5));
+        }
+        let ema = a.latency_ema_s();
+        assert!(ema > 0.2, "spike raised the EMA: {ema}");
+        // Prefill/ft-only steps (no decode rows) must not launder the
+        // latency signal away: the EMA holds, and with no queue the
+        // budget neither collapses further nor recovers on fake calm.
+        for _ in 0..20 {
+            a.observe(0, None);
+        }
+        assert_eq!(a.latency_ema_s(), ema, "None observation must not move the EMA");
+        assert!(a.ft_budget() < 4, "stale pressure must not let the budget regrow");
+        // Real decode observations resume the controller's dynamics.
+        for _ in 0..40 {
+            a.observe(0, Some(0.01));
+        }
+        assert_eq!(a.ft_budget(), 4);
     }
 }

@@ -33,8 +33,12 @@ pub struct CoordinatorConfig {
     /// Give up on queued requests older than this (bounds sim length; the
     /// request is recorded as failed).
     pub drop_after_s: f64,
-    /// Reserve KV for prompt + max_new at admission (true = no preemption
-    /// needed; matches the executables' contiguous slots).
+    /// Reserve KV for prompt + max_new at admission instead of paging
+    /// blocks on demand (true = no preemption ever needed; the ablation
+    /// policy, and what the non-preempting baselines run). The default is
+    /// on-demand paging: admission claims only the prompt's blocks and a
+    /// decode step that cannot claim its next block preempts the
+    /// youngest-by-arrival active request (recompute-on-resume).
     pub reserve_worst_case: bool,
     /// Use the unified entry whenever fine-tune work exists (false = always
     /// run classes in separate launches; an ablation knob).
@@ -51,7 +55,7 @@ impl Default for CoordinatorConfig {
         Self {
             slo: SloSpec::default(),
             drop_after_s: 60.0,
-            reserve_worst_case: true,
+            reserve_worst_case: false,
             use_unified: true,
             capacity: CapacityConfig::default(),
             max_prefill_batch: 4,
@@ -80,6 +84,10 @@ pub struct StepOutcome {
     /// Every token emitted this step, in emission order: (request id,
     /// token). Streaming frontends forward these as incremental frames.
     pub emitted_tokens: Vec<(u64, i32)>,
+    /// Requests preempted this step (KV released, re-queued at the front
+    /// for recompute-on-resume). Not failures: their generation continues
+    /// after re-admission with the same output stream.
+    pub preempted_requests: Vec<u64>,
     pub optimizer_steps: usize,
     /// Nothing to do (driver should advance the clock to the next arrival).
     pub idle: bool,
@@ -90,6 +98,10 @@ pub struct Coordinator {
     pub cfg: CoordinatorConfig,
     pub kv: KvCacheManager,
     queue: VecDeque<InferenceRequest>,
+    /// Preempted requests awaiting re-admission, oldest-by-arrival at the
+    /// front. They outrank the arrival queue (every queued request arrived
+    /// after every once-admitted one), so admission drains this first.
+    preempted: VecDeque<ActiveRequest>,
     active: Vec<ActiveRequest>,
     trainers: Vec<TrainerState>,
     capacity: CapacityAllocator,
@@ -101,8 +113,16 @@ pub struct Coordinator {
     pub decode_series: ThroughputSeries,
     pub finetune_series: ThroughputSeries,
     pub eval_series: ThroughputSeries,
-    /// Round-robin cursor over decoding requests.
-    decode_cursor: usize,
+    /// Id of the last decode row served — the fairness rotation is keyed on
+    /// stable request ids (not positions in a filtered list, which every
+    /// `swap_remove` completion reshuffles).
+    last_decode_id: Option<u64>,
+    /// Total preemptions over the run (Fig. 5/6 harnesses and the server
+    /// stats frame surface this).
+    preemptions_total: u64,
+    /// Run-peak of `tokens_reserved_unused` (sampled after every step):
+    /// the fragmentation headline the paging policy exists to shrink.
+    kv_frag_peak: usize,
     finetune_tokens: u64,
     eval_tokens: u64,
 }
@@ -114,6 +134,7 @@ impl Coordinator {
             cfg,
             kv: KvCacheManager::new(cache_cfg),
             queue: VecDeque::new(),
+            preempted: VecDeque::new(),
             active: Vec::new(),
             trainers: Vec::new(),
             capacity,
@@ -122,7 +143,9 @@ impl Coordinator {
             decode_series: ThroughputSeries::default(),
             finetune_series: ThroughputSeries::default(),
             eval_series: ThroughputSeries::default(),
-            decode_cursor: 0,
+            last_decode_id: None,
+            preemptions_total: 0,
+            kv_frag_peak: 0,
             finetune_tokens: 0,
             eval_tokens: 0,
         }
@@ -144,6 +167,21 @@ impl Coordinator {
         self.queue.len()
     }
 
+    /// Preempted requests awaiting re-admission.
+    pub fn preempted_len(&self) -> usize {
+        self.preempted.len()
+    }
+
+    /// Total preemptions over the run.
+    pub fn preempted_total(&self) -> u64 {
+        self.preemptions_total
+    }
+
+    /// Run-peak reserved-but-unused KV token capacity (sampled per step).
+    pub fn kv_frag_peak_tokens(&self) -> usize {
+        self.kv_frag_peak
+    }
+
     pub fn active_len(&self) -> usize {
         self.active.len()
     }
@@ -163,6 +201,7 @@ impl Coordinator {
             .queue
             .iter()
             .map(|r| r.adapter)
+            .chain(self.preempted.iter().map(|a| a.req.adapter))
             .chain(self.active.iter().map(|a| a.req.adapter))
             .filter(|&a| a >= 0)
             .collect();
@@ -172,17 +211,15 @@ impl Coordinator {
     }
 
     /// Can a request with this shape EVER be admitted under the current
-    /// cache geometry? A request whose worst-case reservation exceeds the
-    /// slot capacity (or the whole block budget) would sit at the queue
-    /// head forever and head-of-line-block every other tenant — serving
-    /// frontends must reject it up front instead of submitting it.
+    /// cache geometry? This is the worst-case bound in BOTH reservation
+    /// modes: under on-demand paging a request that cannot finish even
+    /// with the entire block pool to itself would preempt-and-resume
+    /// forever (the preemption loop can hand one request the whole pool,
+    /// but no more) — serving frontends must reject it up front instead
+    /// of submitting it.
     pub fn request_fits(&self, prompt_len: usize, max_new_tokens: usize) -> bool {
         let prompt = prompt_len.min(self.cfg.max_prompt_tokens);
-        let need = if self.cfg.reserve_worst_case {
-            prompt + max_new_tokens
-        } else {
-            prompt
-        };
+        let need = prompt + max_new_tokens;
         let cfg = self.kv.config();
         need <= cfg.slot_capacity && cfg.blocks_for(need) <= cfg.total_blocks
     }
@@ -201,6 +238,14 @@ impl Coordinator {
             });
             return Ok(true);
         }
+        if let Some(pos) = self.preempted.iter().position(|a| a.req.id == id) {
+            // Preempted requests hold no KV slot (released at preemption).
+            let a = self.preempted.remove(pos).expect("position is in range");
+            let mut t = a.trace;
+            t.failed = true;
+            self.traces.push(t);
+            return Ok(true);
+        }
         if let Some(pos) = self.active.iter().position(|a| a.req.id == id) {
             let mut a = self.active.swap_remove(pos);
             a.trace.failed = true;
@@ -217,18 +262,22 @@ impl Coordinator {
     /// flight would silently zero the slot's delta mid-generation.
     pub fn adapter_in_use(&self, slot: i32) -> bool {
         self.queue.iter().any(|r| r.adapter == slot)
+            || self.preempted.iter().any(|a| a.req.adapter == slot)
             || self.active.iter().any(|a| a.req.adapter == slot)
             || self.trainers.iter().any(|t| !t.done() && t.job.adapter == slot)
     }
 
     /// All work drained?
     pub fn quiescent(&self) -> bool {
-        self.queue.is_empty() && self.active.is_empty() && self.trainers.iter().all(|t| t.done())
+        self.queue.is_empty()
+            && self.preempted.is_empty()
+            && self.active.is_empty()
+            && self.trainers.iter().all(|t| t.done())
     }
 
-    /// Any inference work (queued or live)?
+    /// Any inference work (queued, preempted or live)?
     pub fn has_inference_work(&self) -> bool {
-        !self.queue.is_empty() || !self.active.is_empty()
+        !self.queue.is_empty() || !self.preempted.is_empty() || !self.active.is_empty()
     }
 
     fn drop_stale(&mut self) -> Vec<u64> {
@@ -251,14 +300,49 @@ impl Coordinator {
         ids
     }
 
+    /// Initial block claim for a prompt of `prompt_len` under the current
+    /// reservation policy (prompt-only for on-demand paging, worst case for
+    /// the ablation).
+    fn admission_need(&self, prompt_len: usize, max_new: usize) -> usize {
+        let prompt = prompt_len.min(self.cfg.max_prompt_tokens);
+        if self.cfg.reserve_worst_case {
+            prompt + max_new
+        } else {
+            prompt
+        }
+    }
+
     fn admit(&mut self) {
+        // Preempted requests first: they are the oldest inference work by
+        // arrival (admission is FIFO, so everything still queued arrived
+        // after them). A front that does not fit blocks ALL admission —
+        // admitting younger work over it would re-starve exactly the
+        // request preemption already penalized.
+        while let Some(front) = self.preempted.front() {
+            // The recompute context is NOT re-truncated to
+            // max_prompt_tokens: output transparency (DESIGN.md §8)
+            // requires prefilling exactly the first-admission prompt plus
+            // every generated token — dropping its head would change the
+            // resumed logits. The length is already bounded: a request is
+            // preempted only while it can still decode, so the folded
+            // context is at most slot_capacity tokens (and at most the
+            // truncated-prompt + max_new bound `request_fits` checks).
+            let need = front.req.prompt.len();
+            if !self.kv.can_admit(need) {
+                return;
+            }
+            let mut a = self.preempted.pop_front().unwrap();
+            let slot = self
+                .kv
+                .allocate(a.req.id, need)
+                .expect("can_admit checked allocation");
+            a.kv_slot = slot;
+            a.phase = Phase::Admitted;
+            self.active.push(a);
+        }
         loop {
             let Some(front) = self.queue.front() else { break };
-            let need = if self.cfg.reserve_worst_case {
-                front.prompt.len().min(self.cfg.max_prompt_tokens) + front.max_new_tokens
-            } else {
-                front.prompt.len().min(self.cfg.max_prompt_tokens)
-            };
+            let need = self.admission_need(front.prompt.len(), front.max_new_tokens);
             if !self.kv.can_admit(need) {
                 break;
             }
@@ -278,6 +362,56 @@ impl Coordinator {
         }
     }
 
+    /// Preempt the youngest-by-arrival active request: release its KV and
+    /// park it at the FRONT of the preempted deque with the tokens it has
+    /// generated folded into its prompt — on re-admission one prefill
+    /// recomputes the KV and generation continues (recompute beats a swap
+    /// path here: the CPU arena has no cheaper tier to swap to, and the
+    /// folded prefill is a fraction of a decode step's cost). Returns the
+    /// preempted id, or `None` if nothing is active.
+    fn preempt_youngest(&mut self) -> Result<Option<u64>> {
+        let Some(idx) = self
+            .active
+            .iter()
+            .enumerate()
+            .max_by(|(_, x), (_, y)| {
+                x.req
+                    .arrival_s
+                    .total_cmp(&y.req.arrival_s)
+                    .then(x.req.id.cmp(&y.req.id))
+            })
+            .map(|(i, _)| i)
+        else {
+            return Ok(None);
+        };
+        let mut a = self.active.swap_remove(idx);
+        self.kv.release(a.kv_slot)?;
+        let tail = &a.generated[a.folded..];
+        a.req.prompt.extend_from_slice(tail);
+        a.folded = a.generated.len();
+        a.preemptions += 1;
+        a.phase = Phase::Queued;
+        self.preemptions_total += 1;
+        let id = a.req.id;
+        // Ordered insert keeps the deque oldest-first. (Blind push_front is
+        // not enough: a victim preempted while an older one is still stuck
+        // waiting would land ahead of it and steal the blocks it is
+        // waiting for.)
+        let pos = self
+            .preempted
+            .iter()
+            .position(|p| {
+                p.req
+                    .arrival_s
+                    .total_cmp(&a.req.arrival_s)
+                    .then(p.req.id.cmp(&a.req.id))
+                    == std::cmp::Ordering::Greater
+            })
+            .unwrap_or(self.preempted.len());
+        self.preempted.insert(pos, a);
+        Ok(Some(id))
+    }
+
     /// Assemble and run one step. `backend` supplies capacities and costs.
     pub fn step(&mut self, backend: &mut dyn Backend) -> Result<StepOutcome> {
         let mut out = StepOutcome::default();
@@ -289,17 +423,47 @@ impl Coordinator {
             .unified_capacity()
             .unwrap_or((0, self.cfg.max_prefill_batch, backend.max_decode_batch()));
 
-        // Decode rows: round-robin over decoding requests.
-        let decoding: Vec<usize> = (0..self.active.len())
-            .filter(|&i| self.active[i].phase == Phase::Decoding)
-            .collect();
-        let dec_take = decoding.len().min(dec_cap);
-        let mut dec_idx: Vec<usize> = Vec::with_capacity(dec_take);
-        if !decoding.is_empty() {
-            for k in 0..dec_take {
-                dec_idx.push(decoding[(self.decode_cursor + k) % decoding.len()]);
+        // Decode rows: fairness rotation keyed on stable request ids (a
+        // position-based cursor skips or double-serves neighbours whenever
+        // a completion's swap_remove reshuffles the active list), with a
+        // block reservation per row — on-demand paging can run out of
+        // blocks mid-generation, and the out-of-blocks row triggers
+        // preempt-and-recompute instead of a mid-launch error.
+        let mut dec_idx: Vec<usize> = Vec::new();
+        'select: loop {
+            let mut decoding: Vec<(u64, usize)> = self
+                .active
+                .iter()
+                .enumerate()
+                .filter(|(_, a)| a.phase == Phase::Decoding)
+                .map(|(i, a)| (a.req.id, i))
+                .collect();
+            if decoding.is_empty() || dec_cap == 0 {
+                break;
             }
-            self.decode_cursor = (self.decode_cursor + dec_take) % decoding.len().max(1);
+            decoding.sort_unstable_by_key(|&(id, _)| id);
+            if let Some(last) = self.last_decode_id {
+                let start = decoding.partition_point(|&(id, _)| id <= last) % decoding.len();
+                decoding.rotate_left(start);
+            }
+            decoding.truncate(dec_cap);
+            for &(_, i) in &decoding {
+                if !self.kv.reserve_decode_block(self.active[i].kv_slot) {
+                    // Out of blocks: the youngest active request yields.
+                    // Restart selection — the victim may have been in this
+                    // window, and its freed blocks change what fits.
+                    match self.preempt_youngest()? {
+                        Some(id) => {
+                            out.preempted_requests.push(id);
+                            continue 'select;
+                        }
+                        None => break 'select,
+                    }
+                }
+            }
+            self.last_decode_id = decoding.last().map(|&(id, _)| id);
+            dec_idx = decoding.into_iter().map(|(_, i)| i).collect();
+            break;
         }
         let dec_rows: Vec<DecodeRow> = dec_idx
             .iter()
@@ -359,16 +523,23 @@ impl Coordinator {
             // idle engine is the strongest "no pressure" signal there is —
             // without this, a budget that collapsed to zero under a spike
             // could never recover once inference drained (livelock).
-            self.capacity.observe(self.queue.len(), 0.0);
+            self.capacity
+                .observe(self.queue.len() + self.preempted.len(), Some(0.0));
             out.idle = true;
             return Ok(out);
         }
 
         // --- Execute --------------------------------------------------------
+        // Unified mode takes the merged launch for EVERY step the backend
+        // compiled a unified entry for — including inference-only steps
+        // (empty ft slice): prefill ∥ decode sharing one launch is the
+        // batching the paper's 3.0x inference-throughput claim measures,
+        // and gating it on pending fine-tune work silently degraded
+        // inference-only phases to split prefill + decode launches.
         let step_start = self.now_s;
         let mut cost = StepCost::default();
         let (ft_losses, pf_logits, dec_logits);
-        if self.cfg.use_unified && !ft_seqs.is_empty() {
+        if self.cfg.use_unified && backend.unified_capacity().is_some() {
             let (u, c) = backend.unified(&ft_seqs, &pf_seqs, &dec_rows, &mut self.kv)?;
             cost.add(c);
             ft_losses = u.ft_losses;
@@ -399,7 +570,6 @@ impl Coordinator {
         }
         self.now_s += cost.virt.max(cost.wall);
         let step_end = self.now_s;
-        let step_dur = step_end - step_start;
 
         // --- Route results ---------------------------------------------------
         // Fine-tune losses -> trainers; optimizer when accumulation is due.
@@ -432,14 +602,33 @@ impl Coordinator {
             off += n;
         }
 
-        // Prefill results: first token per sequence.
+        // Per-decoded-token latencies this step (time since each stream's
+        // previous token) — the capacity controller's pressure signal.
+        let mut dec_lat_sum = 0.0f64;
+        let mut dec_lat_n = 0usize;
+
+        // Prefill results: one new token per sequence. For a fresh request
+        // that is its first token; for a preempted request resuming, the
+        // recompute prefill produces the NEXT token of an already-running
+        // stream — the gap since its last token is a decode latency (the
+        // honest accounting of the preemption penalty), not a new TTFT.
         for (k, &i) in pf_idx.iter().enumerate() {
             let a = &mut self.active[i];
-            a.trace.prefill_start_s = Some(step_start);
+            let resumed = !a.generated.is_empty();
+            if a.trace.prefill_start_s.is_none() {
+                a.trace.prefill_start_s = Some(step_start);
+            }
             let tok = argmax(&pf_logits[k]);
             a.generated.push(tok);
             out.emitted_tokens.push((a.req.id, tok));
-            a.trace.first_token_s = Some(step_end);
+            if resumed {
+                let gap = step_end - a.last_token_s;
+                a.trace.decode_latencies_s.push(gap);
+                dec_lat_sum += gap;
+                dec_lat_n += 1;
+            } else {
+                a.trace.first_token_s = Some(step_end);
+            }
             a.trace.output_tokens = a.generated.len();
             a.last_token_s = step_end;
             a.phase = Phase::Decoding;
@@ -454,12 +643,14 @@ impl Coordinator {
             a.generated.push(tok);
             out.emitted_tokens.push((a.req.id, tok));
             a.trace.output_tokens = a.generated.len();
-            a.trace.decode_latencies_s.push(step_end - a.last_token_s);
+            let gap = step_end - a.last_token_s;
+            a.trace.decode_latencies_s.push(gap);
+            dec_lat_sum += gap;
+            dec_lat_n += 1;
             a.last_token_s = step_end;
             out.decoded_tokens += 1;
             self.decode_series.record(step_end, 1.0);
         }
-        let _ = step_dur;
 
         // Completions.
         let mut j = 0;
@@ -479,14 +670,25 @@ impl Coordinator {
             }
         }
 
-        // Capacity controller feedback.
-        let per_token_latency = if out.decoded_tokens > 0 {
-            step_dur
+        // Capacity controller feedback: a real per-decoded-token latency
+        // (mean time-since-previous-token over this step's decode rows,
+        // including resumed streams), not the whole-step duration. Steps
+        // with no decode rows carry no decode-latency evidence at all —
+        // pass None so the EMA holds — unless no inference work exists
+        // anywhere, where zero pressure is definitional.
+        self.kv_frag_peak = self.kv_frag_peak.max(self.kv.stats().tokens_reserved_unused);
+
+        let decode_latency = if dec_lat_n > 0 {
+            Some(dec_lat_sum / dec_lat_n as f64)
+        } else if !self.has_inference_work() {
+            Some(0.0)
         } else {
-            0.0
+            None
         };
-        self.capacity
-            .observe(self.queue.len() + self.pending_prefill_count(), per_token_latency);
+        self.capacity.observe(
+            self.queue.len() + self.preempted.len() + self.pending_prefill_count(),
+            decode_latency,
+        );
 
         out.cost = cost;
         Ok(out)
@@ -513,6 +715,13 @@ impl Coordinator {
                 failed: true,
                 ..Default::default()
             });
+        }
+        for a in std::mem::take(&mut self.preempted) {
+            // No KV to release: a preempted request's slot was freed at
+            // preemption time.
+            let mut t = a.trace;
+            t.failed = true;
+            self.traces.push(t);
         }
         for a in std::mem::take(&mut self.active) {
             let mut t = a.trace;
@@ -767,6 +976,175 @@ mod tests {
         assert!(o.ft_seqs > 0);
         assert!(o.prefilled_seqs > 0);
         drive(&mut c, &mut be, 1000);
+        assert!(c.traces.iter().all(|t| !t.failed));
+    }
+
+    #[test]
+    fn unified_mode_merges_inference_only_steps() {
+        // The regression the paper's 3.0x claim depends on: with NO
+        // fine-tune work pending, unified mode must still issue exactly
+        // one merged launch per step — not split prefill + decode.
+        let mut c = coordinator();
+        let mut be = backend();
+        for i in 0..3 {
+            c.submit(req(i, 0, 8, 5, 0.0));
+        }
+        let mut steps = 0;
+        while !c.quiescent() && steps < 100 {
+            let before = be.launches;
+            let o = c.step(&mut be).unwrap();
+            if o.idle {
+                break;
+            }
+            steps += 1;
+            assert_eq!(be.launches.prefill, before.prefill, "no separate prefill launch");
+            assert_eq!(be.launches.decode, before.decode, "no separate decode launch");
+            assert_eq!(
+                be.launches.unified,
+                before.unified + 1,
+                "exactly one merged launch per non-idle step"
+            );
+        }
+        assert!(c.quiescent(), "drained in {steps} steps");
+        assert_eq!(be.launches.prefill + be.launches.decode, 0);
+        assert_eq!(be.launches.unified as usize, steps);
+    }
+
+    #[test]
+    fn split_mode_uses_separate_launches() {
+        // The ablation knob still works: use_unified = false must never
+        // touch the merged entry.
+        let mut c = coordinator();
+        c.cfg.use_unified = false;
+        let mut be = backend();
+        for i in 0..3 {
+            c.submit(req(i, 0, 8, 5, 0.0));
+        }
+        drive(&mut c, &mut be, 200);
+        assert!(c.quiescent());
+        assert_eq!(be.launches.unified, 0, "split mode must not take the merged entry");
+        assert!(be.launches.prefill > 0 && be.launches.decode > 0);
+    }
+
+    #[test]
+    fn out_of_blocks_preempts_youngest_and_resumes() {
+        // 12 blocks x 16 tokens. Worst-case reservation would need 4
+        // blocks per request (16 prompt + 40 new = 56 tokens), capping
+        // concurrency at 3; on-demand paging admits all 6 on one block
+        // each and preempts as the streams grow into the pool.
+        // max_prompt_tokens = 32 < 16 + 40: resumed recompute contexts
+        // (up to 56 tokens) exceed the admission bucket, pinning that the
+        // resume path does NOT re-truncate them — re-truncation would
+        // silently change post-resume logits.
+        let mut c = Coordinator::new(
+            CoordinatorConfig {
+                max_prompt_tokens: 32,
+                drop_after_s: 1e9,
+                ..Default::default()
+            },
+            CacheConfig {
+                num_slots: 8,
+                slot_capacity: 96,
+                block_tokens: 16,
+                total_blocks: 12,
+                num_layers: 2,
+                token_elems: 16,
+            },
+        );
+        let mut be = backend();
+        for i in 0..6 {
+            c.submit(req(i, (i % 4) as i32, 16, 40, 0.0));
+        }
+        let mut emitted: std::collections::HashMap<u64, Vec<i32>> = Default::default();
+        let mut outputs: std::collections::HashMap<u64, Vec<i32>> = Default::default();
+        let mut steps = 0;
+        while !c.quiescent() && steps < 20_000 {
+            let o = c.step(&mut be).unwrap();
+            c.kv.audit_ledger().unwrap();
+            for &(id, t) in &o.emitted_tokens {
+                emitted.entry(id).or_default().push(t);
+            }
+            for (id, toks) in o.completed_outputs {
+                outputs.insert(id, toks);
+            }
+            if o.idle {
+                break;
+            }
+            steps += 1;
+        }
+        assert!(c.quiescent(), "all requests must drain despite preemption");
+        assert!(c.preempted_total() > 0, "this workload must exercise preemption");
+        assert_eq!(c.traces.len(), 6);
+        assert!(c.traces.iter().all(|t| !t.failed && t.output_tokens == 40));
+        // Streaming invariant survives preempt/resume: the incremental
+        // stream equals the final output token for token — nothing is
+        // re-emitted by the recompute prefill and nothing is lost.
+        assert_eq!(outputs.len(), 6);
+        for (id, full) in &outputs {
+            assert_eq!(full.len(), 40);
+            assert_eq!(&emitted[id], full, "stream/output parity for request {id}");
+        }
+        let st = c.kv.stats();
+        assert_eq!((st.slots_used, st.blocks_used), (0, 0), "no KV leak across preemptions");
+    }
+
+    #[test]
+    fn decode_rotation_is_fair_across_completions() {
+        // Regression for the positional round-robin cursor: a completion's
+        // swap_remove used to reshuffle the decoding list under the
+        // cursor, double-serving one neighbour and starving another. The
+        // id-keyed rotation must keep live streams within one token of
+        // each other at a 2-row decode cap, across completions.
+        let tight = BucketTable {
+            prefill: vec![(8, 32)],
+            decode: vec![2],
+            train: vec![(2, 32)],
+            unified: vec![UnifiedShape {
+                ft_batch: 2,
+                ft_seq: 32,
+                pf_batch: 8,
+                pf_seq: 32,
+                dec_batch: 2,
+            }],
+        };
+        let mut c = coordinator();
+        let mut be = SimBackend::new(geometry(), tight, CostModel::default());
+        c.submit(req(0, 0, 8, 4, 0.0)); // finishes early, mid-rotation
+        for i in 1..5 {
+            c.submit(req(i, 0, 8, 20, 0.0));
+        }
+        let mut counts: std::collections::HashMap<u64, usize> = Default::default();
+        let mut done: std::collections::HashSet<u64> = Default::default();
+        let mut steps = 0;
+        while !c.quiescent() && steps < 2_000 {
+            let o = c.step(&mut be).unwrap();
+            let mut this_step: std::collections::HashSet<u64> = Default::default();
+            for &(id, _) in &o.emitted_tokens {
+                assert!(this_step.insert(id), "request {id} double-served in one step");
+                *counts.entry(id).or_default() += 1;
+            }
+            done.extend(o.completed_requests.iter().copied());
+            // Fairness among the still-live long streams.
+            let live: Vec<usize> = (1..5u64)
+                .filter(|id| !done.contains(id))
+                .map(|id| counts.get(&id).copied().unwrap_or(0))
+                .collect();
+            if live.len() >= 2 {
+                let (mn, mx) = (
+                    *live.iter().min().unwrap(),
+                    *live.iter().max().unwrap(),
+                );
+                assert!(
+                    mx - mn <= 1,
+                    "rotation starved a stream at step {steps}: counts {live:?}"
+                );
+            }
+            if o.idle {
+                break;
+            }
+            steps += 1;
+        }
+        assert!(c.quiescent());
         assert!(c.traces.iter().all(|t| !t.failed));
     }
 

@@ -29,6 +29,13 @@ pub enum Phase {
 }
 
 /// A live request inside the coordinator.
+///
+/// A preempted request keeps this struct (queued aside in the coordinator's
+/// preempted deque): `generated` and `trace` survive the preemption so the
+/// resumed generation continues the same output stream, while `req.prompt`
+/// absorbs the generated-so-far tokens as the recompute context
+/// (`folded` marks how much of `generated` is already folded in, so a
+/// second preemption folds only the new tail).
 #[derive(Debug)]
 pub struct ActiveRequest {
     pub req: InferenceRequest,
@@ -39,6 +46,11 @@ pub struct ActiveRequest {
     /// Clock time the previous token (or prefill) completed — decode
     /// latency is measured from here.
     pub last_token_s: f64,
+    /// `generated[..folded]` are already part of `req.prompt` (recompute
+    /// context built by earlier preemptions).
+    pub folded: usize,
+    /// How many times this request has been preempted.
+    pub preemptions: u32,
 }
 
 impl ActiveRequest {
@@ -48,7 +60,16 @@ impl ActiveRequest {
             input_tokens: req.prompt.len(),
             ..Default::default()
         };
-        Self { req, phase: Phase::Admitted, kv_slot, generated: Vec::new(), trace, last_token_s: 0.0 }
+        Self {
+            req,
+            phase: Phase::Admitted,
+            kv_slot,
+            generated: Vec::new(),
+            trace,
+            last_token_s: 0.0,
+            folded: 0,
+            preemptions: 0,
+        }
     }
 
     pub fn next_input_token(&self) -> i32 {

@@ -28,7 +28,7 @@ mod xla_backend;
 
 pub use cost::CostModel;
 pub use native::NativeBackend;
-pub use sim::SimBackend;
+pub use sim::{LaunchCounts, SimBackend};
 pub use xla_backend::XlaBackend;
 
 use anyhow::Result;

@@ -7,6 +7,13 @@
 //! trainer interleaving, SLO clocks) and replaces only the tensor math:
 //! logits become deterministic pseudo-random rows, losses follow a decaying
 //! curve, and step latency comes from [`CostModel`].
+//!
+//! Preempt-and-recompute costing: a preempted request resumes by prefilling
+//! its folded prompt (original prompt + every token generated so far), so
+//! the recompute penalty is charged through the ordinary
+//! [`CostModel::prefill_cost`] per-token terms of that larger prefill — no
+//! separate knob, and the penalty grows with how far the generation had
+//! progressed, exactly like the real recompute would.
 
 use anyhow::{anyhow, Result};
 
@@ -16,6 +23,21 @@ use crate::engine::{
 use crate::kvcache::KvCacheManager;
 use crate::model::VirtualizedRegistry;
 use crate::runtime::{BucketTable, ModelGeometry};
+
+/// Per-entry launch counters. Scheduler tests assert merged-launch behaviour
+/// on these: an inference-only step in unified mode must bump `unified` by
+/// exactly one and leave `prefill`/`decode` untouched — falling back to
+/// split launches is the regression the paper's 3.0x throughput claim
+/// cannot survive. Non-launches (empty inputs short-circuited before any
+/// work) are not counted.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct LaunchCounts {
+    pub prefill: u64,
+    pub decode: u64,
+    pub train: u64,
+    pub optim: u64,
+    pub unified: u64,
+}
 
 pub struct SimBackend {
     geometry: ModelGeometry,
@@ -30,6 +52,8 @@ pub struct SimBackend {
     /// Multiplier on every latency (baseline engines model their slower
     /// kernels by scaling this; 1.0 = Loquetier).
     pub slowdown: f64,
+    /// How many launches of each kind this backend has executed.
+    pub launches: LaunchCounts,
 }
 
 impl SimBackend {
@@ -42,6 +66,7 @@ impl SimBackend {
             pending_micro: 0,
             rng_state: 0x9E3779B97F4A7C15,
             slowdown: 1.0,
+            launches: LaunchCounts::default(),
         }
     }
 
@@ -116,6 +141,7 @@ impl Backend for SimBackend {
         if seqs.is_empty() {
             return Ok((vec![], StepCost::default()));
         }
+        self.launches.prefill += 1;
         let tokens: usize = seqs.iter().map(|q| q.tokens.len()).sum();
         let lora_tokens: usize = seqs
             .iter()
@@ -141,6 +167,7 @@ impl Backend for SimBackend {
         if rows.is_empty() {
             return Ok((vec![], StepCost::default()));
         }
+        self.launches.decode += 1;
         let cached: usize = rows.iter().map(|r| cache.len(r.kv_slot)).sum();
         let lora_rows = rows.iter().filter(|r| r.adapter >= 0).count();
         let mut logits = Vec::with_capacity(rows.len());
@@ -157,6 +184,7 @@ impl Backend for SimBackend {
         if seqs.is_empty() {
             return Ok((vec![], StepCost::default()));
         }
+        self.launches.train += 1;
         // Physical padding: every row is charged at the in-batch max
         // (Transformers pads, and the AOT train buckets pad).
         let maxlen = seqs.iter().map(|q| q.tokens.len()).max().unwrap_or(0);
@@ -167,6 +195,7 @@ impl Backend for SimBackend {
     }
 
     fn optim_step(&mut self, _slots: &[usize], _lr: f32, _step: i32) -> Result<StepCost> {
+        self.launches.optim += 1;
         self.train_steps += 1;
         self.pending_micro = 0;
         Ok(self.scaled(self.cost.adam_cost()))
@@ -179,6 +208,7 @@ impl Backend for SimBackend {
         dec: &[DecodeRow],
         cache: &mut KvCacheManager,
     ) -> Result<(UnifiedOut, StepCost)> {
+        self.launches.unified += 1;
         // Fine-tune rows are padded to the in-batch max (bucket layout).
         let ft_max = ft.iter().map(|q| q.tokens.len()).max().unwrap_or(0);
         let ft_tokens = ft.len() * ft_max;

@@ -6,11 +6,24 @@
 //! large contiguous memcpys, and appending the `[nl, ., nkv, hd]` outputs
 //! is `nl` contiguous memcpys — no per-token scatter on the hot path.
 //!
-//! *Logically* we still account in fixed-size blocks (vLLM-style): admission
-//! reserves blocks for a request's worst case (prompt + max_new), and the
-//! scheduler reads block pressure to decide admission/preemption — the same
-//! control surface a paged arena exposes, minus the gather indirection the
-//! CPU executables cannot express.
+//! *Logically* we account in fixed-size blocks (vLLM-style), and the block
+//! ledger is **on-demand**: [`KvCacheManager::allocate`] claims only the
+//! blocks its `initial_tokens` argument needs (the prompt, for the
+//! coordinator's paged path), and [`KvCacheManager::append`] claims further
+//! blocks lazily as the slot's length crosses block boundaries. The
+//! scheduler probes [`KvCacheManager::reserve_decode_block`] before a decode
+//! step so an out-of-blocks condition surfaces as a preemption decision, not
+//! a mid-launch error. The worst-case-reservation ablation (and the
+//! baselines, which never preempt) get the old behaviour by passing
+//! `prompt + max_new` as `initial_tokens` — then the up-front claim covers
+//! every later append and the lazy path never triggers.
+//!
+//! Ledger invariants (checked by [`KvCacheManager::audit_ledger`] and the
+//! `scheduler_props` property tests):
+//!  * `blocks_used` equals the sum of every owned slot's held blocks;
+//!  * a slot's `len` never exceeds `blocks * block_tokens`;
+//!  * release returns all of a slot's blocks exactly once (double release
+//!    is an error, so a preempt/cancel race cannot double-free).
 
 use anyhow::{anyhow, Result};
 
@@ -101,7 +114,10 @@ impl KvCacheManager {
         &self.cfg
     }
 
-    /// Can a request needing `tokens` capacity be admitted right now?
+    /// Can a request needing `tokens` of *initial* capacity be admitted
+    /// right now? Callers choose the policy by what they pass: the prompt
+    /// length for on-demand paging, `prompt + max_new` for the worst-case
+    /// reservation ablation.
     pub fn can_admit(&self, tokens: usize) -> bool {
         let need = self.cfg.blocks_for(tokens);
         self.free_slot().is_some()
@@ -113,15 +129,22 @@ impl KvCacheManager {
         self.slots.iter().position(|s| s.owner.is_none())
     }
 
-    /// Reserve a slot + blocks for a request's worst case.
-    pub fn allocate(&mut self, request: u64, max_tokens: usize) -> Result<usize> {
-        if max_tokens > self.cfg.slot_capacity {
+    /// Blocks not yet claimed by any slot.
+    pub fn free_blocks(&self) -> usize {
+        self.cfg.total_blocks - self.blocks_used
+    }
+
+    /// Claim a slot plus the blocks `initial_tokens` needs. Appends beyond
+    /// the initial claim grow the slot's ledger lazily (see [`Self::append`]);
+    /// passing the worst case up front makes the claim cover every append.
+    pub fn allocate(&mut self, request: u64, initial_tokens: usize) -> Result<usize> {
+        if initial_tokens > self.cfg.slot_capacity {
             return Err(anyhow!(
-                "request {request} needs {max_tokens} tokens > slot capacity {}",
+                "request {request} needs {initial_tokens} tokens > slot capacity {}",
                 self.cfg.slot_capacity
             ));
         }
-        let need = self.cfg.blocks_for(max_tokens);
+        let need = self.cfg.blocks_for(initial_tokens);
         if self.blocks_used + need > self.cfg.total_blocks {
             return Err(anyhow!("out of cache blocks"));
         }
@@ -132,6 +155,27 @@ impl KvCacheManager {
         slot.len = 0;
         slot.blocks = need;
         Ok(idx)
+    }
+
+    /// Ensure `slot` can take one more appended token, claiming a fresh
+    /// block if its current ledger is exactly full. Returns `false` when no
+    /// block is available — the scheduler's signal to preempt (the claim
+    /// itself is the reservation: a subsequent 1-token `append` cannot
+    /// fail on blocks, so a multi-row launch never dies halfway).
+    pub fn reserve_decode_block(&mut self, slot: usize) -> bool {
+        let Some(s) = self.slots.get(slot) else { return false };
+        if s.owner.is_none() || s.len >= self.cfg.slot_capacity {
+            return false;
+        }
+        if s.len + 1 <= s.blocks * self.cfg.block_tokens {
+            return true; // current ledger already covers the next token
+        }
+        if self.free_blocks() == 0 {
+            return false;
+        }
+        self.blocks_used += 1;
+        self.slots[slot].blocks += 1;
+        true
     }
 
     /// Release a request's slot and blocks.
@@ -183,6 +227,8 @@ impl KvCacheManager {
                 k.len()
             ));
         }
+        let total_blocks = self.cfg.total_blocks;
+        let block_tokens = self.cfg.block_tokens;
         let s = &mut self.slots[slot];
         if s.owner.is_none() {
             return Err(anyhow!("append to free slot {slot}"));
@@ -192,6 +238,21 @@ impl KvCacheManager {
                 "slot {slot} overflow: {} + {n} > {}",
                 s.len, self.cfg.slot_capacity
             ));
+        }
+        // On-demand paging: claim the blocks this append crosses into. A
+        // worst-case allocation already holds them all, so this is a no-op
+        // on the ablation/baseline path.
+        let need_total = (s.len + n).div_ceil(block_tokens);
+        if need_total > s.blocks {
+            let extra = need_total - s.blocks;
+            let free = total_blocks - self.blocks_used;
+            if extra > free {
+                return Err(anyhow!(
+                    "slot {slot} out of cache blocks: needs {extra} more, {free} free"
+                ));
+            }
+            self.blocks_used += extra;
+            s.blocks = need_total;
         }
         let stride = self.cfg.layer_stride();
         for l in 0..nl {
@@ -231,6 +292,43 @@ impl KvCacheManager {
             tokens_cached,
             tokens_reserved_unused: reserved_tokens.saturating_sub(tokens_cached),
         }
+    }
+
+    /// Check the block-ledger invariants (module docs). Property tests call
+    /// this every scheduler step: a preempt/release/cancel path that leaks
+    /// or double-frees blocks corrupts `blocks_used` relative to the
+    /// per-slot ledgers and fails here immediately.
+    pub fn audit_ledger(&self) -> Result<()> {
+        let held: usize = self
+            .slots
+            .iter()
+            .filter(|s| s.owner.is_some())
+            .map(|s| s.blocks)
+            .sum();
+        if held != self.blocks_used {
+            return Err(anyhow!(
+                "ledger drift: slots hold {held} blocks, counter says {}",
+                self.blocks_used
+            ));
+        }
+        if self.blocks_used > self.cfg.total_blocks {
+            return Err(anyhow!(
+                "over-commit: {} blocks used of {}",
+                self.blocks_used, self.cfg.total_blocks
+            ));
+        }
+        for (i, s) in self.slots.iter().enumerate() {
+            if s.owner.is_none() && (s.blocks != 0 || s.len != 0) {
+                return Err(anyhow!("free slot {i} still holds {} blocks / {} tokens", s.blocks, s.len));
+            }
+            if s.len > s.blocks * self.cfg.block_tokens {
+                return Err(anyhow!(
+                    "slot {i}: {} tokens exceed its {} claimed blocks",
+                    s.len, s.blocks
+                ));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -334,5 +432,84 @@ mod tests {
         let s = m.allocate(1, 8).unwrap();
         m.release(s).unwrap();
         assert!(m.release(s).is_err());
+    }
+
+    #[test]
+    fn append_grows_ledger_lazily() {
+        // block_tokens = 8: a 4-token claim is one block; appending past
+        // token 8 must claim block 2 on demand, not fail.
+        let mut m = KvCacheManager::new(cfg());
+        let s = m.allocate(1, 4).unwrap();
+        assert_eq!(m.stats().blocks_used, 1);
+        let payload = vec![0.0; 2 * 10 * 4]; // 10 tokens, 2 layers, te=4
+        m.append(s, 10, &payload, &payload).unwrap();
+        assert_eq!(m.stats().blocks_used, 2, "crossing a boundary claims a block");
+        assert_eq!(m.len(s), 10);
+        m.audit_ledger().unwrap();
+        m.release(s).unwrap();
+        assert_eq!(m.stats().blocks_used, 0, "lazy blocks release with the slot");
+        m.audit_ledger().unwrap();
+    }
+
+    #[test]
+    fn append_fails_when_pool_exhausted() {
+        let mut m = KvCacheManager::new(cfg()); // 12 blocks
+        let s0 = m.allocate(1, 8).unwrap(); // 1 block
+        let _s1 = m.allocate(2, 32).unwrap(); // 4 blocks
+        let _s2 = m.allocate(3, 32).unwrap(); // 4 blocks
+        let _s3 = m.allocate(4, 24).unwrap(); // 3 blocks -> 12/12
+        // s0 is full at 8 tokens; growing it needs a 13th block.
+        let eight = vec![0.0; 2 * 8 * 4];
+        m.append(s0, 8, &eight, &eight).unwrap();
+        let one = vec![0.0; 2 * 4];
+        assert!(m.append(s0, 1, &one, &one).is_err(), "no block left to claim");
+        m.audit_ledger().unwrap();
+        assert_eq!(m.len(s0), 8, "failed append must not advance the slot");
+    }
+
+    #[test]
+    fn reserve_decode_block_claims_exactly_at_boundary() {
+        let mut m = KvCacheManager::new(cfg());
+        let s = m.allocate(1, 8).unwrap(); // 1 block = 8 tokens
+        let seven = vec![0.0; 2 * 7 * 4];
+        m.append(s, 7, &seven, &seven).unwrap();
+        // Token 8 still fits the claimed block: probe claims nothing.
+        assert!(m.reserve_decode_block(s));
+        assert_eq!(m.stats().blocks_used, 1);
+        let one = vec![0.0; 2 * 4];
+        m.append(s, 1, &one, &one).unwrap();
+        // Token 9 needs block 2: the probe IS the claim.
+        assert!(m.reserve_decode_block(s));
+        assert_eq!(m.stats().blocks_used, 2);
+        // Probing again before the append is idempotent.
+        assert!(m.reserve_decode_block(s));
+        assert_eq!(m.stats().blocks_used, 2);
+        m.audit_ledger().unwrap();
+    }
+
+    #[test]
+    fn reserve_decode_block_refuses_when_exhausted() {
+        let mut m = KvCacheManager::new(cfg()); // 12 blocks
+        let s0 = m.allocate(1, 8).unwrap(); // 1 block
+        let s1 = m.allocate(2, 32).unwrap();
+        let _s2 = m.allocate(3, 32).unwrap();
+        let _s3 = m.allocate(4, 24).unwrap(); // 12/12
+        let eight = vec![0.0; 2 * 8 * 4];
+        m.append(s0, 8, &eight, &eight).unwrap();
+        assert!(!m.reserve_decode_block(s0), "no 13th block to claim");
+        m.release(s1).unwrap();
+        assert!(m.reserve_decode_block(s0), "freed blocks are claimable");
+        m.audit_ledger().unwrap();
+    }
+
+    #[test]
+    fn reserve_decode_block_rejects_free_and_full_slots() {
+        let mut m = KvCacheManager::new(cfg());
+        assert!(!m.reserve_decode_block(0), "free slot");
+        assert!(!m.reserve_decode_block(99), "out of range");
+        let s = m.allocate(1, 32).unwrap();
+        let full = vec![0.0; 2 * 32 * 4];
+        m.append(s, 32, &full, &full).unwrap();
+        assert!(!m.reserve_decode_block(s), "slot at capacity cannot take a token");
     }
 }

@@ -152,9 +152,21 @@ pub struct Stats {
     pub rejected: u64,
     /// Adapters currently resident in the bank.
     pub loaded_adapters: usize,
+    /// Total preempt-and-recompute events over the run (a decode step ran
+    /// out of KV blocks and the youngest active request yielded).
+    pub preemptions: u64,
+    /// KV block-pool occupancy (on-demand paging ledger).
+    pub kv_blocks_used: usize,
+    pub kv_blocks_total: usize,
+    /// Reserved-but-unused KV token capacity (internal fragmentation —
+    /// block rounding under paging; worst-case headroom in the ablation),
+    /// instantaneous and run-peak.
+    pub kv_frag_tokens: usize,
+    pub kv_frag_peak_tokens: usize,
     /// Per-virtual-model counters, keyed by model name ("" = base model).
     pub per_adapter: BTreeMap<String, AdapterCounters>,
-    /// Engine queue depth over time (queued + admitted-not-finished).
+    /// Engine queue depth over time (queued + preempted +
+    /// admitted-not-finished).
     pub queue_depth: GaugeSeries,
 }
 
@@ -184,6 +196,11 @@ impl Stats {
             ("finetune_tokens", Json::Num(self.finetune_tokens as f64)),
             ("rejected", Json::Num(self.rejected as f64)),
             ("loaded_adapters", Json::Num(self.loaded_adapters as f64)),
+            ("preemptions", Json::Num(self.preemptions as f64)),
+            ("kv_blocks_used", Json::Num(self.kv_blocks_used as f64)),
+            ("kv_blocks_total", Json::Num(self.kv_blocks_total as f64)),
+            ("kv_frag_tokens", Json::Num(self.kv_frag_tokens as f64)),
+            ("kv_frag_peak_tokens", Json::Num(self.kv_frag_peak_tokens as f64)),
             ("queue_depth", Json::Num(self.queue_depth.last().map(|(_, v)| v).unwrap_or(0.0))),
             ("queue_depth_max", Json::Num(self.queue_depth.max())),
             ("per_adapter", per_adapter),
@@ -834,7 +851,13 @@ fn publish_stats(
         s.decode_tokens = coord.decode_series.total() as u64;
         s.finetune_tokens = coord.finetune_tokens();
         s.loaded_adapters = dir.list().len();
-        let depth = (coord.queue_len() + coord.active_len()) as f64;
+        s.preemptions = coord.preempted_total();
+        let kv = coord.kv.stats();
+        s.kv_blocks_used = kv.blocks_used;
+        s.kv_blocks_total = kv.blocks_total;
+        s.kv_frag_tokens = kv.tokens_reserved_unused;
+        s.kv_frag_peak_tokens = coord.kv_frag_peak_tokens();
+        let depth = (coord.queue_len() + coord.preempted_len() + coord.active_len()) as f64;
         s.queue_depth.sample(t0.elapsed().as_secs_f64(), depth);
     }
 }
@@ -1155,6 +1178,11 @@ mod tests {
             finetune_tokens: 5,
             rejected: 6,
             loaded_adapters: 2,
+            preemptions: 7,
+            kv_blocks_used: 11,
+            kv_blocks_total: 24,
+            kv_frag_tokens: 13,
+            kv_frag_peak_tokens: 99,
             ..Default::default()
         };
         s.per_adapter.insert(
@@ -1165,6 +1193,14 @@ mod tests {
         let j = s.to_json().to_string();
         assert!(j.contains("\"queued\":1") && j.contains("\"finetune_tokens\":5"), "{j}");
         assert!(j.contains("\"rejected\":6"), "{j}");
+        assert!(j.contains("\"preemptions\":7"), "{j}");
+        assert!(
+            j.contains("\"kv_blocks_used\":11")
+                && j.contains("\"kv_blocks_total\":24")
+                && j.contains("\"kv_frag_tokens\":13")
+                && j.contains("\"kv_frag_peak_tokens\":99"),
+            "{j}"
+        );
         assert!(j.contains("\"vm0\":{\"submitted\":9"), "{j}");
         assert!(j.contains("\"queue_depth\":3"), "{j}");
         // And it parses back as JSON.
