@@ -67,6 +67,7 @@ fn main() -> Result<()> {
             max_new_tokens: max_new,
             eos_token: Some(tok.eos),
             arrival_s: t,
+            slo: None,
         });
     }
 

@@ -11,8 +11,9 @@
 use anyhow::Result;
 
 use loquetier::config::table4_rows;
+use loquetier::coordinator::PolicyKind;
 use loquetier::harness::{
-    self, flexllm, loquetier, peft, sim_backend, slora, FLEXLLM_SLOWDOWN, GPU_PROMPT_CAP,
+    self, flexllm, loquetier_with, peft, sim_backend, slora, FLEXLLM_SLOWDOWN, GPU_PROMPT_CAP,
 };
 use loquetier::metrics::SloSpec;
 use loquetier::util::cli::Args;
@@ -24,6 +25,9 @@ fn main() -> Result<()> {
     // --requests-scale for quick runs (default 0.25 keeps each row seconds).
     let scale = args.f64_or("requests-scale", 0.25)?;
     let artifacts = args.str_or("artifacts", "artifacts");
+    // --policy slo runs the Loquetier rows under the SLO-aware scheduler
+    // (DESIGN.md §9); the baselines keep their own policies either way.
+    let policy = args.policy_or(PolicyKind::Fifo)?;
     let cost = harness::gpu_cost_model(&artifacts);
     let lengths = SHAREGPT_LENGTHS.rescaled_to(200.0);
 
@@ -50,7 +54,7 @@ fn main() -> Result<()> {
             };
             let slo = SloSpec::default();
 
-            let mut loq = loquetier();
+            let mut loq = loquetier_with(policy);
             let mut be = sim_backend(cost.clone());
             let r_loq = harness::run_system(
                 "loquetier", &mut loq, &mut be, mk_trace(1), vec![], &slo, usize::MAX,

@@ -12,7 +12,8 @@
 use anyhow::Result;
 
 use loquetier::config::{table5_multi, table5_single, table6_rows};
-use loquetier::harness::{self, loquetier, peft, sim_backend, GPU_PROMPT_CAP};
+use loquetier::coordinator::PolicyKind;
+use loquetier::harness::{self, loquetier_with, peft, sim_backend, GPU_PROMPT_CAP};
 use loquetier::metrics::SloSpec;
 use loquetier::util::cli::Args;
 use loquetier::workload::{build_trace, PoissonArrivals, SHAREGPT_LENGTHS};
@@ -21,6 +22,9 @@ fn main() -> Result<()> {
     let args = Args::from_env();
     let scale = args.f64_or("requests-scale", 0.25)?;
     let n_train = args.usize_or("train-examples", 256)?;
+    // --policy slo runs the Loquetier rows under the SLO-aware scheduler
+    // (chunked prefill + headroom-driven fine-tune budget, DESIGN.md §9).
+    let policy = args.policy_or(PolicyKind::Fifo)?;
     let artifacts = args.str_or("artifacts", "artifacts");
     let cost = harness::gpu_cost_model(&artifacts);
     let lengths = SHAREGPT_LENGTHS.rescaled_to(200.0);
@@ -28,7 +32,7 @@ fn main() -> Result<()> {
     // Reference FTPS: fine-tuning alone on an idle server (for the
     // "~40% fine-tune efficiency" ratio the paper reports).
     let solo_ftps = {
-        let mut loq = loquetier();
+        let mut loq = loquetier_with(policy);
         let mut be = sim_backend(cost.clone());
         let job = harness::finetune_job(0, 0, n_train, 8, 2, 1, false);
         let r = harness::run_system(
@@ -74,7 +78,7 @@ fn main() -> Result<()> {
                     .collect()
             };
 
-            let mut loq = loquetier();
+            let mut loq = loquetier_with(policy);
             let mut be = sim_backend(cost.clone());
             let r_loq = harness::run_system(
                 "loquetier", &mut loq, &mut be, mk_trace(1), mk_jobs(),

@@ -39,6 +39,7 @@ fn main() -> Result<()> {
             max_new_tokens: 200,
             eos_token: None,
             arrival_s: t,
+            slo: None,
         });
     }
 

@@ -12,8 +12,8 @@
 use anyhow::Result;
 
 use loquetier::baselines::{drive_to_completion, ServingSystem};
-use loquetier::coordinator::InferenceRequest;
-use loquetier::harness::{self, loquetier, sim_backend, GPU_PROMPT_CAP};
+use loquetier::coordinator::{InferenceRequest, PolicyKind};
+use loquetier::harness::{self, loquetier_with, sim_backend, GPU_PROMPT_CAP};
 use loquetier::metrics::{build_report, SloSpec};
 use loquetier::util::cli::Args;
 use loquetier::util::rng::Rng;
@@ -26,6 +26,10 @@ fn main() -> Result<()> {
     // rates scale up) for faster runs; 1.0 = the paper's real-time replay.
     let tscale = args.f64_or("time-scale", 1.0)?;
     let req_scale = args.f64_or("requests-scale", 1.0)?;
+    // --policy slo replays the composite under the SLO-aware scheduler
+    // (EDF admission + chunked prefill, DESIGN.md §9); fifo is the
+    // paper-faithful default.
+    let policy = args.policy_or(PolicyKind::Fifo)?;
     let cost = harness::gpu_cost_model(&artifacts);
     let lengths = SHAREGPT_LENGTHS.rescaled_to(200.0);
 
@@ -50,6 +54,7 @@ fn main() -> Result<()> {
                 max_new_tokens: 200,
                 eos_token: None,
                 arrival_s: offset + t * tscale,
+                slo: None,
             });
             id += 1;
         }
@@ -64,7 +69,8 @@ fn main() -> Result<()> {
     );
 
     let job = harness::finetune_job(99, 3, 100_000, 0, 2, 1, false);
-    let mut system = loquetier();
+    let mut system = loquetier_with(policy);
+    println!("scheduler policy: {}", system.inner.policy_name());
     let mut be = sim_backend(cost);
     system.add_trainer(job)?;
     let horizon = drive_to_completion(&mut system, &mut be, requests, usize::MAX)?;

@@ -62,12 +62,16 @@ fn main() -> Result<()> {
     registry.attach("vm-gsm8k", gsm8k, 1, SlotState::Inference)?;
     backend.sync_adapters(&mut registry)?;
 
-    // 3. Serve through the unified coordinator.
+    // 3. Serve through the unified coordinator. `--policy slo` swaps the
+    //    FIFO scheduler for the deadline-aware one (chunked prefill, EDF
+    //    admission — DESIGN.md §9) without touching anything else.
     let g = backend.geometry().clone();
+    let policy = args.policy_or(loquetier::coordinator::PolicyKind::Fifo)?;
     let mut coord = Coordinator::new(
-        CoordinatorConfig { max_prompt_tokens: 16, ..Default::default() },
+        CoordinatorConfig { max_prompt_tokens: 16, policy, ..Default::default() },
         loquetier::harness::cache_config_for(&g, 8),
     );
+    println!("scheduler policy: {}", coord.policy_name());
     let tok = Tokenizer::train(TINY_CORPUS, g.vocab_size);
     let prompt = tok.encode("Instruction: Give three tips. Response:");
     for (id, adapter) in [(1u64, 0i32), (2, 1), (3, -1)] {
@@ -78,6 +82,7 @@ fn main() -> Result<()> {
             max_new_tokens: 8,
             eos_token: None,
             arrival_s: 0.0,
+            slo: None,
         });
     }
     while !coord.quiescent() {
@@ -108,6 +113,7 @@ fn main() -> Result<()> {
         max_new_tokens: 4,
         eos_token: None,
         arrival_s: coord.now_s,
+        slo: None,
     });
     while !coord.quiescent() {
         if coord.step(backend.as_mut())?.idle {

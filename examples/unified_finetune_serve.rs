@@ -85,6 +85,7 @@ fn main() -> Result<()> {
             max_new_tokens: 6,
             eos_token: None,
             arrival_s: 0.0,
+            slo: None,
         });
     }
 
@@ -144,6 +145,7 @@ fn main() -> Result<()> {
         max_new_tokens: 4,
         eos_token: None,
         arrival_s: coord.now_s,
+        slo: None,
     });
     while !coord.quiescent() {
         if coord.step(&mut backend)?.idle {

@@ -56,6 +56,7 @@ fn main() {
                 max_new_tokens: 1400, // long-lived but admissible
                 eos_token: None,
                 arrival_s: 0.0,
+                slo: None,
             });
         }
         // Drain prefills first.
@@ -94,6 +95,7 @@ fn main() {
                 max_new_tokens: 1400,
                 eos_token: None,
                 arrival_s: 0.0,
+                slo: None,
             });
         }
         for _ in 0..20 {
@@ -141,6 +143,7 @@ fn main() {
                     max_new_tokens: 8,
                     eos_token: None,
                     arrival_s: 0.0,
+                    slo: None,
                 });
             }
             let mut be = SimBackend::new(sim_geometry(), sim_buckets(), zero_cost());

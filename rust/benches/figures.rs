@@ -6,9 +6,11 @@
 //! Every run (including `--fast`, the CI smoke) first replays reduced
 //! Fig. 5/6 workloads and appends their paged-KV counters — completed
 //! requests, preempt-and-recompute events, peak `tokens_reserved_unused`
-//! fragmentation — as one entry to the repo-root `BENCH_FIGURES.json`
-//! trajectory, whose shape CI validates with jq (protocol: EXPERIMENTS.md
-//! §Fragmentation).
+//! fragmentation — plus the FIFO-vs-SLO-aware attainment comparison
+//! (`fig{2,6}_slo_attainment_{fifo,slo}`, asserting SLO-aware + chunked
+//! prefill strictly wins the fig6-style burst) as one entry to the
+//! repo-root `BENCH_FIGURES.json` trajectory, whose shape CI validates
+//! with jq (protocols: EXPERIMENTS.md §Fragmentation, §SLO).
 //!
 //! Run: cargo bench --bench figures
 //! CI smoke: cargo bench --bench figures -- --fast   (counters only)
@@ -17,7 +19,7 @@ use std::time::{SystemTime, UNIX_EPOCH};
 
 use loquetier::baselines::{drive_to_completion, ServingSystem};
 use loquetier::config::table4_rows;
-use loquetier::coordinator::InferenceRequest;
+use loquetier::coordinator::{InferenceRequest, PolicyKind};
 use loquetier::engine::{CostModel, SimBackend};
 use loquetier::harness::{
     self, flexllm, loquetier, peft, sim_backend, slora, FLEXLLM_SLOWDOWN, GPU_PROMPT_CAP,
@@ -74,6 +76,7 @@ fn paged_counters(cost: &CostModel) -> Vec<(String, f64)> {
             max_new_tokens: 100,
             eos_token: None,
             arrival_s: t,
+            slo: None,
         });
     }
     let submitted5 = requests.len();
@@ -101,6 +104,7 @@ fn paged_counters(cost: &CostModel) -> Vec<(String, f64)> {
             max_new_tokens: 100,
             eos_token: None,
             arrival_s: t,
+            slo: None,
         })
         .collect();
     let submitted6 = requests.len();
@@ -112,6 +116,53 @@ fn paged_counters(cost: &CostModel) -> Vec<(String, f64)> {
     entries.push(("fig6_completed".to_string(), completed as f64));
     entries.push(("fig6_preemptions".to_string(), preemptions as f64));
     entries.push(("fig6_kv_frag_peak_tokens".to_string(), frag_peak as f64));
+    entries
+}
+
+/// FIFO vs SLO-aware attainment entries for the trajectory: a fig2-style
+/// steady Poisson trace (observational — both policies clear it) and the
+/// fig6-style long-prompt burst (`harness::long_prompt_burst`, shared with
+/// `scheduler_props::slo_aware_chunked_prefill_beats_fifo_on_burst` so the
+/// two assertions can never drift), where SLO-aware + chunked prefill must
+/// win strictly — the ISSUE-5 acceptance bar.
+fn slo_attainment_entries(cost: &CostModel) -> Vec<(String, f64)> {
+    let mut entries = Vec::new();
+
+    // Fig2-style: 2 RPS Poisson, every 8th prompt max-length.
+    let mut rng = Rng::seed_from_u64(2);
+    let mut arr = PoissonArrivals::new(2.0);
+    let fig2_trace: Vec<InferenceRequest> = (0..100u64)
+        .map(|i| {
+            let t = arr.next_arrival(&mut rng);
+            InferenceRequest {
+                id: i,
+                adapter: (i % 4) as i32,
+                prompt: vec![1; if i % 8 == 0 { GPU_PROMPT_CAP } else { 96 }],
+                max_new_tokens: 100,
+                eos_token: None,
+                arrival_s: t,
+                slo: None,
+            }
+        })
+        .collect();
+    let (fifo2, _) = harness::policy_attainment(cost, PolicyKind::Fifo, fig2_trace.clone());
+    let (slo2, _) = harness::policy_attainment(cost, PolicyKind::SloAware, fig2_trace);
+    println!("fig2 slo attainment: fifo={fifo2:.4} slo-aware={slo2:.4}");
+    entries.push(("fig2_slo_attainment_fifo".to_string(), fifo2));
+    entries.push(("fig2_slo_attainment_slo".to_string(), slo2));
+
+    // Fig6-style burst: the chunked-prefill acceptance assertion.
+    let (fifo6, _) =
+        harness::policy_attainment(cost, PolicyKind::Fifo, harness::long_prompt_burst());
+    let (slo6, _) =
+        harness::policy_attainment(cost, PolicyKind::SloAware, harness::long_prompt_burst());
+    println!("fig6 slo attainment: fifo={fifo6:.4} slo-aware={slo6:.4}");
+    assert!(
+        slo6 > fifo6,
+        "fig6 burst: SLO-aware chunked prefill must strictly beat FIFO ({slo6} !> {fifo6})"
+    );
+    entries.push(("fig6_slo_attainment_fifo".to_string(), fifo6));
+    entries.push(("fig6_slo_attainment_slo".to_string(), slo6));
     entries
 }
 
@@ -144,8 +195,10 @@ fn main() -> anyhow::Result<()> {
     let lengths = SHAREGPT_LENGTHS.rescaled_to(200.0);
     let slo = SloSpec::default();
 
-    // Paged-KV counter trajectory (always; this is all `--fast` runs).
-    let entries = paged_counters(&cost);
+    // Paged-KV counters + FIFO-vs-SLO-aware attainment trajectory
+    // (always; this is all `--fast` runs).
+    let mut entries = paged_counters(&cost);
+    entries.extend(slo_attainment_entries(&cost));
     record_figures_trajectory(&entries)?;
     if fast {
         return Ok(());
@@ -263,6 +316,7 @@ fn main() -> anyhow::Result<()> {
                 max_new_tokens: 100,
                 eos_token: None,
                 arrival_s: t,
+                slo: None,
             });
         }
         let job = harness::finetune_job(99, 3, 50_000, 0, 2, 1, false);
@@ -291,6 +345,7 @@ fn main() -> anyhow::Result<()> {
                 max_new_tokens: 100,
                 eos_token: None,
                 arrival_s: t,
+                slo: None,
             })
             .collect();
         let mut sys = loquetier();

@@ -57,8 +57,11 @@ impl FlexLlmLike {
     ) -> Self {
         cfg.use_unified = false;
         // Worst-case KV reservation (no preemption path): the on-demand
-        // paging ablation, same as the S-LoRA-like baseline.
+        // paging ablation, same as the S-LoRA-like baseline — and plain
+        // FIFO planning (DESIGN.md §9): FlexLLM's characteristic costs
+        // (lazy transform, adapter cycling) live in this wrapper.
         cfg.reserve_worst_case = true;
+        cfg.policy = crate::coordinator::PolicyKind::Fifo;
         Self {
             inner: Coordinator::new(cfg, cache_cfg),
             lazy_load_s,
@@ -252,6 +255,7 @@ mod tests {
             max_new_tokens: 2,
             eos_token: None,
             arrival_s: at,
+            slo: None,
         }
     }
 
@@ -336,6 +340,7 @@ mod tests {
             max_new_tokens: 100,
             eos_token: None,
             arrival_s: 0.0,
+            slo: None,
         });
         // Accepted without panic; cap enforced internally.
         assert_eq!(s.inner.queue_len(), 1);

@@ -1,7 +1,11 @@
 //! Baseline serving systems, reimplemented as *scheduling policies* over the
-//! same substrate (DESIGN.md §3): Table 1/2 and Figures 2–4 compare exactly
-//! these policies, so rebuilding them on one engine isolates the comparison
-//! the paper makes.
+//! same substrate (DESIGN.md §3, §9): Table 1/2 and Figures 2–4 compare
+//! exactly these policies, so rebuilding them on one engine isolates the
+//! comparison the paper makes. Since the plan/execute refactor each
+//! baseline is literally a policy configuration of the shared coordinator
+//! executor (PEFT runs `PolicyKind::Peft`; S-LoRA and FlexLLM run
+//! `FifoPolicy` with worst-case reservation) plus a thin wrapper carrying
+//! its characteristic costs.
 //!
 //! * [`PeftLike`] — HuggingFace-Transformers+PEFT: static padded batches,
 //!   serial per-adapter passes, no continuous batching, one trainer at a

@@ -1,176 +1,61 @@
-//! PEFT-like baseline: HuggingFace Transformers + PEFT semantics.
+//! PEFT-like baseline: HuggingFace Transformers + PEFT semantics, expressed
+//! as a **policy configuration over the shared executor** (DESIGN.md §9) —
+//! `PolicyKind::Peft` + `use_unified = false` (no merged launch) +
+//! `reserve_worst_case = true` (no paging, no preemption). The 450-line
+//! private drive loop this file used to carry is gone; the coordinator
+//! executes [`crate::coordinator::policy::PeftPolicy`]'s plans instead.
 //!
 //! Faithful policy properties (paper Section 4.2):
-//! * **Static padded batches** — inputs in a batch are padded to the batch
-//!   max; padding is charged as real compute (we materially pad the token
-//!   vectors before handing them to the backend).
-//! * **No continuous batching** — a batch runs to completion (every member
-//!   decodes to the batch-max new-token count) before the next one starts;
-//!   late arrivals wait.
-//! * **Serial multi-LoRA** — a batch serves one adapter; different adapters
-//!   are processed in separate passes ("PEFT can only apply LoRAs in a
-//!   serial for different configurations").
+//! * **Static padded batches** — prompts in a gang pad to the batch max and
+//!   train batches pad to their in-batch max; padding is charged as real
+//!   compute (the plan's `pad_to`/`pad_train` fields materialize it).
+//! * **No continuous batching** — a batch runs to completion before the
+//!   next one forms (`PeftPolicy` admits only into an empty engine); late
+//!   arrivals wait out the slowest member. (One refinement over the old
+//!   hand-rolled loop: a member that reaches its own `max_new_tokens`
+//!   releases its KV slot early instead of idling in the batch — the
+//!   batch-completion *admission gate*, which is what starves later
+//!   arrivals, is unchanged.)
+//! * **Serial multi-LoRA** — a gang serves one adapter; other adapters wait
+//!   for the next pass ("PEFT can only apply LoRAs in a serial for
+//!   different configurations").
 //! * **Small batch cap** — padding blows up memory, so the batch size is
-//!   capped (the paper's "CUDA out of memory" pressure).
+//!   capped (the paper's "CUDA out of memory" pressure); worst-case KV
+//!   reservation models the same pressure on the cache side.
 //! * **One trainer at a time**; fine-tuning and inference alternate at
-//!   *batch* granularity (PEFT has no token-level co-scheduling).
+//!   *step* granularity, bypassing the mutable capacity allocator — PEFT
+//!   has no co-scheduling, so its fine-tuning barely slows under load
+//!   (exactly the Figure-4 contrast).
 
 use anyhow::{anyhow, Result};
 
 use crate::baselines::{Capability, CapabilityRow, ServingSystem};
 use crate::coordinator::{
-    FinetuneJob, InferenceRequest, StepOutcome, TrainerPhase, TrainerState,
+    Coordinator, CoordinatorConfig, FinetuneJob, InferenceRequest, PolicyKind, StepOutcome,
 };
-use crate::engine::{argmax, Backend, DecodeRow, PrefillSeq, TrainSeq};
-use crate::kvcache::{CacheConfig, KvCacheManager};
+use crate::engine::Backend;
+use crate::kvcache::CacheConfig;
 use crate::metrics::RequestTrace;
-use std::collections::VecDeque;
 
 pub struct PeftLike {
+    inner: Coordinator,
     /// Max sequences per padded batch ("memory" cap).
     pub batch_cap: usize,
-    pub drop_after_s: f64,
-    queue: VecDeque<InferenceRequest>,
-    kv: KvCacheManager,
-    /// The batch currently being served, if any.
-    current: Option<Batch>,
-    trainer: Option<TrainerState>,
-    pub now_s: f64,
-    traces: Vec<RequestTrace>,
-    finetune_tokens: u64,
-    eval_tokens: u64,
-    /// Alternation flag: train batch vs inference batch.
-    train_turn: bool,
-}
-
-struct Member {
-    req: InferenceRequest,
-    kv_slot: usize,
-    generated: Vec<i32>,
-    trace: RequestTrace,
-    last_token_s: f64,
-}
-
-struct Batch {
-    members: Vec<Member>,
-    /// Padded decode horizon: every member decodes this many tokens.
-    target_new: usize,
-    prefilled: bool,
 }
 
 impl PeftLike {
     pub fn new(batch_cap: usize, cache_cfg: CacheConfig) -> Self {
-        Self {
-            batch_cap,
-            drop_after_s: 60.0,
-            queue: VecDeque::new(),
-            kv: KvCacheManager::new(cache_cfg),
-            current: None,
-            trainer: None,
-            now_s: 0.0,
-            traces: Vec::new(),
-            finetune_tokens: 0,
-            eval_tokens: 0,
-            train_turn: false,
-        }
-    }
-
-    fn form_batch(&mut self) -> Result<()> {
-        if self.current.is_some() || self.queue.is_empty() {
-            return Ok(());
-        }
-        // PEFT groups by adapter: take the front request's adapter and pull
-        // queued requests with the same adapter (serial multi-LoRA).
-        let adapter = self.queue.front().unwrap().adapter;
-        let mut members = Vec::new();
-        let mut i = 0;
-        while i < self.queue.len() && members.len() < self.batch_cap {
-            if self.queue[i].adapter == adapter {
-                let req = self.queue.remove(i).unwrap();
-                let cap = self.kv.config().slot_capacity;
-                let need = (req.prompt.len() + req.max_new_tokens).min(cap);
-                if !self.kv.can_admit(need) {
-                    self.queue.insert(i, req);
-                    break;
-                }
-                let slot = self.kv.allocate(req.id, need)?;
-                let trace = RequestTrace {
-                    arrival_s: req.arrival_s,
-                    input_tokens: req.prompt.len(),
-                    ..Default::default()
-                };
-                members.push(Member { req, kv_slot: slot, generated: vec![], trace, last_token_s: 0.0 });
-            } else {
-                i += 1;
-            }
-        }
-        if members.is_empty() {
-            return Ok(());
-        }
-        // Padding semantics: the whole batch decodes to the max target.
-        let target_new = members.iter().map(|m| m.req.max_new_tokens).max().unwrap();
-        self.current = Some(Batch { members, target_new, prefilled: false });
-        Ok(())
-    }
-
-    fn drop_stale(&mut self) {
-        let now = self.now_s;
-        let drop_after = self.drop_after_s;
-        let (keep, dropped): (VecDeque<_>, VecDeque<_>) = std::mem::take(&mut self.queue)
-            .into_iter()
-            .partition(|r| now - r.arrival_s <= drop_after);
-        for r in dropped {
-            self.traces.push(RequestTrace {
-                arrival_s: r.arrival_s,
-                input_tokens: r.prompt.len(),
-                failed: true,
-                ..Default::default()
-            });
-        }
-        self.queue = keep;
-    }
-
-    fn step_train(&mut self, backend: &mut dyn Backend) -> Result<StepOutcome> {
-        let mut out = StepOutcome::default();
-        let Some(t) = self.trainer.as_mut() else { return Ok(out) };
-        if t.done() {
-            return Ok(out);
-        }
-        let batch = t.peek_batch(t.job.per_device_batch);
-        if batch.is_empty() {
-            return Ok(out);
-        }
-        // PEFT pads the train batch to its max length too.
-        let max_len = batch.iter().map(|b| b.tokens.len()).max().unwrap();
-        let padded: Vec<TrainSeq> = batch
-            .iter()
-            .map(|b| {
-                let mut s = b.clone();
-                s.tokens.resize(max_len, 0);
-                s.labels.resize(max_len, -100);
-                s
-            })
-            .collect();
-        let (losses, c) = backend.train_step(&padded)?;
-        self.now_s += c.virt.max(c.wall);
-        let tokens: usize = batch.iter().map(|b| b.tokens.len()).sum();
-        let evaluating = t.phase == TrainerPhase::Evaluating;
-        if evaluating {
-            self.eval_tokens += tokens as u64;
-            out.eval_seqs = batch.len();
-        } else {
-            self.finetune_tokens += tokens as u64;
-            out.ft_seqs = batch.len();
-        }
-        if t.advance(batch.len(), &losses, tokens) {
-            let slot = t.job.adapter.max(0) as usize;
-            let (lr, step_no) = (t.job.lr, t.optim_steps + 1);
-            let c2 = backend.optim_step(&[slot], lr, step_no)?;
-            self.now_s += c2.virt.max(c2.wall);
-            t.optimizer_applied();
-            out.optimizer_steps += 1;
-        }
-        Ok(out)
+        let cfg = CoordinatorConfig {
+            policy: PolicyKind::Peft,
+            use_unified: false,
+            reserve_worst_case: true,
+            // PEFT does not bucket-truncate prompts; the slot capacity is
+            // the only bound (`PeftPolicy` admits worst-case only).
+            max_prompt_tokens: cache_cfg.slot_capacity,
+            max_prefill_batch: batch_cap,
+            ..Default::default()
+        };
+        Self { inner: Coordinator::new(cfg, cache_cfg), batch_cap }
     }
 }
 
@@ -180,151 +65,47 @@ impl ServingSystem for PeftLike {
     }
 
     fn submit(&mut self, req: InferenceRequest) {
-        self.queue.push_back(req);
+        self.inner.submit(req);
     }
 
     fn add_trainer(&mut self, job: FinetuneJob) -> Result<()> {
-        if self.trainer.as_ref().is_some_and(|t| !t.done()) {
+        if self.inner.trainers().iter().any(|t| !t.done()) {
             return Err(anyhow!("PEFT can only fine-tune one LoRA adapter at a time"));
         }
-        self.trainer = Some(TrainerState::new(job));
+        self.inner.add_trainer(job);
         Ok(())
     }
 
     fn step(&mut self, backend: &mut dyn Backend) -> Result<StepOutcome> {
-        self.drop_stale();
-        let mut out = StepOutcome::default();
-
-        // Coarse alternation between training and the inference batch.
-        let train_live = self.trainer.as_ref().is_some_and(|t| !t.done());
-        if train_live && (self.train_turn || (self.current.is_none() && self.queue.is_empty())) {
-            self.train_turn = false;
-            let o = self.step_train(backend)?;
-            if o.ft_seqs + o.eval_seqs > 0 {
-                return Ok(o);
-            }
-        } else {
-            self.train_turn = true;
-        }
-
-        self.form_batch()?;
-        let Some(batch) = self.current.as_mut() else {
-            out.idle = !train_live;
-            return Ok(out);
-        };
-
-        if !batch.prefilled {
-            // Padded prefill: every prompt padded to the batch max.
-            let max_prompt = batch.members.iter().map(|m| m.req.prompt.len()).max().unwrap();
-            let step_start = self.now_s;
-            let seqs: Vec<PrefillSeq> = batch
-                .members
-                .iter()
-                .map(|m| {
-                    let mut toks = m.req.prompt.clone();
-                    toks.resize(max_prompt, 0); // physical padding = real cost
-                    PrefillSeq { tokens: toks, adapter: m.req.adapter, kv_slot: m.kv_slot }
-                })
-                .collect();
-            let (logits, c) = backend.prefill(&seqs, &mut self.kv)?;
-            self.now_s += c.virt.max(c.wall);
-            for (m, lg) in batch.members.iter_mut().zip(&logits) {
-                m.trace.prefill_start_s = Some(step_start);
-                m.generated.push(argmax(lg));
-                m.trace.first_token_s = Some(self.now_s);
-                m.trace.output_tokens = 1;
-                m.last_token_s = self.now_s;
-            }
-            batch.prefilled = true;
-            out.prefilled_seqs = batch.members.len();
-            out.cost.virt = c.virt;
-            return Ok(out);
-        }
-
-        // Padded decode: ALL rows step until the slowest finishes.
-        let rows: Vec<DecodeRow> = batch
-            .members
-            .iter()
-            .map(|m| DecodeRow {
-                token: *m.generated.last().unwrap(),
-                adapter: m.req.adapter,
-                kv_slot: m.kv_slot,
-            })
-            .collect();
-        let (logits, c) = backend.decode(&rows, &mut self.kv)?;
-        self.now_s += c.virt.max(c.wall);
-        for (m, lg) in batch.members.iter_mut().zip(&logits) {
-            m.generated.push(argmax(lg));
-            // Only count real tokens toward the member's output.
-            if m.generated.len() <= m.req.max_new_tokens {
-                m.trace.output_tokens = m.generated.len();
-                m.trace.decode_latencies_s.push(self.now_s - m.last_token_s);
-            }
-            m.last_token_s = self.now_s;
-            out.decoded_tokens += 1;
-        }
-
-        let done = batch.members[0].generated.len() >= batch.target_new
-            || batch.members.iter().any(|m| {
-                self.kv.len(m.kv_slot) >= self.kv.config().slot_capacity
-            });
-        if done {
-            let finished = self.current.take().unwrap();
-            for mut m in finished.members {
-                m.trace.finish_s = Some(self.now_s);
-                self.kv.release(m.kv_slot)?;
-                out.completed_requests.push(m.req.id);
-                self.traces.push(m.trace);
-            }
-            self.train_turn = true;
-        }
-        Ok(out)
+        self.inner.step(backend)
     }
 
     fn now_s(&self) -> f64 {
-        self.now_s
+        self.inner.now_s
     }
 
     fn advance_clock(&mut self, to_s: f64) {
-        if to_s > self.now_s {
-            self.now_s = to_s;
-        }
+        self.inner.advance_clock(to_s);
     }
 
     fn quiescent(&self) -> bool {
-        self.queue.is_empty()
-            && self.current.is_none()
-            && self.trainer.as_ref().map(|t| t.done()).unwrap_or(true)
+        self.inner.quiescent()
     }
 
     fn drain_unfinished(&mut self) {
-        for r in std::mem::take(&mut self.queue) {
-            self.traces.push(RequestTrace {
-                arrival_s: r.arrival_s,
-                input_tokens: r.prompt.len(),
-                failed: true,
-                ..Default::default()
-            });
-        }
-        if let Some(b) = self.current.take() {
-            for mut m in b.members {
-                m.trace.failed = true;
-                let _ = self.kv.release(m.kv_slot);
-                self.traces.push(m.trace);
-            }
-        }
+        self.inner.drain_unfinished();
     }
 
     fn traces(&self) -> &[RequestTrace] {
-        &self.traces
+        &self.inner.traces
     }
 
     fn finetune_tokens(&self) -> u64 {
-        self.finetune_tokens
+        self.inner.finetune_tokens()
     }
 
     fn eval_tokens(&self) -> u64 {
-        self.eval_tokens
+        self.inner.eval_tokens()
     }
 
     fn capabilities(&self) -> CapabilityRow {
@@ -391,28 +172,53 @@ mod tests {
             max_new_tokens: max_new,
             eos_token: None,
             arrival_s: at,
+            slo: None,
         }
     }
 
     #[test]
-    fn batch_runs_to_completion_with_padding() {
+    fn batch_gates_admission_until_the_slowest_member_finishes() {
         let mut p = PeftLike::new(4, cache());
         let mut be = backend();
         p.submit(req(1, 0, 8, 2, 0.0));
-        p.submit(req(2, 0, 16, 10, 0.0)); // forces 10-step horizon for both
-        for _ in 0..50 {
+        p.submit(req(2, 0, 16, 10, 0.0)); // 10-step horizon gates the batch
+        let mut first_prefill = 0;
+        let mut second_prefill_at = None;
+        let mut finish_long = None;
+        for step in 0..100 {
             if p.quiescent() {
                 break;
             }
-            p.step(&mut be).unwrap();
+            if step == 1 {
+                // Arrives after the gang formed: must wait for the NEXT one.
+                p.submit(req(3, 0, 8, 2, 0.0));
+            }
+            let o = p.step(&mut be).unwrap();
+            if o.prefilled_seqs > 0 && first_prefill == 0 {
+                first_prefill = o.prefilled_seqs;
+            } else if o.prefilled_seqs > 0 && second_prefill_at.is_none() {
+                second_prefill_at = Some(p.now_s());
+            }
+            for id in &o.completed_requests {
+                if *id == 2 {
+                    finish_long = Some(p.now_s());
+                }
+            }
         }
-        assert_eq!(p.traces.len(), 2);
-        let short = p.traces.iter().find(|t| t.input_tokens == 8).unwrap();
-        let long = p.traces.iter().find(|t| t.input_tokens == 16).unwrap();
-        // Both finish at the same time: the short one waited for the long.
-        assert_eq!(short.finish_s, long.finish_s);
+        assert_eq!(first_prefill, 2, "the first gang holds both early arrivals");
+        assert_eq!(p.traces().len(), 3);
+        let short = p.traces().iter().find(|t| t.input_tokens == 8).unwrap();
+        let long = p.traces().iter().find(|t| t.input_tokens == 16).unwrap();
         assert_eq!(short.output_tokens, 2);
         assert_eq!(long.output_tokens, 10);
+        // Batch-to-completion: the second gang's prefill cannot start
+        // before the first gang's slowest member finished.
+        assert!(
+            second_prefill_at.unwrap() >= finish_long.unwrap(),
+            "second batch at {:?} must wait for the long member at {:?}",
+            second_prefill_at,
+            finish_long
+        );
     }
 
     #[test]
@@ -435,6 +241,49 @@ mod tests {
         }
         assert_eq!(batches_started, 2, "two serial single-adapter batches");
         assert_eq!(last_prefill, 1);
+    }
+
+    #[test]
+    fn train_and_infer_alternate_at_step_granularity() {
+        let mut p = PeftLike::new(4, cache());
+        let mut be = backend();
+        p.submit(req(1, 0, 8, 6, 0.0));
+        let ex = |i: usize| crate::coordinator::TrainExample {
+            tokens: vec![i as i32; 8],
+            labels: vec![i as i32; 8],
+        };
+        p.add_trainer(FinetuneJob {
+            id: 9,
+            adapter: 1,
+            train_set: (0..16).map(ex).collect(),
+            eval_set: vec![],
+            epochs: 1,
+            per_device_batch: 2,
+            grad_accum: 2,
+            lr: 1e-3,
+            eval_each_epoch: false,
+        })
+        .unwrap();
+        // No step may make progress on BOTH classes (PEFT has no
+        // token-level co-scheduling), and both classes must progress
+        // overall (strict alternation).
+        let mut train_steps = 0;
+        let mut infer_steps = 0;
+        for _ in 0..200 {
+            if p.quiescent() {
+                break;
+            }
+            let o = p.step(&mut be).unwrap();
+            let trained = o.ft_seqs + o.eval_seqs > 0;
+            let inferred = o.prefilled_seqs + o.decoded_tokens > 0;
+            assert!(!(trained && inferred), "PEFT must never co-schedule in one step");
+            train_steps += usize::from(trained);
+            infer_steps += usize::from(inferred);
+        }
+        assert!(p.quiescent());
+        assert!(train_steps >= 8, "trainer made progress ({train_steps})");
+        // One prefill step + five decode steps for a 6-token generation.
+        assert!(infer_steps >= 6, "inference made progress ({infer_steps})");
     }
 
     #[test]

@@ -38,6 +38,10 @@ impl SLoraLike {
         // path, and keeping it on the old policy is the on-demand-paging
         // ablation the figure harnesses compare against.
         cfg.reserve_worst_case = true;
+        // S-LoRA schedules FIFO with round-robin decode — exactly the
+        // FifoPolicy plan (DESIGN.md §9); its characteristic costs live in
+        // this wrapper, not in a private drive loop.
+        cfg.policy = crate::coordinator::PolicyKind::Fifo;
         Self {
             inner: Coordinator::new(cfg, cache_cfg),
             load_transform_s,
@@ -171,6 +175,7 @@ mod tests {
             max_new_tokens: 2,
             eos_token: None,
             arrival_s: 0.0,
+            slo: None,
         });
         for _ in 0..50 {
             if s.quiescent() {

@@ -101,6 +101,27 @@ impl CapacityAllocator {
         }
         self.ft_slots
     }
+
+    /// Feed the scheduler's live SLO headroom (DESIGN.md §9): the minimum
+    /// slack fraction the SLO-aware policy observed over decode gaps and
+    /// waiting deadlines this step. Unlike the EMA above — which only sees
+    /// latency after it has already degraded — this is the *distance to
+    /// the deadline itself*, so thin headroom cuts the budget before a
+    /// violation lands. Comfortable headroom is a no-op: recovery stays
+    /// with the calm-steps dynamics of [`Self::observe`].
+    pub fn observe_slack(&mut self, min_headroom_frac: f64) {
+        if min_headroom_frac < 0.25 {
+            self.calm_steps = 0;
+            self.ft_slots = if min_headroom_frac < 0.0 || self.ft_slots == 0 {
+                // Blown deadline parks; a parked budget stays parked —
+                // thin-but-positive headroom must never un-park it
+                // (recovery goes through observe()'s calm steps only).
+                0
+            } else {
+                (self.ft_slots / 2).max(1)
+            };
+        }
+    }
 }
 
 #[cfg(test)]
@@ -150,6 +171,32 @@ mod tests {
         }
         assert!(a.ft_budget() > 0, "mild pressure must not zero the budget");
         assert!(a.ft_budget() < 4, "mild pressure must shrink the budget");
+    }
+
+    #[test]
+    fn slack_cuts_budget_before_the_ema_sees_latency() {
+        let mut a = alloc();
+        assert_eq!(a.ft_budget(), 4);
+        // Thin-but-positive headroom halves (never zeroes) the budget even
+        // though the latency EMA has seen nothing yet.
+        a.observe_slack(0.2);
+        assert_eq!(a.ft_budget(), 2);
+        a.observe_slack(0.2);
+        a.observe_slack(0.2);
+        assert_eq!(a.ft_budget(), 1, "halving floors at one slot");
+        // A blown deadline parks fine-tuning entirely.
+        a.observe_slack(-0.1);
+        assert_eq!(a.ft_budget(), 0);
+        // Thin-but-positive headroom must NOT un-park a parked budget...
+        a.observe_slack(0.1);
+        assert_eq!(a.ft_budget(), 0);
+        // ...and comfortable headroom is a no-op; recovery is observe()'s job.
+        a.observe_slack(0.9);
+        assert_eq!(a.ft_budget(), 0);
+        for _ in 0..40 {
+            a.observe(0, Some(0.01));
+        }
+        assert_eq!(a.ft_budget(), 4);
     }
 
     #[test]

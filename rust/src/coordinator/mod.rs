@@ -1,20 +1,28 @@
 //! The unified coordinator — Loquetier's L3 contribution.
 //!
-//! A deterministic state machine over an abstract [`Backend`]: each call to
-//! [`Coordinator::step`] assembles one unified launch (Algorithm 1's slot
-//! layout: fine-tune ∥ prefill ∥ decode), executes it, routes the results
-//! (tokens to requests, losses to trainers, KV to the cache), and advances
-//! the run clock by the step's cost. Drivers differ only in how they feed
-//! arrivals and which backend they pass:
+//! A deterministic **plan/execute** state machine over an abstract
+//! [`Backend`] (DESIGN.md §9): each call to [`Coordinator::step`] snapshots
+//! a read-only [`policy::SchedView`], asks the configured
+//! [`policy::SchedulePolicy`] for a [`policy::StepPlan`] (admissions,
+//! chunked-prefill slices, decode window, preemption victims, fine-tune
+//! budget), then *executes* that plan as one unified launch (Algorithm 1's
+//! slot layout: fine-tune ∥ prefill ∥ decode), routes the results (tokens
+//! to requests, losses to trainers, KV to the cache, latency samples to
+//! the live SLO tracker), and advances the run clock by the step's cost.
+//! All scheduling judgement lives in the policy; this module only keeps
+//! the books. Drivers differ only in how they feed arrivals and which
+//! backend they pass:
 //!
-//! * real serving: tokio loop + `XlaBackend` (wall clock),
+//! * real serving: engine loop + `XlaBackend`/`NativeBackend` (wall clock),
 //! * figure harnesses: event loop + `SimBackend` (virtual clock).
 
 pub mod capacity;
+pub mod policy;
 pub mod request;
 pub mod trainer;
 
 pub use capacity::{CapacityAllocator, CapacityConfig};
+pub use policy::{PolicyKind, SchedulePolicy};
 pub use request::{ActiveRequest, FinetuneJob, InferenceRequest, Phase, TrainExample};
 pub use trainer::{TrainerPhase, TrainerState};
 
@@ -24,11 +32,17 @@ use anyhow::Result;
 
 use crate::engine::{argmax, Backend, DecodeRow, PrefillSeq, StepCost, TrainSeq};
 use crate::kvcache::{CacheConfig, KvCacheManager};
-use crate::metrics::{RequestTrace, SloSpec, ThroughputSeries};
+use crate::metrics::{RequestTrace, SloSpec, SloTracker, ThroughputSeries};
+
+use self::policy::{
+    ActiveView, KvView, QueuedView, SchedCfg, SchedView, StepCaps, StepPlan, TrainerView,
+};
 
 /// Scheduler configuration.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
+    /// Default SLO for requests that carry none of their own
+    /// ([`InferenceRequest::slo`]).
     pub slo: SloSpec,
     /// Give up on queued requests older than this (bounds sim length; the
     /// request is recorded as failed).
@@ -48,6 +62,12 @@ pub struct CoordinatorConfig {
     pub max_prefill_batch: usize,
     /// Cap on prompt tokens per prefill sequence (bucket-limited).
     pub max_prompt_tokens: usize,
+    /// Which scheduling policy plans each step (`--policy fifo|slo`).
+    pub policy: PolicyKind,
+    /// [`policy::SloAwarePolicy`] chunk size: at most this many prompt
+    /// tokens per prefill slice, so one long prompt cannot blow co-running
+    /// streams' TPOT (0 = never chunk; `FifoPolicy` never chunks).
+    pub prefill_chunk_tokens: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -60,6 +80,8 @@ impl Default for CoordinatorConfig {
             capacity: CapacityConfig::default(),
             max_prefill_batch: 4,
             max_prompt_tokens: 64,
+            policy: PolicyKind::Fifo,
+            prefill_chunk_tokens: 256,
         }
     }
 }
@@ -93,10 +115,12 @@ pub struct StepOutcome {
     pub idle: bool,
 }
 
-/// The unified serving+training coordinator.
+/// The unified serving+training coordinator (the plan *executor*).
 pub struct Coordinator {
     pub cfg: CoordinatorConfig,
     pub kv: KvCacheManager,
+    /// The scheduling brain: built from `cfg.policy` at construction.
+    policy: Box<dyn SchedulePolicy>,
     queue: VecDeque<InferenceRequest>,
     /// Preempted requests awaiting re-admission, oldest-by-arrival at the
     /// front. They outrank the arrival queue (every queued request arrived
@@ -123,16 +147,30 @@ pub struct Coordinator {
     /// Run-peak of `tokens_reserved_unused` (sampled after every step):
     /// the fragmentation headline the paging policy exists to shrink.
     kv_frag_peak: usize,
+    /// Live SLO attainment + per-adapter TTFT/TPOT histograms, fed as the
+    /// scheduler runs (server `stats` frame surfaces it).
+    slo_live: SloTracker,
     finetune_tokens: u64,
     eval_tokens: u64,
 }
 
 impl Coordinator {
     pub fn new(cfg: CoordinatorConfig, cache_cfg: CacheConfig) -> Self {
+        let policy = policy::build_policy(cfg.policy);
+        Self::with_policy(cfg, cache_cfg, policy)
+    }
+
+    /// Construct with an explicit (possibly custom) scheduling policy.
+    pub fn with_policy(
+        cfg: CoordinatorConfig,
+        cache_cfg: CacheConfig,
+        policy: Box<dyn SchedulePolicy>,
+    ) -> Self {
         let capacity = CapacityAllocator::new(cfg.capacity.clone());
         Self {
             cfg,
             kv: KvCacheManager::new(cache_cfg),
+            policy,
             queue: VecDeque::new(),
             preempted: VecDeque::new(),
             active: Vec::new(),
@@ -146,9 +184,31 @@ impl Coordinator {
             last_decode_id: None,
             preemptions_total: 0,
             kv_frag_peak: 0,
+            slo_live: SloTracker::default(),
             finetune_tokens: 0,
             eval_tokens: 0,
         }
+    }
+
+    /// Name of the active scheduling policy.
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Live SLO attainment + per-adapter latency tracker.
+    pub fn slo_live(&self) -> &SloTracker {
+        &self.slo_live
+    }
+
+    /// The SLO a given request is judged against.
+    fn effective_slo(&self, req_slo: Option<SloSpec>) -> SloSpec {
+        req_slo.unwrap_or(self.cfg.slo)
+    }
+
+    /// Record a terminal trace: attainment verdict first, then the trace.
+    fn finish_trace(&mut self, trace: RequestTrace, slo: SloSpec) {
+        self.slo_live.record_outcome(trace.attains(&slo));
+        self.traces.push(trace);
     }
 
     pub fn submit(&mut self, req: InferenceRequest) {
@@ -230,27 +290,33 @@ impl Coordinator {
     pub fn cancel(&mut self, id: u64) -> Result<bool> {
         if let Some(pos) = self.queue.iter().position(|r| r.id == id) {
             let r = self.queue.remove(pos).expect("position is in range");
-            self.traces.push(RequestTrace {
-                arrival_s: r.arrival_s,
-                input_tokens: r.prompt.len(),
-                failed: true,
-                ..Default::default()
-            });
+            let slo = self.effective_slo(r.slo);
+            self.finish_trace(
+                RequestTrace {
+                    arrival_s: r.arrival_s,
+                    input_tokens: r.prompt.len(),
+                    failed: true,
+                    ..Default::default()
+                },
+                slo,
+            );
             return Ok(true);
         }
         if let Some(pos) = self.preempted.iter().position(|a| a.req.id == id) {
             // Preempted requests hold no KV slot (released at preemption).
             let a = self.preempted.remove(pos).expect("position is in range");
+            let slo = self.effective_slo(a.req.slo);
             let mut t = a.trace;
             t.failed = true;
-            self.traces.push(t);
+            self.finish_trace(t, slo);
             return Ok(true);
         }
         if let Some(pos) = self.active.iter().position(|a| a.req.id == id) {
             let mut a = self.active.swap_remove(pos);
             a.trace.failed = true;
             self.kv.release(a.kv_slot)?;
-            self.traces.push(a.trace);
+            let slo = self.effective_slo(a.req.slo);
+            self.finish_trace(a.trace, slo);
             return Ok(true);
         }
         Ok(false)
@@ -289,12 +355,16 @@ impl Coordinator {
         let mut ids = Vec::with_capacity(dropped.len());
         for r in dropped {
             ids.push(r.id);
-            self.traces.push(RequestTrace {
-                arrival_s: r.arrival_s,
-                input_tokens: r.prompt.len(),
-                failed: true,
-                ..Default::default()
-            });
+            let slo = self.effective_slo(r.slo);
+            self.finish_trace(
+                RequestTrace {
+                    arrival_s: r.arrival_s,
+                    input_tokens: r.prompt.len(),
+                    failed: true,
+                    ..Default::default()
+                },
+                slo,
+            );
         }
         self.queue = keep;
         ids
@@ -302,51 +372,129 @@ impl Coordinator {
 
     /// Initial block claim for a prompt of `prompt_len` under the current
     /// reservation policy (prompt-only for on-demand paging, worst case for
-    /// the ablation).
+    /// the ablation). The claim clamps at the slot capacity — a request
+    /// whose full generation cannot fit is admitted with a whole slot and
+    /// completes early on slot overflow (the PEFT baseline's old
+    /// behaviour; the lazy append path claims blocks past the initial
+    /// reservation). `policy::admission_need` mirrors this exactly.
     fn admission_need(&self, prompt_len: usize, max_new: usize) -> usize {
         let prompt = prompt_len.min(self.cfg.max_prompt_tokens);
-        if self.cfg.reserve_worst_case {
+        let need = if self.cfg.reserve_worst_case {
             prompt + max_new
         } else {
             prompt
+        };
+        need.min(self.kv.config().slot_capacity)
+    }
+
+    /// Snapshot the scheduler-visible state for the policy (DESIGN.md §9).
+    /// Plain owned data: the policy can neither mutate the coordinator nor
+    /// reach the backend, and views are replayable as test fixtures.
+    fn build_view(&self, caps: StepCaps) -> SchedView {
+        let kv_stats = self.kv.stats();
+        let kv_cfg = self.kv.config();
+        let queued_view = |r: &InferenceRequest| QueuedView {
+            id: r.id,
+            adapter: r.adapter,
+            prompt_len: r.prompt.len(),
+            max_new_tokens: r.max_new_tokens,
+            arrival_s: r.arrival_s,
+            slo: r.slo,
+        };
+        SchedView {
+            now_s: self.now_s,
+            cfg: SchedCfg {
+                max_prompt_tokens: self.cfg.max_prompt_tokens,
+                reserve_worst_case: self.cfg.reserve_worst_case,
+                use_unified: self.cfg.use_unified,
+                max_prefill_batch: self.cfg.max_prefill_batch,
+                slo: self.cfg.slo,
+                prefill_chunk_tokens: self.cfg.prefill_chunk_tokens,
+            },
+            caps,
+            ft_budget: self.capacity.ft_budget(),
+            last_decode_id: self.last_decode_id,
+            kv: KvView {
+                free_slots: kv_stats.slots_total - kv_stats.slots_used,
+                free_blocks: kv_stats.blocks_total - kv_stats.blocks_used,
+                block_tokens: kv_cfg.block_tokens,
+                slot_capacity: kv_cfg.slot_capacity,
+            },
+            queue: self.queue.iter().map(queued_view).collect(),
+            preempted: self.preempted.iter().map(|a| queued_view(&a.req)).collect(),
+            active: self
+                .active
+                .iter()
+                .map(|a| ActiveView {
+                    id: a.req.id,
+                    adapter: a.req.adapter,
+                    arrival_s: a.req.arrival_s,
+                    phase: a.phase,
+                    prompt_len: a.req.prompt.len(),
+                    prefill_pos: a.prefill_pos,
+                    prefill_started: a.trace.prefill_start_s.is_some(),
+                    generated: a.generated.len(),
+                    max_new_tokens: a.req.max_new_tokens,
+                    kv_len: self.kv.len(a.kv_slot),
+                    kv_blocks: self.kv.blocks(a.kv_slot),
+                    last_token_s: a.last_token_s,
+                    slo: a.req.slo,
+                })
+                .collect(),
+            trainers: self
+                .trainers
+                .iter()
+                .map(|t| TrainerView {
+                    done: t.done(),
+                    per_device_batch: t.job.per_device_batch,
+                })
+                .collect(),
         }
     }
 
-    fn admit(&mut self) {
-        // Preempted requests first: they are the oldest inference work by
-        // arrival (admission is FIFO, so everything still queued arrived
-        // after them). A front that does not fit blocks ALL admission —
-        // admitting younger work over it would re-starve exactly the
-        // request preemption already penalized.
-        while let Some(front) = self.preempted.front() {
-            // The recompute context is NOT re-truncated to
-            // max_prompt_tokens: output transparency (DESIGN.md §8)
-            // requires prefilling exactly the first-admission prompt plus
-            // every generated token — dropping its head would change the
-            // resumed logits. The length is already bounded: a request is
-            // preempted only while it can still decode, so the folded
-            // context is at most slot_capacity tokens (and at most the
-            // truncated-prompt + max_new bound `request_fits` checks).
-            let need = front.req.prompt.len();
-            if !self.kv.can_admit(need) {
-                return;
+    /// Apply a plan's admissions: preempted fronts first (full folded
+    /// context, never re-truncated — output transparency, DESIGN.md §8),
+    /// then the planned queue ids in plan order. The shipped policies plan
+    /// against the same ledger counters, so these allocations cannot fail
+    /// — but a custom policy's infeasible admission degrades gracefully
+    /// (the request stays queued for a later step; debug builds assert).
+    fn apply_admissions(&mut self, plan: &StepPlan) {
+        for _ in 0..plan.admit_preempted {
+            let Some(mut a) = self.preempted.pop_front() else { break };
+            let need = a.req.prompt.len();
+            match self.kv.allocate(a.req.id, need) {
+                Ok(slot) => {
+                    a.kv_slot = slot;
+                    a.phase = Phase::Admitted;
+                    self.active.push(a);
+                }
+                Err(_) => {
+                    // Infeasible plan: put the front back and stop — the
+                    // prefix rule means nothing behind it may enter either.
+                    debug_assert!(false, "policy planned an unallocatable resume");
+                    self.preempted.push_front(a);
+                    return;
+                }
             }
-            let mut a = self.preempted.pop_front().unwrap();
-            let slot = self
-                .kv
-                .allocate(a.req.id, need)
-                .expect("can_admit checked allocation");
-            a.kv_slot = slot;
-            a.phase = Phase::Admitted;
-            self.active.push(a);
         }
-        loop {
-            let Some(front) = self.queue.front() else { break };
-            let need = self.admission_need(front.prompt.len(), front.max_new_tokens);
+        for &id in &plan.admit_queue {
+            // FIFO plans admit the queue front-first: try the O(1) path
+            // before scanning (SLO-aware plans admit in deadline order).
+            let pos = if self.queue.front().is_some_and(|r| r.id == id) {
+                0
+            } else {
+                let Some(p) = self.queue.iter().position(|r| r.id == id) else { continue };
+                p
+            };
+            let mut req = self.queue.remove(pos).expect("position is in range");
+            let need = self.admission_need(req.prompt.len(), req.max_new_tokens);
             if !self.kv.can_admit(need) {
-                break;
+                // Infeasible plan from a custom policy: leave the request
+                // where it was instead of killing the engine loop.
+                debug_assert!(false, "policy planned an unallocatable admission");
+                self.queue.insert(pos, req);
+                continue;
             }
-            let mut req = self.queue.pop_front().unwrap();
             if req.prompt.len() > self.cfg.max_prompt_tokens {
                 // Bucket-limited: keep the prompt tail (recency matters for
                 // generation) — the paper's FlexLLM-like 1024-token cap is
@@ -362,27 +510,15 @@ impl Coordinator {
         }
     }
 
-    /// Preempt the youngest-by-arrival active request: release its KV and
-    /// park it at the FRONT of the preempted deque with the tokens it has
-    /// generated folded into its prompt — on re-admission one prefill
-    /// recomputes the KV and generation continues (recompute beats a swap
-    /// path here: the CPU arena has no cheaper tier to swap to, and the
-    /// folded prefill is a fraction of a decode step's cost). Returns the
-    /// preempted id, or `None` if nothing is active.
-    fn preempt_youngest(&mut self) -> Result<Option<u64>> {
-        let Some(idx) = self
-            .active
-            .iter()
-            .enumerate()
-            .max_by(|(_, x), (_, y)| {
-                x.req
-                    .arrival_s
-                    .total_cmp(&y.req.arrival_s)
-                    .then(x.req.id.cmp(&y.req.id))
-            })
-            .map(|(i, _)| i)
-        else {
-            return Ok(None);
+    /// Preempt one active request by id: release its KV and park it in the
+    /// preempted deque with the tokens it has generated folded into its
+    /// prompt — on re-admission one prefill recomputes the KV and
+    /// generation continues (recompute beats a swap path here: the CPU
+    /// arena has no cheaper tier to swap to, and the folded prefill is a
+    /// fraction of a decode step's cost).
+    fn preempt_by_id(&mut self, id: u64) -> Result<bool> {
+        let Some(idx) = self.active.iter().position(|a| a.req.id == id) else {
+            return Ok(false);
         };
         let mut a = self.active.swap_remove(idx);
         self.kv.release(a.kv_slot)?;
@@ -391,8 +527,9 @@ impl Coordinator {
         a.folded = a.generated.len();
         a.preemptions += 1;
         a.phase = Phase::Queued;
+        // The recompute prefill rebuilds KV for the whole folded context.
+        a.prefill_pos = 0;
         self.preemptions_total += 1;
-        let id = a.req.id;
         // Ordered insert keeps the deque oldest-first. (Blind push_front is
         // not enough: a victim preempted while an older one is still stuck
         // waiting would land ahead of it and steal the blocks it is
@@ -409,61 +546,53 @@ impl Coordinator {
             })
             .unwrap_or(self.preempted.len());
         self.preempted.insert(pos, a);
-        Ok(Some(id))
+        Ok(true)
     }
 
-    /// Assemble and run one step. `backend` supplies capacities and costs.
+    /// Plan and run one step. `backend` supplies capacities and costs; the
+    /// configured [`SchedulePolicy`] supplies every scheduling decision.
     pub fn step(&mut self, backend: &mut dyn Backend) -> Result<StepOutcome> {
         let mut out = StepOutcome::default();
         out.dropped_requests = self.drop_stale();
-        self.admit();
 
-        // --- Select work ---------------------------------------------------
-        let (ft_cap, pf_cap, dec_cap) = backend
-            .unified_capacity()
+        // --- Plan ----------------------------------------------------------
+        let unified_caps = backend.unified_capacity();
+        let (ft_cap, pf_cap, dec_cap) = unified_caps
             .unwrap_or((0, self.cfg.max_prefill_batch, backend.max_decode_batch()));
+        let caps = StepCaps {
+            ft: ft_cap,
+            pf: pf_cap,
+            dec: dec_cap,
+            unified_entry: unified_caps.is_some(),
+            prefill_continuation: backend.supports_prefill_continuation(),
+        };
+        let view = self.build_view(caps);
+        let plan = self.policy.plan(&view);
 
-        // Decode rows: fairness rotation keyed on stable request ids (a
-        // position-based cursor skips or double-serves neighbours whenever
-        // a completion's swap_remove reshuffles the active list), with a
-        // block reservation per row — on-demand paging can run out of
-        // blocks mid-generation, and the out-of-blocks row triggers
-        // preempt-and-recompute instead of a mid-launch error.
+        // --- Apply the plan ------------------------------------------------
+        self.apply_admissions(&plan);
+        for &id in &plan.preempt {
+            if self.preempt_by_id(id)? {
+                out.preempted_requests.push(id);
+            }
+        }
+
+        // Decode rows: the policy guaranteed a feasible next-token block
+        // per planned row (the reservation IS the claim, so a selected
+        // launch can never die on blocks mid-flight); a row that still
+        // fails here is a policy bug and is dropped rather than crashed on.
         let mut dec_idx: Vec<usize> = Vec::new();
-        'select: loop {
-            let mut decoding: Vec<(u64, usize)> = self
-                .active
-                .iter()
-                .enumerate()
-                .filter(|(_, a)| a.phase == Phase::Decoding)
-                .map(|(i, a)| (a.req.id, i))
-                .collect();
-            if decoding.is_empty() || dec_cap == 0 {
-                break;
+        for &id in &plan.decode {
+            let Some(i) = self.active.iter().position(|a| a.req.id == id) else { continue };
+            debug_assert_eq!(self.active[i].phase, Phase::Decoding);
+            if !self.kv.reserve_decode_block(self.active[i].kv_slot) {
+                debug_assert!(false, "policy planned an unreservable decode row");
+                continue;
             }
-            decoding.sort_unstable_by_key(|&(id, _)| id);
-            if let Some(last) = self.last_decode_id {
-                let start = decoding.partition_point(|&(id, _)| id <= last) % decoding.len();
-                decoding.rotate_left(start);
-            }
-            decoding.truncate(dec_cap);
-            for &(_, i) in &decoding {
-                if !self.kv.reserve_decode_block(self.active[i].kv_slot) {
-                    // Out of blocks: the youngest active request yields.
-                    // Restart selection — the victim may have been in this
-                    // window, and its freed blocks change what fits.
-                    match self.preempt_youngest()? {
-                        Some(id) => {
-                            out.preempted_requests.push(id);
-                            continue 'select;
-                        }
-                        None => break 'select,
-                    }
-                }
-            }
-            self.last_decode_id = decoding.last().map(|&(id, _)| id);
-            dec_idx = decoding.into_iter().map(|(_, i)| i).collect();
-            break;
+            dec_idx.push(i);
+        }
+        if !plan.decode.is_empty() {
+            self.last_decode_id = plan.decode.last().copied();
         }
         let dec_rows: Vec<DecodeRow> = dec_idx
             .iter()
@@ -477,33 +606,35 @@ impl Coordinator {
             })
             .collect();
 
-        // Prefill sequences: admitted requests, oldest first.
-        let mut pf_idx: Vec<usize> = (0..self.active.len())
-            .filter(|&i| self.active[i].phase == Phase::Admitted)
-            .collect();
-        pf_idx.truncate(pf_cap);
-        let pf_seqs: Vec<PrefillSeq> = pf_idx
-            .iter()
-            .map(|&i| {
-                let a = &self.active[i];
-                PrefillSeq {
-                    tokens: a.req.prompt.clone(),
-                    adapter: a.req.adapter,
-                    kv_slot: a.kv_slot,
-                }
-            })
-            .collect();
+        // Prefill slices: chunked policies hand out partial prompts; a
+        // slice that covers the rest of the prompt is the final chunk (and
+        // the only one whose logits become a token). `pad_to` physically
+        // pads the slice (PEFT's padded batches: padding is real compute).
+        let mut pf_items: Vec<(usize, usize)> = Vec::new(); // (active idx, consumed)
+        let mut pf_seqs: Vec<PrefillSeq> = Vec::new();
+        for sl in &plan.prefill {
+            let Some(i) = self.active.iter().position(|a| a.req.id == sl.id) else { continue };
+            let a = &self.active[i];
+            let start = a.prefill_pos;
+            let end = (start + sl.tokens).min(a.req.prompt.len());
+            if end <= start {
+                continue;
+            }
+            let mut toks = a.req.prompt[start..end].to_vec();
+            if sl.pad_to > toks.len() {
+                toks.resize(sl.pad_to, 0);
+            }
+            pf_items.push((i, end - start));
+            pf_seqs.push(PrefillSeq { tokens: toks, adapter: a.req.adapter, kv_slot: a.kv_slot });
+        }
 
-        // Fine-tune sequences: capacity-gated, round-robin across trainers.
-        let ft_budget = if self.cfg.use_unified {
-            self.capacity.ft_budget().min(ft_cap)
-        } else {
-            self.capacity.ft_budget()
-        };
+        // Fine-tune sequences: plan-budgeted, round-robin across trainers.
         let mut ft_seqs: Vec<TrainSeq> = Vec::new();
-        let mut ft_owners: Vec<(usize, usize)> = Vec::new(); // (trainer, n_seqs)
-        if ft_budget > 0 {
-            let mut remaining = ft_budget;
+        // (trainer, n_seqs, real tokens) — token accounting uses the
+        // unpadded lengths even when the batch is physically padded.
+        let mut ft_owners: Vec<(usize, usize, usize)> = Vec::new();
+        if plan.ft_budget > 0 {
+            let mut remaining = plan.ft_budget;
             for (ti, t) in self.trainers.iter().enumerate() {
                 if t.done() || remaining == 0 {
                     continue;
@@ -513,8 +644,18 @@ impl Coordinator {
                     continue;
                 }
                 remaining -= batch.len();
-                ft_owners.push((ti, batch.len()));
+                let tokens: usize = batch.iter().map(|s| s.tokens.len()).sum();
+                ft_owners.push((ti, batch.len(), tokens));
                 ft_seqs.extend(batch);
+            }
+        }
+        if plan.pad_train && !ft_seqs.is_empty() {
+            // PEFT semantics: the whole train batch pads to its max length
+            // (pad labels are ignored by the loss; pad tokens are charged).
+            let maxlen = ft_seqs.iter().map(|s| s.tokens.len()).max().unwrap_or(0);
+            for s in &mut ft_seqs {
+                s.tokens.resize(maxlen, 0);
+                s.labels.resize(maxlen, -100);
             }
         }
 
@@ -539,7 +680,7 @@ impl Coordinator {
         let step_start = self.now_s;
         let mut cost = StepCost::default();
         let (ft_losses, pf_logits, dec_logits);
-        if self.cfg.use_unified && backend.unified_capacity().is_some() {
+        if self.cfg.use_unified && caps.unified_entry {
             let (u, c) = backend.unified(&ft_seqs, &pf_seqs, &dec_rows, &mut self.kv)?;
             cost.add(c);
             ft_losses = u.ft_losses;
@@ -574,10 +715,8 @@ impl Coordinator {
         // --- Route results ---------------------------------------------------
         // Fine-tune losses -> trainers; optimizer when accumulation is due.
         let mut off = 0;
-        for &(ti, n) in &ft_owners {
+        for &(ti, n, tokens) in &ft_owners {
             let losses = &ft_losses[off..off + n];
-            let seqs = &ft_seqs[off..off + n];
-            let tokens: usize = seqs.iter().map(|s| s.tokens.len()).sum();
             let evaluating = self.trainers[ti].phase == TrainerPhase::Evaluating;
             if evaluating {
                 self.eval_tokens += tokens as u64;
@@ -607,17 +746,26 @@ impl Coordinator {
         let mut dec_lat_sum = 0.0f64;
         let mut dec_lat_n = 0usize;
 
-        // Prefill results: one new token per sequence. For a fresh request
-        // that is its first token; for a preempted request resuming, the
-        // recompute prefill produces the NEXT token of an already-running
-        // stream — the gap since its last token is a decode latency (the
-        // honest accounting of the preemption penalty), not a new TTFT.
-        for (k, &i) in pf_idx.iter().enumerate() {
+        // Prefill results. An intermediate chunk only advances the cursor
+        // (its last-token logits are not a sampled token — the next chunk's
+        // context continues past it); the FINAL chunk emits one new token.
+        // For a fresh request that is its first token; for a preempted
+        // request resuming, the recompute prefill produces the NEXT token
+        // of an already-running stream — the gap since its last token is a
+        // decode latency (the honest accounting of the preemption
+        // penalty), not a new TTFT.
+        for (k, &(i, consumed)) in pf_items.iter().enumerate() {
             let a = &mut self.active[i];
-            let resumed = !a.generated.is_empty();
             if a.trace.prefill_start_s.is_none() {
+                // Waiting-SLO clock stops at the first scheduled chunk.
                 a.trace.prefill_start_s = Some(step_start);
             }
+            a.prefill_pos += consumed;
+            out.prefilled_seqs += 1;
+            if a.prefill_pos < a.req.prompt.len() {
+                continue; // chunk done, prompt not: stays Admitted
+            }
+            let resumed = !a.generated.is_empty();
             let tok = argmax(&pf_logits[k]);
             a.generated.push(tok);
             out.emitted_tokens.push((a.req.id, tok));
@@ -626,13 +774,14 @@ impl Coordinator {
                 a.trace.decode_latencies_s.push(gap);
                 dec_lat_sum += gap;
                 dec_lat_n += 1;
+                self.slo_live.record_tpot(a.req.adapter, gap);
             } else {
                 a.trace.first_token_s = Some(step_end);
+                self.slo_live.record_ttft(a.req.adapter, step_end - a.req.arrival_s);
             }
             a.trace.output_tokens = a.generated.len();
             a.last_token_s = step_end;
             a.phase = Phase::Decoding;
-            out.prefilled_seqs += 1;
             self.decode_series.record(step_end, 1.0);
         }
 
@@ -647,6 +796,7 @@ impl Coordinator {
             a.trace.decode_latencies_s.push(gap);
             dec_lat_sum += gap;
             dec_lat_n += 1;
+            self.slo_live.record_tpot(a.req.adapter, gap);
             a.last_token_s = step_end;
             out.decoded_tokens += 1;
             self.decode_series.record(step_end, 1.0);
@@ -664,7 +814,8 @@ impl Coordinator {
                 self.kv.release(a.kv_slot)?;
                 out.completed_requests.push(a.req.id);
                 out.completed_outputs.push((a.req.id, std::mem::take(&mut a.generated)));
-                self.traces.push(a.trace);
+                let slo = self.effective_slo(a.req.slo);
+                self.finish_trace(a.trace, slo);
             } else {
                 j += 1;
             }
@@ -689,6 +840,11 @@ impl Coordinator {
             self.queue.len() + self.preempted.len() + self.pending_prefill_count(),
             decode_latency,
         );
+        // SLO-aware policies also report the live deadline headroom they
+        // planned against — real slack, not just a latency EMA.
+        if let Some(h) = plan.slo_headroom {
+            self.capacity.observe_slack(h);
+        }
 
         out.cost = cost;
         Ok(out)
@@ -709,24 +865,30 @@ impl Coordinator {
     /// Harvest traces of still-unfinished requests as failures (end of run).
     pub fn drain_unfinished(&mut self) {
         for r in std::mem::take(&mut self.queue) {
-            self.traces.push(RequestTrace {
-                arrival_s: r.arrival_s,
-                input_tokens: r.prompt.len(),
-                failed: true,
-                ..Default::default()
-            });
+            let slo = self.effective_slo(r.slo);
+            self.finish_trace(
+                RequestTrace {
+                    arrival_s: r.arrival_s,
+                    input_tokens: r.prompt.len(),
+                    failed: true,
+                    ..Default::default()
+                },
+                slo,
+            );
         }
         for a in std::mem::take(&mut self.preempted) {
             // No KV to release: a preempted request's slot was freed at
             // preemption time.
+            let slo = self.effective_slo(a.req.slo);
             let mut t = a.trace;
             t.failed = true;
-            self.traces.push(t);
+            self.finish_trace(t, slo);
         }
         for a in std::mem::take(&mut self.active) {
+            let slo = self.effective_slo(a.req.slo);
             let mut t = a.trace;
             t.failed = true;
-            self.traces.push(t);
+            self.finish_trace(t, slo);
             let _ = self.kv.release(a.kv_slot);
         }
     }
@@ -796,6 +958,7 @@ mod tests {
             max_new_tokens: max_new,
             eos_token: None,
             arrival_s: at,
+            slo: None,
         }
     }
 
@@ -1146,6 +1309,84 @@ mod tests {
         }
         assert!(c.quiescent());
         assert!(c.traces.iter().all(|t| !t.failed));
+    }
+
+    #[test]
+    fn slo_policy_chunks_prefill_and_streams_transparently() {
+        // A 20-token prompt under an 8-token chunk takes three slices
+        // (8 + 8 + 4); only the final slice may emit a token, and the
+        // incremental stream must still equal the final output exactly.
+        let mut c = Coordinator::new(
+            CoordinatorConfig {
+                policy: PolicyKind::SloAware,
+                prefill_chunk_tokens: 8,
+                max_prompt_tokens: 32,
+                ..Default::default()
+            },
+            CacheConfig {
+                num_slots: 8,
+                slot_capacity: 96,
+                block_tokens: 16,
+                total_blocks: 48,
+                num_layers: 2,
+                token_elems: 16,
+            },
+        );
+        let mut be = backend();
+        c.submit(req(1, 0, 20, 5, 0.0));
+        let mut emitted = Vec::new();
+        let mut outputs = Vec::new();
+        let mut pf_slices = 0;
+        for _ in 0..100 {
+            if c.quiescent() {
+                break;
+            }
+            let o = c.step(&mut be).unwrap();
+            pf_slices += o.prefilled_seqs;
+            emitted.extend(o.emitted_tokens.iter().map(|&(_, t)| t));
+            outputs.extend(o.completed_outputs);
+            if o.idle {
+                break;
+            }
+        }
+        assert!(c.quiescent());
+        assert_eq!(pf_slices, 3, "20-token prompt under chunk 8 takes 3 slices");
+        assert_eq!(outputs.len(), 1);
+        let (_, full) = &outputs[0];
+        assert_eq!(full.len(), 5);
+        assert_eq!(&emitted, full, "intermediate chunks must emit nothing");
+        let t = &c.traces[0];
+        assert!(!t.failed);
+        assert_eq!(t.output_tokens, 5);
+        // The live tracker saw the whole lifecycle.
+        assert_eq!(c.slo_live().finished(), 1);
+        assert_eq!(c.slo_live().attainment(), 1.0);
+        assert!(c.slo_live().summary(0).is_some(), "ttft/tpot samples recorded");
+    }
+
+    #[test]
+    fn per_request_slo_overrides_the_default_in_the_tracker() {
+        // An impossible per-request deadline (0 s waiting budget) fails
+        // its own SLO even though the run-level default would pass.
+        let mut c = coordinator();
+        let mut be = backend();
+        let hopeless = SloSpec {
+            max_waiting_s: 0.0,
+            mean_decode_latency_s: 1e9,
+            max_decode_latency_s: 1e9,
+        };
+        c.submit(InferenceRequest { slo: Some(hopeless), ..req(1, 0, 8, 3, 0.0) });
+        c.submit(req(2, 0, 8, 3, 0.0));
+        c.advance_clock(0.5); // id 1's waiting budget is already blown
+        drive(&mut c, &mut be, 200);
+        assert!(c.quiescent());
+        assert_eq!(c.slo_live().finished(), 2);
+        assert!(
+            (c.slo_live().attainment() - 0.5).abs() < 1e-12,
+            "one of two met its own SLO: {}",
+            c.slo_live().attainment()
+        );
+        assert!(c.traces.iter().all(|t| !t.failed), "SLO misses are not failures");
     }
 
     #[test]

@@ -1,0 +1,1132 @@
+//! The scheduler policy layer: plan/execute split (DESIGN.md §9).
+//!
+//! [`Coordinator::step`](crate::coordinator::Coordinator::step) no longer
+//! decides anything itself. Each step it assembles a read-only [`SchedView`]
+//! (queue, preempted deque, active set, KV ledger counters, backend
+//! capacities), hands it to a [`SchedulePolicy`], and *executes* the
+//! returned [`StepPlan`] verbatim — admissions, preemption victims, the
+//! decode window, chunked-prefill slices and the fine-tune budget are all
+//! policy decisions, and policies are plain functions of the view: unit-
+//! testable with hand-built fixtures, no backend anywhere.
+//!
+//! Three first-class policies ship:
+//!
+//! * [`FifoPolicy`] — the pre-refactor behaviour, bit-for-bit: FIFO
+//!   admission, id-keyed round-robin decode rotation, youngest-victim
+//!   preemption, whole-prompt prefills, the capacity allocator's fine-tune
+//!   budget taken as-is.
+//! * [`SloAwarePolicy`] — deadlines move *into* the scheduler: admission is
+//!   ordered by waiting-deadline slack (EDF), the decode window by TPOT
+//!   urgency, long prefills are **chunked** across steps so one long prompt
+//!   cannot blow co-running streams' max-TPOT bound (every chunk rides the
+//!   same merged ft ∥ pf ∥ dec launch), and the fine-tune budget shrinks
+//!   with live SLO headroom (fed back to the capacity allocator as real
+//!   slack, not just a latency EMA).
+//! * [`PeftPolicy`] — the PEFT baseline as a policy configuration: serial
+//!   single-adapter gang batches (padded, batch-to-completion admission
+//!   gate), strict per-step train/infer alternation, padded train batches.
+//!
+//! Plan feasibility is the policy's contract: every admission, reservation
+//! and preemption in a plan must be consistent with the view's KV counters
+//! (the executor re-checks defensively but does not repair bad plans). The
+//! [`KvSim`] helper tracks the hypothetical ledger so policies get this
+//! right by construction.
+
+use crate::coordinator::request::Phase;
+use crate::metrics::SloSpec;
+
+/// Which scheduling policy a coordinator runs (`--policy fifo|slo`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Pre-refactor behaviour (the default).
+    Fifo,
+    /// Deadline-slack admission + chunked prefill + headroom-driven FT.
+    SloAware,
+    /// The PEFT baseline's batch semantics (used by `baselines::PeftLike`).
+    Peft,
+}
+
+// ---------------------------------------------------------------------------
+// The read-only view
+// ---------------------------------------------------------------------------
+
+/// Per-step capacities the backend offers.
+#[derive(Debug, Clone, Copy)]
+pub struct StepCaps {
+    /// Fine-tune sequences per unified launch (0 when no unified entry).
+    pub ft: usize,
+    /// Prefill sequences per launch.
+    pub pf: usize,
+    /// Decode rows per launch.
+    pub dec: usize,
+    /// Whether the backend compiled a unified entry at all.
+    pub unified_entry: bool,
+    /// Whether the backend can continue a prefill from existing KV
+    /// (`Backend::supports_prefill_continuation`). Chunking is only
+    /// planned when true — the AOT XLA prefill entries restart RoPE at
+    /// position 0 and take no cache input, so slicing a prompt there
+    /// would silently corrupt every later token.
+    pub prefill_continuation: bool,
+}
+
+/// KV-ledger counters a policy plans against.
+#[derive(Debug, Clone, Copy)]
+pub struct KvView {
+    pub free_slots: usize,
+    pub free_blocks: usize,
+    pub block_tokens: usize,
+    pub slot_capacity: usize,
+}
+
+impl KvView {
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+}
+
+/// A queued (or preempted-awaiting-resume) request, as the policy sees it.
+#[derive(Debug, Clone, Copy)]
+pub struct QueuedView {
+    pub id: u64,
+    pub adapter: i32,
+    /// Current prompt length. For preempted requests this is the *folded*
+    /// recompute context (original prompt + generated-so-far) and must be
+    /// admitted un-truncated (DESIGN.md §8).
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+    pub arrival_s: f64,
+    /// Per-request SLO (None = the coordinator default applies).
+    pub slo: Option<SloSpec>,
+}
+
+/// An active (admitted or decoding) request, as the policy sees it.
+#[derive(Debug, Clone, Copy)]
+pub struct ActiveView {
+    pub id: u64,
+    pub adapter: i32,
+    pub arrival_s: f64,
+    pub phase: Phase,
+    /// Current (truncated/folded) prompt length.
+    pub prompt_len: usize,
+    /// Prompt tokens already prefilled (chunked prefill cursor).
+    pub prefill_pos: usize,
+    /// Whether any prefill chunk has been scheduled yet (waiting-SLO stop).
+    pub prefill_started: bool,
+    pub generated: usize,
+    pub max_new_tokens: usize,
+    /// Tokens currently in its KV slot.
+    pub kv_len: usize,
+    /// Blocks its KV slot currently holds.
+    pub kv_blocks: usize,
+    /// Clock time its previous token landed (TPOT urgency).
+    pub last_token_s: f64,
+    pub slo: Option<SloSpec>,
+}
+
+/// Minimal trainer state a policy needs.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainerView {
+    pub done: bool,
+    /// The trainer's per-device batch (what one step of it wants).
+    pub per_device_batch: usize,
+}
+
+/// Coordinator configuration snapshot relevant to planning.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedCfg {
+    pub max_prompt_tokens: usize,
+    pub reserve_worst_case: bool,
+    pub use_unified: bool,
+    pub max_prefill_batch: usize,
+    /// SLO applied to requests that carry none of their own.
+    pub slo: SloSpec,
+    /// [`SloAwarePolicy`] chunk size (tokens per prefill slice; 0 = never
+    /// chunk).
+    pub prefill_chunk_tokens: usize,
+}
+
+/// Everything a policy may read when planning one step. Plain owned data —
+/// no backend, no ledger handles — so plans are replayable from fixtures.
+#[derive(Debug, Clone)]
+pub struct SchedView {
+    pub now_s: f64,
+    pub cfg: SchedCfg,
+    pub caps: StepCaps,
+    /// The capacity allocator's current fine-tune sequence budget.
+    pub ft_budget: usize,
+    /// Id of the last decode row served (round-robin rotation key).
+    pub last_decode_id: Option<u64>,
+    pub kv: KvView,
+    /// Arrival queue, front first.
+    pub queue: Vec<QueuedView>,
+    /// Preempted requests awaiting resume, oldest-by-arrival first.
+    pub preempted: Vec<QueuedView>,
+    /// Active requests, in the coordinator's vector order.
+    pub active: Vec<ActiveView>,
+    pub trainers: Vec<TrainerView>,
+}
+
+impl SchedView {
+    fn effective_slo(&self, slo: Option<SloSpec>) -> SloSpec {
+        slo.unwrap_or(self.cfg.slo)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The plan
+// ---------------------------------------------------------------------------
+
+/// One prefill slice: `tokens` prompt tokens starting at the request's
+/// current `prefill_pos`. `tokens` < remaining prompt = a chunk (the
+/// executor emits no token and keeps the request in `Admitted`);
+/// `pad_to > tokens` physically pads the slice with zero tokens (PEFT's
+/// padded-batch semantics — padding is charged as real compute).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefillSlice {
+    pub id: u64,
+    pub tokens: usize,
+    pub pad_to: usize,
+}
+
+/// What one step should do. The executor applies fields in declaration
+/// order: admissions, then preemptions, then the launch lists.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StepPlan {
+    /// How many fronts of the preempted deque to re-admit (always a prefix:
+    /// a blocked front blocks all admission, DESIGN.md §8).
+    pub admit_preempted: usize,
+    /// Queue request ids to admit, in admission order (FIFO = queue prefix;
+    /// SLO-aware = deadline order).
+    pub admit_queue: Vec<u64>,
+    /// Active request ids to preempt (KV released, parked for recompute),
+    /// in order.
+    pub preempt: Vec<u64>,
+    /// Decode rows, in launch order. Every id must have a feasible
+    /// next-token block reservation after `preempt` is applied.
+    pub decode: Vec<u64>,
+    /// Prefill slices, in launch order.
+    pub prefill: Vec<PrefillSlice>,
+    /// Fine-tune sequence budget for this step.
+    pub ft_budget: usize,
+    /// Pad the fine-tune batch to its in-batch max (PEFT semantics).
+    pub pad_train: bool,
+    /// Live SLO headroom the policy observed (min over streams/queue, as a
+    /// fraction of the tightest bound; negative = a deadline already
+    /// blown). `Some` feeds `CapacityAllocator::observe_slack`.
+    pub slo_headroom: Option<f64>,
+}
+
+/// A scheduling policy: a pure function from view to plan (plus whatever
+/// private pacing state the policy keeps, e.g. PEFT's alternation turn).
+/// Policies never touch the backend or the ledger.
+pub trait SchedulePolicy: Send {
+    fn name(&self) -> &'static str;
+    fn plan(&mut self, view: &SchedView) -> StepPlan;
+}
+
+/// Construct the policy a [`PolicyKind`] names.
+pub fn build_policy(kind: PolicyKind) -> Box<dyn SchedulePolicy> {
+    match kind {
+        PolicyKind::Fifo => Box::new(FifoPolicy),
+        PolicyKind::SloAware => Box::new(SloAwarePolicy::default()),
+        PolicyKind::Peft => Box::new(PeftPolicy::default()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hypothetical-state simulation shared by the policies
+// ---------------------------------------------------------------------------
+
+/// One hypothetical active request inside a plan-in-progress.
+#[derive(Debug, Clone, Copy)]
+struct SimReq {
+    id: u64,
+    arrival_s: f64,
+    phase: Phase,
+    kv_len: usize,
+    kv_blocks: usize,
+    prompt_len: usize,
+    prefill_pos: usize,
+    prefill_started: bool,
+    last_token_s: f64,
+    slo: Option<SloSpec>,
+}
+
+/// Hypothetical ledger + active set: mirrors exactly what the executor's
+/// `KvCacheManager` and active vector will do when the plan is applied
+/// (including `swap_remove` ordering on preemption — prefill selection
+/// order depends on it).
+struct KvSim {
+    active: Vec<SimReq>,
+    free_slots: usize,
+    free_blocks: usize,
+    block_tokens: usize,
+    slot_capacity: usize,
+}
+
+impl KvSim {
+    fn new(view: &SchedView) -> Self {
+        Self {
+            active: view
+                .active
+                .iter()
+                .map(|a| SimReq {
+                    id: a.id,
+                    arrival_s: a.arrival_s,
+                    phase: a.phase,
+                    kv_len: a.kv_len,
+                    kv_blocks: a.kv_blocks,
+                    prompt_len: a.prompt_len,
+                    prefill_pos: a.prefill_pos,
+                    prefill_started: a.prefill_started,
+                    last_token_s: a.last_token_s,
+                    slo: a.slo,
+                })
+                .collect(),
+            free_slots: view.kv.free_slots,
+            free_blocks: view.kv.free_blocks,
+            block_tokens: view.kv.block_tokens,
+            slot_capacity: view.kv.slot_capacity,
+        }
+    }
+
+    fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Mirror of `KvCacheManager::can_admit`.
+    fn can_admit(&self, tokens: usize) -> bool {
+        self.free_slots > 0
+            && tokens <= self.slot_capacity
+            && self.blocks_for(tokens) <= self.free_blocks
+    }
+
+    /// Admit a request claiming blocks for `initial_tokens`.
+    fn admit(&mut self, q: &QueuedView, prompt_len: usize, initial_tokens: usize) {
+        self.free_slots -= 1;
+        self.free_blocks -= self.blocks_for(initial_tokens);
+        self.active.push(SimReq {
+            id: q.id,
+            arrival_s: q.arrival_s,
+            phase: Phase::Admitted,
+            kv_len: 0,
+            kv_blocks: self.blocks_for(initial_tokens),
+            prompt_len,
+            prefill_pos: 0,
+            prefill_started: false,
+            last_token_s: 0.0,
+            slo: q.slo,
+        })
+    }
+
+    /// Mirror of `KvCacheManager::reserve_decode_block`: the claim persists
+    /// across selection restarts, exactly like the real ledger's.
+    fn reserve_decode_block(&mut self, idx: usize) -> bool {
+        let s = &self.active[idx];
+        if s.kv_len >= self.slot_capacity {
+            return false;
+        }
+        if s.kv_len + 1 <= s.kv_blocks * self.block_tokens {
+            return true;
+        }
+        if self.free_blocks == 0 {
+            return false;
+        }
+        self.free_blocks -= 1;
+        self.active[idx].kv_blocks += 1;
+        true
+    }
+
+    /// Mirror of `Coordinator::preempt_youngest` (incl. `swap_remove`).
+    fn preempt_youngest(&mut self) -> Option<u64> {
+        let idx = self
+            .active
+            .iter()
+            .enumerate()
+            .max_by(|(_, x), (_, y)| {
+                x.arrival_s.total_cmp(&y.arrival_s).then(x.id.cmp(&y.id))
+            })
+            .map(|(i, _)| i)?;
+        let victim = self.active.swap_remove(idx);
+        self.free_slots += 1;
+        self.free_blocks += victim.kv_blocks;
+        Some(victim.id)
+    }
+}
+
+/// The shared decode-window machinery: walk `order(sim)`'s first `dec_cap`
+/// candidates reserving a next-token block each; on a failed reservation
+/// preempt the youngest active request and restart selection (the victim
+/// may have been in the window, and its freed blocks change what fits).
+/// Returns (decode ids in launch order, preemption victims in order).
+fn select_decode(
+    sim: &mut KvSim,
+    dec_cap: usize,
+    mut order: impl FnMut(&KvSim) -> Vec<(u64, usize)>,
+) -> (Vec<u64>, Vec<u64>) {
+    let mut preempt = Vec::new();
+    'select: loop {
+        let mut decoding = order(sim);
+        if decoding.is_empty() || dec_cap == 0 {
+            return (Vec::new(), preempt);
+        }
+        decoding.truncate(dec_cap);
+        let mut i = 0;
+        while i < decoding.len() {
+            let (_, idx) = decoding[i];
+            if !sim.reserve_decode_block(idx) {
+                match sim.preempt_youngest() {
+                    Some(id) => {
+                        preempt.push(id);
+                        continue 'select;
+                    }
+                    None => return (Vec::new(), preempt),
+                }
+            }
+            i += 1;
+        }
+        return (decoding.into_iter().map(|(id, _)| id).collect(), preempt);
+    }
+}
+
+/// FIFO rotation order: decoding requests sorted by id, rotated past the
+/// last-served id (the pre-refactor fairness rotation, verbatim).
+fn fifo_rotation(sim: &KvSim, last_decode_id: Option<u64>) -> Vec<(u64, usize)> {
+    let mut decoding: Vec<(u64, usize)> = sim
+        .active
+        .iter()
+        .enumerate()
+        .filter(|(_, a)| a.phase == Phase::Decoding)
+        .map(|(i, a)| (a.id, i))
+        .collect();
+    if decoding.is_empty() {
+        return decoding;
+    }
+    decoding.sort_unstable_by_key(|&(id, _)| id);
+    if let Some(last) = last_decode_id {
+        let start = decoding.partition_point(|&(id, _)| id <= last) % decoding.len();
+        decoding.rotate_left(start);
+    }
+    decoding
+}
+
+/// Initial block claim under the view's reservation policy (mirror of
+/// `Coordinator::admission_need`). The worst-case claim clamps at the
+/// slot capacity: a request whose full generation cannot fit is still
+/// admitted with a whole slot and completes early on slot overflow (the
+/// old PEFT baseline's behaviour; the lazy append path claims any blocks
+/// past the initial reservation).
+fn admission_need(
+    cfg: &SchedCfg,
+    kv: &KvView,
+    prompt_len: usize,
+    max_new: usize,
+) -> (usize, usize) {
+    let prompt = prompt_len.min(cfg.max_prompt_tokens);
+    let need = if cfg.reserve_worst_case { prompt + max_new } else { prompt };
+    (prompt, need.min(kv.slot_capacity))
+}
+
+/// Admit the preempted-deque prefix: fronts are re-admitted (full folded
+/// context, never re-truncated) until one does not fit — which then blocks
+/// ALL admission (DESIGN.md §8's no-leapfrogging rule). Returns the prefix
+/// length; `true` in the second slot means admission is blocked.
+fn admit_preempted_prefix(sim: &mut KvSim, view: &SchedView) -> (usize, bool) {
+    for (i, p) in view.preempted.iter().enumerate() {
+        if !sim.can_admit(p.prompt_len) {
+            return (i, true);
+        }
+        sim.admit(p, p.prompt_len, p.prompt_len);
+    }
+    (view.preempted.len(), false)
+}
+
+// ---------------------------------------------------------------------------
+// FifoPolicy
+// ---------------------------------------------------------------------------
+
+/// The pre-refactor coordinator behaviour as a policy — bit-compatible:
+/// on identical views it plans exactly the admissions, rotation window,
+/// preemption victims and whole-prompt prefills `Coordinator::step` used
+/// to select inline (pinned by the fixture tests below and by the
+/// unchanged coordinator/scheduler_props/backend_e2e suites).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct FifoPolicy;
+
+impl SchedulePolicy for FifoPolicy {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn plan(&mut self, view: &SchedView) -> StepPlan {
+        let mut sim = KvSim::new(view);
+        let mut plan = StepPlan::default();
+
+        // Admission: preempted fronts first, then the arrival-queue prefix.
+        let (n, blocked) = admit_preempted_prefix(&mut sim, view);
+        plan.admit_preempted = n;
+        if !blocked {
+            for q in &view.queue {
+                let (prompt, need) = admission_need(&view.cfg, &view.kv, q.prompt_len, q.max_new_tokens);
+                if !sim.can_admit(need) {
+                    break;
+                }
+                sim.admit(q, prompt, need);
+                plan.admit_queue.push(q.id);
+            }
+        }
+
+        // Decode window: id-keyed round-robin rotation.
+        let last = view.last_decode_id;
+        let (decode, preempt) =
+            select_decode(&mut sim, view.caps.dec, |s| fifo_rotation(s, last));
+        plan.decode = decode;
+        plan.preempt = preempt;
+
+        // Prefill: admitted requests in active-vector order, whole prompt.
+        plan.prefill = sim
+            .active
+            .iter()
+            .filter(|a| a.phase == Phase::Admitted)
+            .take(view.caps.pf)
+            .map(|a| PrefillSlice {
+                id: a.id,
+                tokens: a.prompt_len - a.prefill_pos,
+                pad_to: 0,
+            })
+            .collect();
+
+        // Fine-tune budget: the capacity allocator's, capped by the unified
+        // bucket when the merged launch is in use.
+        plan.ft_budget = if view.cfg.use_unified {
+            view.ft_budget.min(view.caps.ft)
+        } else {
+            view.ft_budget
+        };
+        plan
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SloAwarePolicy
+// ---------------------------------------------------------------------------
+
+/// Deadline-driven policy: the SLO stops being a post-hoc metric and
+/// becomes the planning objective (DESIGN.md §9).
+///
+/// * **Admission** is earliest-waiting-deadline-first over the arrival
+///   queue (`arrival + max_waiting_s`); the most urgent request that does
+///   not fit blocks admission (admitting less-urgent work over it would
+///   steal exactly the blocks it waits for). Preempted fronts still
+///   outrank everything.
+/// * **Prefill is chunked**: each admitted request receives at most
+///   `prefill_chunk_tokens` prompt tokens per step, so the per-launch
+///   token volume — which bounds every co-running stream's token gap —
+///   stays under control. In-progress chunks are finished before fresh
+///   prompts start (a half-built KV pins blocks without serving anyone).
+/// * **Decode window** is ordered by TPOT urgency (elapsed gap over the
+///   stream's max-decode-latency bound) instead of blind rotation, so the
+///   stream closest to blowing its bound decodes first when the window is
+///   narrower than the stream count.
+/// * **Fine-tune budget** scales with live headroom — the minimum slack
+///   fraction over decode gaps and waiting deadlines. Plenty of headroom
+///   runs the allocator's full budget; thin headroom halves it; a (nearly)
+///   blown deadline parks fine-tuning entirely. The observed headroom is
+///   also fed back to the allocator (`observe_slack`) so its EMA-based
+///   controller sees real deadline pressure, not just smoothed latency.
+#[derive(Debug, Clone, Copy)]
+pub struct SloAwarePolicy {
+    /// Headroom below which the fine-tune budget halves.
+    pub soft_headroom: f64,
+    /// Headroom below which fine-tuning parks entirely.
+    pub hard_headroom: f64,
+}
+
+impl Default for SloAwarePolicy {
+    fn default() -> Self {
+        Self { soft_headroom: 0.5, hard_headroom: 0.25 }
+    }
+}
+
+impl SloAwarePolicy {
+    /// Waiting deadline of a not-yet-started request.
+    fn wait_deadline(view: &SchedView, arrival_s: f64, slo: Option<SloSpec>) -> f64 {
+        arrival_s + view.effective_slo(slo).max_waiting_s
+    }
+
+    /// Minimum live SLO headroom across decode gaps and waiting requests,
+    /// as a fraction of each bound (1.0 = untouched, <= 0 = blown).
+    fn min_headroom(view: &SchedView) -> f64 {
+        let mut h = 1.0f64;
+        for a in &view.active {
+            let slo = view.effective_slo(a.slo);
+            match a.phase {
+                Phase::Decoding => {
+                    let bound = slo.max_decode_latency_s;
+                    if bound.is_finite() && bound > 0.0 {
+                        h = h.min((bound - (view.now_s - a.last_token_s)) / bound);
+                    }
+                }
+                _ if !a.prefill_started => {
+                    let bound = slo.max_waiting_s;
+                    if bound.is_finite() && bound > 0.0 {
+                        h = h.min((bound - (view.now_s - a.arrival_s)) / bound);
+                    }
+                }
+                _ => {}
+            }
+        }
+        // Preempted requests are deliberately NOT judged here: their
+        // waiting phase already completed (the waiting SLO is measured to
+        // the FIRST prefill — `RequestTrace::attains`), so an old arrival
+        // time says nothing about a still-meetable bound, and one
+        // long-parked resume would otherwise read as a permanently blown
+        // deadline and halt fine-tuning for the rest of the run.
+        for q in view.queue.iter() {
+            let bound = view.effective_slo(q.slo).max_waiting_s;
+            if bound.is_finite() && bound > 0.0 {
+                h = h.min((bound - (view.now_s - q.arrival_s)) / bound);
+            }
+        }
+        h
+    }
+}
+
+impl SchedulePolicy for SloAwarePolicy {
+    fn name(&self) -> &'static str {
+        "slo"
+    }
+
+    fn plan(&mut self, view: &SchedView) -> StepPlan {
+        let mut sim = KvSim::new(view);
+        let mut plan = StepPlan::default();
+
+        // Preempted fronts outrank everything (same invariant as FIFO).
+        let (n, blocked) = admit_preempted_prefix(&mut sim, view);
+        plan.admit_preempted = n;
+
+        // Arrival admission: earliest waiting deadline first. (Skip the
+        // O(n log n) sort outright when no slot is free — a saturated
+        // engine plans every step against a potentially deep backlog.)
+        if !blocked && sim.free_slots > 0 {
+            let mut order: Vec<&QueuedView> = view.queue.iter().collect();
+            order.sort_by(|a, b| {
+                Self::wait_deadline(view, a.arrival_s, a.slo)
+                    .total_cmp(&Self::wait_deadline(view, b.arrival_s, b.slo))
+                    .then(a.arrival_s.total_cmp(&b.arrival_s))
+                    .then(a.id.cmp(&b.id))
+            });
+            for q in order {
+                let (prompt, need) = admission_need(&view.cfg, &view.kv, q.prompt_len, q.max_new_tokens);
+                if !sim.can_admit(need) {
+                    break; // the most urgent keeps first claim on freed blocks
+                }
+                sim.admit(q, prompt, need);
+                plan.admit_queue.push(q.id);
+            }
+        }
+
+        // Decode window by TPOT urgency (largest elapsed-gap fraction
+        // first); youngest-victim preemption is shared with FIFO.
+        let now = view.now_s;
+        let cfg_slo = view.cfg.slo;
+        let (decode, preempt) = select_decode(&mut sim, view.caps.dec, move |s| {
+            let mut cand: Vec<(f64, u64, usize)> = s
+                .active
+                .iter()
+                .enumerate()
+                .filter(|(_, a)| a.phase == Phase::Decoding)
+                .map(|(i, a)| {
+                    let bound = a.slo.unwrap_or(cfg_slo).max_decode_latency_s.max(1e-9);
+                    let urgency = if bound.is_finite() {
+                        (now - a.last_token_s) / bound
+                    } else {
+                        now - a.last_token_s
+                    };
+                    (urgency, a.id, i)
+                })
+                .collect();
+            cand.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+            cand.into_iter().map(|(_, id, i)| (id, i)).collect()
+        });
+        plan.decode = decode;
+        plan.preempt = preempt;
+
+        // Chunked prefill: in-progress slices first, then fresh prompts,
+        // each by waiting deadline; at most `chunk` tokens per slice
+        // (whole prompts on backends that cannot continue from KV).
+        let chunk = if view.caps.prefill_continuation {
+            view.cfg.prefill_chunk_tokens
+        } else {
+            0
+        };
+        let mut pending: Vec<&SimReq> =
+            sim.active.iter().filter(|a| a.phase == Phase::Admitted).collect();
+        pending.sort_by(|a, b| {
+            (a.prefill_pos == 0)
+                .cmp(&(b.prefill_pos == 0))
+                .then(
+                    Self::wait_deadline(view, a.arrival_s, a.slo)
+                        .total_cmp(&Self::wait_deadline(view, b.arrival_s, b.slo)),
+                )
+                .then(a.id.cmp(&b.id))
+        });
+        plan.prefill = pending
+            .into_iter()
+            .take(view.caps.pf)
+            .map(|a| {
+                let remaining = a.prompt_len - a.prefill_pos;
+                let tokens = if chunk == 0 { remaining } else { remaining.min(chunk) };
+                PrefillSlice { id: a.id, tokens, pad_to: 0 }
+            })
+            .collect();
+
+        // Fine-tune budget from live headroom.
+        let base = if view.cfg.use_unified {
+            view.ft_budget.min(view.caps.ft)
+        } else {
+            view.ft_budget
+        };
+        let headroom = Self::min_headroom(view);
+        plan.ft_budget = if headroom < self.hard_headroom {
+            0
+        } else if headroom < self.soft_headroom {
+            (base / 2).max(usize::from(base > 0))
+        } else {
+            base
+        };
+        plan.slo_headroom = Some(headroom);
+        plan
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PeftPolicy
+// ---------------------------------------------------------------------------
+
+/// HuggingFace-Transformers+PEFT semantics as a policy configuration
+/// (paired with `use_unified = false` + `reserve_worst_case = true` in the
+/// baseline's coordinator config — see `baselines::PeftLike`):
+///
+/// * **Serial single-adapter gang batches** — a batch forms only when the
+///   engine is empty (batch-to-completion: late arrivals wait out the
+///   slowest member), takes the front request's adapter, and pulls queued
+///   same-adapter requests up to `max_prefill_batch`, stopping at the
+///   first that does not fit its worst-case reservation.
+/// * **Padded batches** — the gang prefills in one launch padded to the
+///   batch-max prompt (`pad_to`), and train batches pad to their in-batch
+///   max (`pad_train`); padding is charged as real compute.
+/// * **Strict per-step train/infer alternation** — PEFT has no token-level
+///   co-scheduling; a step is either one trainer micro-batch or one
+///   inference launch. The capacity allocator is deliberately bypassed
+///   (`ft_budget` comes from the trainer's own batch size): PEFT's
+///   fine-tuning "barely slows" under inference load — that *is* the
+///   Figure-4 result.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PeftPolicy {
+    /// Alternation flag: next step is a trainer step.
+    train_turn: bool,
+}
+
+impl SchedulePolicy for PeftPolicy {
+    fn name(&self) -> &'static str {
+        "peft"
+    }
+
+    fn plan(&mut self, view: &SchedView) -> StepPlan {
+        let mut plan = StepPlan::default();
+        let train_live = view.trainers.iter().any(|t| !t.done);
+        let no_inference =
+            view.queue.is_empty() && view.preempted.is_empty() && view.active.is_empty();
+
+        if train_live && (self.train_turn || no_inference) {
+            self.train_turn = false;
+            plan.ft_budget = view
+                .trainers
+                .iter()
+                .filter(|t| !t.done)
+                .map(|t| t.per_device_batch)
+                .max()
+                .unwrap_or(0);
+            plan.pad_train = true;
+            return plan;
+        }
+        if train_live {
+            self.train_turn = true;
+        }
+
+        let mut sim = KvSim::new(view);
+        // Batch-to-completion: no admission while any member is in flight.
+        if sim.active.is_empty() && !view.queue.is_empty() {
+            let adapter = view.queue[0].adapter;
+            for q in view.queue.iter().filter(|q| q.adapter == adapter) {
+                if plan.admit_queue.len() >= view.cfg.max_prefill_batch {
+                    break;
+                }
+                let (prompt, need) = admission_need(&view.cfg, &view.kv, q.prompt_len, q.max_new_tokens);
+                if !sim.can_admit(need) {
+                    break; // the batch waits for memory, like the original
+                }
+                sim.admit(q, prompt, need);
+                plan.admit_queue.push(q.id);
+            }
+        }
+
+        // The gang is phase-uniform: either all members prefill (padded to
+        // the batch max) or all decode. Worst-case reservation means no
+        // preemption machinery is ever needed, but each decode row still
+        // carries its next-token block reservation (prompt padding can
+        // grow a slot past its own worst-case claim): a row that cannot
+        // reserve sits out the step until a finishing peer frees blocks —
+        // PEFT never preempts. (A row at slot capacity never reaches this
+        // point: the executor overflow-completes it the step it fills.
+        // Deployments should size the pool ≥ batch_cap × slot_capacity
+        // tokens, as the harness does, so padded gangs can always run.)
+        let admitted: Vec<&SimReq> =
+            sim.active.iter().filter(|a| a.phase == Phase::Admitted).collect();
+        if !admitted.is_empty() {
+            let pad_to = admitted.iter().map(|a| a.prompt_len).max().unwrap_or(0);
+            plan.prefill = admitted
+                .into_iter()
+                .take(view.caps.pf)
+                .map(|a| PrefillSlice { id: a.id, tokens: a.prompt_len, pad_to })
+                .collect();
+        } else {
+            let decoding: Vec<(u64, usize)> = sim
+                .active
+                .iter()
+                .enumerate()
+                .filter(|(_, a)| a.phase == Phase::Decoding)
+                .map(|(i, a)| (a.id, i))
+                .collect();
+            for (id, i) in decoding.into_iter().take(view.caps.dec) {
+                if sim.reserve_decode_block(i) {
+                    plan.decode.push(id);
+                }
+            }
+        }
+        plan
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fixture tests: FifoPolicy vs the pre-refactor selection
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SchedCfg {
+        SchedCfg {
+            max_prompt_tokens: 32,
+            reserve_worst_case: false,
+            use_unified: true,
+            max_prefill_batch: 4,
+            slo: SloSpec::default(),
+            prefill_chunk_tokens: 8,
+        }
+    }
+
+    fn view() -> SchedView {
+        SchedView {
+            now_s: 0.0,
+            cfg: cfg(),
+            caps: StepCaps {
+                ft: 2,
+                pf: 2,
+                dec: 8,
+                unified_entry: true,
+                prefill_continuation: true,
+            },
+            ft_budget: 2,
+            last_decode_id: None,
+            kv: KvView {
+                free_slots: 8,
+                free_blocks: 48,
+                block_tokens: 16,
+                slot_capacity: 96,
+            },
+            queue: vec![],
+            preempted: vec![],
+            active: vec![],
+            trainers: vec![],
+        }
+    }
+
+    fn queued(id: u64, prompt: usize, max_new: usize, at: f64) -> QueuedView {
+        QueuedView {
+            id,
+            adapter: 0,
+            prompt_len: prompt,
+            max_new_tokens: max_new,
+            arrival_s: at,
+            slo: None,
+        }
+    }
+
+    fn decoding(id: u64, at: f64, kv_len: usize, kv_blocks: usize) -> ActiveView {
+        ActiveView {
+            id,
+            adapter: 0,
+            arrival_s: at,
+            phase: Phase::Decoding,
+            prompt_len: 8,
+            prefill_pos: 8,
+            prefill_started: true,
+            generated: 1,
+            max_new_tokens: 40,
+            kv_len,
+            kv_blocks,
+            last_token_s: 0.0,
+            slo: None,
+        }
+    }
+
+    // --- FifoPolicy fixtures: expected plans derived by hand from the
+    // --- pre-refactor `Coordinator::step` selection code. ----------------
+
+    #[test]
+    fn fifo_admits_queue_prefix_and_prefills_whole_prompts() {
+        let mut v = view();
+        v.queue = vec![queued(1, 8, 4, 0.0), queued(2, 40, 4, 0.1), queued(3, 8, 4, 0.2)];
+        let plan = FifoPolicy.plan(&v);
+        assert_eq!(plan.admit_queue, vec![1, 2, 3]);
+        // Prompt 40 is bucket-truncated to 32 before its blocks are sized.
+        assert_eq!(
+            plan.prefill,
+            vec![
+                PrefillSlice { id: 1, tokens: 8, pad_to: 0 },
+                PrefillSlice { id: 2, tokens: 32, pad_to: 0 },
+            ],
+            "pf_cap 2 truncates; slices are whole prompts in arrival order"
+        );
+        assert_eq!(plan.ft_budget, 2, "allocator budget capped by unified ft bucket");
+        assert!(plan.decode.is_empty() && plan.preempt.is_empty());
+        assert_eq!(plan.slo_headroom, None, "fifo feeds the allocator nothing new");
+    }
+
+    #[test]
+    fn fifo_admission_stops_at_first_unfitting_request() {
+        let mut v = view();
+        // 2 free slots: the third request must NOT leapfrog the queue.
+        v.kv.free_slots = 2;
+        v.queue = vec![queued(1, 8, 4, 0.0), queued(2, 8, 4, 0.1), queued(3, 8, 4, 0.2)];
+        let plan = FifoPolicy.plan(&v);
+        assert_eq!(plan.admit_queue, vec![1, 2]);
+    }
+
+    #[test]
+    fn fifo_worst_case_reservation_blocks_admission_on_blocks() {
+        let mut v = view();
+        v.cfg.reserve_worst_case = true;
+        v.kv.free_blocks = 5; // 8 + 40 = 48 tokens = 3 blocks each at 16
+        v.queue = vec![queued(1, 8, 40, 0.0), queued(2, 8, 40, 0.1)];
+        let plan = FifoPolicy.plan(&v);
+        assert_eq!(plan.admit_queue, vec![1], "second worst-case claim (3 blocks) > 2 left");
+    }
+
+    #[test]
+    fn fifo_rotation_resumes_after_last_decode_id() {
+        let mut v = view();
+        v.active = vec![decoding(5, 0.0, 9, 1), decoding(1, 0.1, 9, 1), decoding(9, 0.2, 9, 1)];
+        v.caps.dec = 2;
+        v.last_decode_id = Some(5);
+        let plan = FifoPolicy.plan(&v);
+        // Sorted ids [1, 5, 9], rotated past 5 -> [9, 1, 5], truncated to 2.
+        assert_eq!(plan.decode, vec![9, 1]);
+        assert!(plan.preempt.is_empty());
+    }
+
+    #[test]
+    fn fifo_out_of_blocks_preempts_youngest_then_reselects() {
+        let mut v = view();
+        // Both rows' ledgers are exactly full (len == blocks*16); only one
+        // free block exists, so the second reservation preempts the
+        // youngest (id 2, latest arrival), whose freed block then lets the
+        // restarted selection serve id 1 alone.
+        v.kv.free_slots = 6;
+        v.kv.free_blocks = 1;
+        v.active = vec![decoding(1, 0.0, 16, 1), decoding(2, 5.0, 16, 1)];
+        let plan = FifoPolicy.plan(&v);
+        assert_eq!(plan.preempt, vec![2]);
+        assert_eq!(plan.decode, vec![1]);
+    }
+
+    #[test]
+    fn fifo_preempted_front_blocks_all_admission() {
+        let mut v = view();
+        v.kv.free_blocks = 1;
+        v.preempted = vec![queued(7, 40, 4, 0.0)]; // needs 3 blocks: stuck
+        v.queue = vec![queued(9, 8, 4, 1.0)]; // would fit, must NOT leapfrog
+        let plan = FifoPolicy.plan(&v);
+        assert_eq!(plan.admit_preempted, 0);
+        assert!(plan.admit_queue.is_empty(), "blocked preempted front gates the queue");
+    }
+
+    #[test]
+    fn fifo_split_mode_ignores_unified_ft_cap() {
+        let mut v = view();
+        v.cfg.use_unified = false;
+        v.ft_budget = 5;
+        v.caps.ft = 2;
+        assert_eq!(FifoPolicy.plan(&v).ft_budget, 5);
+    }
+
+    // --- SloAwarePolicy ---------------------------------------------------
+
+    #[test]
+    fn slo_admission_orders_by_waiting_deadline() {
+        let mut v = view();
+        let tight = SloSpec { max_waiting_s: 1.0, ..SloSpec::default() };
+        // id 2 arrived later but its 1 s waiting bound expires first.
+        v.queue = vec![queued(1, 8, 4, 0.0), QueuedView { slo: Some(tight), ..queued(2, 8, 4, 0.5) }];
+        let plan = SloAwarePolicy::default().plan(&v);
+        assert_eq!(plan.admit_queue, vec![2, 1]);
+        assert_eq!(
+            plan.prefill.iter().map(|p| p.id).collect::<Vec<_>>(),
+            vec![2, 1],
+            "prefill order follows the same deadlines"
+        );
+    }
+
+    #[test]
+    fn slo_chunks_long_prefills_and_finishes_started_chunks_first() {
+        let mut v = view();
+        v.cfg.max_prompt_tokens = 64;
+        v.active = vec![ActiveView {
+            phase: Phase::Admitted,
+            prompt_len: 20,
+            prefill_pos: 8,
+            prefill_started: true,
+            generated: 0,
+            ..decoding(4, 2.0, 8, 1)
+        }];
+        v.queue = vec![queued(1, 30, 4, 0.0)];
+        let plan = SloAwarePolicy::default().plan(&v);
+        // chunk = 8: the in-progress slice continues first, the fresh
+        // admission starts its first chunk second.
+        assert_eq!(
+            plan.prefill,
+            vec![
+                PrefillSlice { id: 4, tokens: 8, pad_to: 0 },
+                PrefillSlice { id: 1, tokens: 8, pad_to: 0 },
+            ]
+        );
+    }
+
+    #[test]
+    fn slo_chunking_disabled_without_prefill_continuation() {
+        // The AOT XLA prefill entries cannot continue from existing KV
+        // (positions restart at 0): the policy must plan whole prompts.
+        let mut v = view();
+        v.caps.prefill_continuation = false;
+        v.queue = vec![queued(1, 30, 4, 0.0)];
+        let plan = SloAwarePolicy::default().plan(&v);
+        assert_eq!(plan.prefill, vec![PrefillSlice { id: 1, tokens: 30, pad_to: 0 }]);
+    }
+
+    #[test]
+    fn worst_case_admission_clamps_to_slot_capacity() {
+        // prompt 60 + max_new 90 = 150 > slot_capacity 96: the claim
+        // clamps to a whole slot (6 blocks) and the request is admitted —
+        // it completes early on slot overflow instead of queueing forever.
+        let mut v = view();
+        v.cfg.reserve_worst_case = true;
+        v.cfg.max_prompt_tokens = 64;
+        v.queue = vec![queued(1, 60, 90, 0.0)];
+        let plan = FifoPolicy.plan(&v);
+        assert_eq!(plan.admit_queue, vec![1]);
+    }
+
+    #[test]
+    fn slo_decode_orders_by_tpot_urgency() {
+        let mut v = view();
+        v.now_s = 10.0;
+        v.caps.dec = 1;
+        let mut a = decoding(1, 0.0, 9, 1);
+        a.last_token_s = 9.9; // fresh token: plenty of headroom
+        let mut b = decoding(2, 0.1, 9, 1);
+        b.last_token_s = 9.2; // 0.8 s into a 1.0 s bound: urgent
+        v.active = vec![a, b];
+        let plan = SloAwarePolicy::default().plan(&v);
+        assert_eq!(plan.decode, vec![2], "the nearly-blown stream wins the narrow window");
+    }
+
+    #[test]
+    fn slo_ft_budget_tracks_headroom() {
+        let mut v = view();
+        v.ft_budget = 2;
+        // No inference anywhere: full budget, full headroom.
+        let plan = SloAwarePolicy::default().plan(&v);
+        assert_eq!(plan.ft_budget, 2);
+        assert_eq!(plan.slo_headroom, Some(1.0));
+
+        // A decode stream 0.6 s into its 1.0 s bound: headroom 0.4 -> half.
+        v.now_s = 10.0;
+        let mut a = decoding(1, 0.0, 9, 1);
+        a.last_token_s = 9.4;
+        v.active = vec![a];
+        let plan = SloAwarePolicy::default().plan(&v);
+        assert_eq!(plan.ft_budget, 1);
+
+        // 0.9 s in: headroom 0.1 < 0.25 -> fine-tuning parks.
+        v.active[0].last_token_s = 9.1;
+        let plan = SloAwarePolicy::default().plan(&v);
+        assert_eq!(plan.ft_budget, 0);
+        assert!(plan.slo_headroom.unwrap() < 0.25);
+    }
+
+    // --- PeftPolicy -------------------------------------------------------
+
+    #[test]
+    fn peft_forms_single_adapter_padded_gangs_and_alternates() {
+        let mut v = view();
+        v.cfg.reserve_worst_case = true;
+        v.cfg.use_unified = false;
+        v.queue = vec![
+            queued(1, 8, 4, 0.0),
+            QueuedView { adapter: 1, ..queued(2, 8, 4, 0.1) }, // other adapter: next pass
+            queued(3, 16, 4, 0.2),
+        ];
+        v.trainers = vec![TrainerView { done: false, per_device_batch: 2 }];
+        let mut p = PeftPolicy::default();
+
+        // Step 1: inference turn (alternation starts on inference).
+        let plan = p.plan(&v);
+        assert_eq!(plan.admit_queue, vec![1, 3], "same-adapter gang skips id 2");
+        assert_eq!(
+            plan.prefill,
+            vec![
+                PrefillSlice { id: 1, tokens: 8, pad_to: 16 },
+                PrefillSlice { id: 3, tokens: 16, pad_to: 16 },
+            ],
+            "gang prefill padded to the batch max"
+        );
+        assert_eq!(plan.ft_budget, 0);
+
+        // Step 2: trainer turn — one padded micro-batch, nothing else.
+        let plan = p.plan(&v);
+        assert_eq!(plan.ft_budget, 2);
+        assert!(plan.pad_train);
+        assert!(plan.prefill.is_empty() && plan.decode.is_empty());
+
+        // With a batch in flight, no admission (batch-to-completion).
+        let mut v2 = v.clone();
+        v2.active = vec![decoding(1, 0.0, 9, 1)];
+        let plan = p.plan(&v2);
+        assert!(plan.admit_queue.is_empty());
+        assert_eq!(plan.decode, vec![1]);
+    }
+
+    #[test]
+    fn peft_trains_unthrottled_when_no_inference_waits() {
+        let mut v = view();
+        v.ft_budget = 0; // the capacity allocator would park fine-tuning...
+        v.trainers = vec![TrainerView { done: false, per_device_batch: 2 }];
+        let mut p = PeftPolicy::default();
+        let plan = p.plan(&v);
+        // ...but PEFT has no such coupling: its trainer runs regardless.
+        assert_eq!(plan.ft_budget, 2);
+    }
+}

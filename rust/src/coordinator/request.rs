@@ -1,7 +1,7 @@
 //! Request and job types shared by the coordinator and the baselines.
 
 
-use crate::metrics::RequestTrace;
+use crate::metrics::{RequestTrace, SloSpec};
 
 /// An inference request as submitted by a client / workload generator.
 #[derive(Debug, Clone)]
@@ -15,6 +15,12 @@ pub struct InferenceRequest {
     pub eos_token: Option<i32>,
     /// Arrival time on the run's clock (virtual or wall seconds).
     pub arrival_s: f64,
+    /// TTFT/TPOT deadlines attached at submit time. `None` inherits the
+    /// coordinator's configured SLO. Scheduler policies read this
+    /// (admission order, decode urgency, fine-tune headroom — DESIGN.md
+    /// §9); the live attainment tracker judges each finished request
+    /// against it.
+    pub slo: Option<SloSpec>,
 }
 
 /// Request lifecycle phase.
@@ -51,6 +57,10 @@ pub struct ActiveRequest {
     pub folded: usize,
     /// How many times this request has been preempted.
     pub preemptions: u32,
+    /// Prompt tokens already prefilled (the chunked-prefill cursor). A
+    /// request leaves `Admitted` only when this reaches `prompt.len()`;
+    /// preemption resets it to 0 (the recompute prefill rebuilds all KV).
+    pub prefill_pos: usize,
 }
 
 impl ActiveRequest {
@@ -69,6 +79,7 @@ impl ActiveRequest {
             last_token_s: 0.0,
             folded: 0,
             preemptions: 0,
+            prefill_pos: 0,
         }
     }
 

@@ -102,6 +102,18 @@ pub trait Backend {
     /// Unified-step capacities (ft, pf, dec), if a unified entry exists.
     fn unified_capacity(&self) -> Option<(usize, usize, usize)>;
 
+    /// Can `prefill` CONTINUE a sequence whose slot already holds KV —
+    /// attending over the cached prefix with rotary positions starting at
+    /// the slot's current length? The native backend can (it passes
+    /// `pos0 = cache.len(slot)` per sequence) and the sim backend models
+    /// it trivially; the AOT XLA prefill entries take no cache input and
+    /// restart positions at 0, so they cannot. Chunked prefill
+    /// (DESIGN.md §9) is only planned when this is true — on other
+    /// backends prompts prefill whole, exactly as before.
+    fn supports_prefill_continuation(&self) -> bool {
+        false
+    }
+
     /// Prefill a batch; appends KV into each sequence's slot and returns the
     /// last-token logits per sequence.
     fn prefill(

@@ -1152,6 +1152,13 @@ impl Backend for NativeBackend {
             .map(|u| (u.ft_batch, u.pf_batch, u.dec_batch))
     }
 
+    fn supports_prefill_continuation(&self) -> bool {
+        // Every sequence carries `pos0 = cache.len(slot)`: RoPE continues
+        // at the cached length and attention reads the cached prefix, so
+        // chunked prefill (DESIGN.md §9) is bitwise output-transparent.
+        true
+    }
+
     fn prefill(
         &mut self,
         seqs: &[PrefillSeq],

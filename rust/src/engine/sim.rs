@@ -133,6 +133,12 @@ impl Backend for SimBackend {
             .map(|u| (u.ft_batch, u.pf_batch, u.dec_batch))
     }
 
+    fn supports_prefill_continuation(&self) -> bool {
+        // Token accounting only: appends extend the slot and the cost
+        // model charges the slice, which is all a continuation needs here.
+        true
+    }
+
     fn prefill(
         &mut self,
         seqs: &[PrefillSeq],

@@ -22,7 +22,9 @@ use anyhow::Result;
 use crate::baselines::{
     drive_to_completion, FlexLlmLike, LoquetierSystem, PeftLike, SLoraLike, ServingSystem,
 };
-use crate::coordinator::{Coordinator, CoordinatorConfig, FinetuneJob, TrainExample};
+use crate::coordinator::{
+    Coordinator, CoordinatorConfig, FinetuneJob, InferenceRequest, PolicyKind, TrainExample,
+};
 use crate::engine::{Backend, CostModel, SimBackend};
 use crate::kvcache::CacheConfig;
 use crate::metrics::{build_report, RunReport, SloSpec};
@@ -158,9 +160,16 @@ fn gpu_coord_config() -> CoordinatorConfig {
     }
 }
 
-/// Loquetier at GPU scale.
+/// Loquetier at GPU scale (FIFO planning — the pre-refactor behaviour).
 pub fn loquetier() -> LoquetierSystem {
-    LoquetierSystem::new(Coordinator::new(gpu_coord_config(), gpu_cache()))
+    loquetier_with(PolicyKind::Fifo)
+}
+
+/// Loquetier at GPU scale under an explicit scheduling policy
+/// (`--policy fifo|slo`, DESIGN.md §9).
+pub fn loquetier_with(policy: PolicyKind) -> LoquetierSystem {
+    let cfg = CoordinatorConfig { policy, ..gpu_coord_config() };
+    LoquetierSystem::new(Coordinator::new(cfg, gpu_cache()))
 }
 
 /// PEFT baseline: padded batches, small batch cap (OOM pressure).
@@ -187,6 +196,70 @@ pub fn flexllm() -> FlexLlmLike {
 /// crossover. The paper's headline "up to 3.0x throughput" arises at the
 /// highest rates where FlexLLM additionally thrashes on its queue.
 pub const FLEXLLM_SLOWDOWN: f64 = 1.6;
+
+/// The ISSUE-5 chunked-prefill acceptance burst (EXPERIMENTS.md §SLO),
+/// single-sourced for the figures bench AND the `scheduler_props` test so
+/// the two assertions can never drift apart: 16 max-length prompts ahead
+/// of 16 short interactive requests at GPU scale. Under FIFO a full
+/// prefill batch is 8 × `GPU_PROMPT_CAP` tokens — one ≈ 1.4 s merged
+/// launch at the default cost model, alone blowing every co-running
+/// stream's 1 s max-TPOT bound; chunked prefill (256-token slices) caps
+/// each launch at ≈ 0.35 s, so the same trace attains strictly more SLO.
+pub fn long_prompt_burst() -> Vec<InferenceRequest> {
+    let mut requests = Vec::new();
+    for i in 0..16u64 {
+        requests.push(InferenceRequest {
+            id: i,
+            adapter: (i % 4) as i32,
+            prompt: vec![1; GPU_PROMPT_CAP],
+            max_new_tokens: 60,
+            eos_token: None,
+            arrival_s: 0.01 * i as f64,
+            slo: None,
+        });
+    }
+    for i in 0..16u64 {
+        requests.push(InferenceRequest {
+            id: 100 + i,
+            adapter: (i % 4) as i32,
+            prompt: vec![1; 64],
+            max_new_tokens: 60,
+            eos_token: None,
+            arrival_s: 0.5 + 0.05 * i as f64,
+            slo: None,
+        });
+    }
+    requests
+}
+
+/// Replay one trace under a scheduling policy at GPU scale; returns
+/// (SLO attainment, completed requests). Panics if the scheduler's live
+/// attainment tracker disagrees with the post-hoc trace report — they
+/// judge every request against the same spec, so any drift is a bug.
+pub fn policy_attainment(
+    cost: &CostModel,
+    policy: PolicyKind,
+    requests: Vec<InferenceRequest>,
+) -> (f64, usize) {
+    let mut sys = loquetier_with(policy);
+    let mut be = sim_backend(cost.clone());
+    drive_to_completion(&mut sys, &mut be, requests, usize::MAX).unwrap();
+    let report = build_report(
+        "policy",
+        sys.traces(),
+        &SloSpec::default(),
+        0,
+        0,
+        sys.now_s().max(1e-9),
+    );
+    let live = sys.inner.slo_live().attainment();
+    assert!(
+        (live - report.slo_attainment).abs() < 1e-9,
+        "live attainment {live} must equal the post-hoc report {}",
+        report.slo_attainment
+    );
+    (report.slo_attainment, report.completed)
+}
 
 /// Appendix D.3 fine-tune job over Alpaca/GSM8K-statistics datasets.
 pub fn finetune_job(

@@ -215,6 +215,13 @@ impl KvCacheManager {
         self.slots[slot].len
     }
 
+    /// Blocks currently claimed by `slot` (the scheduler's `SchedView`
+    /// snapshots this so policies can plan reservations without the
+    /// ledger).
+    pub fn blocks(&self, slot: usize) -> usize {
+        self.slots.get(slot).map(|s| s.blocks).unwrap_or(0)
+    }
+
     /// Append `n` tokens of K/V to `slot`. Payloads are layer-major
     /// `[nl, n, token_elems]` — exactly the executables' output layout
     /// (`pf_k[:, b, :len]` / `dec_k_new[:, d]` slices).

@@ -33,13 +33,17 @@ loquetier — virtualized multi-LoRA unified fine-tuning + serving
 USAGE:
   loquetier serve   [--backend native|xla] [--artifacts DIR] [--listen ADDR]
                     [--config FILE] [--seed N] [--threads N]
+                    [--policy fifo|slo]
   loquetier bench   [--backend native|xla] [--artifacts DIR] [--seed N]
-                    [--threads N]
+                    [--threads N] [--policy fifo|slo]
   loquetier inspect [--artifacts DIR]
 
   --threads N sizes the native backend's deterministic worker pool
   (0/absent = auto: LOQUETIER_THREADS env, else available parallelism);
-  the XLA backend ignores it.";
+  the XLA backend ignores it.
+  --policy selects the scheduler: fifo (default; FIFO admission +
+  round-robin decode) or slo (deadline-slack admission, chunked prefill,
+  headroom-driven fine-tune budget — DESIGN.md §9).";
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -131,6 +135,9 @@ fn bench_smoke(be: &mut dyn Backend) -> Result<()> {
 }
 
 fn bench_cmd(args: &Args) -> Result<()> {
+    // The op smoke runs no scheduler, but a typoed --policy should fail
+    // fast here too, matching serve.
+    let _ = args.policy_or(loquetier::coordinator::PolicyKind::Fifo)?;
     match args.backend_or(BackendKind::Xla)? {
         BackendKind::Native => {
             let seed = args.usize_or("seed", 42)? as u64;
@@ -169,16 +176,21 @@ fn run_server(
     reg: VirtualizedRegistry,
     backend: &mut dyn Backend,
     label: &str,
+    policy: loquetier::coordinator::PolicyKind,
 ) -> Result<()> {
-    let mut coord =
-        Coordinator::new(cfg.coordinator_config(&manifest), cfg.cache_config(&manifest));
+    let coord_cfg = loquetier::coordinator::CoordinatorConfig {
+        policy,
+        ..cfg.coordinator_config(&manifest)
+    };
+    let mut coord = Coordinator::new(coord_cfg, cfg.cache_config(&manifest));
     let mut dir = RegistryDirectory::new(reg, manifest.clone(), Some(store));
 
     let (frontend, engine_rx) = Frontend::new(AdmissionConfig::default());
     let listener = TcpListener::bind(&cfg.listen_addr)?;
     println!(
-        "loquetier serving on {} ({label} backend, {} virtual models, vocab {})",
+        "loquetier serving on {} ({label} backend, {} policy, {} virtual models, vocab {})",
         cfg.listen_addr,
+        coord.policy_name(),
         cfg.virtual_models.len(),
         manifest.build.model.vocab_size
     );
@@ -240,5 +252,6 @@ fn serve_cmd(args: &Args) -> Result<()> {
         reg.attach(name.clone(), ad, *idx, SlotState::Inference)?;
     }
     backend.sync_adapters(&mut reg)?;
-    run_server(&cfg, manifest, store, reg, backend.as_mut(), label)
+    let policy = args.policy_or(loquetier::coordinator::PolicyKind::Fifo)?;
+    run_server(&cfg, manifest, store, reg, backend.as_mut(), label, policy)
 }

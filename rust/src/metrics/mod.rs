@@ -328,6 +328,85 @@ impl GaugeSeries {
     }
 }
 
+/// Interpolated TTFT/TPOT quantiles for one adapter — the wire form of a
+/// [`SloTracker`] entry (README §Stats).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencySummary {
+    pub ttft_p50_s: f64,
+    pub ttft_p99_s: f64,
+    pub tpot_p50_s: f64,
+    pub tpot_p99_s: f64,
+}
+
+/// Live SLO attainment + per-adapter latency histograms, maintained *by the
+/// scheduler as it runs* — not recomputed from traces after the fact. The
+/// coordinator records a TTFT sample when a stream's first token lands, a
+/// TPOT sample per decode gap (preemption resume gaps included), and an
+/// attainment verdict the moment a request reaches a terminal state. The
+/// map is keyed by bank slot (-1 = base model), so its size is bounded by
+/// the adapter bank, never by client-supplied names.
+#[derive(Debug, Default)]
+pub struct SloTracker {
+    attained: u64,
+    finished: u64,
+    per_adapter: BTreeMap<i32, (LatencyHistogram, LatencyHistogram)>, // (ttft, tpot)
+}
+
+impl SloTracker {
+    fn entry(&mut self, adapter: i32) -> &mut (LatencyHistogram, LatencyHistogram) {
+        self.per_adapter.entry(adapter).or_default()
+    }
+
+    /// First token landed `secs` after arrival.
+    pub fn record_ttft(&mut self, adapter: i32, secs: f64) {
+        self.entry(adapter).0.record(secs);
+    }
+
+    /// One decode gap (time since the stream's previous token).
+    pub fn record_tpot(&mut self, adapter: i32, secs: f64) {
+        self.entry(adapter).1.record(secs);
+    }
+
+    /// A request reached a terminal state (finished, failed or dropped).
+    pub fn record_outcome(&mut self, attained: bool) {
+        self.finished += 1;
+        if attained {
+            self.attained += 1;
+        }
+    }
+
+    /// Terminal requests observed so far.
+    pub fn finished(&self) -> u64 {
+        self.finished
+    }
+
+    /// Live attainment fraction (1.0 while nothing has finished — the SLO
+    /// is vacuously met, and a gauge that started at 0 would read as an
+    /// outage).
+    pub fn attainment(&self) -> f64 {
+        if self.finished == 0 {
+            1.0
+        } else {
+            self.attained as f64 / self.finished as f64
+        }
+    }
+
+    /// Adapters with at least one latency sample.
+    pub fn adapters(&self) -> impl Iterator<Item = i32> + '_ {
+        self.per_adapter.keys().copied()
+    }
+
+    /// Interpolated quantile summary for one adapter's histograms.
+    pub fn summary(&self, adapter: i32) -> Option<LatencySummary> {
+        self.per_adapter.get(&adapter).map(|(ttft, tpot)| LatencySummary {
+            ttft_p50_s: ttft.quantile(0.5),
+            ttft_p99_s: ttft.quantile(0.99),
+            tpot_p50_s: tpot.quantile(0.5),
+            tpot_p99_s: tpot.quantile(0.99),
+        })
+    }
+}
+
 /// Per-adapter serving counters, exposed over the wire via the `stats` op
 /// (keyed by virtual-model name in the frontend's table).
 #[derive(Debug, Clone, Copy, Default)]
@@ -554,6 +633,27 @@ mod tests {
         // The horizon is still covered after compaction.
         let (t_last, _) = g.last().unwrap();
         assert!(t_last > 50.0, "late samples survive: {t_last}");
+    }
+
+    #[test]
+    fn slo_tracker_live_attainment_and_quantiles() {
+        let mut t = SloTracker::default();
+        assert_eq!(t.attainment(), 1.0, "vacuously met before any finish");
+        t.record_outcome(true);
+        t.record_outcome(true);
+        t.record_outcome(false);
+        assert!((t.attainment() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(t.finished(), 3);
+        for i in 1..=100 {
+            t.record_ttft(0, i as f64 / 100.0);
+            t.record_tpot(0, i as f64 / 1000.0);
+        }
+        let s = t.summary(0).unwrap();
+        assert!((s.ttft_p50_s - 0.5).abs() < 0.02, "ttft p50 {}", s.ttft_p50_s);
+        assert!(s.ttft_p99_s <= 1.0 + 1e-9 && s.ttft_p99_s > s.ttft_p50_s);
+        assert!((s.tpot_p50_s - 0.05).abs() < 0.005, "tpot p50 {}", s.tpot_p50_s);
+        assert!(t.summary(7).is_none(), "untouched adapters have no entry");
+        assert_eq!(t.adapters().collect::<Vec<_>>(), vec![0]);
     }
 
     #[test]

@@ -50,7 +50,7 @@ use anyhow::{anyhow, Result};
 
 use crate::coordinator::{Coordinator, InferenceRequest};
 use crate::engine::Backend;
-use crate::metrics::{AdapterCounters, GaugeSeries};
+use crate::metrics::{AdapterCounters, GaugeSeries, LatencySummary};
 use crate::model::{LoraAdapter, SlotState, VirtualizedRegistry, WeightStore};
 use crate::runtime::Manifest;
 use crate::util::json::{self, Json};
@@ -70,6 +70,46 @@ pub enum AdapterSource {
     Blank,
 }
 
+/// Per-request SLO overrides carried on a `generate` op (DESIGN.md §9):
+/// any subset of the three bounds; unset bounds inherit the deployment's
+/// configured spec. The SLO-aware scheduler plans admission order, decode
+/// urgency and fine-tune headroom from these, and the live attainment
+/// tracker judges the request against them.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SloOverride {
+    pub max_waiting_s: Option<f64>,
+    pub mean_decode_s: Option<f64>,
+    pub max_decode_s: Option<f64>,
+}
+
+impl SloOverride {
+    fn parse(v: &Json) -> Self {
+        let f = |k: &str| v.get(k).and_then(|x| x.as_f64().ok()).filter(|x| *x >= 0.0);
+        Self {
+            max_waiting_s: f("slo_max_waiting_s"),
+            mean_decode_s: f("slo_mean_decode_s"),
+            max_decode_s: f("slo_max_decode_s"),
+        }
+    }
+
+    fn is_set(&self) -> bool {
+        self.max_waiting_s.is_some() || self.mean_decode_s.is_some() || self.max_decode_s.is_some()
+    }
+
+    /// Resolve against the deployment default: `None` when nothing was
+    /// overridden (the request inherits whatever the coordinator runs).
+    pub fn resolve(&self, default: &crate::metrics::SloSpec) -> Option<crate::metrics::SloSpec> {
+        if !self.is_set() {
+            return None;
+        }
+        Some(crate::metrics::SloSpec {
+            max_waiting_s: self.max_waiting_s.unwrap_or(default.max_waiting_s),
+            mean_decode_latency_s: self.mean_decode_s.unwrap_or(default.mean_decode_latency_s),
+            max_decode_latency_s: self.max_decode_s.unwrap_or(default.max_decode_latency_s),
+        })
+    }
+}
+
 /// A parsed client message.
 #[derive(Debug)]
 pub enum ClientMsg {
@@ -78,6 +118,7 @@ pub enum ClientMsg {
         model: Option<String>,
         max_new_tokens: usize,
         stream: bool,
+        slo: SloOverride,
     },
     LoadAdapter {
         name: String,
@@ -109,6 +150,7 @@ impl ClientMsg {
                     .unwrap_or(32)
                     .clamp(1, MAX_NEW_TOKENS_CAP),
                 stream: v.get("stream").and_then(|b| b.as_bool().ok()).unwrap_or(false),
+                slo: SloOverride::parse(&v),
             }),
             "load_adapter" => {
                 let name = v.req("name")?.as_str()?.to_string();
@@ -163,8 +205,16 @@ pub struct Stats {
     /// instantaneous and run-peak.
     pub kv_frag_tokens: usize,
     pub kv_frag_peak_tokens: usize,
+    /// Live SLO attainment: fraction of terminal requests that met their
+    /// SLO, tracked by the scheduler as it runs (1.0 while nothing has
+    /// finished). DESIGN.md §9.
+    pub slo_attainment: f64,
     /// Per-virtual-model counters, keyed by model name ("" = base model).
     pub per_adapter: BTreeMap<String, AdapterCounters>,
+    /// Per-virtual-model TTFT/TPOT quantiles (interpolated
+    /// `LatencyHistogram::quantile`), same keying as `per_adapter`; only
+    /// models with at least one latency sample appear.
+    pub per_adapter_latency: BTreeMap<String, LatencySummary>,
     /// Engine queue depth over time (queued + preempted +
     /// admitted-not-finished).
     pub queue_depth: GaugeSeries,
@@ -172,19 +222,33 @@ pub struct Stats {
 
 impl Stats {
     fn to_json(&self) -> Json {
+        // Union of counter and latency keys: a model that has only
+        // latency samples (or only counters) still gets one object.
+        let names: Vec<&String> = {
+            let mut v: Vec<&String> =
+                self.per_adapter.keys().chain(self.per_adapter_latency.keys()).collect();
+            v.sort();
+            v.dedup();
+            v
+        };
         let per_adapter = Json::Obj(
-            self.per_adapter
-                .iter()
-                .map(|(name, c)| {
-                    (
-                        name.clone(),
-                        Json::obj(vec![
-                            ("submitted", Json::Num(c.submitted as f64)),
-                            ("completed", Json::Num(c.completed as f64)),
-                            ("rejected", Json::Num(c.rejected as f64)),
-                            ("decode_tokens", Json::Num(c.decode_tokens as f64)),
-                        ]),
-                    )
+            names
+                .into_iter()
+                .map(|name| {
+                    let c = self.per_adapter.get(name).copied().unwrap_or_default();
+                    let mut kvs = vec![
+                        ("submitted", Json::Num(c.submitted as f64)),
+                        ("completed", Json::Num(c.completed as f64)),
+                        ("rejected", Json::Num(c.rejected as f64)),
+                        ("decode_tokens", Json::Num(c.decode_tokens as f64)),
+                    ];
+                    if let Some(l) = self.per_adapter_latency.get(name) {
+                        kvs.push(("ttft_p50_s", Json::Num(l.ttft_p50_s)));
+                        kvs.push(("ttft_p99_s", Json::Num(l.ttft_p99_s)));
+                        kvs.push(("tpot_p50_s", Json::Num(l.tpot_p50_s)));
+                        kvs.push(("tpot_p99_s", Json::Num(l.tpot_p99_s)));
+                    }
+                    (name.clone(), Json::obj(kvs))
                 })
                 .collect(),
         );
@@ -201,6 +265,7 @@ impl Stats {
             ("kv_blocks_total", Json::Num(self.kv_blocks_total as f64)),
             ("kv_frag_tokens", Json::Num(self.kv_frag_tokens as f64)),
             ("kv_frag_peak_tokens", Json::Num(self.kv_frag_peak_tokens as f64)),
+            ("slo_attainment", Json::Num(self.slo_attainment)),
             ("queue_depth", Json::Num(self.queue_depth.last().map(|(_, v)| v).unwrap_or(0.0))),
             ("queue_depth_max", Json::Num(self.queue_depth.max())),
             ("per_adapter", per_adapter),
@@ -229,6 +294,9 @@ pub struct GenerateJob {
     pub model: Option<String>,
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
+    /// Per-request SLO overrides (resolved against the coordinator's
+    /// default spec at submit time).
+    pub slo: SloOverride,
     pub events: Sender<TokenEvent>,
 }
 
@@ -798,6 +866,10 @@ fn handle_msg(
                 max_new_tokens: job.max_new_tokens,
                 eos_token: None,
                 arrival_s: now,
+                // Deadlines attach at submit time: wire-level `slo_*`
+                // overrides resolve against the deployment's configured
+                // spec; None (no overrides) inherits it wholesale.
+                slo: job.slo.resolve(&coord.cfg.slo),
             });
         }
         EngineMsg::Control(c) => {
@@ -857,6 +929,23 @@ fn publish_stats(
         s.kv_blocks_total = kv.blocks_total;
         s.kv_frag_tokens = kv.tokens_reserved_unused;
         s.kv_frag_peak_tokens = coord.kv_frag_peak_tokens();
+        // Live SLO view (DESIGN.md §9): attainment plus per-adapter
+        // TTFT/TPOT quantiles, resolved from bank slots back to model
+        // names (slot -1 = the base model = the "" key).
+        let tracker = coord.slo_live();
+        s.slo_attainment = tracker.attainment();
+        s.per_adapter_latency.clear();
+        let loaded = dir.list();
+        for slot in tracker.adapters() {
+            let name = if slot < 0 {
+                Some(String::new())
+            } else {
+                loaded.iter().find(|a| a.slot as i32 == slot).map(|a| a.name.clone())
+            };
+            if let (Some(name), Some(summary)) = (name, tracker.summary(slot)) {
+                s.per_adapter_latency.insert(name, summary);
+            }
+        }
         let depth = (coord.queue_len() + coord.preempted_len() + coord.active_len()) as f64;
         s.queue_depth.sample(t0.elapsed().as_secs_f64(), depth);
     }
@@ -907,8 +996,8 @@ fn handle_conn(
             }
         };
         let keep_going = match msg {
-            ClientMsg::Generate { prompt, model, max_new_tokens, stream } => handle_generate(
-                &mut writer, &fe, &encode, &decode, prompt, model, max_new_tokens, stream,
+            ClientMsg::Generate { prompt, model, max_new_tokens, stream, slo } => handle_generate(
+                &mut writer, &fe, &encode, &decode, prompt, model, max_new_tokens, stream, slo,
             ),
             ClientMsg::LoadAdapter { name, slot, source } => {
                 handle_control(&mut writer, &fe, ControlOp::Load { name, slot, source })
@@ -963,6 +1052,7 @@ fn handle_generate(
     model: Option<String>,
     max_new_tokens: usize,
     stream: bool,
+    slo: SloOverride,
 ) -> bool {
     let key = model.clone().unwrap_or_default();
     // Admission control: bounded queue + per-adapter fair share. A refusal
@@ -981,6 +1071,7 @@ fn handle_generate(
         model,
         prompt: encode(&prompt),
         max_new_tokens,
+        slo,
         events: events_tx,
     };
     if fe.send(EngineMsg::Generate(job)).is_err() {
@@ -1096,13 +1187,40 @@ mod tests {
     fn generate_defaults_and_stream_flag() {
         let m = ClientMsg::parse(r#"{"op":"generate","prompt":"hi","stream":true}"#).unwrap();
         match m {
-            ClientMsg::Generate { max_new_tokens, model, stream, .. } => {
+            ClientMsg::Generate { max_new_tokens, model, stream, slo, .. } => {
                 assert_eq!(max_new_tokens, 32);
                 assert!(model.is_none());
                 assert!(stream);
+                assert!(!slo.is_set(), "no slo_* keys = inherit the deployment spec");
             }
             _ => panic!(),
         }
+    }
+
+    #[test]
+    fn generate_parses_per_request_slo_overrides() {
+        let m = ClientMsg::parse(
+            r#"{"op":"generate","prompt":"hi","slo_max_waiting_s":2.5,"slo_max_decode_s":0.5}"#,
+        )
+        .unwrap();
+        let ClientMsg::Generate { slo, .. } = m else { panic!() };
+        assert_eq!(slo.max_waiting_s, Some(2.5));
+        assert_eq!(slo.mean_decode_s, None);
+        assert_eq!(slo.max_decode_s, Some(0.5));
+        // Partial overrides resolve against the deployment default.
+        let d = crate::metrics::SloSpec::default();
+        let spec = slo.resolve(&d).unwrap();
+        assert_eq!(spec.max_waiting_s, 2.5);
+        assert_eq!(spec.mean_decode_latency_s, d.mean_decode_latency_s);
+        assert_eq!(spec.max_decode_latency_s, 0.5);
+        // Negative bounds are ignored, not honored.
+        let m = ClientMsg::parse(
+            r#"{"op":"generate","prompt":"hi","slo_max_waiting_s":-1}"#,
+        )
+        .unwrap();
+        let ClientMsg::Generate { slo, .. } = m else { panic!() };
+        assert!(!slo.is_set());
+        assert!(slo.resolve(&d).is_none());
     }
 
     #[test]
@@ -1183,12 +1301,24 @@ mod tests {
             kv_blocks_total: 24,
             kv_frag_tokens: 13,
             kv_frag_peak_tokens: 99,
+            slo_attainment: 0.75,
             ..Default::default()
         };
         s.per_adapter.insert(
             "vm0".into(),
             AdapterCounters { submitted: 9, completed: 8, rejected: 1, decode_tokens: 70 },
         );
+        s.per_adapter_latency.insert(
+            "vm0".into(),
+            LatencySummary {
+                ttft_p50_s: 0.5,
+                ttft_p99_s: 2.0,
+                tpot_p50_s: 0.02,
+                tpot_p99_s: 0.25,
+            },
+        );
+        // A model with latency samples but no counters yet still appears.
+        s.per_adapter_latency.insert("vm1".into(), LatencySummary::default());
         s.queue_depth.sample(0.5, 3.0);
         let j = s.to_json().to_string();
         assert!(j.contains("\"queued\":1") && j.contains("\"finetune_tokens\":5"), "{j}");
@@ -1201,7 +1331,13 @@ mod tests {
                 && j.contains("\"kv_frag_peak_tokens\":99"),
             "{j}"
         );
+        assert!(j.contains("\"slo_attainment\":0.75"), "{j}");
         assert!(j.contains("\"vm0\":{\"submitted\":9"), "{j}");
+        assert!(
+            j.contains("\"ttft_p50_s\":0.5") && j.contains("\"tpot_p99_s\":0.25"),
+            "per-adapter latency quantiles serialize: {j}"
+        );
+        assert!(j.contains("\"vm1\":{\"submitted\":0"), "latency-only model appears: {j}");
         assert!(j.contains("\"queue_depth\":3"), "{j}");
         // And it parses back as JSON.
         assert!(json::parse(&j).is_ok());

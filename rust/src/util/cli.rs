@@ -1,9 +1,11 @@
 //! Tiny CLI flag parser: `--key value`, `--flag`, positional args — plus
-//! the shared `--backend` selector.
+//! the shared `--backend` and `--policy` selectors.
 
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
+
+use crate::coordinator::PolicyKind;
 
 /// Which execution backend a command should construct (`--backend`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -90,6 +92,18 @@ impl Args {
     pub fn threads_or_auto(&self) -> Result<usize> {
         self.usize_or("threads", 0)
     }
+
+    /// Parse `--policy fifo|slo` — which scheduling policy the coordinator
+    /// plans with (DESIGN.md §9). The PEFT policy is a baseline-internal
+    /// configuration, not a CLI surface.
+    pub fn policy_or(&self, default: PolicyKind) -> Result<PolicyKind> {
+        match self.get("policy") {
+            None => Ok(default),
+            Some("fifo") => Ok(PolicyKind::Fifo),
+            Some("slo") => Ok(PolicyKind::SloAware),
+            Some(other) => Err(anyhow!("--policy: unknown policy '{other}' (fifo|slo)")),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -121,6 +135,20 @@ mod tests {
         assert_eq!(args("--threads 4").threads_or_auto().unwrap(), 4);
         assert_eq!(args("").threads_or_auto().unwrap(), 0, "absent = 0 = auto");
         assert!(args("--threads lots").threads_or_auto().is_err());
+    }
+
+    #[test]
+    fn policy_selector_parses() {
+        assert_eq!(
+            args("--policy slo").policy_or(PolicyKind::Fifo).unwrap(),
+            PolicyKind::SloAware
+        );
+        assert_eq!(
+            args("--policy fifo").policy_or(PolicyKind::SloAware).unwrap(),
+            PolicyKind::Fifo
+        );
+        assert_eq!(args("").policy_or(PolicyKind::Fifo).unwrap(), PolicyKind::Fifo);
+        assert!(args("--policy edf").policy_or(PolicyKind::Fifo).is_err());
     }
 
     #[test]

@@ -53,6 +53,7 @@ pub fn build_trace(
             max_new_tokens: max_new,
             eos_token: None,
             arrival_s,
+            slo: None,
         });
     }
     requests.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));

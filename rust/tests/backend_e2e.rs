@@ -216,6 +216,7 @@ fn scenario_full_coordinator(be: &mut dyn Backend) {
             max_new_tokens: 4,
             eos_token: None,
             arrival_s: 0.0,
+            slo: None,
         });
     }
     let ex = |i: usize| TrainExample {

@@ -11,16 +11,21 @@
 //!    double free, ledger conserved across preempt/release/cancel;
 //!  * trainer isolation: per-job token accounting is conserved;
 //!  * a preempted-then-resumed request emits the identical token sequence
-//!    an unpreempted run emits (recompute-on-resume is output-transparent).
+//!    an unpreempted run emits (recompute-on-resume is output-transparent);
+//!  * chunked prefill is equally transparent (DESIGN.md §9): slicing a
+//!    prompt across steps changes no output bit on the native backend, at
+//!    any thread count — and the SLO-aware policy strictly beats FIFO on
+//!    the long-prompt burst it exists for.
 
 use std::collections::{BTreeMap, HashMap};
 
 use loquetier::coordinator::{
-    Coordinator, CoordinatorConfig, FinetuneJob, InferenceRequest, TrainExample,
+    Coordinator, CoordinatorConfig, FinetuneJob, InferenceRequest, PolicyKind, TrainExample,
 };
 use loquetier::engine::{CostModel, SimBackend};
-use loquetier::harness::native_stack_with_threads;
+use loquetier::harness::{self, native_stack_with_threads};
 use loquetier::kvcache::CacheConfig;
+use loquetier::metrics::SloSpec;
 use loquetier::runtime::{BucketTable, ModelGeometry, UnifiedShape};
 use loquetier::util::prop;
 use loquetier::util::rng::Rng;
@@ -105,6 +110,7 @@ fn prop_every_request_completes_exactly() {
                 max_new_tokens: max_new,
                 eos_token: None,
                 arrival_s: 0.0,
+                slo: None,
             });
         }
         drive(&mut c, &mut be, 20_000);
@@ -144,6 +150,7 @@ fn prop_kv_never_leaks_or_double_books() {
                 max_new_tokens: rng.range_usize(1, 10),
                 eos_token: None,
                 arrival_s: 0.0,
+                slo: None,
             });
         }
         let mut steps = 0;
@@ -229,6 +236,7 @@ fn prop_mixed_load_drains_with_bounded_overflow() {
                 max_new_tokens: rng.range_usize(1, 8),
                 eos_token: None,
                 arrival_s: rng.f64() * 2.0,
+                slo: None,
             });
         }
         let len = rng.range_usize(8, 32);
@@ -275,6 +283,7 @@ fn prop_fifo_admission_no_starvation() {
                 max_new_tokens: 4,
                 eos_token: None,
                 arrival_s: i as f64 * 0.01,
+                slo: None,
             });
         }
         let _ = rng;
@@ -332,6 +341,7 @@ fn prop_block_ledger_conserved_under_preemption_and_cancel() {
                 max_new_tokens: rng.range_usize(1, 16),
                 eos_token: None,
                 arrival_s: 0.0,
+                slo: None,
             });
         }
         let mut live: Vec<u64> = (0..n as u64).collect();
@@ -416,6 +426,7 @@ fn burst_on_demand_paging_beats_worst_case_reservation() {
                 max_new_tokens: 48,
                 eos_token: None,
                 arrival_s: 0.0,
+                slo: None,
             });
         }
         let mut emitted: HashMap<u64, Vec<i32>> = HashMap::new();
@@ -498,6 +509,7 @@ fn native_serve(total_blocks: usize, threads: usize) -> (BTreeMap<u64, Vec<i32>>
             max_new_tokens: 24,
             eos_token: None,
             arrival_s: 0.0,
+            slo: None,
         });
     }
     let mut outputs: BTreeMap<u64, Vec<i32>> = BTreeMap::new();
@@ -517,6 +529,138 @@ fn native_serve(total_blocks: usize, threads: usize) -> (BTreeMap<u64, Vec<i32>>
     assert_eq!(outputs.len(), 6);
     assert!(c.traces.iter().all(|t| !t.failed && t.output_tokens == 24));
     (outputs, c.preempted_total())
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler policy layer (DESIGN.md §9)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn slo_aware_chunked_prefill_beats_fifo_on_burst() {
+    // The acceptance workload lives in `harness::long_prompt_burst` —
+    // single-sourced with the figures bench (which gates CI on the same
+    // strict inequality), so the two assertions can never drift apart.
+    // `harness::policy_attainment` additionally asserts the scheduler's
+    // live attainment tracker equals the post-hoc trace report.
+    let cost = CostModel::default();
+    let (fifo, fifo_done) =
+        harness::policy_attainment(&cost, PolicyKind::Fifo, harness::long_prompt_burst());
+    let (slo, slo_done) =
+        harness::policy_attainment(&cost, PolicyKind::SloAware, harness::long_prompt_burst());
+    assert_eq!(fifo_done, 32, "every request completes under FIFO");
+    assert_eq!(slo_done, 32, "every request completes under SLO-aware");
+    assert!(
+        slo > fifo,
+        "SLO-aware chunked prefill must strictly beat FIFO on the burst ({slo} !> {fifo})"
+    );
+    assert!(slo >= 0.9, "chunked prefill must hold the burst's SLO ({slo})");
+}
+
+/// Chunked-prefill output transparency on REAL numerics: splitting a
+/// prompt's prefill across steps must not change one bit of any stream's
+/// output (per-row math is independent of launch composition — DESIGN.md
+/// §7 — and chunk k attends over chunks 0..k through the KV arena with
+/// correct RoPE offsets), nor any trainer loss (micro-batches of one walk
+/// the dataset in order regardless of step pacing). Mirrors the PR-4
+/// preemption-transparency test, for chunks instead of preemptions.
+fn native_chunked_serve(
+    chunk_tokens: usize,
+    threads: usize,
+) -> (BTreeMap<u64, Vec<i32>>, Vec<f32>, usize) {
+    let (mut be, _reg, _manifest) = native_stack_with_threads(42, threads).unwrap();
+    let mut c = Coordinator::new(
+        CoordinatorConfig {
+            policy: PolicyKind::SloAware,
+            prefill_chunk_tokens: chunk_tokens,
+            max_prompt_tokens: 16,
+            drop_after_s: 1e9,
+            // Effectively-infinite deadlines: the chunking is what is
+            // under test, not headroom throttling (which may differ
+            // between pacings without affecting any output bit).
+            slo: SloSpec {
+                max_waiting_s: 1e9,
+                mean_decode_latency_s: 1e9,
+                max_decode_latency_s: 1e9,
+            },
+            ..Default::default()
+        },
+        CacheConfig {
+            num_slots: 8,
+            slot_capacity: 160,
+            block_tokens: 16,
+            total_blocks: 80,
+            num_layers: 2,
+            token_elems: 16,
+        },
+    );
+    for i in 0..6u64 {
+        c.submit(InferenceRequest {
+            id: i,
+            // Adapters -1..2 only: the trainer owns slot 3, so optimizer
+            // timing differences can never touch a served row.
+            adapter: (i as i32 % 4) - 1,
+            prompt: (0..12).map(|k| ((i as i32) * 31 + k * 7 + 3) % 512).collect(),
+            max_new_tokens: 8,
+            eos_token: None,
+            arrival_s: 0.0,
+            slo: None,
+        });
+    }
+    c.add_trainer(FinetuneJob {
+        id: 9,
+        adapter: 3,
+        train_set: (0..4)
+            .map(|i| TrainExample {
+                tokens: (0..12).map(|k| ((i * 13 + k * 3 + 1) as i32) % 512).collect(),
+                labels: (0..12).map(|k| ((i * 13 + k * 3 + 1) as i32) % 512).collect(),
+            })
+            .collect(),
+        eval_set: vec![],
+        epochs: 1,
+        // Batch-of-one micro-steps: the (example, optimizer) sequence is
+        // identical under any pacing, so losses compare bitwise.
+        per_device_batch: 1,
+        grad_accum: 2,
+        lr: 1e-3,
+        eval_each_epoch: false,
+    });
+    let mut outputs: BTreeMap<u64, Vec<i32>> = BTreeMap::new();
+    let mut prefill_slices = 0usize;
+    let mut steps = 0;
+    while !c.quiescent() && steps < 5_000 {
+        let out = c.step(&mut be).unwrap();
+        c.kv.audit_ledger().unwrap();
+        prefill_slices += out.prefilled_seqs;
+        for (id, toks) in out.completed_outputs {
+            outputs.insert(id, toks);
+        }
+        if out.idle {
+            break;
+        }
+        steps += 1;
+    }
+    assert!(c.quiescent(), "chunked serve drained (steps={steps})");
+    assert_eq!(outputs.len(), 6);
+    assert!(c.traces.iter().all(|t| !t.failed && t.output_tokens == 8));
+    (outputs, c.trainers()[0].losses.clone(), prefill_slices)
+}
+
+#[test]
+fn native_chunked_prefill_is_output_transparent_and_thread_invariant() {
+    // chunk 5 over 12-token prompts: three slices each (5 + 5 + 2).
+    let (chunked_t1, losses_c1, slices_c) = native_chunked_serve(5, 1);
+    let (unchunked, losses_u, slices_u) = native_chunked_serve(0, 1);
+    assert_eq!(slices_u, 6, "chunk 0 = one whole-prompt slice per request");
+    assert_eq!(slices_c, 18, "chunk 5 must split every 12-token prompt in three");
+    assert_eq!(
+        chunked_t1, unchunked,
+        "chunked vs unchunked prefill must be bitwise identical per stream"
+    );
+    assert_eq!(losses_c1, losses_u, "trainer losses must be bitwise identical");
+
+    let (chunked_t4, losses_c4, _) = native_chunked_serve(5, 4);
+    assert_eq!(chunked_t1, chunked_t4, "threads 1 vs 4 must be bitwise identical");
+    assert_eq!(losses_c1, losses_c4, "losses thread-invariant too");
 }
 
 #[test]

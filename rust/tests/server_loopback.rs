@@ -255,6 +255,7 @@ fn disconnected_client_generation_is_cancelled() {
             model: None,
             prompt: vec![1, 2, 3],
             max_new_tokens: 50,
+            slo: Default::default(),
             events: ev_tx,
         }))
         .unwrap();
@@ -428,6 +429,7 @@ fn unload_refused_while_adapter_busy() {
             model: Some("hot".into()),
             prompt: vec![1, 2, 3],
             max_new_tokens: 80,
+            slo: Default::default(),
             events: ev_tx,
         }))
         .unwrap();
