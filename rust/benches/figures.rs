@@ -8,9 +8,12 @@
 //! requests, preempt-and-recompute events, peak `tokens_reserved_unused`
 //! fragmentation — plus the FIFO-vs-SLO-aware attainment comparison
 //! (`fig{2,6}_slo_attainment_{fifo,slo}`, asserting SLO-aware + chunked
-//! prefill strictly wins the fig6-style burst) as one entry to the
-//! repo-root `BENCH_FIGURES.json` trajectory, whose shape CI validates
-//! with jq (protocols: EXPERIMENTS.md §Fragmentation, §SLO).
+//! prefill strictly wins the fig6-style burst) and the Zipfian
+//! 1000-adapter paging comparison (`fig_zipf_attainment_{fixed,paged}` +
+//! swap counters, asserting unified adapter+KV paging strictly beats the
+//! fixed-slot baseline) as one entry to the repo-root
+//! `BENCH_FIGURES.json` trajectory, whose shape CI validates with jq
+//! (protocols: EXPERIMENTS.md §Fragmentation, §SLO, §Zipfian).
 //!
 //! Run: cargo bench --bench figures
 //! CI smoke: cargo bench --bench figures -- --fast   (counters only)
@@ -166,6 +169,52 @@ fn slo_attainment_entries(cost: &CostModel) -> Vec<(String, f64)> {
     entries
 }
 
+/// Zipfian 1000-adapter acceptance entries (ISSUE-6, DESIGN.md §10): the
+/// same reduced workload as `scheduler_props::zipfian_paged_adapters_beat_
+/// fixed_slot_baseline`, run once with the fixed-slot baseline (finite
+/// resident bank, no host tier — over-budget adapters rejected at
+/// admission) and once with unified adapter+KV paging (host tier + LRU
+/// swap, swap latency charged). Paged must strictly beat fixed on both
+/// completions and SLO attainment under the same step budget; CI re-gates
+/// the recorded attainment pair with jq.
+fn zipf_paging_entries(cost: &CostModel) -> Vec<(String, f64)> {
+    let fixed = harness::zipf_paging_outcome(cost, false);
+    let paged = harness::zipf_paging_outcome(cost, true);
+    println!(
+        "zipf paging: fixed completed={} attainment={:.4} swaps={} | \
+         paged completed={} attainment={:.4} swaps={} resident={} host={}",
+        fixed.completed,
+        fixed.attainment,
+        fixed.swaps,
+        paged.completed,
+        paged.attainment,
+        paged.swaps,
+        paged.resident,
+        paged.host,
+    );
+    assert!(
+        paged.attainment > fixed.attainment,
+        "zipf: paged adapters must strictly beat fixed-slot on attainment ({} !> {})",
+        paged.attainment,
+        fixed.attainment
+    );
+    assert!(
+        paged.completed > fixed.completed,
+        "zipf: paged adapters must strictly beat fixed-slot on completions ({} !> {})",
+        paged.completed,
+        fixed.completed
+    );
+    vec![
+        ("fig_zipf_attainment_fixed".to_string(), fixed.attainment),
+        ("fig_zipf_attainment_paged".to_string(), paged.attainment),
+        ("fig_zipf_completed_fixed".to_string(), fixed.completed as f64),
+        ("fig_zipf_completed_paged".to_string(), paged.completed as f64),
+        ("fig_zipf_swaps_paged".to_string(), paged.swaps as f64),
+        ("fig_zipf_resident_paged".to_string(), paged.resident as f64),
+        ("fig_zipf_host_paged".to_string(), paged.host as f64),
+    ]
+}
+
 fn record_figures_trajectory(entries: &[(String, f64)]) -> anyhow::Result<()> {
     // Best-effort read, same policy as BENCH_SMLM.json: a missing or
     // mangled file starts a fresh trajectory instead of losing this run.
@@ -199,6 +248,7 @@ fn main() -> anyhow::Result<()> {
     // (always; this is all `--fast` runs).
     let mut entries = paged_counters(&cost);
     entries.extend(slo_attainment_entries(&cost));
+    entries.extend(zipf_paging_entries(&cost));
     record_figures_trajectory(&entries)?;
     if fast {
         return Ok(());

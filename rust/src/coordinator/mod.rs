@@ -26,7 +26,7 @@ pub use policy::{PolicyKind, SchedulePolicy};
 pub use request::{ActiveRequest, FinetuneJob, InferenceRequest, Phase, TrainExample};
 pub use trainer::{TrainerPhase, TrainerState};
 
-use std::collections::VecDeque;
+use std::collections::{BTreeSet, VecDeque};
 
 use anyhow::Result;
 
@@ -68,6 +68,22 @@ pub struct CoordinatorConfig {
     /// tokens per prefill slice, so one long prompt cannot blow co-running
     /// streams' TPOT (0 = never chunk; `FifoPolicy` never chunks).
     pub prefill_chunk_tokens: usize,
+    /// Max adapters resident on-device at once (unified paging, DESIGN.md
+    /// §10). `usize::MAX` (the default) = unbounded: every adapter loads
+    /// once and stays — the exact pre-paging behaviour. A finite budget
+    /// turns the pager on: cold residents are evicted LRU-first to the
+    /// host tier (`adapter_paging = true`) or overflow admissions fail
+    /// outright (`adapter_paging = false`, the fixed-slot baseline).
+    pub adapter_budget: usize,
+    /// KV-pool blocks each resident adapter's A/B pages claim from the
+    /// unified block ledger (0 = adapters cost no blocks — the pre-paging
+    /// ledger; S-LoRA's unified memory pool sets this > 0 so adapter
+    /// weights and KV compete for the same memory).
+    pub adapter_page_blocks: usize,
+    /// Swap cold adapters host↔device on demand (true) vs. treat the
+    /// resident set as fixed slots whose overflow admissions fail (false —
+    /// the fixed-slot ablation the Zipfian acceptance test beats).
+    pub adapter_paging: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -82,6 +98,9 @@ impl Default for CoordinatorConfig {
             max_prompt_tokens: 64,
             policy: PolicyKind::Fifo,
             prefill_chunk_tokens: 256,
+            adapter_budget: usize::MAX,
+            adapter_page_blocks: 0,
+            adapter_paging: true,
         }
     }
 }
@@ -113,6 +132,142 @@ pub struct StepOutcome {
     pub optimizer_steps: usize,
     /// Nothing to do (driver should advance the clock to the next arrival).
     pub idle: bool,
+}
+
+/// The unified-paging adapter pager (DESIGN.md §10): residency accounting
+/// for adapter A/B pages inside the same block ledger KV lives in.
+///
+/// The pager decides *which* adapters are device-resident and charges their
+/// pages to [`KvCacheManager::claim_adapter_blocks`]; actual weight movement
+/// is the registry/backend pair's job (`VirtualizedRegistry::evict_to_host`/
+/// `swap_in` + `Backend::sync_adapters`) — drivers running real backends
+/// reconcile the registry against `resident_list()` between steps, and the
+/// sim backend only needs the swap *count* for its cost model.
+///
+/// Swap accounting: the first-ever touch of an unregistered adapter is a
+/// cold load (free — registration-time uploads happen before serving);
+/// bringing back an adapter that is *known* but not resident is a swap-in,
+/// and every eviction is a swap-out. With the default unbounded budget
+/// nothing is ever evicted, so no swap is ever counted or charged.
+#[derive(Debug)]
+struct AdapterPager {
+    budget: usize,
+    page_blocks: usize,
+    paging: bool,
+    /// Resident adapters in LRU order: coldest first, hottest last.
+    lru: VecDeque<i32>,
+    /// Training adapters pinned resident until `unpin` (their device state
+    /// is authoritative mid-job; evicting one would lose optimizer-fresh
+    /// weights that `checkpoint_adapters` has not written back yet).
+    pinned: BTreeSet<i32>,
+    /// Every adapter id ever registered or touched (the host-tier universe).
+    known: BTreeSet<i32>,
+    swaps_in: u64,
+    swaps_out: u64,
+}
+
+impl AdapterPager {
+    fn new(budget: usize, page_blocks: usize, paging: bool) -> Self {
+        Self {
+            budget,
+            page_blocks,
+            paging,
+            lru: VecDeque::new(),
+            pinned: BTreeSet::new(),
+            known: BTreeSet::new(),
+            swaps_in: 0,
+            swaps_out: 0,
+        }
+    }
+
+    fn is_resident(&self, adapter: i32) -> bool {
+        self.lru.contains(&adapter)
+    }
+
+    /// Could this adapter EVER serve here? Always true with paging on; in
+    /// fixed-slot mode only residents and adapters with a free slot left.
+    fn can_host(&self, adapter: i32) -> bool {
+        adapter < 0 || self.paging || self.is_resident(adapter) || self.lru.len() < self.budget
+    }
+
+    /// Evict the coldest unpinned resident, releasing its page claim.
+    /// False when everything resident is pinned.
+    fn evict_one(&mut self, kv: &mut KvCacheManager) -> bool {
+        let Some(pos) = self.lru.iter().position(|a| !self.pinned.contains(a)) else {
+            return false;
+        };
+        let victim = self.lru.remove(pos).expect("position is in range");
+        let _ = kv.release_adapter_blocks(victim);
+        self.swaps_out += 1;
+        true
+    }
+
+    /// Make `adapter` resident for this step's work, evicting LRU as needed
+    /// (for the budget, then for the block pool). Returns the number of
+    /// swap-ins performed (0 or 1), or None when the adapter cannot be made
+    /// resident — fixed-slot overflow, or a pool so tight that even after
+    /// evicting every unpinned resident its pages do not fit (the caller
+    /// skips that work this step; completions free blocks and it retries).
+    fn ensure_resident(&mut self, adapter: i32, kv: &mut KvCacheManager) -> Option<usize> {
+        if adapter < 0 {
+            return Some(0);
+        }
+        if self.is_resident(adapter) {
+            let pos = self.lru.iter().position(|&a| a == adapter).expect("is_resident");
+            self.lru.remove(pos);
+            self.lru.push_back(adapter);
+            return Some(0);
+        }
+        if !self.paging && self.lru.len() >= self.budget {
+            return None;
+        }
+        let was_known = !self.known.insert(adapter);
+        // Budget eviction first. If every resident is pinned the set runs
+        // over budget rather than deadlocking a trainer against a decode.
+        while self.lru.len() >= self.budget {
+            if !self.evict_one(kv) {
+                break;
+            }
+        }
+        // Page claim from the unified ledger; evict further if the pool
+        // itself (not the budget) is what is tight.
+        while !kv.claim_adapter_blocks(adapter, self.page_blocks) {
+            if !self.evict_one(kv) {
+                return None;
+            }
+        }
+        self.lru.push_back(adapter);
+        if was_known && self.paging {
+            self.swaps_in += 1;
+            Some(1)
+        } else {
+            Some(0)
+        }
+    }
+
+    /// Prefetch hint: bring `adapter` resident only if spare budget AND
+    /// free blocks exist — a hint never evicts. Returns swap-ins (0 or 1).
+    fn prefetch(&mut self, adapter: i32, kv: &mut KvCacheManager) -> usize {
+        if adapter < 0 || !self.paging || self.is_resident(adapter) || self.lru.len() >= self.budget
+        {
+            return 0;
+        }
+        if !kv.claim_adapter_blocks(adapter, self.page_blocks) {
+            return 0;
+        }
+        let was_known = !self.known.insert(adapter);
+        self.lru.push_back(adapter);
+        if was_known {
+            self.swaps_in += 1;
+            1
+        } else {
+            0
+        }
+    }
+
+    fn resident_list(&self) -> Vec<i32> {
+        self.lru.iter().copied().collect()
+    }
 }
 
 /// The unified serving+training coordinator (the plan *executor*).
@@ -152,6 +307,10 @@ pub struct Coordinator {
     slo_live: SloTracker,
     finetune_tokens: u64,
     eval_tokens: u64,
+    /// Unified adapter paging: residency, pins, swap counters (DESIGN.md
+    /// §10). Inert (never swaps, claims zero-block pages) at the default
+    /// `adapter_budget = usize::MAX` / `adapter_page_blocks = 0`.
+    pager: AdapterPager,
 }
 
 impl Coordinator {
@@ -167,6 +326,8 @@ impl Coordinator {
         policy: Box<dyn SchedulePolicy>,
     ) -> Self {
         let capacity = CapacityAllocator::new(cfg.capacity.clone());
+        let pager =
+            AdapterPager::new(cfg.adapter_budget, cfg.adapter_page_blocks, cfg.adapter_paging);
         Self {
             cfg,
             kv: KvCacheManager::new(cache_cfg),
@@ -187,6 +348,7 @@ impl Coordinator {
             slo_live: SloTracker::default(),
             finetune_tokens: 0,
             eval_tokens: 0,
+            pager,
         }
     }
 
@@ -268,6 +430,54 @@ impl Coordinator {
         v.sort_unstable();
         v.dedup();
         v
+    }
+
+    /// Register an adapter with the pager's host-tier universe without
+    /// making it resident (the 1000-tenant registration path: a later
+    /// first touch is then accounted — and charged — as a real swap-in,
+    /// not a free cold load).
+    pub fn register_adapter(&mut self, adapter: i32) {
+        if adapter >= 0 {
+            self.pager.known.insert(adapter);
+        }
+    }
+
+    /// Release a training adapter's residency pin (call after
+    /// `Backend::checkpoint_adapters` has written its weights back to the
+    /// registry's host mirror — before that, eviction would lose them).
+    pub fn unpin_adapter(&mut self, adapter: i32) {
+        self.pager.pinned.remove(&adapter);
+    }
+
+    /// Is this adapter pinned resident by a live training job?
+    pub fn adapter_pinned(&self, adapter: i32) -> bool {
+        self.pager.pinned.contains(&adapter)
+    }
+
+    /// Is this adapter currently device-resident per the pager?
+    pub fn adapter_is_resident(&self, adapter: i32) -> bool {
+        self.pager.is_resident(adapter)
+    }
+
+    /// Total adapter swaps (in + out) over the run.
+    pub fn adapter_swaps(&self) -> u64 {
+        self.pager.swaps_in + self.pager.swaps_out
+    }
+
+    /// Host→device adapter swap-ins over the run (the latency-charged leg).
+    pub fn adapter_swap_ins(&self) -> u64 {
+        self.pager.swaps_in
+    }
+
+    /// Adapters currently device-resident.
+    pub fn adapter_resident(&self) -> usize {
+        self.pager.lru.len()
+    }
+
+    /// Known adapters currently parked on the host tier (registered or
+    /// once-resident, not resident now).
+    pub fn adapter_host(&self) -> usize {
+        self.pager.known.len() - self.pager.lru.iter().filter(|a| self.pager.known.contains(a)).count()
     }
 
     /// Can a request with this shape EVER be admitted under the current
@@ -449,6 +659,8 @@ impl Coordinator {
                     per_device_batch: t.job.per_device_batch,
                 })
                 .collect(),
+            resident_adapters: self.pager.resident_list(),
+            adapter_budget: self.pager.budget,
         }
     }
 
@@ -458,7 +670,11 @@ impl Coordinator {
     /// against the same ledger counters, so these allocations cannot fail
     /// — but a custom policy's infeasible admission degrades gracefully
     /// (the request stays queued for a later step; debug builds assert).
-    fn apply_admissions(&mut self, plan: &StepPlan) {
+    /// Returns the ids rejected outright because their adapter can never be
+    /// hosted (fixed-slot mode with the bank full — leaving them queued
+    /// would livelock: no swap path will ever free them a slot).
+    fn apply_admissions(&mut self, plan: &StepPlan) -> Vec<u64> {
+        let mut rejected = Vec::new();
         for _ in 0..plan.admit_preempted {
             let Some(mut a) = self.preempted.pop_front() else { break };
             let need = a.req.prompt.len();
@@ -473,7 +689,7 @@ impl Coordinator {
                     // prefix rule means nothing behind it may enter either.
                     debug_assert!(false, "policy planned an unallocatable resume");
                     self.preempted.push_front(a);
-                    return;
+                    return rejected;
                 }
             }
         }
@@ -486,6 +702,25 @@ impl Coordinator {
                 let Some(p) = self.queue.iter().position(|r| r.id == id) else { continue };
                 p
             };
+            if !self.pager.can_host(self.queue[pos].adapter) {
+                // Fixed-slot mode, bank full, adapter not resident: this
+                // request can NEVER be served here. Fail it now — the
+                // fixed-slot baseline's honest cost, and exactly what the
+                // paged configuration avoids by swapping the adapter in.
+                let r = self.queue.remove(pos).expect("position is in range");
+                let slo = self.effective_slo(r.slo);
+                rejected.push(r.id);
+                self.finish_trace(
+                    RequestTrace {
+                        arrival_s: r.arrival_s,
+                        input_tokens: r.prompt.len(),
+                        failed: true,
+                        ..Default::default()
+                    },
+                    slo,
+                );
+                continue;
+            }
             let mut req = self.queue.remove(pos).expect("position is in range");
             let need = self.admission_need(req.prompt.len(), req.max_new_tokens);
             if !self.kv.can_admit(need) {
@@ -508,6 +743,7 @@ impl Coordinator {
                 .expect("can_admit checked allocation");
             self.active.push(ActiveRequest::new(req, slot));
         }
+        rejected
     }
 
     /// Preempt one active request by id: release its KV and park it in the
@@ -570,10 +806,94 @@ impl Coordinator {
         let plan = self.policy.plan(&view);
 
         // --- Apply the plan ------------------------------------------------
-        self.apply_admissions(&plan);
+        out.dropped_requests.extend(self.apply_admissions(&plan));
         for &id in &plan.preempt {
             if self.preempt_by_id(id)? {
                 out.preempted_requests.push(id);
+            }
+        }
+
+        // --- Unified adapter paging (DESIGN.md §10) -------------------------
+        // Every adapter this step's planned work touches must be resident
+        // before the launch: page claims come out of the same block ledger
+        // KV allocates from, evictions are LRU over unpinned residents, and
+        // each swap-in is charged below via `Backend::adapter_swap_cost`.
+        // Work whose adapter cannot be made resident this step (pool
+        // exhausted even after evicting every unpinned resident) is simply
+        // skipped — the request stays active and retries as blocks free up.
+        let mut swap_ins = 0usize;
+        let mut blocked_adapters: BTreeSet<i32> = BTreeSet::new();
+        let mut needed: Vec<i32> = Vec::new();
+        for &id in plan.decode.iter().chain(plan.prefill.iter().map(|sl| &sl.id)) {
+            if let Some(a) = self.active.iter().find(|a| a.req.id == id) {
+                needed.push(a.req.adapter);
+            }
+        }
+        if plan.ft_budget > 0 {
+            needed.extend(self.trainers.iter().filter(|t| !t.done()).map(|t| t.job.adapter));
+        }
+        needed.sort_unstable();
+        needed.dedup();
+        // A previous step may have over-committed (its whole working set
+        // outranked the budget): evict back down LRU-first before this
+        // step's residency is settled.
+        while self.pager.lru.len() > self.pager.budget {
+            if !self.pager.evict_one(&mut self.kv) {
+                break;
+            }
+        }
+        // The step's working set must be co-resident for its one launch:
+        // pin it for the duration of the ensure pass so ensuring adapter B
+        // cannot evict adapter A that the same launch reads. The set may
+        // exceed the budget transiently; the shrink above reclaims next
+        // step.
+        let step_pins: Vec<i32> = needed
+            .iter()
+            .copied()
+            .filter(|&a| a >= 0 && !self.pager.pinned.contains(&a))
+            .collect();
+        self.pager.pinned.extend(step_pins.iter().copied());
+        for &adapter in &needed {
+            match self.pager.ensure_resident(adapter, &mut self.kv) {
+                Some(n) => swap_ins += n,
+                None => {
+                    blocked_adapters.insert(adapter);
+                }
+            }
+        }
+        for a in step_pins {
+            self.pager.pinned.remove(&a);
+        }
+        // Training adapters pin resident until `unpin_adapter` (after
+        // checkpoint): mid-job eviction would lose optimizer-fresh weights.
+        if plan.ft_budget > 0 {
+            for t in self.trainers.iter().filter(|t| !t.done()) {
+                if t.job.adapter >= 0 && !blocked_adapters.contains(&t.job.adapter) {
+                    self.pager.pinned.insert(t.job.adapter);
+                }
+            }
+        }
+        // Prefetch hints ride whatever budget is left; a hint never evicts.
+        for &adapter in &plan.prefetch {
+            swap_ins += self.pager.prefetch(adapter, &mut self.kv);
+        }
+        // Fixed-slot mode has no swap path, so a blocked adapter is blocked
+        // FOREVER (residents are never evicted): fail its active requests
+        // now — `can_host` at admission can race a same-step bank fill-up,
+        // and leaving the losers active would wedge the run.
+        if !self.pager.paging && !blocked_adapters.is_empty() {
+            let mut j = 0;
+            while j < self.active.len() {
+                if blocked_adapters.contains(&self.active[j].req.adapter) {
+                    let mut a = self.active.swap_remove(j);
+                    a.trace.failed = true;
+                    self.kv.release(a.kv_slot)?;
+                    out.dropped_requests.push(a.req.id);
+                    let slo = self.effective_slo(a.req.slo);
+                    self.finish_trace(a.trace, slo);
+                } else {
+                    j += 1;
+                }
             }
         }
 
@@ -585,8 +905,18 @@ impl Coordinator {
         for &id in &plan.decode {
             let Some(i) = self.active.iter().position(|a| a.req.id == id) else { continue };
             debug_assert_eq!(self.active[i].phase, Phase::Decoding);
+            if blocked_adapters.contains(&self.active[i].req.adapter) {
+                continue; // adapter not resident this step: row sits out
+            }
             if !self.kv.reserve_decode_block(self.active[i].kv_slot) {
-                debug_assert!(false, "policy planned an unreservable decode row");
+                // With paging active, a same-step adapter page claim may
+                // have legitimately consumed the block the plan counted on
+                // — the row sits out and retries. With the pager inert this
+                // can only be a policy bug.
+                debug_assert!(
+                    self.pager.budget != usize::MAX || self.pager.page_blocks > 0,
+                    "policy planned an unreservable decode row"
+                );
                 continue;
             }
             dec_idx.push(i);
@@ -615,6 +945,9 @@ impl Coordinator {
         for sl in &plan.prefill {
             let Some(i) = self.active.iter().position(|a| a.req.id == sl.id) else { continue };
             let a = &self.active[i];
+            if blocked_adapters.contains(&a.req.adapter) {
+                continue; // adapter not resident this step: slice sits out
+            }
             let start = a.prefill_pos;
             let end = (start + sl.tokens).min(a.req.prompt.len());
             if end <= start {
@@ -636,7 +969,7 @@ impl Coordinator {
         if plan.ft_budget > 0 {
             let mut remaining = plan.ft_budget;
             for (ti, t) in self.trainers.iter().enumerate() {
-                if t.done() || remaining == 0 {
+                if t.done() || remaining == 0 || blocked_adapters.contains(&t.job.adapter) {
                     continue;
                 }
                 let batch = t.peek_batch(remaining);
@@ -679,6 +1012,10 @@ impl Coordinator {
         // inference-only phases to split prefill + decode launches.
         let step_start = self.now_s;
         let mut cost = StepCost::default();
+        // Swap latency first: the pages must be on-device before the launch
+        // reads them (sim backends charge `cost.adapter_swap_s` per swap-in;
+        // real backends copy inside `sync_adapters` and charge zero here).
+        cost.add(backend.adapter_swap_cost(swap_ins));
         let (ft_losses, pf_logits, dec_logits);
         if self.cfg.use_unified && caps.unified_entry {
             let (u, c) = backend.unified(&ft_seqs, &pf_seqs, &dec_rows, &mut self.kv)?;
@@ -1438,5 +1775,151 @@ mod tests {
             ft_late <= ft_early,
             "fine-tune work must not grow under sustained load ({ft_early} -> {ft_late})"
         );
+    }
+
+    // --- Unified adapter paging (DESIGN.md §10) ---------------------------
+
+    #[test]
+    fn paged_adapters_swap_under_a_tight_budget_and_ledger_stays_conserved() {
+        // Budget 1, two live adapters: the working set over-commits each
+        // step and the shrink pass evicts LRU between steps, so the run
+        // must record real swap traffic while every request still drains.
+        let mut c = Coordinator::new(
+            CoordinatorConfig {
+                max_prompt_tokens: 32,
+                adapter_budget: 1,
+                adapter_page_blocks: 1,
+                ..Default::default()
+            },
+            CacheConfig {
+                num_slots: 8,
+                slot_capacity: 96,
+                block_tokens: 16,
+                total_blocks: 48,
+                num_layers: 2,
+                token_elems: 16,
+            },
+        );
+        let mut be = backend();
+        c.register_adapter(0);
+        c.register_adapter(1);
+        c.submit(req(1, 0, 8, 6, 0.0));
+        c.submit(req(2, 1, 8, 6, 0.0));
+        let mut steps = 0;
+        while !c.quiescent() && steps < 500 {
+            let o = c.step(&mut be).unwrap();
+            c.kv.audit_ledger().unwrap();
+            let st = c.kv.stats();
+            assert!(st.adapter_blocks <= 2, "at most the working set holds pages");
+            if o.idle {
+                break;
+            }
+            steps += 1;
+        }
+        assert!(c.quiescent());
+        assert_eq!(c.traces.len(), 2);
+        assert!(c.traces.iter().all(|t| !t.failed), "paging must be output-transparent");
+        assert!(c.adapter_swaps() > 0, "budget 1 with 2 adapters must swap");
+        assert_eq!(c.adapter_resident() + c.adapter_host(), 2, "universe is conserved");
+        // Swap latency was charged: the sim cost model adds adapter_swap_s
+        // per swap-in on top of the launch costs.
+        assert!(c.now_s > 0.0);
+    }
+
+    #[test]
+    fn fixed_slot_mode_fails_unhostable_admissions_instead_of_livelocking() {
+        let mut c = Coordinator::new(
+            CoordinatorConfig {
+                max_prompt_tokens: 32,
+                adapter_budget: 1,
+                adapter_paging: false,
+                ..Default::default()
+            },
+            CacheConfig {
+                num_slots: 8,
+                slot_capacity: 96,
+                block_tokens: 16,
+                total_blocks: 48,
+                num_layers: 2,
+                token_elems: 16,
+            },
+        );
+        let mut be = backend();
+        c.submit(req(1, 0, 8, 4, 0.0));
+        c.submit(req(2, 1, 8, 4, 0.0)); // adapter 1 can never be hosted
+        let mut dropped = Vec::new();
+        let mut steps = 0;
+        while !c.quiescent() && steps < 500 {
+            let o = c.step(&mut be).unwrap();
+            dropped.extend(o.dropped_requests);
+            if o.idle {
+                break;
+            }
+            steps += 1;
+        }
+        assert!(c.quiescent(), "the unhostable request must not wedge the run");
+        assert_eq!(dropped, vec![2], "overflow admission fails back to the client");
+        assert_eq!(c.adapter_swaps(), 0, "fixed-slot mode never swaps");
+        let ok: Vec<bool> = c.traces.iter().map(|t| !t.failed).collect();
+        assert_eq!(ok.iter().filter(|&&b| b).count(), 1);
+        assert_eq!(ok.iter().filter(|&&b| !b).count(), 1);
+    }
+
+    #[test]
+    fn training_adapter_stays_pinned_until_released() {
+        let mut c = Coordinator::new(
+            CoordinatorConfig {
+                max_prompt_tokens: 32,
+                adapter_budget: 1,
+                adapter_page_blocks: 1,
+                ..Default::default()
+            },
+            CacheConfig {
+                num_slots: 8,
+                slot_capacity: 96,
+                block_tokens: 16,
+                total_blocks: 48,
+                num_layers: 2,
+                token_elems: 16,
+            },
+        );
+        let mut be = backend();
+        let ex = |i: usize| TrainExample { tokens: vec![i as i32; 16], labels: vec![i as i32; 16] };
+        c.add_trainer(FinetuneJob {
+            id: 1,
+            adapter: 3,
+            train_set: (0..8).map(ex).collect(),
+            eval_set: vec![],
+            epochs: 1,
+            per_device_batch: 2,
+            grad_accum: 2,
+            lr: 1e-3,
+            eval_each_epoch: false,
+        });
+        // Inference churn on other adapters competes for the single slot.
+        for i in 0..4 {
+            c.submit(req(i, (i % 2) as i32, 8, 4, 0.0));
+        }
+        let mut steps = 0;
+        while !c.quiescent() && steps < 1000 {
+            let o = c.step(&mut be).unwrap();
+            c.kv.audit_ledger().unwrap();
+            if c.adapter_pinned(3) {
+                assert!(
+                    c.adapter_is_resident(3),
+                    "a pinned training adapter must never be evicted (step {steps})"
+                );
+            }
+            if o.idle {
+                break;
+            }
+            steps += 1;
+        }
+        assert!(c.quiescent());
+        assert!(c.adapter_pinned(3), "the pin outlives the job until checkpoint");
+        assert!(c.adapter_is_resident(3));
+        c.unpin_adapter(3);
+        assert!(!c.adapter_pinned(3));
+        assert!(c.traces.iter().all(|t| !t.failed));
     }
 }

@@ -32,6 +32,8 @@
 //! [`KvSim`] helper tracks the hypothetical ledger so policies get this
 //! right by construction.
 
+use std::collections::BTreeSet;
+
 use crate::coordinator::request::Phase;
 use crate::metrics::SloSpec;
 
@@ -164,6 +166,13 @@ pub struct SchedView {
     /// Active requests, in the coordinator's vector order.
     pub active: Vec<ActiveView>,
     pub trainers: Vec<TrainerView>,
+    /// Adapters currently device-resident (unified paging, DESIGN.md §10) —
+    /// LRU order, coldest first. Policies use this to prefer work whose
+    /// adapter is already loaded and to plan prefetch for work that is not.
+    pub resident_adapters: Vec<i32>,
+    /// Resident-adapter budget (`usize::MAX` = unbounded: paging inactive,
+    /// residency carries no scheduling signal).
+    pub adapter_budget: usize,
 }
 
 impl SchedView {
@@ -214,6 +223,11 @@ pub struct StepPlan {
     /// fraction of the tightest bound; negative = a deadline already
     /// blown). `Some` feeds `CapacityAllocator::observe_slack`.
     pub slo_headroom: Option<f64>,
+    /// Adapters to swap in *ahead of need* (unified paging): upcoming
+    /// queued work whose adapter is not resident. The executor honours a
+    /// hint only when free residency budget and free blocks exist — a
+    /// prefetch never evicts (the admission path owns evictions).
+    pub prefetch: Vec<i32>,
 }
 
 /// A scheduling policy: a pure function from view to plan (plus whatever
@@ -441,6 +455,44 @@ fn admit_preempted_prefix(sim: &mut KvSim, view: &SchedView) -> (usize, bool) {
     (view.preempted.len(), false)
 }
 
+/// Is unified adapter paging active on this view? (`usize::MAX` budget =
+/// unbounded residency: every adapter loads once and stays, so residency is
+/// not a signal and every policy must plan exactly as it did pre-paging.)
+fn paging_active(view: &SchedView) -> bool {
+    view.adapter_budget != usize::MAX
+}
+
+/// Is this request's adapter already device-resident? The base model
+/// (adapter < 0) always is.
+fn adapter_resident(view: &SchedView, adapter: i32) -> bool {
+    adapter < 0 || view.resident_adapters.contains(&adapter)
+}
+
+/// Prefetch hints: adapters of upcoming queued requests that were NOT
+/// admitted this step and are not resident, dedup'd, at most 2 per step
+/// (a hint is free only while the pager has spare budget — flooding it
+/// would just be ignored). Empty when paging is inactive.
+fn plan_prefetch(view: &SchedView, admitted: &[u64]) -> Vec<i32> {
+    if !paging_active(view) {
+        return Vec::new();
+    }
+    let admitted: BTreeSet<u64> = admitted.iter().copied().collect();
+    let mut seen = BTreeSet::new();
+    let mut out = Vec::new();
+    for q in &view.queue {
+        if admitted.contains(&q.id) || adapter_resident(view, q.adapter) {
+            continue;
+        }
+        if seen.insert(q.adapter) {
+            out.push(q.adapter);
+            if out.len() >= 2 {
+                break;
+            }
+        }
+    }
+    out
+}
+
 // ---------------------------------------------------------------------------
 // FifoPolicy
 // ---------------------------------------------------------------------------
@@ -466,7 +518,16 @@ impl SchedulePolicy for FifoPolicy {
         let (n, blocked) = admit_preempted_prefix(&mut sim, view);
         plan.admit_preempted = n;
         if !blocked {
-            for q in &view.queue {
+            // Under unified paging, prefer requests whose adapter is already
+            // resident (stable: FIFO order within each residency class) —
+            // admitting resident work first amortizes a swap across every
+            // queued request of that adapter. With paging inactive the sort
+            // is skipped entirely and this is the pre-refactor FIFO prefix.
+            let mut order: Vec<&QueuedView> = view.queue.iter().collect();
+            if paging_active(view) {
+                order.sort_by_key(|q| !adapter_resident(view, q.adapter));
+            }
+            for q in order {
                 let (prompt, need) = admission_need(&view.cfg, &view.kv, q.prompt_len, q.max_new_tokens);
                 if !sim.can_admit(need) {
                     break;
@@ -503,6 +564,7 @@ impl SchedulePolicy for FifoPolicy {
         } else {
             view.ft_budget
         };
+        plan.prefetch = plan_prefetch(view, &plan.admit_queue);
         plan
     }
 }
@@ -616,6 +678,13 @@ impl SchedulePolicy for SloAwarePolicy {
                     .then(a.arrival_s.total_cmp(&b.arrival_s))
                     .then(a.id.cmp(&b.id))
             });
+            if paging_active(view) {
+                // Residency outranks deadline only while paging is on:
+                // stable, so deadline order survives within each class.
+                // drop_after bounds starvation of never-resident adapters,
+                // and prefetch pulls them resident as budget frees up.
+                order.sort_by_key(|q| !adapter_resident(view, q.adapter));
+            }
             for q in order {
                 let (prompt, need) = admission_need(&view.cfg, &view.kv, q.prompt_len, q.max_new_tokens);
                 if !sim.can_admit(need) {
@@ -696,6 +765,7 @@ impl SchedulePolicy for SloAwarePolicy {
             base
         };
         plan.slo_headroom = Some(headroom);
+        plan.prefetch = plan_prefetch(view, &plan.admit_queue);
         plan
     }
 }
@@ -851,6 +921,8 @@ mod tests {
             preempted: vec![],
             active: vec![],
             trainers: vec![],
+            resident_adapters: vec![],
+            adapter_budget: usize::MAX,
         }
     }
 
@@ -1075,6 +1147,64 @@ mod tests {
         let plan = SloAwarePolicy::default().plan(&v);
         assert_eq!(plan.ft_budget, 0);
         assert!(plan.slo_headroom.unwrap() < 0.25);
+    }
+
+    // --- Unified adapter paging (residency preference + prefetch) ---------
+
+    #[test]
+    fn fifo_prefers_resident_adapters_when_paging_and_plans_prefetch() {
+        let mut v = view();
+        v.adapter_budget = 2;
+        v.resident_adapters = vec![7];
+        // 2 free slots: only two admissions fit. Queue order is 1 (cold
+        // adapter 3), 2 (resident 7), 3 (cold 5): residency preference
+        // admits 2 first, then 1 (FIFO within the cold class); id 3's
+        // adapter 5 becomes the prefetch hint.
+        v.kv.free_slots = 2;
+        v.queue = vec![
+            QueuedView { adapter: 3, ..queued(1, 8, 4, 0.0) },
+            QueuedView { adapter: 7, ..queued(2, 8, 4, 0.1) },
+            QueuedView { adapter: 5, ..queued(3, 8, 4, 0.2) },
+        ];
+        let plan = FifoPolicy.plan(&v);
+        assert_eq!(plan.admit_queue, vec![2, 1]);
+        assert_eq!(plan.prefetch, vec![5], "un-admitted cold adapter is hinted");
+    }
+
+    #[test]
+    fn residency_is_inert_without_a_finite_budget() {
+        // Paging off (budget MAX): even with a residency list present the
+        // plan must be byte-identical to the pre-paging FIFO prefix, and no
+        // prefetch is ever hinted — this is the backward-compat contract.
+        let mut v = view();
+        v.resident_adapters = vec![7];
+        v.kv.free_slots = 2;
+        v.queue = vec![
+            QueuedView { adapter: 3, ..queued(1, 8, 4, 0.0) },
+            QueuedView { adapter: 7, ..queued(2, 8, 4, 0.1) },
+            QueuedView { adapter: 5, ..queued(3, 8, 4, 0.2) },
+        ];
+        let plan = FifoPolicy.plan(&v);
+        assert_eq!(plan.admit_queue, vec![1, 2]);
+        assert!(plan.prefetch.is_empty());
+    }
+
+    #[test]
+    fn slo_residency_preference_keeps_deadline_order_within_class() {
+        let mut v = view();
+        v.adapter_budget = 2;
+        v.resident_adapters = vec![4];
+        let tight = SloSpec { max_waiting_s: 1.0, ..SloSpec::default() };
+        // id 2 is the most urgent but cold; ids 1 and 3 share resident
+        // adapter 4. Residency outranks deadline; deadlines order the rest.
+        v.queue = vec![
+            QueuedView { adapter: 4, ..queued(1, 8, 4, 0.2) },
+            QueuedView { adapter: 9, slo: Some(tight), ..queued(2, 8, 4, 0.0) },
+            QueuedView { adapter: 4, ..queued(3, 8, 4, 0.1) },
+        ];
+        let plan = SloAwarePolicy::default().plan(&v);
+        assert_eq!(plan.admit_queue, vec![3, 1, 2], "resident class first, EDF inside");
+        assert!(plan.prefetch.is_empty(), "everything was admitted: nothing to hint");
     }
 
     // --- PeftPolicy -------------------------------------------------------

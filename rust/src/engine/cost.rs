@@ -41,6 +41,9 @@ pub struct CostModel {
     /// Throughput ceiling: max tokens/sec the device sustains regardless of
     /// batching (the "GPU memory access bottleneck" the paper hits at 3 RPS).
     pub token_ceiling_per_s: f64,
+    /// Host↔device transfer of one adapter's A/B pages (unified paging
+    /// swap-in/out, DESIGN.md §10) — charged per swapped adapter.
+    pub adapter_swap_s: f64,
 }
 
 impl Default for CostModel {
@@ -61,6 +64,10 @@ impl Default for CostModel {
             adam_s: 2.0e-3,
             lora_token_s: 2.0e-6,
             token_ceiling_per_s: 6000.0,
+            // A rank-16 A/B pair over ~1 GB/s effective PCIe utilization
+            // lands in the low milliseconds — same order as a decode launch,
+            // so thrashing is visible but a warm working set is cheap.
+            adapter_swap_s: 2.0e-3,
         }
     }
 }
@@ -81,6 +88,8 @@ impl CostModel {
             adam_s: f("adam_s")?,
             lora_token_s: f("lora_token_s")?,
             token_ceiling_per_s: f("token_ceiling_per_s")?,
+            // Newer than the first calibration files: default when absent.
+            adapter_swap_s: f("adapter_swap_s").unwrap_or(2.0e-3),
         })
     }
 
@@ -96,6 +105,7 @@ impl CostModel {
             ("adam_s", Json::Num(self.adam_s)),
             ("lora_token_s", Json::Num(self.lora_token_s)),
             ("token_ceiling_per_s", Json::Num(self.token_ceiling_per_s)),
+            ("adapter_swap_s", Json::Num(self.adapter_swap_s)),
         ]);
         std::fs::write(path, doc.to_string())?;
         Ok(())
@@ -138,6 +148,13 @@ impl CostModel {
 
     pub fn adam_cost(&self) -> f64 {
         self.launch_base_s + self.adam_s
+    }
+
+    /// Unified-paging swap traffic: `n` adapters moved host↔device this
+    /// step. No launch base — the copies overlap the step's compute and
+    /// only the transfer itself is charged.
+    pub fn adapter_swap_cost(&self, n: usize) -> f64 {
+        n as f64 * self.adapter_swap_s
     }
 
     /// Algorithm 1's headline win: one launch for everything — one base

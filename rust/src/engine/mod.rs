@@ -146,6 +146,15 @@ pub trait Backend {
         cache: &mut KvCacheManager,
     ) -> Result<(UnifiedOut, StepCost)>;
 
+    /// Latency of moving `swaps` adapters' A/B pages host↔device (unified
+    /// paging, DESIGN.md §10). The coordinator charges this into its clock
+    /// whenever its pager swaps adapters for a step. Real backends do the
+    /// copy inside `sync_adapters` and charge nothing extra here.
+    fn adapter_swap_cost(&self, swaps: usize) -> StepCost {
+        let _ = swaps;
+        StepCost::default()
+    }
+
     /// Push adapter-bank changes from the registry into the backend.
     fn sync_adapters(&mut self, reg: &mut VirtualizedRegistry) -> Result<()>;
 

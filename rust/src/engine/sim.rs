@@ -245,6 +245,13 @@ impl Backend for SimBackend {
         Ok((out, self.scaled(cost)))
     }
 
+    fn adapter_swap_cost(&self, swaps: usize) -> StepCost {
+        if swaps == 0 {
+            return StepCost::default();
+        }
+        self.scaled(self.cost.adapter_swap_cost(swaps))
+    }
+
     fn sync_adapters(&mut self, _reg: &mut VirtualizedRegistry) -> Result<()> {
         Ok(())
     }

@@ -29,7 +29,10 @@ use crate::engine::{Backend, CostModel, SimBackend};
 use crate::kvcache::CacheConfig;
 use crate::metrics::{build_report, RunReport, SloSpec};
 use crate::runtime::{BucketTable, ModelGeometry, UnifiedShape};
-use crate::workload::{build_train_set, LengthModel, ALPACA_LENGTHS, GSM8K_LENGTHS};
+use crate::workload::{
+    build_train_set, build_zipf_trace, LengthModel, PoissonArrivals, ALPACA_LENGTHS,
+    GSM8K_LENGTHS, SHAREGPT_LENGTHS,
+};
 
 /// Paper-scale serving capacities (A6000-class deployment of Llama3-8B).
 pub const GPU_PROMPT_CAP: usize = 1024;
@@ -230,6 +233,80 @@ pub fn long_prompt_burst() -> Vec<InferenceRequest> {
         });
     }
     requests
+}
+
+/// The Zipfian multi-tenant acceptance scenario (unified adapter paging,
+/// DESIGN.md §10 / EXPERIMENTS.md §Zipfian): [`ZIPF_ADAPTERS`] registered
+/// tenants whose traffic follows a 1/rank popularity law, served with only
+/// [`ZIPF_RESIDENT_BUDGET`] adapters resident on-device at a time.
+pub const ZIPF_ADAPTERS: usize = 1000;
+pub const ZIPF_RESIDENT_BUDGET: usize = 16;
+/// Fixed step budget both modes run under — neither side gets extra steps.
+pub const ZIPF_STEP_BUDGET: usize = 50_000;
+
+/// One Zipfian run's figure-of-merit row.
+#[derive(Debug, Clone, Copy)]
+pub struct ZipfOutcome {
+    pub completed: usize,
+    pub attainment: f64,
+    pub swaps: u64,
+    pub resident: usize,
+    pub host: usize,
+}
+
+/// Run the Zipfian scenario once. `paged = true` is unified paging (cold
+/// adapters evict LRU-first to the host tier and swap back on demand, every
+/// move charged at the cost model's `adapter_swap_s`); `paged = false` is
+/// the fixed-slot baseline (the first [`ZIPF_RESIDENT_BUDGET`] adapters
+/// touched keep their slots forever and every other tenant's admissions
+/// fail). Single-sourced for the acceptance test AND the figures bench so
+/// the jq-gated BENCH_FIGURES.json rows and the test assert the same runs.
+pub fn zipf_paging_outcome(cost: &CostModel, paged: bool) -> ZipfOutcome {
+    let cfg = CoordinatorConfig {
+        adapter_budget: ZIPF_RESIDENT_BUDGET,
+        adapter_page_blocks: 1,
+        adapter_paging: paged,
+        ..gpu_coord_config()
+    };
+    let mut sys = LoquetierSystem::new(Coordinator::new(cfg, gpu_cache()));
+    if paged {
+        // Pre-registering every tenant makes the accounting honest: each
+        // on-demand load of a known adapter is a counted (and charged)
+        // swap-in, not a free cold load.
+        for a in 0..ZIPF_ADAPTERS {
+            sys.inner.register_adapter(a as i32);
+        }
+    }
+    let mut be = sim_backend(cost.clone());
+    let lengths = SHAREGPT_LENGTHS.rescaled_to(40.0);
+    let requests = build_zipf_trace(
+        11,
+        400,
+        ZIPF_ADAPTERS,
+        1.0,
+        &mut PoissonArrivals::new(3.0),
+        &lengths,
+        48,
+        GPU_PROMPT_CAP,
+        512,
+    )
+    .requests;
+    drive_to_completion(&mut sys, &mut be, requests, ZIPF_STEP_BUDGET).unwrap();
+    let report = build_report(
+        "zipf",
+        sys.traces(),
+        &SloSpec::default(),
+        0,
+        0,
+        sys.now_s().max(1e-9),
+    );
+    ZipfOutcome {
+        completed: report.completed,
+        attainment: report.slo_attainment,
+        swaps: sys.inner.adapter_swaps(),
+        resident: sys.inner.adapter_resident(),
+        host: sys.inner.adapter_host(),
+    }
 }
 
 /// Replay one trace under a scheduling policy at GPU scale; returns

@@ -18,12 +18,24 @@
 //! `prompt + max_new` as `initial_tokens` — then the up-front claim covers
 //! every later append and the lazy path never triggers.
 //!
+//! **Unified adapter+KV paging** (S-LoRA-style, PAPERS.md): a resident
+//! adapter's A/B pages are claimed from the *same* block budget via
+//! [`KvCacheManager::claim_adapter_blocks`] /
+//! [`KvCacheManager::release_adapter_blocks`], so KV growth and adapter
+//! residency compete for one pool and `can_admit` / `reserve_decode_block`
+//! automatically see the memory adapters occupy. The coordinator's adapter
+//! pager owns the eviction policy; this ledger only counts.
+//!
 //! Ledger invariants (checked by [`KvCacheManager::audit_ledger`] and the
 //! `scheduler_props` property tests):
-//!  * `blocks_used` equals the sum of every owned slot's held blocks;
+//!  * `blocks_used` equals the sum of every owned slot's held blocks plus
+//!    every resident adapter's claimed pages;
 //!  * a slot's `len` never exceeds `blocks * block_tokens`;
-//!  * release returns all of a slot's blocks exactly once (double release
-//!    is an error, so a preempt/cancel race cannot double-free).
+//!  * release returns all of a slot's (or adapter's) blocks exactly once
+//!    (double release is an error, so a preempt/cancel/evict race cannot
+//!    double-free).
+
+use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
 
@@ -75,6 +87,10 @@ pub struct CacheStats {
     pub tokens_cached: usize,
     /// Reserved-but-unused token capacity (internal fragmentation).
     pub tokens_reserved_unused: usize,
+    /// Blocks claimed by resident adapter A/B pages (unified paging).
+    pub adapter_blocks: usize,
+    /// Number of adapters currently holding page claims.
+    pub adapters_resident: usize,
 }
 
 impl CacheStats {
@@ -92,6 +108,8 @@ pub struct KvCacheManager {
     cfg: CacheConfig,
     slots: Vec<Slot>,
     blocks_used: usize,
+    /// adapter id -> blocks its A/B pages hold (counted in `blocks_used`).
+    adapter_claims: BTreeMap<i32, usize>,
     k_data: Vec<Vec<f32>>,
     v_data: Vec<Vec<f32>>,
 }
@@ -106,6 +124,7 @@ impl KvCacheManager {
             k_data: (0..cfg.num_slots).map(|_| vec![0.0; plane]).collect(),
             v_data: (0..cfg.num_slots).map(|_| vec![0.0; plane]).collect(),
             blocks_used: 0,
+            adapter_claims: BTreeMap::new(),
             cfg,
         }
     }
@@ -207,6 +226,49 @@ impl KvCacheManager {
         Ok(())
     }
 
+    /// Claim `blocks` pages from the unified pool for an adapter's A/B
+    /// weights. Idempotent for an already-resident adapter (its existing
+    /// claim stands — re-claiming with a different size is rejected so a
+    /// pager bug cannot silently resize a live claim). Returns `false`
+    /// when the pool cannot cover the claim — the pager's signal to evict.
+    pub fn claim_adapter_blocks(&mut self, adapter: i32, blocks: usize) -> bool {
+        if let Some(&held) = self.adapter_claims.get(&adapter) {
+            return held == blocks;
+        }
+        if self.blocks_used + blocks > self.cfg.total_blocks {
+            return false;
+        }
+        self.blocks_used += blocks;
+        self.adapter_claims.insert(adapter, blocks);
+        true
+    }
+
+    /// Release an adapter's page claim, returning the block count it held.
+    /// Double release is an error (same contract as slot `release`).
+    pub fn release_adapter_blocks(&mut self, adapter: i32) -> Result<usize> {
+        let held = self
+            .adapter_claims
+            .remove(&adapter)
+            .ok_or_else(|| anyhow!("adapter {adapter} holds no pages"))?;
+        self.blocks_used -= held;
+        Ok(held)
+    }
+
+    /// Blocks held by one adapter's pages (0 = not resident).
+    pub fn adapter_claim(&self, adapter: i32) -> usize {
+        self.adapter_claims.get(&adapter).copied().unwrap_or(0)
+    }
+
+    /// Total blocks held by adapter pages across the pool.
+    pub fn adapter_blocks_used(&self) -> usize {
+        self.adapter_claims.values().sum()
+    }
+
+    /// Number of adapters currently holding page claims.
+    pub fn adapters_resident(&self) -> usize {
+        self.adapter_claims.len()
+    }
+
     pub fn owner(&self, slot: usize) -> Option<u64> {
         self.slots.get(slot).and_then(|s| s.owner)
     }
@@ -298,6 +360,8 @@ impl KvCacheManager {
             blocks_total: self.cfg.total_blocks,
             tokens_cached,
             tokens_reserved_unused: reserved_tokens.saturating_sub(tokens_cached),
+            adapter_blocks: self.adapter_blocks_used(),
+            adapters_resident: self.adapters_resident(),
         }
     }
 
@@ -306,15 +370,17 @@ impl KvCacheManager {
     /// or double-frees blocks corrupts `blocks_used` relative to the
     /// per-slot ledgers and fails here immediately.
     pub fn audit_ledger(&self) -> Result<()> {
-        let held: usize = self
+        let kv_held: usize = self
             .slots
             .iter()
             .filter(|s| s.owner.is_some())
             .map(|s| s.blocks)
             .sum();
-        if held != self.blocks_used {
+        let adapter_held = self.adapter_blocks_used();
+        if kv_held + adapter_held != self.blocks_used {
             return Err(anyhow!(
-                "ledger drift: slots hold {held} blocks, counter says {}",
+                "ledger drift: slots hold {kv_held} + adapter pages {adapter_held} blocks, \
+                 counter says {}",
                 self.blocks_used
             ));
         }
@@ -506,6 +572,41 @@ mod tests {
         assert!(!m.reserve_decode_block(s0), "no 13th block to claim");
         m.release(s1).unwrap();
         assert!(m.reserve_decode_block(s0), "freed blocks are claimable");
+        m.audit_ledger().unwrap();
+    }
+
+    #[test]
+    fn adapter_pages_share_the_block_pool() {
+        let mut m = KvCacheManager::new(cfg()); // 12 blocks
+        assert!(m.claim_adapter_blocks(0, 2));
+        assert!(m.claim_adapter_blocks(1, 2));
+        assert_eq!(m.stats().adapter_blocks, 4);
+        assert_eq!(m.stats().adapters_resident, 2);
+        m.audit_ledger().unwrap();
+        // KV and adapter pages compete for the same budget: 8 blocks left.
+        assert!(m.can_admit(32), "4 blocks still fit");
+        let _s0 = m.allocate(1, 32).unwrap(); // 4 blocks -> 8/12
+        let _s1 = m.allocate(2, 32).unwrap(); // 4 blocks -> 12/12
+        assert!(!m.can_admit(8), "adapter pages count against admission");
+        assert!(!m.claim_adapter_blocks(2, 1), "pool exhausted");
+        m.audit_ledger().unwrap();
+        // Releasing an adapter frees budget back to KV.
+        assert_eq!(m.release_adapter_blocks(0).unwrap(), 2);
+        assert!(m.can_admit(8));
+        m.audit_ledger().unwrap();
+    }
+
+    #[test]
+    fn adapter_claim_idempotent_and_double_release_rejected() {
+        let mut m = KvCacheManager::new(cfg());
+        assert!(m.claim_adapter_blocks(5, 3));
+        assert!(m.claim_adapter_blocks(5, 3), "re-claim same size is a no-op");
+        assert_eq!(m.stats().adapter_blocks, 3, "no double count");
+        assert!(!m.claim_adapter_blocks(5, 2), "resizing a live claim rejected");
+        assert_eq!(m.adapter_claim(5), 3);
+        assert_eq!(m.release_adapter_blocks(5).unwrap(), 3);
+        assert!(m.release_adapter_blocks(5).is_err(), "double release");
+        assert_eq!(m.stats().blocks_used, 0);
         m.audit_ledger().unwrap();
     }
 

@@ -93,10 +93,59 @@ impl WeightStore {
     pub fn total_bytes(&self) -> usize {
         self.blob.len()
     }
+
+    /// Distinct pretrained adapter indices present in the store — records
+    /// named `adapter{i}.layers.*` (the AOT layout `LoraAdapter::from_store`
+    /// reads). The host-tier adapter bank (DESIGN.md §10) enumerates its
+    /// swappable tenants from this instead of trusting the manifest's
+    /// `max_adapters`, which only bounds the *device-resident* bank.
+    pub fn adapter_indices(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = self
+            .records
+            .iter()
+            .filter_map(|r| {
+                let rest = r.name.strip_prefix("adapter")?;
+                let digits: &str =
+                    &rest[..rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len())];
+                if digits.is_empty() || !rest[digits.len()..].starts_with('.') {
+                    return None;
+                }
+                digits.parse().ok()
+            })
+            .collect();
+        idx.sort_unstable();
+        idx.dedup();
+        idx
+    }
 }
 
 #[cfg(test)]
 mod tests {
     // Exercised end-to-end by rust/tests/runtime_golden.rs; unit coverage
     // of the bounds checks lives there too (needs real artifacts).
+    use super::*;
+
+    #[test]
+    fn adapter_indices_enumerates_store_adapters() {
+        let rec = |name: &str| WeightRecord {
+            name: name.to_string(),
+            offset: 0,
+            shape: vec![1],
+            dtype: "f32".to_string(),
+        };
+        let store = WeightStore::from_parts(
+            vec![
+                rec("adapter0.layers.0.q_proj.a"),
+                rec("adapter0.layers.0.q_proj.b"),
+                rec("adapter7.layers.0.q_proj.a"),
+                rec("adapter2.layers.1.v_proj.b"),
+                rec("model.embed_tokens"),
+                rec("adapterX.layers.0.q_proj.a"), // non-numeric: ignored
+                rec("adapter3x.layers.0.q_proj.a"), // malformed: ignored
+            ],
+            vec![0u8; 4],
+        )
+        .unwrap();
+        assert_eq!(store.adapter_indices(), vec![0, 2, 7]);
+    }
 }

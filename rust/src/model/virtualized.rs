@@ -16,7 +16,15 @@
 //! * supports `void()`/`unvoid()` — the paper's deep-copy-safe migration:
 //!   a voided virtual model carries only its adapter payload and metadata,
 //!   and can be re-bound on another registry (device) without copying the
-//!   base model.
+//!   base model;
+//! * keeps a **host-tier adapter bank** (S-LoRA-style unified paging,
+//!   DESIGN.md §10): adapters evicted from the bounded device bank park on
+//!   the host tier (`evict_to_host`) and swap back in on demand
+//!   (`swap_in`, reusing the lowest free slot via the `attach_auto` path).
+//!   Eviction snapshots the slot's *current* bank contents — not the
+//!   attach-time payload — so a fine-tuned adapter survives the round trip
+//!   bit-identically (Finetune slots must be checkpointed first; the
+//!   host mirror is authoritative here).
 
 use std::collections::BTreeMap;
 
@@ -65,6 +73,13 @@ struct BankArray {
     slot_elems: usize,
 }
 
+/// A host-tier resident: everything needed to re-attach bit-identically.
+struct HostAdapter {
+    model_name: String,
+    state: SlotState,
+    adapter: LoraAdapter,
+}
+
 /// The registry: host mirror of the bank + virtual-model table.
 pub struct VirtualizedRegistry {
     manifest: Manifest,
@@ -75,6 +90,8 @@ pub struct VirtualizedRegistry {
     models: Vec<Option<VirtualModel>>,
     /// Adapter payloads kept for migration/save (slot-indexed).
     payloads: Vec<Option<LoraAdapter>>,
+    /// Host-tier bank: adapter name -> parked adapter (unified paging).
+    host: BTreeMap<String, HostAdapter>,
 }
 
 impl VirtualizedRegistry {
@@ -101,6 +118,7 @@ impl VirtualizedRegistry {
             scaling_dirty: true,
             models: (0..l).map(|_| None).collect(),
             payloads: (0..l).map(|_| None).collect(),
+            host: BTreeMap::new(),
         })
     }
 
@@ -370,6 +388,77 @@ impl VirtualizedRegistry {
             module.b = arr_b.tensor.as_f32()?[slot * nb..(slot + 1) * nb].to_vec();
         }
         Ok(out)
+    }
+
+    /// Snapshot a slot's *current* bank contents as an adapter, keeping its
+    /// original name (unlike `extract`, which renames for the save path).
+    /// This is what eviction parks on the host tier: for Inference slots
+    /// the bank mirror is exactly the attach-time payload; for Finetune
+    /// slots the caller must checkpoint first so trained weights are here.
+    pub fn snapshot(&self, slot: usize) -> Result<LoraAdapter> {
+        let name = self.models[slot]
+            .as_ref()
+            .map(|m| m.adapter_name.clone())
+            .ok_or_else(|| anyhow!("slot {slot} not bound"))?;
+        let mut out = self.extract(slot)?;
+        out.name = name;
+        Ok(out)
+    }
+
+    /// Evict a slot's adapter to the host tier (unified paging swap-out).
+    /// Returns the adapter name — the key `swap_in` takes. The slot is
+    /// freed (bank block zeroed) and becomes reusable immediately.
+    pub fn evict_to_host(&mut self, slot: usize) -> Result<String> {
+        let vm = self.models[slot]
+            .as_ref()
+            .ok_or_else(|| anyhow!("slot {slot} not bound"))?;
+        let (model_name, state) = (vm.name.clone(), vm.state);
+        let adapter = self.snapshot(slot)?;
+        let key = adapter.name.clone();
+        self.detach(slot)?;
+        self.host.insert(key.clone(), HostAdapter { model_name, state, adapter });
+        Ok(key)
+    }
+
+    /// Swap a host-tier adapter back into the lowest free device slot.
+    /// The re-attach goes through the same zero-then-copy slot write as the
+    /// original attach, so the round trip is bit-identical.
+    pub fn swap_in(&mut self, adapter_name: &str) -> Result<usize> {
+        let h = self
+            .host
+            .remove(adapter_name)
+            .ok_or_else(|| anyhow!("adapter '{adapter_name}' not on host tier"))?;
+        let vm = self.attach_auto(h.model_name, h.adapter, h.state)?;
+        Ok(vm.slot)
+    }
+
+    /// Register an adapter directly on the host tier without attaching
+    /// (the 1000-tenant registration path: residency is the pager's call).
+    pub fn park_host(&mut self, model_name: impl Into<String>, adapter: LoraAdapter) {
+        let key = adapter.name.clone();
+        self.host.insert(
+            key,
+            HostAdapter { model_name: model_name.into(), state: SlotState::Inference, adapter },
+        );
+    }
+
+    /// Number of adapters parked on the host tier.
+    pub fn host_len(&self) -> usize {
+        self.host.len()
+    }
+
+    /// Is this adapter on the host tier (i.e. registered but not resident)?
+    pub fn on_host(&self, adapter_name: &str) -> bool {
+        self.host.contains_key(adapter_name)
+    }
+
+    /// The device slot currently holding `adapter_name`, if resident.
+    pub fn resident_slot(&self, adapter_name: &str) -> Option<usize> {
+        self.models
+            .iter()
+            .flatten()
+            .find(|m| m.adapter_name == adapter_name)
+            .map(|m| m.slot)
     }
 
     /// The bank's host tensors, for engines that pass weights per-call

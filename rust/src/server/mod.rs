@@ -205,6 +205,13 @@ pub struct Stats {
     /// instantaneous and run-peak.
     pub kv_frag_tokens: usize,
     pub kv_frag_peak_tokens: usize,
+    /// Unified adapter paging (DESIGN.md §10): total host↔device swap
+    /// events so far, and where known adapters currently sit — resident
+    /// in the device bank vs parked in the host tier. All zero when
+    /// paging is inactive (no finite `adapter_budget` configured).
+    pub adapter_swaps: u64,
+    pub adapter_resident: usize,
+    pub adapter_host: usize,
     /// Live SLO attainment: fraction of terminal requests that met their
     /// SLO, tracked by the scheduler as it runs (1.0 while nothing has
     /// finished). DESIGN.md §9.
@@ -265,6 +272,9 @@ impl Stats {
             ("kv_blocks_total", Json::Num(self.kv_blocks_total as f64)),
             ("kv_frag_tokens", Json::Num(self.kv_frag_tokens as f64)),
             ("kv_frag_peak_tokens", Json::Num(self.kv_frag_peak_tokens as f64)),
+            ("adapter_swaps", Json::Num(self.adapter_swaps as f64)),
+            ("adapter_resident", Json::Num(self.adapter_resident as f64)),
+            ("adapter_host", Json::Num(self.adapter_host as f64)),
             ("slo_attainment", Json::Num(self.slo_attainment)),
             ("queue_depth", Json::Num(self.queue_depth.last().map(|(_, v)| v).unwrap_or(0.0))),
             ("queue_depth_max", Json::Num(self.queue_depth.max())),
@@ -929,6 +939,9 @@ fn publish_stats(
         s.kv_blocks_total = kv.blocks_total;
         s.kv_frag_tokens = kv.tokens_reserved_unused;
         s.kv_frag_peak_tokens = coord.kv_frag_peak_tokens();
+        s.adapter_swaps = coord.adapter_swaps();
+        s.adapter_resident = coord.adapter_resident();
+        s.adapter_host = coord.adapter_host();
         // Live SLO view (DESIGN.md §9): attainment plus per-adapter
         // TTFT/TPOT quantiles, resolved from bank slots back to model
         // names (slot -1 = the base model = the "" key).
@@ -1301,6 +1314,9 @@ mod tests {
             kv_blocks_total: 24,
             kv_frag_tokens: 13,
             kv_frag_peak_tokens: 99,
+            adapter_swaps: 21,
+            adapter_resident: 4,
+            adapter_host: 17,
             slo_attainment: 0.75,
             ..Default::default()
         };
@@ -1330,6 +1346,12 @@ mod tests {
                 && j.contains("\"kv_frag_tokens\":13")
                 && j.contains("\"kv_frag_peak_tokens\":99"),
             "{j}"
+        );
+        assert!(
+            j.contains("\"adapter_swaps\":21")
+                && j.contains("\"adapter_resident\":4")
+                && j.contains("\"adapter_host\":17"),
+            "unified-paging counters serialize: {j}"
         );
         assert!(j.contains("\"slo_attainment\":0.75"), "{j}");
         assert!(j.contains("\"vm0\":{\"submitted\":9"), "{j}");

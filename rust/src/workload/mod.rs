@@ -60,6 +60,80 @@ pub fn build_trace(
     Trace { requests }
 }
 
+/// Zipfian adapter popularity: adapter id `k` (0-based rank) is drawn with
+/// probability ∝ 1/(k+1)^s. This is the multi-tenant serving regime the
+/// unified adapter-paging tier targets (DESIGN.md §10): thousands of
+/// registered adapters, a small hot head that covers most traffic, and a
+/// long cold tail that must live in the host tier between requests.
+#[derive(Debug, Clone)]
+pub struct ZipfAdapters {
+    /// Cumulative probability by rank; `cdf.last() == 1.0`.
+    cdf: Vec<f64>,
+}
+
+impl ZipfAdapters {
+    pub fn new(n_adapters: usize, s: f64) -> Self {
+        assert!(n_adapters > 0, "need at least one adapter");
+        let mut cdf = Vec::with_capacity(n_adapters);
+        let mut acc = 0.0;
+        for k in 0..n_adapters {
+            acc += 1.0 / ((k + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        *cdf.last_mut().unwrap() = 1.0;
+        Self { cdf }
+    }
+
+    /// Draw one adapter id in `0..n_adapters` (rank order: 0 is hottest).
+    pub fn sample(&self, rng: &mut Rng) -> i32 {
+        let u = rng.f64();
+        // First rank whose cumulative mass exceeds u.
+        match self.cdf.binary_search_by(|c| c.total_cmp(&u)) {
+            Ok(i) | Err(i) => i.min(self.cdf.len() - 1) as i32,
+        }
+    }
+}
+
+/// Build an inference trace whose adapter ids follow a Zipfian popularity
+/// law over `n_adapters` tenants (instead of `build_trace`'s round-robin).
+#[allow(clippy::too_many_arguments)]
+pub fn build_zipf_trace(
+    seed: u64,
+    n: usize,
+    n_adapters: usize,
+    zipf_s: f64,
+    arrivals: &mut dyn ArrivalProcess,
+    lengths: &LengthModel,
+    max_new: usize,
+    max_prompt: usize,
+    vocab: i32,
+) -> Trace {
+    let zipf = ZipfAdapters::new(n_adapters, zipf_s);
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut requests = Vec::with_capacity(n);
+    for i in 0..n {
+        let arrival_s = arrivals.next_arrival(&mut rng);
+        let adapter = zipf.sample(&mut rng);
+        let len = lengths.sample_prompt(&mut rng).clamp(1, max_prompt);
+        let prompt: Vec<i32> = (0..len).map(|k| ((i * 131 + k * 7 + 3) as i32) % vocab).collect();
+        requests.push(InferenceRequest {
+            id: i as u64,
+            adapter,
+            prompt,
+            max_new_tokens: max_new,
+            eos_token: None,
+            arrival_s,
+            slo: None,
+        });
+    }
+    requests.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+    Trace { requests }
+}
+
 /// Build a fine-tuning dataset with the given length model (Alpaca/GSM8K
 /// stand-ins: token ids are synthetic, lengths match the dataset).
 pub fn build_train_set(
@@ -79,4 +153,50 @@ pub fn build_train_set(
             TrainExample { tokens, labels }
         })
         .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zipf_sampler_is_deterministic_head_heavy_and_in_range() {
+        let n_adapters = 1000;
+        let zipf = ZipfAdapters::new(n_adapters, 1.0);
+        let mut rng = Rng::seed_from_u64(42);
+        let mut counts = vec![0usize; n_adapters];
+        for _ in 0..20_000 {
+            let a = zipf.sample(&mut rng);
+            assert!((0..n_adapters as i32).contains(&a));
+            counts[a as usize] += 1;
+        }
+        // Rank 0 dominates rank 99 by roughly the 1/rank law (factor 100
+        // in expectation; demand only a loose factor to stay robust).
+        assert!(counts[0] > counts[99] * 10, "head {} vs rank-99 {}", counts[0], counts[99]);
+        // The tail is actually exercised: many distinct adapters appear.
+        let distinct = counts.iter().filter(|&&c| c > 0).count();
+        assert!(distinct > 100, "only {distinct} distinct adapters drawn");
+        // Same seed reproduces the same draw sequence.
+        let mut a = Rng::seed_from_u64(7);
+        let mut b = Rng::seed_from_u64(7);
+        for _ in 0..100 {
+            assert_eq!(zipf.sample(&mut a), zipf.sample(&mut b));
+        }
+    }
+
+    #[test]
+    fn zipf_trace_spans_many_adapters_and_sorts_arrivals() {
+        let mut arrivals = PoissonArrivals::new(4.0);
+        let lengths = LengthModel { mu: 2.0, sigma: 0.2, min: 4, max: 16 };
+        let t = build_zipf_trace(3, 500, 200, 1.0, &mut arrivals, &lengths, 4, 32, 97);
+        assert_eq!(t.requests.len(), 500);
+        let mut adapters: Vec<i32> = t.requests.iter().map(|r| r.adapter).collect();
+        adapters.sort_unstable();
+        adapters.dedup();
+        assert!(adapters.len() > 20, "zipf trace should touch many adapters");
+        assert!(adapters.iter().all(|&a| (0..200).contains(&a)));
+        for w in t.requests.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s);
+        }
+    }
 }

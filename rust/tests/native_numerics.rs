@@ -317,6 +317,103 @@ fn scratch_arena_reuse_leaks_no_stale_state() {
 }
 
 #[test]
+fn host_tier_eviction_roundtrip_is_output_transparent() {
+    // ISSUE 6 acceptance: evicting resident adapters to the host tier
+    // mid-run and swapping them back in (unified paging, DESIGN.md §10)
+    // must not change a single emitted bit. Tokens and trainer losses are
+    // compared bitwise against a never-evicted run, on 1 and 4 threads.
+    let run = |threads: usize, evict: bool| -> (Vec<i32>, Vec<f32>) {
+        let (mut be, mut reg, _m) = native_stack_with_threads(777, threads).unwrap();
+        let mut kv = cache();
+        let mut tokens = Vec::new();
+        let mut losses = Vec::new();
+
+        // Phase 1: serve on adapter 1, fine-tune adapter 2.
+        let slot = kv.allocate(1, 64).unwrap();
+        let (lg, _) = be
+            .prefill(&[PrefillSeq { tokens: toks(10, 4), adapter: 1, kv_slot: slot }], &mut kv)
+            .unwrap();
+        let mut next = loquetier::engine::argmax(&lg[0]);
+        tokens.push(next);
+        for _ in 0..3 {
+            let (lg, _) = be
+                .decode(&[DecodeRow { token: next, adapter: 1, kv_slot: slot }], &mut kv)
+                .unwrap();
+            next = loquetier::engine::argmax(&lg[0]);
+            tokens.push(next);
+        }
+        for step in 1..=2 {
+            let (l, _) = be
+                .train_step(&[TrainSeq {
+                    tokens: toks(14, 8),
+                    labels: toks(14, 8),
+                    adapter: 2,
+                    train: true,
+                    loss_scale: 1.0,
+                }])
+                .unwrap();
+            losses.extend_from_slice(&l);
+            be.optim_step(&[2], 5e-3, step).unwrap();
+        }
+        // Eviction parks the registry's bank mirror, so pull the trained
+        // weights into it first (the Finetune checkpoint rule).
+        be.checkpoint_adapters(&mut reg).unwrap();
+
+        if evict {
+            // Swap-out: both the serving and the trained adapter leave the
+            // device; after the sync the backend has really lost them.
+            let k1 = reg.evict_to_host(1).unwrap();
+            let k2 = reg.evict_to_host(2).unwrap();
+            be.sync_adapters(&mut reg).unwrap();
+            assert!(reg.on_host(&k1) && reg.on_host(&k2));
+            assert_eq!(reg.resident_slot(&k1), None);
+            // Swap-in reuses the lowest free slot, restoring 1 then 2 —
+            // which keeps the backend's slot-keyed optimizer state valid.
+            assert_eq!(reg.swap_in(&k1).unwrap(), 1);
+            assert_eq!(reg.swap_in(&k2).unwrap(), 2);
+            be.sync_adapters(&mut reg).unwrap();
+        }
+
+        // Phase 2: decode continues the SAME KV slot on adapter 1;
+        // training continues on adapter 2 with the optimizer moments that
+        // stayed in the backend across the round trip.
+        for _ in 0..3 {
+            let (lg, _) = be
+                .decode(&[DecodeRow { token: next, adapter: 1, kv_slot: slot }], &mut kv)
+                .unwrap();
+            next = loquetier::engine::argmax(&lg[0]);
+            tokens.push(next);
+        }
+        for step in 3..=4 {
+            let (l, _) = be
+                .train_step(&[TrainSeq {
+                    tokens: toks(14, 8),
+                    labels: toks(14, 8),
+                    adapter: 2,
+                    train: true,
+                    loss_scale: 1.0,
+                }])
+                .unwrap();
+            losses.extend_from_slice(&l);
+            be.optim_step(&[2], 5e-3, step).unwrap();
+        }
+        let slot2 = kv.allocate(2, 32).unwrap();
+        let (lg2, _) = be
+            .prefill(&[PrefillSeq { tokens: toks(8, 2), adapter: 2, kv_slot: slot2 }], &mut kv)
+            .unwrap();
+        tokens.push(loquetier::engine::argmax(&lg2[0]));
+        (tokens, losses)
+    };
+
+    for threads in [1usize, 4] {
+        let (t_stay, l_stay) = run(threads, false);
+        let (t_swap, l_swap) = run(threads, true);
+        assert_eq!(t_stay, t_swap, "threads={threads}: tokens must not see the swap");
+        assert_bits_eq(&l_stay, &l_swap, &format!("threads={threads} trainer losses"));
+    }
+}
+
+#[test]
 fn different_seeds_produce_different_models() {
     let (mut a, _ra, _ma) = native_stack(1).unwrap();
     let (mut b, _rb, _mb) = native_stack(2).unwrap();

@@ -133,6 +133,70 @@ fn import_bank_overwrites_host_mirror() {
     assert!(reg.import_bank("lora.layers.0.q.nope", &marker).is_err());
 }
 
+#[test]
+fn checkpoint_evict_reattach_roundtrip_is_bit_identical() {
+    // Unified-paging golden (DESIGN.md §10): checkpoint → evict → swap_in
+    // must round-trip a *trained* bank bit-identically, and the registry
+    // must reuse freed slots lowest-first for both `swap_in` and
+    // `attach_auto`.
+    let (manifest, store) = synthetic();
+    let mut reg = VirtualizedRegistry::new(&manifest, &store).unwrap();
+    let a0 = LoraAdapter::from_store(&store, &manifest, 0, "a0").unwrap();
+    let a1 = LoraAdapter::from_store(&store, &manifest, 1, "a1").unwrap();
+    assert_eq!(reg.attach_auto("vm0", a0, SlotState::Inference).unwrap().slot, 0);
+    assert_eq!(reg.attach_auto("vm1", a1, SlotState::Inference).unwrap().slot, 1);
+
+    // "Checkpoint": overwrite slot 1's rows with a trained marker via the
+    // import_bank path (what Backend::checkpoint_adapters calls).
+    let name = "lora.layers.0.q.a";
+    let l = manifest.build.lora.max_adapters;
+    let n = reg.bank_tensor(name).unwrap().element_count();
+    let per = n / l;
+    let mut bank: Vec<f32> = reg.bank_tensor(name).unwrap().as_f32().unwrap().to_vec();
+    for (i, v) in bank[per..2 * per].iter_mut().enumerate() {
+        *v = i as f32 * 0.5 + 1.0;
+    }
+    reg.import_bank(name, &bank).unwrap();
+    let marker: Vec<f32> = bank[per..2 * per].to_vec();
+
+    // Evict: the adapter parks on the host tier under its adapter name,
+    // the slot is zeroed and freed.
+    let key = reg.evict_to_host(1).unwrap();
+    assert_eq!(key, "a1");
+    assert!(reg.on_host(&key));
+    assert_eq!(reg.host_len(), 1);
+    assert_eq!(reg.resident_slot(&key), None);
+    let rows = reg.bank_tensor(name).unwrap().as_f32().unwrap()[per..2 * per].to_vec();
+    assert!(rows.iter().all(|&x| x == 0.0), "evicted slot must be zeroed");
+
+    // Swap back in: lowest free slot (1) is reused, and the TRAINED rows —
+    // not the attach-time payload — come back bit for bit.
+    assert_eq!(reg.swap_in(&key).unwrap(), 1);
+    assert_eq!(reg.host_len(), 0);
+    assert_eq!(reg.resident_slot("a1"), Some(1));
+    let back = reg.bank_tensor(name).unwrap().as_f32().unwrap()[per..2 * per].to_vec();
+    assert_eq!(back, marker, "trained bank must survive the round trip bit-identically");
+
+    // Slot-reuse golden after eviction: attach_auto takes the freed slot 0,
+    // and the evicted adapter then lands in the next lowest free slot (2).
+    let k0 = reg.evict_to_host(0).unwrap();
+    assert_eq!(k0, "a0");
+    let a2 = LoraAdapter::from_store(&store, &manifest, 2, "a2").unwrap();
+    assert_eq!(
+        reg.attach_auto("vm2", a2, SlotState::Inference).unwrap().slot,
+        0,
+        "attach_auto must reuse the evicted slot"
+    );
+    assert_eq!(reg.swap_in(&k0).unwrap(), 2);
+    let got = reg.bank_tensor(name).unwrap().as_f32().unwrap()[2 * per..3 * per].to_vec();
+    let want = store.tensor("adapter0.layers.0.q.a").unwrap();
+    assert_eq!(
+        got,
+        want.as_f32().unwrap(),
+        "relocated adapter must land bit-identical in its new slot"
+    );
+}
+
 // ---------------------------------------------------------------------------
 // Artifact-backed tier — skip-on-absent
 // ---------------------------------------------------------------------------
