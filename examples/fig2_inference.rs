@@ -12,9 +12,7 @@ use anyhow::Result;
 
 use loquetier::config::table4_rows;
 use loquetier::coordinator::PolicyKind;
-use loquetier::harness::{
-    self, flexllm, loquetier_with, peft, sim_backend, slora, FLEXLLM_SLOWDOWN, GPU_PROMPT_CAP,
-};
+use loquetier::harness::{self, sim_backend, HarnessBuilder, FLEXLLM_SLOWDOWN, GPU_PROMPT_CAP};
 use loquetier::metrics::SloSpec;
 use loquetier::util::cli::Args;
 use loquetier::workload::{build_trace, PoissonArrivals, SHAREGPT_LENGTHS};
@@ -54,26 +52,26 @@ fn main() -> Result<()> {
             };
             let slo = SloSpec::default();
 
-            let mut loq = loquetier_with(policy);
+            let mut loq = HarnessBuilder::new().policy(policy).loquetier();
             let mut be = sim_backend(cost.clone());
             let r_loq = harness::run_system(
                 "loquetier", &mut loq, &mut be, mk_trace(1), vec![], &slo, usize::MAX,
             )?;
 
-            let mut flex = flexllm();
+            let mut flex = HarnessBuilder::new().flexllm();
             let mut be_f = sim_backend(cost.clone());
             be_f.slowdown = FLEXLLM_SLOWDOWN;
             let r_flex = harness::run_system(
                 "flexllm", &mut flex, &mut be_f, mk_trace(1), vec![], &slo, usize::MAX,
             )?;
 
-            let mut sl = slora();
+            let mut sl = HarnessBuilder::new().slora();
             let mut be_s = sim_backend(cost.clone());
             let r_slora = harness::run_system(
                 "slora", &mut sl, &mut be_s, mk_trace(1), vec![], &slo, usize::MAX,
             )?;
 
-            let mut pf = peft();
+            let mut pf = HarnessBuilder::new().peft();
             let mut be_p = sim_backend(cost.clone());
             let r_peft = harness::run_system(
                 "peft", &mut pf, &mut be_p, mk_trace(1), vec![], &SloSpec::peft(), usize::MAX,

@@ -15,7 +15,7 @@
 use anyhow::Result;
 
 use loquetier::config::{table5_multi, table5_single};
-use loquetier::harness::{self, flexllm, loquetier, peft, sim_backend};
+use loquetier::harness::{self, sim_backend, HarnessBuilder};
 use loquetier::metrics::SloSpec;
 use loquetier::util::cli::Args;
 
@@ -38,7 +38,7 @@ fn main() -> Result<()> {
         ("multiple (2) LoRAs", 2, table5_multi(), false),
     ] {
         // --- Loquetier: all jobs concurrent (shared backward pass). ------
-        let mut loq = loquetier();
+        let mut loq = HarnessBuilder::new().loquetier();
         let mut be = sim_backend(cost.clone());
         let jobs: Vec<_> = (0..n_jobs)
             .map(|j| {
@@ -65,7 +65,7 @@ fn main() -> Result<()> {
         let mut total_ft = 0u64;
         let mut total_ev = 0u64;
         for job in &jobs {
-            let mut pf = peft();
+            let mut pf = HarnessBuilder::new().peft();
             let mut be_p = sim_backend(cost.clone());
             let r = harness::run_system(
                 "peft-serial", &mut pf, &mut be_p, vec![], vec![job.clone()],
@@ -85,7 +85,7 @@ fn main() -> Result<()> {
         );
 
         // --- FlexLLM: backward unsupported (paper Appendix B). -----------
-        let mut fx = flexllm();
+        let mut fx = HarnessBuilder::new().flexllm();
         let mut be_f = sim_backend(cost.clone());
         let r = harness::run_system(
             format!("flexllm {label}"),

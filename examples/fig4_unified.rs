@@ -13,7 +13,7 @@ use anyhow::Result;
 
 use loquetier::config::{table5_multi, table5_single, table6_rows};
 use loquetier::coordinator::PolicyKind;
-use loquetier::harness::{self, loquetier_with, peft, sim_backend, GPU_PROMPT_CAP};
+use loquetier::harness::{self, sim_backend, HarnessBuilder, GPU_PROMPT_CAP};
 use loquetier::metrics::SloSpec;
 use loquetier::util::cli::Args;
 use loquetier::workload::{build_trace, PoissonArrivals, SHAREGPT_LENGTHS};
@@ -32,7 +32,7 @@ fn main() -> Result<()> {
     // Reference FTPS: fine-tuning alone on an idle server (for the
     // "~40% fine-tune efficiency" ratio the paper reports).
     let solo_ftps = {
-        let mut loq = loquetier_with(policy);
+        let mut loq = HarnessBuilder::new().policy(policy).loquetier();
         let mut be = sim_backend(cost.clone());
         let job = harness::finetune_job(0, 0, n_train, 8, 2, 1, false);
         let r = harness::run_system(
@@ -78,14 +78,14 @@ fn main() -> Result<()> {
                     .collect()
             };
 
-            let mut loq = loquetier_with(policy);
+            let mut loq = HarnessBuilder::new().policy(policy).loquetier();
             let mut be = sim_backend(cost.clone());
             let r_loq = harness::run_system(
                 "loquetier", &mut loq, &mut be, mk_trace(1), mk_jobs(),
                 &SloSpec::default(), usize::MAX,
             )?;
 
-            let mut pf = peft();
+            let mut pf = HarnessBuilder::new().peft();
             let mut be_p = sim_backend(cost.clone());
             // PEFT can only run ONE trainer; multi-ft rows fall back to a
             // single job (the paper marks multi-ft as x for PEFT).

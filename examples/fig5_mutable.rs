@@ -10,7 +10,7 @@
 use anyhow::Result;
 
 use loquetier::baselines::{drive_to_completion, ServingSystem};
-use loquetier::harness::{self, loquetier, sim_backend, GPU_PROMPT_CAP};
+use loquetier::harness::{self, sim_backend, HarnessBuilder, GPU_PROMPT_CAP};
 use loquetier::metrics::build_report;
 use loquetier::util::cli::Args;
 use loquetier::util::rng::Rng;
@@ -46,7 +46,7 @@ fn main() -> Result<()> {
     // One long-running fine-tune job shares the GPU for the whole window.
     let job = harness::finetune_job(99, 3, 4000, 0, 2, 1, false);
 
-    let mut system = loquetier();
+    let mut system = HarnessBuilder::new().loquetier();
     let mut be = sim_backend(cost);
     system.add_trainer(job)?;
     let horizon = drive_to_completion(&mut system, &mut be, requests, usize::MAX)?;

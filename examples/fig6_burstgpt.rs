@@ -13,7 +13,7 @@ use anyhow::Result;
 
 use loquetier::baselines::{drive_to_completion, ServingSystem};
 use loquetier::coordinator::{InferenceRequest, PolicyKind};
-use loquetier::harness::{self, loquetier_with, sim_backend, GPU_PROMPT_CAP};
+use loquetier::harness::{self, sim_backend, HarnessBuilder, GPU_PROMPT_CAP};
 use loquetier::metrics::{build_report, SloSpec};
 use loquetier::util::cli::Args;
 use loquetier::util::rng::Rng;
@@ -69,7 +69,7 @@ fn main() -> Result<()> {
     );
 
     let job = harness::finetune_job(99, 3, 100_000, 0, 2, 1, false);
-    let mut system = loquetier_with(policy);
+    let mut system = HarnessBuilder::new().policy(policy).loquetier();
     println!("scheduler policy: {}", system.inner.policy_name());
     let mut be = sim_backend(cost);
     system.add_trainer(job)?;

@@ -13,7 +13,7 @@ use anyhow::Result;
 
 use loquetier::coordinator::{Coordinator, CoordinatorConfig, InferenceRequest};
 use loquetier::engine::{Backend, NativeBackend, XlaBackend};
-use loquetier::harness::native_model;
+use loquetier::harness::HarnessBuilder;
 use loquetier::model::{LoraAdapter, SlotState, VirtualizedRegistry, WeightStore};
 use loquetier::runtime::{Manifest, Runtime};
 use loquetier::tokenizer::{Tokenizer, TINY_CORPUS};
@@ -28,7 +28,7 @@ fn main() -> Result<()> {
         match args.backend_or(BackendKind::Native)? {
             BackendKind::Native => {
                 let seed = args.usize_or("seed", 42)? as u64;
-                let (manifest, store) = native_model(seed)?;
+                let (manifest, store) = HarnessBuilder::new().seed(seed).native_model()?;
                 let be = NativeBackend::new(&manifest, &store, args.threads_or_auto()?)?;
                 println!(
                     "native backend: {} layers, vocab {}, seed {seed}",

@@ -24,9 +24,7 @@ use loquetier::baselines::{drive_to_completion, ServingSystem};
 use loquetier::config::table4_rows;
 use loquetier::coordinator::{InferenceRequest, PolicyKind};
 use loquetier::engine::{CostModel, SimBackend};
-use loquetier::harness::{
-    self, flexllm, loquetier, peft, sim_backend, slora, FLEXLLM_SLOWDOWN, GPU_PROMPT_CAP,
-};
+use loquetier::harness::{self, sim_backend, HarnessBuilder, FLEXLLM_SLOWDOWN, GPU_PROMPT_CAP};
 use loquetier::metrics::SloSpec;
 use loquetier::util::bench::bench_for;
 use loquetier::util::json::{self, Json};
@@ -46,7 +44,7 @@ fn paged_run(
     arrivals: Vec<InferenceRequest>,
     train_examples: usize,
 ) -> (usize, u64, usize) {
-    let mut sys = loquetier();
+    let mut sys = HarnessBuilder::new().loquetier();
     let mut be: SimBackend = sim_backend(cost.clone());
     if train_examples > 0 {
         sys.inner.add_trainer(harness::finetune_job(99, 3, train_examples, 0, 2, 1, false));
@@ -258,7 +256,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---- Table 1: capability probes (timing the probe harness). ---------
     bench_for("table1_capability_probe", 1.5, || {
-        let mut sys = flexllm();
+        let mut sys = HarnessBuilder::new().flexllm();
         let job = harness::finetune_job(1, 0, 2, 0, 1, 1, false);
         assert!(
             loquetier::baselines::ServingSystem::add_trainer(&mut sys, job).is_err(),
@@ -274,12 +272,12 @@ fn main() -> anyhow::Result<()> {
             1, n, &[0], &mut PoissonArrivals::new(row.rps), &lengths, 60, GPU_PROMPT_CAP, 512,
         )
         .requests;
-        let mut loq = loquetier();
+        let mut loq = HarnessBuilder::new().loquetier();
         let mut be = sim_backend(cost.clone());
         let r_loq =
             harness::run_system("loq", &mut loq, &mut be, trace.clone(), vec![], &slo, usize::MAX)
                 .unwrap();
-        let mut fx = flexllm();
+        let mut fx = HarnessBuilder::new().flexllm();
         let mut be_f = sim_backend(cost.clone());
         be_f.slowdown = FLEXLLM_SLOWDOWN;
         let r_flex =
@@ -297,7 +295,7 @@ fn main() -> anyhow::Result<()> {
     bench_for("fig3_multi_lora_finetune", 3.0, || {
         let jobs: Vec<_> =
             (0..2).map(|j| harness::finetune_job(j as u64, j as i32, 16, 0, 1, 1, false)).collect();
-        let mut loq = loquetier();
+        let mut loq = HarnessBuilder::new().loquetier();
         let mut be = sim_backend(cost.clone());
         let r_loq = harness::run_system(
             "loq", &mut loq, &mut be, vec![], jobs.clone(), &slo, usize::MAX,
@@ -305,7 +303,7 @@ fn main() -> anyhow::Result<()> {
         .unwrap();
         let mut serial_time = 0.0;
         for job in &jobs {
-            let mut pf = peft();
+            let mut pf = HarnessBuilder::new().peft();
             let mut be_p = sim_backend(cost.clone());
             let r = harness::run_system(
                 "peft", &mut pf, &mut be_p, vec![], vec![job.clone()], &SloSpec::peft(), usize::MAX,
@@ -329,13 +327,13 @@ fn main() -> anyhow::Result<()> {
         )
         .requests;
         let job = harness::finetune_job(9, 3, 64, 0, 2, 1, false);
-        let mut loq = loquetier();
+        let mut loq = HarnessBuilder::new().loquetier();
         let mut be = sim_backend(cost.clone());
         let r_loq = harness::run_system(
             "loq", &mut loq, &mut be, trace.clone(), vec![job.clone()], &slo, usize::MAX,
         )
         .unwrap();
-        let mut pf = peft();
+        let mut pf = HarnessBuilder::new().peft();
         let mut be_p = sim_backend(cost.clone());
         let r_peft = harness::run_system(
             "peft", &mut pf, &mut be_p, trace, vec![job], &SloSpec::peft(), usize::MAX,
@@ -370,7 +368,7 @@ fn main() -> anyhow::Result<()> {
             });
         }
         let job = harness::finetune_job(99, 3, 50_000, 0, 2, 1, false);
-        let mut sys = loquetier();
+        let mut sys = HarnessBuilder::new().loquetier();
         let mut be = sim_backend(cost.clone());
         let _ = harness::run_system("fig5", &mut sys, &mut be, requests, vec![job], &slo, usize::MAX)
             .unwrap();
@@ -398,7 +396,7 @@ fn main() -> anyhow::Result<()> {
                 slo: None,
             })
             .collect();
-        let mut sys = loquetier();
+        let mut sys = HarnessBuilder::new().loquetier();
         let mut be = sim_backend(cost.clone());
         let r = harness::run_system("fig6", &mut sys, &mut be, requests, vec![], &slo, usize::MAX)
             .unwrap();
@@ -415,7 +413,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---- S-LoRA presence check (keeps the baseline compiled + honest).
     bench_for("slora_startup_transform_modeled", 1.5, || {
-        let s = slora();
+        let s = HarnessBuilder::new().slora();
         assert!(s.load_transform_s > 0.0);
     });
 

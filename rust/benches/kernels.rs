@@ -1,9 +1,11 @@
 //! Kernel micro-benchmarks.
 //!
-//! Part 1 (no artifacts needed — always runs): the SMLM segmented kernel
-//! against its per-row reference, swept over adapter counts {1, 4, 16} ×
-//! thread counts {1, 2, 4} on the deterministic worker pool, plus
-//! native-backend step latencies. Each run appends one entry to the
+//! Part 1 (no artifacts needed — always runs): the blocked+SIMD GEMM
+//! micro-kernels against the naive scalar reference (per layout, f32 and
+//! int8 — `gemm_speedup_simd` is CI-gated at ≥ 4x), the SMLM segmented
+//! kernel against its per-row reference, swept over adapter counts
+//! {1, 4, 16} × thread counts {1, 2, 4} on the deterministic worker pool,
+//! plus native-backend step latencies. Each run appends one entry to the
 //! repo-root `BENCH_SMLM.json` trajectory so kernel optimisations on the
 //! ROADMAP have a recorded baseline to beat (protocol: EXPERIMENTS.md
 //! §Perf).
@@ -96,6 +98,68 @@ fn smlm_sweep(fast: bool) -> Vec<(String, f64)> {
     results
 }
 
+/// Blocked+SIMD [`gemm`] vs the naive scalar reference, plus the fused
+/// int8 path, one row of keys per layout (EXPERIMENTS.md §Perf).
+///
+/// `gemm_speedup_simd` (CI-gated at ≥ 4x) is taken on the `NT` layout: its
+/// scalar baseline is a sequential-accumulation dot product the compiler
+/// cannot legally vectorize, so the ratio isolates the blocked 8-lane
+/// micro-kernel win. The `NN`/`TN` scalar baselines are broadcast-axpy
+/// loops LLVM already auto-vectorizes, so their ratios mostly show the
+/// cache-blocking win and are recorded un-gated.
+fn gemm_sweep(fast: bool) -> Vec<(String, f64)> {
+    use loquetier::runtime::kernels::{
+        gemm, gemm_reference, quantize_rows_i8, BData, GemmSpec, Layout,
+    };
+    let (m, k, n) = if fast { (64usize, 256usize, 256usize) } else { (128, 1024, 1024) };
+    let budget = if fast { 0.05 } else { 1.0 };
+    let mut rng = Rng::seed_from_u64(7);
+    let a = randv(&mut rng, m * k);
+    let mut results = Vec::new();
+    let mut speedup_nt = f64::NAN;
+
+    println!("== GEMM micro-kernels (m={m}, k={k}, n={n}) ==");
+    for (layout, tag) in [(Layout::NN, "nn"), (Layout::NT, "nt"), (Layout::TN, "tn")] {
+        let (b_rows, b_cols) = match layout {
+            Layout::NN => (k, n),
+            Layout::NT => (n, k),
+            Layout::TN => (m, n),
+        };
+        let b = randv(&mut rng, b_rows * b_cols);
+        let (q, scales) = quantize_rows_i8(&b, b_rows, b_cols);
+        let y_len = if layout == Layout::TN { k * n } else { m * n };
+        let mut y = vec![0.0f32; y_len];
+
+        let sc = bench_for(&format!("gemm_{tag}_scalar"), budget, || {
+            y.iter_mut().for_each(|v| *v = 0.0);
+            gemm_reference(&mut y, &a, BData::F32(&b), layout, m, k, n);
+        });
+        let si = bench_for(&format!("gemm_{tag}_simd"), budget, || {
+            y.iter_mut().for_each(|v| *v = 0.0);
+            gemm(GemmSpec::new(layout, &mut y, &a, b.as_slice(), m, k, n), None);
+        });
+        let i8r = bench_for(&format!("gemm_{tag}_int8"), budget, || {
+            y.iter_mut().for_each(|v| *v = 0.0);
+            let bq = (q.as_slice(), scales.as_slice());
+            gemm(GemmSpec::new(layout, &mut y, &a, bq, m, k, n), None);
+        });
+        let ratio = sc.mean_us / si.mean_us.max(1e-9);
+        println!("  {tag}: scalar/simd = {ratio:.2}x, int8 {:.1} µs", i8r.mean_us);
+        results.push((format!("gemm_{tag}_scalar_us"), sc.mean_us));
+        results.push((format!("gemm_{tag}_simd_us"), si.mean_us));
+        results.push((format!("gemm_{tag}_int8_us"), i8r.mean_us));
+        if layout == Layout::NT {
+            speedup_nt = ratio;
+        }
+    }
+    assert!(
+        speedup_nt >= 4.0,
+        "blocked+SIMD NT GEMM must beat the scalar reference by >=4x, got {speedup_nt:.2}x"
+    );
+    results.push(("gemm_speedup_simd".to_string(), speedup_nt));
+    results
+}
+
 /// Native-backend step latencies (tiny geometry, mixed-adapter batches),
 /// at each sweep thread count.
 fn native_steps(fast: bool) -> anyhow::Result<Vec<(String, f64)>> {
@@ -111,7 +175,7 @@ fn native_steps(fast: bool) -> anyhow::Result<Vec<(String, f64)>> {
 
 fn native_steps_at(threads: usize, budget: f64) -> anyhow::Result<Vec<(String, f64)>> {
     let (mut be, _reg, _manifest) =
-        loquetier::harness::native_stack_with_threads(42, threads)?;
+        loquetier::harness::HarnessBuilder::new().seed(42).threads(threads).native_stack()?;
     let g = be.geometry().clone();
     let v = g.vocab_size as i32;
     let te = g.num_kv_heads * g.head_dim;
@@ -315,7 +379,8 @@ fn main() -> anyhow::Result<()> {
     // artifact-gated part; still writes a real trajectory entry whose
     // shape the CI job validates.
     let fast = std::env::args().any(|a| a == "--fast");
-    let mut entries = smlm_sweep(fast);
+    let mut entries = gemm_sweep(fast);
+    entries.extend(smlm_sweep(fast));
     entries.extend(native_steps(fast)?);
     record_trajectory(&entries)?;
     if fast {

@@ -792,15 +792,18 @@ impl Coordinator {
         out.dropped_requests = self.drop_stale();
 
         // --- Plan ----------------------------------------------------------
-        let unified_caps = backend.unified_capacity();
-        let (ft_cap, pf_cap, dec_cap) = unified_caps
-            .unwrap_or((0, self.cfg.max_prefill_batch, backend.max_decode_batch()));
+        // One capability read per step: backends whose costs change at
+        // runtime (e.g. the sim's slowdown) are re-read fresh each step.
+        let bcaps = backend.caps();
+        let (ft_cap, pf_cap, dec_cap) = bcaps
+            .unified_capacity
+            .unwrap_or((0, self.cfg.max_prefill_batch, bcaps.max_decode_batch));
         let caps = StepCaps {
             ft: ft_cap,
             pf: pf_cap,
             dec: dec_cap,
-            unified_entry: unified_caps.is_some(),
-            prefill_continuation: backend.supports_prefill_continuation(),
+            unified_entry: bcaps.unified_capacity.is_some(),
+            prefill_continuation: bcaps.prefill_continuation,
         };
         let view = self.build_view(caps);
         let plan = self.policy.plan(&view);
@@ -817,7 +820,7 @@ impl Coordinator {
         // Every adapter this step's planned work touches must be resident
         // before the launch: page claims come out of the same block ledger
         // KV allocates from, evictions are LRU over unpinned residents, and
-        // each swap-in is charged below via `Backend::adapter_swap_cost`.
+        // each swap-in is charged below via `BackendCaps::adapter_swap_cost`.
         // Work whose adapter cannot be made resident this step (pool
         // exhausted even after evicting every unpinned resident) is simply
         // skipped — the request stays active and retries as blocks free up.
@@ -1015,7 +1018,7 @@ impl Coordinator {
         // Swap latency first: the pages must be on-device before the launch
         // reads them (sim backends charge `cost.adapter_swap_s` per swap-in;
         // real backends copy inside `sync_adapters` and charge zero here).
-        cost.add(backend.adapter_swap_cost(swap_ins));
+        cost.add(bcaps.adapter_swap_cost(swap_ins));
         let (ft_losses, pf_logits, dec_logits);
         if self.cfg.use_unified && caps.unified_entry {
             let (u, c) = backend.unified(&ft_seqs, &pf_seqs, &dec_rows, &mut self.kv)?;

@@ -64,10 +64,10 @@ pub struct StepCaps {
     /// Whether the backend compiled a unified entry at all.
     pub unified_entry: bool,
     /// Whether the backend can continue a prefill from existing KV
-    /// (`Backend::supports_prefill_continuation`). Chunking is only
-    /// planned when true — the AOT XLA prefill entries restart RoPE at
-    /// position 0 and take no cache input, so slicing a prompt there
-    /// would silently corrupt every later token.
+    /// (`BackendCaps::prefill_continuation`). Chunking is only planned
+    /// when true — the AOT XLA prefill entries restart RoPE at position 0
+    /// and take no cache input, so slicing a prompt there would silently
+    /// corrupt every later token.
     pub prefill_continuation: bool,
 }
 

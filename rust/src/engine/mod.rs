@@ -92,16 +92,17 @@ pub struct UnifiedOut {
     pub dec_logits: Vec<Vec<f32>>,
 }
 
-/// The execution backend contract.
-pub trait Backend {
-    fn geometry(&self) -> &ModelGeometry;
-
+/// A backend's static capabilities, read by the coordinator once per step
+/// via [`Backend::caps`]. This replaces the former probe sprawl of four
+/// trait methods (`max_decode_batch`, `unified_capacity`,
+/// `supports_prefill_continuation`, `adapter_swap_cost`) with one struct
+/// the planner can snapshot and thread through its policies.
+#[derive(Debug, Clone, Copy)]
+pub struct BackendCaps {
     /// Largest decode batch a single launch supports.
-    fn max_decode_batch(&self) -> usize;
-
+    pub max_decode_batch: usize,
     /// Unified-step capacities (ft, pf, dec), if a unified entry exists.
-    fn unified_capacity(&self) -> Option<(usize, usize, usize)>;
-
+    pub unified_capacity: Option<(usize, usize, usize)>,
     /// Can `prefill` CONTINUE a sequence whose slot already holds KV —
     /// attending over the cached prefix with rotary positions starting at
     /// the slot's current length? The native backend can (it passes
@@ -110,9 +111,44 @@ pub trait Backend {
     /// restart positions at 0, so they cannot. Chunked prefill
     /// (DESIGN.md §9) is only planned when this is true — on other
     /// backends prompts prefill whole, exactly as before.
-    fn supports_prefill_continuation(&self) -> bool {
-        false
+    pub prefill_continuation: bool,
+    /// Latency of moving ONE adapter's A/B pages host↔device (unified
+    /// paging, DESIGN.md §10); the cost model is linear in the swap count,
+    /// so the per-swap unit is the whole capability. Real backends do the
+    /// copy inside `sync_adapters` and charge nothing extra here.
+    pub adapter_swap: StepCost,
+}
+
+impl Default for BackendCaps {
+    fn default() -> Self {
+        Self {
+            max_decode_batch: 0,
+            unified_capacity: None,
+            prefill_continuation: false,
+            adapter_swap: StepCost::default(),
+        }
     }
+}
+
+impl BackendCaps {
+    /// Cost of swapping `swaps` adapters this step (the coordinator
+    /// charges this into its clock whenever its pager swaps adapters).
+    pub fn adapter_swap_cost(&self, swaps: usize) -> StepCost {
+        StepCost {
+            wall: self.adapter_swap.wall * swaps as f64,
+            virt: self.adapter_swap.virt * swaps as f64,
+        }
+    }
+}
+
+/// The execution backend contract.
+pub trait Backend {
+    fn geometry(&self) -> &ModelGeometry;
+
+    /// The backend's capabilities. Called once per coordinator step (so
+    /// backends whose costs change at runtime — e.g. the sim's mutable
+    /// slowdown — are re-read fresh each step).
+    fn caps(&self) -> BackendCaps;
 
     /// Prefill a batch; appends KV into each sequence's slot and returns the
     /// last-token logits per sequence.
@@ -145,15 +181,6 @@ pub trait Backend {
         dec: &[DecodeRow],
         cache: &mut KvCacheManager,
     ) -> Result<(UnifiedOut, StepCost)>;
-
-    /// Latency of moving `swaps` adapters' A/B pages host↔device (unified
-    /// paging, DESIGN.md §10). The coordinator charges this into its clock
-    /// whenever its pager swaps adapters for a step. Real backends do the
-    /// copy inside `sync_adapters` and charge nothing extra here.
-    fn adapter_swap_cost(&self, swaps: usize) -> StepCost {
-        let _ = swaps;
-        StepCost::default()
-    }
 
     /// Push adapter-bank changes from the registry into the backend.
     fn sync_adapters(&mut self, reg: &mut VirtualizedRegistry) -> Result<()>;

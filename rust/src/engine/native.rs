@@ -39,17 +39,14 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::engine::{Backend, DecodeRow, PrefillSeq, StepCost, TrainSeq, UnifiedOut};
+use crate::engine::{Backend, BackendCaps, DecodeRow, PrefillSeq, StepCost, TrainSeq, UnifiedOut};
 use crate::kvcache::KvCacheManager;
-use crate::model::{VirtualizedRegistry, WeightStore};
+use crate::model::{QuantizedTensor, VirtualizedRegistry, WeightStore};
 use crate::runtime::kernels::{
-    gemm_nn, rmsnorm, rmsnorm_backward, rope, silu, silu_grad, smlm_per_row, smlm_segmented,
-    softmax_inplace, LoraBankView, SmlmSegmentation,
+    gemm, rmsnorm, rmsnorm_backward, rope, silu, silu_grad, smlm_per_row, smlm_segmented,
+    softmax_inplace, BData, GemmSpec, LoraBankView, SmlmSegmentation,
 };
-use crate::runtime::parallel::{
-    par_gemm_nn, par_gemm_nt, par_gemm_tn, resolve_threads, ScratchArena, SharedSliceMut,
-    ThreadPool,
-};
+use crate::runtime::parallel::{resolve_threads, ScratchArena, SharedSliceMut, ThreadPool};
 use crate::runtime::{BucketTable, LoraGeometry, Manifest, ModelGeometry};
 
 const ADAM_BETA1: f32 = 0.9;
@@ -66,6 +63,39 @@ struct LayerWeights {
     wdown: Vec<f32>, // [I, H]
     ln1: Vec<f32>,   // [H]
     ln2: Vec<f32>,   // [H]
+}
+
+/// Int8 quantizations of one layer's dense base projections — the
+/// `--quantized` base-weight path (DESIGN.md §11). Norm vectors and the
+/// embedding stay f32: they are tiny, so quantizing them saves nothing and
+/// only spends tolerance budget.
+struct QuantLayer {
+    wq: QuantizedTensor,
+    wk: QuantizedTensor,
+    wv: QuantizedTensor,
+    wo: QuantizedTensor,
+    wgate: QuantizedTensor,
+    wup: QuantizedTensor,
+    wdown: QuantizedTensor,
+}
+
+/// The backend's quantized base-weight bank: per-row-scaled int8 copies of
+/// every dense base matrix, read by the *inference* forward pass only. The
+/// f32 masters are always kept and training runs entirely on them — LoRA
+/// A/B and all gradients stay f32, so backward numerics are untouched by
+/// quantization.
+struct QuantBank {
+    layers: Vec<QuantLayer>,
+    lm_head: QuantizedTensor,
+}
+
+/// B-operand selector: the int8 tensor when the quantized bank holds one,
+/// else the f32 master (bitwise-identical to the unquantized build).
+fn bq<'s>(q: Option<&'s QuantizedTensor>, w: &'s [f32]) -> BData<'s> {
+    match q {
+        Some(t) => BData::Int8 { q: &t.q, scales: &t.scales },
+        None => BData::F32(w),
+    }
 }
 
 /// One LoRA-targeted projection: the stacked bank block plus its optimizer
@@ -166,6 +196,10 @@ pub struct NativeBackend {
     /// base-only before any kernel runs (replacing the dense GEMMs' old
     /// per-element zero-skip branches).
     slot_loaded: Vec<bool>,
+    /// Int8 per-row-quantized copies of the dense base weights, present
+    /// iff built via [`NativeBackend::new_quantized`]. Inference-only:
+    /// training always reads the f32 masters above.
+    quant: Option<QuantBank>,
     /// The deterministic partition-only worker pool.
     pool: ThreadPool,
     /// Reusable zero-alloc scratch buffers for every per-step tensor.
@@ -190,6 +224,29 @@ impl NativeBackend {
     /// `threads` sizes the worker pool: `0` = auto (the `--threads`
     /// default — `LOQUETIER_THREADS` env or available parallelism).
     pub fn new(manifest: &Manifest, store: &WeightStore, threads: usize) -> Result<Self> {
+        Self::build(manifest, store, threads, false)
+    }
+
+    /// Like [`NativeBackend::new`], but additionally quantizes every dense
+    /// base matrix to int8 with per-row scales (the `--quantized` flag).
+    /// The inference forward pass then streams ~4x fewer base-weight
+    /// bytes; training and all LoRA math stay f32. Logit parity against
+    /// the f32 build is bounded by the DESIGN.md §11 contract (≤ 1e-2
+    /// relative on the logit row).
+    pub fn new_quantized(
+        manifest: &Manifest,
+        store: &WeightStore,
+        threads: usize,
+    ) -> Result<Self> {
+        Self::build(manifest, store, threads, true)
+    }
+
+    fn build(
+        manifest: &Manifest,
+        store: &WeightStore,
+        threads: usize,
+        quantized: bool,
+    ) -> Result<Self> {
         let g = manifest.build.model.clone();
         let l = manifest.build.lora.clone();
         let read = |name: &str, want: &[usize]| -> Result<Vec<f32>> {
@@ -262,6 +319,24 @@ impl NativeBackend {
         let slot_loaded =
             (0..slots).map(|s| Self::slot_is_loaded(&sites, &scaling, r, s)).collect();
 
+        let quant = if quantized {
+            let mut qlayers = Vec::with_capacity(g.num_layers);
+            for li in 0..g.num_layers {
+                qlayers.push(QuantLayer {
+                    wq: store.quantize(&format!("base.layers.{li}.wq"))?,
+                    wk: store.quantize(&format!("base.layers.{li}.wk"))?,
+                    wv: store.quantize(&format!("base.layers.{li}.wv"))?,
+                    wo: store.quantize(&format!("base.layers.{li}.wo"))?,
+                    wgate: store.quantize(&format!("base.layers.{li}.wgate"))?,
+                    wup: store.quantize(&format!("base.layers.{li}.wup"))?,
+                    wdown: store.quantize(&format!("base.layers.{li}.wdown"))?,
+                });
+            }
+            Some(QuantBank { layers: qlayers, lm_head: store.quantize("base.lm_head")? })
+        } else {
+            None
+        };
+
         Ok(Self {
             geometry: g,
             lora: l,
@@ -273,6 +348,7 @@ impl NativeBackend {
             sites,
             scaling,
             slot_loaded,
+            quant,
             pool: ThreadPool::new(resolve_threads(threads)),
             scratch: ScratchArena::new(),
             use_segmented: true,
@@ -282,6 +358,12 @@ impl NativeBackend {
     /// Worker-pool width (for logging and the bench sweeps).
     pub fn threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    /// Whether the int8 base-weight bank is active (see
+    /// [`NativeBackend::new_quantized`]).
+    pub fn is_quantized(&self) -> bool {
+        self.quant.is_some()
     }
 
     fn check_adapter(&self, adapter: i32) -> Result<()> {
@@ -394,12 +476,15 @@ impl NativeBackend {
         let eps = self.geometry.rms_eps as f32;
         let mut logits = self.scratch.take(rows.len() * v);
         let (final_norm, lm_head) = (&self.final_norm, &self.lm_head);
+        let blm = bq(self.quant.as_ref().map(|qb| &qb.lm_head), lm_head);
         self.pool.par_rows(&mut logits, rows.len(), v, |rg, out| {
             let mut hf = vec![0.0f32; h];
             for (ri, orow) in rg.clone().zip(out.chunks_mut(v)) {
                 let row = rows[ri];
                 rmsnorm(&mut hf, &x[row * h..(row + 1) * h], final_norm, eps);
-                gemm_nn(orow, &hf, lm_head, 1, h, v);
+                // Row-parallel outside, so no pool here (nested dispatch
+                // is forbidden).
+                gemm(GemmSpec::nn(orow, &hf, blm, 1, h, v), None);
             }
         });
         logits
@@ -488,19 +573,29 @@ impl NativeBackend {
 
         for (li, lw) in self.layers.iter().enumerate() {
             let pool = &self.pool;
+            // B operands for this layer's base GEMMs: the int8 bank when
+            // quantized, else the f32 masters (bitwise the pre-bank path).
+            let ql = self.quant.as_ref().map(|qb| &qb.layers[li]);
+            let bwq = bq(ql.map(|l| &l.wq), &lw.wq);
+            let bwk = bq(ql.map(|l| &l.wk), &lw.wk);
+            let bwv = bq(ql.map(|l| &l.wv), &lw.wv);
+            let bwo = bq(ql.map(|l| &l.wo), &lw.wo);
+            let bwgate = bq(ql.map(|l| &l.wgate), &lw.wgate);
+            let bwup = bq(ql.map(|l| &l.wup), &lw.wup);
+            let bwdown = bq(ql.map(|l| &l.wdown), &lw.wdown);
             pool.par_rows(&mut h1, n, h, |rg, out| {
                 for (t, orow) in rg.clone().zip(out.chunks_mut(h)) {
                     rmsnorm(orow, &x[t * h..(t + 1) * h], &lw.ln1, eps);
                 }
             });
             q.fill(0.0);
-            par_gemm_nn(pool, &mut q, &h1, &lw.wq, n, h, qd);
+            gemm(GemmSpec::nn(&mut q, &h1, bwq, n, h, qd), Some(pool));
             self.apply_lora(li, "q", &h1, &row_adapters, &seg, &mut q);
             k.fill(0.0);
-            par_gemm_nn(&self.pool, &mut k, &h1, &lw.wk, n, h, kd);
+            gemm(GemmSpec::nn(&mut k, &h1, bwk, n, h, kd), Some(pool));
             self.apply_lora(li, "k", &h1, &row_adapters, &seg, &mut k);
             v.fill(0.0);
-            par_gemm_nn(&self.pool, &mut v, &h1, &lw.wv, n, h, kd);
+            gemm(GemmSpec::nn(&mut v, &h1, bwv, n, h, kd), Some(pool));
             self.apply_lora(li, "v", &h1, &row_adapters, &seg, &mut v);
 
             // RoPE, row-parallel (each row owns its q/k slices).
@@ -574,7 +669,7 @@ impl NativeBackend {
             }
 
             attn_out.fill(0.0);
-            par_gemm_nn(&self.pool, &mut attn_out, &ctx, &lw.wo, n, qd, h);
+            gemm(GemmSpec::nn(&mut attn_out, &ctx, bwo, n, qd, h), Some(pool));
             self.apply_lora(li, "o", &ctx, &row_adapters, &seg, &mut attn_out);
             for (xx, ao) in x.iter_mut().zip(&attn_out) {
                 *xx += ao;
@@ -587,9 +682,9 @@ impl NativeBackend {
                 }
             });
             gate.fill(0.0);
-            par_gemm_nn(&self.pool, &mut gate, &h2, &lw.wgate, n, h, i_sz);
+            gemm(GemmSpec::nn(&mut gate, &h2, bwgate, n, h, i_sz), Some(pool));
             up.fill(0.0);
-            par_gemm_nn(&self.pool, &mut up, &h2, &lw.wup, n, h, i_sz);
+            gemm(GemmSpec::nn(&mut up, &h2, bwup, n, h, i_sz), Some(pool));
             self.pool.par_rows(&mut gate, n, i_sz, |rg, rows| {
                 for (t, grow) in rg.clone().zip(rows.chunks_mut(i_sz)) {
                     let urow = &up[t * i_sz..(t + 1) * i_sz];
@@ -599,7 +694,7 @@ impl NativeBackend {
                 }
             });
             mlp.fill(0.0);
-            par_gemm_nn(&self.pool, &mut mlp, &gate, &lw.wdown, n, i_sz, h);
+            gemm(GemmSpec::nn(&mut mlp, &gate, bwdown, n, i_sz, h), Some(pool));
             for (xx, mv) in x.iter_mut().zip(&mlp) {
                 *xx += mv;
             }
@@ -675,14 +770,20 @@ impl NativeBackend {
                     }
                 });
             }
+            // Training always reads the f32 weight masters (never the
+            // int8 bank): gradients demand full precision, and the
+            // backward pass must see the exact forward it differentiates.
             let mut q = self.scratch.take(n * qd);
-            par_gemm_nn(&self.pool, &mut q, &h1, &self.layers[li].wq, n, h, qd);
+            let wq = self.layers[li].wq.as_slice();
+            gemm(GemmSpec::nn(&mut q, &h1, wq, n, h, qd), Some(&self.pool));
             self.apply_lora(li, "q", &h1, &row_adapters, &seg, &mut q);
             let mut k = self.scratch.take(n * kd);
-            par_gemm_nn(&self.pool, &mut k, &h1, &self.layers[li].wk, n, h, kd);
+            let wk = self.layers[li].wk.as_slice();
+            gemm(GemmSpec::nn(&mut k, &h1, wk, n, h, kd), Some(&self.pool));
             self.apply_lora(li, "k", &h1, &row_adapters, &seg, &mut k);
             let mut vv = self.scratch.take(n * kd);
-            par_gemm_nn(&self.pool, &mut vv, &h1, &self.layers[li].wv, n, h, kd);
+            let wv = self.layers[li].wv.as_slice();
+            gemm(GemmSpec::nn(&mut vv, &h1, wv, n, h, kd), Some(&self.pool));
             self.apply_lora(li, "v", &h1, &row_adapters, &seg, &mut vv);
             {
                 let sq = SharedSliceMut::new(&mut q);
@@ -731,7 +832,8 @@ impl NativeBackend {
             }
 
             let mut attn_out = self.scratch.take(n * h);
-            par_gemm_nn(&self.pool, &mut attn_out, &ctx, &self.layers[li].wo, n, qd, h);
+            let wo = self.layers[li].wo.as_slice();
+            gemm(GemmSpec::nn(&mut attn_out, &ctx, wo, n, qd, h), Some(&self.pool));
             self.apply_lora(li, "o", &ctx, &row_adapters, &seg, &mut attn_out);
             for (xx, ao) in x.iter_mut().zip(&attn_out) {
                 *xx += ao;
@@ -756,9 +858,11 @@ impl NativeBackend {
                 });
             }
             let mut gate_pre = self.scratch.take(n * i_sz);
-            par_gemm_nn(&self.pool, &mut gate_pre, &h2, &self.layers[li].wgate, n, h, i_sz);
+            let wgate = self.layers[li].wgate.as_slice();
+            gemm(GemmSpec::nn(&mut gate_pre, &h2, wgate, n, h, i_sz), Some(&self.pool));
             let mut up = self.scratch.take(n * i_sz);
-            par_gemm_nn(&self.pool, &mut up, &h2, &self.layers[li].wup, n, h, i_sz);
+            let wup = self.layers[li].wup.as_slice();
+            gemm(GemmSpec::nn(&mut up, &h2, wup, n, h, i_sz), Some(&self.pool));
             let mut act = self.scratch.take(n * i_sz);
             self.pool.par_rows(&mut act, n, i_sz, |rg, rows| {
                 for (t, arow) in rg.clone().zip(rows.chunks_mut(i_sz)) {
@@ -769,7 +873,8 @@ impl NativeBackend {
                 }
             });
             let mut mlp = self.scratch.take(n * h);
-            par_gemm_nn(&self.pool, &mut mlp, &act, &self.layers[li].wdown, n, i_sz, h);
+            let wdown = self.layers[li].wdown.as_slice();
+            gemm(GemmSpec::nn(&mut mlp, &act, wdown, n, i_sz, h), Some(&self.pool));
             for (xx, mv) in x.iter_mut().zip(&mlp) {
                 *xx += mv;
             }
@@ -810,7 +915,8 @@ impl NativeBackend {
             });
         }
         let mut logits = self.scratch.take(n * v);
-        par_gemm_nn(&self.pool, &mut logits, &hf, &self.lm_head, n, h, v);
+        let lm = self.lm_head.as_slice();
+        gemm(GemmSpec::nn(&mut logits, &hf, lm, n, h, v), Some(&self.pool));
         self.scratch.give(hf);
         Ok(TrainStash { n, layers, x_last, inv_rms_f, logits })
     }
@@ -882,20 +988,35 @@ impl NativeBackend {
 
         // u = scale · x·A (used only for dB = uᵀ·dy).
         let mut u = scratch.take(n * rank);
-        par_gemm_nn(pool, &mut u, x, &site.a[slot * ae..(slot + 1) * ae], n, din, rank);
+        let a_s = &site.a[slot * ae..(slot + 1) * ae];
+        gemm(GemmSpec::nn(&mut u, x, a_s, n, din, rank), Some(pool));
         for uv in u.iter_mut() {
             *uv *= scale;
         }
-        par_gemm_tn(pool, &mut site.grad_b[slot * be..(slot + 1) * be], &u, dy, n, rank, dout);
+        gemm(
+            GemmSpec::tn(&mut site.grad_b[slot * be..(slot + 1) * be], &u, dy, n, rank, dout),
+            Some(pool),
+        );
 
         // du = scale · dy·Bᵀ; dA = xᵀ·du; dx += du·Aᵀ.
         let mut du = scratch.take(n * rank);
-        par_gemm_nt(pool, &mut du, dy, &site.b[slot * be..(slot + 1) * be], n, dout, rank);
+        let b_s = &site.b[slot * be..(slot + 1) * be];
+        gemm(GemmSpec::nt(&mut du, dy, b_s, n, dout, rank), Some(pool));
         for dv in du.iter_mut() {
             *dv *= scale;
         }
-        par_gemm_tn(pool, &mut site.grad_a[slot * ae..(slot + 1) * ae], x, &du, n, din, rank);
-        par_gemm_nt(pool, dx, &du, &site.a[slot * ae..(slot + 1) * ae], n, rank, din);
+        gemm(
+            GemmSpec::tn(
+                &mut site.grad_a[slot * ae..(slot + 1) * ae],
+                x,
+                du.as_slice(),
+                n,
+                din,
+                rank,
+            ),
+            Some(pool),
+        );
+        gemm(GemmSpec::nt(dx, &du, a_s, n, rank, din), Some(pool));
         scratch.give(u);
         scratch.give(du);
     }
@@ -930,7 +1051,7 @@ impl NativeBackend {
 
         // dx through the head: dhf = dlogits·Wᵀ, then final-norm backward.
         let mut dhf = scratch.take(n * h);
-        par_gemm_nt(pool, &mut dhf, dlogits, lm_head, n, v, h);
+        gemm(GemmSpec::nt(&mut dhf, dlogits, lm_head, n, v, h), Some(pool));
         // dx accumulates the residual-stream gradient; one buffer walks
         // the whole stack (the residual passthrough is the identity).
         let mut dx = scratch.take(n * h);
@@ -963,7 +1084,8 @@ impl NativeBackend {
 
             // ---- MLP backward: dx is d(layer output).
             d_act.fill(0.0);
-            par_gemm_nt(pool, &mut d_act, &dx, &lw.wdown, n, h, i_sz);
+            let wdown = lw.wdown.as_slice();
+            gemm(GemmSpec::nt(&mut d_act, &dx, wdown, n, h, i_sz), Some(pool));
             {
                 let sdg = SharedSliceMut::new(&mut d_gate_pre);
                 let sdu = SharedSliceMut::new(&mut d_up);
@@ -982,8 +1104,9 @@ impl NativeBackend {
                 });
             }
             dh2.fill(0.0);
-            par_gemm_nt(pool, &mut dh2, &d_gate_pre, &lw.wgate, n, i_sz, h);
-            par_gemm_nt(pool, &mut dh2, &d_up, &lw.wup, n, i_sz, h);
+            let (wgate, wup) = (lw.wgate.as_slice(), lw.wup.as_slice());
+            gemm(GemmSpec::nt(&mut dh2, &d_gate_pre, wgate, n, i_sz, h), Some(pool));
+            gemm(GemmSpec::nt(&mut dh2, &d_up, wup, n, i_sz, h), Some(pool));
             // d(x_mid) = residual passthrough + ln2 backward (adds into dx).
             pool.par_rows(&mut dx, n, h, |rg, rows| {
                 for (t, dxrow) in rg.clone().zip(rows.chunks_mut(h)) {
@@ -999,7 +1122,7 @@ impl NativeBackend {
 
             // ---- Attention backward: dx is now d(attn residual output).
             d_ctx.fill(0.0);
-            par_gemm_nt(pool, &mut d_ctx, &dx, &lw.wo, n, h, qd);
+            gemm(GemmSpec::nt(&mut d_ctx, &dx, lw.wo.as_slice(), n, h, qd), Some(pool));
             if row_has_lora {
                 if let Some(si) = sites[li].iter().position(|s| s.module == "o") {
                     Self::lora_backward(
@@ -1093,9 +1216,9 @@ impl NativeBackend {
             }
 
             dh1.fill(0.0);
-            par_gemm_nt(pool, &mut dh1, &dq, &lw.wq, n, qd, h);
-            par_gemm_nt(pool, &mut dh1, &dk, &lw.wk, n, kd, h);
-            par_gemm_nt(pool, &mut dh1, &dv, &lw.wv, n, kd, h);
+            gemm(GemmSpec::nt(&mut dh1, &dq, lw.wq.as_slice(), n, qd, h), Some(pool));
+            gemm(GemmSpec::nt(&mut dh1, &dk, lw.wk.as_slice(), n, kd, h), Some(pool));
+            gemm(GemmSpec::nt(&mut dh1, &dv, lw.wv.as_slice(), n, kd, h), Some(pool));
             if row_has_lora {
                 for (module, dy) in [("q", &dq), ("k", &dk), ("v", &dv)] {
                     if let Some(si) = sites[li].iter().position(|s| s.module == module) {
@@ -1141,22 +1264,23 @@ impl Backend for NativeBackend {
         &self.geometry
     }
 
-    fn max_decode_batch(&self) -> usize {
-        self.buckets.max_decode()
-    }
-
-    fn unified_capacity(&self) -> Option<(usize, usize, usize)> {
-        self.buckets
-            .unified
-            .first()
-            .map(|u| (u.ft_batch, u.pf_batch, u.dec_batch))
-    }
-
-    fn supports_prefill_continuation(&self) -> bool {
-        // Every sequence carries `pos0 = cache.len(slot)`: RoPE continues
-        // at the cached length and attention reads the cached prefix, so
-        // chunked prefill (DESIGN.md §9) is bitwise output-transparent.
-        true
+    fn caps(&self) -> BackendCaps {
+        BackendCaps {
+            max_decode_batch: self.buckets.max_decode(),
+            unified_capacity: self
+                .buckets
+                .unified
+                .first()
+                .map(|u| (u.ft_batch, u.pf_batch, u.dec_batch)),
+            // Every sequence carries `pos0 = cache.len(slot)`: RoPE
+            // continues at the cached length and attention reads the
+            // cached prefix, so chunked prefill (DESIGN.md §9) is bitwise
+            // output-transparent.
+            prefill_continuation: true,
+            // Host backend: the bank lives in host memory already, no
+            // device transfer to charge.
+            adapter_swap: StepCost::default(),
+        }
     }
 
     fn prefill(
@@ -1394,8 +1518,12 @@ impl Backend for NativeBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::harness::{cache_config_for, native_geometry, native_stack};
+    use crate::harness::{cache_config_for, native_geometry, HarnessBuilder};
     use crate::kvcache::KvCacheManager;
+
+    fn stack(seed: u64) -> (NativeBackend, crate::model::VirtualizedRegistry, Manifest) {
+        HarnessBuilder::new().seed(seed).native_stack().unwrap()
+    }
 
     fn cache() -> KvCacheManager {
         KvCacheManager::new(cache_config_for(&native_geometry(), 8))
@@ -1408,7 +1536,7 @@ mod tests {
 
     #[test]
     fn prefill_yields_finite_logits_and_fills_cache() {
-        let (mut be, _reg, _m) = native_stack(42).unwrap();
+        let (mut be, _reg, _m) = stack(42);
         let mut kv = cache();
         let slot = kv.allocate(1, 32).unwrap();
         let (logits, cost) = be
@@ -1422,14 +1550,28 @@ mod tests {
     }
 
     #[test]
+    fn caps_pin_the_legacy_probe_surface() {
+        // ISSUE 7 fixture-pin: the consolidated `caps()` read matches what
+        // the four legacy probes reported for the synthetic tiny model
+        // (buckets: unified ft4/pf8/dec8, decode [8], free swaps).
+        let (be, _reg, _m) = stack(42);
+        let caps = be.caps();
+        assert_eq!(caps.max_decode_batch, 8);
+        assert_eq!(caps.unified_capacity, Some((4, 8, 8)));
+        assert!(caps.prefill_continuation);
+        assert_eq!(caps.adapter_swap_cost(5).wall, 0.0);
+        assert_eq!(caps.adapter_swap_cost(5).virt, 0.0);
+    }
+
+    #[test]
     fn empty_slot_guard_tracks_bank_state() {
         // After sync every stand-in adapter is non-zero => loaded.
-        let (be, _reg, _m) = native_stack(11).unwrap();
+        let (be, _reg, _m) = stack(11);
         assert!(be.slot_loaded.iter().all(|&b| b));
 
         // A freshly constructed backend has an all-zero bank and zero
         // scaling => nothing loaded, every row masked to base-only.
-        let (manifest, store) = crate::harness::native_model(11).unwrap();
+        let (manifest, store) = HarnessBuilder::new().seed(11).native_model().unwrap();
         let be0 = NativeBackend::new(&manifest, &store, 1).unwrap();
         assert!(be0.slot_loaded.iter().all(|&b| !b));
         let mut adapters = vec![0i32, -1, 2];
@@ -1442,7 +1584,7 @@ mod tests {
         // The whole-backward oracle: perturb single A/B params, compare the
         // analytic accumulated gradient against a central difference of
         // the eval loss.
-        let (mut be, _reg, _m) = native_stack(7).unwrap();
+        let (mut be, _reg, _m) = stack(7);
         let tokens = seq(10, 3);
         let train = |be: &mut NativeBackend| -> f32 {
             let (l, _) = be
@@ -1503,7 +1645,7 @@ mod tests {
 
     #[test]
     fn adam_descends_on_repeated_batch() {
-        let (mut be, _reg, _m) = native_stack(5).unwrap();
+        let (mut be, _reg, _m) = stack(5);
         let tokens = seq(16, 9);
         let mk = || TrainSeq {
             tokens: tokens.clone(),
@@ -1528,7 +1670,7 @@ mod tests {
 
     #[test]
     fn optim_clears_only_masked_slots() {
-        let (mut be, _reg, _m) = native_stack(5).unwrap();
+        let (mut be, _reg, _m) = stack(5);
         let mk = |adapter| TrainSeq {
             tokens: seq(8, adapter),
             labels: seq(8, adapter),
@@ -1549,7 +1691,7 @@ mod tests {
 
     #[test]
     fn eval_rows_leave_gradients_untouched() {
-        let (mut be, _reg, _m) = native_stack(6).unwrap();
+        let (mut be, _reg, _m) = stack(6);
         be.train_step(&[TrainSeq {
             tokens: seq(8, 1),
             labels: seq(8, 1),

@@ -18,7 +18,7 @@
 use anyhow::{anyhow, Result};
 
 use crate::engine::{
-    Backend, CostModel, DecodeRow, PrefillSeq, StepCost, TrainSeq, UnifiedOut,
+    Backend, BackendCaps, CostModel, DecodeRow, PrefillSeq, StepCost, TrainSeq, UnifiedOut,
 };
 use crate::kvcache::KvCacheManager;
 use crate::model::VirtualizedRegistry;
@@ -122,21 +122,22 @@ impl Backend for SimBackend {
         &self.geometry
     }
 
-    fn max_decode_batch(&self) -> usize {
-        self.buckets.max_decode()
-    }
-
-    fn unified_capacity(&self) -> Option<(usize, usize, usize)> {
-        self.buckets
-            .unified
-            .first()
-            .map(|u| (u.ft_batch, u.pf_batch, u.dec_batch))
-    }
-
-    fn supports_prefill_continuation(&self) -> bool {
-        // Token accounting only: appends extend the slot and the cost
-        // model charges the slice, which is all a continuation needs here.
-        true
+    fn caps(&self) -> BackendCaps {
+        BackendCaps {
+            max_decode_batch: self.buckets.max_decode(),
+            unified_capacity: self
+                .buckets
+                .unified
+                .first()
+                .map(|u| (u.ft_batch, u.pf_batch, u.dec_batch)),
+            // Token accounting only: appends extend the slot and the cost
+            // model charges the slice, which is all a continuation needs
+            // here.
+            prefill_continuation: true,
+            // Per-swap unit; computed fresh on every caps() read so a
+            // runtime `slowdown` change is honored immediately.
+            adapter_swap: self.scaled(self.cost.adapter_swap_cost(1)),
+        }
     }
 
     fn prefill(
@@ -245,13 +246,6 @@ impl Backend for SimBackend {
         Ok((out, self.scaled(cost)))
     }
 
-    fn adapter_swap_cost(&self, swaps: usize) -> StepCost {
-        if swaps == 0 {
-            return StepCost::default();
-        }
-        self.scaled(self.cost.adapter_swap_cost(swaps))
-    }
-
     fn sync_adapters(&mut self, _reg: &mut VirtualizedRegistry) -> Result<()> {
         Ok(())
     }
@@ -339,6 +333,35 @@ mod tests {
         }
         let l1 = be.fake_loss(1.0);
         assert!(l1 < l0);
+    }
+
+    #[test]
+    fn caps_pin_the_legacy_probe_surface() {
+        // Fixture-pin for the ISSUE 7 `caps()` consolidation: the one
+        // `BackendCaps` read must report exactly what the four legacy
+        // probes (`max_decode_batch`, `unified_capacity`,
+        // `supports_prefill_continuation`, `adapter_swap_cost`) returned,
+        // so every plan the policies build from `StepCaps` is unchanged.
+        let mut be = crate::harness::sim_backend(CostModel::default());
+        let caps = be.caps();
+        assert_eq!(caps.max_decode_batch, 48);
+        assert_eq!(caps.unified_capacity, Some((4, 8, 48)));
+        assert!(caps.prefill_continuation);
+        let unit = caps.adapter_swap;
+        assert_eq!(unit.wall, 0.0);
+        assert!((unit.virt - CostModel::default().adapter_swap_cost(1)).abs() < 1e-12);
+        let three = caps.adapter_swap_cost(3);
+        assert!((three.virt - 3.0 * unit.virt).abs() < 1e-12);
+        assert_eq!(three.wall, 0.0);
+        // A runtime slowdown change must be visible on the next caps()
+        // read — the coordinator reads caps() fresh every step.
+        be.slowdown = 2.0;
+        assert!((be.caps().adapter_swap.virt - 2.0 * unit.virt).abs() < 1e-12);
+        // No unified bucket compiled => no unified entry, like the old
+        // `unified_capacity()` probe.
+        let plain = SimBackend::new(geometry(), buckets(), CostModel::default());
+        assert_eq!(plain.caps().unified_capacity, None);
+        assert_eq!(plain.caps().max_decode_batch, 8);
     }
 
     #[test]

@@ -15,7 +15,7 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::engine::{
-    Backend, CostModel, DecodeRow, PrefillSeq, StepCost, TrainSeq, UnifiedOut,
+    Backend, BackendCaps, CostModel, DecodeRow, PrefillSeq, StepCost, TrainSeq, UnifiedOut,
 };
 use crate::kvcache::KvCacheManager;
 use crate::model::{VirtualizedRegistry, WeightStore};
@@ -211,18 +211,23 @@ impl Backend for XlaBackend {
         &self.geometry
     }
 
-    fn max_decode_batch(&self) -> usize {
-        self.rt.manifest.build.buckets.max_decode()
-    }
-
-    fn unified_capacity(&self) -> Option<(usize, usize, usize)> {
-        self.rt
-            .manifest
-            .build
-            .buckets
-            .unified
-            .first()
-            .map(|u| (u.ft_batch, u.pf_batch, u.dec_batch))
+    fn caps(&self) -> BackendCaps {
+        BackendCaps {
+            max_decode_batch: self.rt.manifest.build.buckets.max_decode(),
+            unified_capacity: self
+                .rt
+                .manifest
+                .build
+                .buckets
+                .unified
+                .first()
+                .map(|u| (u.ft_batch, u.pf_batch, u.dec_batch)),
+            // The AOT prefill entries take no cache input and restart
+            // rotary positions at 0 — they cannot continue a partly
+            // cached sequence, so prompts prefill whole.
+            prefill_continuation: false,
+            adapter_swap: StepCost::default(),
+        }
     }
 
     fn prefill(

@@ -10,10 +10,7 @@
 
 mod native;
 
-pub use native::{
-    native_buckets, native_geometry, native_lora, native_model, native_stack,
-    native_stack_with_threads,
-};
+pub use native::{native_buckets, native_geometry, native_lora};
 
 use std::path::Path;
 
@@ -25,10 +22,11 @@ use crate::baselines::{
 use crate::coordinator::{
     Coordinator, CoordinatorConfig, FinetuneJob, InferenceRequest, PolicyKind, TrainExample,
 };
-use crate::engine::{Backend, CostModel, SimBackend};
+use crate::engine::{Backend, CostModel, NativeBackend, SimBackend};
 use crate::kvcache::CacheConfig;
 use crate::metrics::{build_report, RunReport, SloSpec};
-use crate::runtime::{BucketTable, ModelGeometry, UnifiedShape};
+use crate::model::{VirtualizedRegistry, WeightStore};
+use crate::runtime::{BucketTable, Manifest, ModelGeometry, UnifiedShape};
 use crate::workload::{
     build_train_set, build_zipf_trace, LengthModel, PoissonArrivals, ALPACA_LENGTHS,
     GSM8K_LENGTHS, SHAREGPT_LENGTHS,
@@ -101,7 +99,7 @@ fn sim_cache_geometry_fixup(cfg: &mut CacheConfig) {
 /// The artifact-backed XLA stack: runtime (entries passing `filter`),
 /// registry with every pretrained stand-in attached (slot i ← adapter i,
 /// inference state), and a synced backend — the XLA twin of
-/// [`native_stack`], shared by the CLI, benches and tests.
+/// [`HarnessBuilder::native_stack`], shared by the CLI, benches and tests.
 pub fn xla_stack(
     artifacts_dir: impl AsRef<Path>,
     filter: impl Fn(&str) -> bool,
@@ -145,8 +143,11 @@ pub fn gpu_cost_model(artifacts_dir: &str) -> CostModel {
     CostModel::load(format!("{artifacts_dir}/calibration.json")).unwrap_or_default()
 }
 
+/// GPU-scale sim backend replaying `cost` — shorthand for
+/// [`HarnessBuilder::sim`] (not part of the deprecated zoo: it is a plain
+/// alias, not a per-shape constructor).
 pub fn sim_backend(cost: CostModel) -> SimBackend {
-    SimBackend::new(sim_geometry(), sim_buckets(), cost)
+    HarnessBuilder::new().sim(cost)
 }
 
 fn gpu_cache() -> CacheConfig {
@@ -163,33 +164,154 @@ fn gpu_coord_config() -> CoordinatorConfig {
     }
 }
 
-/// Loquetier at GPU scale (FIFO planning — the pre-refactor behaviour).
+/// One builder for every canonical harness constructor, replacing the old
+/// per-shape zoo (`native_stack`, `native_stack_with_threads`,
+/// `native_model`, `loquetier`, `loquetier_with`, `peft`, `slora`,
+/// `flexllm` — kept one PR as `#[deprecated]` thin wrappers).
+///
+/// Knobs default to the old zoo's implicit choices (seed 0, auto threads,
+/// FIFO policy, f32 base weights), so a bare
+/// `HarnessBuilder::new().loquetier()` is the old `loquetier()`. Terminal
+/// constructors borrow the builder, so one configured builder can mint a
+/// whole comparison row:
+///
+/// ```ignore
+/// let hb = HarnessBuilder::new().seed(42).threads(2);
+/// let (be, reg, manifest) = hb.native_stack()?;     // native CPU stack
+/// let sys = hb.policy(PolicyKind::SloAware).loquetier(); // GPU-scale system
+/// ```
+#[derive(Debug, Clone, Copy)]
+pub struct HarnessBuilder {
+    seed: u64,
+    threads: usize,
+    policy: PolicyKind,
+    quantized: bool,
+}
+
+impl Default for HarnessBuilder {
+    fn default() -> Self {
+        Self { seed: 0, threads: 0, policy: PolicyKind::Fifo, quantized: false }
+    }
+}
+
+impl HarnessBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// RNG seed for the synthetic native model (weights + adapters).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Worker-pool width for the native backend; `0` = auto
+    /// (`LOQUETIER_THREADS` env or available parallelism).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Scheduling policy for [`Self::loquetier`] (`--policy fifo|slo`,
+    /// DESIGN.md §9).
+    pub fn policy(mut self, policy: PolicyKind) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Serve base weights as per-row int8 on the native backend
+    /// (`--quantized`, DESIGN.md §11). Training still reads f32 masters.
+    pub fn quantized(mut self, quantized: bool) -> Self {
+        self.quantized = quantized;
+        self
+    }
+
+    /// Synthetic manifest + in-memory weight store for `.seed()`.
+    pub fn native_model(&self) -> Result<(Manifest, WeightStore)> {
+        native::build_model(self.seed)
+    }
+
+    /// The full native serving stack: backend (at `.threads()`, optionally
+    /// `.quantized()`) + registry with every stand-in adapter attached
+    /// (slot i ← adapter i, inference state) and synced.
+    pub fn native_stack(&self) -> Result<(NativeBackend, VirtualizedRegistry, Manifest)> {
+        native::build_stack(self.seed, self.threads, self.quantized)
+    }
+
+    /// GPU-scale sim backend replaying `cost`.
+    pub fn sim(&self, cost: CostModel) -> SimBackend {
+        SimBackend::new(sim_geometry(), sim_buckets(), cost)
+    }
+
+    /// Loquetier at GPU scale under `.policy()` (default FIFO — the
+    /// pre-refactor behaviour).
+    pub fn loquetier(&self) -> LoquetierSystem {
+        let cfg = CoordinatorConfig { policy: self.policy, ..gpu_coord_config() };
+        LoquetierSystem::new(Coordinator::new(cfg, gpu_cache()))
+    }
+
+    /// PEFT baseline: padded batches, small batch cap (OOM pressure).
+    pub fn peft(&self) -> PeftLike {
+        PeftLike::new(8, gpu_cache())
+    }
+
+    /// S-LoRA baseline with its measured load-transform stall
+    /// (Table 2: ~33 s).
+    pub fn slora(&self) -> SLoraLike {
+        SLoraLike::new(gpu_coord_config(), gpu_cache(), 33.0)
+    }
+
+    /// FlexLLM baseline: lazy transform (~38 s, Table 2), adapter-cycling
+    /// reload (~5 s), and — separately — its decode-speed ceiling, applied
+    /// as `backend.slowdown = FLEXLLM_SLOWDOWN` by the harness.
+    pub fn flexllm(&self) -> FlexLlmLike {
+        FlexLlmLike::new(gpu_coord_config(), gpu_cache(), 38.0, 5.0)
+    }
+}
+
+// ---- Deprecated constructor zoo (one-PR compatibility wrappers) --------
+
+#[deprecated(note = "use HarnessBuilder::new().seed(seed).native_model()")]
+pub fn native_model(seed: u64) -> Result<(Manifest, WeightStore)> {
+    HarnessBuilder::new().seed(seed).native_model()
+}
+
+#[deprecated(note = "use HarnessBuilder::new().seed(seed).native_stack()")]
+pub fn native_stack(seed: u64) -> Result<(NativeBackend, VirtualizedRegistry, Manifest)> {
+    HarnessBuilder::new().seed(seed).native_stack()
+}
+
+#[deprecated(note = "use HarnessBuilder::new().seed(seed).threads(threads).native_stack()")]
+pub fn native_stack_with_threads(
+    seed: u64,
+    threads: usize,
+) -> Result<(NativeBackend, VirtualizedRegistry, Manifest)> {
+    HarnessBuilder::new().seed(seed).threads(threads).native_stack()
+}
+
+#[deprecated(note = "use HarnessBuilder::new().loquetier()")]
 pub fn loquetier() -> LoquetierSystem {
-    loquetier_with(PolicyKind::Fifo)
+    HarnessBuilder::new().loquetier()
 }
 
-/// Loquetier at GPU scale under an explicit scheduling policy
-/// (`--policy fifo|slo`, DESIGN.md §9).
+#[deprecated(note = "use HarnessBuilder::new().policy(policy).loquetier()")]
 pub fn loquetier_with(policy: PolicyKind) -> LoquetierSystem {
-    let cfg = CoordinatorConfig { policy, ..gpu_coord_config() };
-    LoquetierSystem::new(Coordinator::new(cfg, gpu_cache()))
+    HarnessBuilder::new().policy(policy).loquetier()
 }
 
-/// PEFT baseline: padded batches, small batch cap (OOM pressure).
+#[deprecated(note = "use HarnessBuilder::new().peft()")]
 pub fn peft() -> PeftLike {
-    PeftLike::new(8, gpu_cache())
+    HarnessBuilder::new().peft()
 }
 
-/// S-LoRA baseline with its measured load-transform stall (Table 2: ~33 s).
+#[deprecated(note = "use HarnessBuilder::new().slora()")]
 pub fn slora() -> SLoraLike {
-    SLoraLike::new(gpu_coord_config(), gpu_cache(), 33.0)
+    HarnessBuilder::new().slora()
 }
 
-/// FlexLLM baseline: lazy transform (~38 s, Table 2), adapter-cycling
-/// reload (~5 s), and — separately — its decode-speed ceiling, applied as
-/// `backend.slowdown = FLEXLLM_SLOWDOWN` by the harness.
+#[deprecated(note = "use HarnessBuilder::new().flexllm()")]
 pub fn flexllm() -> FlexLlmLike {
-    FlexLlmLike::new(gpu_coord_config(), gpu_cache(), 38.0, 5.0)
+    HarnessBuilder::new().flexllm()
 }
 
 /// Decode-speed ratio of Loquetier to FlexLLM. Figure 2 shows FlexLLM
@@ -318,7 +440,7 @@ pub fn policy_attainment(
     policy: PolicyKind,
     requests: Vec<InferenceRequest>,
 ) -> (f64, usize) {
-    let mut sys = loquetier_with(policy);
+    let mut sys = HarnessBuilder::new().policy(policy).loquetier();
     let mut be = sim_backend(cost.clone());
     drive_to_completion(&mut sys, &mut be, requests, usize::MAX).unwrap();
     let report = build_report(
@@ -419,14 +541,14 @@ mod tests {
             .requests
         };
 
-        let mut loq = loquetier();
+        let mut loq = HarnessBuilder::new().loquetier();
         let mut be = sim_backend(cost.clone());
         let r_loq = run_system(
             "loq", &mut loq, &mut be, mk_trace(), vec![], &SloSpec::default(), 2_000_000,
         )
         .unwrap();
 
-        let mut pef = peft();
+        let mut pef = HarnessBuilder::new().peft();
         let mut be2 = sim_backend(cost);
         let r_peft = run_system(
             "peft", &mut pef, &mut be2, mk_trace(), vec![], &SloSpec::peft(), 2_000_000,

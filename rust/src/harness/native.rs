@@ -92,14 +92,15 @@ fn normal_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
     (0..n).map(|_| rng.normal() as f32 * scale).collect()
 }
 
-/// Build the synthetic manifest + in-memory weight store for `seed`.
+/// Build the synthetic manifest + in-memory weight store for `seed` (the
+/// `HarnessBuilder::native_model` terminal).
 ///
 /// The store carries everything the artifact store would: random base
 /// weights, the empty `lora.*` bank, `max_adapters` pretrained adapter
 /// stand-ins (`adapter{i}.*`, with non-zero B so each adapter visibly
 /// shifts logits), and the `bank.*` preloaded copies the registry golden
 /// test rebuilds against.
-pub fn native_model(seed: u64) -> Result<(Manifest, WeightStore)> {
+pub(crate) fn build_model(seed: u64) -> Result<(Manifest, WeightStore)> {
     let g = native_geometry();
     let l = native_lora();
     let mut rng = Rng::seed_from_u64(seed);
@@ -193,28 +194,27 @@ pub fn native_model(seed: u64) -> Result<(Manifest, WeightStore)> {
     Ok((manifest, store))
 }
 
-/// The full native serving stack: backend + registry with every stand-in
-/// adapter attached (slot i ← adapter i, inference state) and synced.
-/// Runs at the auto thread count (`LOQUETIER_THREADS` env or available
-/// parallelism); [`native_stack_with_threads`] pins it explicitly.
-pub fn native_stack(seed: u64) -> Result<(NativeBackend, VirtualizedRegistry, Manifest)> {
-    native_stack_with_threads(seed, 0)
-}
-
-/// [`native_stack`] with an explicit worker-pool width (`0` = auto) — the
-/// constructor the thread-count-invariance tests and the `--threads` CLI
-/// plumbing go through.
-pub fn native_stack_with_threads(
+/// The full native serving stack (the `HarnessBuilder::native_stack`
+/// terminal): backend + registry with every stand-in adapter attached
+/// (slot i ← adapter i, inference state) and synced. `threads == 0` means
+/// auto (`LOQUETIER_THREADS` env or available parallelism); `quantized`
+/// builds the int8 base-weight backend (DESIGN.md §11).
+pub(crate) fn build_stack(
     seed: u64,
     threads: usize,
+    quantized: bool,
 ) -> Result<(NativeBackend, VirtualizedRegistry, Manifest)> {
-    let (manifest, store) = native_model(seed)?;
+    let (manifest, store) = build_model(seed)?;
     let mut reg = VirtualizedRegistry::new(&manifest, &store)?;
     for i in 0..manifest.build.lora.max_adapters {
         let ad = LoraAdapter::from_store(&store, &manifest, i, format!("adapter{i}"))?;
         reg.attach(format!("vm{i}"), ad, i, SlotState::Inference)?;
     }
-    let mut be = NativeBackend::new(&manifest, &store, threads)?;
+    let mut be = if quantized {
+        NativeBackend::new_quantized(&manifest, &store, threads)?
+    } else {
+        NativeBackend::new(&manifest, &store, threads)?
+    };
     be.sync_adapters(&mut reg)?;
     Ok((be, reg, manifest))
 }

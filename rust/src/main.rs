@@ -33,9 +33,9 @@ loquetier — virtualized multi-LoRA unified fine-tuning + serving
 USAGE:
   loquetier serve   [--backend native|xla] [--artifacts DIR] [--listen ADDR]
                     [--config FILE] [--seed N] [--threads N]
-                    [--policy fifo|slo]
+                    [--policy fifo|slo] [--quantized]
   loquetier bench   [--backend native|xla] [--artifacts DIR] [--seed N]
-                    [--threads N] [--policy fifo|slo]
+                    [--threads N] [--policy fifo|slo] [--quantized]
   loquetier inspect [--artifacts DIR]
 
   --threads N sizes the native backend's deterministic worker pool
@@ -43,7 +43,9 @@ USAGE:
   the XLA backend ignores it.
   --policy selects the scheduler: fifo (default; FIFO admission +
   round-robin decode) or slo (deadline-slack admission, chunked prefill,
-  headroom-driven fine-tune budget — DESIGN.md §9).";
+  headroom-driven fine-tune budget — DESIGN.md §9).
+  --quantized serves base weights as per-row int8 on the native backend
+  (inference only; training reads the f32 masters — DESIGN.md §11).";
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -141,13 +143,17 @@ fn bench_cmd(args: &Args) -> Result<()> {
     match args.backend_or(BackendKind::Xla)? {
         BackendKind::Native => {
             let seed = args.usize_or("seed", 42)? as u64;
-            let threads = args.threads_or_auto()?;
-            let (mut be, _reg, manifest) = harness::native_stack_with_threads(seed, threads)?;
+            let (mut be, _reg, manifest) = harness::HarnessBuilder::new()
+                .seed(seed)
+                .threads(args.threads_or_auto()?)
+                .quantized(args.quantized())
+                .native_stack()?;
             println!(
-                "native backend: {} layers, vocab {}, seed {seed}, {} threads",
+                "native backend: {} layers, vocab {}, seed {seed}, {} threads{}",
                 manifest.build.model.num_layers,
                 manifest.build.model.vocab_size,
-                be.threads()
+                be.threads(),
+                if be.is_quantized() { ", int8 base" } else { "" }
             );
             bench_smoke(&mut be)
         }
@@ -230,9 +236,16 @@ fn serve_cmd(args: &Args) -> Result<()> {
             BackendKind::Native => {
                 // Random-weight tiny model: real numerics, zero artifacts.
                 let seed = args.usize_or("seed", 42)? as u64;
-                let (manifest, store) = harness::native_model(seed)?;
-                let be = NativeBackend::new(&manifest, &store, args.threads_or_auto()?)?;
-                (manifest, store, Box::new(be), "native")
+                let (manifest, store) =
+                    harness::HarnessBuilder::new().seed(seed).native_model()?;
+                let threads = args.threads_or_auto()?;
+                let be = if args.quantized() {
+                    NativeBackend::new_quantized(&manifest, &store, threads)?
+                } else {
+                    NativeBackend::new(&manifest, &store, threads)?
+                };
+                let label = if be.is_quantized() { "native-int8" } else { "native" };
+                (manifest, store, Box::new(be) as Box<dyn Backend>, label)
             }
             BackendKind::Xla => {
                 // Inference-only deployment: skip the training entries.

@@ -8,5 +8,5 @@ mod store;
 mod virtualized;
 
 pub use adapter::{AdapterKey, LoraAdapter, LoraModule};
-pub use store::WeightStore;
+pub use store::{QuantizedTensor, WeightStore};
 pub use virtualized::{SlotState, VirtualModel, VirtualizedRegistry};

@@ -5,7 +5,21 @@ use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::runtime::kernels::quantize_rows_i8;
 use crate::runtime::{HostTensor, Manifest, WeightRecord};
+
+/// A symmetric per-row int8 quantization of one store tensor: `q` holds
+/// `round(w / scale_r)` per element, `scales[r] = max|row_r| / 127`
+/// (`1.0` for all-zero rows). Rows are the tensor's leading axis —
+/// exactly the storage-row granularity at which the
+/// [`gemm`](crate::runtime::kernels::gemm) micro-kernels fuse dequant
+/// (DESIGN.md §11).
+#[derive(Debug, Clone)]
+pub struct QuantizedTensor {
+    pub q: Vec<i8>,
+    pub scales: Vec<f32>,
+    pub shape: Vec<usize>,
+}
 
 /// In-memory view of `artifacts/weights.bin`, indexed by the manifest.
 ///
@@ -94,6 +108,21 @@ impl WeightStore {
         self.blob.len()
     }
 
+    /// Quantize a weight to int8 with per-row scales (the `--quantized`
+    /// base-weight path). The f32 blob stays untouched — quantization is a
+    /// read-side derivation, so training and checkpointing always see the
+    /// f32 masters.
+    pub fn quantize(&self, name: &str) -> Result<QuantizedTensor> {
+        let (data, shape) = self.f32_slice(name)?;
+        let rows = shape.first().copied().unwrap_or(1);
+        let cols: usize = shape.iter().skip(1).product::<usize>().max(1);
+        if rows * cols != data.len() {
+            return Err(anyhow!("weight {name}: shape {shape:?} is not row-major 2D-like"));
+        }
+        let (q, scales) = quantize_rows_i8(data, rows, cols);
+        Ok(QuantizedTensor { q, scales, shape: shape.to_vec() })
+    }
+
     /// Distinct pretrained adapter indices present in the store — records
     /// named `adapter{i}.layers.*` (the AOT layout `LoraAdapter::from_store`
     /// reads). The host-tier adapter bank (DESIGN.md §10) enumerates its
@@ -147,5 +176,28 @@ mod tests {
         )
         .unwrap();
         assert_eq!(store.adapter_indices(), vec![0, 2, 7]);
+    }
+
+    #[test]
+    fn quantize_derives_per_row_scales() {
+        let rec = WeightRecord {
+            name: "w".to_string(),
+            offset: 0,
+            shape: vec![2, 3],
+            dtype: "f32".to_string(),
+        };
+        let vals: Vec<f32> = vec![1.0, -2.0, 0.5, 0.0, 0.0, 0.0];
+        let blob: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let store = WeightStore::from_parts(vec![rec], blob).unwrap();
+        let qt = store.quantize("w").unwrap();
+        assert_eq!(qt.shape, vec![2, 3]);
+        // Row max hits ±127 exactly; the all-zero row gets the 1.0 guard.
+        assert_eq!(qt.q[1], -127);
+        assert_eq!(qt.scales[1], 1.0);
+        assert_eq!(&qt.q[3..6], &[0, 0, 0]);
+        for (i, &v) in vals[..3].iter().enumerate() {
+            let deq = qt.q[i] as f32 * qt.scales[0];
+            assert!((deq - v).abs() <= qt.scales[0] * 0.5 + 1e-7);
+        }
     }
 }

@@ -29,8 +29,6 @@ use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
-use crate::runtime::kernels::{gemm_nn, gemm_nt};
-
 /// Environment override for the default thread count (the CI test job
 /// sets `LOQUETIER_THREADS=2`; the CLI's `--threads` flag wins over it).
 pub const THREADS_ENV: &str = "LOQUETIER_THREADS";
@@ -317,74 +315,6 @@ impl<'a, T> SharedSliceMut<'a, T> {
     }
 }
 
-/// Row-parallel `y[m×n] += a[m×k] · b[k×n]`: each lane runs the serial
-/// [`gemm_nn`] on its own block of output rows, so per-element
-/// accumulation order is identical to the single-threaded kernel.
-pub fn par_gemm_nn(
-    pool: &ThreadPool,
-    y: &mut [f32],
-    a: &[f32],
-    b: &[f32],
-    m: usize,
-    k: usize,
-    n: usize,
-) {
-    debug_assert_eq!(y.len(), m * n);
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    pool.par_rows(y, m, n, |r, ys| {
-        gemm_nn(ys, &a[r.start * k..r.end * k], b, r.len(), k, n);
-    });
-}
-
-/// Row-parallel `y[m×n] += a[m×k] · bᵀ` with `b` stored `[n×k]`.
-pub fn par_gemm_nt(
-    pool: &ThreadPool,
-    y: &mut [f32],
-    a: &[f32],
-    b: &[f32],
-    m: usize,
-    k: usize,
-    n: usize,
-) {
-    debug_assert_eq!(y.len(), m * n);
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), n * k);
-    pool.par_rows(y, m, n, |r, ys| {
-        gemm_nt(ys, &a[r.start * k..r.end * k], b, r.len(), k, n);
-    });
-}
-
-/// Output-row-parallel `y[k×n] += aᵀ · b` with `a` stored `[m×k]`, `b`
-/// `[m×n]` (the dW shape). Partitioned over the `k` output rows; the
-/// reduction over `m` stays ascending inside each lane, matching the
-/// serial kernel's per-element order.
-pub fn par_gemm_tn(
-    pool: &ThreadPool,
-    y: &mut [f32],
-    a: &[f32],
-    b: &[f32],
-    m: usize,
-    k: usize,
-    n: usize,
-) {
-    debug_assert_eq!(y.len(), k * n);
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), m * n);
-    pool.par_rows(y, k, n, |r, ys| {
-        for i in 0..m {
-            let br = &b[i * n..(i + 1) * n];
-            for l in r.clone() {
-                let av = a[i * k + l];
-                let yr = &mut ys[(l - r.start) * n..(l - r.start + 1) * n];
-                for (yy, bb) in yr.iter_mut().zip(br) {
-                    *yy += av * bb;
-                }
-            }
-        }
-    });
-}
-
 /// Free-list of reusable `Vec<f32>` scratch buffers, zeroed on claim.
 ///
 /// The native backend owns one and threads it through every forward /
@@ -473,7 +403,6 @@ impl ScratchArena {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::rng::Rng;
     use std::sync::atomic::AtomicUsize;
 
     #[test]
@@ -554,47 +483,9 @@ mod tests {
         }
     }
 
-    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
-        (0..n).map(|_| rng.normal() as f32).collect()
-    }
-
-    #[test]
-    fn par_gemms_are_bitwise_identical_to_serial_at_any_thread_count() {
-        let mut rng = Rng::seed_from_u64(5);
-        let (m, k, n) = (13, 9, 11);
-        let a = randv(&mut rng, m * k);
-        let b_nn = randv(&mut rng, k * n);
-        let b_nt = randv(&mut rng, n * k);
-        let b_tn = randv(&mut rng, m * n);
-
-        let mut y_ser = vec![0.0f32; m * n];
-        gemm_nn(&mut y_ser, &a, &b_nn, m, k, n);
-        let mut y_ser_nt = vec![0.0f32; m * n];
-        gemm_nt(&mut y_ser_nt, &a, &b_nt, m, k, n);
-        let mut y_ser_tn = vec![0.0f32; k * n];
-        crate::runtime::kernels::gemm_tn(&mut y_ser_tn, &a, &b_tn, m, k, n);
-
-        for threads in [1usize, 2, 4, 8] {
-            let pool = ThreadPool::new(threads);
-            let mut y = vec![0.0f32; m * n];
-            par_gemm_nn(&pool, &mut y, &a, &b_nn, m, k, n);
-            assert!(y.iter().zip(&y_ser).all(|(p, q)| p.to_bits() == q.to_bits()), "nn t{threads}");
-
-            let mut y = vec![0.0f32; m * n];
-            par_gemm_nt(&pool, &mut y, &a, &b_nt, m, k, n);
-            assert!(
-                y.iter().zip(&y_ser_nt).all(|(p, q)| p.to_bits() == q.to_bits()),
-                "nt t{threads}"
-            );
-
-            let mut y = vec![0.0f32; k * n];
-            par_gemm_tn(&pool, &mut y, &a, &b_tn, m, k, n);
-            assert!(
-                y.iter().zip(&y_ser_tn).all(|(p, q)| p.to_bits() == q.to_bits()),
-                "tn t{threads}"
-            );
-        }
-    }
+    // GEMM thread-invariance now lives with the unified kernel:
+    // `kernels::tests::gemm_is_bitwise_thread_count_invariant` runs the
+    // blocked path at t ∈ {1,2,4,8} per layout against the serial result.
 
     #[test]
     #[should_panic(expected = "worker panicked inside par_partition")]

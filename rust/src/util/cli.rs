@@ -93,6 +93,12 @@ impl Args {
         self.usize_or("threads", 0)
     }
 
+    /// `--quantized` — serve base weights as per-row int8 on the native
+    /// backend (DESIGN.md §11). Training and the XLA backend ignore it.
+    pub fn quantized(&self) -> bool {
+        self.bool("quantized")
+    }
+
     /// Parse `--policy fifo|slo` — which scheduling policy the coordinator
     /// plans with (DESIGN.md §9). The PEFT policy is a baseline-internal
     /// configuration, not a CLI surface.
@@ -135,6 +141,13 @@ mod tests {
         assert_eq!(args("--threads 4").threads_or_auto().unwrap(), 4);
         assert_eq!(args("").threads_or_auto().unwrap(), 0, "absent = 0 = auto");
         assert!(args("--threads lots").threads_or_auto().is_err());
+    }
+
+    #[test]
+    fn quantized_is_a_bare_flag() {
+        assert!(args("--quantized").quantized());
+        assert!(args("--quantized true").quantized());
+        assert!(!args("").quantized());
     }
 
     #[test]

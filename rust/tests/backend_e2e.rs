@@ -16,7 +16,7 @@ use loquetier::coordinator::{
     Coordinator, CoordinatorConfig, FinetuneJob, InferenceRequest, TrainExample,
 };
 use loquetier::engine::{Backend, DecodeRow, PrefillSeq, TrainSeq, XlaBackend};
-use loquetier::harness::{native_stack, xla_stack};
+use loquetier::harness::{xla_stack, HarnessBuilder};
 use loquetier::kvcache::KvCacheManager;
 use loquetier::model::VirtualizedRegistry;
 
@@ -258,32 +258,32 @@ fn scenario_full_coordinator(be: &mut dyn Backend) {
 
 #[test]
 fn native_decode_continuation_matches_full_prefill() {
-    let (mut be, _reg, _m) = native_stack(42).unwrap();
+    let (mut be, _reg, _m) = HarnessBuilder::new().seed(42).native_stack().unwrap();
     // Identical code path + fixed accumulation order ⇒ tight tolerance.
     scenario_decode_continuation(&mut be, 1e-5);
 }
 
 #[test]
 fn native_adapters_route_to_different_logits() {
-    let (mut be, _reg, _m) = native_stack(42).unwrap();
+    let (mut be, _reg, _m) = HarnessBuilder::new().seed(42).native_stack().unwrap();
     scenario_adapter_routing(&mut be);
 }
 
 #[test]
 fn native_training_reduces_loss_on_repeated_batch() {
-    let (mut be, _reg, _m) = native_stack(42).unwrap();
+    let (mut be, _reg, _m) = HarnessBuilder::new().seed(42).native_stack().unwrap();
     scenario_training_descends(&mut be, 2e-2, 8);
 }
 
 #[test]
 fn native_unified_step_runs_all_three_classes() {
-    let (mut be, _reg, _m) = native_stack(42).unwrap();
+    let (mut be, _reg, _m) = HarnessBuilder::new().seed(42).native_stack().unwrap();
     scenario_unified_all_classes(&mut be, 1e-5);
 }
 
 #[test]
 fn native_full_coordinator_serves() {
-    let (mut be, _reg, _m) = native_stack(42).unwrap();
+    let (mut be, _reg, _m) = HarnessBuilder::new().seed(42).native_stack().unwrap();
     scenario_full_coordinator(&mut be);
 }
 
@@ -291,7 +291,7 @@ fn native_full_coordinator_serves() {
 fn native_checkpoint_roundtrips_trained_adapter() {
     // Train, checkpoint into the registry, extract, re-attach on a fresh
     // stack: the trained delta must survive the save path.
-    let (mut be, mut reg, _m) = native_stack(42).unwrap();
+    let (mut be, mut reg, _m) = HarnessBuilder::new().seed(42).native_stack().unwrap();
     let v = be.geometry().vocab_size as i32;
     let seq: Vec<i32> = (0..24).map(|i| (5 * i + 2) % v).collect();
     for step in 1..=3 {
@@ -309,7 +309,7 @@ fn native_checkpoint_roundtrips_trained_adapter() {
     let trained = reg.extract(1).unwrap();
     let original = reg.extract(0).unwrap();
     // The trained slot moved; an untrained slot did not.
-    let (_be2, reg2, _m2) = native_stack(42).unwrap();
+    let (_be2, reg2, _m2) = HarnessBuilder::new().seed(42).native_stack().unwrap();
     let fresh = reg2.extract(1).unwrap();
     let delta: f32 = trained
         .modules

@@ -5,11 +5,19 @@
 //! runtime, and stale-data isolation of the scratch arena. Runs
 //! unconditionally — no artifacts, no PJRT, no skips.
 
-use loquetier::engine::{Backend, DecodeRow, PrefillSeq, TrainSeq, UnifiedOut};
-use loquetier::harness::{
-    cache_config_for, native_geometry, native_stack, native_stack_with_threads,
-};
+use loquetier::engine::{Backend, DecodeRow, NativeBackend, PrefillSeq, TrainSeq, UnifiedOut};
+use loquetier::harness::{cache_config_for, native_geometry, HarnessBuilder};
 use loquetier::kvcache::KvCacheManager;
+use loquetier::model::VirtualizedRegistry;
+use loquetier::runtime::Manifest;
+
+fn stack(seed: u64) -> (NativeBackend, VirtualizedRegistry, Manifest) {
+    HarnessBuilder::new().seed(seed).native_stack().unwrap()
+}
+
+fn stack_t(seed: u64, threads: usize) -> (NativeBackend, VirtualizedRegistry, Manifest) {
+    HarnessBuilder::new().seed(seed).threads(threads).native_stack().unwrap()
+}
 
 fn cache() -> KvCacheManager {
     KvCacheManager::new(cache_config_for(&native_geometry(), 16))
@@ -39,8 +47,8 @@ fn mixed_batch(kv: &mut KvCacheManager) -> Vec<PrefillSeq> {
 fn segmented_smlm_matches_per_row_reference_on_mixed_batch() {
     // Same seed, two kernel paths: logits must agree within 1e-5 across a
     // batch mixing every adapter, duplicate adapters, and base-only rows.
-    let (mut seg, _r1, _m1) = native_stack(77).unwrap();
-    let (mut per, _r2, _m2) = native_stack(77).unwrap();
+    let (mut seg, _r1, _m1) = stack(77);
+    let (mut per, _r2, _m2) = stack(77);
     assert!(seg.use_segmented);
     per.use_segmented = false;
 
@@ -81,8 +89,8 @@ fn segmented_smlm_matches_per_row_reference_on_mixed_batch() {
 
 #[test]
 fn segmented_smlm_matches_per_row_on_training_losses() {
-    let (mut seg, _r1, _m1) = native_stack(31).unwrap();
-    let (mut per, _r2, _m2) = native_stack(31).unwrap();
+    let (mut seg, _r1, _m1) = stack(31);
+    let (mut per, _r2, _m2) = stack(31);
     per.use_segmented = false;
     let batch: Vec<TrainSeq> = [0i32, 2, -1, 3]
         .iter()
@@ -108,7 +116,7 @@ fn same_seed_is_bitwise_deterministic() {
     // loss must be IDENTICAL (bitwise) — prefill, decode chain, training,
     // optimizer and post-optimizer inference.
     let run = || -> (Vec<i32>, Vec<f32>) {
-        let (mut be, _reg, _m) = native_stack(123).unwrap();
+        let (mut be, _reg, _m) = stack(123);
         let mut kv = cache();
         let mut tokens_out = Vec::new();
         let mut losses_out = Vec::new();
@@ -167,15 +175,17 @@ fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
 }
 
 #[test]
-fn threads_1_vs_4_are_bitwise_identical_on_mixed_unified_flow() {
-    // The ISSUE 3 acceptance test: the SAME mixed workload — a unified
+fn thread_counts_are_bitwise_identical_on_mixed_unified_flow() {
+    // The ISSUE 3 acceptance test (sweep widened to t ∈ {1, 2, 4, 8} for
+    // the ISSUE 7 blocked GEMM): the SAME mixed workload — a unified
     // fine-tune ∥ prefill ∥ decode launch with adapter and base-only
     // (`adapter = -1`) rows, a decode chain, an optimizer step and a
     // post-training prefill — must produce bitwise-identical logits,
-    // tokens and losses on a 1-lane and a 4-lane pool. Parallelism is
-    // partition-only, so no thread count may change a single bit.
+    // tokens and losses at every pool width. Parallelism is
+    // partition-only and blocking is shape-derived, so no thread count
+    // may change a single bit.
     let run = |threads: usize| -> (Vec<Vec<f32>>, Vec<f32>, Vec<i32>) {
-        let (mut be, _reg, _m) = native_stack_with_threads(321, threads).unwrap();
+        let (mut be, _reg, _m) = stack_t(321, threads);
         let mut kv = cache();
         let mut all_logits: Vec<Vec<f32>> = Vec::new();
         let mut all_losses: Vec<f32> = Vec::new();
@@ -244,12 +254,14 @@ fn threads_1_vs_4_are_bitwise_identical_on_mixed_unified_flow() {
     };
 
     let (lg1, ls1, tk1) = run(1);
-    let (lg4, ls4, tk4) = run(4);
-    assert_eq!(tk1, tk4, "emitted tokens must not depend on thread count");
-    assert_bits_eq(&ls1, &ls4, "losses");
-    assert_eq!(lg1.len(), lg4.len());
-    for (i, (a, b)) in lg1.iter().zip(&lg4).enumerate() {
-        assert_bits_eq(a, b, &format!("logits row {i}"));
+    for threads in [2usize, 4, 8] {
+        let (lgn, lsn, tkn) = run(threads);
+        assert_eq!(tk1, tkn, "t{threads}: emitted tokens must not depend on thread count");
+        assert_bits_eq(&ls1, &lsn, &format!("t{threads} losses"));
+        assert_eq!(lg1.len(), lgn.len());
+        for (i, (a, b)) in lg1.iter().zip(&lgn).enumerate() {
+            assert_bits_eq(a, b, &format!("t{threads} logits row {i}"));
+        }
     }
 }
 
@@ -280,8 +292,8 @@ fn scratch_arena_reuse_leaks_no_stale_state() {
         be.prefill(&seqs, &mut kv).unwrap().0
     };
 
-    let (mut dirty, _r1, _m1) = native_stack_with_threads(99, 2).unwrap();
-    let (mut fresh, _r2, _m2) = native_stack_with_threads(99, 2).unwrap();
+    let (mut dirty, _r1, _m1) = stack_t(99, 2);
+    let (mut fresh, _r2, _m2) = stack_t(99, 2);
 
     // Pollute: a longer eval step and a bigger inference launch fill the
     // arena with non-zero buffers of every hot shape.
@@ -323,7 +335,7 @@ fn host_tier_eviction_roundtrip_is_output_transparent() {
     // must not change a single emitted bit. Tokens and trainer losses are
     // compared bitwise against a never-evicted run, on 1 and 4 threads.
     let run = |threads: usize, evict: bool| -> (Vec<i32>, Vec<f32>) {
-        let (mut be, mut reg, _m) = native_stack_with_threads(777, threads).unwrap();
+        let (mut be, mut reg, _m) = stack_t(777, threads);
         let mut kv = cache();
         let mut tokens = Vec::new();
         let mut losses = Vec::new();
@@ -415,8 +427,8 @@ fn host_tier_eviction_roundtrip_is_output_transparent() {
 
 #[test]
 fn different_seeds_produce_different_models() {
-    let (mut a, _ra, _ma) = native_stack(1).unwrap();
-    let (mut b, _rb, _mb) = native_stack(2).unwrap();
+    let (mut a, _ra, _ma) = stack(1);
+    let (mut b, _rb, _mb) = stack(2);
     let mut kv_a = cache();
     let mut kv_b = cache();
     let sa = kv_a.allocate(1, 32).unwrap();
@@ -435,7 +447,7 @@ fn different_seeds_produce_different_models() {
 fn training_gradients_flow_only_through_trained_slot() {
     // Train slot 3; logits through untouched slots (and base) must be
     // bit-identical before/after the optimizer step.
-    let (mut be, _reg, _m) = native_stack(55).unwrap();
+    let (mut be, _reg, _m) = stack(55);
     let probe = |be: &mut dyn Backend| -> Vec<Vec<f32>> {
         let mut kv = cache();
         let seqs: Vec<PrefillSeq> = [0i32, -1]
@@ -467,4 +479,67 @@ fn training_gradients_flow_only_through_trained_slot() {
             assert_eq!(x.to_bits(), y.to_bits(), "untrained slots must be untouched");
         }
     }
+}
+
+#[test]
+fn int8_base_weights_track_f32_serving_within_documented_bound() {
+    // The ISSUE 7 quantization tolerance contract (DESIGN.md §11): with
+    // `--quantized`, serving logits may deviate from the f32 path by at
+    // most 5e-2 of the row's largest f32 logit magnitude (per-GEMM the
+    // bound is 1e-2 — unit-tested in kernels.rs — and two layers plus the
+    // lm_head compound it). The f32 path itself never loosens: training on
+    // the quantized backend still reads the f32 masters and must stay
+    // bitwise identical to the plain backend.
+    const E2E_REL_BOUND: f32 = 5e-2;
+    let (mut base, _r1, _m1) = stack(2025);
+    let (mut quant, _r2, _m2) =
+        HarnessBuilder::new().seed(2025).quantized(true).native_stack().unwrap();
+    assert!(!base.is_quantized());
+    assert!(quant.is_quantized());
+
+    let mut kv_a = cache();
+    let mut kv_b = cache();
+    let batch_a = mixed_batch(&mut kv_a);
+    let batch_b = mixed_batch(&mut kv_b);
+    let rel_check = |la: &[Vec<f32>], lb: &[Vec<f32>], what: &str| {
+        assert_eq!(la.len(), lb.len());
+        for (i, (ra, rb)) in la.iter().zip(lb).enumerate() {
+            let scale = ra.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+            let worst = ra.iter().zip(rb).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+            assert!(
+                worst <= E2E_REL_BOUND * scale,
+                "{what} {i}: int8 vs f32 rel err {} > {E2E_REL_BOUND}",
+                worst / scale
+            );
+        }
+    };
+    let (la, _) = base.prefill(&batch_a, &mut kv_a).unwrap();
+    let (lb, _) = quant.prefill(&batch_b, &mut kv_b).unwrap();
+    rel_check(&la, &lb, "prefill seq");
+
+    let rows = |batch: &[PrefillSeq]| -> Vec<DecodeRow> {
+        batch
+            .iter()
+            .map(|q| DecodeRow { token: 13, adapter: q.adapter, kv_slot: q.kv_slot })
+            .collect()
+    };
+    let (da, _) = base.decode(&rows(&batch_a), &mut kv_a).unwrap();
+    let (db, _) = quant.decode(&rows(&batch_b), &mut kv_b).unwrap();
+    rel_check(&da, &db, "decode row");
+
+    // Training path: bitwise equal — quantization is inference-only.
+    let train_batch: Vec<TrainSeq> = [1i32, -1, 3]
+        .iter()
+        .enumerate()
+        .map(|(i, &a)| TrainSeq {
+            tokens: toks(12, i as i32),
+            labels: toks(12, i as i32),
+            adapter: a,
+            train: true,
+            loss_scale: 0.5,
+        })
+        .collect();
+    let (lt_a, _) = base.train_step(&train_batch).unwrap();
+    let (lt_b, _) = quant.train_step(&train_batch).unwrap();
+    assert_bits_eq(&lt_a, &lt_b, "train losses under quantized serving");
 }

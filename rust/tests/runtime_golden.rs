@@ -2,7 +2,7 @@
 //!
 //! Two tiers:
 //!
-//! * **Synthetic (unconditional).** `harness::native_model` builds an
+//! * **Synthetic (unconditional).** `HarnessBuilder::native_model` builds an
 //!   in-memory manifest + weight store shaped exactly like `make
 //!   artifacts` output — registry rebuild, detach/migration, adapter
 //!   save/load and store bounds all run with zero artifacts.
@@ -13,7 +13,7 @@
 
 use std::path::{Path, PathBuf};
 
-use loquetier::harness::native_model;
+use loquetier::harness::HarnessBuilder;
 use loquetier::model::{LoraAdapter, SlotState, VirtualizedRegistry, WeightStore};
 use loquetier::runtime::{Arg, DType, HostTensor, Manifest, Runtime, TensorSpec};
 use loquetier::util::json;
@@ -30,7 +30,7 @@ fn artifacts_dir() -> Option<PathBuf> {
 }
 
 fn synthetic() -> (Manifest, WeightStore) {
-    native_model(2024).expect("synthetic model")
+    HarnessBuilder::new().seed(2024).native_model().expect("synthetic model")
 }
 
 // ---------------------------------------------------------------------------

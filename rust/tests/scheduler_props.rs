@@ -23,7 +23,7 @@ use loquetier::coordinator::{
     Coordinator, CoordinatorConfig, FinetuneJob, InferenceRequest, PolicyKind, TrainExample,
 };
 use loquetier::engine::{CostModel, SimBackend};
-use loquetier::harness::{self, native_stack_with_threads};
+use loquetier::harness::{self, HarnessBuilder};
 use loquetier::kvcache::CacheConfig;
 use loquetier::metrics::SloSpec;
 use loquetier::runtime::{BucketTable, ModelGeometry, UnifiedShape};
@@ -482,7 +482,8 @@ fn burst_on_demand_paging_beats_worst_case_reservation() {
 /// Drive a tiny serving-only workload over the REAL native backend and
 /// return (per-request outputs, preemption count).
 fn native_serve(total_blocks: usize, threads: usize) -> (BTreeMap<u64, Vec<i32>>, u64) {
-    let (mut be, _reg, _manifest) = native_stack_with_threads(42, threads).unwrap();
+    let (mut be, _reg, _manifest) =
+        HarnessBuilder::new().seed(42).threads(threads).native_stack().unwrap();
     // Native geometry: 2 layers, token_elems = nkv * hd = 16, cache 160.
     // max_prompt_tokens = 16 < 8 + 24: resumed recompute contexts (up to
     // 31 tokens) exceed the admission bucket. Output transparency demands
@@ -748,7 +749,8 @@ fn native_chunked_serve(
     chunk_tokens: usize,
     threads: usize,
 ) -> (BTreeMap<u64, Vec<i32>>, Vec<f32>, usize) {
-    let (mut be, _reg, _manifest) = native_stack_with_threads(42, threads).unwrap();
+    let (mut be, _reg, _manifest) =
+        HarnessBuilder::new().seed(42).threads(threads).native_stack().unwrap();
     let mut c = Coordinator::new(
         CoordinatorConfig {
             policy: PolicyKind::SloAware,
