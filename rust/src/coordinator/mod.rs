@@ -30,9 +30,10 @@ use std::collections::{BTreeSet, VecDeque};
 
 use anyhow::Result;
 
-use crate::engine::{argmax, Backend, DecodeRow, PrefillSeq, StepCost, TrainSeq};
+use crate::engine::{argmax, fault_is_transient, Backend, DecodeRow, PrefillSeq, StepCost, TrainSeq};
 use crate::kvcache::{CacheConfig, KvCacheManager};
 use crate::metrics::{RequestTrace, SloSpec, SloTracker, ThroughputSeries};
+use crate::model::AdapterCheckpoint;
 
 use self::policy::{
     ActiveView, KvView, QueuedView, SchedCfg, SchedView, StepCaps, StepPlan, TrainerView,
@@ -84,6 +85,21 @@ pub struct CoordinatorConfig {
     /// resident set as fixed slots whose overflow admissions fail (false —
     /// the fixed-slot ablation the Zipfian acceptance test beats).
     pub adapter_paging: bool,
+    /// Supervised-step retry budget (DESIGN.md §12): how many times a
+    /// failed launch retries before falling back to per-row isolation.
+    pub max_step_retries: u32,
+    /// Base backoff charged to the run clock per retry; doubles per
+    /// attempt up to `retry_backoff_cap_s`. Charged, never slept — the
+    /// clock stays deterministic under the sim backend.
+    pub retry_backoff_s: f64,
+    pub retry_backoff_cap_s: f64,
+    /// Auto-checkpoint each trainer every K optimizer steps (0 = off).
+    /// Checkpoints land at optimizer boundaries only, where the gradient
+    /// accumulators are exactly zero — the one point the exported state
+    /// fully determines the continuation.
+    pub checkpoint_every: usize,
+    /// Directory durable checkpoints are written to (None = off).
+    pub checkpoint_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for CoordinatorConfig {
@@ -101,6 +117,11 @@ impl Default for CoordinatorConfig {
             adapter_budget: usize::MAX,
             adapter_page_blocks: 0,
             adapter_paging: true,
+            max_step_retries: 3,
+            retry_backoff_s: 0.05,
+            retry_backoff_cap_s: 0.8,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
         }
     }
 }
@@ -130,6 +151,13 @@ pub struct StepOutcome {
     /// after re-admission with the same output stream.
     pub preempted_requests: Vec<u64>,
     pub optimizer_steps: usize,
+    /// Requests quarantined this step: their rows failed persistently even
+    /// in isolation (a poison input). KV released, trace failed — the
+    /// serving frontend sends a typed error frame; every other stream
+    /// keeps going (DESIGN.md §12).
+    pub quarantined_requests: Vec<u64>,
+    /// Launch retries the step supervisor performed this step.
+    pub step_retries: u32,
     /// Nothing to do (driver should advance the clock to the next arrival).
     pub idle: bool,
 }
@@ -270,6 +298,89 @@ impl AdapterPager {
     }
 }
 
+/// Convert a caught panic payload into a typed error. Injected panics
+/// carry a [`crate::engine::InjectedFault`] payload and stay classifiable;
+/// anything else becomes an opaque (and therefore bounded-retryable)
+/// error.
+fn panic_to_error(payload: Box<dyn std::any::Any + Send>) -> anyhow::Error {
+    if let Some(f) = payload.downcast_ref::<crate::engine::InjectedFault>() {
+        return anyhow::Error::new(f.clone());
+    }
+    let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    };
+    anyhow::anyhow!("backend panic: {msg}")
+}
+
+/// Run one backend launch with panic containment: a panicking backend
+/// surfaces as an `Err` at the step boundary instead of unwinding through
+/// `engine_loop` (the worker pool already contains panics *inside* a
+/// launch; this extends that contract to the launch itself).
+fn catch_launch<T>(f: impl FnOnce() -> Result<T>) -> Result<T> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(r) => r,
+        Err(payload) => Err(panic_to_error(payload)),
+    }
+}
+
+/// The per-step launch supervisor (DESIGN.md §12): retries transient
+/// failures with capped exponential backoff, rolling the KV arena back to
+/// each involved slot's pre-launch watermark between attempts so a retry
+/// is bit-identical to a first attempt. Backoff is *charged* to the run
+/// clock, never slept — recovery stays deterministic under the sim clock.
+struct Supervisor<'a> {
+    kv: &'a mut KvCacheManager,
+    max_retries: u32,
+    backoff_s: f64,
+    backoff_cap_s: f64,
+    /// Retries performed (all launches this step).
+    retries: u32,
+    /// Virtual seconds of backoff to charge to the run clock.
+    backoff_charged_s: f64,
+}
+
+impl Supervisor<'_> {
+    /// Run `launch` under supervision. `slots` are the KV slots the launch
+    /// may append to; on any failure they are truncated back to their
+    /// pre-launch lengths (length-only: claimed blocks stay claimed, so a
+    /// pre-launch `reserve_decode_block` still covers the retry).
+    /// Returns the launch error once retries are exhausted or the failure
+    /// is classified non-transient — the caller's cue to isolate rows.
+    fn run<T>(
+        &mut self,
+        slots: &[usize],
+        mut launch: impl FnMut(&mut KvCacheManager) -> Result<T>,
+    ) -> Result<T> {
+        let marks: Vec<(usize, usize)> = slots.iter().map(|&s| (s, self.kv.len(s))).collect();
+        let mut attempt = 0u32;
+        loop {
+            match catch_launch(|| launch(&mut *self.kv)) {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    for &(s, len) in &marks {
+                        self.kv.truncate(s, len)?;
+                    }
+                    // Unknown errors retry too (bounded): a real transient
+                    // device error is indistinguishable from an injected
+                    // one. Only explicitly-fatal faults skip the retries.
+                    let transient = fault_is_transient(&e).unwrap_or(true);
+                    if !transient || attempt >= self.max_retries {
+                        return Err(e);
+                    }
+                    self.backoff_charged_s +=
+                        (self.backoff_s * 2f64.powi(attempt as i32)).min(self.backoff_cap_s);
+                    self.retries += 1;
+                    attempt += 1;
+                }
+            }
+        }
+    }
+}
+
 /// The unified serving+training coordinator (the plan *executor*).
 pub struct Coordinator {
     pub cfg: CoordinatorConfig,
@@ -311,6 +422,11 @@ pub struct Coordinator {
     /// §10). Inert (never swaps, claims zero-block pages) at the default
     /// `adapter_budget = usize::MAX` / `adapter_page_blocks = 0`.
     pager: AdapterPager,
+    /// Run totals for the fault-supervision path (server `stats` frame).
+    step_retries_total: u64,
+    quarantined_total: u64,
+    checkpoints_written: u64,
+    backend_resets: u64,
 }
 
 impl Coordinator {
@@ -349,6 +465,10 @@ impl Coordinator {
             finetune_tokens: 0,
             eval_tokens: 0,
             pager,
+            step_retries_total: 0,
+            quarantined_total: 0,
+            checkpoints_written: 0,
+            backend_resets: 0,
         }
     }
 
@@ -381,8 +501,105 @@ impl Coordinator {
         self.trainers.push(TrainerState::new(job));
     }
 
+    /// Register a trainer resuming from a durable checkpoint: imports the
+    /// slot's tensor state (A/B + Adam moments) into the backend, then
+    /// fast-forwards the schedule to the checkpointed optimizer step,
+    /// epoch, and cursor — so the next micro-batch, and therefore the
+    /// continued loss sequence, is bit-identical to what the un-crashed
+    /// run would have produced.
+    pub fn resume_trainer(
+        &mut self,
+        job: FinetuneJob,
+        ckpt: &AdapterCheckpoint,
+        backend: &mut dyn Backend,
+    ) -> Result<()> {
+        backend.import_train_state(&ckpt.state)?;
+        let mut t = TrainerState::new(job);
+        t.restore_progress(ckpt.optim_steps, ckpt.epoch, ckpt.cursor);
+        self.trainers.push(t);
+        Ok(())
+    }
+
     pub fn trainers(&self) -> &[TrainerState] {
         &self.trainers
+    }
+
+    /// Launch retries the step supervisor has performed over the run.
+    pub fn step_retries_total(&self) -> u64 {
+        self.step_retries_total
+    }
+
+    /// Requests (and degraded trainers) quarantined over the run.
+    pub fn quarantined_total(&self) -> u64 {
+        self.quarantined_total
+    }
+
+    /// Durable adapter checkpoints written over the run.
+    pub fn checkpoints_written(&self) -> u64 {
+        self.checkpoints_written
+    }
+
+    /// Backend resets recovered from over the run.
+    pub fn backend_resets(&self) -> u64 {
+        self.backend_resets
+    }
+
+    /// Recover from a backend reset that lost device KV: preempt every
+    /// in-flight stream, folding its generated tokens into its prompt so
+    /// re-admission recomputes the cache from scratch — output-transparent
+    /// by the same argument as scheduler preemption (the folded prefill
+    /// reproduces the exact context the stream had). Trainers keep their
+    /// host-side schedule; any mid-accumulation gradients died with the
+    /// device, so the accumulator restarts (a bounded, recorded
+    /// degradation: up to `grad_accum - 1` micro-batches of gradient).
+    /// Returns the number of streams preempted.
+    pub fn recover_backend_reset(&mut self) -> Result<usize> {
+        let ids: Vec<u64> = self.active.iter().map(|a| a.req.id).collect();
+        let mut n = 0;
+        for id in ids {
+            if self.preempt_by_id(id)? {
+                n += 1;
+            }
+        }
+        for t in self.trainers.iter_mut() {
+            t.accum = 0;
+        }
+        self.backend_resets += 1;
+        Ok(n)
+    }
+
+    /// Write a durable checkpoint for trainer `ti` if its auto-checkpoint
+    /// interval just elapsed. Called right after `optimizer_applied`, the
+    /// one point where the accumulators are exactly zero and the exported
+    /// state fully determines the continuation. Best-effort: a failed
+    /// write degrades durability, never the step.
+    fn maybe_checkpoint(&mut self, ti: usize, backend: &mut dyn Backend) {
+        let every = self.cfg.checkpoint_every;
+        let Some(dir) = self.cfg.checkpoint_dir.clone() else { return };
+        let t = &self.trainers[ti];
+        if every == 0 || t.optim_steps <= 0 || t.optim_steps as usize % every != 0 {
+            return;
+        }
+        let slot = t.job.adapter.max(0) as usize;
+        let state = match backend.export_train_state(slot) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("train-state export failed for slot {slot}: {e:#}");
+                return;
+            }
+        };
+        let ck = AdapterCheckpoint {
+            slot,
+            optim_steps: t.optim_steps,
+            epoch: t.epoch,
+            cursor: t.cursor(),
+            state,
+        };
+        let path = dir.join(format!("adapter{slot}.ckpt"));
+        match ck.write_atomic(&path) {
+            Ok(()) => self.checkpoints_written += 1,
+            Err(e) => eprintln!("checkpoint write failed for slot {slot}: {e:#}"),
+        }
     }
 
     pub fn queue_len(&self) -> usize {
@@ -1019,44 +1236,136 @@ impl Coordinator {
         // reads them (sim backends charge `cost.adapter_swap_s` per swap-in;
         // real backends copy inside `sync_adapters` and charge zero here).
         cost.add(bcaps.adapter_swap_cost(swap_ins));
-        let (ft_losses, pf_logits, dec_logits);
-        if self.cfg.use_unified && caps.unified_entry {
-            let (u, c) = backend.unified(&ft_seqs, &pf_seqs, &dec_rows, &mut self.kv)?;
-            cost.add(c);
-            ft_losses = u.ft_losses;
-            pf_logits = u.pf_last_logits;
-            dec_logits = u.dec_logits;
-        } else {
-            let mut fl = Vec::new();
-            if !ft_seqs.is_empty() {
-                let (l, c) = backend.train_step(&ft_seqs)?;
-                cost.add(c);
-                fl = l;
+
+        // Supervised launch (DESIGN.md §12). Every backend launch runs
+        // under panic containment + typed-error classification; transient
+        // failures retry with capped backoff (KV rolled back to the
+        // pre-launch watermark each time), and a launch that keeps failing
+        // falls back to per-row isolation — rows that fail even alone are
+        // the poison, and their requests are quarantined below while every
+        // other row's result routes normally. Per-row results are Options
+        // aligned with the launch inputs: None = that row produced nothing
+        // this step.
+        let mut ft_ok: Vec<Option<f32>> = vec![None; ft_seqs.len()];
+        let mut pf_ok: Vec<Option<Vec<f32>>> = vec![None; pf_seqs.len()];
+        let mut dec_ok: Vec<Option<Vec<f32>>> = vec![None; dec_rows.len()];
+        {
+            let mut sup = Supervisor {
+                kv: &mut self.kv,
+                max_retries: self.cfg.max_step_retries,
+                backoff_s: self.cfg.retry_backoff_s,
+                backoff_cap_s: self.cfg.retry_backoff_cap_s,
+                retries: 0,
+                backoff_charged_s: 0.0,
+            };
+            let pf_slots: Vec<usize> = pf_seqs.iter().map(|s| s.kv_slot).collect();
+            let dec_slots: Vec<usize> = dec_rows.iter().map(|r| r.kv_slot).collect();
+            let mut unified_done = false;
+            if self.cfg.use_unified && caps.unified_entry {
+                let all: Vec<usize> =
+                    pf_slots.iter().chain(dec_slots.iter()).copied().collect();
+                if let Ok((u, c)) =
+                    sup.run(&all, |kv| backend.unified(&ft_seqs, &pf_seqs, &dec_rows, kv))
+                {
+                    cost.add(c);
+                    for (dst, l) in ft_ok.iter_mut().zip(u.ft_losses) {
+                        *dst = Some(l);
+                    }
+                    for (dst, l) in pf_ok.iter_mut().zip(u.pf_last_logits) {
+                        *dst = Some(l);
+                    }
+                    for (dst, l) in dec_ok.iter_mut().zip(u.dec_logits) {
+                        *dst = Some(l);
+                    }
+                    unified_done = true;
+                }
+                // A failed unified launch falls through to the split path:
+                // per-class supervision narrows the failure to one class,
+                // then to one row, instead of losing the whole step.
             }
-            let mut pl = Vec::new();
-            if !pf_seqs.is_empty() {
-                let (l, c) = backend.prefill(&pf_seqs, &mut self.kv)?;
-                cost.add(c);
-                pl = l;
+            if !unified_done {
+                // Each class is its own supervised unit. This matters for
+                // retries: a train batch that already accumulated its
+                // gradients must not re-run because an unrelated decode
+                // row failed later in the same step.
+                if !ft_seqs.is_empty() {
+                    match sup.run(&[], |_| backend.train_step(&ft_seqs)) {
+                        Ok((l, c)) => {
+                            cost.add(c);
+                            for (dst, v) in ft_ok.iter_mut().zip(l) {
+                                *dst = Some(v);
+                            }
+                        }
+                        Err(_) => {
+                            for (k, seq) in ft_seqs.iter().enumerate() {
+                                let one = [seq.clone()];
+                                if let Ok((l, c)) = sup.run(&[], |_| backend.train_step(&one)) {
+                                    cost.add(c);
+                                    ft_ok[k] = l.first().copied();
+                                }
+                            }
+                        }
+                    }
+                }
+                if !pf_seqs.is_empty() {
+                    match sup.run(&pf_slots, |kv| backend.prefill(&pf_seqs, kv)) {
+                        Ok((l, c)) => {
+                            cost.add(c);
+                            for (dst, v) in pf_ok.iter_mut().zip(l) {
+                                *dst = Some(v);
+                            }
+                        }
+                        Err(_) => {
+                            for (k, seq) in pf_seqs.iter().enumerate() {
+                                let one = [seq.clone()];
+                                let slot = [seq.kv_slot];
+                                if let Ok((l, c)) = sup.run(&slot, |kv| backend.prefill(&one, kv))
+                                {
+                                    cost.add(c);
+                                    pf_ok[k] = l.into_iter().next();
+                                }
+                            }
+                        }
+                    }
+                }
+                if !dec_rows.is_empty() {
+                    match sup.run(&dec_slots, |kv| backend.decode(&dec_rows, kv)) {
+                        Ok((l, c)) => {
+                            cost.add(c);
+                            for (dst, v) in dec_ok.iter_mut().zip(l) {
+                                *dst = Some(v);
+                            }
+                        }
+                        Err(_) => {
+                            for (k, row) in dec_rows.iter().enumerate() {
+                                let one = [row.clone()];
+                                let slot = [row.kv_slot];
+                                if let Ok((l, c)) = sup.run(&slot, |kv| backend.decode(&one, kv))
+                                {
+                                    cost.add(c);
+                                    dec_ok[k] = l.into_iter().next();
+                                }
+                            }
+                        }
+                    }
+                }
             }
-            let mut dl = Vec::new();
-            if !dec_rows.is_empty() {
-                let (l, c) = backend.decode(&dec_rows, &mut self.kv)?;
-                cost.add(c);
-                dl = l;
-            }
-            ft_losses = fl;
-            pf_logits = pl;
-            dec_logits = dl;
+            out.step_retries += sup.retries;
+            self.step_retries_total += sup.retries as u64;
+            self.now_s += sup.backoff_charged_s;
         }
         self.now_s += cost.virt.max(cost.wall);
         let step_end = self.now_s;
 
         // --- Route results ---------------------------------------------------
         // Fine-tune losses -> trainers; optimizer when accumulation is due.
+        // A quarantined (isolation-failed) train row contributes no loss
+        // and no gradient, but the cursor still advances past it — the
+        // poison example is skipped, not retried forever.
         let mut off = 0;
         for &(ti, n, tokens) in &ft_owners {
-            let losses = &ft_losses[off..off + n];
+            let ok_losses: Vec<f32> =
+                ft_ok[off..off + n].iter().filter_map(|l| *l).collect();
             let evaluating = self.trainers[ti].phase == TrainerPhase::Evaluating;
             if evaluating {
                 self.eval_tokens += tokens as u64;
@@ -1067,16 +1376,48 @@ impl Coordinator {
                 self.finetune_series.record(step_end, tokens as f64);
                 out.ft_seqs += n;
             }
-            let due = self.trainers[ti].advance(n, losses, tokens);
+            let due = self.trainers[ti].advance(n, &ok_losses, tokens);
             if due {
                 let slot = self.trainers[ti].job.adapter.max(0) as usize;
                 let lr = self.trainers[ti].job.lr;
                 let step_no = self.trainers[ti].optim_steps + 1;
-                let c = backend.optim_step(&[slot], lr, step_no)?;
-                self.now_s += c.virt.max(c.wall);
-                cost.add(c);
-                self.trainers[ti].optimizer_applied();
-                out.optimizer_steps += 1;
+                // The optimizer is supervised like any launch, but with a
+                // degrade-don't-wedge exhaustion path: losses are already
+                // routed, so failing the step here would double-count
+                // them, and leaving the trainer "due" forever would
+                // livelock the schedule. A trainer whose optimizer cannot
+                // apply is quarantined (marked Done) instead.
+                let mut attempt = 0u32;
+                loop {
+                    match catch_launch(|| backend.optim_step(&[slot], lr, step_no)) {
+                        Ok(c) => {
+                            self.now_s += c.virt.max(c.wall);
+                            cost.add(c);
+                            self.trainers[ti].optimizer_applied();
+                            out.optimizer_steps += 1;
+                            self.maybe_checkpoint(ti, backend);
+                            break;
+                        }
+                        Err(e) => {
+                            let transient = fault_is_transient(&e).unwrap_or(true);
+                            if !transient || attempt >= self.cfg.max_step_retries {
+                                eprintln!(
+                                    "trainer {} quarantined: optimizer failed: {e:#}",
+                                    self.trainers[ti].job.id
+                                );
+                                self.trainers[ti].phase = TrainerPhase::Done;
+                                self.quarantined_total += 1;
+                                break;
+                            }
+                            self.now_s += (self.cfg.retry_backoff_s
+                                * 2f64.powi(attempt as i32))
+                            .min(self.cfg.retry_backoff_cap_s);
+                            out.step_retries += 1;
+                            self.step_retries_total += 1;
+                            attempt += 1;
+                        }
+                    }
+                }
             }
             off += n;
         }
@@ -1085,6 +1426,11 @@ impl Coordinator {
         // previous token) — the capacity controller's pressure signal.
         let mut dec_lat_sum = 0.0f64;
         let mut dec_lat_n = 0usize;
+
+        // Requests whose rows failed isolation: quarantined after the
+        // completions sweep (removing them mid-routing would invalidate
+        // the pf_items/dec_idx indices into `active`).
+        let mut quarantine_ids: Vec<u64> = Vec::new();
 
         // Prefill results. An intermediate chunk only advances the cursor
         // (its last-token logits are not a sampled token — the next chunk's
@@ -1095,6 +1441,13 @@ impl Coordinator {
         // decode latency (the honest accounting of the preemption
         // penalty), not a new TTFT.
         for (k, &(i, consumed)) in pf_items.iter().enumerate() {
+            let Some(logits) = &pf_ok[k] else {
+                // The slice failed isolation: nothing ran for it (its KV
+                // was rolled back), so the cursor does not advance and
+                // the request is quarantined.
+                quarantine_ids.push(self.active[i].req.id);
+                continue;
+            };
             let a = &mut self.active[i];
             if a.trace.prefill_start_s.is_none() {
                 // Waiting-SLO clock stops at the first scheduled chunk.
@@ -1106,7 +1459,7 @@ impl Coordinator {
                 continue; // chunk done, prompt not: stays Admitted
             }
             let resumed = !a.generated.is_empty();
-            let tok = argmax(&pf_logits[k]);
+            let tok = argmax(logits);
             a.generated.push(tok);
             out.emitted_tokens.push((a.req.id, tok));
             if resumed {
@@ -1127,8 +1480,12 @@ impl Coordinator {
 
         // Decode results.
         for (k, &i) in dec_idx.iter().enumerate() {
+            let Some(logits) = &dec_ok[k] else {
+                quarantine_ids.push(self.active[i].req.id);
+                continue;
+            };
             let a = &mut self.active[i];
-            let tok = argmax(&dec_logits[k]);
+            let tok = argmax(logits);
             a.generated.push(tok);
             out.emitted_tokens.push((a.req.id, tok));
             a.trace.output_tokens = a.generated.len();
@@ -1159,6 +1516,21 @@ impl Coordinator {
             } else {
                 j += 1;
             }
+        }
+
+        // Quarantine: remove isolation-failed requests, release their KV,
+        // and record them as failed. The frontend surfaces each as a typed
+        // error frame; every other stream already routed normally above.
+        for id in quarantine_ids {
+            let Some(idx) = self.active.iter().position(|a| a.req.id == id) else { continue };
+            let mut a = self.active.swap_remove(idx);
+            a.trace.failed = true;
+            a.phase = Phase::Failed;
+            self.kv.release(a.kv_slot)?;
+            out.quarantined_requests.push(id);
+            self.quarantined_total += 1;
+            let slo = self.effective_slo(a.req.slo);
+            self.finish_trace(a.trace, slo);
         }
 
         // Capacity controller feedback: a real per-decoded-token latency

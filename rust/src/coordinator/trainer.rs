@@ -57,6 +57,30 @@ impl TrainerState {
         self.phase == TrainerPhase::Done
     }
 
+    /// Position in the current epoch's train set (checkpointed so a
+    /// restored trainer resumes mid-epoch, not from example 0).
+    pub fn cursor(&self) -> usize {
+        self.cursor
+    }
+
+    /// Restore schedule progress from a durable checkpoint. Checkpoints
+    /// are only written at optimizer boundaries, so the accumulator and
+    /// eval cursor restart at zero; the loss history restarts empty — the
+    /// parity contract is that the *continuation* of the loss sequence is
+    /// bit-identical, not that history is replayed.
+    pub fn restore_progress(&mut self, optim_steps: i32, epoch: usize, cursor: usize) {
+        self.optim_steps = optim_steps;
+        self.epoch = epoch;
+        self.cursor = cursor;
+        self.eval_cursor = 0;
+        self.accum = 0;
+        self.phase = if epoch >= self.job.epochs {
+            TrainerPhase::Done
+        } else {
+            TrainerPhase::Training
+        };
+    }
+
     /// Next up-to-`budget` sequences this trainer wants to run, without
     /// consuming them (the coordinator confirms with `advance`).
     pub fn peek_batch(&self, budget: usize) -> Vec<TrainSeq> {

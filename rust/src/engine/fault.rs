@@ -1,0 +1,448 @@
+//! Deterministic fault injection: [`FaultyBackend`] wraps any [`Backend`]
+//! and injects faults from a seeded [`FaultPlan`], so every recovery path
+//! in the coordinator and engine loop is reproducible in CI (DESIGN.md
+//! §12).
+//!
+//! Faults are injected **before** delegating to the inner backend (except
+//! latency spikes, which delegate and then inflate the launch cost), so a
+//! failed launch leaves the inner backend's accumulators and the KV arena
+//! exactly as they were — a retry of the same launch is bit-identical to a
+//! first attempt. The fault schedule is keyed by *launch index* (a counter
+//! over every prefill/decode/train/unified/optim launch this decorator has
+//! seen), plus optional per-launch probabilities drawn from a splitmix64
+//! stream seeded by the plan — same seed, same workload, same faults.
+//!
+//! A *poison token* models a persistently bad input (the serving analogue
+//! of a malformed request that crashes a kernel): any launch whose rows
+//! contain it fails with a **non-transient** fault, every time. The
+//! coordinator's supervision reacts by isolating rows and quarantining the
+//! offending request (DESIGN.md §12) while every other stream keeps going.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use anyhow::Result;
+
+use crate::kvcache::KvCacheManager;
+use crate::model::VirtualizedRegistry;
+use crate::runtime::ModelGeometry;
+
+use super::{
+    Backend, BackendCaps, DecodeRow, PrefillSeq, StepCost, TrainSeq, TrainState, UnifiedOut,
+};
+
+/// Virtual seconds a latency spike adds to the launch it hits.
+pub const LATENCY_SPIKE_S: f64 = 0.25;
+
+/// The fault taxonomy (DESIGN.md §12).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Step fails with a retryable error; the next attempt may succeed.
+    TransientError,
+    /// Step fails as an allocation failure (models a fragmented or
+    /// temporarily exhausted device pool); retryable.
+    AllocFail,
+    /// Step panics mid-launch; the supervisor must contain it.
+    Panic,
+    /// Step succeeds but takes [`LATENCY_SPIKE_S`] longer.
+    LatencySpike,
+    /// A poison input: the launch fails persistently until the offending
+    /// rows are removed. Never retried as-is — isolation is the only cure.
+    Poison,
+}
+
+/// The typed error every injected failure surfaces as. Downcast with
+/// [`fault_is_transient`] to classify: transient faults are retried with
+/// backoff, non-transient ones go straight to row isolation.
+#[derive(Debug, Clone)]
+pub struct InjectedFault {
+    pub kind: FaultKind,
+    /// Launch index the fault fired at (for log correlation).
+    pub launch: u64,
+    /// Whether a retry of the same launch can succeed.
+    pub transient: bool,
+}
+
+impl fmt::Display for InjectedFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "injected {:?} at launch {} ({})",
+            self.kind,
+            self.launch,
+            if self.transient { "transient" } else { "fatal" }
+        )
+    }
+}
+
+impl std::error::Error for InjectedFault {}
+
+/// Classify an error from a supervised launch: `Some(true)` = injected and
+/// retryable, `Some(false)` = injected and persistent (isolate, don't
+/// retry), `None` = not an injected fault (an unknown error — the
+/// supervisor retries those a bounded number of times too, since a real
+/// transient device error looks exactly like one).
+pub fn fault_is_transient(e: &anyhow::Error) -> Option<bool> {
+    e.downcast_ref::<InjectedFault>().map(|f| f.transient)
+}
+
+/// A deterministic fault schedule: explicit faults at launch indices plus
+/// seeded per-launch probabilities. Cloneable so a chaos test can hand the
+/// same plan to two runs and get the same faults.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Seed for the probability stream (and recorded provenance).
+    pub seed: u64,
+    /// Explicit faults: launch index → kind. Fires exactly once each.
+    scheduled: BTreeMap<u64, FaultKind>,
+    /// Per-launch probability of a transient error.
+    pub error_rate: f64,
+    /// Per-launch probability of a panic.
+    pub panic_rate: f64,
+    /// Per-launch probability of a latency spike.
+    pub latency_rate: f64,
+    /// Token id that marks a row as poison (see module docs).
+    pub poison_token: Option<i32>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> Self {
+        Self { seed, ..Self::default() }
+    }
+
+    /// Schedule `kind` to fire at exactly `launch` (0-based launch index).
+    pub fn at(mut self, launch: u64, kind: FaultKind) -> Self {
+        self.scheduled.insert(launch, kind);
+        self
+    }
+
+    pub fn error_rate(mut self, rate: f64) -> Self {
+        self.error_rate = rate;
+        self
+    }
+
+    pub fn panic_rate(mut self, rate: f64) -> Self {
+        self.panic_rate = rate;
+        self
+    }
+
+    pub fn latency_rate(mut self, rate: f64) -> Self {
+        self.latency_rate = rate;
+        self
+    }
+
+    pub fn poison_token(mut self, token: i32) -> Self {
+        self.poison_token = Some(token);
+        self
+    }
+
+    /// Number of explicitly scheduled faults (chaos tests size their
+    /// assertions from this).
+    pub fn scheduled_len(&self) -> usize {
+        self.scheduled.len()
+    }
+}
+
+/// Decorator backend injecting faults per a [`FaultPlan`]. Wrap any
+/// backend: `FaultyBackend::new(inner, plan)`. Delegates the read-only
+/// surface untouched; every *launch* (prefill / decode / train_step /
+/// unified / optim_step) consults the plan first.
+pub struct FaultyBackend<B> {
+    inner: B,
+    plan: FaultPlan,
+    launches: u64,
+    faults: u64,
+    rng: u64,
+}
+
+impl<B> FaultyBackend<B> {
+    pub fn new(inner: B, plan: FaultPlan) -> Self {
+        let rng = plan.seed ^ 0xD1B5_4A32_D192_ED03;
+        Self { inner, plan, launches: 0, faults: 0, rng }
+    }
+
+    pub fn into_inner(self) -> B {
+        self.inner
+    }
+
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut B {
+        &mut self.inner
+    }
+
+    /// Launches attempted so far (fault schedule indexes into this).
+    pub fn launches(&self) -> u64 {
+        self.launches
+    }
+
+    /// splitmix64 → uniform f64 in [0, 1).
+    fn draw(&mut self) -> f64 {
+        self.rng = self.rng.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.rng;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        (z >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Consume one launch index; fail, panic, or return the extra cost a
+    /// latency spike adds. `poisoned` short-circuits everything: poison is
+    /// a property of the rows, not the schedule.
+    fn arm(&mut self, poisoned: bool) -> Result<Option<StepCost>> {
+        let launch = self.launches;
+        self.launches += 1;
+        if poisoned {
+            self.faults += 1;
+            return Err(InjectedFault { kind: FaultKind::Poison, launch, transient: false }.into());
+        }
+        let kind = if let Some(&k) = self.plan.scheduled.get(&launch) {
+            Some(k)
+        } else {
+            let r = self.draw();
+            let e = self.plan.error_rate;
+            let p = e + self.plan.panic_rate;
+            let l = p + self.plan.latency_rate;
+            if r < e {
+                Some(FaultKind::TransientError)
+            } else if r < p {
+                Some(FaultKind::Panic)
+            } else if r < l {
+                Some(FaultKind::LatencySpike)
+            } else {
+                None
+            }
+        };
+        match kind {
+            None => Ok(None),
+            Some(FaultKind::LatencySpike) => {
+                self.faults += 1;
+                Ok(Some(StepCost { wall: 0.0, virt: LATENCY_SPIKE_S }))
+            }
+            Some(FaultKind::Panic) => {
+                self.faults += 1;
+                std::panic::panic_any(InjectedFault {
+                    kind: FaultKind::Panic,
+                    launch,
+                    transient: true,
+                });
+            }
+            Some(k) => {
+                self.faults += 1;
+                let transient = matches!(k, FaultKind::TransientError | FaultKind::AllocFail);
+                Err(InjectedFault { kind: k, launch, transient }.into())
+            }
+        }
+    }
+
+    fn poison(&self) -> Option<i32> {
+        self.plan.poison_token
+    }
+}
+
+impl<B: Backend> Backend for FaultyBackend<B> {
+    fn geometry(&self) -> &ModelGeometry {
+        self.inner.geometry()
+    }
+
+    fn caps(&self) -> BackendCaps {
+        self.inner.caps()
+    }
+
+    fn prefill(
+        &mut self,
+        seqs: &[PrefillSeq],
+        cache: &mut KvCacheManager,
+    ) -> Result<(Vec<Vec<f32>>, StepCost)> {
+        let poisoned = self
+            .poison()
+            .is_some_and(|p| seqs.iter().any(|s| s.tokens.contains(&p)));
+        let extra = self.arm(poisoned)?;
+        let (out, mut cost) = self.inner.prefill(seqs, cache)?;
+        if let Some(e) = extra {
+            cost.add(e);
+        }
+        Ok((out, cost))
+    }
+
+    fn decode(
+        &mut self,
+        rows: &[DecodeRow],
+        cache: &mut KvCacheManager,
+    ) -> Result<(Vec<Vec<f32>>, StepCost)> {
+        let poisoned = self.poison().is_some_and(|p| rows.iter().any(|r| r.token == p));
+        let extra = self.arm(poisoned)?;
+        let (out, mut cost) = self.inner.decode(rows, cache)?;
+        if let Some(e) = extra {
+            cost.add(e);
+        }
+        Ok((out, cost))
+    }
+
+    fn train_step(&mut self, seqs: &[TrainSeq]) -> Result<(Vec<f32>, StepCost)> {
+        let poisoned = self
+            .poison()
+            .is_some_and(|p| seqs.iter().any(|s| s.tokens.contains(&p) || s.labels.contains(&p)));
+        let extra = self.arm(poisoned)?;
+        let (out, mut cost) = self.inner.train_step(seqs)?;
+        if let Some(e) = extra {
+            cost.add(e);
+        }
+        Ok((out, cost))
+    }
+
+    fn optim_step(&mut self, slots: &[usize], lr: f32, step: i32) -> Result<StepCost> {
+        let extra = self.arm(false)?;
+        let mut cost = self.inner.optim_step(slots, lr, step)?;
+        if let Some(e) = extra {
+            cost.add(e);
+        }
+        Ok(cost)
+    }
+
+    fn unified(
+        &mut self,
+        ft: &[TrainSeq],
+        pf: &[PrefillSeq],
+        dec: &[DecodeRow],
+        cache: &mut KvCacheManager,
+    ) -> Result<(UnifiedOut, StepCost)> {
+        let poisoned = self.poison().is_some_and(|p| {
+            ft.iter().any(|s| s.tokens.contains(&p) || s.labels.contains(&p))
+                || pf.iter().any(|s| s.tokens.contains(&p))
+                || dec.iter().any(|r| r.token == p)
+        });
+        let extra = self.arm(poisoned)?;
+        let (out, mut cost) = self.inner.unified(ft, pf, dec, cache)?;
+        if let Some(e) = extra {
+            cost.add(e);
+        }
+        Ok((out, cost))
+    }
+
+    fn sync_adapters(&mut self, reg: &mut VirtualizedRegistry) -> Result<()> {
+        self.inner.sync_adapters(reg)
+    }
+
+    fn checkpoint_adapters(&mut self, reg: &mut VirtualizedRegistry) -> Result<()> {
+        self.inner.checkpoint_adapters(reg)
+    }
+
+    fn faults_injected(&self) -> u64 {
+        self.faults
+    }
+
+    fn export_train_state(&mut self, slot: usize) -> Result<TrainState> {
+        self.inner.export_train_state(slot)
+    }
+
+    fn import_train_state(&mut self, state: &TrainState) -> Result<()> {
+        self.inner.import_train_state(state)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::CostModel;
+    use crate::harness::{sim_backend, sim_cache_config};
+
+    fn harness() -> (FaultyBackend<crate::engine::SimBackend>, KvCacheManager) {
+        let be = sim_backend(CostModel::default());
+        let cache = KvCacheManager::new(sim_cache_config());
+        (FaultyBackend::new(be, FaultPlan::new(7)), cache)
+    }
+
+    fn one_row(cache: &mut KvCacheManager) -> DecodeRow {
+        let slot = cache.allocate(1, 4).unwrap();
+        DecodeRow { token: 3, adapter: 0, kv_slot: slot }
+    }
+
+    #[test]
+    fn scheduled_fault_fires_at_exact_launch() {
+        let (mut fb, mut cache) = harness();
+        fb.plan = FaultPlan::new(7).at(1, FaultKind::TransientError);
+        let row = one_row(&mut cache);
+        assert!(fb.decode(&[row.clone()], &mut cache).is_ok(), "launch 0 clean");
+        let err = fb.decode(&[row.clone()], &mut cache).unwrap_err();
+        assert_eq!(fault_is_transient(&err), Some(true));
+        assert!(fb.decode(&[row], &mut cache).is_ok(), "launch 2 clean again");
+        assert_eq!(fb.faults_injected(), 1);
+        assert_eq!(fb.launches(), 3);
+    }
+
+    #[test]
+    fn alloc_fail_is_transient_poison_is_not() {
+        let (mut fb, mut cache) = harness();
+        fb.plan = FaultPlan::new(7).at(0, FaultKind::AllocFail).poison_token(99);
+        let row = one_row(&mut cache);
+        let err = fb.decode(&[row.clone()], &mut cache).unwrap_err();
+        assert_eq!(fault_is_transient(&err), Some(true), "alloc failure retryable");
+        let bad = DecodeRow { token: 99, ..row };
+        let err = fb.decode(&[bad.clone()], &mut cache).unwrap_err();
+        assert_eq!(fault_is_transient(&err), Some(false), "poison is persistent");
+        let err = fb.decode(&[bad], &mut cache).unwrap_err();
+        assert_eq!(fault_is_transient(&err), Some(false), "poison every time");
+        assert_eq!(fb.faults_injected(), 3);
+    }
+
+    #[test]
+    fn latency_spike_succeeds_with_extra_cost() {
+        let (mut fb, mut cache) = harness();
+        fb.plan = FaultPlan::new(7).at(0, FaultKind::LatencySpike);
+        let row = one_row(&mut cache);
+        let (_, spiked) = fb.decode(&[row.clone()], &mut cache).unwrap();
+        let (_, clean) = fb.decode(&[row], &mut cache).unwrap();
+        assert!(
+            (spiked.virt - clean.virt - LATENCY_SPIKE_S).abs() < 1e-12,
+            "spike adds exactly {LATENCY_SPIKE_S}s: {} vs {}",
+            spiked.virt,
+            clean.virt
+        );
+        assert_eq!(fb.faults_injected(), 1, "a spike still counts as a fault");
+    }
+
+    #[test]
+    fn injected_panic_carries_typed_payload() {
+        let (mut fb, mut cache) = harness();
+        fb.plan = FaultPlan::new(7).at(0, FaultKind::Panic);
+        let row = one_row(&mut cache);
+        let payload = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = fb.decode(&[row], &mut cache);
+        }))
+        .unwrap_err();
+        let fault = payload.downcast_ref::<InjectedFault>().expect("typed payload");
+        assert_eq!(fault.kind, FaultKind::Panic);
+        assert!(fault.transient);
+        assert_eq!(fb.faults_injected(), 1);
+    }
+
+    #[test]
+    fn probability_stream_is_seed_deterministic() {
+        let trace = |seed: u64| {
+            let be = sim_backend(CostModel::default());
+            let mut cache = KvCacheManager::new(sim_cache_config());
+            let mut fb = FaultyBackend::new(be, FaultPlan::new(seed).error_rate(0.3));
+            let row = one_row(&mut cache);
+            (0..64)
+                .map(|_| fb.decode(&[row.clone()], &mut cache).is_err())
+                .collect::<Vec<bool>>()
+        };
+        assert_eq!(trace(11), trace(11), "same seed, same faults");
+        assert_ne!(trace(11), trace(12), "different seed, different faults");
+        assert!(trace(11).iter().any(|&f| f), "rate 0.3 over 64 launches fires");
+    }
+
+    #[test]
+    fn clean_plan_is_fully_transparent() {
+        let (mut fb, mut cache) = harness();
+        let row = one_row(&mut cache);
+        for _ in 0..32 {
+            fb.decode(&[row.clone()], &mut cache).unwrap();
+        }
+        assert_eq!(fb.faults_injected(), 0);
+        assert_eq!(fb.launches(), 32);
+    }
+}

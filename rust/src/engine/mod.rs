@@ -22,16 +22,18 @@
 //! launch).
 
 mod cost;
+mod fault;
 mod native;
 mod sim;
 mod xla_backend;
 
 pub use cost::CostModel;
+pub use fault::{fault_is_transient, FaultKind, FaultPlan, FaultyBackend, InjectedFault};
 pub use native::NativeBackend;
 pub use sim::{LaunchCounts, SimBackend};
 pub use xla_backend::XlaBackend;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::kvcache::KvCacheManager;
 use crate::model::VirtualizedRegistry;
@@ -90,6 +92,21 @@ pub struct UnifiedOut {
     pub ft_losses: Vec<f32>,
     pub pf_last_logits: Vec<Vec<f32>>,
     pub dec_logits: Vec<Vec<f32>>,
+}
+
+/// One adapter slot's full trainable state — LoRA A/B matrices plus the
+/// Adam moment buffers — as named f32 tensors. This is the unit the durable
+/// checkpoint format ([`crate::model::AdapterCheckpoint`]) serializes and
+/// the unit [`Backend::import_train_state`] restores, so a resumed trainer
+/// continues its loss sequence bit-identically (optimizer state included).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TrainState {
+    /// Bank slot this state was exported from.
+    pub slot: usize,
+    /// Named tensors (`layers.{li}.{module}.{a|b|m_a|v_a|m_b|v_b}`,
+    /// plus the 1-element `scaling`). Names are backend-defined but must
+    /// round-trip through export → import on the same geometry.
+    pub tensors: Vec<(String, Vec<f32>)>,
 }
 
 /// A backend's static capabilities, read by the coordinator once per step
@@ -187,6 +204,82 @@ pub trait Backend {
 
     /// Pull trained parameters back into the registry's host mirror.
     fn checkpoint_adapters(&mut self, reg: &mut VirtualizedRegistry) -> Result<()>;
+
+    /// Faults this backend has injected so far (0 for real backends; the
+    /// [`FaultyBackend`] decorator overrides this so the engine loop can
+    /// surface the count in the `stats` frame).
+    fn faults_injected(&self) -> u64 {
+        0
+    }
+
+    /// Export one slot's full trainable state (adapter weights + Adam
+    /// moments) for durable checkpointing. Backends without trainable
+    /// state report unsupported.
+    fn export_train_state(&mut self, _slot: usize) -> Result<TrainState> {
+        Err(anyhow!("backend does not support train-state export"))
+    }
+
+    /// Restore a state previously produced by [`Self::export_train_state`]
+    /// on the same geometry. Must leave the backend bit-identical to the
+    /// moment the state was exported.
+    fn import_train_state(&mut self, _state: &TrainState) -> Result<()> {
+        Err(anyhow!("backend does not support train-state import"))
+    }
+}
+
+// A boxed backend is a backend: lets the CLI wrap its `Box<dyn Backend>`
+// in a [`FaultyBackend`] decorator without unboxing.
+impl<B: Backend + ?Sized> Backend for Box<B> {
+    fn geometry(&self) -> &ModelGeometry {
+        (**self).geometry()
+    }
+    fn caps(&self) -> BackendCaps {
+        (**self).caps()
+    }
+    fn prefill(
+        &mut self,
+        seqs: &[PrefillSeq],
+        cache: &mut KvCacheManager,
+    ) -> Result<(Vec<Vec<f32>>, StepCost)> {
+        (**self).prefill(seqs, cache)
+    }
+    fn decode(
+        &mut self,
+        rows: &[DecodeRow],
+        cache: &mut KvCacheManager,
+    ) -> Result<(Vec<Vec<f32>>, StepCost)> {
+        (**self).decode(rows, cache)
+    }
+    fn train_step(&mut self, seqs: &[TrainSeq]) -> Result<(Vec<f32>, StepCost)> {
+        (**self).train_step(seqs)
+    }
+    fn optim_step(&mut self, slots: &[usize], lr: f32, step: i32) -> Result<StepCost> {
+        (**self).optim_step(slots, lr, step)
+    }
+    fn unified(
+        &mut self,
+        ft: &[TrainSeq],
+        pf: &[PrefillSeq],
+        dec: &[DecodeRow],
+        cache: &mut KvCacheManager,
+    ) -> Result<(UnifiedOut, StepCost)> {
+        (**self).unified(ft, pf, dec, cache)
+    }
+    fn sync_adapters(&mut self, reg: &mut VirtualizedRegistry) -> Result<()> {
+        (**self).sync_adapters(reg)
+    }
+    fn checkpoint_adapters(&mut self, reg: &mut VirtualizedRegistry) -> Result<()> {
+        (**self).checkpoint_adapters(reg)
+    }
+    fn faults_injected(&self) -> u64 {
+        (**self).faults_injected()
+    }
+    fn export_train_state(&mut self, slot: usize) -> Result<TrainState> {
+        (**self).export_train_state(slot)
+    }
+    fn import_train_state(&mut self, state: &TrainState) -> Result<()> {
+        (**self).import_train_state(state)
+    }
 }
 
 /// Greedy sampling helper shared by coordinators.

@@ -39,7 +39,9 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::engine::{Backend, BackendCaps, DecodeRow, PrefillSeq, StepCost, TrainSeq, UnifiedOut};
+use crate::engine::{
+    Backend, BackendCaps, DecodeRow, PrefillSeq, StepCost, TrainSeq, TrainState, UnifiedOut,
+};
 use crate::kvcache::KvCacheManager;
 use crate::model::{QuantizedTensor, VirtualizedRegistry, WeightStore};
 use crate::runtime::kernels::{
@@ -219,7 +221,7 @@ fn dot(a: &[f32], b: &[f32]) -> f32 {
 
 impl NativeBackend {
     /// Build from a manifest + weight store (artifact-shaped or the
-    /// synthetic in-memory model from `harness::native_model`).
+    /// synthetic in-memory model from `HarnessBuilder::native_model`).
     ///
     /// `threads` sizes the worker pool: `0` = auto (the `--threads`
     /// default — `LOQUETIER_THREADS` env or available parallelism).
@@ -1511,6 +1513,92 @@ impl Backend for NativeBackend {
                 }
             }
         }
+        Ok(())
+    }
+
+    /// One slot's full trainable state: A/B plus the Adam moments (and the
+    /// slot's scaling), in deterministic site order. Gradients are NOT
+    /// included — checkpoints are only taken at optimizer boundaries,
+    /// where the accumulators are exactly zero.
+    fn export_train_state(&mut self, slot: usize) -> Result<TrainState> {
+        if slot >= self.scaling.len() {
+            return Err(anyhow!("export slot {slot} out of range"));
+        }
+        let rank = self.lora.rank;
+        let mut tensors = Vec::new();
+        for (li, layer_sites) in self.sites.iter().enumerate() {
+            for site in layer_sites.iter() {
+                let ae = site.a_elems(rank);
+                let be = site.b_elems(rank);
+                for (suffix, buf, elems) in [
+                    ("a", &site.a, ae),
+                    ("m_a", &site.m_a, ae),
+                    ("v_a", &site.v_a, ae),
+                    ("b", &site.b, be),
+                    ("m_b", &site.m_b, be),
+                    ("v_b", &site.v_b, be),
+                ] {
+                    tensors.push((
+                        format!("layers.{li}.{}.{suffix}", site.module),
+                        buf[slot * elems..(slot + 1) * elems].to_vec(),
+                    ));
+                }
+            }
+        }
+        tensors.push(("scaling".to_string(), vec![self.scaling[slot]]));
+        Ok(TrainState { slot, tensors })
+    }
+
+    /// Restore a state from [`Self::export_train_state`] on the same
+    /// geometry: writes A/B + moments + scaling back into the slot, zeroes
+    /// its gradient accumulators, and refreshes the empty-slot guard.
+    fn import_train_state(&mut self, state: &TrainState) -> Result<()> {
+        let slot = state.slot;
+        if slot >= self.scaling.len() {
+            return Err(anyhow!("import slot {slot} out of range"));
+        }
+        let rank = self.lora.rank;
+        let mut it = state.tensors.iter();
+        for (li, layer_sites) in self.sites.iter_mut().enumerate() {
+            for site in layer_sites.iter_mut() {
+                let ae = site.din * rank;
+                let be = rank * site.dout;
+                for (suffix, buf, elems) in [
+                    ("a", &mut site.a, ae),
+                    ("m_a", &mut site.m_a, ae),
+                    ("v_a", &mut site.v_a, ae),
+                    ("b", &mut site.b, be),
+                    ("m_b", &mut site.m_b, be),
+                    ("v_b", &mut site.v_b, be),
+                ] {
+                    let (name, data) =
+                        it.next().ok_or_else(|| anyhow!("train state truncated"))?;
+                    let expect = format!("layers.{li}.{}.{suffix}", site.module);
+                    if name != &expect {
+                        return Err(anyhow!("train state tensor {name}, expected {expect}"));
+                    }
+                    if data.len() != elems {
+                        return Err(anyhow!(
+                            "{expect}: state has {} elems, slot needs {elems}",
+                            data.len()
+                        ));
+                    }
+                    buf[slot * elems..(slot + 1) * elems].copy_from_slice(data);
+                }
+                for (grad, elems) in [(&mut site.grad_a, ae), (&mut site.grad_b, be)] {
+                    grad[slot * elems..(slot + 1) * elems].fill(0.0);
+                }
+            }
+        }
+        let (name, data) = it.next().ok_or_else(|| anyhow!("train state missing scaling"))?;
+        if name != "scaling" || data.len() != 1 {
+            return Err(anyhow!("train state malformed scaling tensor"));
+        }
+        self.scaling[slot] = data[0];
+        if it.next().is_some() {
+            return Err(anyhow!("train state has trailing tensors"));
+        }
+        self.slot_loaded[slot] = Self::slot_is_loaded(&self.sites, &self.scaling, rank, slot);
         Ok(())
     }
 }

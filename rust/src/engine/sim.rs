@@ -253,6 +253,16 @@ impl Backend for SimBackend {
     fn checkpoint_adapters(&mut self, _reg: &mut VirtualizedRegistry) -> Result<()> {
         Ok(())
     }
+
+    // The sim has no trainable tensors; it round-trips the progress-only
+    // state so coordinator-level checkpointing works under the cost model.
+    fn export_train_state(&mut self, slot: usize) -> Result<super::TrainState> {
+        Ok(super::TrainState { slot, tensors: Vec::new() })
+    }
+
+    fn import_train_state(&mut self, _state: &super::TrainState) -> Result<()> {
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -144,8 +144,8 @@ pub fn gpu_cost_model(artifacts_dir: &str) -> CostModel {
 }
 
 /// GPU-scale sim backend replaying `cost` — shorthand for
-/// [`HarnessBuilder::sim`] (not part of the deprecated zoo: it is a plain
-/// alias, not a per-shape constructor).
+/// [`HarnessBuilder::sim`] (a plain alias, not a per-shape constructor,
+/// which is why it outlived the old constructor zoo).
 pub fn sim_backend(cost: CostModel) -> SimBackend {
     HarnessBuilder::new().sim(cost)
 }
@@ -164,10 +164,9 @@ fn gpu_coord_config() -> CoordinatorConfig {
     }
 }
 
-/// One builder for every canonical harness constructor, replacing the old
-/// per-shape zoo (`native_stack`, `native_stack_with_threads`,
-/// `native_model`, `loquetier`, `loquetier_with`, `peft`, `slora`,
-/// `flexllm` — kept one PR as `#[deprecated]` thin wrappers).
+/// One builder for every canonical harness constructor — the only harness
+/// construction surface (the old per-shape zoo of free functions rode one
+/// PR as `#[deprecated]` wrappers and is gone).
 ///
 /// Knobs default to the old zoo's implicit choices (seed 0, auto threads,
 /// FIFO policy, f32 base weights), so a bare
@@ -267,51 +266,6 @@ impl HarnessBuilder {
     pub fn flexllm(&self) -> FlexLlmLike {
         FlexLlmLike::new(gpu_coord_config(), gpu_cache(), 38.0, 5.0)
     }
-}
-
-// ---- Deprecated constructor zoo (one-PR compatibility wrappers) --------
-
-#[deprecated(note = "use HarnessBuilder::new().seed(seed).native_model()")]
-pub fn native_model(seed: u64) -> Result<(Manifest, WeightStore)> {
-    HarnessBuilder::new().seed(seed).native_model()
-}
-
-#[deprecated(note = "use HarnessBuilder::new().seed(seed).native_stack()")]
-pub fn native_stack(seed: u64) -> Result<(NativeBackend, VirtualizedRegistry, Manifest)> {
-    HarnessBuilder::new().seed(seed).native_stack()
-}
-
-#[deprecated(note = "use HarnessBuilder::new().seed(seed).threads(threads).native_stack()")]
-pub fn native_stack_with_threads(
-    seed: u64,
-    threads: usize,
-) -> Result<(NativeBackend, VirtualizedRegistry, Manifest)> {
-    HarnessBuilder::new().seed(seed).threads(threads).native_stack()
-}
-
-#[deprecated(note = "use HarnessBuilder::new().loquetier()")]
-pub fn loquetier() -> LoquetierSystem {
-    HarnessBuilder::new().loquetier()
-}
-
-#[deprecated(note = "use HarnessBuilder::new().policy(policy).loquetier()")]
-pub fn loquetier_with(policy: PolicyKind) -> LoquetierSystem {
-    HarnessBuilder::new().policy(policy).loquetier()
-}
-
-#[deprecated(note = "use HarnessBuilder::new().peft()")]
-pub fn peft() -> PeftLike {
-    HarnessBuilder::new().peft()
-}
-
-#[deprecated(note = "use HarnessBuilder::new().slora()")]
-pub fn slora() -> SLoraLike {
-    HarnessBuilder::new().slora()
-}
-
-#[deprecated(note = "use HarnessBuilder::new().flexllm()")]
-pub fn flexllm() -> FlexLlmLike {
-    HarnessBuilder::new().flexllm()
 }
 
 /// Decode-speed ratio of Loquetier to FlexLLM. Figure 2 shows FlexLLM

@@ -226,6 +226,37 @@ impl KvCacheManager {
         Ok(())
     }
 
+    /// Roll a slot back to `len` tokens: the supervised-step rollback
+    /// primitive (DESIGN.md §12). A failed launch may have appended KV for
+    /// some rows before dying; retrying without truncating would duplicate
+    /// those rows. Truncation is **length-only**: blocks the slot already
+    /// claimed stay claimed (so a `reserve_decode_block` reservation made
+    /// before the launch still covers the retry and the retry cannot die
+    /// on blocks), and the dropped token range is zeroed so a later append
+    /// sees the same zeros a fresh write would.
+    pub fn truncate(&mut self, slot: usize, len: usize) -> Result<()> {
+        let s = self
+            .slots
+            .get_mut(slot)
+            .ok_or_else(|| anyhow!("slot {slot} out of range"))?;
+        if s.owner.is_none() {
+            return Err(anyhow!("truncate on free slot {slot}"));
+        }
+        if len > s.len {
+            return Err(anyhow!("truncate slot {slot} to {len} > current {}", s.len));
+        }
+        let old = s.len;
+        s.len = len;
+        let te = self.cfg.token_elems;
+        let stride = self.cfg.layer_stride();
+        for l in 0..self.cfg.num_layers {
+            let off = l * stride;
+            self.k_data[slot][off + len * te..off + old * te].fill(0.0);
+            self.v_data[slot][off + len * te..off + old * te].fill(0.0);
+        }
+        Ok(())
+    }
+
     /// Claim `blocks` pages from the unified pool for an adapter's A/B
     /// weights. Idempotent for an already-resident adapter (its existing
     /// claim stands — re-claiming with a different size is rejected so a
@@ -608,6 +639,44 @@ mod tests {
         assert!(m.release_adapter_blocks(5).is_err(), "double release");
         assert_eq!(m.stats().blocks_used, 0);
         m.audit_ledger().unwrap();
+    }
+
+    #[test]
+    fn truncate_rolls_back_length_but_keeps_blocks() {
+        let mut m = KvCacheManager::new(cfg());
+        let s = m.allocate(1, 4).unwrap(); // 1 block
+        let ten = vec![1.0; 2 * 10 * 4];
+        m.append(s, 10, &ten, &ten).unwrap(); // lazily claims block 2
+        assert_eq!(m.stats().blocks_used, 2);
+        m.truncate(s, 6).unwrap();
+        assert_eq!(m.len(s), 6);
+        assert_eq!(m.stats().blocks_used, 2, "rollback keeps claimed blocks");
+        assert!(
+            m.k_layer(s, 0)[6 * 4..10 * 4].iter().all(|&x| x == 0.0),
+            "dropped range zeroed"
+        );
+        assert!(m.k_layer(s, 1)[..6 * 4].iter().all(|&x| x == 1.0), "kept range intact");
+        m.audit_ledger().unwrap();
+        // Retry path: a fresh append into the truncated slot cannot fail
+        // on blocks (they are still held) and lands at the new length.
+        let four = vec![2.0; 2 * 4 * 4];
+        m.append(s, 4, &four, &four).unwrap();
+        assert_eq!(m.len(s), 10);
+        assert_eq!(m.stats().blocks_used, 2);
+        m.audit_ledger().unwrap();
+    }
+
+    #[test]
+    fn truncate_rejects_free_slot_and_growth() {
+        let mut m = KvCacheManager::new(cfg());
+        assert!(m.truncate(0, 0).is_err(), "free slot");
+        assert!(m.truncate(99, 0).is_err(), "out of range");
+        let s = m.allocate(1, 8).unwrap();
+        let two = vec![0.0; 2 * 2 * 4];
+        m.append(s, 2, &two, &two).unwrap();
+        assert!(m.truncate(s, 3).is_err(), "cannot grow");
+        m.truncate(s, 2).unwrap(); // no-op truncate is fine
+        assert_eq!(m.len(s), 2);
     }
 
     #[test]

@@ -16,7 +16,7 @@ use anyhow::{bail, Result};
 
 use loquetier::config::ServeConfig;
 use loquetier::coordinator::Coordinator;
-use loquetier::engine::{Backend, NativeBackend, XlaBackend};
+use loquetier::engine::{Backend, FaultPlan, FaultyBackend, NativeBackend, XlaBackend};
 use loquetier::harness;
 use loquetier::kvcache::KvCacheManager;
 use loquetier::model::{LoraAdapter, SlotState, VirtualizedRegistry, WeightStore};
@@ -34,6 +34,8 @@ USAGE:
   loquetier serve   [--backend native|xla] [--artifacts DIR] [--listen ADDR]
                     [--config FILE] [--seed N] [--threads N]
                     [--policy fifo|slo] [--quantized]
+                    [--checkpoint-dir DIR] [--checkpoint-every N]
+                    [--conn-timeout-s SECS] [--fault-rate R] [--fault-seed N]
   loquetier bench   [--backend native|xla] [--artifacts DIR] [--seed N]
                     [--threads N] [--policy fifo|slo] [--quantized]
   loquetier inspect [--artifacts DIR]
@@ -45,7 +47,15 @@ USAGE:
   round-robin decode) or slo (deadline-slack admission, chunked prefill,
   headroom-driven fine-tune budget — DESIGN.md §9).
   --quantized serves base weights as per-row int8 on the native backend
-  (inference only; training reads the f32 masters — DESIGN.md §11).";
+  (inference only; training reads the f32 masters — DESIGN.md §11).
+  --checkpoint-dir / --checkpoint-every N write a durable adapter
+  checkpoint (crash-safe temp+fsync+rename) every N optimizer steps
+  (DESIGN.md §12); absent/0 disables auto-checkpointing.
+  --conn-timeout-s bounds how long a half-open client can pin a
+  connection thread (default 60; 0 disables).
+  --fault-rate R injects seeded transient backend faults (errors +
+  latency spikes) at probability R per launch — the chaos harness for
+  exercising the supervised engine loop; --fault-seed picks the stream.";
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -171,6 +181,25 @@ fn bench_cmd(args: &Args) -> Result<()> {
     }
 }
 
+/// Robustness knobs parsed from serve flags (DESIGN.md §12).
+struct RobustnessOpts {
+    checkpoint_dir: Option<std::path::PathBuf>,
+    checkpoint_every: usize,
+    conn_timeout_ms: u64,
+    fault_rate: f64,
+    fault_seed: u64,
+}
+
+fn robustness_opts(args: &Args) -> Result<RobustnessOpts> {
+    Ok(RobustnessOpts {
+        checkpoint_dir: args.get("checkpoint-dir").map(std::path::PathBuf::from),
+        checkpoint_every: args.usize_or("checkpoint-every", 0)?,
+        conn_timeout_ms: (args.f64_or("conn-timeout-s", 60.0)?.max(0.0) * 1e3) as u64,
+        fault_rate: args.f64_or("fault-rate", 0.0)?,
+        fault_seed: args.usize_or("fault-seed", 7)? as u64,
+    })
+}
+
 /// The serving tail shared by both backends: coordinator + registry
 /// directory + TCP frontend + engine loop (the backend stays on the main
 /// thread — PJRT pointers are not Send, and the native backend simply
@@ -183,15 +212,19 @@ fn run_server(
     backend: &mut dyn Backend,
     label: &str,
     policy: loquetier::coordinator::PolicyKind,
+    opts: &RobustnessOpts,
 ) -> Result<()> {
     let coord_cfg = loquetier::coordinator::CoordinatorConfig {
         policy,
+        checkpoint_every: opts.checkpoint_every,
+        checkpoint_dir: opts.checkpoint_dir.clone(),
         ..cfg.coordinator_config(&manifest)
     };
     let mut coord = Coordinator::new(coord_cfg, cfg.cache_config(&manifest));
     let mut dir = RegistryDirectory::new(reg, manifest.clone(), Some(store));
 
     let (frontend, engine_rx) = Frontend::new(AdmissionConfig::default());
+    frontend.set_conn_timeout_ms(opts.conn_timeout_ms);
     let listener = TcpListener::bind(&cfg.listen_addr)?;
     println!(
         "loquetier serving on {} ({label} backend, {} policy, {} virtual models, vocab {})",
@@ -266,5 +299,23 @@ fn serve_cmd(args: &Args) -> Result<()> {
     }
     backend.sync_adapters(&mut reg)?;
     let policy = args.policy_or(loquetier::coordinator::PolicyKind::Fifo)?;
-    run_server(&cfg, manifest, store, reg, backend.as_mut(), label, policy)
+    let opts = robustness_opts(args)?;
+    if opts.fault_rate > 0.0 {
+        // Chaos harness: wrap the backend in a seeded fault injector so the
+        // supervised engine loop's retry/quarantine/recovery paths run
+        // against a live deployment (DESIGN.md §12).
+        println!(
+            "fault injection ON: rate {} seed {} ({} launches between spikes on average)",
+            opts.fault_rate,
+            opts.fault_seed,
+            (2.0 / opts.fault_rate.max(1e-9)).round()
+        );
+        let plan = FaultPlan::new(opts.fault_seed)
+            .error_rate(opts.fault_rate / 2.0)
+            .latency_rate(opts.fault_rate / 2.0);
+        let mut faulty = FaultyBackend::new(backend, plan);
+        run_server(&cfg, manifest, store, reg, &mut faulty, label, policy, &opts)
+    } else {
+        run_server(&cfg, manifest, store, reg, backend.as_mut(), label, policy, &opts)
+    }
 }

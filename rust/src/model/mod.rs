@@ -4,9 +4,11 @@
 //! base-weight buffers plus per-slot adapter state).
 
 mod adapter;
+mod checkpoint;
 mod store;
 mod virtualized;
 
 pub use adapter::{AdapterKey, LoraAdapter, LoraModule};
+pub use checkpoint::AdapterCheckpoint;
 pub use store::{QuantizedTensor, WeightStore};
 pub use virtualized::{SlotState, VirtualModel, VirtualizedRegistry};

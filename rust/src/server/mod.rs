@@ -33,10 +33,16 @@
 //! <- {"ok":true,"drained":true}
 //! ```
 //!
-//! Overload produces a 503-style reject frame instead of queueing without
-//! bound: `{"error":"overloaded","code":503}`. Admission is bounded
-//! globally and per adapter (fair share), so one hot tenant cannot starve
-//! the rest of the bank.
+//! Error frames carry a typed code — snake_case `err` name plus the
+//! numeric HTTP-flavored `code` existing clients already switch on (see
+//! [`ErrCode`] and the README wire reference):
+//! `{"error":"overloaded","err":"overloaded","code":503,"retry_after_ms":400}`.
+//! Admission is bounded globally and per adapter (fair share), so one hot
+//! tenant cannot starve the rest of the bank; 503 rejects include a
+//! deterministic `retry_after_ms` backoff hint scaled by instantaneous
+//! load. Client sockets carry read/write timeouts
+//! ([`Frontend::set_conn_timeout_ms`]) so half-open connections are
+//! reclaimed instead of pinning a thread forever.
 
 use std::collections::{BTreeMap, HashMap};
 use std::io::{BufRead, BufReader, Write};
@@ -178,6 +184,48 @@ impl ClientMsg {
     }
 }
 
+/// Typed wire error codes: every error frame carries both the numeric
+/// `code` (HTTP-flavored, stable for existing clients) and the snake_case
+/// `err` name so scripts can switch on a string instead of a magic number.
+///
+/// | name          | code | meaning                                       |
+/// |---------------|------|-----------------------------------------------|
+/// | `bad_request` | 400  | malformed op / unknown model / over capacity  |
+/// | `conflict`    | 409  | adapter lifecycle conflict (busy, duplicate)  |
+/// | `quarantined` | 422  | request isolated after repeated step failures |
+/// | `internal`    | 500  | engine loop gone or internal failure          |
+/// | `overloaded`  | 503  | admission reject / draining / queue timeout   |
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrCode {
+    BadRequest,
+    Conflict,
+    Quarantined,
+    Internal,
+    Overloaded,
+}
+
+impl ErrCode {
+    pub fn code(self) -> u64 {
+        match self {
+            ErrCode::BadRequest => 400,
+            ErrCode::Conflict => 409,
+            ErrCode::Quarantined => 422,
+            ErrCode::Internal => 500,
+            ErrCode::Overloaded => 503,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrCode::BadRequest => "bad_request",
+            ErrCode::Conflict => "conflict",
+            ErrCode::Quarantined => "quarantined",
+            ErrCode::Internal => "internal",
+            ErrCode::Overloaded => "overloaded",
+        }
+    }
+}
+
 // --------------------------------------------------------------------------
 // Stats
 // --------------------------------------------------------------------------
@@ -216,6 +264,16 @@ pub struct Stats {
     /// SLO, tracked by the scheduler as it runs (1.0 while nothing has
     /// finished). DESIGN.md §9.
     pub slo_attainment: f64,
+    /// Fault-supervision counters (DESIGN.md §12): faults the backend
+    /// injected (0 outside chaos runs), step retries the supervisor
+    /// absorbed, requests quarantined after per-row isolation, durable
+    /// adapter checkpoints written, and full backend resets recovered
+    /// via preempt-and-recompute.
+    pub faults_injected: u64,
+    pub step_retries: u64,
+    pub quarantined: u64,
+    pub checkpoints_written: u64,
+    pub backend_resets: u64,
     /// Per-virtual-model counters, keyed by model name ("" = base model).
     pub per_adapter: BTreeMap<String, AdapterCounters>,
     /// Per-virtual-model TTFT/TPOT quantiles (interpolated
@@ -276,6 +334,11 @@ impl Stats {
             ("adapter_resident", Json::Num(self.adapter_resident as f64)),
             ("adapter_host", Json::Num(self.adapter_host as f64)),
             ("slo_attainment", Json::Num(self.slo_attainment)),
+            ("faults_injected", Json::Num(self.faults_injected as f64)),
+            ("step_retries", Json::Num(self.step_retries as f64)),
+            ("quarantined", Json::Num(self.quarantined as f64)),
+            ("checkpoints_written", Json::Num(self.checkpoints_written as f64)),
+            ("backend_resets", Json::Num(self.backend_resets as f64)),
             ("queue_depth", Json::Num(self.queue_depth.last().map(|(_, v)| v).unwrap_or(0.0))),
             ("queue_depth_max", Json::Num(self.queue_depth.max())),
             ("per_adapter", per_adapter),
@@ -294,8 +357,8 @@ pub enum TokenEvent {
     Token { index: usize, token: i32 },
     /// Terminal: the full output.
     Done { tokens: Vec<i32>, latency_s: f64 },
-    /// Terminal: the request failed.
-    Error(String),
+    /// Terminal: the request failed, with a typed wire code.
+    Error { code: ErrCode, msg: String },
 }
 
 /// A generation handed from a connection thread to the engine loop.
@@ -385,6 +448,9 @@ struct Inflight {
     per_model: HashMap<String, usize>,
 }
 
+/// Default per-socket read/write timeout ([`Frontend::set_conn_timeout_ms`]).
+pub const DEFAULT_CONN_TIMEOUT_MS: u64 = 60_000;
+
 /// Shared state between connection threads and the engine loop.
 pub struct Frontend {
     tx: Mutex<Sender<EngineMsg>>,
@@ -393,6 +459,7 @@ pub struct Frontend {
     inflight: Mutex<Inflight>,
     draining: AtomicBool,
     next_id: AtomicU64,
+    conn_timeout_ms: AtomicU64,
 }
 
 /// Admission token: releases its in-flight reservation exactly once, on
@@ -440,6 +507,7 @@ impl Frontend {
                 inflight: Mutex::new(Inflight::default()),
                 draining: AtomicBool::new(false),
                 next_id: AtomicU64::new(1),
+                conn_timeout_ms: AtomicU64::new(DEFAULT_CONN_TIMEOUT_MS),
             }),
             rx,
         )
@@ -487,6 +555,21 @@ impl Frontend {
 
     pub fn inflight(&self) -> usize {
         self.inflight.lock().map(|i| i.total).unwrap_or(0)
+    }
+
+    /// Per-socket read/write timeout applied to every connection in
+    /// [`handle_conn`]: a half-open client (gone without FIN, or one that
+    /// stops draining its socket) is reclaimed after this long instead of
+    /// pinning a connection thread forever. 0 disables the timeout.
+    pub fn set_conn_timeout_ms(&self, ms: u64) {
+        self.conn_timeout_ms.store(ms, Ordering::Relaxed);
+    }
+
+    pub fn conn_timeout(&self) -> Option<Duration> {
+        match self.conn_timeout_ms.load(Ordering::Relaxed) {
+            0 => None,
+            ms => Some(Duration::from_millis(ms)),
+        }
     }
 
     fn count_reject(&self, key: &str) {
@@ -705,6 +788,12 @@ struct Pending {
     emitted: usize,
 }
 
+/// Consecutive `Coordinator::step` failures tolerated before the engine
+/// loop gives up. Each failure already survived the coordinator's own
+/// retry/isolate supervision, so reaching this cap means the backend (or
+/// the ledger) is persistently broken, not transiently faulty.
+const MAX_CONSECUTIVE_STEP_FAILURES: u32 = 8;
+
 /// The serving engine loop: owns the coordinator, backend and directory.
 /// Runs until a `shutdown` op drains it or every frontend handle is gone.
 ///
@@ -712,6 +801,12 @@ struct Pending {
 /// step, route tokens/completions back, publish stats. Registry mutations
 /// happen strictly between steps — the control channel is what makes
 /// adapter hot-swap safe without locks on the launch path.
+///
+/// The step call is supervised (DESIGN.md §12): a step error does not kill
+/// the loop. The coordinator treats the failure as a backend reset — every
+/// in-flight stream is preempted (generated tokens fold back into the
+/// prompt and recompute, PR 4's recovery path) and the loop continues.
+/// Only [`MAX_CONSECUTIVE_STEP_FAILURES`] failures in a row propagate.
 pub fn engine_loop(
     coord: &mut Coordinator,
     backend: &mut dyn Backend,
@@ -723,6 +818,7 @@ pub fn engine_loop(
     let mut waiting: HashMap<u64, Pending> = HashMap::new();
     let mut draining = false;
     let mut drain_replies: Vec<Sender<()>> = Vec::new();
+    let mut consecutive_failures = 0u32;
 
     if let Ok(mut s) = frontend.stats.lock() {
         s.loaded_adapters = dir.list().len();
@@ -745,17 +841,49 @@ pub fn engine_loop(
             for r in drain_replies.drain(..) {
                 let _ = r.send(());
             }
-            publish_stats(coord, dir, frontend, t0);
+            publish_stats(coord, &*backend, dir, frontend, t0);
             return Ok(());
         }
 
-        // ---- One step.
+        // ---- One step (supervised: a failed step never kills the loop
+        // outright — the coordinator already retried and isolated, so an
+        // Err here is treated as a backend reset and recovered from).
         coord.advance_clock(t0.elapsed().as_secs_f64());
-        let out = coord.step(backend)?;
+        let out = match coord.step(backend) {
+            Ok(out) => {
+                consecutive_failures = 0;
+                out
+            }
+            Err(e) => {
+                consecutive_failures += 1;
+                eprintln!(
+                    "engine: step failed ({consecutive_failures} consecutive): {e:#}"
+                );
+                if consecutive_failures >= MAX_CONSECUTIVE_STEP_FAILURES {
+                    return Err(e.context("engine loop: persistent step failure"));
+                }
+                let recovered = coord.recover_backend_reset()?;
+                eprintln!(
+                    "engine: backend reset; {recovered} stream(s) preempted for recompute"
+                );
+                continue;
+            }
+        };
 
         for id in &out.dropped_requests {
             if let Some(p) = waiting.remove(id) {
-                let _ = p.events.send(TokenEvent::Error("timed out in queue".to_string()));
+                let _ = p.events.send(TokenEvent::Error {
+                    code: ErrCode::Overloaded,
+                    msg: "timed out in queue".to_string(),
+                });
+            }
+        }
+        for id in &out.quarantined_requests {
+            if let Some(p) = waiting.remove(id) {
+                let _ = p.events.send(TokenEvent::Error {
+                    code: ErrCode::Quarantined,
+                    msg: "request quarantined after repeated step failures".to_string(),
+                });
             }
         }
         // Per-step stat deltas, folded into the shared map under ONE lock
@@ -802,7 +930,7 @@ pub fn engine_loop(
             }
         }
 
-        publish_stats(coord, dir, frontend, t0);
+        publish_stats(coord, &*backend, dir, frontend, t0);
 
         // ---- Idle: block briefly on the channel instead of spinning.
         if out.idle {
@@ -834,30 +962,40 @@ fn handle_msg(
     match msg {
         EngineMsg::Generate(job) => {
             if *draining {
-                let _ = job.events.send(TokenEvent::Error("draining".to_string()));
+                let _ = job.events.send(TokenEvent::Error {
+                    code: ErrCode::Overloaded,
+                    msg: "draining".to_string(),
+                });
                 return;
             }
             let key = job.model.clone().unwrap_or_default();
             let Some(adapter) = dir.resolve(job.model.as_deref()) else {
                 frontend.count_reject(&key);
-                let _ = job
-                    .events
-                    .send(TokenEvent::Error(format!("unknown model '{key}'")));
+                let _ = job.events.send(TokenEvent::Error {
+                    code: ErrCode::BadRequest,
+                    msg: format!("unknown model '{key}'"),
+                });
                 return;
             };
             if job.prompt.is_empty() {
                 frontend.count_reject(&key);
-                let _ = job.events.send(TokenEvent::Error("empty prompt".to_string()));
+                let _ = job.events.send(TokenEvent::Error {
+                    code: ErrCode::BadRequest,
+                    msg: "empty prompt".to_string(),
+                });
                 return;
             }
             // A request whose worst-case reservation can never fit would
             // head-of-line-block the queue forever — reject it up front.
             if !coord.request_fits(job.prompt.len(), job.max_new_tokens) {
                 frontend.count_reject(&key);
-                let _ = job.events.send(TokenEvent::Error(format!(
-                    "request exceeds capacity (max_new_tokens {} too large for this deployment)",
-                    job.max_new_tokens
-                )));
+                let _ = job.events.send(TokenEvent::Error {
+                    code: ErrCode::BadRequest,
+                    msg: format!(
+                        "request exceeds capacity (max_new_tokens {} too large for this deployment)",
+                        job.max_new_tokens
+                    ),
+                });
                 return;
             }
             let now = t0.elapsed().as_secs_f64();
@@ -922,6 +1060,7 @@ fn handle_msg(
 
 fn publish_stats(
     coord: &Coordinator,
+    backend: &dyn Backend,
     dir: &dyn AdapterDirectory,
     frontend: &Arc<Frontend>,
     t0: Instant,
@@ -942,6 +1081,11 @@ fn publish_stats(
         s.adapter_swaps = coord.adapter_swaps();
         s.adapter_resident = coord.adapter_resident();
         s.adapter_host = coord.adapter_host();
+        s.faults_injected = backend.faults_injected();
+        s.step_retries = coord.step_retries_total();
+        s.quarantined = coord.quarantined_total();
+        s.checkpoints_written = coord.checkpoints_written();
+        s.backend_resets = coord.backend_resets();
         // Live SLO view (DESIGN.md §9): attainment plus per-adapter
         // TTFT/TPOT quantiles, resolved from bank slots back to model
         // names (slot -1 = the base model = the "" key).
@@ -968,14 +1112,36 @@ fn publish_stats(
 // Connection handling
 // --------------------------------------------------------------------------
 
-fn err_frame(id: Option<u64>, code: u64, msg: &str) -> String {
+fn err_frame(id: Option<u64>, code: ErrCode, msg: &str) -> String {
+    err_frame_with(id, code, msg, None)
+}
+
+/// Error frame: `{"id":..,"error":msg,"err":name,"code":n[,"retry_after_ms":..]}`.
+/// The numeric `code` key predates `err` and stays for older clients.
+fn err_frame_with(
+    id: Option<u64>,
+    code: ErrCode,
+    msg: &str,
+    retry_after_ms: Option<u64>,
+) -> String {
     let mut kvs = Vec::new();
     if let Some(id) = id {
         kvs.push(("id", Json::Num(id as f64)));
     }
     kvs.push(("error", Json::Str(msg.to_string())));
-    kvs.push(("code", Json::Num(code as f64)));
+    kvs.push(("err", Json::Str(code.name().to_string())));
+    kvs.push(("code", Json::Num(code.code() as f64)));
+    if let Some(ms) = retry_after_ms {
+        kvs.push(("retry_after_ms", Json::Num(ms as f64)));
+    }
     Json::obj(kvs).to_string()
+}
+
+/// Deterministic backoff hint on 503 admission rejects: scales with the
+/// instantaneous in-flight count and caps at 5s, so a synchronized retry
+/// herd staggers itself by observed queue depth without any randomness.
+fn retry_after_ms(inflight: usize) -> u64 {
+    (100 * (1 + inflight as u64)).min(5_000)
 }
 
 fn write_line(w: &mut TcpStream, line: &str) -> bool {
@@ -989,6 +1155,11 @@ fn handle_conn(
     encode: Arc<dyn Fn(&str) -> Vec<i32> + Send + Sync>,
     decode: Arc<dyn Fn(&[i32]) -> String + Send + Sync>,
 ) {
+    // Half-open clients (dead without FIN, or never draining their socket)
+    // must not pin this thread forever: both directions time out, and the
+    // resulting read/write error closes the connection server-side.
+    let _ = stream.set_read_timeout(fe.conn_timeout());
+    let _ = stream.set_write_timeout(fe.conn_timeout());
     let reader = BufReader::new(match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
@@ -1002,7 +1173,8 @@ fn handle_conn(
         let msg = match ClientMsg::parse(&line) {
             Ok(m) => m,
             Err(e) => {
-                if !write_line(&mut writer, &err_frame(None, 400, &format!("bad request: {e}"))) {
+                let frame = err_frame(None, ErrCode::BadRequest, &format!("bad request: {e}"));
+                if !write_line(&mut writer, &frame) {
                     break;
                 }
                 continue;
@@ -1024,7 +1196,7 @@ fn handle_conn(
                 // deep-cloning the gauge series per poll.
                 let frame = match fe.stats.lock() {
                     Ok(s) => s.to_json().to_string(),
-                    Err(_) => err_frame(None, 500, "stats unavailable"),
+                    Err(_) => err_frame(None, ErrCode::Internal, "stats unavailable"),
                 };
                 write_line(&mut writer, &frame)
             }
@@ -1032,7 +1204,7 @@ fn handle_conn(
                 let (tx, rx) = channel();
                 fe.set_draining();
                 if fe.send(EngineMsg::Shutdown { reply: tx }).is_err() {
-                    write_line(&mut writer, &err_frame(None, 500, "engine loop gone"))
+                    write_line(&mut writer, &err_frame(None, ErrCode::Internal, "engine loop gone"))
                 } else {
                     // Block until the engine has drained in-flight work. A
                     // dropped reply means the engine died WITHOUT draining —
@@ -1043,7 +1215,7 @@ fn handle_conn(
                             ("drained", Json::Bool(true)),
                         ])
                         .to_string(),
-                        Err(_) => err_frame(None, 500, "engine exited without draining"),
+                        Err(_) => err_frame(None, ErrCode::Internal, "engine exited without draining"),
                     };
                     write_line(&mut writer, &frame)
                 }
@@ -1074,7 +1246,13 @@ fn handle_generate(
         Ok(g) => g,
         Err(reason) => {
             fe.count_reject(&key);
-            return write_line(writer, &err_frame(None, 503, &reason));
+            // 503 rejects tell the client when to come back: a hint that
+            // scales with the load that caused the reject.
+            let hint = retry_after_ms(fe.inflight());
+            return write_line(
+                writer,
+                &err_frame_with(None, ErrCode::Overloaded, &reason, Some(hint)),
+            );
         }
     };
     let id = fe.next_id();
@@ -1088,7 +1266,7 @@ fn handle_generate(
         events: events_tx,
     };
     if fe.send(EngineMsg::Generate(job)).is_err() {
-        return write_line(writer, &err_frame(Some(id), 500, "engine loop gone"));
+        return write_line(writer, &err_frame(Some(id), ErrCode::Internal, "engine loop gone"));
     }
     loop {
         match events_rx.recv() {
@@ -1120,12 +1298,14 @@ fn handle_generate(
                 kvs.push(("latency_s", Json::Num(latency_s)));
                 return write_line(writer, &Json::obj(kvs).to_string());
             }
-            Ok(TokenEvent::Error(e)) => {
-                let code = if e == "draining" || e == "timed out in queue" { 503 } else { 400 };
-                return write_line(writer, &err_frame(Some(id), code, &e));
+            Ok(TokenEvent::Error { code, msg }) => {
+                return write_line(writer, &err_frame(Some(id), code, &msg));
             }
             Err(_) => {
-                return write_line(writer, &err_frame(Some(id), 500, "engine dropped request"));
+                return write_line(
+                    writer,
+                    &err_frame(Some(id), ErrCode::Internal, "engine dropped request"),
+                );
             }
         }
     }
@@ -1134,7 +1314,7 @@ fn handle_generate(
 fn handle_control(writer: &mut TcpStream, fe: &Arc<Frontend>, op: ControlOp) -> bool {
     let (tx, rx) = channel();
     if fe.send(EngineMsg::Control(ControlMsg { op, reply: tx })).is_err() {
-        return write_line(writer, &err_frame(None, 500, "engine loop gone"));
+        return write_line(writer, &err_frame(None, ErrCode::Internal, "engine loop gone"));
     }
     let frame = match rx.recv() {
         Ok(ControlReply::Loaded { name, slot }) => Json::obj(vec![
@@ -1154,8 +1334,8 @@ fn handle_control(writer: &mut TcpStream, fe: &Arc<Frontend>, op: ControlOp) -> 
             Json::Arr(list.iter().map(|a| a.to_json()).collect()),
         )])
         .to_string(),
-        Ok(ControlReply::Err(e)) => err_frame(None, 409, &e),
-        Err(_) => err_frame(None, 500, "engine dropped control op"),
+        Ok(ControlReply::Err(e)) => err_frame(None, ErrCode::Conflict, &e),
+        Err(_) => err_frame(None, ErrCode::Internal, "engine dropped control op"),
     };
     write_line(writer, &frame)
 }
@@ -1318,6 +1498,11 @@ mod tests {
             adapter_resident: 4,
             adapter_host: 17,
             slo_attainment: 0.75,
+            faults_injected: 23,
+            step_retries: 5,
+            quarantined: 1,
+            checkpoints_written: 2,
+            backend_resets: 1,
             ..Default::default()
         };
         s.per_adapter.insert(
@@ -1354,6 +1539,14 @@ mod tests {
             "unified-paging counters serialize: {j}"
         );
         assert!(j.contains("\"slo_attainment\":0.75"), "{j}");
+        assert!(
+            j.contains("\"faults_injected\":23")
+                && j.contains("\"step_retries\":5")
+                && j.contains("\"quarantined\":1")
+                && j.contains("\"checkpoints_written\":2")
+                && j.contains("\"backend_resets\":1"),
+            "fault-supervision counters serialize: {j}"
+        );
         assert!(j.contains("\"vm0\":{\"submitted\":9"), "{j}");
         assert!(
             j.contains("\"ttft_p50_s\":0.5") && j.contains("\"tpot_p99_s\":0.25"),
@@ -1363,6 +1556,50 @@ mod tests {
         assert!(j.contains("\"queue_depth\":3"), "{j}");
         // And it parses back as JSON.
         assert!(json::parse(&j).is_ok());
+    }
+
+    #[test]
+    fn err_frames_carry_typed_codes() {
+        let f = err_frame(Some(7), ErrCode::Quarantined, "boom");
+        let v = json::parse(&f).unwrap();
+        assert_eq!(v.req("id").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(v.req("error").unwrap().as_str().unwrap(), "boom");
+        assert_eq!(v.req("err").unwrap().as_str().unwrap(), "quarantined");
+        assert_eq!(v.req("code").unwrap().as_usize().unwrap(), 422);
+        // The name↔code table is total and bijective.
+        for c in [
+            ErrCode::BadRequest,
+            ErrCode::Conflict,
+            ErrCode::Quarantined,
+            ErrCode::Internal,
+            ErrCode::Overloaded,
+        ] {
+            assert!(!c.name().is_empty());
+            assert!(c.code() >= 400 && c.code() < 600);
+        }
+    }
+
+    #[test]
+    fn reject_frame_carries_retry_after_hint() {
+        let f = err_frame_with(None, ErrCode::Overloaded, "overloaded", Some(retry_after_ms(3)));
+        let v = json::parse(&f).unwrap();
+        assert_eq!(v.req("code").unwrap().as_usize().unwrap(), 503);
+        assert_eq!(v.req("err").unwrap().as_str().unwrap(), "overloaded");
+        assert_eq!(v.req("retry_after_ms").unwrap().as_usize().unwrap(), 400);
+        assert!(v.get("id").is_none());
+        // The hint is deterministic in load and capped.
+        assert_eq!(retry_after_ms(0), 100);
+        assert_eq!(retry_after_ms(1_000_000), 5_000);
+    }
+
+    #[test]
+    fn conn_timeout_is_configurable_and_defaults_on() {
+        let (fe, _rx) = Frontend::new(AdmissionConfig::default());
+        assert_eq!(fe.conn_timeout(), Some(Duration::from_millis(DEFAULT_CONN_TIMEOUT_MS)));
+        fe.set_conn_timeout_ms(250);
+        assert_eq!(fe.conn_timeout(), Some(Duration::from_millis(250)));
+        fe.set_conn_timeout_ms(0);
+        assert_eq!(fe.conn_timeout(), None, "0 disables the timeout");
     }
 
     #[test]

@@ -1,0 +1,396 @@
+//! Seeded chaos suite (DESIGN.md §12): drives the REAL coordinator over a
+//! fault-injecting backend and checks the paper-level robustness contract:
+//!
+//! * the supervised step loop never dies — transient errors, injected
+//!   panics and latency spikes are retried/absorbed, a poisoned request is
+//!   isolated and quarantined while every other stream keeps running;
+//! * streams untouched by faults are BITWISE identical to a fault-free
+//!   run (batch-composition invariance of the native kernels makes the
+//!   retry/isolate path invisible in the numbers);
+//! * the KV block ledger audits clean after every recovery;
+//! * a trainer restored from a durable crash-safe checkpoint continues
+//!   its loss sequence bit-identically;
+//! * the JSON-lines engine loop survives a probabilistic fault storm and
+//!   surfaces the supervision counters in the stats frame.
+//!
+//! CI greps the `CHAOS_STATS` / `CHAOS_CKPT` / `CHAOS_FRAME` lines printed
+//! here and jq-gates the counters (see .github/workflows/ci.yml).
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+use loquetier::coordinator::{
+    Coordinator, CoordinatorConfig, FinetuneJob, InferenceRequest, TrainExample,
+};
+use loquetier::engine::{Backend, CostModel, FaultKind, FaultPlan, FaultyBackend};
+use loquetier::harness::{sim_backend, sim_cache_config, HarnessBuilder};
+use loquetier::kvcache::CacheConfig;
+use loquetier::model::AdapterCheckpoint;
+use loquetier::server::{
+    engine_loop, AdmissionConfig, EngineMsg, ErrCode, Frontend, GenerateJob, StaticDirectory,
+    TokenEvent,
+};
+
+/// Content-keyed poison marker: never a real token (generated tokens are
+/// argmax indices >= 0), so it can only appear where a test plants it —
+/// and the injector faults it BEFORE the kernels would ever index with it.
+const POISON: i32 = -13;
+
+fn native_cache() -> CacheConfig {
+    // Native-stack geometry (2 layers, token_elems 16); generous block
+    // pool so preemption never perturbs the parity comparison.
+    CacheConfig {
+        num_slots: 8,
+        slot_capacity: 160,
+        block_tokens: 16,
+        total_blocks: 64,
+        num_layers: 2,
+        token_elems: 16,
+    }
+}
+
+fn chaos_cfg() -> CoordinatorConfig {
+    CoordinatorConfig { max_prompt_tokens: 16, drop_after_s: 1e9, ..Default::default() }
+}
+
+fn train_job() -> FinetuneJob {
+    let ex = |i: usize| TrainExample {
+        tokens: (0..12).map(|k| ((i * 13 + k * 5 + 1) % 509) as i32).collect(),
+        labels: (0..12).map(|k| ((i * 13 + k * 5 + 1) % 509) as i32).collect(),
+    };
+    FinetuneJob {
+        id: 100,
+        // Slot 3 is training-only in this workload: inference uses -1..2,
+        // so quarantine-induced scheduling shifts cannot couple into the
+        // served outputs through adapter state.
+        adapter: 3,
+        train_set: (0..6).map(ex).collect(),
+        eval_set: vec![],
+        epochs: 1,
+        per_device_batch: 1,
+        grad_accum: 2,
+        lr: 1e-3,
+        eval_each_epoch: false,
+    }
+}
+
+/// Submit the mixed ft∥pf∥dec workload and drive it to quiescence,
+/// auditing the ledger after every step. Returns (coordinator, completed
+/// outputs by id, quarantined ids).
+fn drive<B: Backend>(
+    be: &mut B,
+    include_poison: bool,
+) -> (Coordinator, BTreeMap<u64, Vec<i32>>, Vec<u64>) {
+    let mut c = Coordinator::new(chaos_cfg(), native_cache());
+    for i in 0..7u64 {
+        c.submit(InferenceRequest {
+            id: i,
+            adapter: (i as i32 % 4) - 1, // base (-1) and slots 0..2
+            prompt: (0..8).map(|k| ((i as i32) * 31 + k * 7 + 3) % 509).collect(),
+            max_new_tokens: 40,
+            eos_token: None,
+            arrival_s: 0.0,
+            slo: None,
+        });
+    }
+    if include_poison {
+        c.submit(InferenceRequest {
+            id: 99,
+            adapter: 0,
+            prompt: vec![7, POISON, 11],
+            max_new_tokens: 8,
+            eos_token: None,
+            arrival_s: 0.0,
+            slo: None,
+        });
+    }
+    c.add_trainer(train_job());
+
+    let mut outputs: BTreeMap<u64, Vec<i32>> = BTreeMap::new();
+    let mut quarantined: Vec<u64> = Vec::new();
+    let mut steps = 0;
+    while !c.quiescent() && steps < 20_000 {
+        // Zero engine-loop deaths: every supervised step returns Ok even
+        // while faults are firing underneath it.
+        let out = c.step(&mut *be).expect("supervised step must absorb injected faults");
+        c.kv.audit_ledger().expect("ledger audits clean after every recovery");
+        for (id, toks) in out.completed_outputs {
+            outputs.insert(id, toks);
+        }
+        quarantined.extend(out.quarantined_requests);
+        if out.idle {
+            break;
+        }
+        steps += 1;
+    }
+    assert!(c.quiescent(), "chaos workload drained (steps={steps})");
+    (c, outputs, quarantined)
+}
+
+/// Tentpole acceptance: >= 20 scheduled faults (transient errors, panics,
+/// latency spikes) plus a content-poisoned request, against the REAL
+/// native numerics. Unaffected streams and the trainer's loss sequence
+/// must be bitwise identical to the fault-free run; the poisoned request
+/// is quarantined, everything else completes.
+#[test]
+fn seeded_chaos_run_is_bitwise_transparent_for_unaffected_streams() {
+    // Fault-free reference.
+    let (mut be_ref, _reg, _m) = HarnessBuilder::new().seed(42).native_stack().unwrap();
+    let (ref_c, ref_out, ref_q) = drive(&mut be_ref, false);
+    assert!(ref_q.is_empty());
+    assert_eq!(ref_out.len(), 7);
+    assert_eq!(ref_c.step_retries_total(), 0);
+    let ref_losses = ref_c.trainers()[0].losses.clone();
+    assert_eq!(ref_losses.len(), 6, "one loss per train sequence");
+
+    // Chaos run: identical model + workload, plus a scripted fault plan.
+    // Failing faults sit >= 2 launches apart so each retry (launch k+1)
+    // lands clean and no healthy launch ever exhausts its retry budget;
+    // spikes don't fail at all. The run has >= ~55 launches (40 decode
+    // steps + prefill + 6 train + 3 optim + the retries themselves), so
+    // every scheduled index below fires.
+    let (inner, _reg2, _m2) = HarnessBuilder::new().seed(42).native_stack().unwrap();
+    let mut plan = FaultPlan::new(0xC0FFEE).poison_token(POISON);
+    for k in [2u64, 6, 10, 14, 18, 22, 26, 30, 34, 38] {
+        plan = plan.at(k, FaultKind::TransientError);
+    }
+    for k in [4u64, 12, 20, 28, 36] {
+        plan = plan.at(k, FaultKind::Panic);
+    }
+    for k in [8u64, 16, 24, 32, 40] {
+        plan = plan.at(k, FaultKind::LatencySpike);
+    }
+    assert_eq!(plan.scheduled_len(), 20);
+    let mut fb = FaultyBackend::new(inner, plan);
+    let (chaos_c, chaos_out, chaos_q) = drive(&mut fb, true);
+
+    // >= 20 injected faults (20 scheduled + the poison hits during the
+    // whole-class launch and the per-row isolation replay).
+    assert!(fb.faults_injected() >= 20, "only {} faults fired", fb.faults_injected());
+    assert!(chaos_c.step_retries_total() >= 5, "retries: {}", chaos_c.step_retries_total());
+
+    // The poisoned request — and only it — is quarantined.
+    assert_eq!(chaos_q, [99]);
+    assert_eq!(chaos_c.quarantined_total(), 1);
+    assert_eq!(chaos_c.traces.iter().filter(|t| t.failed).count(), 1);
+
+    // Every stream the faults did not kill is bitwise equal to the
+    // fault-free run, token for token.
+    assert_eq!(chaos_out.len(), 7, "all healthy requests completed");
+    for (id, toks) in &ref_out {
+        assert_eq!(chaos_out.get(id), Some(toks), "request {id} output parity");
+    }
+    // And so is the trainer's loss sequence.
+    assert_eq!(chaos_c.trainers()[0].losses, ref_losses, "training loss parity");
+
+    println!(
+        "CHAOS_STATS {{\"faults_injected\":{},\"step_retries\":{},\"quarantined\":{},\"parity_ok\":true}}",
+        fb.faults_injected(),
+        chaos_c.step_retries_total(),
+        chaos_c.quarantined_total()
+    );
+}
+
+/// Crash-restart: run a trainer with auto-checkpointing, kill it after the
+/// first durable checkpoint, restore into a FRESH stack, and require the
+/// continued loss sequence to equal the uninterrupted run bit-for-bit
+/// (Adam moments + bias-correction counter + dataset cursor all survive).
+#[test]
+fn checkpoint_crash_restart_resumes_losses_bit_identically() {
+    let dir = std::env::temp_dir().join("loq-chaos-ckpt");
+    let _ = std::fs::remove_dir_all(&dir);
+    let train_len = train_job().train_set.len();
+
+    let two_epochs = || FinetuneJob { epochs: 2, ..train_job() };
+
+    // Reference: uninterrupted two-epoch run.
+    let (mut be1, _r1, _m1) = HarnessBuilder::new().seed(7).native_stack().unwrap();
+    let mut c1 = Coordinator::new(chaos_cfg(), native_cache());
+    c1.add_trainer(two_epochs());
+    let mut steps = 0;
+    while !c1.quiescent() && steps < 10_000 {
+        c1.step(&mut be1).unwrap();
+        steps += 1;
+    }
+    let reference = c1.trainers()[0].losses.clone();
+    assert_eq!(reference.len(), 2 * train_len);
+
+    // Crash run: checkpoint every 2 optimizer steps; stop dead right
+    // after the first checkpoint lands (everything in memory is lost).
+    let (mut be2, _r2, _m2) = HarnessBuilder::new().seed(7).native_stack().unwrap();
+    let mut c2 = Coordinator::new(
+        CoordinatorConfig {
+            checkpoint_every: 2,
+            checkpoint_dir: Some(dir.clone()),
+            ..chaos_cfg()
+        },
+        native_cache(),
+    );
+    c2.add_trainer(two_epochs());
+    let mut steps = 0;
+    while c2.checkpoints_written() == 0 && steps < 10_000 {
+        c2.step(&mut be2).unwrap();
+        steps += 1;
+    }
+    let written = c2.checkpoints_written();
+    assert!(written >= 1, "auto-checkpoint fired");
+    drop(c2);
+    drop(be2);
+
+    // Restart: fresh backend (same init seed), restore the durable
+    // checkpoint, finish the job.
+    let path = dir.join("adapter3.ckpt");
+    let ckpt = AdapterCheckpoint::load(&path).unwrap();
+    assert_eq!(ckpt.slot, 3);
+    let offset = ckpt.epoch * train_len + ckpt.cursor;
+    assert!(offset > 0 && offset < reference.len(), "checkpoint mid-run (offset {offset})");
+    let (mut be3, _r3, _m3) = HarnessBuilder::new().seed(7).native_stack().unwrap();
+    let mut c3 = Coordinator::new(chaos_cfg(), native_cache());
+    c3.resume_trainer(two_epochs(), &ckpt, &mut be3).unwrap();
+    let mut steps = 0;
+    while !c3.quiescent() && steps < 10_000 {
+        c3.step(&mut be3).unwrap();
+        steps += 1;
+    }
+    let resumed = c3.trainers()[0].losses.clone();
+    assert_eq!(
+        resumed.as_slice(),
+        &reference[offset..],
+        "restored trainer continues the loss sequence bit-identically"
+    );
+
+    // Torn/corrupted checkpoints are rejected by the checksum — the
+    // optimizer never loads garbage.
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x20;
+    std::fs::write(&path, &bytes).unwrap();
+    let err = AdapterCheckpoint::load(&path).unwrap_err();
+    assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+
+    println!("CHAOS_CKPT {{\"checkpoints_written\":{written},\"loss_parity\":true}}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The serving engine loop under a probabilistic fault storm: healthy
+/// generations all complete, the poisoned one comes back as a typed 422
+/// quarantine frame, the loop stays alive, and the supervision counters
+/// surface through the shared stats the wire frame serializes.
+#[test]
+fn engine_loop_survives_fault_storm_and_quarantines_poison() {
+    let (frontend, rx) = Frontend::new(AdmissionConfig::default());
+    let fe = frontend.clone();
+    let engine = std::thread::spawn(move || {
+        let mut coord = Coordinator::new(
+            CoordinatorConfig {
+                max_prompt_tokens: 32,
+                drop_after_s: 1e9,
+                // Probabilistic faults can cluster; a deeper retry budget
+                // makes a healthy launch exhausting it (p^7) negligible.
+                max_step_retries: 6,
+                ..Default::default()
+            },
+            sim_cache_config(),
+        );
+        let plan = FaultPlan::new(99)
+            .error_rate(0.10)
+            .panic_rate(0.05)
+            .latency_rate(0.05)
+            .poison_token(POISON);
+        let mut be = FaultyBackend::new(sim_backend(CostModel::default()), plan);
+        let mut dir = StaticDirectory::new(4, 8);
+        let res = engine_loop(&mut coord, &mut be, &mut dir, &rx, &fe);
+        assert!(res.is_ok(), "engine loop died under the storm: {res:?}");
+    });
+
+    // 12 healthy generations + 1 poisoned, at the EngineMsg layer.
+    let mut healthy = Vec::new();
+    for i in 0..12u64 {
+        let (tx, erx) = channel();
+        frontend
+            .send(EngineMsg::Generate(GenerateJob {
+                id: i + 1,
+                model: None,
+                prompt: vec![1 + i as i32, 2, 3],
+                max_new_tokens: 8,
+                slo: Default::default(),
+                events: tx,
+            }))
+            .unwrap();
+        healthy.push((i + 1, erx));
+    }
+    let (ptx, prx) = channel();
+    frontend
+        .send(EngineMsg::Generate(GenerateJob {
+            id: 1000,
+            model: None,
+            prompt: vec![5, POISON, 9],
+            max_new_tokens: 4,
+            slo: Default::default(),
+            events: ptx,
+        }))
+        .unwrap();
+
+    for (id, erx) in healthy {
+        loop {
+            match erx.recv_timeout(Duration::from_secs(60)).unwrap() {
+                TokenEvent::Token { .. } => {}
+                TokenEvent::Done { tokens, .. } => {
+                    assert_eq!(tokens.len(), 8, "request {id}");
+                    break;
+                }
+                TokenEvent::Error { code, msg } => {
+                    panic!("healthy request {id} failed: {code:?} {msg}")
+                }
+            }
+        }
+    }
+    loop {
+        match prx.recv_timeout(Duration::from_secs(60)).unwrap() {
+            TokenEvent::Error { code, msg } => {
+                assert_eq!(code, ErrCode::Quarantined, "{msg}");
+                assert_eq!(code.code(), 422);
+                break;
+            }
+            TokenEvent::Done { .. } => panic!("poisoned request completed"),
+            TokenEvent::Token { .. } => {}
+        }
+    }
+
+    // Still alive and serving after the storm.
+    let (tx, erx) = channel();
+    frontend
+        .send(EngineMsg::Generate(GenerateJob {
+            id: 2000,
+            model: None,
+            prompt: vec![4, 4],
+            max_new_tokens: 2,
+            slo: Default::default(),
+            events: tx,
+        }))
+        .unwrap();
+    loop {
+        match erx.recv_timeout(Duration::from_secs(60)).unwrap() {
+            TokenEvent::Done { tokens, .. } => {
+                assert_eq!(tokens.len(), 2);
+                break;
+            }
+            TokenEvent::Error { code, msg } => panic!("post-storm request failed: {code:?} {msg}"),
+            TokenEvent::Token { .. } => {}
+        }
+    }
+
+    // Graceful drain, then read the counters the stats frame serializes.
+    let (dtx, drx) = channel();
+    frontend.send(EngineMsg::Shutdown { reply: dtx }).unwrap();
+    drx.recv_timeout(Duration::from_secs(60)).unwrap();
+    engine.join().unwrap();
+    let s = frontend.stats.lock().unwrap();
+    assert!(s.faults_injected >= 1, "storm injected nothing");
+    assert_eq!(s.quarantined, 1);
+    println!(
+        "CHAOS_FRAME {{\"faults_injected\":{},\"step_retries\":{},\"quarantined\":{},\"checkpoints_written\":{},\"backend_resets\":{}}}",
+        s.faults_injected, s.step_retries, s.quarantined, s.checkpoints_written, s.backend_resets
+    );
+}

@@ -128,6 +128,8 @@ fn adapter_lifecycle_with_streamed_generation() {
         r#"{"op":"generate","prompt":"abc","model":"tenant0","max_new_tokens":4}"#,
     );
     assert!(r.get("error").unwrap().as_str().unwrap().contains("unknown model"), "{r:?}");
+    assert_eq!(r.get("err").unwrap().as_str().unwrap(), "bad_request", "{r:?}");
+    assert_eq!(r.get("code").unwrap().as_usize().unwrap(), 400);
 
     // Hot-load over the wire.
     let r = roundtrip(&mut stream, &mut reader, r#"{"op":"load_adapter","name":"tenant0"}"#);
@@ -348,6 +350,10 @@ fn backpressure_rejects_with_503_and_recovers() {
     );
     assert_eq!(rej.get("code").unwrap().as_usize().unwrap(), 503, "{rej:?}");
     assert!(rej.get("error").unwrap().as_str().unwrap().contains("fair-share"));
+    // 503 rejects carry the typed name and a bounded retry hint.
+    assert_eq!(rej.get("err").unwrap().as_str().unwrap(), "overloaded", "{rej:?}");
+    let hint = rej.get("retry_after_ms").unwrap().as_usize().unwrap();
+    assert!((100..=5_000).contains(&hint), "{rej:?}");
 
     // A different tenant still fits under the global bound...
     send_line(&mut s2, r#"{"op":"generate","prompt":"y","model":"b","max_new_tokens":1}"#);
@@ -368,6 +374,7 @@ fn backpressure_rejects_with_503_and_recovers() {
     );
     assert_eq!(rej.get("code").unwrap().as_usize().unwrap(), 503);
     assert_eq!(rej.get("error").unwrap().as_str().unwrap(), "overloaded");
+    assert!(rej.get("retry_after_ms").is_some(), "{rej:?}");
 
     // Rejections are visible in stats.
     let (mut s4, mut r4) = connect(addr);
@@ -455,7 +462,7 @@ fn unload_refused_while_adapter_busy() {
                 assert_eq!(full.len(), 80);
                 break;
             }
-            TokenEvent::Error(e) => panic!("unexpected error: {e}"),
+            TokenEvent::Error { msg, .. } => panic!("unexpected error: {msg}"),
         }
     }
 
@@ -513,4 +520,30 @@ fn graceful_shutdown_drains_then_rejects() {
     );
     assert_eq!(rej.get("code").unwrap().as_usize().unwrap(), 503, "{rej:?}");
     assert_eq!(rej.get("error").unwrap().as_str().unwrap(), "draining");
+    assert_eq!(rej.get("err").unwrap().as_str().unwrap(), "overloaded");
+    assert!(rej.get("retry_after_ms").is_some(), "{rej:?}");
+}
+
+/// A half-open client (connected, then silent without FIN) must not pin a
+/// connection thread forever: the per-socket read timeout fires and the
+/// server closes its side, which the client observes as EOF. A responsive
+/// client on the same deployment is unaffected.
+#[test]
+fn half_open_client_is_reclaimed_by_read_timeout() {
+    let (addr, fe) = start_server(AdmissionConfig::default());
+    fe.set_conn_timeout_ms(150);
+
+    // Responsive client: normal roundtrip under the (short) timeout.
+    let (mut s1, mut r1) = connect(addr);
+    let req = r#"{"op":"generate","prompt":"ab","max_new_tokens":2}"#;
+    let r = roundtrip(&mut s1, &mut r1, req);
+    assert!(r.get("error").is_none(), "{r:?}");
+
+    // Half-open client: sends half a line, then goes silent. The server's
+    // read blocks on the missing newline until the timeout reclaims it.
+    let (mut s2, mut r2) = connect(addr);
+    s2.write_all(b"{\"op\":\"stats\"").unwrap();
+    let mut line = String::new();
+    let n = r2.read_line(&mut line).unwrap();
+    assert_eq!(n, 0, "server closed the half-open connection, got {line:?}");
 }
