@@ -3,7 +3,7 @@
 
 ARTIFACTS ?= artifacts
 
-.PHONY: all build test artifacts figures bench clean
+.PHONY: all build test lint artifacts figures bench clean
 
 all: build
 
@@ -13,6 +13,11 @@ build:
 # Tier-1 verify: build + the full Rust test suite (no artifacts needed).
 test: build
 	cargo test -q
+
+# Project-invariant static analysis (DESIGN.md §13): determinism,
+# supervision, and unsafe-audit contracts, enforced over rust/src.
+lint:
+	cargo run -p loquetier-lint --release -- rust/src
 
 # AOT-lower the model at every bucket shape (L1/L2 -> L3 contract).
 # Requires Python with JAX; see DESIGN.md §2.

@@ -224,7 +224,11 @@ impl AdapterPager {
         let Some(pos) = self.lru.iter().position(|a| !self.pinned.contains(a)) else {
             return false;
         };
-        let victim = self.lru.remove(pos).expect("position is in range");
+        let Some(victim) = self.lru.remove(pos) else {
+            // `pos` came from a scan of the same deque, so this cannot
+            // miss; answering "nothing evictable" keeps the loop alive.
+            return false;
+        };
         let _ = kv.release_adapter_blocks(victim);
         self.swaps_out += 1;
         true
@@ -241,8 +245,11 @@ impl AdapterPager {
             return Some(0);
         }
         if self.is_resident(adapter) {
-            let pos = self.lru.iter().position(|&a| a == adapter).expect("is_resident");
-            self.lru.remove(pos);
+            // Touch: move to the back. is_resident guarantees the scan
+            // hits; tolerate a miss rather than panicking the step.
+            if let Some(pos) = self.lru.iter().position(|&a| a == adapter) {
+                self.lru.remove(pos);
+            }
             self.lru.push_back(adapter);
             return Some(0);
         }
@@ -716,7 +723,7 @@ impl Coordinator {
     /// false if the id is unknown (already finished).
     pub fn cancel(&mut self, id: u64) -> Result<bool> {
         if let Some(pos) = self.queue.iter().position(|r| r.id == id) {
-            let r = self.queue.remove(pos).expect("position is in range");
+            let Some(r) = self.queue.remove(pos) else { return Ok(false) };
             let slo = self.effective_slo(r.slo);
             self.finish_trace(
                 RequestTrace {
@@ -731,7 +738,7 @@ impl Coordinator {
         }
         if let Some(pos) = self.preempted.iter().position(|a| a.req.id == id) {
             // Preempted requests hold no KV slot (released at preemption).
-            let a = self.preempted.remove(pos).expect("position is in range");
+            let Some(a) = self.preempted.remove(pos) else { return Ok(false) };
             let slo = self.effective_slo(a.req.slo);
             let mut t = a.trace;
             t.failed = true;
@@ -924,7 +931,7 @@ impl Coordinator {
                 // request can NEVER be served here. Fail it now — the
                 // fixed-slot baseline's honest cost, and exactly what the
                 // paged configuration avoids by swapping the adapter in.
-                let r = self.queue.remove(pos).expect("position is in range");
+                let Some(r) = self.queue.remove(pos) else { continue };
                 let slo = self.effective_slo(r.slo);
                 rejected.push(r.id);
                 self.finish_trace(
@@ -938,7 +945,7 @@ impl Coordinator {
                 );
                 continue;
             }
-            let mut req = self.queue.remove(pos).expect("position is in range");
+            let Some(mut req) = self.queue.remove(pos) else { continue };
             let need = self.admission_need(req.prompt.len(), req.max_new_tokens);
             if !self.kv.can_admit(need) {
                 // Infeasible plan from a custom policy: leave the request
@@ -954,10 +961,18 @@ impl Coordinator {
                 let keep = self.cfg.max_prompt_tokens;
                 req.prompt = req.prompt[req.prompt.len() - keep..].to_vec();
             }
-            let slot = self
-                .kv
-                .allocate(req.id, need)
-                .expect("can_admit checked allocation");
+            let slot = match self.kv.allocate(req.id, need) {
+                Ok(slot) => slot,
+                Err(_) => {
+                    // can_admit passed just above, so the ledger should
+                    // never refuse; if it does, re-queue instead of
+                    // killing the engine loop (completions free blocks
+                    // and the next plan retries).
+                    debug_assert!(false, "can_admit passed but allocate refused");
+                    self.queue.insert(pos, req);
+                    continue;
+                }
+            };
             self.active.push(ActiveRequest::new(req, slot));
         }
         rejected

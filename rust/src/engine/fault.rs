@@ -223,6 +223,7 @@ impl<B> FaultyBackend<B> {
             }
             Some(FaultKind::Panic) => {
                 self.faults += 1;
+                // lint:allow(panic-free-supervised) this panic IS the injected fault (§12): the step supervisor's catch_unwind must contain it, which is exactly what the chaos tests assert
                 std::panic::panic_any(InjectedFault {
                     kind: FaultKind::Panic,
                     launch,

@@ -35,8 +35,6 @@
 //! rows — Algorithm 1's slot layout), the fine-tune rows additionally run
 //! the backward pass.
 
-use std::time::Instant;
-
 use anyhow::{anyhow, Result};
 
 use crate::engine::{
@@ -50,6 +48,7 @@ use crate::runtime::kernels::{
 };
 use crate::runtime::parallel::{resolve_threads, ScratchArena, SharedSliceMut, ThreadPool};
 use crate::runtime::{BucketTable, LoraGeometry, Manifest, ModelGeometry};
+use crate::util::bench::Stopwatch;
 
 const ADAM_BETA1: f32 = 0.9;
 const ADAM_BETA2: f32 = 0.999;
@@ -297,7 +296,7 @@ impl NativeBackend {
                 };
                 let (din, dout) = g
                     .lora_target_dims(module)
-                    .expect("q/k/v/o always have dims");
+                    .ok_or_else(|| anyhow!("geometry has no dims for LoRA target {module}"))?;
                 let a = read(&format!("lora.layers.{li}.{m}.a"), &[slots, din, r])?;
                 let b = read(&format!("lora.layers.{li}.{m}.b"), &[slots, r, dout])?;
                 let (na, nb) = (a.len(), b.len());
@@ -546,10 +545,12 @@ impl NativeBackend {
         // than unit counts (late causal rows dwarf early ones). The cost
         // is identical in every layer, so this is built once per launch.
         let mut attn_prefix = Vec::with_capacity(n * nh + 1);
-        attn_prefix.push(0usize);
+        let mut attn_acc = 0usize;
+        attn_prefix.push(attn_acc);
         for t in 0..n {
             for _ in 0..nh {
-                attn_prefix.push(attn_prefix.last().unwrap() + row_pos[t] + 1);
+                attn_acc += row_pos[t] + 1;
+                attn_prefix.push(attn_acc);
             }
         }
 
@@ -609,6 +610,7 @@ impl NativeBackend {
                         // SAFETY: row `t` is visited by exactly one chunk.
                         let qr = unsafe { sq.slice(t * qd, qd) };
                         rope(qr, nh, hd, row_pos[t], g.rope_theta, 1.0);
+                        // SAFETY: same partition — row `t`'s k slice has one owner.
                         let kr = unsafe { sk.slice(t * kd, kd) };
                         rope(kr, nkv, hd, row_pos[t], g.rope_theta, 1.0);
                     }
@@ -745,10 +747,12 @@ impl NativeBackend {
         // Causal (row, head) attention-unit costs, once per call (the
         // forward_inference comment explains the weighting).
         let mut attn_prefix = Vec::with_capacity(n * nh + 1);
-        attn_prefix.push(0usize);
+        let mut attn_acc = 0usize;
+        attn_prefix.push(attn_acc);
         for t in 0..n {
             for _ in 0..nh {
-                attn_prefix.push(attn_prefix.last().unwrap() + t + 1);
+                attn_acc += t + 1;
+                attn_prefix.push(attn_acc);
             }
         }
 
@@ -767,6 +771,7 @@ impl NativeBackend {
                     for t in rg {
                         // SAFETY: row `t` owned by exactly one chunk.
                         let orow = unsafe { sh1.slice(t * h, h) };
+                        // SAFETY: inv_rms element `t` has the same single owner.
                         let iv = unsafe { sinv.slice(t, 1) };
                         iv[0] = rmsnorm(orow, &xin[t * h..(t + 1) * h], &lw.ln1, eps);
                     }
@@ -795,6 +800,7 @@ impl NativeBackend {
                         // SAFETY: row `t` owned by exactly one chunk.
                         let qr = unsafe { sq.slice(t * qd, qd) };
                         rope(qr, nh, hd, t, g.rope_theta, 1.0);
+                        // SAFETY: same partition — row `t`'s k slice has one owner.
                         let kr = unsafe { sk.slice(t * kd, kd) };
                         rope(kr, nkv, hd, t, g.rope_theta, 1.0);
                     }
@@ -822,6 +828,7 @@ impl NativeBackend {
                         // SAFETY: unit (t, head) owns both slices alone.
                         let prow = unsafe { sprobs.slice((head * n + t) * n, t + 1) };
                         prow.copy_from_slice(&scores);
+                        // SAFETY: ctx slice (t, head) — same exclusive unit owner.
                         let out = unsafe { sctx.slice(t * qd + head * hd, hd) };
                         for (j, &p) in scores.iter().enumerate() {
                             let vj = &vv[j * kd + kvh * hd..j * kd + (kvh + 1) * hd];
@@ -854,6 +861,7 @@ impl NativeBackend {
                     for t in rg {
                         // SAFETY: row `t` owned by exactly one chunk.
                         let orow = unsafe { sh2.slice(t * h, h) };
+                        // SAFETY: inv_rms element `t` has the same single owner.
                         let iv = unsafe { sinv.slice(t, 1) };
                         iv[0] = rmsnorm(orow, &x_mid[t * h..(t + 1) * h], &lw.ln2, eps);
                     }
@@ -911,6 +919,7 @@ impl NativeBackend {
                 for t in rg {
                     // SAFETY: row `t` owned by exactly one chunk.
                     let orow = unsafe { shf.slice(t * h, h) };
+                    // SAFETY: inv_rms element `t` has the same single owner.
                     let iv = unsafe { sinv.slice(t, 1) };
                     iv[0] = rmsnorm(orow, &x_last[t * h..(t + 1) * h], final_norm, eps);
                 }
@@ -1095,6 +1104,7 @@ impl NativeBackend {
                     for t in rg {
                         // SAFETY: row `t` owned by exactly one chunk.
                         let dgrow = unsafe { sdg.slice(t * i_sz, i_sz) };
+                        // SAFETY: d_up row `t` — same exclusive owner.
                         let durow = unsafe { sdu.slice(t * i_sz, i_sz) };
                         let base = t * i_sz;
                         for j in 0..i_sz {
@@ -1211,6 +1221,7 @@ impl NativeBackend {
                         // SAFETY: row `t` owned by exactly one chunk.
                         let qr = unsafe { sdq.slice(t * qd, qd) };
                         rope(qr, nh, hd, t, g.rope_theta, -1.0);
+                        // SAFETY: same partition — row `t`'s dk slice has one owner.
                         let kr = unsafe { sdk.slice(t * kd, kd) };
                         rope(kr, nkv, hd, t, g.rope_theta, -1.0);
                     }
@@ -1293,7 +1304,7 @@ impl Backend for NativeBackend {
         if seqs.is_empty() {
             return Ok((vec![], StepCost::default()));
         }
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let mut tokens = Vec::new();
         let mut inf = Vec::with_capacity(seqs.len());
         for q in seqs {
@@ -1311,7 +1322,7 @@ impl Backend for NativeBackend {
         }
         let flat = self.forward_inference(&tokens, &inf, cache)?;
         let logits = self.split_logits(flat, inf.len());
-        let wall = t0.elapsed().as_secs_f64();
+        let wall = t0.elapsed_s();
         Ok((logits, StepCost { wall, virt: wall }))
     }
 
@@ -1323,7 +1334,7 @@ impl Backend for NativeBackend {
         if rows.is_empty() {
             return Ok((vec![], StepCost::default()));
         }
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let tokens: Vec<i32> = rows.iter().map(|r| r.token).collect();
         let inf: Vec<InfSeq> = rows
             .iter()
@@ -1338,7 +1349,7 @@ impl Backend for NativeBackend {
             .collect();
         let flat = self.forward_inference(&tokens, &inf, cache)?;
         let logits = self.split_logits(flat, inf.len());
-        let wall = t0.elapsed().as_secs_f64();
+        let wall = t0.elapsed_s();
         Ok((logits, StepCost { wall, virt: wall }))
     }
 
@@ -1346,7 +1357,7 @@ impl Backend for NativeBackend {
         if seqs.is_empty() {
             return Ok((vec![], StepCost::default()));
         }
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let mut losses = Vec::with_capacity(seqs.len());
         for q in seqs {
             self.check_adapter(q.adapter)?;
@@ -1361,12 +1372,12 @@ impl Backend for NativeBackend {
             stash.recycle(&mut self.scratch);
             losses.push(loss);
         }
-        let wall = t0.elapsed().as_secs_f64();
+        let wall = t0.elapsed_s();
         Ok((losses, StepCost { wall, virt: wall }))
     }
 
     fn optim_step(&mut self, slots: &[usize], lr: f32, step: i32) -> Result<StepCost> {
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         // Validate before touching anything: a mid-loop error would leave
         // some sites updated with their gradients cleared.
         for &slot in slots {
@@ -1411,7 +1422,7 @@ impl Backend for NativeBackend {
             self.slot_loaded[slot] =
                 Self::slot_is_loaded(&self.sites, &self.scaling, rank, slot);
         }
-        let wall = t0.elapsed().as_secs_f64();
+        let wall = t0.elapsed_s();
         Ok(StepCost { wall, virt: wall })
     }
 
@@ -1422,7 +1433,7 @@ impl Backend for NativeBackend {
         dec: &[DecodeRow],
         cache: &mut KvCacheManager,
     ) -> Result<(UnifiedOut, StepCost)> {
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let mut out = UnifiedOut::default();
 
         // Inference classes share ONE flattened launch (one SMLM
@@ -1464,7 +1475,7 @@ impl Backend for NativeBackend {
             let (losses, _) = self.train_step(ft)?;
             out.ft_losses = losses;
         }
-        let wall = t0.elapsed().as_secs_f64();
+        let wall = t0.elapsed_s();
         Ok((out, StepCost { wall, virt: wall }))
     }
 

@@ -10,8 +10,6 @@
 //!   accumulates across jobs *and* micro-steps on-device).
 //! * `m.*`/`v.*` — Adam moments, also chained device-to-device.
 
-use std::time::Instant;
-
 use anyhow::{anyhow, Result};
 
 use crate::engine::{
@@ -20,6 +18,7 @@ use crate::engine::{
 use crate::kvcache::KvCacheManager;
 use crate::model::{VirtualizedRegistry, WeightStore};
 use crate::runtime::{Arg, DType, HostTensor, ModelGeometry, Runtime, TensorSpec};
+use crate::util::bench::Stopwatch;
 
 pub struct XlaBackend {
     rt: Runtime,
@@ -140,9 +139,9 @@ impl XlaBackend {
                 args.push(Arg::Host(t));
             }
         }
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let (outs, _timing) = self.rt.execute(entry, &args, keep_on_device)?;
-        let wall = t0.elapsed().as_secs_f64();
+        let wall = t0.elapsed_s();
         self.last_entry = entry.to_string();
         Ok((outs, StepCost { wall, virt: wall }))
     }
@@ -238,7 +237,7 @@ impl Backend for XlaBackend {
         if seqs.is_empty() {
             return Ok((vec![], StepCost::default()));
         }
-        let max_len = seqs.iter().map(|q| q.tokens.len()).max().unwrap();
+        let max_len = seqs.iter().map(|q| q.tokens.len()).max().unwrap_or(0);
         let (b, s) = self
             .rt
             .manifest
@@ -337,7 +336,7 @@ impl Backend for XlaBackend {
         if seqs.is_empty() {
             return Ok((vec![], StepCost::default()));
         }
-        let max_len = seqs.iter().map(|q| q.tokens.len()).max().unwrap();
+        let max_len = seqs.iter().map(|q| q.tokens.len()).max().unwrap_or(0);
         let (b, s) = self
             .rt
             .manifest

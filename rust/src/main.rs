@@ -237,6 +237,7 @@ fn run_server(
     let tok_enc = Tokenizer::train(TINY_CORPUS, manifest.build.model.vocab_size);
     let tok_dec = Tokenizer::train(TINY_CORPUS, manifest.build.model.vocab_size);
     let fe_accept = frontend.clone();
+    // lint:allow(thread-spawn) accept-loop thread: pure socket I/O handed to the engine over a channel, never touches kernel numerics (§7 governs the compute pool only)
     std::thread::spawn(move || {
         let _ = serve_blocking(
             listener,

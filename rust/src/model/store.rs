@@ -91,6 +91,9 @@ impl WeightStore {
         let bytes = &self.blob[rec.offset..rec.offset + 4 * n];
         // weights.bin is little-endian f32; on all supported targets this
         // reinterpret is exact.
+        // SAFETY: f32 is plain-old-data, so any 4-byte-aligned byte run is
+        // a valid f32 view; `align_to` computes the split itself and the
+        // pre/post emptiness check below rejects misaligned records.
         let (pre, f32s, post) = unsafe { bytes.align_to::<f32>() };
         if !pre.is_empty() || !post.is_empty() {
             return Err(anyhow!("weight {name} not 4-byte aligned in blob"));

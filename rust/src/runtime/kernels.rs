@@ -560,6 +560,14 @@ mod avx2 {
 
     use super::reduce8;
 
+    /// `y += av * b`, 8 lanes at a time.
+    ///
+    /// # Safety
+    ///
+    /// Requires AVX2 (guaranteed by the `MicroPath::Avx2` dispatch).
+    /// All loads/stores are unaligned (`loadu`/`storeu`) and bounded by
+    /// `min(y.len(), b.len())` via `n8 <= n`; callers pass equal-length
+    /// slices so the scalar tail's `get_unchecked` stays in bounds.
     #[target_feature(enable = "avx2")]
     pub unsafe fn axpy(y: &mut [f32], b: &[f32], av: f32) {
         let n = y.len();
@@ -579,6 +587,13 @@ mod avx2 {
         }
     }
 
+    /// `y += avs * q[j] as f32`, widening int8 lanes exactly.
+    ///
+    /// # Safety
+    ///
+    /// Requires AVX2. The 64-bit `_mm_loadl_epi64` reads 8 bytes of `q`
+    /// per iteration, bounded by `n8 <= n = y.len()`; callers pass
+    /// `q.len() >= y.len()`, so vector and tail accesses are in bounds.
     #[target_feature(enable = "avx2")]
     pub unsafe fn axpy_i8(y: &mut [f32], q: &[i8], avs: f32) {
         let n = y.len();
@@ -599,6 +614,13 @@ mod avx2 {
         }
     }
 
+    /// Dot product with the portable `reduce8` tree (bitwise-stable order).
+    ///
+    /// # Safety
+    ///
+    /// Requires AVX2. Unaligned loads bounded by `n8 <= n = a.len()`;
+    /// callers pass `b.len() >= a.len()`, covering the tail's
+    /// `get_unchecked` too.
     #[target_feature(enable = "avx2")]
     pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
         let n = a.len();
@@ -621,6 +643,12 @@ mod avx2 {
         reduce8(acc, tail)
     }
 
+    /// Dot of f32 against int8, widening exactly, same `reduce8` order.
+    ///
+    /// # Safety
+    ///
+    /// Requires AVX2. Per iteration: 32 bytes of `a` and 8 bytes of `q`,
+    /// bounded by `n8 <= n = a.len()`; callers pass `q.len() >= a.len()`.
     #[target_feature(enable = "avx2")]
     pub unsafe fn dot_i8(a: &[f32], q: &[i8]) -> f32 {
         let n = a.len();

@@ -27,11 +27,12 @@ pub use manifest::{
 };
 pub use tensor::{DType, HostTensor};
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
+
+use crate::util::bench::Stopwatch;
 
 /// A compiled entry point plus its manifest spec.
 pub struct Entry {
@@ -71,8 +72,8 @@ enum ArgSlot {
 
 /// Outputs of one execution: host tensors plus any kept-on-device buffers.
 pub struct ExecOutputs {
-    pub host: HashMap<String, HostTensor>,
-    pub device: HashMap<String, xla::PjRtBuffer>,
+    pub host: BTreeMap<String, HostTensor>,
+    pub device: BTreeMap<String, xla::PjRtBuffer>,
 }
 
 impl ExecOutputs {
@@ -98,10 +99,10 @@ pub struct Runtime {
     pub manifest: Manifest,
     pub artifacts_dir: PathBuf,
     client: xla::PjRtClient,
-    entries: HashMap<String, Entry>,
+    entries: BTreeMap<String, Entry>,
     /// Device-resident persistent inputs, keyed by weight name. Uploaded
     /// once (or when an adapter is hot-swapped) and reused every call.
-    resident: HashMap<String, xla::PjRtBuffer>,
+    resident: BTreeMap<String, xla::PjRtBuffer>,
     /// Cumulative entry compile time — reported by the Table-2 loading bench.
     pub compile_seconds: f64,
 }
@@ -124,8 +125,8 @@ impl Runtime {
             manifest,
             artifacts_dir: dir,
             client,
-            entries: HashMap::new(),
-            resident: HashMap::new(),
+            entries: BTreeMap::new(),
+            resident: BTreeMap::new(),
             compile_seconds: 0.0,
         };
         let names: Vec<String> = rt.manifest.entry_names().map(String::from).collect();
@@ -152,7 +153,7 @@ impl Runtime {
             .entry(name)
             .ok_or_else(|| anyhow!("manifest has no entry {name}"))?
             .clone();
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let path = self.artifacts_dir.join(&spec.file);
         let proto = xla::HloModuleProto::from_text_file(&path)
             .map_err(|e| anyhow!("parsing {}: {e:?}", spec.file))?;
@@ -161,7 +162,7 @@ impl Runtime {
             .client
             .compile(&comp)
             .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-        let dt = t0.elapsed().as_secs_f64();
+        let dt = t0.elapsed_s();
         self.compile_seconds += dt;
         self.entries.insert(name.to_string(), Entry { spec, exe });
         Ok(dt)
@@ -239,7 +240,7 @@ impl Runtime {
         }
 
         // Marshal: upload host tensors, reference pinned buffers.
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let mut uploaded: Vec<xla::PjRtBuffer> = Vec::new();
         let mut order: Vec<ArgSlot> = Vec::with_capacity(args.len());
         for (i, a) in args.iter().enumerate() {
@@ -271,19 +272,19 @@ impl Runtime {
                 ArgSlot::Uploaded(i) => &uploaded[*i],
             })
             .collect();
-        timing.upload_us = t0.elapsed().as_micros() as u64;
+        timing.upload_us = t0.elapsed_us();
 
         // Execute on the device.
-        let t1 = Instant::now();
+        let t1 = Stopwatch::start();
         let mut results = entry
             .exe
             .execute_b(&refs)
             .map_err(|e| anyhow!("executing {entry_name}: {e:?}"))?;
-        timing.execute_us = t1.elapsed().as_micros() as u64;
+        timing.execute_us = t1.elapsed_us();
 
         // Unpack. jax lowers with `return_tuple=True`, so PJRT hands back a
         // single tuple buffer; download it and split into the named outputs.
-        let t2 = Instant::now();
+        let t2 = Stopwatch::start();
         let mut bufs = results.pop().ok_or_else(|| anyhow!("{entry_name}: empty result"))?;
         let root = if bufs.len() == 1 {
             bufs.pop().unwrap()
@@ -304,8 +305,8 @@ impl Runtime {
             ));
         }
 
-        let mut host = HashMap::new();
-        let mut device = HashMap::new();
+        let mut host = BTreeMap::new();
+        let mut device = BTreeMap::new();
         for (spec, lit) in entry.spec.outputs.iter().zip(parts) {
             if keep_on_device.contains(&spec.name.as_str()) {
                 // Tuple results arrive on the host; re-upload to keep a
@@ -321,7 +322,7 @@ impl Runtime {
                 host.insert(spec.name.clone(), HostTensor::from_literal(&lit, spec)?);
             }
         }
-        timing.download_us = t2.elapsed().as_micros() as u64;
+        timing.download_us = t2.elapsed_us();
 
         Ok((ExecOutputs { host, device }, timing))
     }

@@ -287,6 +287,9 @@ pub struct SharedSliceMut<'a, T> {
 // demands disjoint ranges across concurrent users; `T: Send` suffices
 // because each element is only ever touched from one thread at a time.
 unsafe impl<T: Send> Send for SharedSliceMut<'_, T> {}
+// SAFETY: sharing `&SharedSliceMut` across threads only exposes `unsafe
+// fn slice`, whose disjoint-range contract already forbids two threads
+// touching the same element — so shared references add no new access.
 unsafe impl<T: Send> Sync for SharedSliceMut<'_, T> {}
 
 impl<'a, T> SharedSliceMut<'a, T> {

@@ -166,11 +166,15 @@ impl HostTensor {
 }
 
 fn bytemuck_cast(v: &[f32]) -> &[u8] {
-    // f32 slices are always validly viewable as bytes.
+    // SAFETY: any initialized f32 slice is viewable as bytes — u8 has
+    // alignment 1, the length `len * 4` covers exactly the same
+    // allocation, and the borrow ties the view to `v`'s lifetime.
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }
 
 fn bytemuck_cast_i32(v: &[i32]) -> &[u8] {
+    // SAFETY: same argument as `bytemuck_cast` — i32 → u8 view over the
+    // identical allocation, `len * 4` bytes, lifetime-bound to `v`.
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }
 

@@ -44,13 +44,13 @@
 //! ([`Frontend::set_conn_timeout_ms`]) so half-open connections are
 //! reclaimed instead of pinning a thread forever.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
@@ -59,6 +59,7 @@ use crate::engine::Backend;
 use crate::metrics::{AdapterCounters, GaugeSeries, LatencySummary};
 use crate::model::{LoraAdapter, SlotState, VirtualizedRegistry, WeightStore};
 use crate::runtime::Manifest;
+use crate::util::bench::Stopwatch;
 use crate::util::json::{self, Json};
 
 // --------------------------------------------------------------------------
@@ -445,7 +446,8 @@ impl Default for AdmissionConfig {
 #[derive(Default)]
 struct Inflight {
     total: usize,
-    per_model: HashMap<String, usize>,
+    // Ordered so any future dump of per-model occupancy is stable.
+    per_model: BTreeMap<String, usize>,
 }
 
 /// Default per-socket read/write timeout ([`Frontend::set_conn_timeout_ms`]).
@@ -784,7 +786,7 @@ impl AdapterDirectory for StaticDirectory {
 struct Pending {
     events: Sender<TokenEvent>,
     key: String,
-    start: Instant,
+    start: Stopwatch,
     emitted: usize,
 }
 
@@ -814,8 +816,8 @@ pub fn engine_loop(
     rx: &Receiver<EngineMsg>,
     frontend: &Arc<Frontend>,
 ) -> Result<()> {
-    let t0 = Instant::now();
-    let mut waiting: HashMap<u64, Pending> = HashMap::new();
+    let t0 = Stopwatch::start();
+    let mut waiting: BTreeMap<u64, Pending> = BTreeMap::new();
     let mut draining = false;
     let mut drain_replies: Vec<Sender<()>> = Vec::new();
     let mut consecutive_failures = 0u32;
@@ -848,7 +850,7 @@ pub fn engine_loop(
         // ---- One step (supervised: a failed step never kills the loop
         // outright — the coordinator already retried and isolated, so an
         // Err here is treated as a backend reset and recovered from).
-        coord.advance_clock(t0.elapsed().as_secs_f64());
+        coord.advance_clock(t0.elapsed_s());
         let out = match coord.step(backend) {
             Ok(out) => {
                 consecutive_failures = 0;
@@ -888,7 +890,7 @@ pub fn engine_loop(
         }
         // Per-step stat deltas, folded into the shared map under ONE lock
         // below — the per-token path must not contend on the stats mutex.
-        let mut decoded: HashMap<String, u64> = HashMap::new();
+        let mut decoded: BTreeMap<String, u64> = BTreeMap::new();
         let mut completed_keys: Vec<String> = Vec::new();
         let mut dead: Vec<u64> = Vec::new();
         for &(id, tok) in &out.emitted_tokens {
@@ -914,7 +916,7 @@ pub fn engine_loop(
         }
         for (id, tokens) in out.completed_outputs {
             if let Some(p) = waiting.remove(&id) {
-                let latency_s = p.start.elapsed().as_secs_f64();
+                let latency_s = p.start.elapsed_s();
                 completed_keys.push(p.key.clone());
                 let _ = p.events.send(TokenEvent::Done { tokens, latency_s });
             }
@@ -954,10 +956,10 @@ fn handle_msg(
     backend: &mut dyn Backend,
     dir: &mut dyn AdapterDirectory,
     frontend: &Arc<Frontend>,
-    waiting: &mut HashMap<u64, Pending>,
+    waiting: &mut BTreeMap<u64, Pending>,
     draining: &mut bool,
     drain_replies: &mut Vec<Sender<()>>,
-    t0: Instant,
+    t0: Stopwatch,
 ) {
     match msg {
         EngineMsg::Generate(job) => {
@@ -998,14 +1000,14 @@ fn handle_msg(
                 });
                 return;
             }
-            let now = t0.elapsed().as_secs_f64();
+            let now = t0.elapsed_s();
             coord.advance_clock(now);
             if let Ok(mut s) = frontend.stats.lock() {
                 s.per_adapter.entry(key.clone()).or_default().submitted += 1;
             }
             waiting.insert(
                 job.id,
-                Pending { events: job.events, key, start: Instant::now(), emitted: 0 },
+                Pending { events: job.events, key, start: Stopwatch::start(), emitted: 0 },
             );
             coord.submit(InferenceRequest {
                 id: job.id,
@@ -1063,7 +1065,7 @@ fn publish_stats(
     backend: &dyn Backend,
     dir: &dyn AdapterDirectory,
     frontend: &Arc<Frontend>,
-    t0: Instant,
+    t0: Stopwatch,
 ) {
     if let Ok(mut s) = frontend.stats.lock() {
         s.queued = coord.queue_len();
@@ -1104,7 +1106,7 @@ fn publish_stats(
             }
         }
         let depth = (coord.queue_len() + coord.preempted_len() + coord.active_len()) as f64;
-        s.queue_depth.sample(t0.elapsed().as_secs_f64(), depth);
+        s.queue_depth.sample(t0.elapsed_s(), depth);
     }
 }
 
@@ -1353,6 +1355,7 @@ pub fn serve_blocking(
     for stream in listener.incoming() {
         let stream = stream?;
         let (fe, e, d) = (frontend.clone(), encode.clone(), decode.clone());
+        // lint:allow(thread-spawn) I/O concurrency, not compute: one blocking reader per socket never touches kernel math, so lane count cannot reach output bits (§7 governs the worker pool only)
         std::thread::spawn(move || handle_conn(stream, fe, e, d));
     }
     Ok(())

@@ -4,6 +4,33 @@
 
 use std::time::Instant;
 
+/// The audited choke point for wall-clock reads outside this module.
+///
+/// The determinism discipline (DESIGN.md §13, `wall-clock` rule) is that
+/// engine/coordinator/server code never schedules on real time — the
+/// coordinator's virtual clock owns ordering. Real durations are still
+/// *reported* (frame timings, `ExecTiming`, trajectory rows), and all of
+/// those measurements start here, so there is exactly one reviewed place
+/// where `Instant` enters the tree.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    /// Seconds since `start()`, for human-facing stats frames.
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+
+    /// Whole microseconds since `start()`, for `ExecTiming`-style rows.
+    pub fn elapsed_us(&self) -> u64 {
+        self.0.elapsed().as_micros() as u64
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct BenchResult {
     pub name: String,
@@ -78,6 +105,15 @@ fn summarize(name: &str, mut samples: Vec<f64>) -> BenchResult {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let t = Stopwatch::start();
+        let a = t.elapsed_us();
+        let b = t.elapsed_us();
+        assert!(b >= a);
+        assert!(t.elapsed_s() >= 0.0);
+    }
 
     #[test]
     fn quantiles_ordered() {

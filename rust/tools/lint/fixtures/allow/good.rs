@@ -1,0 +1,8 @@
+// Fixture: a justified escape hatch (linted as module `server`). The
+// reason is mandatory — it is the reviewer-facing argument for why the
+// invariant holds despite the pattern.
+pub fn client_latency_s() -> f64 {
+    // lint:allow(wall-clock) reports real client-observed latency; never fed back into scheduling
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,7 @@
+// Fixture: a dot product using fused multiply-add (linted as module
+// `metrics`; the rule fires repo-wide, even in tests) — FMA rounds once,
+// so the result differs in the last bit from separate mul then add,
+// breaking the AVX2↔portable bitwise identity (DESIGN.md §11).
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).fold(0.0f32, |acc, (x, y)| x.mul_add(*y, acc))
+}

@@ -1,0 +1,5 @@
+// Fixture: the same dot product with separate IEEE mul then add (linted
+// as module `metrics`) — identical bits on every backend.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).fold(0.0f32, |acc, (x, y)| acc + x * y)
+}

@@ -1,0 +1,10 @@
+// Fixture: supervised request path that can panic on a bad request
+// (linted as module `server`) — one malformed frame kills the loop,
+// defeating the §12 retry/isolate/quarantine design.
+pub fn handle(frame: &str) -> u64 {
+    let id: u64 = frame.split(':').next().unwrap().parse().expect("numeric id");
+    if id == 0 {
+        panic!("id 0 is reserved");
+    }
+    id
+}

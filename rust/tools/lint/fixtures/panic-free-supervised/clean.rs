@@ -1,0 +1,30 @@
+// Fixture: the same handler propagating a typed error (linted as module
+// `server`) — a malformed frame becomes an ErrCode reply, and the loop
+// keeps serving everyone else.
+pub enum ErrCode {
+    BadFrame,
+    ReservedId,
+}
+
+pub fn handle(frame: &str) -> Result<u64, ErrCode> {
+    let id: u64 = frame
+        .split(':')
+        .next()
+        .ok_or(ErrCode::BadFrame)?
+        .parse()
+        .map_err(|_| ErrCode::BadFrame)?;
+    if id == 0 {
+        return Err(ErrCode::ReservedId);
+    }
+    Ok(id)
+}
+
+#[cfg(test)]
+mod tests {
+    // Test code is exempt from the panic-free rule: asserting with
+    // unwrap/expect here is idiomatic and cannot reach the serving loop.
+    #[test]
+    fn parses() {
+        assert_eq!(super::handle("7:gen").ok().unwrap(), 7);
+    }
+}

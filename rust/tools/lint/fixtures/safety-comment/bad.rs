@@ -1,0 +1,5 @@
+// Fixture: an unsafe block with no SAFETY argument (linted as module
+// `runtime`).
+pub fn first(p: *const f32) -> f32 {
+    unsafe { p.read() }
+}

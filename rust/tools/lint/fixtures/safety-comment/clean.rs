@@ -1,0 +1,16 @@
+// Fixture: the same unsafe sites with their arguments written down
+// (linted as module `runtime`).
+pub fn first(p: *const f32) -> f32 {
+    // SAFETY: caller guarantees `p` points at a live, aligned f32 for
+    // the duration of this call (checked at the dispatch site).
+    unsafe { p.read() }
+}
+
+/// Reads one element past a validated bound.
+///
+/// # Safety
+///
+/// `p` must be valid for reads of `i + 1` elements.
+pub unsafe fn at(p: *const f32, i: usize) -> f32 {
+    unsafe { p.add(i).read() } // SAFETY: `i` in bounds per the fn contract.
+}

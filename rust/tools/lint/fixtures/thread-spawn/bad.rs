@@ -1,0 +1,9 @@
+// Fixture: engine code spawning its own threads (linted as module
+// `engine`) — compute parallelism must go through the partition-only
+// worker pool in runtime::parallel (DESIGN.md §7).
+pub fn parallel_sum(xs: &'static [f32]) -> f32 {
+    let mid = xs.len() / 2;
+    let h = std::thread::spawn(move || xs[..mid].iter().sum::<f32>());
+    let hi: f32 = xs[mid..].iter().sum();
+    hi + h.join().unwrap_or(0.0)
+}

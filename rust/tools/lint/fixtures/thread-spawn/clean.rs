@@ -1,0 +1,9 @@
+// Fixture: the same reduction through the worker pool (linted as module
+// `engine`) — the pool owns every compute thread, so lane count can
+// never change output bits.
+use crate::runtime::parallel::Pool;
+
+pub fn parallel_sum(pool: &Pool, xs: &[f32]) -> f32 {
+    let partials = pool.par_partition(xs, |chunk| chunk.iter().sum::<f32>());
+    partials.into_iter().sum()
+}

@@ -1,0 +1,15 @@
+// Fixture: coordinator stats assembled by iterating a HashMap (linted as
+// module `coordinator`) — iteration order is randomized per process and
+// leaks straight into the emitted frame.
+use std::collections::HashMap;
+
+pub fn stats_frame(per_model: &HashMap<String, usize>) -> String {
+    let mut out = String::new();
+    for (model, n) in per_model {
+        out.push_str(model);
+        out.push(':');
+        out.push_str(&n.to_string());
+        out.push(' ');
+    }
+    out
+}

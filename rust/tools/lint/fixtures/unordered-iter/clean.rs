@@ -1,0 +1,14 @@
+// Fixture: the same stats frame over a BTreeMap (linted as module
+// `coordinator`) — iteration is key-ordered, so the frame is stable.
+use std::collections::BTreeMap;
+
+pub fn stats_frame(per_model: &BTreeMap<String, usize>) -> String {
+    let mut out = String::new();
+    for (model, n) in per_model {
+        out.push_str(model);
+        out.push(':');
+        out.push_str(&n.to_string());
+        out.push(' ');
+    }
+    out
+}

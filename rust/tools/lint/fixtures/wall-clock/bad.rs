@@ -1,0 +1,10 @@
+// Fixture: engine code reading the wall clock directly (linted as module
+// `engine`). Scheduling must use the coordinator's virtual clock; real
+// durations go through util::bench::Stopwatch.
+use std::time::Instant;
+
+pub fn decode_step() -> f64 {
+    let t0 = Instant::now();
+    // ... work ...
+    t0.elapsed().as_secs_f64()
+}

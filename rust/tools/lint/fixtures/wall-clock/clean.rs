@@ -1,0 +1,9 @@
+// Fixture: engine code measuring through the audited choke point (linted
+// as module `engine`).
+use crate::util::bench::Stopwatch;
+
+pub fn decode_step() -> f64 {
+    let t0 = Stopwatch::start();
+    // ... work ...
+    t0.elapsed_s()
+}

@@ -1,0 +1,1050 @@
+//! `loquetier-lint`: a std-only invariant linter for the Loquetier tree.
+//!
+//! Every headline claim in this reproduction is a *contract*: the SMLM
+//! unified launch is bitwise output-transparent, the worker pool is
+//! partition-only thread-invariant (DESIGN.md §7), the AVX2 kernels are
+//! bitwise-identical to the portable fallback because they use mul/add
+//! only (§11), and the supervised engine loop survives any single bad
+//! request (§12). Those contracts are conventions in source code — one
+//! careless `HashMap` iteration, stray `Instant::now`, or hot-path
+//! `unwrap()` silently breaks them. This tool makes them machine-checked
+//! on every PR (DESIGN.md §13).
+//!
+//! Design constraints: the offline build image has no crates.io, so there
+//! is no `syn` — the linter lexes `.rs` files itself with a
+//! comment/string-aware tokenizer, scopes rules by module path (derived
+//! from the file's location under the source root) and by `#[cfg(test)]`
+//! spans (brace-matched), and applies the six named rules below. Findings
+//! print rustc-style as `file:line: lint[rule-id]: message` and the
+//! process exits nonzero when any remain.
+//!
+//! Escape hatch: `// lint:allow(rule-id) reason` on the offending line
+//! (trailing) or on a comment line directly above it suppresses one
+//! rule there — but only with a non-empty written reason; a bare
+//! `lint:allow` is itself a finding. Honored escapes are counted in the
+//! summary so reviewers can watch the total.
+
+use std::fmt;
+use std::fs;
+use std::path::Path;
+
+// ---------------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------------
+
+/// The project invariants the linter enforces. `LintAllow` is the
+/// meta-rule for malformed escape hatches and cannot itself be allowed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    /// `Instant::now` / `SystemTime` outside `util::bench` and `main`:
+    /// engine and scheduler code runs on the coordinator's virtual clock;
+    /// real time may only enter through the audited `util::bench`
+    /// stopwatch (measurement that is *reported*, never *scheduled on*).
+    WallClock,
+    /// `HashMap`/`HashSet` in `coordinator`/`engine`/`runtime`/`server`:
+    /// their iteration order is randomized per process, so any order that
+    /// reaches a launch, a frame, or a trajectory file breaks bitwise
+    /// reproducibility. Use `BTreeMap`/`BTreeSet` or sort the keys.
+    UnorderedIter,
+    /// `std::thread` spawning outside `runtime::parallel`: all compute
+    /// parallelism must go through the partition-only worker pool
+    /// (DESIGN.md §7) so thread count can never change a bit of output.
+    ThreadSpawn,
+    /// An `unsafe` block, fn, or impl without an immediately preceding
+    /// `// SAFETY:` comment (or `# Safety` doc section) stating the
+    /// aliasing/bounds/feature-detection argument.
+    SafetyComment,
+    /// `mul_add` / fused-multiply-add intrinsics anywhere: the AVX2 and
+    /// portable kernels are bitwise interchangeable only because both do
+    /// separate IEEE mul then add (DESIGN.md §11). FMA rounds once.
+    NoFma,
+    /// `unwrap`/`expect`/`panic!`/`unreachable!`/`panic_any` in non-test
+    /// `coordinator`/`server`/`engine` code: a stray panic in the
+    /// supervised request path defeats the §12 blast-radius design
+    /// (retry → isolate → quarantine; one bad request never kills the
+    /// loop). Propagate errors or emit typed `ErrCode` frames instead.
+    PanicFreeSupervised,
+    /// A `lint:allow` escape that is malformed: empty reason or unknown
+    /// rule id. Escapes must carry a written justification.
+    LintAllow,
+}
+
+impl Rule {
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::WallClock => "wall-clock",
+            Rule::UnorderedIter => "unordered-iter",
+            Rule::ThreadSpawn => "thread-spawn",
+            Rule::SafetyComment => "safety-comment",
+            Rule::NoFma => "no-fma",
+            Rule::PanicFreeSupervised => "panic-free-supervised",
+            Rule::LintAllow => "lint-allow",
+        }
+    }
+
+    /// Rule ids clients may name in `lint:allow(..)` (everything except
+    /// the meta-rule).
+    pub fn from_id(id: &str) -> Option<Rule> {
+        match id {
+            "wall-clock" => Some(Rule::WallClock),
+            "unordered-iter" => Some(Rule::UnorderedIter),
+            "thread-spawn" => Some(Rule::ThreadSpawn),
+            "safety-comment" => Some(Rule::SafetyComment),
+            "no-fma" => Some(Rule::NoFma),
+            "panic-free-supervised" => Some(Rule::PanicFreeSupervised),
+            _ => None,
+        }
+    }
+}
+
+/// One reported violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: lint[{}]: {}", self.file, self.line, self.rule.id(), self.msg)
+    }
+}
+
+/// Lint result for one file.
+#[derive(Debug, Default)]
+pub struct FileResult {
+    pub findings: Vec<Finding>,
+    /// `lint:allow` escapes present in the file.
+    pub allows_total: usize,
+    /// Escapes that suppressed at least one finding.
+    pub allows_honored: usize,
+}
+
+/// Aggregate over a tree walk.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files: usize,
+    pub allows_total: usize,
+    pub allows_honored: usize,
+}
+
+impl Report {
+    pub fn absorb(&mut self, r: FileResult) {
+        self.findings.extend(r.findings);
+        self.files += 1;
+        self.allows_total += r.allows_total;
+        self.allows_honored += r.allows_honored;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lexer
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Ident(String),
+    Punct(char),
+    /// String/char/numeric literal (content irrelevant to every rule).
+    Lit,
+}
+
+#[derive(Debug)]
+struct TokAt {
+    tok: Tok,
+    line: usize,
+    in_test: bool,
+}
+
+/// What a source line consists of, for the SAFETY-comment climb.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum LineKind {
+    Blank,
+    CommentOnly,
+    /// First code token is `#` — an attribute line (climbed over).
+    Attr,
+    Code,
+}
+
+struct Lexed {
+    toks: Vec<TokAt>,
+    /// 1-based; index 0 unused.
+    line_kind: Vec<LineKind>,
+    /// 1-based; concatenated comment text per line.
+    comment_text: Vec<String>,
+    lines: usize,
+}
+
+fn lex(src: &str) -> Lexed {
+    let bytes: Vec<char> = src.chars().collect();
+    let n = bytes.len();
+    let total_lines = src.lines().count().max(1);
+    let mut toks: Vec<TokAt> = Vec::new();
+    let mut line_has_code = vec![false; total_lines + 2];
+    let mut line_first_hash = vec![false; total_lines + 2];
+    let mut line_has_comment = vec![false; total_lines + 2];
+    let mut comment_text = vec![String::new(); total_lines + 2];
+
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut push = |tok: Tok, line: usize, toks: &mut Vec<TokAt>| {
+        if !line_has_code[line] {
+            line_first_hash[line] = tok == Tok::Punct('#');
+        }
+        line_has_code[line] = true;
+        toks.push(TokAt { tok, line, in_test: false });
+    };
+
+    while i < n {
+        let c = bytes[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_whitespace() => i += 1,
+            // Line comment (incl. doc comments).
+            '/' if i + 1 < n && bytes[i + 1] == '/' => {
+                let start = i;
+                while i < n && bytes[i] != '\n' {
+                    i += 1;
+                }
+                let text: String = bytes[start..i].iter().collect();
+                line_has_comment[line] = true;
+                comment_text[line].push_str(&text);
+                comment_text[line].push(' ');
+            }
+            // Block comment (nesting, per Rust).
+            '/' if i + 1 < n && bytes[i + 1] == '*' => {
+                let mut depth = 1;
+                let start_line = line;
+                let mut text = String::new();
+                i += 2;
+                while i < n && depth > 0 {
+                    if bytes[i] == '/' && i + 1 < n && bytes[i + 1] == '*' {
+                        depth += 1;
+                        i += 2;
+                    } else if bytes[i] == '*' && i + 1 < n && bytes[i + 1] == '/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        if bytes[i] == '\n' {
+                            line_has_comment[line] = true;
+                            comment_text[line].push_str(&text);
+                            comment_text[line].push(' ');
+                            text.clear();
+                            line += 1;
+                        } else {
+                            text.push(bytes[i]);
+                        }
+                        i += 1;
+                    }
+                }
+                line_has_comment[line.min(total_lines)] = true;
+                comment_text[line.min(total_lines)].push_str(&text);
+                comment_text[line.min(total_lines)].push(' ');
+                let _ = start_line;
+            }
+            // String literals: plain, raw (any # count), byte, raw-byte.
+            '"' => {
+                i = skip_string(&bytes, i, &mut line);
+                push(Tok::Lit, line, &mut toks);
+            }
+            'r' | 'b' if starts_string(&bytes, i) => {
+                // Advance past the r/b/rb/br prefix to any `#`s and the `"`.
+                let mut raw = c == 'r';
+                let mut j = i + 1;
+                if j < n && (bytes[j] == 'b' || bytes[j] == 'r') {
+                    raw = raw || bytes[j] == 'r';
+                    j += 1;
+                }
+                let mut hashes = 0;
+                while j < n && bytes[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if !raw {
+                    // b"..." — escapes are processed like a normal string.
+                    i = skip_string(&bytes, j, &mut line);
+                } else {
+                    // Raw string: no escapes; closes at `"` + matching `#`s.
+                    j += 1; // opening quote
+                    loop {
+                        if j >= n {
+                            break;
+                        }
+                        if bytes[j] == '\n' {
+                            line += 1;
+                            j += 1;
+                            continue;
+                        }
+                        if bytes[j] == '"' {
+                            let mut k = j + 1;
+                            let mut seen = 0;
+                            while k < n && bytes[k] == '#' && seen < hashes {
+                                seen += 1;
+                                k += 1;
+                            }
+                            if seen == hashes {
+                                j = k;
+                                break;
+                            }
+                        }
+                        j += 1;
+                    }
+                    i = j;
+                }
+                push(Tok::Lit, line, &mut toks);
+            }
+            // Char literal vs lifetime.
+            '\'' => {
+                let next = bytes.get(i + 1).copied().unwrap_or(' ');
+                let after = bytes.get(i + 2).copied().unwrap_or(' ');
+                if next == '\\' {
+                    // Escaped char literal: skip to closing quote.
+                    let mut j = i + 2;
+                    if j < n {
+                        j += 1; // the escaped char (or first of \x..)
+                    }
+                    while j < n && bytes[j] != '\'' {
+                        j += 1;
+                    }
+                    i = j + 1;
+                    push(Tok::Lit, line, &mut toks);
+                } else if after == '\'' && next != '\'' {
+                    // 'c'
+                    i += 3;
+                    push(Tok::Lit, line, &mut toks);
+                } else {
+                    // Lifetime: consume the tick + identifier.
+                    i += 1;
+                    while i < n && (bytes[i].is_alphanumeric() || bytes[i] == '_') {
+                        i += 1;
+                    }
+                    push(Tok::Lit, line, &mut toks);
+                }
+            }
+            c if c.is_alphabetic() || c == '_' => {
+                let start = i;
+                while i < n && (bytes[i].is_alphanumeric() || bytes[i] == '_') {
+                    i += 1;
+                }
+                let ident: String = bytes[start..i].iter().collect();
+                push(Tok::Ident(ident), line, &mut toks);
+            }
+            c if c.is_ascii_digit() => {
+                // Numeric literal; `.` only consumed when not a `..` range.
+                while i < n
+                    && (bytes[i].is_alphanumeric()
+                        || bytes[i] == '_'
+                        || (bytes[i] == '.'
+                            && bytes.get(i + 1).is_some_and(|d| d.is_ascii_digit())))
+                {
+                    i += 1;
+                }
+                push(Tok::Lit, line, &mut toks);
+            }
+            c => {
+                push(Tok::Punct(c), line, &mut toks);
+                i += 1;
+            }
+        }
+    }
+
+    mark_test_spans(&mut toks);
+
+    let mut line_kind = vec![LineKind::Blank; total_lines + 2];
+    for (l, kind) in line_kind.iter_mut().enumerate().take(total_lines + 1).skip(1) {
+        *kind = if line_has_code[l] {
+            if line_first_hash[l] {
+                LineKind::Attr
+            } else {
+                LineKind::Code
+            }
+        } else if line_has_comment[l] {
+            LineKind::CommentOnly
+        } else {
+            LineKind::Blank
+        };
+    }
+
+    Lexed { toks, line_kind, comment_text, lines: total_lines }
+}
+
+fn starts_string(bytes: &[char], i: usize) -> bool {
+    // r" r#" rb" b" br" b' are literal prefixes; `r`/`b` followed by
+    // anything else is an identifier start.
+    let mut j = i + 1;
+    if j < bytes.len() && (bytes[j] == 'b' || bytes[j] == 'r') {
+        j += 1;
+    }
+    while j < bytes.len() && bytes[j] == '#' {
+        j += 1;
+    }
+    j < bytes.len() && bytes[j] == '"'
+}
+
+/// Skip a `"`-delimited string starting at `i` (pointing at the opening
+/// quote); returns the index after the closing quote, tracking newlines.
+fn skip_string(bytes: &[char], i: usize, line: &mut usize) -> usize {
+    let n = bytes.len();
+    let mut j = i + 1;
+    while j < n {
+        match bytes[j] {
+            '\\' => j += 2,
+            '"' => return j + 1,
+            '\n' => {
+                *line += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    j
+}
+
+/// Mark tokens inside `#[cfg(test)]`/`#[test]` items as test-scoped. The
+/// gated item extends to its matching close brace, or to the first
+/// top-level `;` for brace-less items (`use`, statics).
+fn mark_test_spans(toks: &mut [TokAt]) {
+    let is = |t: &TokAt, c: char| t.tok == Tok::Punct(c);
+    let ident = |t: &TokAt, s: &str| matches!(&t.tok, Tok::Ident(id) if id == s);
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].in_test {
+            i += 1;
+            continue;
+        }
+        // `# [ cfg ( test ) ]` or `# [ test ]`
+        let attr_end = if i + 6 < toks.len()
+            && is(&toks[i], '#')
+            && is(&toks[i + 1], '[')
+            && ident(&toks[i + 2], "cfg")
+            && is(&toks[i + 3], '(')
+            && ident(&toks[i + 4], "test")
+            && is(&toks[i + 5], ')')
+            && is(&toks[i + 6], ']')
+        {
+            Some(i + 7)
+        } else if i + 3 < toks.len()
+            && is(&toks[i], '#')
+            && is(&toks[i + 1], '[')
+            && ident(&toks[i + 2], "test")
+            && is(&toks[i + 3], ']')
+        {
+            Some(i + 4)
+        } else {
+            None
+        };
+        let Some(start) = attr_end else {
+            i += 1;
+            continue;
+        };
+        // Walk to the end of the gated item.
+        let mut j = start;
+        let mut depth = 0usize;
+        let mut end = toks.len();
+        while j < toks.len() {
+            if is(&toks[j], '{') {
+                depth += 1;
+            } else if is(&toks[j], '}') {
+                depth -= 1;
+                if depth == 0 {
+                    end = j + 1;
+                    break;
+                }
+            } else if is(&toks[j], ';') && depth == 0 {
+                end = j + 1;
+                break;
+            }
+            j += 1;
+        }
+        for t in toks.iter_mut().take(end).skip(i) {
+            t.in_test = true;
+        }
+        i = end;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Allow escapes
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct Allow {
+    line: usize,
+    /// The line this escape covers (own line when trailing, the next
+    /// code/attr line when on a comment-only line).
+    target: Option<usize>,
+    rule: Option<Rule>,
+    raw_rule: String,
+    reason: String,
+    honored: bool,
+}
+
+fn parse_allows(lx: &Lexed) -> Vec<Allow> {
+    let mut allows = Vec::new();
+    for l in 1..=lx.lines {
+        let text = &lx.comment_text[l];
+        let mut rest = text.as_str();
+        while let Some(pos) = rest.find("lint:allow(") {
+            let after = &rest[pos + "lint:allow(".len()..];
+            let Some(close) = after.find(')') else { break };
+            let raw_rule = after[..close].trim().to_string();
+            let reason = after[close + 1..]
+                .split("lint:allow(")
+                .next()
+                .unwrap_or("")
+                .trim()
+                .to_string();
+            let target = if lx.line_kind[l] == LineKind::CommentOnly {
+                // Covers the next code line, climbing over further comment
+                // and attribute lines; a blank line breaks the tie.
+                let mut t = l + 1;
+                loop {
+                    if t > lx.lines {
+                        break None;
+                    }
+                    match lx.line_kind[t] {
+                        LineKind::Code => break Some(t),
+                        LineKind::CommentOnly | LineKind::Attr => t += 1,
+                        LineKind::Blank => break None,
+                    }
+                }
+            } else {
+                Some(l)
+            };
+            allows.push(Allow {
+                line: l,
+                target,
+                rule: Rule::from_id(&raw_rule),
+                raw_rule,
+                reason,
+                honored: false,
+            });
+            rest = &after[close + 1..];
+        }
+    }
+    allows
+}
+
+// ---------------------------------------------------------------------------
+// Rule engine
+// ---------------------------------------------------------------------------
+
+/// Modules whose iteration order can reach a launch, a frame, or a
+/// trajectory file.
+const ORDERED_MODULES: &[&str] = &["coordinator", "engine", "runtime", "server"];
+/// Modules on the supervised request path (DESIGN.md §12).
+const SUPERVISED_MODULES: &[&str] = &["coordinator", "server", "engine"];
+
+fn top_module(module: &str) -> &str {
+    module.split("::").next().unwrap_or(module)
+}
+
+/// Lint one file's source. `module` is its module path relative to the
+/// crate root (`coordinator`, `util::bench`, `main`, ...); fixture tests
+/// pass it explicitly, the tree walker derives it from the path.
+pub fn lint_source(path_label: &str, module: &str, src: &str) -> FileResult {
+    let lx = lex(src);
+    let mut allows = parse_allows(&lx);
+    let raw = raw_findings(module, &lx);
+
+    let mut findings: Vec<Finding> = Vec::new();
+    for (line, rule, msg) in raw {
+        let suppressed = allows.iter_mut().any(|a| {
+            let ok = a.target == Some(line) && a.rule == Some(rule) && !a.reason.is_empty();
+            if ok {
+                a.honored = true;
+            }
+            ok
+        });
+        if !suppressed {
+            findings.push(Finding { file: path_label.to_string(), line, rule, msg });
+        }
+    }
+    // Malformed escapes are findings in their own right.
+    for a in &allows {
+        if a.rule.is_none() {
+            findings.push(Finding {
+                file: path_label.to_string(),
+                line: a.line,
+                rule: Rule::LintAllow,
+                msg: format!(
+                    "lint:allow names unknown rule '{}' (known: wall-clock, unordered-iter, \
+                     thread-spawn, safety-comment, no-fma, panic-free-supervised)",
+                    a.raw_rule
+                ),
+            });
+        } else if a.reason.is_empty() {
+            findings.push(Finding {
+                file: path_label.to_string(),
+                line: a.line,
+                rule: Rule::LintAllow,
+                msg: format!(
+                    "lint:allow({}) without a reason — write why the invariant holds here",
+                    a.raw_rule
+                ),
+            });
+        }
+    }
+    findings.sort_by_key(|f| f.line);
+    FileResult {
+        allows_total: allows.len(),
+        allows_honored: allows.iter().filter(|a| a.honored).count(),
+        findings,
+    }
+}
+
+fn raw_findings(module: &str, lx: &Lexed) -> Vec<(usize, Rule, String)> {
+    let mut out: Vec<(usize, Rule, String)> = Vec::new();
+    let top = top_module(module);
+    let toks = &lx.toks;
+    let ident_at = |i: usize| match toks.get(i).map(|t| &t.tok) {
+        Some(Tok::Ident(s)) => Some(s.as_str()),
+        _ => None,
+    };
+    let punct_at = |i: usize, c: char| toks.get(i).map(|t| t.tok == Tok::Punct(c)) == Some(true);
+    let path_sep = |i: usize| punct_at(i, ':') && punct_at(i + 1, ':');
+
+    let mut unsafe_lines_seen: Vec<usize> = Vec::new();
+
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        let Tok::Ident(id) = &t.tok else { continue };
+        let line = t.line;
+        let in_test = t.in_test;
+
+        // -- wall-clock ----------------------------------------------------
+        if !in_test && module != "util::bench" && module != "main" {
+            let instant_now =
+                id == "Instant" && path_sep(i + 1) && ident_at(i + 3) == Some("now");
+            if instant_now || id == "SystemTime" {
+                out.push((
+                    line,
+                    Rule::WallClock,
+                    format!(
+                        "{} reads the wall clock outside util::bench/main — engine and \
+                         scheduler code runs on the virtual clock; measure real durations \
+                         through util::bench::Stopwatch (the audited choke point)",
+                        if instant_now { "Instant::now" } else { "SystemTime" }
+                    ),
+                ));
+            }
+        }
+
+        // -- unordered-iter ------------------------------------------------
+        if !in_test
+            && ORDERED_MODULES.contains(&top)
+            && (id == "HashMap" || id == "HashSet")
+        {
+            out.push((
+                line,
+                Rule::UnorderedIter,
+                format!(
+                    "{id} in `{top}` — iteration order is randomized per process and can \
+                     leak into launches, frames or trajectories; use BTreeMap/BTreeSet or \
+                     sorted keys (or justify with lint:allow(unordered-iter) why the order \
+                     provably cannot reach output)"
+                ),
+            ));
+        }
+
+        // -- thread-spawn --------------------------------------------------
+        if !in_test
+            && module != "runtime::parallel"
+            && id == "thread"
+            && path_sep(i + 1)
+            && matches!(ident_at(i + 3), Some("spawn") | Some("Builder"))
+        {
+            out.push((
+                line,
+                Rule::ThreadSpawn,
+                "thread spawn outside runtime::parallel — compute parallelism must use \
+                 the partition-only worker pool (DESIGN.md §7) so lane count never \
+                 changes output bits"
+                    .to_string(),
+            ));
+        }
+
+        // -- safety-comment ------------------------------------------------
+        if id == "unsafe" && !unsafe_lines_seen.contains(&line) {
+            unsafe_lines_seen.push(line);
+            if !has_safety_comment(lx, line) {
+                out.push((
+                    line,
+                    Rule::SafetyComment,
+                    "`unsafe` without an immediately preceding `// SAFETY:` comment — \
+                     state the aliasing/bounds/feature-detection argument for this site"
+                        .to_string(),
+                ));
+            }
+        }
+
+        // -- no-fma --------------------------------------------------------
+        if id == "mul_add" || id.contains("fmadd") {
+            out.push((
+                line,
+                Rule::NoFma,
+                format!(
+                    "{id} fuses multiply-add with a single rounding — the AVX2 and \
+                     portable kernels are bitwise interchangeable only under separate \
+                     IEEE mul/add (DESIGN.md §11)"
+                ),
+            ));
+        }
+
+        // -- panic-free-supervised -----------------------------------------
+        if !in_test && SUPERVISED_MODULES.contains(&top) {
+            let method_call = |name: &str| {
+                id == name && i > 0 && toks[i - 1].tok == Tok::Punct('.') && punct_at(i + 1, '(')
+            };
+            let bang_macro = |name: &str| id == name && punct_at(i + 1, '!');
+            let what = if method_call("unwrap") {
+                Some(".unwrap()")
+            } else if method_call("expect") {
+                Some(".expect()")
+            } else if bang_macro("panic") {
+                Some("panic!")
+            } else if bang_macro("unreachable") {
+                Some("unreachable!")
+            } else if bang_macro("todo") {
+                Some("todo!")
+            } else if bang_macro("unimplemented") {
+                Some("unimplemented!")
+            } else if id == "panic_any" {
+                Some("panic_any")
+            } else {
+                None
+            };
+            if let Some(what) = what {
+                out.push((
+                    line,
+                    Rule::PanicFreeSupervised,
+                    format!(
+                        "{what} on the supervised request path (`{top}`) — a stray panic \
+                         defeats the §12 retry/isolate/quarantine blast-radius design; \
+                         propagate an error or emit a typed ErrCode frame"
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// The SAFETY contract must be on the same line (trailing comment) or in
+/// the contiguous comment block immediately above the `unsafe` line
+/// (attribute lines like `#[target_feature(...)]` are climbed over).
+fn has_safety_comment(lx: &Lexed, line: usize) -> bool {
+    let marked = |l: usize| {
+        let t = &lx.comment_text[l];
+        t.contains("SAFETY") || t.contains("# Safety")
+    };
+    if marked(line) {
+        return true;
+    }
+    let mut j = line.saturating_sub(1);
+    while j >= 1 {
+        match lx.line_kind[j] {
+            LineKind::CommentOnly => {
+                if marked(j) {
+                    return true;
+                }
+                j -= 1;
+            }
+            LineKind::Attr => j -= 1,
+            LineKind::Blank | LineKind::Code => return false,
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Tree walking
+// ---------------------------------------------------------------------------
+
+/// Derive the module path of `file` relative to the source root it was
+/// found under: `coordinator/mod.rs` → `coordinator`,
+/// `util/bench.rs` → `util::bench`, `main.rs` → `main`.
+fn module_of(rel: &Path) -> String {
+    let mut parts: Vec<String> = rel
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect();
+    if let Some(last) = parts.pop() {
+        let stem = last.trim_end_matches(".rs");
+        if stem != "mod" {
+            parts.push(stem.to_string());
+        }
+    }
+    if parts.is_empty() {
+        "crate".to_string()
+    } else {
+        parts.join("::")
+    }
+}
+
+/// Lint every `.rs` file under `root` (a file or directory). Directory
+/// entries are visited in sorted order so output is deterministic — the
+/// linter holds itself to the invariants it enforces.
+pub fn lint_path(root: &Path, report: &mut Report) -> Result<(), String> {
+    if root.is_file() {
+        return lint_file(root, root.parent().unwrap_or(Path::new("")), report);
+    }
+    if !root.is_dir() {
+        return Err(format!("{}: not a file or directory", root.display()));
+    }
+    walk(root, root, report)
+}
+
+fn walk(dir: &Path, root: &Path, report: &mut Report) -> Result<(), String> {
+    let rd = fs::read_dir(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    let mut entries: Vec<_> = rd
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            if p.file_name().is_some_and(|n| n == "target") {
+                continue;
+            }
+            walk(&p, root, report)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            lint_file(&p, root, report)?;
+        }
+    }
+    Ok(())
+}
+
+fn lint_file(path: &Path, root: &Path, report: &mut Report) -> Result<(), String> {
+    let src = fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    let module = module_of(rel);
+    report.absorb(lint_source(&path.display().to_string(), &module, &src));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(r: &FileResult) -> Vec<Rule> {
+        r.findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn tokenizer_ignores_strings_and_comments() {
+        let src = r#"
+            fn f() {
+                let s = "Instant::now() HashMap unsafe mul_add";
+                let c = 'u'; // Instant::now in a comment
+                /* HashMap::new() in a block comment */
+                let r = r"unsafe panic!";
+            }
+        "#;
+        let r = lint_source("t.rs", "coordinator", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn cfg_test_mod_is_exempt_from_scoped_rules() {
+        let src = "
+            #[cfg(test)]
+            mod tests {
+                use std::collections::HashMap;
+                fn f() {
+                    let m: HashMap<u32, u32> = HashMap::new();
+                    m.get(&1).unwrap();
+                }
+            }
+        ";
+        let r = lint_source("t.rs", "coordinator", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn cfg_test_use_item_does_not_swallow_following_code() {
+        let src = "
+            #[cfg(test)]
+            use std::collections::HashMap;
+            fn f(m: &std::collections::HashMap<u32, u32>) {
+                m.get(&1).unwrap();
+            }
+        ";
+        let r = lint_source("t.rs", "coordinator", src);
+        // The brace-less gated item ends at its `;`: the fn below is NOT
+        // test code, so both the HashMap mention and the unwrap fire.
+        assert_eq!(
+            rules_of(&r),
+            vec![Rule::UnorderedIter, Rule::PanicFreeSupervised],
+            "{:?}",
+            r.findings
+        );
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "
+            fn f<'a>(x: &'a str) -> &'a str {
+                let m: std::collections::HashMap<&'a str, u32>;
+                x
+            }
+        ";
+        let r = lint_source("t.rs", "server", src);
+        assert_eq!(rules_of(&r), vec![Rule::UnorderedIter]);
+    }
+
+    #[test]
+    fn module_scoping_controls_rules() {
+        let src = "fn f() { let t = Instant::now(); }";
+        assert!(lint_source("t.rs", "util::bench", src).findings.is_empty());
+        assert!(lint_source("t.rs", "main", src).findings.is_empty());
+        assert_eq!(rules_of(&lint_source("t.rs", "metrics", src)), vec![Rule::WallClock]);
+
+        let spawn = "fn f() { std::thread::spawn(|| {}); }";
+        assert!(lint_source("t.rs", "runtime::parallel", spawn).findings.is_empty());
+        assert_eq!(
+            rules_of(&lint_source("t.rs", "server", spawn)),
+            vec![Rule::ThreadSpawn]
+        );
+
+        let map = "fn f() { let m: HashMap<u32, u32>; }";
+        assert!(lint_source("t.rs", "metrics", map).findings.is_empty());
+        assert_eq!(
+            rules_of(&lint_source("t.rs", "runtime", map)),
+            vec![Rule::UnorderedIter]
+        );
+    }
+
+    #[test]
+    fn unwrap_or_is_not_unwrap() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap_or(0) }";
+        assert!(lint_source("t.rs", "coordinator", src).findings.is_empty());
+    }
+
+    #[test]
+    fn safety_comment_accepts_trailing_block_and_doc_forms() {
+        let trailing = "fn f(p: *const u8) { unsafe { p.read() }; } // SAFETY: p valid";
+        assert!(lint_source("t.rs", "runtime", trailing).findings.is_empty());
+
+        let above = "
+            fn f(p: *const u8) {
+                // SAFETY: caller guarantees p is valid for reads.
+                unsafe { p.read() };
+            }
+        ";
+        assert!(lint_source("t.rs", "runtime", above).findings.is_empty());
+
+        let doc = "
+            /// Does a thing.
+            ///
+            /// # Safety
+            ///
+            /// `p` must be valid.
+            #[inline]
+            pub unsafe fn f(p: *const u8) -> u8 { p.read() }
+        ";
+        assert!(lint_source("t.rs", "runtime", doc).findings.is_empty());
+
+        let missing = "
+            fn f(p: *const u8) {
+                let x = 1;
+                unsafe { p.read() };
+            }
+        ";
+        assert_eq!(
+            rules_of(&lint_source("t.rs", "runtime", missing)),
+            vec![Rule::SafetyComment]
+        );
+    }
+
+    #[test]
+    fn safety_comment_does_not_leak_across_code_lines() {
+        let src = "
+            fn f(p: *const u8) {
+                // SAFETY: p valid for the first read.
+                unsafe { p.read() };
+                unsafe { p.add(1).read() };
+            }
+        ";
+        let r = lint_source("t.rs", "runtime", src);
+        assert_eq!(rules_of(&r), vec![Rule::SafetyComment]);
+        assert_eq!(r.findings[0].line, 5);
+    }
+
+    #[test]
+    fn allow_with_reason_suppresses_and_is_counted() {
+        let src = "
+            fn f() {
+                // lint:allow(wall-clock) frontend reports real client latency
+                let t = Instant::now();
+            }
+        ";
+        let r = lint_source("t.rs", "server", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!((r.allows_total, r.allows_honored), (1, 1));
+
+        let trailing = "fn f() { let t = Instant::now(); } // lint:allow(wall-clock) measured, reported";
+        let r = lint_source("t.rs", "server", trailing);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn allow_without_reason_is_itself_a_finding() {
+        let src = "
+            fn f() {
+                // lint:allow(wall-clock)
+                let t = Instant::now();
+            }
+        ";
+        let r = lint_source("t.rs", "server", src);
+        // The bare escape suppresses nothing AND reports itself.
+        assert!(rules_of(&r).contains(&Rule::WallClock));
+        assert!(rules_of(&r).contains(&Rule::LintAllow));
+    }
+
+    #[test]
+    fn allow_unknown_rule_is_a_finding() {
+        let src = "fn f() {} // lint:allow(no-such-rule) because reasons";
+        let r = lint_source("t.rs", "server", src);
+        assert_eq!(rules_of(&r), vec![Rule::LintAllow]);
+    }
+
+    #[test]
+    fn allow_does_not_cross_a_blank_line() {
+        let src = "
+            fn f() {
+                // lint:allow(wall-clock) stale escape, separated by a blank
+
+                let t = Instant::now();
+            }
+        ";
+        let r = lint_source("t.rs", "server", src);
+        assert!(rules_of(&r).contains(&Rule::WallClock));
+        assert_eq!(r.allows_honored, 0);
+    }
+
+    #[test]
+    fn module_of_paths() {
+        assert_eq!(module_of(Path::new("coordinator/mod.rs")), "coordinator");
+        assert_eq!(module_of(Path::new("util/bench.rs")), "util::bench");
+        assert_eq!(module_of(Path::new("main.rs")), "main");
+        assert_eq!(module_of(Path::new("engine/native.rs")), "engine::native");
+    }
+
+    #[test]
+    fn no_fma_fires_everywhere_even_in_tests() {
+        let src = "
+            #[cfg(test)]
+            mod tests {
+                fn f(a: f32) -> f32 { a.mul_add(2.0, 1.0) }
+            }
+        ";
+        let r = lint_source("t.rs", "metrics", src);
+        assert_eq!(rules_of(&r), vec![Rule::NoFma]);
+    }
+}

@@ -1,0 +1,44 @@
+//! CLI for `loquetier-lint`. Usage: `loquetier-lint <dir-or-file>...`
+//!
+//! Prints findings as `file:line: lint[rule-id]: message`, then a summary
+//! line `loquetier-lint: files=N findings=N allows=N honored=N` that CI
+//! greps into its job-summary table. Exit codes: 0 clean, 1 findings,
+//! 2 usage or I/O error.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use loquetier_lint::{lint_path, Report};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        eprintln!("usage: loquetier-lint <dir-or-file>...");
+        eprintln!("  lints .rs files against the DESIGN.md \u{00a7}13 invariants");
+        return ExitCode::from(2);
+    }
+
+    let mut report = Report::default();
+    for arg in &args {
+        if let Err(e) = lint_path(Path::new(arg), &mut report) {
+            eprintln!("loquetier-lint: {e}");
+            return ExitCode::from(2);
+        }
+    }
+
+    for f in &report.findings {
+        println!("{f}");
+    }
+    println!(
+        "loquetier-lint: files={} findings={} allows={} honored={}",
+        report.files,
+        report.findings.len(),
+        report.allows_total,
+        report.allows_honored
+    );
+    if report.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

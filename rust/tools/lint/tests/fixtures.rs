@@ -1,0 +1,104 @@
+//! Fixture-corpus tests: every rule fires on its bad fixture and stays
+//! silent on the clean one, the escape-hatch semantics hold, and — the
+//! gate this crate exists for — the real tree under `rust/src` is clean.
+
+use std::path::{Path, PathBuf};
+
+use loquetier_lint::{lint_path, lint_source, FileResult, Report, Rule};
+
+fn fixture(rule_dir: &str, name: &str) -> String {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("fixtures")
+        .join(rule_dir)
+        .join(name);
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("{}: {e}", p.display()))
+}
+
+fn lint_fixture(rule_dir: &str, name: &str, module: &str) -> FileResult {
+    lint_source(&format!("{rule_dir}/{name}"), module, &fixture(rule_dir, name))
+}
+
+/// (fixture dir, rule, module the fixture is linted as)
+const CASES: &[(&str, Rule, &str)] = &[
+    ("wall-clock", Rule::WallClock, "engine"),
+    ("unordered-iter", Rule::UnorderedIter, "coordinator"),
+    ("thread-spawn", Rule::ThreadSpawn, "engine"),
+    ("safety-comment", Rule::SafetyComment, "runtime"),
+    ("no-fma", Rule::NoFma, "metrics"),
+    ("panic-free-supervised", Rule::PanicFreeSupervised, "server"),
+];
+
+#[test]
+fn every_rule_fires_on_its_bad_fixture() {
+    for &(dir, rule, module) in CASES {
+        let r = lint_fixture(dir, "bad.rs", module);
+        assert!(
+            r.findings.iter().any(|f| f.rule == rule),
+            "{dir}/bad.rs: expected a {} finding, got {:?}",
+            rule.id(),
+            r.findings
+        );
+        // A true positive, not collateral: every finding is the rule
+        // under test.
+        assert!(
+            r.findings.iter().all(|f| f.rule == rule),
+            "{dir}/bad.rs: unexpected extra findings {:?}",
+            r.findings
+        );
+    }
+}
+
+#[test]
+fn every_rule_is_silent_on_its_clean_fixture() {
+    for &(dir, _, module) in CASES {
+        let r = lint_fixture(dir, "clean.rs", module);
+        assert!(
+            r.findings.is_empty(),
+            "{dir}/clean.rs: expected clean, got {:?}",
+            r.findings
+        );
+    }
+}
+
+#[test]
+fn allow_with_reason_suppresses() {
+    let r = lint_fixture("allow", "good.rs", "server");
+    assert!(r.findings.is_empty(), "allow/good.rs: {:?}", r.findings);
+    assert_eq!((r.allows_total, r.allows_honored), (1, 1));
+}
+
+#[test]
+fn allow_without_reason_is_a_finding_and_suppresses_nothing() {
+    let r = lint_fixture("allow", "bare.rs", "server");
+    assert!(
+        r.findings.iter().any(|f| f.rule == Rule::LintAllow),
+        "allow/bare.rs: expected a lint-allow finding, got {:?}",
+        r.findings
+    );
+    assert!(
+        r.findings.iter().any(|f| f.rule == Rule::WallClock),
+        "allow/bare.rs: the bare escape must not suppress the wall-clock \
+         finding, got {:?}",
+        r.findings
+    );
+    assert_eq!(r.allows_honored, 0);
+}
+
+/// The tree gate: `rust/src` must lint clean with every escape hatch
+/// justified. This is the same invocation CI runs; a red test here means
+/// a contract from DESIGN.md §13 regressed.
+#[test]
+fn repo_tree_is_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../src");
+    let src = src.canonicalize().expect("rust/src exists");
+    let mut report = Report::default();
+    lint_path(&src, &mut report).expect("tree walk succeeds");
+    assert!(report.files > 10, "walked only {} files — wrong root?", report.files);
+    let rendered: Vec<String> = report.findings.iter().map(|f| f.to_string()).collect();
+    assert!(
+        report.findings.is_empty(),
+        "rust/src has {} unsuppressed findings:\n{}",
+        report.findings.len(),
+        rendered.join("\n")
+    );
+}
