@@ -11,9 +11,13 @@
 //! prefill strictly wins the fig6-style burst) and the Zipfian
 //! 1000-adapter paging comparison (`fig_zipf_attainment_{fixed,paged}` +
 //! swap counters, asserting unified adapter+KV paging strictly beats the
-//! fixed-slot baseline) as one entry to the repo-root
+//! fixed-slot baseline) and the shared-prefix tenant-trace comparison
+//! (`fig_prefix_{prefill_tokens_saved,hit_rate,attainment_{shared,cold}}`,
+//! asserting the radix prefix index strictly saves prefill tokens without
+//! losing attainment) as one entry to the repo-root
 //! `BENCH_FIGURES.json` trajectory, whose shape CI validates with jq
-//! (protocols: EXPERIMENTS.md §Fragmentation, §SLO, §Zipfian).
+//! (protocols: EXPERIMENTS.md §Fragmentation, §SLO, §Zipfian,
+//! §Tenant-trace).
 //!
 //! Run: cargo bench --bench figures
 //! CI smoke: cargo bench --bench figures -- --fast   (counters only)
@@ -213,6 +217,51 @@ fn zipf_paging_entries(cost: &CostModel) -> Vec<(String, f64)> {
     ]
 }
 
+/// Shared-prefix tenant-trace acceptance entries (ISSUE-10, DESIGN.md
+/// §14): the reduced multi-tenant trace run cold (prefix sharing off) and
+/// shared (radix index on) over the identical requests. Sharing must
+/// strictly save prefill tokens and must not lose attainment; the cold run
+/// must record zero hits (the inertness half of the acceptance bar). CI
+/// re-gates the recorded saving and attainment pair with jq.
+fn prefix_reuse_entries(cost: &CostModel) -> Vec<(String, f64)> {
+    let cold = harness::prefix_reuse_outcome(cost, false);
+    let shared = harness::prefix_reuse_outcome(cost, true);
+    println!(
+        "prefix reuse: cold completed={} attainment={:.4} | shared completed={} \
+         attainment={:.4} hits={} prefill_tokens_saved={}",
+        cold.completed,
+        cold.attainment,
+        shared.completed,
+        shared.attainment,
+        shared.prefix_hits,
+        shared.prefill_tokens_saved,
+    );
+    assert_eq!(
+        cold.prefix_hits, 0,
+        "prefix sharing off must be inert (recorded {} hits)",
+        cold.prefix_hits
+    );
+    assert!(
+        shared.prefill_tokens_saved > 0,
+        "tenant trace: prefix sharing must strictly reduce prefill tokens launched"
+    );
+    assert!(
+        shared.attainment >= cold.attainment,
+        "tenant trace: sharing must not lose attainment ({} < {})",
+        shared.attainment,
+        cold.attainment
+    );
+    vec![
+        ("fig_prefix_prefill_tokens_saved".to_string(), shared.prefill_tokens_saved as f64),
+        (
+            "fig_prefix_hit_rate".to_string(),
+            shared.prefix_hits as f64 / harness::TENANT_REQUESTS as f64,
+        ),
+        ("fig_prefix_attainment_shared".to_string(), shared.attainment),
+        ("fig_prefix_attainment_cold".to_string(), cold.attainment),
+    ]
+}
+
 fn record_figures_trajectory(entries: &[(String, f64)]) -> anyhow::Result<()> {
     // Best-effort read, same policy as BENCH_SMLM.json: a missing or
     // mangled file starts a fresh trajectory instead of losing this run.
@@ -247,6 +296,7 @@ fn main() -> anyhow::Result<()> {
     let mut entries = paged_counters(&cost);
     entries.extend(slo_attainment_entries(&cost));
     entries.extend(zipf_paging_entries(&cost));
+    entries.extend(prefix_reuse_entries(&cost));
     record_figures_trajectory(&entries)?;
     if fast {
         return Ok(());

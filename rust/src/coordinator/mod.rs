@@ -100,6 +100,13 @@ pub struct CoordinatorConfig {
     pub checkpoint_every: usize,
     /// Directory durable checkpoints are written to (None = off).
     pub checkpoint_dir: Option<std::path::PathBuf>,
+    /// Shared-prefix KV reuse (DESIGN.md §14): admission probes a radix
+    /// index of published prefix blocks and prefills only the uncached
+    /// suffix. Off by default — with the flag off the index is never
+    /// created and every code path reduces to the pre-§14 arithmetic
+    /// bit-for-bit. Only takes effect on backends whose caps report
+    /// `prefill_continuation` (a shared prefix *is* a resumed prefill).
+    pub prefix_sharing: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -122,6 +129,7 @@ impl Default for CoordinatorConfig {
             retry_backoff_cap_s: 0.8,
             checkpoint_every: 0,
             checkpoint_dir: None,
+            prefix_sharing: false,
         }
     }
 }
@@ -434,6 +442,11 @@ pub struct Coordinator {
     quarantined_total: u64,
     checkpoints_written: u64,
     backend_resets: u64,
+    /// Shared-prefix reuse run totals (DESIGN.md §14): admissions that
+    /// attached to cached prefix blocks, and the prompt tokens those hits
+    /// removed from the prefill plan.
+    prefix_hits_total: u64,
+    prefill_tokens_saved_total: u64,
 }
 
 impl Coordinator {
@@ -451,9 +464,13 @@ impl Coordinator {
         let capacity = CapacityAllocator::new(cfg.capacity.clone());
         let pager =
             AdapterPager::new(cfg.adapter_budget, cfg.adapter_page_blocks, cfg.adapter_paging);
+        let mut kv = KvCacheManager::new(cache_cfg);
+        if cfg.prefix_sharing {
+            kv.enable_prefix_sharing();
+        }
         Self {
             cfg,
-            kv: KvCacheManager::new(cache_cfg),
+            kv,
             policy,
             queue: VecDeque::new(),
             preempted: VecDeque::new(),
@@ -476,6 +493,8 @@ impl Coordinator {
             quarantined_total: 0,
             checkpoints_written: 0,
             backend_resets: 0,
+            prefix_hits_total: 0,
+            prefill_tokens_saved_total: 0,
         }
     }
 
@@ -626,6 +645,21 @@ impl Coordinator {
     /// Run-peak reserved-but-unused KV token capacity (sampled per step).
     pub fn kv_frag_peak_tokens(&self) -> usize {
         self.kv_frag_peak
+    }
+
+    /// Admissions that attached to cached shared-prefix blocks (§14).
+    pub fn prefix_hits(&self) -> u64 {
+        self.prefix_hits_total
+    }
+
+    /// Prompt tokens prefix hits removed from the prefill plan (§14).
+    pub fn prefill_tokens_saved(&self) -> u64 {
+        self.prefill_tokens_saved_total
+    }
+
+    /// Prefix-index blocks currently referenced by at least one live slot.
+    pub fn kv_blocks_shared(&self) -> usize {
+        self.kv.stats().kv_blocks_shared
     }
 
     pub fn active_len(&self) -> usize {
@@ -827,13 +861,32 @@ impl Coordinator {
     fn build_view(&self, caps: StepCaps) -> SchedView {
         let kv_stats = self.kv.stats();
         let kv_cfg = self.kv.config();
-        let queued_view = |r: &InferenceRequest| QueuedView {
-            id: r.id,
-            adapter: r.adapter,
-            prompt_len: r.prompt.len(),
-            max_new_tokens: r.max_new_tokens,
-            arrival_s: r.arrival_s,
-            slo: r.slo,
+        let sharing = self.cfg.prefix_sharing && caps.prefill_continuation;
+        let queued_view = |r: &InferenceRequest, truncates: bool| {
+            let prefix_hit_tokens = if sharing {
+                // Probe with exactly the tokens that would prefill: fresh
+                // admissions keep the prompt TAIL when bucket-truncated
+                // (`apply_admissions`), preempted resumes never
+                // re-truncate their folded context.
+                let prompt: &[i32] = if truncates {
+                    let keep = r.prompt.len().min(self.cfg.max_prompt_tokens);
+                    &r.prompt[r.prompt.len() - keep..]
+                } else {
+                    &r.prompt
+                };
+                self.kv.probe_prefix(r.adapter, prompt)
+            } else {
+                0
+            };
+            QueuedView {
+                id: r.id,
+                adapter: r.adapter,
+                prompt_len: r.prompt.len(),
+                max_new_tokens: r.max_new_tokens,
+                arrival_s: r.arrival_s,
+                slo: r.slo,
+                prefix_hit_tokens,
+            }
         };
         SchedView {
             now_s: self.now_s,
@@ -850,12 +903,16 @@ impl Coordinator {
             last_decode_id: self.last_decode_id,
             kv: KvView {
                 free_slots: kv_stats.slots_total - kv_stats.slots_used,
-                free_blocks: kv_stats.blocks_total - kv_stats.blocks_used,
+                // Unreferenced prefix-index tails are reclaimable on
+                // demand (`ensure_free` evicts LRU), so the planner may
+                // spend them; 0 whenever sharing is off.
+                free_blocks: kv_stats.blocks_total - kv_stats.blocks_used
+                    + if sharing { self.kv.reclaimable_blocks() } else { 0 },
                 block_tokens: kv_cfg.block_tokens,
                 slot_capacity: kv_cfg.slot_capacity,
             },
-            queue: self.queue.iter().map(queued_view).collect(),
-            preempted: self.preempted.iter().map(|a| queued_view(&a.req)).collect(),
+            queue: self.queue.iter().map(|r| queued_view(r, true)).collect(),
+            preempted: self.preempted.iter().map(|a| queued_view(&a.req, false)).collect(),
             active: self
                 .active
                 .iter()
@@ -897,21 +954,37 @@ impl Coordinator {
     /// Returns the ids rejected outright because their adapter can never be
     /// hosted (fixed-slot mode with the bank full — leaving them queued
     /// would livelock: no swap path will ever free them a slot).
-    fn apply_admissions(&mut self, plan: &StepPlan) -> Vec<u64> {
+    fn apply_admissions(&mut self, plan: &StepPlan, sharing: bool) -> Vec<u64> {
         let mut rejected = Vec::new();
         for _ in 0..plan.admit_preempted {
             let Some(mut a) = self.preempted.pop_front() else { break };
             let need = a.req.prompt.len();
-            match self.kv.allocate(a.req.id, need) {
-                Ok(slot) => {
+            let alloc = if sharing {
+                self.kv.allocate_shared(a.req.id, need, a.req.adapter, &a.req.prompt)
+            } else {
+                self.kv.allocate(a.req.id, need).map(|s| (s, 0))
+            };
+            match alloc {
+                Ok((slot, hit)) => {
                     a.kv_slot = slot;
                     a.phase = Phase::Admitted;
+                    // Cached prefix blocks are already resident: the
+                    // recompute prefill starts past them (0 on a miss —
+                    // the exact pre-§14 path).
+                    a.prefill_pos = hit;
+                    if hit > 0 {
+                        self.prefix_hits_total += 1;
+                        self.prefill_tokens_saved_total += hit as u64;
+                    }
                     self.active.push(a);
                 }
                 Err(_) => {
                     // Infeasible plan: put the front back and stop — the
-                    // prefix rule means nothing behind it may enter either.
-                    debug_assert!(false, "policy planned an unallocatable resume");
+                    // prefix rule means nothing behind it may enter
+                    // either. Under sharing the planner's view can go
+                    // stale within a step (eviction churn between probe
+                    // and claim), so only a sharing-off refusal asserts.
+                    debug_assert!(sharing, "policy planned an unallocatable resume");
                     self.preempted.push_front(a);
                     return rejected;
                 }
@@ -950,7 +1023,7 @@ impl Coordinator {
             if !self.kv.can_admit(need) {
                 // Infeasible plan from a custom policy: leave the request
                 // where it was instead of killing the engine loop.
-                debug_assert!(false, "policy planned an unallocatable admission");
+                debug_assert!(sharing, "policy planned an unallocatable admission");
                 self.queue.insert(pos, req);
                 continue;
             }
@@ -961,19 +1034,34 @@ impl Coordinator {
                 let keep = self.cfg.max_prompt_tokens;
                 req.prompt = req.prompt[req.prompt.len() - keep..].to_vec();
             }
-            let slot = match self.kv.allocate(req.id, need) {
-                Ok(slot) => slot,
+            let alloc = if sharing {
+                self.kv.allocate_shared(req.id, need, req.adapter, &req.prompt)
+            } else {
+                self.kv.allocate(req.id, need).map(|s| (s, 0))
+            };
+            let (slot, hit) = match alloc {
+                Ok(v) => v,
                 Err(_) => {
                     // can_admit passed just above, so the ledger should
                     // never refuse; if it does, re-queue instead of
                     // killing the engine loop (completions free blocks
-                    // and the next plan retries).
-                    debug_assert!(false, "can_admit passed but allocate refused");
+                    // and the next plan retries). Sharing makes this
+                    // reachable: the planner's probe can go stale inside
+                    // one step's admission burst.
+                    debug_assert!(sharing, "can_admit passed but allocate refused");
                     self.queue.insert(pos, req);
                     continue;
                 }
             };
-            self.active.push(ActiveRequest::new(req, slot));
+            if hit > 0 {
+                self.prefix_hits_total += 1;
+                self.prefill_tokens_saved_total += hit as u64;
+            }
+            let mut a = ActiveRequest::new(req, slot);
+            // Cached prefix blocks are already resident: prefill starts
+            // past them (0 on a miss — the exact pre-§14 path).
+            a.prefill_pos = hit;
+            self.active.push(a);
         }
         rejected
     }
@@ -1039,9 +1127,13 @@ impl Coordinator {
         };
         let view = self.build_view(caps);
         let plan = self.policy.plan(&view);
+        // Shared-prefix reuse rides the prefill-continuation capability: a
+        // hit admission IS a resumed prefill, so a backend that restarts
+        // RoPE at position 0 must never see one (DESIGN.md §14).
+        let sharing = self.cfg.prefix_sharing && caps.prefill_continuation;
 
         // --- Apply the plan ------------------------------------------------
-        out.dropped_requests.extend(self.apply_admissions(&plan));
+        out.dropped_requests.extend(self.apply_admissions(&plan, sharing));
         for &id in &plan.preempt {
             if self.preempt_by_id(id)? {
                 out.preempted_requests.push(id);
@@ -1146,10 +1238,14 @@ impl Coordinator {
             if !self.kv.reserve_decode_block(self.active[i].kv_slot) {
                 // With paging active, a same-step adapter page claim may
                 // have legitimately consumed the block the plan counted on
-                // — the row sits out and retries. With the pager inert this
-                // can only be a policy bug.
+                // — the row sits out and retries. Prefix sharing likewise:
+                // the plan spends reclaimable index blocks another claim
+                // may have evicted first. With both inert this can only be
+                // a policy bug.
                 debug_assert!(
-                    self.pager.budget != usize::MAX || self.pager.page_blocks > 0,
+                    self.pager.budget != usize::MAX
+                        || self.pager.page_blocks > 0
+                        || sharing,
                     "policy planned an unreservable decode row"
                 );
                 continue;
@@ -1410,6 +1506,16 @@ impl Coordinator {
                             cost.add(c);
                             self.trainers[ti].optimizer_applied();
                             out.optimizer_steps += 1;
+                            if self.cfg.prefix_sharing {
+                                // The optimizer just rewrote this adapter's
+                                // weights, so its cached prefix KV is stale:
+                                // detach the whole subtree (§14). Live
+                                // sharers keep their pre-step blocks until
+                                // release — their streams already committed
+                                // to the old weights.
+                                let adapter = self.trainers[ti].job.adapter;
+                                self.kv.invalidate_adapter_prefixes(adapter);
+                            }
                             self.maybe_checkpoint(ti, backend);
                             break;
                         }
@@ -1491,6 +1597,15 @@ impl Coordinator {
             a.last_token_s = step_end;
             a.phase = Phase::Decoding;
             self.decode_series.record(step_end, 1.0);
+            if sharing {
+                // The prompt's KV is now fully materialized: publish its
+                // whole blocks into the prefix index so later same-adapter
+                // admissions attach instead of recomputing. Best effort —
+                // it claims only genuinely free blocks, never evicts.
+                let slot = self.active[i].kv_slot;
+                let adapter = self.active[i].req.adapter;
+                self.kv.publish_prefix(slot, adapter, &self.active[i].req.prompt);
+            }
         }
 
         // Decode results.

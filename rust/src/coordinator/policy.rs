@@ -99,6 +99,11 @@ pub struct QueuedView {
     pub arrival_s: f64,
     /// Per-request SLO (None = the coordinator default applies).
     pub slo: Option<SloSpec>,
+    /// Cached shared-prefix tokens the coordinator's index probe found for
+    /// this request (0 when prefix sharing is off). The admission claim
+    /// shrinks by these blocks — they are already resident, claimed once
+    /// by their index nodes — and the prefill plan starts past them.
+    pub prefix_hit_tokens: usize,
 }
 
 /// An active (admitted or decoding) request, as the policy sees it.
@@ -308,25 +313,33 @@ impl KvSim {
         tokens.div_ceil(self.block_tokens)
     }
 
-    /// Mirror of `KvCacheManager::can_admit`.
-    fn can_admit(&self, tokens: usize) -> bool {
+    /// Mirror of `KvCacheManager::can_admit` / `allocate_shared`: a probed
+    /// shared prefix shrinks the claim by its whole blocks (those are the
+    /// index nodes' claims, not this request's). `hit_tokens` is 0 whenever
+    /// sharing is off, reducing to the original check bit-for-bit.
+    fn can_admit(&self, tokens: usize, hit_tokens: usize) -> bool {
+        let hit_blocks = hit_tokens / self.block_tokens;
         self.free_slots > 0
             && tokens <= self.slot_capacity
-            && self.blocks_for(tokens) <= self.free_blocks
+            && self.blocks_for(tokens).saturating_sub(hit_blocks) <= self.free_blocks
     }
 
-    /// Admit a request claiming blocks for `initial_tokens`.
+    /// Admit a request claiming blocks for `initial_tokens` (less its
+    /// probed shared prefix — mirroring `allocate_shared`, which also
+    /// starts the slot at `len == hit` with the prefill cursor past it).
     fn admit(&mut self, q: &QueuedView, prompt_len: usize, initial_tokens: usize) {
+        let hit_blocks = q.prefix_hit_tokens / self.block_tokens;
+        let hit = (hit_blocks * self.block_tokens).min(prompt_len.saturating_sub(1));
         self.free_slots -= 1;
-        self.free_blocks -= self.blocks_for(initial_tokens);
+        self.free_blocks -= self.blocks_for(initial_tokens).saturating_sub(hit_blocks);
         self.active.push(SimReq {
             id: q.id,
             arrival_s: q.arrival_s,
             phase: Phase::Admitted,
-            kv_len: 0,
+            kv_len: hit,
             kv_blocks: self.blocks_for(initial_tokens),
             prompt_len,
-            prefill_pos: 0,
+            prefill_pos: hit,
             prefill_started: false,
             last_token_s: 0.0,
             slo: q.slo,
@@ -447,7 +460,7 @@ fn admission_need(
 /// length; `true` in the second slot means admission is blocked.
 fn admit_preempted_prefix(sim: &mut KvSim, view: &SchedView) -> (usize, bool) {
     for (i, p) in view.preempted.iter().enumerate() {
-        if !sim.can_admit(p.prompt_len) {
+        if !sim.can_admit(p.prompt_len, p.prefix_hit_tokens) {
             return (i, true);
         }
         sim.admit(p, p.prompt_len, p.prompt_len);
@@ -529,7 +542,7 @@ impl SchedulePolicy for FifoPolicy {
             }
             for q in order {
                 let (prompt, need) = admission_need(&view.cfg, &view.kv, q.prompt_len, q.max_new_tokens);
-                if !sim.can_admit(need) {
+                if !sim.can_admit(need, q.prefix_hit_tokens) {
                     break;
                 }
                 sim.admit(q, prompt, need);
@@ -687,7 +700,7 @@ impl SchedulePolicy for SloAwarePolicy {
             }
             for q in order {
                 let (prompt, need) = admission_need(&view.cfg, &view.kv, q.prompt_len, q.max_new_tokens);
-                if !sim.can_admit(need) {
+                if !sim.can_admit(need, q.prefix_hit_tokens) {
                     break; // the most urgent keeps first claim on freed blocks
                 }
                 sim.admit(q, prompt, need);
@@ -834,7 +847,7 @@ impl SchedulePolicy for PeftPolicy {
                     break;
                 }
                 let (prompt, need) = admission_need(&view.cfg, &view.kv, q.prompt_len, q.max_new_tokens);
-                if !sim.can_admit(need) {
+                if !sim.can_admit(need, q.prefix_hit_tokens) {
                     break; // the batch waits for memory, like the original
                 }
                 sim.admit(q, prompt, need);
@@ -934,6 +947,7 @@ mod tests {
             max_new_tokens: max_new,
             arrival_s: at,
             slo: None,
+            prefix_hit_tokens: 0,
         }
     }
 

@@ -40,7 +40,7 @@ use anyhow::{anyhow, Result};
 use crate::engine::{
     Backend, BackendCaps, DecodeRow, PrefillSeq, StepCost, TrainSeq, TrainState, UnifiedOut,
 };
-use crate::kvcache::KvCacheManager;
+use crate::kvcache::{KvCacheManager, KvLayerView};
 use crate::model::{QuantizedTensor, VirtualizedRegistry, WeightStore};
 use crate::runtime::kernels::{
     gemm, rmsnorm, rmsnorm_backward, rope, silu, silu_grad, smlm_per_row, smlm_segmented,
@@ -627,19 +627,26 @@ impl NativeBackend {
                 }
             }
 
-            // Attention: cached prefix (layer plane) + in-launch keys.
+            // Attention: cached prefix + in-launch keys. Cached reads go
+            // through per-slot block-translation views: a shared-prefix
+            // position resolves to its radix-index node, everything else
+            // to the slot's own plane — for unshared slots the view is
+            // exactly the old contiguous `k_layer` slice, same arithmetic.
             // Parallel over (row, head) units — each owns one ctx slice.
             ctx.fill(0.0);
             {
                 let cache_ref: &KvCacheManager = cache;
+                let views: Vec<KvLayerView> = seqs
+                    .iter()
+                    .map(|s| cache_ref.layer_view(s.kv_slot, li))
+                    .collect();
                 let sctx = SharedSliceMut::new(&mut ctx);
                 self.pool.par_partition_weighted(&attn_prefix, |rg| {
                     let mut scores: Vec<f32> = Vec::new();
                     for u in rg {
                         let (t, head) = (u / nh, u % nh);
                         let s = &seqs[row_seq[t]];
-                        let ck = cache_ref.k_layer(s.kv_slot, li);
-                        let cv = cache_ref.v_layer(s.kv_slot, li);
+                        let view = &views[row_seq[t]];
                         let pos = row_pos[t];
                         let kvh = head / group;
                         let qh = &q[t * qd + head * hd..t * qd + (head + 1) * hd];
@@ -647,7 +654,7 @@ impl NativeBackend {
                         scores.resize(pos + 1, 0.0);
                         for (j, sc) in scores.iter_mut().enumerate() {
                             let kj = if j < s.pos0 {
-                                &ck[j * te + kvh * hd..j * te + (kvh + 1) * hd]
+                                &view.k(j)[kvh * hd..(kvh + 1) * hd]
                             } else {
                                 let jr = s.start + (j - s.pos0);
                                 &k[jr * kd + kvh * hd..jr * kd + (kvh + 1) * hd]
@@ -659,7 +666,7 @@ impl NativeBackend {
                         let out = unsafe { sctx.slice(t * qd + head * hd, hd) };
                         for (j, &p) in scores.iter().enumerate() {
                             let vj = if j < s.pos0 {
-                                &cv[j * te + kvh * hd..j * te + (kvh + 1) * hd]
+                                &view.v(j)[kvh * hd..(kvh + 1) * hd]
                             } else {
                                 let jr = s.start + (j - s.pos0);
                                 &v[jr * kd + kvh * hd..jr * kd + (kvh + 1) * hd]

@@ -28,8 +28,8 @@ use crate::metrics::{build_report, RunReport, SloSpec};
 use crate::model::{VirtualizedRegistry, WeightStore};
 use crate::runtime::{BucketTable, Manifest, ModelGeometry, UnifiedShape};
 use crate::workload::{
-    build_train_set, build_zipf_trace, LengthModel, PoissonArrivals, ALPACA_LENGTHS,
-    GSM8K_LENGTHS, SHAREGPT_LENGTHS,
+    build_tenant_trace, build_train_set, build_zipf_trace, LengthModel, PoissonArrivals,
+    ALPACA_LENGTHS, GSM8K_LENGTHS, SHAREGPT_LENGTHS,
 };
 
 /// Paper-scale serving capacities (A6000-class deployment of Llama3-8B).
@@ -382,6 +382,66 @@ pub fn zipf_paging_outcome(cost: &CostModel, paged: bool) -> ZipfOutcome {
         swaps: sys.inner.adapter_swaps(),
         resident: sys.inner.adapter_resident(),
         host: sys.inner.adapter_host(),
+    }
+}
+
+/// The shared-prefix multi-tenant acceptance scenario (DESIGN.md §14 /
+/// EXPERIMENTS.md §Tenant-trace): [`TENANT_ADAPTERS`] tenants, each with a
+/// [`TENANT_PREFIX_TOKENS`]-token system prompt its requests reuse with
+/// probability [`TENANT_REUSE_P`].
+pub const TENANT_ADAPTERS: usize = 8;
+pub const TENANT_REQUESTS: usize = 240;
+pub const TENANT_PREFIX_TOKENS: usize = 256;
+pub const TENANT_REUSE_P: f64 = 0.9;
+/// Fixed step budget both modes run under — neither side gets extra steps.
+pub const TENANT_STEP_BUDGET: usize = 50_000;
+
+/// One tenant-trace run's figure-of-merit row.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefixOutcome {
+    pub completed: usize,
+    pub attainment: f64,
+    pub prefix_hits: u64,
+    pub prefill_tokens_saved: u64,
+}
+
+/// Run the tenant trace once. `shared = true` turns the §14 radix prefix
+/// index on (admissions attach to published per-adapter prefixes and
+/// prefill only the uncached suffix); `shared = false` is the cold-cache
+/// baseline on the identical trace. Single-sourced for the figures bench
+/// so the jq-gated BENCH_FIGURES.json rows assert these exact runs.
+pub fn prefix_reuse_outcome(cost: &CostModel, shared: bool) -> PrefixOutcome {
+    let cfg = CoordinatorConfig { prefix_sharing: shared, ..gpu_coord_config() };
+    let mut sys = LoquetierSystem::new(Coordinator::new(cfg, gpu_cache()));
+    let mut be = sim_backend(cost.clone());
+    let lengths = SHAREGPT_LENGTHS.rescaled_to(360.0);
+    let requests = build_tenant_trace(
+        13,
+        TENANT_REQUESTS,
+        TENANT_ADAPTERS,
+        &mut PoissonArrivals::new(3.0),
+        &lengths,
+        TENANT_PREFIX_TOKENS,
+        TENANT_REUSE_P,
+        48,
+        GPU_PROMPT_CAP,
+        512,
+    )
+    .requests;
+    drive_to_completion(&mut sys, &mut be, requests, TENANT_STEP_BUDGET).unwrap();
+    let report = build_report(
+        "tenant",
+        sys.traces(),
+        &SloSpec::default(),
+        0,
+        0,
+        sys.now_s().max(1e-9),
+    );
+    PrefixOutcome {
+        completed: report.completed,
+        attainment: report.slo_attainment,
+        prefix_hits: sys.inner.prefix_hits(),
+        prefill_tokens_saved: sys.inner.prefill_tokens_saved(),
     }
 }
 

@@ -26,18 +26,40 @@
 //! automatically see the memory adapters occupy. The coordinator's adapter
 //! pager owns the eviction policy; this ledger only counts.
 //!
+//! **Shared-prefix reuse** (DESIGN.md §14): when prefix sharing is enabled
+//! a [`prefix::PrefixIndex`] maps `(adapter, token-block)` paths to
+//! refcounted chains of cached full blocks. [`KvCacheManager::allocate_shared`]
+//! points a new slot's leading blocks at a matching chain (the slot starts
+//! with `len == hit` and claims blocks only for the uncached suffix),
+//! [`KvCacheManager::publish_prefix`] feeds the index from a fully-prefilled
+//! slot, and readers go through [`KvCacheManager::layer_view`] — a per-slot
+//! block-translation table resolving absolute positions to node payloads or
+//! the slot's own plane. Copy-on-write is at the first divergent block: the
+//! probe stops there and everything after is the slot's private suffix.
+//! With the index absent (the default) every path below degenerates to the
+//! pre-sharing arithmetic bit-for-bit.
+//!
 //! Ledger invariants (checked by [`KvCacheManager::audit_ledger`] and the
 //! `scheduler_props` property tests):
 //!  * `blocks_used` equals the sum of every owned slot's held blocks plus
-//!    every resident adapter's claimed pages;
-//!  * a slot's `len` never exceeds `blocks * block_tokens`;
+//!    every resident adapter's claimed pages plus one block per live
+//!    prefix node — Σ *unique* claims: a block shared by N sequences is
+//!    claimed once, by its node;
+//!  * a slot's `len` never exceeds `(shared + blocks) * block_tokens` and
+//!    never drops below its shared-prefix length;
+//!  * every prefix node's refcount equals the number of slot chains that
+//!    reference it (refcounts conserved);
 //!  * release returns all of a slot's (or adapter's) blocks exactly once
 //!    (double release is an error, so a preempt/cancel/evict race cannot
-//!    double-free).
+//!    double-free) and drops exactly one ref per shared chain node.
 
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
+
+mod prefix;
+
+use prefix::PrefixIndex;
 
 /// Arena configuration.
 #[derive(Debug, Clone, Copy)]
@@ -73,8 +95,20 @@ impl CacheConfig {
 #[derive(Debug, Clone)]
 struct Slot {
     owner: Option<u64>,
+    /// Total cached tokens, shared prefix included (`len >= shared·bt`).
     len: usize,
+    /// Blocks this slot claims privately (the shared prefix is claimed by
+    /// its index nodes, once, not per sharer).
     blocks: usize,
+    /// Prefix-node chain backing blocks `[0..shared.len())`; empty unless
+    /// the slot was admitted through `allocate_shared`/`share`.
+    shared: Vec<usize>,
+}
+
+impl Slot {
+    fn shared_tokens(&self, block_tokens: usize) -> usize {
+        self.shared.len() * block_tokens
+    }
 }
 
 /// Aggregate statistics for the metrics reporter / the capacity allocator.
@@ -91,6 +125,11 @@ pub struct CacheStats {
     pub adapter_blocks: usize,
     /// Number of adapters currently holding page claims.
     pub adapters_resident: usize,
+    /// Blocks held by live prefix-index nodes (each counted once,
+    /// regardless of how many sequences share it).
+    pub prefix_blocks: usize,
+    /// Prefix blocks actively referenced by at least one slot chain.
+    pub kv_blocks_shared: usize,
 }
 
 impl CacheStats {
@@ -112,6 +151,9 @@ pub struct KvCacheManager {
     adapter_claims: BTreeMap<i32, usize>,
     k_data: Vec<Vec<f32>>,
     v_data: Vec<Vec<f32>>,
+    /// Radix index over shared prefix blocks; `None` (the default) keeps
+    /// every path below on the pre-sharing arithmetic.
+    prefix: Option<PrefixIndex>,
 }
 
 impl KvCacheManager {
@@ -119,14 +161,27 @@ impl KvCacheManager {
         let plane = cfg.plane_elems();
         Self {
             slots: (0..cfg.num_slots)
-                .map(|_| Slot { owner: None, len: 0, blocks: 0 })
+                .map(|_| Slot { owner: None, len: 0, blocks: 0, shared: Vec::new() })
                 .collect(),
             k_data: (0..cfg.num_slots).map(|_| vec![0.0; plane]).collect(),
             v_data: (0..cfg.num_slots).map(|_| vec![0.0; plane]).collect(),
             blocks_used: 0,
             adapter_claims: BTreeMap::new(),
+            prefix: None,
             cfg,
         }
+    }
+
+    /// Turn on shared-prefix reuse. Called once at construction time (the
+    /// coordinator gates it behind `CoordinatorConfig::prefix_sharing`).
+    pub fn enable_prefix_sharing(&mut self) {
+        if self.prefix.is_none() {
+            self.prefix = Some(PrefixIndex::new());
+        }
+    }
+
+    pub fn prefix_sharing_enabled(&self) -> bool {
+        self.prefix.is_some()
     }
 
     pub fn config(&self) -> &CacheConfig {
@@ -141,7 +196,7 @@ impl KvCacheManager {
         let need = self.cfg.blocks_for(tokens);
         self.free_slot().is_some()
             && tokens <= self.cfg.slot_capacity
-            && self.blocks_used + need <= self.cfg.total_blocks
+            && need <= self.free_blocks() + self.reclaimable_blocks()
     }
 
     fn free_slot(&self) -> Option<usize> {
@@ -151,6 +206,32 @@ impl KvCacheManager {
     /// Blocks not yet claimed by any slot.
     pub fn free_blocks(&self) -> usize {
         self.cfg.total_blocks - self.blocks_used
+    }
+
+    /// Blocks held by unreferenced prefix nodes — claimable on demand via
+    /// LRU eviction. Always 0 when sharing is off.
+    pub fn reclaimable_blocks(&self) -> usize {
+        self.prefix.as_ref().map_or(0, |p| p.reclaimable())
+    }
+
+    /// Shared-prefix tokens at the head of `slot` (0 for unshared slots).
+    pub fn shared_tokens(&self, slot: usize) -> usize {
+        self.slots
+            .get(slot)
+            .map_or(0, |s| s.shared_tokens(self.cfg.block_tokens))
+    }
+
+    /// Make at least `need` raw blocks free, evicting LRU unreferenced
+    /// prefix chain tails if sharing is on. With the index absent this is
+    /// exactly the old `need <= free_blocks()` check.
+    fn ensure_free(&mut self, need: usize) -> bool {
+        while self.free_blocks() < need {
+            if !self.prefix.as_mut().is_some_and(|p| p.evict_lru_one()) {
+                return false;
+            }
+            self.blocks_used -= 1;
+        }
+        true
     }
 
     /// Claim a slot plus the blocks `initial_tokens` needs. Appends beyond
@@ -164,16 +245,256 @@ impl KvCacheManager {
             ));
         }
         let need = self.cfg.blocks_for(initial_tokens);
-        if self.blocks_used + need > self.cfg.total_blocks {
+        if !self.ensure_free(need) {
             return Err(anyhow!("out of cache blocks"));
         }
         let idx = self.free_slot().ok_or_else(|| anyhow!("no free cache slot"))?;
         self.blocks_used += need;
         let slot = &mut self.slots[idx];
+        debug_assert!(slot.shared.is_empty(), "free slot holds a prefix chain");
         slot.owner = Some(request);
         slot.len = 0;
         slot.blocks = need;
         Ok(idx)
+    }
+
+    /// Longest cached prefix (in tokens) the index holds for
+    /// `(adapter, prompt)`, capped so at least one prompt token is always
+    /// left to prefill — the final chunk's logits emit the first generated
+    /// token, so a fully-cached prompt must still launch its last token.
+    /// Non-mutating; returns 0 when sharing is off.
+    pub fn probe_prefix(&self, adapter: i32, prompt: &[i32]) -> usize {
+        let Some(p) = self.prefix.as_ref() else { return 0 };
+        let bt = self.cfg.block_tokens;
+        let max_blocks = prompt.len().saturating_sub(1) / bt;
+        p.probe(adapter, prompt, bt).len().min(max_blocks) * bt
+    }
+
+    /// [`Self::allocate`] plus a prefix-index probe: the new slot's leading
+    /// blocks point at the longest cached `(adapter, prompt)` chain (one
+    /// ref per node), it claims blocks only for the uncached remainder of
+    /// `initial_tokens`, and starts with `len == hit` so backends treat
+    /// the suffix prefill as a continuation (`pos0 = cache.len`). Returns
+    /// `(slot, hit_tokens)`; plain allocation with hit 0 when sharing is
+    /// off. May evict unreferenced chain tails (LRU) to cover the claim —
+    /// the probed chain itself is ref-protected first.
+    pub fn allocate_shared(
+        &mut self,
+        request: u64,
+        initial_tokens: usize,
+        adapter: i32,
+        prompt: &[i32],
+    ) -> Result<(usize, usize)> {
+        if self.prefix.is_none() {
+            return self.allocate(request, initial_tokens).map(|s| (s, 0));
+        }
+        if initial_tokens > self.cfg.slot_capacity {
+            return Err(anyhow!(
+                "request {request} needs {initial_tokens} tokens > slot capacity {}",
+                self.cfg.slot_capacity
+            ));
+        }
+        let bt = self.cfg.block_tokens;
+        let need_total = self.cfg.blocks_for(initial_tokens);
+        let max_blocks = (prompt.len().saturating_sub(1) / bt).min(need_total);
+        let mut chain = match self.prefix.as_ref() {
+            Some(p) => p.probe(adapter, prompt, bt),
+            None => Vec::new(),
+        };
+        chain.truncate(max_blocks);
+        let hit = chain.len() * bt;
+        let own = need_total - chain.len();
+        let Some(idx) = self.free_slot() else {
+            return Err(anyhow!("no free cache slot"));
+        };
+        // Ref before evicting: an unreferenced published chain must not be
+        // reclaimed to make room for its own sharer.
+        if let Some(p) = self.prefix.as_mut() {
+            p.ref_chain(&chain);
+        }
+        if !self.ensure_free(own) {
+            if let Some(p) = self.prefix.as_mut() {
+                let freed = p.unref_chain(&chain);
+                self.blocks_used -= freed;
+            }
+            return Err(anyhow!("out of cache blocks"));
+        }
+        self.blocks_used += own;
+        let slot = &mut self.slots[idx];
+        debug_assert!(slot.shared.is_empty(), "free slot holds a prefix chain");
+        slot.owner = Some(request);
+        slot.len = hit;
+        slot.blocks = own;
+        slot.shared = chain;
+        Ok((idx, hit))
+    }
+
+    /// Attach the longest cached `(adapter, prompt)` chain to an already
+    /// allocated but still *empty* slot, returning the shared token count.
+    /// Blocks the slot claimed for the now-shared range are returned to
+    /// the pool (the chain nodes hold those claims). `allocate_shared` is
+    /// the fused form the coordinator uses; this exists for callers that
+    /// allocate first and discover the prefix later.
+    pub fn share(&mut self, slot: usize, adapter: i32, prompt: &[i32]) -> Result<usize> {
+        if self.prefix.is_none() {
+            return Ok(0);
+        }
+        let bt = self.cfg.block_tokens;
+        let s = self
+            .slots
+            .get(slot)
+            .ok_or_else(|| anyhow!("slot {slot} out of range"))?;
+        if s.owner.is_none() {
+            return Err(anyhow!("share on free slot {slot}"));
+        }
+        if s.len != 0 || !s.shared.is_empty() {
+            return Err(anyhow!("share on non-empty slot {slot}"));
+        }
+        let own_blocks = s.blocks;
+        let max_blocks = (prompt.len().saturating_sub(1) / bt).min(own_blocks);
+        let mut chain = match self.prefix.as_ref() {
+            Some(p) => p.probe(adapter, prompt, bt),
+            None => Vec::new(),
+        };
+        chain.truncate(max_blocks);
+        if chain.is_empty() {
+            return Ok(0);
+        }
+        let hit = chain.len() * bt;
+        if let Some(p) = self.prefix.as_mut() {
+            p.ref_chain(&chain);
+        }
+        self.blocks_used -= chain.len();
+        let s = &mut self.slots[slot];
+        s.blocks -= chain.len();
+        s.len = hit;
+        s.shared = chain;
+        Ok(hit)
+    }
+
+    /// Copy-on-write detach: materialize every shared block into the
+    /// slot's own plane (claiming blocks for them, evicting LRU tails if
+    /// needed — the source chain is ref-protected until the copy lands),
+    /// then drop the chain refs. Afterwards `k_layer`/`v_layer` are valid
+    /// again for this slot. No-op for unshared slots.
+    pub fn unshare(&mut self, slot: usize) -> Result<()> {
+        let s = self
+            .slots
+            .get(slot)
+            .ok_or_else(|| anyhow!("slot {slot} out of range"))?;
+        if s.owner.is_none() {
+            return Err(anyhow!("unshare on free slot {slot}"));
+        }
+        if s.shared.is_empty() {
+            return Ok(());
+        }
+        let chain = s.shared.clone();
+        if !self.ensure_free(chain.len()) {
+            return Err(anyhow!("out of cache blocks for unshare of slot {slot}"));
+        }
+        let (bt, te) = (self.cfg.block_tokens, self.cfg.token_elems);
+        let stride = self.cfg.layer_stride();
+        if let Some(p) = self.prefix.as_ref() {
+            for (b, &id) in chain.iter().enumerate() {
+                for l in 0..self.cfg.num_layers {
+                    let dst = l * stride + b * bt * te;
+                    self.k_data[slot][dst..dst + bt * te]
+                        .copy_from_slice(p.node_k_layer(id, l, bt, te));
+                    self.v_data[slot][dst..dst + bt * te]
+                        .copy_from_slice(p.node_v_layer(id, l, bt, te));
+                }
+            }
+        }
+        self.blocks_used += chain.len();
+        let s = &mut self.slots[slot];
+        s.blocks += chain.len();
+        s.shared.clear();
+        if let Some(p) = self.prefix.as_mut() {
+            let freed = p.unref_chain(&chain);
+            self.blocks_used -= freed;
+        }
+        Ok(())
+    }
+
+    /// Publish `slot`'s cached prompt prefix into the index so later
+    /// requests can share it. Walks the radix tree deduplicating against
+    /// existing nodes (including this slot's own chain) and inserts one
+    /// node per missing *full* block, claiming one raw free block each.
+    /// Best-effort: it never evicts — under pressure it publishes what
+    /// fits and stops. No-op when sharing is off, and a no-op for slots
+    /// whose chain was detached by an adapter invalidation (their KV
+    /// predates the current weights).
+    pub fn publish_prefix(&mut self, slot: usize, adapter: i32, prompt: &[i32]) {
+        if self.prefix.is_none() {
+            return;
+        }
+        let Some(s) = self.slots.get(slot) else { return };
+        if s.owner.is_none() {
+            return;
+        }
+        let (bt, te) = (self.cfg.block_tokens, self.cfg.token_elems);
+        let stride = self.cfg.layer_stride();
+        let nl = self.cfg.num_layers;
+        let full = (s.len.min(prompt.len())) / bt;
+        let chain = s.shared.clone();
+        // A detached chain means this adapter was invalidated (optimizer
+        // step) after the slot attached: its prefix KV predates the
+        // current weights and must not re-seed the index — not even as
+        // suffix children under any fresher nodes along the same keys.
+        if let Some(p) = self.prefix.as_ref() {
+            if chain.iter().any(|&id| p.is_detached(id)) {
+                return;
+            }
+        }
+        let mut parent: Option<usize> = None;
+        for b in 0..full {
+            let key = &prompt[b * bt..(b + 1) * bt];
+            let existing = self
+                .prefix
+                .as_ref()
+                .and_then(|p| p.child_of(adapter, parent, key));
+            if let Some(id) = existing {
+                parent = Some(id);
+                continue;
+            }
+            if self.free_blocks() == 0 {
+                return;
+            }
+            // Payload source: the slot's own plane for its private blocks;
+            // its (possibly detached) chain nodes for the shared range —
+            // the own plane holds zeros there, never the real K/V.
+            let (kd, vd) = if b < chain.len() {
+                match self.prefix.as_ref() {
+                    Some(p) => p.node_payload(chain[b]),
+                    None => return,
+                }
+            } else {
+                let mut kd = Vec::with_capacity(nl * bt * te);
+                let mut vd = Vec::with_capacity(nl * bt * te);
+                for l in 0..nl {
+                    let off = l * stride + b * bt * te;
+                    kd.extend_from_slice(&self.k_data[slot][off..off + bt * te]);
+                    vd.extend_from_slice(&self.v_data[slot][off..off + bt * te]);
+                }
+                (kd, vd)
+            };
+            let Some(p) = self.prefix.as_mut() else { return };
+            let id = p.insert_child(adapter, parent, key.to_vec(), kd, vd);
+            self.blocks_used += 1;
+            parent = Some(id);
+        }
+    }
+
+    /// Drop every cached prefix of `adapter` from the index: its weights
+    /// changed (optimizer step), so cached K/V must not seed *new*
+    /// requests. In-flight sharers keep their chains (stale-consistent
+    /// with their own already-computed suffix); those nodes free when the
+    /// last ref drops.
+    pub fn invalidate_adapter_prefixes(&mut self, adapter: i32) {
+        if let Some(p) = self.prefix.as_mut() {
+            let freed = p.invalidate_adapter(adapter);
+            self.blocks_used -= freed;
+        }
     }
 
     /// Ensure `slot` can take one more appended token, claiming a fresh
@@ -186,10 +507,10 @@ impl KvCacheManager {
         if s.owner.is_none() || s.len >= self.cfg.slot_capacity {
             return false;
         }
-        if s.len + 1 <= s.blocks * self.cfg.block_tokens {
+        if s.len + 1 <= (s.shared.len() + s.blocks) * self.cfg.block_tokens {
             return true; // current ledger already covers the next token
         }
-        if self.free_blocks() == 0 {
+        if !self.ensure_free(1) {
             return false;
         }
         self.blocks_used += 1;
@@ -208,20 +529,30 @@ impl KvCacheManager {
         }
         self.blocks_used -= s.blocks;
         let used = s.len;
+        let chain = std::mem::take(&mut s.shared);
+        let from = chain.len() * self.cfg.block_tokens;
         s.owner = None;
         s.len = 0;
         s.blocks = 0;
-        // Zero only the used prefix of each layer plane: stale KV beyond a
-        // slot's length is never read (attention masks by cache_lens), but
-        // a fresh owner must still see zeros in the range it will read
-        // before writing. Zeroing the whole plane cost ~160 µs per release
-        // at GPU scale (measured); this is proportional to actual use.
+        // Zero only the privately-written range of each layer plane: the
+        // shared prefix lives in index nodes, so `[0..from)` of the own
+        // plane was never touched. Stale KV beyond a slot's length is
+        // never read (attention masks by cache_lens), but a fresh owner
+        // must still see zeros in the range it will read before writing.
+        // Zeroing the whole plane cost ~160 µs per release at GPU scale
+        // (measured); this is proportional to actual use.
         let te = self.cfg.token_elems;
         let stride = self.cfg.layer_stride();
         for l in 0..self.cfg.num_layers {
             let off = l * stride;
-            self.k_data[slot][off..off + used * te].fill(0.0);
-            self.v_data[slot][off..off + used * te].fill(0.0);
+            self.k_data[slot][off + from * te..off + used * te].fill(0.0);
+            self.v_data[slot][off + from * te..off + used * te].fill(0.0);
+        }
+        // A preempted/finished sharer just drops its refs; the nodes stay
+        // published (or free now, if detached and this was the last ref).
+        if let Some(p) = self.prefix.as_mut() {
+            let freed = p.unref_chain(&chain);
+            self.blocks_used -= freed;
         }
         Ok(())
     }
@@ -244,6 +575,15 @@ impl KvCacheManager {
         }
         if len > s.len {
             return Err(anyhow!("truncate slot {slot} to {len} > current {}", s.len));
+        }
+        // Rollback marks are taken at `kv.len()`, which is >= the shared
+        // prefix from the moment of allocation, so a supervised retry can
+        // never land here; reject rather than silently corrupt the chain.
+        if len < s.shared_tokens(self.cfg.block_tokens) {
+            return Err(anyhow!(
+                "truncate slot {slot} to {len} below its {} shared-prefix tokens",
+                s.shared_tokens(self.cfg.block_tokens)
+            ));
         }
         let old = s.len;
         s.len = len;
@@ -308,11 +648,15 @@ impl KvCacheManager {
         self.slots[slot].len
     }
 
-    /// Blocks currently claimed by `slot` (the scheduler's `SchedView`
-    /// snapshots this so policies can plan reservations without the
-    /// ledger).
+    /// Blocks currently *covering* `slot` — private claims plus shared
+    /// chain nodes (the scheduler's `SchedView` snapshots this so policies
+    /// can plan reservations without the ledger; the reserve condition is
+    /// `len + 1 <= blocks(slot) * block_tokens` either way).
     pub fn blocks(&self, slot: usize) -> usize {
-        self.slots.get(slot).map(|s| s.blocks).unwrap_or(0)
+        self.slots
+            .get(slot)
+            .map(|s| s.blocks + s.shared.len())
+            .unwrap_or(0)
     }
 
     /// Append `n` tokens of K/V to `slot`. Payloads are layer-major
@@ -327,9 +671,8 @@ impl KvCacheManager {
                 k.len()
             ));
         }
-        let total_blocks = self.cfg.total_blocks;
         let block_tokens = self.cfg.block_tokens;
-        let s = &mut self.slots[slot];
+        let s = &self.slots[slot];
         if s.owner.is_none() {
             return Err(anyhow!("append to free slot {slot}"));
         }
@@ -341,49 +684,104 @@ impl KvCacheManager {
         }
         // On-demand paging: claim the blocks this append crosses into. A
         // worst-case allocation already holds them all, so this is a no-op
-        // on the ablation/baseline path.
-        let need_total = (s.len + n).div_ceil(block_tokens);
-        if need_total > s.blocks {
-            let extra = need_total - s.blocks;
-            let free = total_blocks - self.blocks_used;
-            if extra > free {
+        // on the ablation/baseline path. The shared prefix's blocks are
+        // the index nodes' claims, so only the private remainder counts
+        // against this slot's ledger.
+        let len = s.len;
+        let need_own = (len + n).div_ceil(block_tokens).saturating_sub(s.shared.len());
+        if need_own > s.blocks {
+            let extra = need_own - s.blocks;
+            if !self.ensure_free(extra) {
+                let free = self.free_blocks();
                 return Err(anyhow!(
                     "slot {slot} out of cache blocks: needs {extra} more, {free} free"
                 ));
             }
             self.blocks_used += extra;
-            s.blocks = need_total;
+            self.slots[slot].blocks = need_own;
         }
         let stride = self.cfg.layer_stride();
         for l in 0..nl {
-            let dst = l * stride + s.len * te;
+            let dst = l * stride + len * te;
             let src = l * n * te;
             self.k_data[slot][dst..dst + n * te].copy_from_slice(&k[src..src + n * te]);
             self.v_data[slot][dst..dst + n * te].copy_from_slice(&v[src..src + n * te]);
         }
-        s.len += n;
+        self.slots[slot].len += n;
         Ok(())
     }
 
-    /// Borrow one layer's full plane (capacity-padded) of a slot.
+    /// Borrow one layer's full plane (capacity-padded) of a slot. Only
+    /// valid for *unshared* slots — a shared slot's leading blocks live in
+    /// index nodes, not this plane; such consumers (the AOT gather path)
+    /// must `unshare` first or read through [`Self::layer_view`].
     pub fn k_layer(&self, slot: usize, layer: usize) -> &[f32] {
+        debug_assert!(
+            self.slots[slot].shared.is_empty(),
+            "k_layer on shared slot {slot}: use layer_view or unshare"
+        );
         let stride = self.cfg.layer_stride();
         &self.k_data[slot][layer * stride..(layer + 1) * stride]
     }
 
     pub fn v_layer(&self, slot: usize, layer: usize) -> &[f32] {
+        debug_assert!(
+            self.slots[slot].shared.is_empty(),
+            "v_layer on shared slot {slot}: use layer_view or unshare"
+        );
         let stride = self.cfg.layer_stride();
         &self.v_data[slot][layer * stride..(layer + 1) * stride]
     }
 
+    /// Block-translation view of one slot × layer: resolves an *absolute*
+    /// token position to the backing storage — a shared prefix node for
+    /// positions under the shared length, the slot's own plane (which is
+    /// absolute-indexed too) otherwise. For unshared slots the node table
+    /// is empty and `k(pos)` degenerates to exactly the old
+    /// `k_layer(..)[pos*te..]` slice, so the native backend reads through
+    /// this unconditionally.
+    pub fn layer_view(&self, slot: usize, layer: usize) -> KvLayerView<'_> {
+        let stride = self.cfg.layer_stride();
+        let (bt, te) = (self.cfg.block_tokens, self.cfg.token_elems);
+        let s = &self.slots[slot];
+        let (k_nodes, v_nodes) = match self.prefix.as_ref() {
+            Some(p) if !s.shared.is_empty() => (
+                s.shared.iter().map(|&id| p.node_k_layer(id, layer, bt, te)).collect(),
+                s.shared.iter().map(|&id| p.node_v_layer(id, layer, bt, te)).collect(),
+            ),
+            _ => (Vec::new(), Vec::new()),
+        };
+        KvLayerView {
+            k_own: &self.k_data[slot][layer * stride..(layer + 1) * stride],
+            v_own: &self.v_data[slot][layer * stride..(layer + 1) * stride],
+            k_nodes,
+            v_nodes,
+            shared_tokens: s.shared_tokens(bt),
+            block_tokens: bt,
+            token_elems: te,
+        }
+    }
+
     pub fn stats(&self) -> CacheStats {
+        let bt = self.cfg.block_tokens;
         let slots_used = self.slots.iter().filter(|s| s.owner.is_some()).count();
-        let tokens_cached: usize = self.slots.iter().map(|s| s.len).sum();
+        let prefix_blocks = self.prefix.as_ref().map_or(0, |p| p.live_blocks());
+        // Count each shared block once: a slot's shared range belongs to
+        // its index nodes, which are tallied via `prefix_blocks` — so the
+        // utilization/fragmentation stats stay honest when N sequences
+        // point at the same chain.
+        let own_tokens: usize = self
+            .slots
+            .iter()
+            .map(|s| s.len - s.shared_tokens(bt))
+            .sum();
+        let tokens_cached = own_tokens + prefix_blocks * bt;
         let reserved_tokens: usize = self
             .slots
             .iter()
-            .map(|s| s.blocks * self.cfg.block_tokens)
-            .sum();
+            .map(|s| s.blocks * bt)
+            .sum::<usize>()
+            + prefix_blocks * bt;
         CacheStats {
             slots_used,
             slots_total: self.cfg.num_slots,
@@ -393,6 +791,8 @@ impl KvCacheManager {
             tokens_reserved_unused: reserved_tokens.saturating_sub(tokens_cached),
             adapter_blocks: self.adapter_blocks_used(),
             adapters_resident: self.adapters_resident(),
+            prefix_blocks,
+            kv_blocks_shared: self.prefix.as_ref().map_or(0, |p| p.shared_blocks()),
         }
     }
 
@@ -401,6 +801,7 @@ impl KvCacheManager {
     /// or double-frees blocks corrupts `blocks_used` relative to the
     /// per-slot ledgers and fails here immediately.
     pub fn audit_ledger(&self) -> Result<()> {
+        let bt = self.cfg.block_tokens;
         let kv_held: usize = self
             .slots
             .iter()
@@ -408,10 +809,11 @@ impl KvCacheManager {
             .map(|s| s.blocks)
             .sum();
         let adapter_held = self.adapter_blocks_used();
-        if kv_held + adapter_held != self.blocks_used {
+        let prefix_held = self.prefix.as_ref().map_or(0, |p| p.live_blocks());
+        if kv_held + adapter_held + prefix_held != self.blocks_used {
             return Err(anyhow!(
-                "ledger drift: slots hold {kv_held} + adapter pages {adapter_held} blocks, \
-                 counter says {}",
+                "ledger drift: slots hold {kv_held} + adapter pages {adapter_held} + prefix \
+                 nodes {prefix_held} blocks, counter says {}",
                 self.blocks_used
             ));
         }
@@ -421,18 +823,83 @@ impl KvCacheManager {
                 self.blocks_used, self.cfg.total_blocks
             ));
         }
+        let mut chain_refs: BTreeMap<usize, usize> = BTreeMap::new();
         for (i, s) in self.slots.iter().enumerate() {
-            if s.owner.is_none() && (s.blocks != 0 || s.len != 0) {
-                return Err(anyhow!("free slot {i} still holds {} blocks / {} tokens", s.blocks, s.len));
-            }
-            if s.len > s.blocks * self.cfg.block_tokens {
+            if s.owner.is_none() && (s.blocks != 0 || s.len != 0 || !s.shared.is_empty()) {
                 return Err(anyhow!(
-                    "slot {i}: {} tokens exceed its {} claimed blocks",
-                    s.len, s.blocks
+                    "free slot {i} still holds {} blocks / {} tokens / {} chain nodes",
+                    s.blocks, s.len, s.shared.len()
                 ));
             }
+            if !s.shared.is_empty() && self.prefix.is_none() {
+                return Err(anyhow!("slot {i} holds a prefix chain but sharing is off"));
+            }
+            if s.len < s.shared_tokens(bt) {
+                return Err(anyhow!(
+                    "slot {i}: {} tokens shorter than its {} shared-prefix tokens",
+                    s.len, s.shared_tokens(bt)
+                ));
+            }
+            if s.len > (s.shared.len() + s.blocks) * bt {
+                return Err(anyhow!(
+                    "slot {i}: {} tokens exceed its {} shared + {} claimed blocks",
+                    s.len, s.shared.len(), s.blocks
+                ));
+            }
+            for &id in &s.shared {
+                *chain_refs.entry(id).or_insert(0) += 1;
+            }
+        }
+        if let Some(p) = self.prefix.as_ref() {
+            p.audit(&chain_refs)?;
+        } else if !chain_refs.is_empty() {
+            return Err(anyhow!("slot chains reference nodes but no index exists"));
         }
         Ok(())
+    }
+}
+
+/// Per-slot, per-layer block-translation table (see
+/// [`KvCacheManager::layer_view`]). Positions are absolute; slices are
+/// one token's `token_elems` values.
+pub struct KvLayerView<'a> {
+    k_own: &'a [f32],
+    v_own: &'a [f32],
+    k_nodes: Vec<&'a [f32]>,
+    v_nodes: Vec<&'a [f32]>,
+    shared_tokens: usize,
+    block_tokens: usize,
+    token_elems: usize,
+}
+
+impl<'a> KvLayerView<'a> {
+    #[inline]
+    pub fn k(&self, pos: usize) -> &'a [f32] {
+        let te = self.token_elems;
+        if pos < self.shared_tokens {
+            let b = pos / self.block_tokens;
+            let o = pos % self.block_tokens;
+            &self.k_nodes[b][o * te..(o + 1) * te]
+        } else {
+            &self.k_own[pos * te..(pos + 1) * te]
+        }
+    }
+
+    #[inline]
+    pub fn v(&self, pos: usize) -> &'a [f32] {
+        let te = self.token_elems;
+        if pos < self.shared_tokens {
+            let b = pos / self.block_tokens;
+            let o = pos % self.block_tokens;
+            &self.v_nodes[b][o * te..(o + 1) * te]
+        } else {
+            &self.v_own[pos * te..(pos + 1) * te]
+        }
+    }
+
+    /// Shared-prefix length of the slot this view was taken from.
+    pub fn shared_tokens(&self) -> usize {
+        self.shared_tokens
     }
 }
 
@@ -688,5 +1155,251 @@ mod tests {
         let full = vec![0.0; 2 * 32 * 4];
         m.append(s, 32, &full, &full).unwrap();
         assert!(!m.reserve_decode_block(s), "slot at capacity cannot take a token");
+    }
+
+    /// `[nl=2][n][te=4]` payload where token `t` of layer `l` holds
+    /// `base + 100·l + t` in all four elems — distinguishable per position.
+    fn payload(n: usize, base: f32) -> Vec<f32> {
+        let mut p = Vec::with_capacity(2 * n * 4);
+        for l in 0..2 {
+            for t in 0..n {
+                for _ in 0..4 {
+                    p.push(base + (100 * l + t) as f32);
+                }
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn prefix_share_and_read_through_view() {
+        let mut m = KvCacheManager::new(cfg());
+        m.enable_prefix_sharing();
+        let prompt: Vec<i32> = (0..16).collect();
+        let s0 = m.allocate(1, 16).unwrap(); // 2 blocks
+        let k = payload(16, 0.0);
+        let v = payload(16, 1000.0);
+        m.append(s0, 16, &k, &v).unwrap();
+        m.publish_prefix(s0, 0, &prompt);
+        let st = m.stats();
+        assert_eq!(st.prefix_blocks, 2, "two full blocks published");
+        assert_eq!(st.blocks_used, 4, "2 slot blocks + 2 node blocks");
+        m.audit_ledger().unwrap();
+        // The probe caps so at least one prompt token is left to prefill.
+        assert_eq!(m.probe_prefix(0, &prompt), 8);
+        let mut longer = prompt.clone();
+        longer.push(99);
+        assert_eq!(m.probe_prefix(0, &longer), 16, "divergent tail, full-block hit");
+        assert_eq!(m.probe_prefix(1, &prompt), 0, "index is adapter-keyed");
+        // Sharer: 1 shared block + 1 private, starts at len == hit.
+        let (s1, hit) = m.allocate_shared(2, 16, 0, &prompt).unwrap();
+        assert_eq!(hit, 8);
+        assert_eq!(m.len(s1), 8);
+        assert_eq!(m.shared_tokens(s1), 8);
+        assert_eq!(m.blocks(s1), 2, "1 private + 1 chain node");
+        assert_eq!(m.stats().kv_blocks_shared, 1);
+        m.audit_ledger().unwrap();
+        // Suffix append lands at absolute position 8 in the own plane.
+        let ks = payload(8, 50.0);
+        let vs = payload(8, 2000.0);
+        m.append(s1, 8, &ks, &vs).unwrap();
+        assert_eq!(m.len(s1), 16);
+        let view = m.layer_view(s1, 1);
+        assert_eq!(view.shared_tokens(), 8);
+        // Shared range resolves to the publisher's data (layer 1, token 3).
+        assert_eq!(view.k(3), &k[(16 + 3) * 4..(16 + 4) * 4]);
+        assert_eq!(view.v(3), &v[(16 + 3) * 4..(16 + 4) * 4]);
+        // Own range resolves absolutely (position 10 = suffix token 2).
+        assert_eq!(view.k(10), &ks[(8 + 2) * 4..(8 + 3) * 4]);
+        drop(view);
+        // Republishing the same prompt dedups against existing nodes.
+        m.publish_prefix(s1, 0, &prompt);
+        assert_eq!(m.stats().prefix_blocks, 2, "no duplicate nodes");
+        m.audit_ledger().unwrap();
+        m.release(s1).unwrap();
+        assert_eq!(m.stats().kv_blocks_shared, 0, "refs dropped on release");
+        m.release(s0).unwrap();
+        assert_eq!(m.stats().blocks_used, 2, "published nodes outlive their publisher");
+        assert_eq!(m.reclaimable_blocks(), 2);
+        m.audit_ledger().unwrap();
+    }
+
+    #[test]
+    fn sharing_off_paths_are_inert() {
+        let mut m = KvCacheManager::new(cfg());
+        let prompt: Vec<i32> = (0..16).collect();
+        let (s, hit) = m.allocate_shared(1, 16, 0, &prompt).unwrap();
+        assert_eq!(hit, 0);
+        assert_eq!(m.len(s), 0);
+        assert_eq!(m.probe_prefix(0, &prompt), 0);
+        m.publish_prefix(s, 0, &prompt);
+        assert_eq!(m.share(s, 0, &prompt).unwrap(), 0);
+        let st = m.stats();
+        assert_eq!((st.prefix_blocks, st.kv_blocks_shared), (0, 0));
+        assert_eq!(st.blocks_used, 2);
+        assert_eq!(m.reclaimable_blocks(), 0);
+        m.audit_ledger().unwrap();
+    }
+
+    #[test]
+    fn eviction_is_lru_over_unreferenced_tails_and_protects_live_chains() {
+        let mut m = KvCacheManager::new(cfg()); // 12 blocks
+        m.enable_prefix_sharing();
+        let prompt: Vec<i32> = (0..16).collect();
+        let s0 = m.allocate(1, 16).unwrap();
+        let k = payload(16, 0.0);
+        m.append(s0, 16, &k, &k).unwrap();
+        m.publish_prefix(s0, 0, &prompt);
+        m.release(s0).unwrap();
+        assert_eq!(m.stats().blocks_used, 2, "only the two nodes remain");
+        assert_eq!(m.reclaimable_blocks(), 2);
+        let _a = m.allocate(2, 32).unwrap(); // 4 blocks
+        let _b = m.allocate(3, 32).unwrap(); // 4 blocks -> 10 used, 2 raw free
+        assert!(m.can_admit(24), "2 raw free + 2 reclaimable cover 3 blocks");
+        let c = m.allocate(4, 24).unwrap(); // must evict the chain tail
+        assert_eq!(m.stats().prefix_blocks, 1, "tail evicted first (leaf-only LRU)");
+        assert_eq!(m.probe_prefix(0, &prompt), 8, "surviving root still matches");
+        m.audit_ledger().unwrap();
+        m.release(c).unwrap(); // 3 raw free again
+        // A sharer refs its chain *before* eviction runs, so making room
+        // for its private blocks can never reclaim its own prefix.
+        let mut long = prompt.clone();
+        long.push(7);
+        let (s1, hit) = m.allocate_shared(9, 17, 0, &long).unwrap();
+        assert_eq!(hit, 8);
+        m.audit_ledger().unwrap();
+        // Oversized shared admission: the only node is referenced (nothing
+        // reclaimable), the claim cannot be covered, and the failure path
+        // must unwind the refs it took.
+        assert!(m.allocate_shared(11, 32, 0, &long).is_err());
+        assert_eq!(m.stats().kv_blocks_shared, 1, "failed admission unwound its refs");
+        m.audit_ledger().unwrap();
+        m.release(s1).unwrap();
+        m.audit_ledger().unwrap();
+    }
+
+    #[test]
+    fn unshare_materializes_shared_blocks_cow() {
+        let mut m = KvCacheManager::new(cfg());
+        m.enable_prefix_sharing();
+        let prompt: Vec<i32> = (0..16).collect();
+        let s0 = m.allocate(1, 16).unwrap();
+        let k = payload(16, 0.0);
+        let v = payload(16, 1000.0);
+        m.append(s0, 16, &k, &v).unwrap();
+        m.publish_prefix(s0, 0, &prompt);
+        let (s1, hit) = m.allocate_shared(2, 16, 0, &prompt).unwrap();
+        assert_eq!(hit, 8);
+        let ks = payload(8, 50.0);
+        m.append(s1, 8, &ks, &ks).unwrap();
+        let used_before = m.stats().blocks_used;
+        m.unshare(s1).unwrap();
+        assert_eq!(m.shared_tokens(s1), 0);
+        assert_eq!(m.blocks(s1), 2, "chain block replaced by a private copy");
+        assert_eq!(m.stats().blocks_used, used_before + 1);
+        // k_layer is valid again and the copied range matches the source.
+        assert_eq!(&m.k_layer(s1, 0)[..8 * 4], &k[..8 * 4]);
+        assert_eq!(&m.v_layer(s1, 1)[..8 * 4], &v[16 * 4..(16 + 8) * 4]);
+        assert_eq!(m.stats().kv_blocks_shared, 0);
+        m.audit_ledger().unwrap();
+        m.unshare(s1).unwrap(); // idempotent on unshared slots
+        m.release(s1).unwrap();
+        // Release must zero the formerly-shared range it materialized.
+        let s2 = m.allocate(3, 16).unwrap();
+        assert_eq!(s2, s1);
+        assert!(m.k_layer(s2, 0).iter().all(|&x| x == 0.0));
+        m.audit_ledger().unwrap();
+    }
+
+    #[test]
+    fn share_attaches_to_empty_slot_and_returns_surplus_blocks() {
+        let mut m = KvCacheManager::new(cfg());
+        m.enable_prefix_sharing();
+        let prompt: Vec<i32> = (0..16).collect();
+        let s0 = m.allocate(1, 16).unwrap();
+        let k = payload(16, 0.0);
+        m.append(s0, 16, &k, &k).unwrap();
+        m.publish_prefix(s0, 0, &prompt);
+        let s1 = m.allocate(2, 16).unwrap(); // claims 2 blocks up front
+        let used = m.stats().blocks_used;
+        let hit = m.share(s1, 0, &prompt).unwrap();
+        assert_eq!(hit, 8);
+        assert_eq!(m.len(s1), 8);
+        assert_eq!(m.blocks(s1), 2, "1 private + 1 chain node");
+        assert_eq!(m.stats().blocks_used, used - 1, "surplus block returned to the pool");
+        assert!(m.share(s1, 0, &prompt).is_err(), "share on a non-empty slot rejected");
+        m.audit_ledger().unwrap();
+        m.release(s1).unwrap();
+        m.release(s0).unwrap();
+        m.audit_ledger().unwrap();
+    }
+
+    #[test]
+    fn invalidate_detaches_and_frees_on_last_unref() {
+        let mut m = KvCacheManager::new(cfg());
+        m.enable_prefix_sharing();
+        let prompt: Vec<i32> = (0..16).collect();
+        let s0 = m.allocate(1, 16).unwrap();
+        let k = payload(16, 0.0);
+        m.append(s0, 16, &k, &k).unwrap();
+        m.publish_prefix(s0, 0, &prompt);
+        m.release(s0).unwrap();
+        let (s1, hit) = m.allocate_shared(2, 16, 0, &prompt).unwrap();
+        assert_eq!(hit, 8);
+        m.invalidate_adapter_prefixes(0);
+        assert_eq!(m.stats().prefix_blocks, 1, "unreferenced node freed now");
+        assert_eq!(m.probe_prefix(0, &prompt), 0, "detached chains never match");
+        m.audit_ledger().unwrap();
+        m.release(s1).unwrap();
+        assert_eq!(m.stats().prefix_blocks, 0, "last unref frees the detached node");
+        assert_eq!(m.stats().blocks_used, 0);
+        m.audit_ledger().unwrap();
+    }
+
+    #[test]
+    fn invalidated_sharer_does_not_republish_stale_prefix() {
+        let mut m = KvCacheManager::new(cfg());
+        m.enable_prefix_sharing();
+        let prompt: Vec<i32> = (0..16).collect();
+        let s0 = m.allocate(1, 16).unwrap();
+        let k = payload(16, 0.0);
+        m.append(s0, 16, &k, &k).unwrap();
+        m.publish_prefix(s0, 0, &prompt);
+        m.release(s0).unwrap();
+        let (s1, hit) = m.allocate_shared(2, 16, 0, &prompt).unwrap();
+        assert_eq!(hit, 8);
+        let ks = payload(8, 50.0);
+        m.append(s1, 8, &ks, &ks).unwrap();
+        // Optimizer step on adapter 0 while s1 is in flight: its chain
+        // detaches. Completing the prefill must NOT re-seed the index
+        // with the pre-step payload.
+        m.invalidate_adapter_prefixes(0);
+        m.publish_prefix(s1, 0, &prompt);
+        assert_eq!(m.probe_prefix(0, &prompt), 0, "stale chain stayed out of the index");
+        assert_eq!(m.stats().prefix_blocks, 1, "only the detached, still-referenced node");
+        m.audit_ledger().unwrap();
+        m.release(s1).unwrap();
+        assert_eq!(m.stats().blocks_used, 0);
+        m.audit_ledger().unwrap();
+    }
+
+    #[test]
+    fn truncate_below_shared_prefix_rejected() {
+        let mut m = KvCacheManager::new(cfg());
+        m.enable_prefix_sharing();
+        let prompt: Vec<i32> = (0..16).collect();
+        let s0 = m.allocate(1, 16).unwrap();
+        let k = payload(16, 0.0);
+        m.append(s0, 16, &k, &k).unwrap();
+        m.publish_prefix(s0, 0, &prompt);
+        let (s1, hit) = m.allocate_shared(2, 16, 0, &prompt).unwrap();
+        assert_eq!(hit, 8);
+        let ks = payload(4, 50.0);
+        m.append(s1, 4, &ks, &ks).unwrap(); // len 12
+        m.truncate(s1, 10).unwrap();
+        m.truncate(s1, 8).unwrap(); // exactly the shared boundary is fine
+        assert!(m.truncate(s1, 7).is_err(), "cannot cut into the shared chain");
+        assert_eq!(m.len(s1), 8);
+        m.audit_ledger().unwrap();
     }
 }

@@ -1,0 +1,452 @@
+//! Refcounted radix index over shared KV prefix blocks (DESIGN.md §14).
+//!
+//! Nodes are keyed by `(adapter, token-block)` paths: each node holds the
+//! K/V payload for exactly one *full* block (`[nl][block_tokens][te]`,
+//! layer-major like the slot planes) plus the token vector that keys it
+//! under its parent. A request that shares a prefix holds a **ref on every
+//! node of its chain**, so refcounts propagate root-ward by construction:
+//! `child.refs > 0 ⇒ parent.refs > 0`, and LRU eviction over
+//! `refs == 0 && childless` nodes is exactly "unreferenced chain tails".
+//!
+//! Every live node claims one block from the [`super::KvCacheManager`]
+//! pool; the manager adjusts `blocks_used` by the deltas these methods
+//! report, which is what keeps `blocks_used == Σ unique claims` — a block
+//! shared by N sequences is claimed once, by its node.
+//!
+//! `BTreeMap` (not `HashMap`) everywhere: probe order, eviction order and
+//! the audit walk must be deterministic across runs (`unordered-iter`
+//! lint rule), and LRU ties break on node id.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Clone)]
+struct PrefixNode {
+    /// Parent node id; `None` for a root block (detached nodes also clear
+    /// this — they are no longer part of any tree).
+    parent: Option<usize>,
+    /// Token vector keying this node under its parent (or the root map).
+    key: Vec<i32>,
+    children: BTreeMap<Vec<i32>, usize>,
+    adapter: i32,
+    /// Number of slot chains currently pointing at this node.
+    refs: usize,
+    /// Logical LRU stamp (deterministic counter, not wall clock).
+    last_touch: u64,
+    /// Detached by `invalidate_adapter`: unreachable to probes, freed when
+    /// the last ref drops.
+    detached: bool,
+    /// `[num_layers][block_tokens][token_elems]` K payload.
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// The radix index. One instance per [`super::KvCacheManager`] when prefix
+/// sharing is enabled; absent (`None`) otherwise so the default path never
+/// consults it.
+#[derive(Debug, Clone, Default)]
+pub struct PrefixIndex {
+    nodes: Vec<Option<PrefixNode>>,
+    free_ids: Vec<usize>,
+    /// adapter -> first-block key -> node id.
+    roots: BTreeMap<i32, BTreeMap<Vec<i32>, usize>>,
+    clock: u64,
+    live: usize,
+}
+
+impl PrefixIndex {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pool blocks currently claimed by live nodes (attached or detached).
+    pub fn live_blocks(&self) -> usize {
+        self.live
+    }
+
+    /// Live nodes actively referenced by at least one slot chain.
+    pub fn shared_blocks(&self) -> usize {
+        self.iter_live().filter(|(_, n)| n.refs > 0).count()
+    }
+
+    /// Attached, unreferenced nodes: the set LRU eviction can drain. Chain
+    /// refs cover ancestors, so an unreferenced node can only have
+    /// unreferenced descendants and the whole count is cascade-evictable.
+    pub fn reclaimable(&self) -> usize {
+        self.iter_live().filter(|(_, n)| !n.detached && n.refs == 0).count()
+    }
+
+    fn iter_live(&self) -> impl Iterator<Item = (usize, &PrefixNode)> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, n)| n.as_ref().map(|n| (i, n)))
+    }
+
+    fn free_node(&mut self, id: usize) {
+        self.nodes[id] = None;
+        self.free_ids.push(id);
+        self.live -= 1;
+    }
+
+    /// Longest chain of cached full blocks matching `prompt` for `adapter`.
+    /// Non-mutating (the scheduler's view-build probes without touching
+    /// LRU state); the caller caps the chain before sharing it.
+    pub fn probe(&self, adapter: i32, prompt: &[i32], block_tokens: usize) -> Vec<usize> {
+        let mut chain = Vec::new();
+        let Some(mut map) = self.roots.get(&adapter) else { return chain };
+        for key in prompt.chunks_exact(block_tokens) {
+            let Some(&id) = map.get(key) else { break };
+            chain.push(id);
+            let Some(node) = self.nodes[id].as_ref() else { break };
+            map = &node.children;
+        }
+        chain
+    }
+
+    /// Take one ref on every node of `chain` and stamp them most-recent.
+    pub fn ref_chain(&mut self, chain: &[usize]) {
+        self.clock += 1;
+        let stamp = self.clock;
+        for &id in chain {
+            if let Some(n) = self.nodes[id].as_mut() {
+                n.refs += 1;
+                n.last_touch = stamp;
+            }
+        }
+    }
+
+    /// Drop one ref from every node of `chain`. Detached nodes whose last
+    /// ref drops are freed; returns how many pool blocks that released.
+    pub fn unref_chain(&mut self, chain: &[usize]) -> usize {
+        let mut freed = 0;
+        for &id in chain {
+            let Some(n) = self.nodes[id].as_mut() else { continue };
+            debug_assert!(n.refs > 0, "unref of unreferenced prefix node {id}");
+            n.refs = n.refs.saturating_sub(1);
+            if n.detached && n.refs == 0 {
+                self.free_node(id);
+                freed += 1;
+            }
+        }
+        freed
+    }
+
+    /// Whether `id` is a live node detached by [`Self::invalidate_adapter`].
+    pub fn is_detached(&self, id: usize) -> bool {
+        self.nodes.get(id).and_then(|n| n.as_ref()).is_some_and(|n| n.detached)
+    }
+
+    /// Look up the child of `parent` (or the root map) keyed by `key`.
+    pub fn child_of(&self, adapter: i32, parent: Option<usize>, key: &[i32]) -> Option<usize> {
+        match parent {
+            None => self.roots.get(&adapter)?.get(key).copied(),
+            Some(p) => self.nodes[p].as_ref()?.children.get(key).copied(),
+        }
+    }
+
+    /// Insert a new node (refs = 0, claims one pool block — the caller
+    /// bumps the manager ledger) under `parent` / the adapter's root map.
+    pub fn insert_child(
+        &mut self,
+        adapter: i32,
+        parent: Option<usize>,
+        key: Vec<i32>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+    ) -> usize {
+        self.clock += 1;
+        let node = PrefixNode {
+            parent,
+            key: key.clone(),
+            children: BTreeMap::new(),
+            adapter,
+            refs: 0,
+            last_touch: self.clock,
+            detached: false,
+            k,
+            v,
+        };
+        let id = match self.free_ids.pop() {
+            Some(id) => {
+                self.nodes[id] = Some(node);
+                id
+            }
+            None => {
+                self.nodes.push(Some(node));
+                self.nodes.len() - 1
+            }
+        };
+        self.live += 1;
+        match parent {
+            None => {
+                self.roots.entry(adapter).or_default().insert(key, id);
+            }
+            Some(p) => {
+                if let Some(pn) = self.nodes[p].as_mut() {
+                    pn.children.insert(key, id);
+                }
+            }
+        }
+        id
+    }
+
+    /// One layer's K payload of a node: `[block_tokens][token_elems]`.
+    pub fn node_k_layer(&self, id: usize, layer: usize, bt: usize, te: usize) -> &[f32] {
+        let n = self.nodes[id].as_ref().expect("live prefix node");
+        &n.k[layer * bt * te..(layer + 1) * bt * te]
+    }
+
+    pub fn node_v_layer(&self, id: usize, layer: usize, bt: usize, te: usize) -> &[f32] {
+        let n = self.nodes[id].as_ref().expect("live prefix node");
+        &n.v[layer * bt * te..(layer + 1) * bt * te]
+    }
+
+    /// Full `[nl][bt][te]` payload copies (for COW unshare / republish of a
+    /// detached chain).
+    pub fn node_payload(&self, id: usize) -> (Vec<f32>, Vec<f32>) {
+        let n = self.nodes[id].as_ref().expect("live prefix node");
+        (n.k.clone(), n.v.clone())
+    }
+
+    /// Evict the least-recently-touched attached node with no refs and no
+    /// children (ties break on id). Returns `false` when nothing is
+    /// evictable. Cascades naturally: once a tail goes, its parent becomes
+    /// childless and is a candidate on the next call.
+    pub fn evict_lru_one(&mut self) -> bool {
+        let victim = self
+            .iter_live()
+            .filter(|(_, n)| !n.detached && n.refs == 0 && n.children.is_empty())
+            .min_by_key(|(id, n)| (n.last_touch, *id))
+            .map(|(id, _)| id);
+        let Some(id) = victim else { return false };
+        let (parent, adapter, key) = {
+            let n = self.nodes[id].as_ref().expect("live prefix node");
+            (n.parent, n.adapter, n.key.clone())
+        };
+        match parent {
+            None => {
+                if let Some(r) = self.roots.get_mut(&adapter) {
+                    r.remove(&key);
+                    if r.is_empty() {
+                        self.roots.remove(&adapter);
+                    }
+                }
+            }
+            Some(p) => {
+                if let Some(pn) = self.nodes[p].as_mut() {
+                    pn.children.remove(&key);
+                }
+            }
+        }
+        self.free_node(id);
+        true
+    }
+
+    /// Detach every node of `adapter` (its weights changed: cached K/V is
+    /// stale for *new* requests; current sharers keep their stale-consistent
+    /// chains). Unreferenced nodes free immediately; referenced ones free
+    /// when their last sharer drops. Returns blocks freed now.
+    pub fn invalidate_adapter(&mut self, adapter: i32) -> usize {
+        let Some(roots) = self.roots.remove(&adapter) else { return 0 };
+        let mut stack: Vec<usize> = roots.values().copied().collect();
+        let mut subtree = Vec::new();
+        while let Some(id) = stack.pop() {
+            subtree.push(id);
+            if let Some(n) = self.nodes[id].as_mut() {
+                stack.extend(n.children.values().copied());
+                n.children.clear();
+                n.parent = None;
+                n.detached = true;
+            }
+        }
+        let mut freed = 0;
+        for id in subtree {
+            if self.nodes[id].as_ref().is_some_and(|n| n.refs == 0) {
+                self.free_node(id);
+                freed += 1;
+            }
+        }
+        freed
+    }
+
+    /// Structural + refcount audit. `chain_refs` maps node id -> how many
+    /// slot chains reference it (built by the manager from its slots);
+    /// every live node's refcount must match exactly.
+    pub fn audit(&self, chain_refs: &BTreeMap<usize, usize>) -> Result<()> {
+        for (&id, &c) in chain_refs {
+            if self.nodes.get(id).map_or(true, |n| n.is_none()) {
+                return Err(anyhow!("slot chain references dead prefix node {id} ({c} refs)"));
+            }
+        }
+        let mut live_seen = 0;
+        for (id, n) in self.iter_live() {
+            live_seen += 1;
+            let expected = chain_refs.get(&id).copied().unwrap_or(0);
+            if n.refs != expected {
+                return Err(anyhow!(
+                    "prefix node {id}: refcount {} but {expected} slot chains reference it",
+                    n.refs
+                ));
+            }
+            if n.detached {
+                if n.refs == 0 {
+                    return Err(anyhow!("detached prefix node {id} with no refs was not freed"));
+                }
+                if n.parent.is_some() || !n.children.is_empty() {
+                    return Err(anyhow!("detached prefix node {id} still linked into a tree"));
+                }
+                continue;
+            }
+            // Attached: parent/root linkage must point back at this node.
+            let up = match n.parent {
+                None => self.roots.get(&n.adapter).and_then(|r| r.get(&n.key)).copied(),
+                Some(p) => self
+                    .nodes
+                    .get(p)
+                    .and_then(|pn| pn.as_ref())
+                    .filter(|pn| !pn.detached)
+                    .and_then(|pn| pn.children.get(&n.key))
+                    .copied(),
+            };
+            if up != Some(id) {
+                return Err(anyhow!("prefix node {id} not reachable via its parent link"));
+            }
+            for (key, &cid) in &n.children {
+                let ok = self
+                    .nodes
+                    .get(cid)
+                    .and_then(|cn| cn.as_ref())
+                    .is_some_and(|cn| cn.parent == Some(id) && &cn.key == key && !cn.detached);
+                if !ok {
+                    return Err(anyhow!("prefix node {id}: child {cid} link broken"));
+                }
+            }
+        }
+        if live_seen != self.live {
+            return Err(anyhow!(
+                "prefix index live counter {} != {live_seen} live nodes",
+                self.live
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BT: usize = 4;
+
+    fn payload(tag: f32) -> (Vec<f32>, Vec<f32>) {
+        // 1 layer, 4 tokens, 2 elems
+        (vec![tag; BT * 2], vec![-tag; BT * 2])
+    }
+
+    fn grow_chain(idx: &mut PrefixIndex, adapter: i32, keys: &[&[i32]]) -> Vec<usize> {
+        let mut parent = None;
+        let mut ids = Vec::new();
+        for (i, key) in keys.iter().enumerate() {
+            let (k, v) = payload(i as f32);
+            let id = idx.insert_child(adapter, parent, key.to_vec(), k, v);
+            ids.push(id);
+            parent = Some(id);
+        }
+        ids
+    }
+
+    #[test]
+    fn probe_matches_full_blocks_only() {
+        let mut idx = PrefixIndex::new();
+        let ids = grow_chain(&mut idx, 7, &[&[1, 2, 3, 4], &[5, 6, 7, 8]]);
+        // Full match over two blocks plus a ragged tail.
+        let chain = idx.probe(7, &[1, 2, 3, 4, 5, 6, 7, 8, 9, 10], BT);
+        assert_eq!(chain, ids);
+        // Divergence in block 2 stops the walk at block 1 (COW boundary).
+        assert_eq!(idx.probe(7, &[1, 2, 3, 4, 5, 6, 99, 8], BT), ids[..1].to_vec());
+        // Wrong adapter: radix keying is (adapter, blocks).
+        assert!(idx.probe(8, &[1, 2, 3, 4], BT).is_empty());
+        // Shorter than one block: nothing to share.
+        assert!(idx.probe(7, &[1, 2, 3], BT).is_empty());
+    }
+
+    #[test]
+    fn refs_propagate_and_conserve() {
+        let mut idx = PrefixIndex::new();
+        let ids = grow_chain(&mut idx, 0, &[&[0; 4], &[1; 4]]);
+        idx.ref_chain(&ids);
+        idx.ref_chain(&ids[..1]);
+        assert_eq!(idx.shared_blocks(), 2);
+        assert_eq!(idx.reclaimable(), 0);
+        let refs: BTreeMap<usize, usize> = [(ids[0], 2), (ids[1], 1)].into();
+        idx.audit(&refs).unwrap();
+        assert!(idx.audit(&BTreeMap::new()).is_err(), "refcount drift must fail audit");
+        assert_eq!(idx.unref_chain(&ids), 0, "attached nodes stay after unref");
+        assert_eq!(idx.unref_chain(&ids[..1]), 0);
+        assert_eq!(idx.reclaimable(), 2);
+        idx.audit(&BTreeMap::new()).unwrap();
+    }
+
+    #[test]
+    fn eviction_is_lru_over_unreferenced_tails() {
+        let mut idx = PrefixIndex::new();
+        let a = grow_chain(&mut idx, 0, &[&[0; 4], &[1; 4]]);
+        let b = grow_chain(&mut idx, 1, &[&[2; 4]]);
+        // Touch chain A after B was created: B's tail is older.
+        idx.ref_chain(&a);
+        idx.unref_chain(&a);
+        assert!(idx.evict_lru_one());
+        assert!(idx.probe(1, &[2, 2, 2, 2], BT).is_empty(), "LRU victim was B");
+        assert_eq!(idx.probe(0, &[0, 0, 0, 0, 1, 1, 1, 1], BT), a);
+        // Cascade: tail first, then the newly childless parent.
+        assert!(idx.evict_lru_one());
+        assert_eq!(idx.probe(0, &[0, 0, 0, 0, 1, 1, 1, 1], BT), a[..1].to_vec());
+        assert!(idx.evict_lru_one());
+        assert_eq!(idx.live_blocks(), 0);
+        assert!(!idx.evict_lru_one(), "nothing left");
+        let _ = b;
+    }
+
+    #[test]
+    fn referenced_nodes_are_not_evictable() {
+        let mut idx = PrefixIndex::new();
+        let a = grow_chain(&mut idx, 0, &[&[0; 4], &[1; 4]]);
+        idx.ref_chain(&a);
+        assert_eq!(idx.reclaimable(), 0);
+        assert!(!idx.evict_lru_one(), "whole chain is pinned by its sharer");
+        idx.unref_chain(&a);
+        assert_eq!(idx.reclaimable(), 2);
+        assert!(idx.evict_lru_one());
+    }
+
+    #[test]
+    fn invalidate_detaches_and_frees_on_last_unref() {
+        let mut idx = PrefixIndex::new();
+        let a = grow_chain(&mut idx, 0, &[&[0; 4], &[1; 4]]);
+        let b = grow_chain(&mut idx, 1, &[&[9; 4]]);
+        idx.ref_chain(&a);
+        // Referenced nodes survive detach; unreferenced free immediately.
+        assert_eq!(idx.invalidate_adapter(1), 1);
+        assert_eq!(idx.invalidate_adapter(0), 0);
+        assert!(idx.probe(0, &[0; 4], BT).is_empty(), "detached chains never match");
+        let refs: BTreeMap<usize, usize> = [(a[0], 1), (a[1], 1)].into();
+        idx.audit(&refs).unwrap();
+        assert_eq!(idx.unref_chain(&a), 2, "last unref frees the detached chain");
+        assert_eq!(idx.live_blocks(), 0);
+        idx.audit(&BTreeMap::new()).unwrap();
+        let _ = b;
+    }
+
+    #[test]
+    fn freed_ids_are_recycled() {
+        let mut idx = PrefixIndex::new();
+        let a = grow_chain(&mut idx, 0, &[&[0; 4]]);
+        assert!(idx.evict_lru_one());
+        let b = grow_chain(&mut idx, 0, &[&[1; 4]]);
+        assert_eq!(a[0], b[0], "slab slot reused");
+        assert_eq!(idx.live_blocks(), 1);
+        idx.audit(&BTreeMap::new()).unwrap();
+    }
+}

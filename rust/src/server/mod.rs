@@ -254,6 +254,13 @@ pub struct Stats {
     /// instantaneous and run-peak.
     pub kv_frag_tokens: usize,
     pub kv_frag_peak_tokens: usize,
+    /// Shared-prefix KV reuse (DESIGN.md §14): admissions that attached to
+    /// cached prefix blocks, the prompt tokens those hits removed from the
+    /// prefill plan, and how many prefix-index blocks live slots currently
+    /// reference. All zero with `prefix_sharing` off.
+    pub prefix_hits: u64,
+    pub prefill_tokens_saved: u64,
+    pub kv_blocks_shared: usize,
     /// Unified adapter paging (DESIGN.md §10): total host↔device swap
     /// events so far, and where known adapters currently sit — resident
     /// in the device bank vs parked in the host tier. All zero when
@@ -331,6 +338,9 @@ impl Stats {
             ("kv_blocks_total", Json::Num(self.kv_blocks_total as f64)),
             ("kv_frag_tokens", Json::Num(self.kv_frag_tokens as f64)),
             ("kv_frag_peak_tokens", Json::Num(self.kv_frag_peak_tokens as f64)),
+            ("prefix_hits", Json::Num(self.prefix_hits as f64)),
+            ("prefill_tokens_saved", Json::Num(self.prefill_tokens_saved as f64)),
+            ("kv_blocks_shared", Json::Num(self.kv_blocks_shared as f64)),
             ("adapter_swaps", Json::Num(self.adapter_swaps as f64)),
             ("adapter_resident", Json::Num(self.adapter_resident as f64)),
             ("adapter_host", Json::Num(self.adapter_host as f64)),
@@ -1080,6 +1090,9 @@ fn publish_stats(
         s.kv_blocks_total = kv.blocks_total;
         s.kv_frag_tokens = kv.tokens_reserved_unused;
         s.kv_frag_peak_tokens = coord.kv_frag_peak_tokens();
+        s.prefix_hits = coord.prefix_hits();
+        s.prefill_tokens_saved = coord.prefill_tokens_saved();
+        s.kv_blocks_shared = kv.kv_blocks_shared;
         s.adapter_swaps = coord.adapter_swaps();
         s.adapter_resident = coord.adapter_resident();
         s.adapter_host = coord.adapter_host();
@@ -1497,6 +1510,9 @@ mod tests {
             kv_blocks_total: 24,
             kv_frag_tokens: 13,
             kv_frag_peak_tokens: 99,
+            prefix_hits: 31,
+            prefill_tokens_saved: 496,
+            kv_blocks_shared: 12,
             adapter_swaps: 21,
             adapter_resident: 4,
             adapter_host: 17,
@@ -1540,6 +1556,12 @@ mod tests {
                 && j.contains("\"adapter_resident\":4")
                 && j.contains("\"adapter_host\":17"),
             "unified-paging counters serialize: {j}"
+        );
+        assert!(
+            j.contains("\"prefix_hits\":31")
+                && j.contains("\"prefill_tokens_saved\":496")
+                && j.contains("\"kv_blocks_shared\":12"),
+            "prefix-sharing counters serialize: {j}"
         );
         assert!(j.contains("\"slo_attainment\":0.75"), "{j}");
         assert!(

@@ -60,6 +60,92 @@ pub fn build_trace(
     Trace { requests }
 }
 
+/// Seeded per-adapter system-prefix pool (DESIGN.md §14): each adapter
+/// owns ONE fixed system prompt of `prefix_len` tokens, and a request
+/// reuses its adapter's prefix with probability `reuse_p` (otherwise the
+/// prompt is fully per-request, the pre-§14 synthesis). Without a pool no
+/// two requests can ever share a prefix — the old per-request formula
+/// (`(i*131 + k*7 + 3) % vocab`) salts every token with the request index.
+#[derive(Debug, Clone)]
+pub struct PrefixPool {
+    prefixes: Vec<Vec<i32>>,
+    reuse_p: f64,
+}
+
+impl PrefixPool {
+    pub fn new(seed: u64, n_adapters: usize, prefix_len: usize, reuse_p: f64, vocab: i32) -> Self {
+        assert!(n_adapters > 0, "need at least one adapter");
+        assert!((0.0..=1.0).contains(&reuse_p), "reuse_p is a probability");
+        let mut rng = Rng::seed_from_u64(seed);
+        let prefixes = (0..n_adapters)
+            .map(|_| (0..prefix_len).map(|_| (rng.next_u64() % vocab.max(1) as u64) as i32).collect())
+            .collect();
+        Self { prefixes, reuse_p }
+    }
+
+    /// This adapter's system prefix (for tests and hit-rate accounting).
+    pub fn prefix(&self, adapter: i32) -> &[i32] {
+        &self.prefixes[adapter.max(0) as usize % self.prefixes.len()]
+    }
+
+    /// Synthesize one prompt of exactly `len` tokens: the adapter's shared
+    /// prefix (clipped to `len`) plus a per-request tail, or — with
+    /// probability `1 - reuse_p` — a fully per-request prompt using the
+    /// exact pre-§14 formula. The length distribution is untouched either
+    /// way; only token *content* changes.
+    pub fn prompt(&self, rng: &mut Rng, adapter: i32, len: usize, salt: usize, vocab: i32) -> Vec<i32> {
+        let fresh = |k: usize| ((salt * 131 + k * 7 + 3) as i32) % vocab;
+        if !rng.chance(self.reuse_p) {
+            return (0..len).map(fresh).collect();
+        }
+        let pfx = self.prefix(adapter);
+        let shared = len.min(pfx.len());
+        let mut prompt = pfx[..shared].to_vec();
+        prompt.extend((shared..len).map(fresh));
+        prompt
+    }
+}
+
+/// Multi-tenant trace for the shared-prefix experiments: `n` requests
+/// round-robin over `n_adapters` adapters, each adapter carrying a fixed
+/// `prefix_tokens`-long system prompt its requests reuse with probability
+/// `reuse_p`. Arrival and length models are the standard ones — only the
+/// prompt content differs from [`build_trace`].
+#[allow(clippy::too_many_arguments)]
+pub fn build_tenant_trace(
+    seed: u64,
+    n: usize,
+    n_adapters: usize,
+    arrivals: &mut dyn ArrivalProcess,
+    lengths: &LengthModel,
+    prefix_tokens: usize,
+    reuse_p: f64,
+    max_new: usize,
+    max_prompt: usize,
+    vocab: i32,
+) -> Trace {
+    let pool = PrefixPool::new(seed ^ 0x5eed_cafe, n_adapters, prefix_tokens, reuse_p, vocab);
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut requests = Vec::with_capacity(n);
+    for i in 0..n {
+        let arrival_s = arrivals.next_arrival(&mut rng);
+        let adapter = (i % n_adapters) as i32;
+        let len = lengths.sample_prompt(&mut rng).clamp(1, max_prompt);
+        let prompt = pool.prompt(&mut rng, adapter, len, i, vocab);
+        requests.push(InferenceRequest {
+            id: i as u64,
+            adapter,
+            prompt,
+            max_new_tokens: max_new,
+            eos_token: None,
+            arrival_s,
+            slo: None,
+        });
+    }
+    requests.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+    Trace { requests }
+}
+
 /// Zipfian adapter popularity: adapter id `k` (0-based rank) is drawn with
 /// probability ∝ 1/(k+1)^s. This is the multi-tenant serving regime the
 /// unified adapter-paging tier targets (DESIGN.md §10): thousands of
@@ -112,6 +198,29 @@ pub fn build_zipf_trace(
     max_prompt: usize,
     vocab: i32,
 ) -> Trace {
+    build_zipf_trace_shared(
+        seed, n, n_adapters, zipf_s, arrivals, lengths, max_new, max_prompt, vocab, None,
+    )
+}
+
+/// [`build_zipf_trace`] with an optional shared-prefix pool: `Some(pool)`
+/// makes each request reuse its adapter's system prefix per the pool's
+/// reuse probability; `None` is bit-identical to the plain Zipf trace (the
+/// prompt formula consumes no rng draws, so the arrival/length/adapter
+/// sequences cannot shift).
+#[allow(clippy::too_many_arguments)]
+pub fn build_zipf_trace_shared(
+    seed: u64,
+    n: usize,
+    n_adapters: usize,
+    zipf_s: f64,
+    arrivals: &mut dyn ArrivalProcess,
+    lengths: &LengthModel,
+    max_new: usize,
+    max_prompt: usize,
+    vocab: i32,
+    prefixes: Option<&PrefixPool>,
+) -> Trace {
     let zipf = ZipfAdapters::new(n_adapters, zipf_s);
     let mut rng = Rng::seed_from_u64(seed);
     let mut requests = Vec::with_capacity(n);
@@ -119,7 +228,10 @@ pub fn build_zipf_trace(
         let arrival_s = arrivals.next_arrival(&mut rng);
         let adapter = zipf.sample(&mut rng);
         let len = lengths.sample_prompt(&mut rng).clamp(1, max_prompt);
-        let prompt: Vec<i32> = (0..len).map(|k| ((i * 131 + k * 7 + 3) as i32) % vocab).collect();
+        let prompt: Vec<i32> = match prefixes {
+            Some(pool) => pool.prompt(&mut rng, adapter, len, i, vocab),
+            None => (0..len).map(|k| ((i * 131 + k * 7 + 3) as i32) % vocab).collect(),
+        };
         requests.push(InferenceRequest {
             id: i as u64,
             adapter,
@@ -182,6 +294,56 @@ mod tests {
         for _ in 0..100 {
             assert_eq!(zipf.sample(&mut a), zipf.sample(&mut b));
         }
+    }
+
+    #[test]
+    fn tenant_trace_shares_per_adapter_prefixes() {
+        let mut arrivals = PoissonArrivals::new(4.0);
+        let lengths = LengthModel { mu: 3.0, sigma: 0.2, min: 16, max: 32 };
+        let t = build_tenant_trace(5, 200, 4, &mut arrivals, &lengths, 8, 0.9, 4, 64, 97);
+        assert_eq!(t.requests.len(), 200);
+        let pool = PrefixPool::new(5 ^ 0x5eed_cafe, 4, 8, 0.9, 97);
+        // Most requests carry their adapter's fixed 8-token system prefix;
+        // distinct adapters carry distinct prefixes.
+        let hits = t
+            .requests
+            .iter()
+            .filter(|r| r.prompt.len() >= 8 && r.prompt[..8] == *pool.prefix(r.adapter))
+            .count();
+        assert!(hits > 150, "only {hits}/200 requests reuse their prefix");
+        assert_ne!(pool.prefix(0), pool.prefix(1));
+        // Reproducible: same seed, same trace.
+        let mut arrivals2 = PoissonArrivals::new(4.0);
+        let t2 = build_tenant_trace(5, 200, 4, &mut arrivals2, &lengths, 8, 0.9, 4, 64, 97);
+        for (a, b) in t.requests.iter().zip(&t2.requests) {
+            assert_eq!(a.prompt, b.prompt);
+        }
+    }
+
+    #[test]
+    fn zipf_trace_without_pool_is_bit_identical_to_plain() {
+        // The `None` wrapper must not perturb the gated Zipf figures: the
+        // rng draw sequence and every prompt token stay exactly as before.
+        let lengths = LengthModel { mu: 2.0, sigma: 0.2, min: 4, max: 16 };
+        let mut a1 = PoissonArrivals::new(4.0);
+        let t1 = build_zipf_trace(3, 100, 50, 1.0, &mut a1, &lengths, 4, 32, 97);
+        let mut a2 = PoissonArrivals::new(4.0);
+        let t2 =
+            build_zipf_trace_shared(3, 100, 50, 1.0, &mut a2, &lengths, 4, 32, 97, None);
+        for (a, b) in t1.requests.iter().zip(&t2.requests) {
+            assert_eq!((a.id, a.adapter, a.arrival_s), (b.id, b.adapter, b.arrival_s));
+            assert_eq!(a.prompt, b.prompt);
+        }
+        // With a pool, hot adapters' requests share content.
+        let pool = PrefixPool::new(9, 50, 6, 1.0, 97);
+        let mut a3 = PoissonArrivals::new(4.0);
+        let t3 = build_zipf_trace_shared(3, 100, 50, 1.0, &mut a3, &lengths, 4, 32, 97, Some(&pool));
+        let shared = t3
+            .requests
+            .iter()
+            .filter(|r| r.prompt.len() >= 6 && r.prompt[..6] == *pool.prefix(r.adapter))
+            .count();
+        assert!(shared > 60, "only {shared}/100 zipf requests reuse prefixes");
     }
 
     #[test]

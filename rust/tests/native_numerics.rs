@@ -426,6 +426,125 @@ fn host_tier_eviction_roundtrip_is_output_transparent() {
 }
 
 #[test]
+fn prefix_reuse_is_output_transparent() {
+    // ISSUE 10 acceptance: attaching a sequence to published shared-prefix
+    // blocks (radix index, DESIGN.md §14) must not change a single emitted
+    // bit vs prefilling the same prompt cold — tokens AND trainer losses,
+    // bitwise, on 1 and 4 threads, with a forced mid-stream preemption of
+    // the sharer (drop refs, recompute-on-resume re-attaches).
+    let prefix = toks(32, 40); // two full 16-token blocks
+    let run = |threads: usize, shared: bool| -> (Vec<i32>, Vec<f32>) {
+        let (mut be, _reg, _m) = stack_t(999, threads);
+        let mut kv = cache();
+        if shared {
+            kv.enable_prefix_sharing();
+        }
+        let mut tokens = Vec::new();
+        let mut losses = Vec::new();
+
+        // Publisher A: full prompt (prefix + its own suffix), prefilled
+        // whole, then published into the index (shared mode only).
+        let mut pa = prefix.clone();
+        pa.extend_from_slice(&toks(9, 41));
+        let (slot_a, hit_a) = kv.allocate_shared(1, pa.len(), 1, &pa).unwrap();
+        assert_eq!(hit_a, 0, "empty index: the publisher must miss");
+        let (lg, _) = be
+            .prefill(&[PrefillSeq { tokens: pa.clone(), adapter: 1, kv_slot: slot_a }], &mut kv)
+            .unwrap();
+        let mut next_a = loquetier::engine::argmax(&lg[0]);
+        tokens.push(next_a);
+        if shared {
+            kv.publish_prefix(slot_a, 1, &pa);
+        }
+
+        // Sharer B: same adapter and prefix, different suffix. Shared mode
+        // attaches to the two cached blocks and prefills only the suffix
+        // (a shorter slice — PrefillSlice semantics); cold prefills whole.
+        let mut pb = prefix.clone();
+        pb.extend_from_slice(&toks(7, 42));
+        let (slot_b, hit_b) = kv.allocate_shared(2, pb.len(), 1, &pb).unwrap();
+        assert_eq!(hit_b, if shared { 32 } else { 0 });
+        let (lg, _) = be
+            .prefill(
+                &[PrefillSeq { tokens: pb[hit_b..].to_vec(), adapter: 1, kv_slot: slot_b }],
+                &mut kv,
+            )
+            .unwrap();
+        let mut next_b = loquetier::engine::argmax(&lg[0]);
+        let mut gen_b = vec![next_b];
+        tokens.push(next_b);
+
+        // Interleaved decodes on both streams: B's attention reads the
+        // shared blocks through the translation table, A's its own arena.
+        for _ in 0..2 {
+            let (lg, _) = be
+                .decode(&[DecodeRow { token: next_b, adapter: 1, kv_slot: slot_b }], &mut kv)
+                .unwrap();
+            next_b = loquetier::engine::argmax(&lg[0]);
+            gen_b.push(next_b);
+            tokens.push(next_b);
+            let (lg, _) = be
+                .decode(&[DecodeRow { token: next_a, adapter: 1, kv_slot: slot_a }], &mut kv)
+                .unwrap();
+            next_a = loquetier::engine::argmax(&lg[0]);
+            tokens.push(next_a);
+        }
+
+        // A trainer on another adapter; its optimizer step invalidates
+        // that adapter's (absent) prefix subtree — the §14 staleness rule
+        // must not perturb adapter 1's cached chain.
+        let (l, _) = be
+            .train_step(&[TrainSeq {
+                tokens: toks(14, 8),
+                labels: toks(14, 8),
+                adapter: 2,
+                train: true,
+                loss_scale: 1.0,
+            }])
+            .unwrap();
+        losses.extend_from_slice(&l);
+        be.optim_step(&[2], 5e-3, 1).unwrap();
+        kv.invalidate_adapter_prefixes(2);
+
+        // Forced preemption of the sharer mid-stream: release drops its
+        // chain refs; recompute-on-resume folds the generated tokens into
+        // the prompt and (shared mode) re-attaches to the still-published
+        // prefix, recomputing only the folded tail.
+        let mut folded = pb.clone();
+        folded.extend_from_slice(&gen_b);
+        kv.release(slot_b).unwrap();
+        let (slot_b2, hit2) = kv.allocate_shared(2, folded.len(), 1, &folded).unwrap();
+        assert_eq!(hit2, if shared { 32 } else { 0 });
+        let (lg, _) = be
+            .prefill(
+                &[PrefillSeq { tokens: folded[hit2..].to_vec(), adapter: 1, kv_slot: slot_b2 }],
+                &mut kv,
+            )
+            .unwrap();
+        next_b = loquetier::engine::argmax(&lg[0]);
+        tokens.push(next_b);
+        for _ in 0..2 {
+            let (lg, _) = be
+                .decode(&[DecodeRow { token: next_b, adapter: 1, kv_slot: slot_b2 }], &mut kv)
+                .unwrap();
+            next_b = loquetier::engine::argmax(&lg[0]);
+            tokens.push(next_b);
+        }
+        (tokens, losses)
+    };
+
+    for threads in [1usize, 4] {
+        let (t_cold, l_cold) = run(threads, false);
+        let (t_shared, l_shared) = run(threads, true);
+        assert_eq!(
+            t_cold, t_shared,
+            "threads={threads}: prefix sharing must be invisible in emitted tokens"
+        );
+        assert_bits_eq(&l_cold, &l_shared, &format!("threads={threads} trainer losses"));
+    }
+}
+
+#[test]
 fn different_seeds_produce_different_models() {
     let (mut a, _ra, _ma) = stack(1);
     let (mut b, _rb, _mb) = stack(2);

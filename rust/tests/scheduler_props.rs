@@ -380,6 +380,112 @@ fn prop_block_ledger_conserved_under_preemption_and_cancel() {
 }
 
 #[test]
+fn prop_block_ledger_conserved_under_prefix_sharing_churn() {
+    // The §14 extension of the conservation property: with the radix
+    // prefix index on, requests share per-adapter system prefixes over a
+    // TIGHT pool, so admissions attach to cached chains, eviction reclaims
+    // unreferenced tails, preemption drops refs, and a co-running trainer
+    // invalidates its adapter's subtree at every optimizer step. The
+    // extended audit (blocks_used == kv claims + adapter pages + live
+    // index nodes, refcounts exactly match live slots' chain references)
+    // must hold after EVERY step and cancel, and the run must still drain.
+    prop::check("block ledger + refcounts conserved under sharing churn", 25, |rng| {
+        let mut c = Coordinator::new(
+            CoordinatorConfig {
+                max_prompt_tokens: 64,
+                drop_after_s: 1e9,
+                prefix_sharing: true,
+                ..Default::default()
+            },
+            CacheConfig {
+                num_slots: rng.range_usize(2, 9),
+                slot_capacity: 96,
+                block_tokens: 8,
+                total_blocks: rng.range_usize(8, 20),
+                num_layers: 2,
+                token_elems: 16,
+            },
+        );
+        let mut be = backend();
+        let n = rng.range_usize(4, 24);
+        for i in 0..n {
+            // Per-adapter system prefix (3 blocks at block_tokens 8) + a
+            // short per-request tail: same-adapter requests share radix
+            // paths, cross-adapter ones never do.
+            let adapter = rng.range(0, 4) as i32;
+            let mut prompt: Vec<i32> = (0..24).map(|k| adapter * 31 + k).collect();
+            prompt.extend((0..rng.range(1, 16)).map(|k| 1000 + i as i32 * 17 + k as i32));
+            c.submit(InferenceRequest {
+                id: i as u64,
+                adapter,
+                prompt,
+                max_new_tokens: rng.range_usize(1, 16),
+                eos_token: None,
+                arrival_s: 0.0,
+                slo: None,
+            });
+        }
+        // A trainer on adapter 0: each optimizer step detaches adapter 0's
+        // cached prefixes mid-churn (the §14 staleness rule).
+        c.add_trainer(FinetuneJob {
+            id: 99,
+            adapter: 0,
+            train_set: (0..rng.range_usize(2, 6))
+                .map(|_| TrainExample { tokens: vec![2; 16], labels: vec![2; 16] })
+                .collect(),
+            eval_set: vec![],
+            epochs: 1,
+            per_device_batch: 2,
+            grad_accum: 2,
+            lr: 1e-3,
+            eval_each_epoch: false,
+        });
+        let mut live: Vec<u64> = (0..n as u64).collect();
+        let mut steps = 0;
+        while !c.quiescent() && steps < 50_000 {
+            let out = c.step(&mut be).map_err(|e| e.to_string())?;
+            c.kv.audit_ledger().map_err(|e| format!("step {steps}: {e}"))?;
+            for id in &out.completed_requests {
+                live.retain(|x| x != id);
+            }
+            if !live.is_empty() && rng.range_usize(0, 10) == 0 {
+                let id = live[rng.range_usize(0, live.len())];
+                c.cancel(id).map_err(|e| e.to_string())?;
+                live.retain(|x| *x != id);
+                c.kv.audit_ledger().map_err(|e| format!("cancel at {steps}: {e}"))?;
+            }
+            if out.idle {
+                break;
+            }
+            steps += 1;
+        }
+        if !c.quiescent() {
+            return Err(format!("did not drain in {steps} steps"));
+        }
+        let st = c.kv.stats();
+        // Drained: no slots, no sharer refs; the only remaining claims are
+        // the (unreferenced, evictable-on-demand) index nodes themselves.
+        if st.slots_used != 0 || st.kv_blocks_shared != 0 {
+            return Err(format!(
+                "leak: {} slots, {} shared blocks",
+                st.slots_used, st.kv_blocks_shared
+            ));
+        }
+        if st.blocks_used != st.prefix_blocks {
+            return Err(format!(
+                "leak: {} blocks used but only {} live index nodes",
+                st.blocks_used, st.prefix_blocks
+            ));
+        }
+        c.kv.audit_ledger().map_err(|e| e.to_string())?;
+        if c.traces.len() != n {
+            return Err(format!("{} traces for {n} requests", c.traces.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn burst_on_demand_paging_beats_worst_case_reservation() {
     // The acceptance scenario: a burst that head-of-line-blocks under
     // worst-case reservation (4 blocks each -> 3 concurrent) runs wider

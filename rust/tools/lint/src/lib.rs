@@ -536,8 +536,10 @@ fn parse_allows(lx: &Lexed) -> Vec<Allow> {
 // ---------------------------------------------------------------------------
 
 /// Modules whose iteration order can reach a launch, a frame, or a
-/// trajectory file.
-const ORDERED_MODULES: &[&str] = &["coordinator", "engine", "runtime", "server"];
+/// trajectory file. `kvcache` joined with the §14 radix prefix index: its
+/// probe/evict order decides which blocks admissions attach to, so an
+/// unordered map there would make whole schedules nondeterministic.
+const ORDERED_MODULES: &[&str] = &["coordinator", "engine", "kvcache", "runtime", "server"];
 /// Modules on the supervised request path (DESIGN.md §12).
 const SUPERVISED_MODULES: &[&str] = &["coordinator", "server", "engine"];
 
@@ -916,6 +918,12 @@ mod tests {
         assert!(lint_source("t.rs", "metrics", map).findings.is_empty());
         assert_eq!(
             rules_of(&lint_source("t.rs", "runtime", map)),
+            vec![Rule::UnorderedIter]
+        );
+        // The §14 radix prefix index made kvcache order-bearing: probe and
+        // evict order reach the schedule, so hash maps are banned there too.
+        assert_eq!(
+            rules_of(&lint_source("t.rs", "kvcache", map)),
             vec![Rule::UnorderedIter]
         );
     }
